@@ -1,0 +1,143 @@
+//! END-TO-END DRIVER: the full three-layer stack on a real workload.
+//!
+//!     make artifacts && cargo run --release --example e2e_paper_run
+//!
+//! Exercises every layer in composition:
+//!   L1/L2 — the Pallas/JAX graphs, AOT-compiled to `artifacts/*.hlo.txt`,
+//!           executed via PJRT for the canonical (n=8192, d=32) shapes;
+//!   runtime — artifact registry + engine actor thread;
+//!   L3   — the coordinator running the paper's evaluation protocol
+//!           (best-of-k trials, radius-from-optimum constrained setup).
+//!
+//! Workload: the `pjrt8k` dataset (kappa = 1e6, the canonical artifact
+//! shape), solved by the paper's methods and the baselines they are
+//! compared against, in the unconstrained and l1/l2-constrained settings.
+//! Reports the paper's headline metrics: time-to-1e-2 (low precision),
+//! time-to-1e-8 (high precision), and the HDpwBatchSGD batch-size speed-up.
+//! Asserts that the PJRT path actually served the artifact-shaped calls.
+
+use hdpw::backend::Backend;
+use hdpw::coordinator::{Coordinator, CoordinatorConfig, JobRequest};
+use hdpw::util::stats::fmt_duration;
+
+fn main() -> anyhow::Result<()> {
+    let backend = Backend::auto();
+    let pjrt = backend.has_pjrt();
+    println!("=== hdpw end-to-end paper run ===");
+    println!(
+        "backend: {}",
+        if pjrt {
+            "PJRT artifacts (L1 Pallas + L2 JAX via XLA) + native fallback"
+        } else {
+            "NATIVE ONLY — run `make artifacts` first for the full stack"
+        }
+    );
+    let coord = Coordinator::new(backend.clone(), CoordinatorConfig::default());
+
+    let base = || {
+        let mut req = JobRequest::default();
+        req.dataset = "pjrt8k".into();
+        req.n = 8_192;
+        req.trials = 3;
+        req.time_budget = 30.0;
+        req.seed = 20180201;
+        req
+    };
+
+    // ---------------- low precision (target 1e-2) ---------------------------
+    println!("\n-- low precision (relative error target 1e-3, unconstrained) --");
+    let mut low_rows = Vec::new();
+    for (label, solver, r) in [
+        ("HDpwBatchSGD r=64", "hdpwbatchsgd", 64usize),
+        ("HDpwBatchSGD r=256", "hdpwbatchsgd", 256),
+        ("HDpwAccBatchSGD r=64", "hdpwaccbatchsgd", 64),
+        ("pwSGD", "pwsgd", 1),
+        ("SGD", "sgd", 64),
+        ("Adagrad", "adagrad", 64),
+    ] {
+        let mut req = base();
+        req.solver = solver.into();
+        req.batch_size = r;
+        req.max_iters = 60_000;
+        req.target_rel_err = 1e-3;
+        let res = coord.run_job(&req)?;
+        let tt = res.best.time_to_rel_err(res.f_star, 1e-3);
+        println!(
+            "  {label:<22} rel_err={:<10.3e} time_to_1e-3={}",
+            res.best_rel_err,
+            tt.map(fmt_duration).unwrap_or_else(|| "not reached".into())
+        );
+        low_rows.push((label, tt));
+    }
+
+    // ---------------- high precision (target 1e-8) --------------------------
+    println!("\n-- high precision (relative error target 1e-8) --");
+    for constraint in ["unc", "l1", "l2"] {
+        println!("  [{constraint}]");
+        for (label, solver) in [
+            ("pwGradient", "pwgradient"),
+            ("IHS", "ihs"),
+            ("pwSVRG r=64", "pwsvrg"),
+        ] {
+            let mut req = base();
+            req.solver = solver.into();
+            req.constraint = constraint.into();
+            req.batch_size = 64;
+            req.max_iters = if solver == "pwsvrg" { 60_000 } else { 300 };
+            req.target_rel_err = 1e-8;
+            let res = coord.run_job(&req)?;
+            let tt = res.best.time_to_rel_err(res.f_star, 1e-8);
+            println!(
+                "    {label:<14} rel_err={:<10.3e} time_to_1e-8={}",
+                res.best_rel_err,
+                tt.map(fmt_duration).unwrap_or_else(|| "not reached".into())
+            );
+        }
+    }
+
+    // ---------------- headline verdicts -------------------------------------
+    println!("\n-- verdicts (paper claims on this testbed) --");
+    let t = |label: &str| {
+        low_rows
+            .iter()
+            .find(|(l, _)| *l == label)
+            .and_then(|(_, t)| *t)
+    };
+    if let (Some(h64), Some(h256)) = (t("HDpwBatchSGD r=64"), t("HDpwBatchSGD r=256")) {
+        println!(
+            "  batch-size speed-up (time): r=64 {} -> r=256 {}",
+            fmt_duration(h64),
+            fmt_duration(h256)
+        );
+    }
+    match (t("HDpwBatchSGD r=256"), t("SGD")) {
+        (Some(h), Some(s)) => println!(
+            "  HDpwBatchSGD vs SGD time-to-1e-3: {} vs {} ({})",
+            fmt_duration(h),
+            fmt_duration(s),
+            if h < s {
+                "HDpw wins — matches paper"
+            } else {
+                "SGD wins at this small scale (setup not amortized)"
+            }
+        ),
+        (Some(_), None) => println!(
+            "  SGD never reached 1e-3 (kappa=1e6) while HDpwBatchSGD did — matches paper"
+        ),
+        _ => println!("  (low-precision comparison incomplete)"),
+    }
+
+    if pjrt {
+        println!(
+            "\nPJRT dispatches: {} (native fallbacks: {})",
+            backend.pjrt_calls(),
+            backend.native_calls()
+        );
+        anyhow::ensure!(
+            backend.pjrt_calls() > 0,
+            "e2e run never hit the PJRT path — artifact shapes desynced?"
+        );
+        println!("FULL STACK VERIFIED: L1 Pallas -> L2 JAX -> HLO -> PJRT -> L3 coordinator");
+    }
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! Solver-as-a-service demo: spin up the coordinator's TCP server, connect
+//! as a client, stream a mixed batch of jobs and collect results — the
+//! deployment mode of the L3 layer.
+//!
+//!     cargo run --release --example solver_service
+//!
+//! Demonstrates: concurrent jobs over one connection, the JSON wire
+//! protocol, backpressure-bounded scheduling, and service metrics.
+
+use hdpw::backend::Backend;
+use hdpw::coordinator::{server, Coordinator, CoordinatorConfig};
+use hdpw::util::json::Json;
+use hdpw::util::stats::Timer;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    // --- boot the service on an ephemeral port ------------------------------
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let coord = Arc::new(Coordinator::new(
+        Backend::auto(),
+        CoordinatorConfig {
+            workers: 3,
+            max_queue: 8,
+            cache_dir: None,
+        },
+    ));
+    {
+        let coord = Arc::clone(&coord);
+        std::thread::spawn(move || {
+            for stream in listener.incoming().flatten() {
+                let reader = BufReader::new(stream.try_clone().unwrap());
+                let coord = Arc::clone(&coord);
+                std::thread::spawn(move || {
+                    let _ = server::handle_connection(&coord, reader, stream);
+                });
+            }
+        });
+    }
+    println!("service listening on {addr}");
+
+    // --- client: stream a mixed workload -------------------------------------
+    let stream = TcpStream::connect(addr)?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+
+    let jobs = [
+        r#"{"id":1,"solver":"pwgradient","dataset":"syn2","n":8192,"max_iters":200}"#,
+        r#"{"id":2,"solver":"hdpwbatchsgd","dataset":"syn1","n":8192,"batch_size":128,"max_iters":3000,"normalize":true}"#,
+        r#"{"id":3,"solver":"ihs","dataset":"syn2","n":8192,"max_iters":60}"#,
+        r#"{"id":4,"solver":"pwgradient","dataset":"year","n":8192,"constraint":"l2","max_iters":200}"#,
+        r#"{"id":5,"solver":"pwsvrg","dataset":"syn2","n":8192,"batch_size":64,"max_iters":4000}"#,
+        r#"{"id":6,"solver":"exact","dataset":"buzz","n":4096}"#,
+    ];
+    let t = Timer::start();
+    for j in &jobs {
+        writeln!(writer, "{j}")?;
+    }
+    writeln!(writer, "{{\"cmd\":\"metrics\"}}")?;
+    writeln!(writer, "{{\"cmd\":\"quit\"}}")?;
+    writer.flush()?;
+
+    let mut completed = 0;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))?;
+        if let Some(m) = j.get("metrics") {
+            println!("service metrics: {}", m.as_str().unwrap_or("?"));
+            continue;
+        }
+        if let Some(err) = j.get("error") {
+            println!("job error: {err}");
+            continue;
+        }
+        completed += 1;
+        println!(
+            "job {:>2} {:<14} {:<6} rel_err={:<10.3e} solve={}",
+            j.get("id").and_then(Json::as_f64).unwrap_or(-1.0),
+            j.get("solver").and_then(Json::as_str).unwrap_or("?"),
+            j.get("dataset").and_then(Json::as_str).unwrap_or("?"),
+            j.get("best_rel_err").and_then(Json::as_f64).unwrap_or(-1.0),
+            hdpw::util::stats::fmt_duration(
+                j.get("solve_secs").and_then(Json::as_f64).unwrap_or(0.0)
+            ),
+        );
+    }
+    println!(
+        "{completed}/{} jobs completed in {} (3 workers, queue bound 8)",
+        jobs.len(),
+        hdpw::util::stats::fmt_duration(t.secs())
+    );
+    anyhow::ensure!(completed == jobs.len(), "missing results");
+    Ok(())
+}

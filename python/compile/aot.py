@@ -1,0 +1,204 @@
+"""AOT exporter: lower every L2 graph to HLO text + write the manifest.
+
+This is the ONLY place Python runs in the hdpw stack, and it runs at build
+time (`make artifacts`). The Rust coordinator loads the emitted HLO text via
+`HloModuleProto::from_text_file` and compiles it on its PJRT CPU client.
+
+Interchange format is HLO *text*, not `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--n 8192] [--d 32]
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+
+F64 = jnp.float64
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F64):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(fn, arg_specs):
+    """jit -> lower -> stablehlo -> XlaComputation -> HLO text."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt):
+    return {jnp.float64.dtype: "f64", jnp.int32.dtype: "i32"}[jnp.dtype(dt)]
+
+
+def build_ops(n, d, rs, chunk_t, pw_t):
+    """The artifact manifest: (op name, callable, input specs).
+
+    Shapes are canonical for the e2e example / benches; the Rust runtime
+    dispatches on exact (op, shape) match and falls back to the native
+    backend otherwise.
+    """
+    da = d + 1  # packed [A | b]
+    ops = []
+
+    def add(name, fn, specs, outputs):
+        ops.append(
+            {
+                "name": name,
+                "fn": fn,
+                "specs": specs,
+                "outputs": outputs,
+            }
+        )
+
+    # --- elementary ops -----------------------------------------------------
+    add(
+        f"hd_transform_n{n}_c{da}",
+        model.hd_transform,
+        [spec((n, da)), spec((n,))],
+        1,
+    )
+    for r in rs:
+        add(
+            f"batch_grad_r{r}_d{d}",
+            model.batch_grad_op,
+            [spec((r, d)), spec((r,)), spec((d,)), spec(())],
+            1,
+        )
+    add(
+        f"full_grad_n{n}_d{d}",
+        model.full_grad,
+        [spec((n, d)), spec((n,)), spec((d,))],
+        1,
+    )
+    add(
+        f"residual_sq_n{n}_d{d}",
+        model.residual_sq,
+        [spec((n, d)), spec((n,)), spec((d,))],
+        1,
+    )
+    for cons in ("unc", "l2", "l1"):
+        add(
+            f"gd_step_{cons}_d{d}",
+            functools.partial(model.gd_step, constraint=cons),
+            [spec((d,)), spec((d, d)), spec((d,)), spec(()), spec(())],
+            1,
+        )
+
+    # --- fused solver chunks ------------------------------------------------
+    for cons in ("unc", "l2", "l1"):
+        for r in rs:
+            add(
+                f"sgd_chunk_{cons}_n{n}_d{d}_r{r}_t{chunk_t}",
+                functools.partial(model.sgd_chunk, constraint=cons),
+                [
+                    spec((n, d)),            # hda
+                    spec((n,)),              # hdb
+                    spec((d,)),              # x0
+                    spec((d, d)),            # pinv
+                    spec((chunk_t, r), I32), # idx
+                    spec(()),                # eta
+                    spec(()),                # scale
+                    spec(()),                # radius
+                ],
+                2,
+            )
+        add(
+            f"acc_chunk_{cons}_n{n}_d{d}_r{rs[len(rs) // 2]}_t{chunk_t}",
+            functools.partial(model.acc_chunk, constraint=cons),
+            [
+                spec((n, d)),
+                spec((n,)),
+                spec((d,)),                    # x
+                spec((d,)),                    # xhat
+                spec((d, d)),                  # pinv
+                spec((chunk_t, rs[len(rs) // 2]), I32),
+                spec((chunk_t,)),              # alphas
+                spec((chunk_t,)),              # qs
+                spec((chunk_t,)),              # etas
+                spec(()),                      # mu
+                spec(()),                      # scale
+                spec(()),                      # radius
+            ],
+            2,
+        )
+        add(
+            f"pw_gradient_chunk_{cons}_n{n}_d{d}_t{pw_t}",
+            functools.partial(model.pw_gradient_chunk, T=pw_t, constraint=cons),
+            [
+                spec((n, d)),
+                spec((n,)),
+                spec((d,)),
+                spec((d, d)),
+                spec(()),   # eta
+                spec(()),   # radius
+            ],
+            1,
+        )
+    return ops
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n", type=int, default=8192)
+    ap.add_argument("--d", type=int, default=32)
+    ap.add_argument("--rs", type=int, nargs="+", default=[16, 64, 256])
+    ap.add_argument("--chunk-t", type=int, default=50)
+    ap.add_argument("--pw-t", type=int, default=10)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    ops = build_ops(args.n, args.d, args.rs, args.chunk_t, args.pw_t)
+    manifest = {
+        "version": 1,
+        "n": args.n,
+        "d": args.d,
+        "rs": args.rs,
+        "chunk_t": args.chunk_t,
+        "pw_t": args.pw_t,
+        "ops": [],
+    }
+    for op in ops:
+        fname = op["name"] + ".hlo.txt"
+        text = to_hlo_text(op["fn"], op["specs"])
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["ops"].append(
+            {
+                "name": op["name"],
+                "file": fname,
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": _dtype_tag(s.dtype)}
+                    for s in op["specs"]
+                ],
+                "outputs": op["outputs"],
+            }
+        )
+        print(f"lowered {op['name']:48s} -> {fname} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(ops)} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: fused mini-batch gradient c = M^T (M x - v).
+
+This is the compute hot-spot of HDpwBatchSGD / HDpwAccBatchSGD (Step 5 of
+Algorithm 2): for the sampled row block M = (HDA)_tau and targets
+v = (HDb)_tau, compute the stochastic gradient direction. Fusing the
+residual matvec and the transposed matvec keeps M resident in VMEM for both
+passes (one HBM read of the tile instead of two).
+
+TPU adaptation notes (DESIGN.md section Hardware-Adaptation):
+  - grid over row tiles of M: each grid step loads an (rb x d) tile into
+    VMEM via BlockSpec, computes the partial M_blk^T (M_blk x - v_blk), and
+    accumulates into the (d,) output which stays VMEM-resident across the
+    whole grid (index_map constant in the row dimension).
+  - both matvecs feed the MXU as (rb x d) x (d,) contractions with
+    preferred_element_type matching the accumulator dtype.
+  - interpret=True everywhere in this environment: the CPU PJRT plugin
+    cannot execute Mosaic custom-calls; numerics are identical.
+
+The `scale` factor (2n/r in the paper) is applied by the L2 wrapper in
+model.py, keeping the kernel a pure contraction.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _batch_grad_kernel(m_ref, v_ref, x_ref, o_ref):
+    """One grid step: accumulate M_blk^T (M_blk x - v_blk) into o_ref."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    m = m_ref[...]
+    x = x_ref[...]
+    # residual for this row tile; accumulate in the output dtype
+    r = jnp.dot(m, x, preferred_element_type=o_ref.dtype) - v_ref[...]
+    o_ref[...] += jnp.dot(m.T, r, preferred_element_type=o_ref.dtype)
+
+
+def _pick_row_block(r):
+    """Largest power-of-two row tile <= r capped at 256 (VMEM budget)."""
+    rb = 1
+    while rb * 2 <= min(r, 256) and r % (rb * 2) == 0:
+        rb *= 2
+    return rb
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def batch_grad(m, v, x, row_block=None):
+    """c = M^T (M x - v) with M: (r, d), v: (r,), x: (d,) -> (d,).
+
+    Row-tiled Pallas call; row_block must divide r (defaults to the largest
+    power-of-two divisor <= 256).
+    """
+    r, d = m.shape
+    rb = row_block if row_block is not None else _pick_row_block(r)
+    assert r % rb == 0, f"row_block {rb} must divide r {r}"
+    grid = (r // rb,)
+    return pl.pallas_call(
+        _batch_grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rb, d), lambda i: (i, 0)),
+            pl.BlockSpec((rb,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=True,
+    )(m, v, x)

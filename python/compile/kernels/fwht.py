@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: orthonormal fast Walsh-Hadamard transform (FWHT).
+
+The second preconditioning step of HDpwBatchSGD (Step 2 of Algorithm 2)
+multiplies by the Randomized Hadamard Transform HD. H is never materialized:
+the kernel runs the O(n log n) butterfly network in-register over a column
+panel of the input.
+
+TPU adaptation (DESIGN.md section Hardware-Adaptation): the grid walks column
+panels of width `col_block`; each grid step holds an (n x col_block) panel in
+VMEM and performs all log2(n) butterfly stages on it before writing back —
+one HBM round-trip for the whole transform instead of one per stage (which is
+what a naive XLA lowering of the stage-by-stage jnp formulation does). The
+butterfly stages are a static Python loop (log2 n is compile-time), each
+stage a reshape + add/sub, which Mosaic maps onto VPU lanes.
+
+interpret=True: CPU PJRT cannot run Mosaic custom-calls; numerics identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwht_kernel(u_ref, o_ref, *, n):
+    u = u_ref[...]
+    tail = u.shape[1:]
+    h = 1
+    while h < n:
+        u = u.reshape((n // (2 * h), 2, h) + tail)
+        a = u[:, 0]
+        b = u[:, 1]
+        u = jnp.stack([a + b, a - b], axis=1).reshape((n,) + tail)
+        h *= 2
+    o_ref[...] = u / jnp.sqrt(jnp.asarray(n, dtype=u.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("col_block",))
+def fwht(u, col_block=None):
+    """Orthonormal FWHT along axis 0 of u: (n, d), n a power of two."""
+    n, d = u.shape
+    assert n & (n - 1) == 0 and n > 0, f"n={n} must be a power of two"
+    cb = col_block if col_block is not None else min(d, 128)
+    # pad d up to a multiple of cb so the grid tiles exactly
+    pad = (-d) % cb
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad)))
+    dp = d + pad
+    out = pl.pallas_call(
+        functools.partial(_fwht_kernel, n=n),
+        grid=(dp // cb,),
+        in_specs=[pl.BlockSpec((n, cb), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((n, cb), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, dp), u.dtype),
+        interpret=True,
+    )(u)
+    return out[:, :d] if pad else out

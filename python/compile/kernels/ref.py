@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float tolerance under pytest sweeps
+(python/tests/test_kernels.py). They are also the L2 fallback path when a
+shape is not worth a kernel launch.
+"""
+
+import jax.numpy as jnp
+
+
+def batch_grad_ref(m, v, x, scale):
+    """Mini-batch gradient of ||Ax-b||^2 restricted to sampled rows.
+
+    c = scale * M^T (M x - v), the Step-5 quantity of Algorithm 2
+    (HDpwBatchSGD) with M = (HDA)_tau, v = (HDb)_tau, scale = 2n/r.
+    """
+    r = m @ x - v
+    return scale * (m.T @ r)
+
+
+def full_grad_ref(a, b, x):
+    """Full gradient 2 A^T (A x - b) (pwGradient / IHS inner step)."""
+    return 2.0 * (a.T @ (a @ x - b))
+
+
+def fwht_ref(u):
+    """Orthonormal fast Walsh-Hadamard transform along axis 0.
+
+    u: (n, d) or (n,) with n a power of two. Returns H u with H the n x n
+    Walsh-Hadamard matrix scaled by 1/sqrt(n) (Definition 2 of the paper).
+    Reference implementation: explicit butterfly recursion in jnp.
+    """
+    n = u.shape[0]
+    tail = u.shape[1:]
+    h = 1
+    while h < n:
+        u = u.reshape((n // (2 * h), 2, h) + tail)
+        a = u[:, 0]
+        b = u[:, 1]
+        u = jnp.stack([a + b, a - b], axis=1).reshape((n,) + tail)
+        h *= 2
+    return u / jnp.sqrt(jnp.asarray(n, dtype=u.dtype))
+
+
+def hd_transform_ref(a, sign):
+    """Randomized Hadamard transform: H D a with D = diag(sign).
+
+    a: (n, d), sign: (n,) of +-1. This is Step 2 of Algorithm 2: the second
+    preconditioning step that spreads out row norms (Theorem 1).
+    """
+    return fwht_ref(a * sign[:, None])
+
+
+def residual_sq_ref(a, b, x):
+    """f(x) = ||Ax - b||_2^2."""
+    r = a @ x - b
+    return jnp.dot(r, r)
+
+
+def gd_step_ref(x, rinv, g, eta):
+    """Preconditioned gradient step x - eta * Rinv Rinv^T g (pre-projection).
+
+    The unconstrained Step-3 update of Algorithm 4 (pwGradient); with
+    eta = 1/2 this is exactly one IHS iteration with frozen sketch
+    (the paper's Theorem 6 equivalence).
+    """
+    return x - eta * (rinv @ (rinv.T @ g))

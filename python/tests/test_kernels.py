@@ -1,0 +1,163 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Sweeps shapes, dtypes and block sizes (hypothesis-style parameter grids —
+the hypothesis package is not available offline, so the sweeps are explicit
+parametrize grids with the same coverage intent).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from compile.kernels import ref  # noqa: E402
+from compile.kernels.batch_grad import batch_grad  # noqa: E402
+from compile.kernels.fwht import fwht  # noqa: E402
+
+
+def rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.float64: 1e-12}
+
+
+# ---------------------------------------------------------------------------
+# batch_grad kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("r", [1, 4, 16, 64, 256, 1024])
+@pytest.mark.parametrize("d", [1, 8, 32, 90])
+def test_batch_grad_matches_ref_shapes(r, d):
+    rng = np.random.default_rng(r * 1000 + d)
+    m = rand(rng, (r, d), jnp.float64)
+    v = rand(rng, (r,), jnp.float64)
+    x = rand(rng, (d,), jnp.float64)
+    got = batch_grad(m, v, x)
+    want = ref.batch_grad_ref(m, v, x, 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_batch_grad_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    m = rand(rng, (64, 16), dtype)
+    v = rand(rng, (64,), dtype)
+    x = rand(rng, (16,), dtype)
+    got = batch_grad(m, v, x)
+    want = ref.batch_grad_ref(m, v, x, 1.0)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(got, want, rtol=TOL[dtype], atol=TOL[dtype])
+
+
+@pytest.mark.parametrize("row_block", [1, 2, 8, 32])
+def test_batch_grad_row_block_invariance(row_block):
+    """Tiling must not change the result (accumulation over grid steps)."""
+    rng = np.random.default_rng(11)
+    m = rand(rng, (32, 8), jnp.float64)
+    v = rand(rng, (32,), jnp.float64)
+    x = rand(rng, (8,), jnp.float64)
+    got = batch_grad(m, v, x, row_block=row_block)
+    want = ref.batch_grad_ref(m, v, x, 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+def test_batch_grad_zero_x_gives_neg_mtv():
+    rng = np.random.default_rng(13)
+    m = rand(rng, (16, 4), jnp.float64)
+    v = rand(rng, (16,), jnp.float64)
+    x = jnp.zeros(4, jnp.float64)
+    got = batch_grad(m, v, x)
+    np.testing.assert_allclose(got, -(m.T @ v), rtol=1e-12)
+
+
+def test_batch_grad_gradient_identity():
+    """c = M^T(Mx - v) is 1/2 the gradient of ||Mx - v||^2: check against
+    jax autodiff as an independent oracle."""
+    rng = np.random.default_rng(17)
+    m = rand(rng, (32, 8), jnp.float64)
+    v = rand(rng, (32,), jnp.float64)
+    x = rand(rng, (8,), jnp.float64)
+    autodiff = jax.grad(lambda xx: jnp.sum((m @ xx - v) ** 2))(x)
+    got = 2.0 * batch_grad(m, v, x)
+    np.testing.assert_allclose(got, autodiff, rtol=1e-11, atol=1e-11)
+
+
+# ---------------------------------------------------------------------------
+# fwht kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [2, 8, 64, 512, 4096])
+@pytest.mark.parametrize("d", [1, 3, 33])
+def test_fwht_matches_ref(n, d):
+    rng = np.random.default_rng(n + d)
+    u = rand(rng, (n, d), jnp.float64)
+    got = fwht(u)
+    want = ref.fwht_ref(u)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+def test_fwht_matches_explicit_hadamard():
+    import scipy.linalg as sl
+
+    rng = np.random.default_rng(3)
+    n = 64
+    u = rand(rng, (n, 5), jnp.float64)
+    h = sl.hadamard(n) / np.sqrt(n)
+    np.testing.assert_allclose(fwht(u), h @ np.asarray(u), atol=1e-12)
+
+
+def test_fwht_involution_and_isometry():
+    rng = np.random.default_rng(5)
+    u = rand(rng, (256, 7), jnp.float64)
+    once = fwht(u)
+    twice = fwht(once)
+    np.testing.assert_allclose(twice, u, atol=1e-11)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(once, axis=0), jnp.linalg.norm(u, axis=0), rtol=1e-12
+    )
+
+
+@pytest.mark.parametrize("col_block", [1, 2, 16, 128])
+def test_fwht_col_block_invariance(col_block):
+    rng = np.random.default_rng(9)
+    u = rand(rng, (128, 10), jnp.float64)
+    got = fwht(u, col_block=col_block)
+    want = ref.fwht_ref(u)
+    np.testing.assert_allclose(got, want, atol=1e-12)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_fwht_dtypes(dtype):
+    rng = np.random.default_rng(21)
+    u = rand(rng, (64, 4), dtype)
+    got = fwht(u)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(got, ref.fwht_ref(u), rtol=TOL[dtype], atol=TOL[dtype])
+
+
+def test_fwht_rejects_non_pow2():
+    rng = np.random.default_rng(23)
+    u = rand(rng, (48, 4), jnp.float64)
+    with pytest.raises(AssertionError):
+        fwht(u)
+
+
+def test_hd_transform_spreads_rows():
+    """Theorem 1 sanity: HD flattens a spiky (identity-block) matrix."""
+    n, d = 512, 8
+    u = jnp.zeros((n, d), jnp.float64).at[jnp.arange(d), jnp.arange(d)].set(1.0)
+    rng = np.random.default_rng(29)
+    sign = jnp.asarray(rng.choice([-1.0, 1.0], size=n))
+    out = ref.hd_transform_ref(u, sign)
+    row_norms = jnp.linalg.norm(out, axis=1)
+    assert float(row_norms.max()) < 0.5  # was 1.0 before mixing
+    # orthogonality: column norms preserved
+    np.testing.assert_allclose(
+        jnp.linalg.norm(out, axis=0), jnp.ones(d), atol=1e-12
+    )

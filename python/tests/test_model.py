@@ -1,0 +1,221 @@
+"""L2 graph correctness: solver chunks vs straightforward numpy references,
+projection properties, and AOT lowering smoke tests."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from compile import model  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+
+def rand(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape))
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+
+
+def test_project_l2_matches_closed_form():
+    rng = np.random.default_rng(1)
+    x = rand(rng, (16,)) * 3.0
+    out = model.project_l2(x, 1.0)
+    nrm = float(jnp.linalg.norm(x))
+    if nrm > 1.0:
+        np.testing.assert_allclose(out, x / nrm, rtol=1e-12)
+    assert float(jnp.linalg.norm(out)) <= 1.0 + 1e-12
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_project_l1_on_boundary_and_optimal(seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (12,)) * 2.0
+    radius = 1.0
+    out = model.project_l1(x, radius)
+    l1 = float(jnp.sum(jnp.abs(out)))
+    if float(jnp.sum(jnp.abs(x))) > radius:
+        assert abs(l1 - radius) < 1e-9
+    else:
+        np.testing.assert_allclose(out, x)
+    # Euclidean optimality vs random feasible candidates
+    d_out = float(jnp.sum((x - out) ** 2))
+    for _ in range(200):
+        cand = rng.standard_normal(12)
+        c_l1 = np.abs(cand).sum()
+        if c_l1 > radius:
+            cand *= radius / c_l1
+        assert float(np.sum((np.asarray(x) - cand) ** 2)) >= d_out - 1e-9
+
+
+def test_project_l1_inside_is_identity():
+    x = jnp.asarray([0.1, -0.2, 0.05])
+    np.testing.assert_allclose(model.project_l1(x, 1.0), x)
+
+
+# ---------------------------------------------------------------------------
+# solver chunks vs numpy reference loops
+# ---------------------------------------------------------------------------
+
+
+def np_sgd_chunk(hda, hdb, x0, pinv, idx, eta, scale, radius, constraint):
+    x = np.asarray(x0).copy()
+    xsum = np.zeros_like(x)
+    for tau in idx:
+        m = hda[tau]
+        v = hdb[tau]
+        c = scale * (m.T @ (m @ x - v))
+        x = x - eta * (pinv @ c)
+        if constraint == "l2":
+            nrm = np.linalg.norm(x)
+            if nrm > radius:
+                x = x * (radius / nrm)
+        elif constraint == "l1":
+            x = np.asarray(model.project_l1(jnp.asarray(x), radius))
+        xsum += x
+    return x, xsum
+
+
+@pytest.mark.parametrize("constraint", ["unc", "l2", "l1"])
+def test_sgd_chunk_matches_numpy(constraint):
+    rng = np.random.default_rng(42)
+    n, d, r, t = 256, 6, 4, 10
+    hda = rng.standard_normal((n, d))
+    hdb = rng.standard_normal(n)
+    x0 = rng.standard_normal(d)
+    pinv = np.eye(d) * 0.1
+    idx = rng.integers(0, n, size=(t, r))
+    eta, scale, radius = 0.05, 2.0 * n / r, 0.8
+    got_x, got_sum = model.sgd_chunk(
+        jnp.asarray(hda),
+        jnp.asarray(hdb),
+        jnp.asarray(x0),
+        jnp.asarray(pinv),
+        jnp.asarray(idx, dtype=jnp.int32),
+        eta,
+        scale,
+        radius,
+        constraint=constraint,
+    )
+    want_x, want_sum = np_sgd_chunk(hda, hdb, x0, pinv, idx, eta, scale, radius, constraint)
+    np.testing.assert_allclose(got_x, want_x, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(got_sum, want_sum, rtol=1e-9, atol=1e-9)
+
+
+def test_acc_chunk_unconstrained_matches_numpy():
+    rng = np.random.default_rng(43)
+    n, d, r, t = 128, 5, 4, 8
+    hda = rng.standard_normal((n, d))
+    hdb = rng.standard_normal(n)
+    x = rng.standard_normal(d)
+    xhat = rng.standard_normal(d)
+    pinv = np.eye(d) * 0.05
+    idx = rng.integers(0, n, size=(t, r))
+    alphas = np.asarray([2.0 / (k + 2.0) for k in range(t)])
+    qs = alphas.copy()
+    etas = np.full(t, 0.03)
+    mu, scale = 2.0, 2.0 * n / r
+    got_x, got_xh = model.acc_chunk(
+        jnp.asarray(hda),
+        jnp.asarray(hdb),
+        jnp.asarray(x),
+        jnp.asarray(xhat),
+        jnp.asarray(pinv),
+        jnp.asarray(idx, dtype=jnp.int32),
+        jnp.asarray(alphas),
+        jnp.asarray(qs),
+        jnp.asarray(etas),
+        mu,
+        scale,
+        0.0,
+        constraint="unc",
+    )
+    # numpy reference
+    xn, xh = x.copy(), xhat.copy()
+    for k in range(t):
+        xt = (1 - qs[k]) * xh + qs[k] * xn
+        m = hda[idx[k]]
+        v = hdb[idx[k]]
+        c = scale * (m.T @ (m @ xt - v))
+        xnew = (etas[k] * mu * xt + xn - etas[k] * (pinv @ c)) / (1 + etas[k] * mu)
+        xh = (1 - alphas[k]) * xh + alphas[k] * xnew
+        xn = xnew
+    np.testing.assert_allclose(got_x, xn, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(got_xh, xh, rtol=1e-9, atol=1e-9)
+
+
+def test_pw_gradient_chunk_newton_like_with_exact_pinv():
+    """With pinv = (A^T A)^{-1} and eta = 1/2, one step solves the LS problem."""
+    rng = np.random.default_rng(44)
+    n, d = 512, 6
+    a = rng.standard_normal((n, d))
+    xstar = rng.standard_normal(d)
+    b = a @ xstar + 0.01 * rng.standard_normal(n)
+    pinv = np.linalg.inv(a.T @ a)
+    (xt,) = model.pw_gradient_chunk(
+        jnp.asarray(a),
+        jnp.asarray(b),
+        jnp.zeros(d),
+        jnp.asarray(pinv),
+        0.5,
+        0.0,
+        T=1,
+        constraint="unc",
+    )
+    lsq = np.linalg.lstsq(a, b, rcond=None)[0]
+    np.testing.assert_allclose(xt, lsq, rtol=1e-9, atol=1e-9)
+
+
+def test_hd_transform_packs_a_and_b():
+    rng = np.random.default_rng(45)
+    n, d = 128, 4
+    aug = rng.standard_normal((n, d + 1))
+    sign = rng.choice([-1.0, 1.0], size=n)
+    got = model.hd_transform(jnp.asarray(aug), jnp.asarray(sign))
+    want = ref.hd_transform_ref(jnp.asarray(aug), jnp.asarray(sign))
+    np.testing.assert_allclose(got, want, atol=1e-11)
+    # objective invariance: ||HDA x - HDb|| == ||Ax - b||
+    a, b = aug[:, :d], aug[:, d]
+    ha, hb = np.asarray(got)[:, :d], np.asarray(got)[:, d]
+    x = rng.standard_normal(d)
+    np.testing.assert_allclose(
+        np.linalg.norm(ha @ x - hb), np.linalg.norm(a @ x - b), rtol=1e-10
+    )
+
+
+# ---------------------------------------------------------------------------
+# AOT lowering smoke (tiny shapes; full artifact parity is tested from Rust)
+# ---------------------------------------------------------------------------
+
+
+def test_aot_lowering_all_ops_tiny():
+    from compile import aot
+
+    ops = aot.build_ops(n=64, d=4, rs=[2], chunk_t=3, pw_t=2)
+    assert len(ops) >= 14
+    for op in ops:
+        text = aot.to_hlo_text(op["fn"], op["specs"])
+        assert text.startswith("HloModule"), op["name"]
+        assert "ENTRY" in text, op["name"]
+
+
+def test_aot_lowering_preserves_parameter_count():
+    """Regression test: unused inputs (e.g. radius in 'unc' variants) must
+    not be pruned from the lowered module, or the manifest desyncs."""
+    from compile import aot
+
+    for op in aot.build_ops(n=64, d=4, rs=[2], chunk_t=3, pw_t=2):
+        text = aot.to_hlo_text(op["fn"], op["specs"])
+        # count parameters of the ENTRY computation only (nested scan /
+        # reduce computations declare their own)
+        entry = text[text.index("ENTRY") :]
+        body = entry[: entry.index("\n}")]
+        n_params = body.count("parameter(")
+        assert n_params == len(op["specs"]), (
+            f"{op['name']}: {n_params} params vs {len(op['specs'])} specs"
+        )

@@ -1,0 +1,29 @@
+// Shared bench-entry helper (included by each bench via `include!`).
+//
+// `cargo bench` passes extra args (e.g. `--bench`); we accept
+// HDPW_BENCH_FULL=1 to run at paper scale, default quick scale.
+
+use hdpw::experiments::ExpCtx;
+
+pub fn bench_ctx() -> ExpCtx {
+    let full = std::env::var("HDPW_BENCH_FULL").ok().as_deref() == Some("1");
+    let mut ctx = ExpCtx::new(!full);
+    if let Ok(n) = std::env::var("HDPW_BENCH_N") {
+        if let Ok(n) = n.parse() {
+            ctx.n = n;
+        }
+    }
+    if let Ok(t) = std::env::var("HDPW_BENCH_TRIALS") {
+        if let Ok(t) = t.parse() {
+            ctx.trials = t;
+        }
+    }
+    eprintln!(
+        "[bench] n={} trials={} budget={}s pjrt={}",
+        ctx.n,
+        ctx.trials,
+        ctx.budget,
+        ctx.coord.backend().has_pjrt()
+    );
+    ctx
+}

@@ -1,0 +1,11 @@
+//! Regenerates Figure 1: HDpwBatchSGD batch-size speed-up on Syn1/Syn2.
+include!("common.rs");
+
+fn main() {
+    let ctx = bench_ctx();
+    let out = hdpw::experiments::fig1::run(&ctx).expect("fig1");
+    for (i, fig) in out.figures.iter().enumerate() {
+        println!("{}", ctx.save_and_render(fig, &format!("fig1_{i}")));
+    }
+    println!("{}", hdpw::experiments::fig1::render_table(&out));
+}

@@ -1,0 +1,9 @@
+//! Regenerates Figure 2: Syn1 unconstrained, low- and high-precision races.
+include!("common.rs");
+
+fn main() {
+    let ctx = bench_ctx();
+    let panels = hdpw::experiments::fig2::run(&ctx).expect("fig2");
+    println!("{}", ctx.save_and_render(&panels.low, "fig2_low"));
+    println!("{}", ctx.save_and_render(&panels.high, "fig2_high"));
+}

@@ -1,0 +1,10 @@
+//! Regenerates Fig3 (see experiments::figs_real).
+include!("common.rs");
+
+fn main() {
+    let ctx = bench_ctx();
+    let figs = hdpw::experiments::figs_real::fig3(&ctx).expect("fig3");
+    for (i, fig) in figs.iter().enumerate() {
+        println!("{}", ctx.save_and_render(fig, &format!("fig3_{i}")));
+    }
+}

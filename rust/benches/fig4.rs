@@ -1,0 +1,10 @@
+//! Regenerates Fig4 (see experiments::figs_real).
+include!("common.rs");
+
+fn main() {
+    let ctx = bench_ctx();
+    let figs = hdpw::experiments::figs_real::fig4(&ctx).expect("fig4");
+    for (i, fig) in figs.iter().enumerate() {
+        println!("{}", ctx.save_and_render(fig, &format!("fig4_{i}")));
+    }
+}

@@ -1,0 +1,10 @@
+//! Regenerates Fig6 (see experiments::figs_real).
+include!("common.rs");
+
+fn main() {
+    let ctx = bench_ctx();
+    let figs = hdpw::experiments::figs_real::fig6(&ctx).expect("fig6");
+    for (i, fig) in figs.iter().enumerate() {
+        println!("{}", ctx.save_and_render(fig, &format!("fig6_{i}")));
+    }
+}

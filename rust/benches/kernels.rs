@@ -1,0 +1,180 @@
+//! Microbenchmarks for the native hot paths + PJRT dispatch overhead.
+//! The §Perf iteration log in EXPERIMENTS.md is driven by this bench.
+
+use hdpw::backend::Backend;
+use hdpw::linalg::{blas, qr, tri, Mat};
+use hdpw::prox::Constraint;
+use hdpw::sketch::fwht;
+use hdpw::sketch::SketchKind;
+use hdpw::util::rng::Rng;
+use hdpw::util::stats::BenchStats;
+
+fn main() {
+    let mut rng = Rng::new(7);
+
+    // ---- gemm -------------------------------------------------------------
+    for (m, k, n) in [(256, 256, 256), (1024, 64, 64), (8192, 32, 32)] {
+        let a = Mat::gaussian(m, k, &mut rng);
+        let b = Mat::gaussian(k, n, &mut rng);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let st = BenchStats::run(&format!("gemm {m}x{k}x{n}"), 3, 10, || {
+            std::hint::black_box(blas::gemm(&a, &b));
+        });
+        let gflops = flops / st.median_secs() / 1e9;
+        println!("{}  [{gflops:.2} GFLOP/s]", st.report());
+    }
+
+    // ---- fused gradient (pwGradient inner step) -----------------------------
+    for (n, d) in [(65_536, 32), (65_536, 96), (262_144, 32)] {
+        let a = Mat::gaussian(n, d, &mut rng);
+        let b = rng.gaussians(n);
+        let x = rng.gaussians(d);
+        let bytes = (n * d * 8) as f64;
+        let st = BenchStats::run(&format!("fused_grad {n}x{d}"), 3, 10, || {
+            std::hint::black_box(blas::fused_grad(&a, &b, &x, 2.0));
+        });
+        println!(
+            "{}  [{:.2} GB/s effective]",
+            st.report(),
+            bytes / st.median_secs() / 1e9
+        );
+    }
+
+    // ---- FWHT ---------------------------------------------------------------
+    for (n, d) in [(65_536, 33), (262_144, 21)] {
+        let a = Mat::gaussian(n, d, &mut rng);
+        let bytes = (n * d * 8) as f64 * (n as f64).log2();
+        let st = BenchStats::run(&format!("fwht {n}x{d}"), 2, 8, || {
+            let mut m = a.clone();
+            fwht::fwht_mat(&mut m);
+            std::hint::black_box(m);
+        });
+        println!(
+            "{}  [{:.2} GB/s butterfly traffic]",
+            st.report(),
+            bytes / st.median_secs() / 1e9
+        );
+    }
+
+    // ---- sketch + QR (precondition setup) -----------------------------------
+    for kind in [
+        SketchKind::CountSketch,
+        SketchKind::Srht,
+        SketchKind::SparseEmbed,
+    ] {
+        let a = Mat::gaussian(65_536, 20, &mut rng);
+        let s = hdpw::sketch::default_sketch_size_for(a.rows, a.cols, kind);
+        let mut local_rng = rng.fork(3);
+        let st = BenchStats::run(
+            &format!("precondition {} s={s}", kind.name()),
+            2,
+            8,
+            || {
+                std::hint::black_box(hdpw::precond::precondition(&a, kind, s, &mut local_rng));
+            },
+        );
+        println!("{}", st.report());
+    }
+
+    // ---- QR + triangular ------------------------------------------------------
+    let sa = Mat::gaussian(1000, 20, &mut rng);
+    let st = BenchStats::run("qr_r 1000x20", 3, 20, || {
+        std::hint::black_box(qr::qr_r(&sa));
+    });
+    println!("{}", st.report());
+    let r = qr::qr_r(&sa);
+    let g = rng.gaussians(20);
+    let st = BenchStats::run("apply_pinv d=20", 5, 50, || {
+        std::hint::black_box(tri::apply_pinv(&r, &g));
+    });
+    println!("{}", st.report());
+
+    // ---- native sgd_chunk (solver inner loop) ----------------------------------
+    let n = 65_536;
+    let d = 32;
+    let hda = Mat::gaussian(n, d, &mut rng);
+    let hdb = rng.gaussians(n);
+    let pinv = Mat::eye(d);
+    let x0 = rng.gaussians(d);
+    for r in [16usize, 256] {
+        let idx: Vec<Vec<usize>> = (0..50).map(|_| rng.indices(r, n)).collect();
+        let be = Backend::native();
+        let st = BenchStats::run(&format!("sgd_chunk native r={r} T=50"), 2, 10, || {
+            std::hint::black_box(be.sgd_chunk(
+                &hda,
+                &hdb,
+                &x0,
+                &pinv,
+                &idx,
+                0.1,
+                2.0 * n as f64 / r as f64,
+                &Constraint::Unconstrained,
+                None,
+            ));
+        });
+        println!(
+            "{}  [{:.1}us/iter]",
+            st.report(),
+            st.median_secs() / 50.0 * 1e6
+        );
+    }
+
+    // ---- PJRT dispatch overhead (artifact shapes) -------------------------------
+    let auto = Backend::auto();
+    if auto.has_pjrt() {
+        let n = 8192;
+        let d = 32;
+        let a = Mat::gaussian(n, d, &mut rng);
+        let b = rng.gaussians(n);
+        let x = rng.gaussians(d);
+        let st = BenchStats::run("pjrt full_grad 8192x32", 3, 20, || {
+            std::hint::black_box(auto.full_grad(&a, &b, &x));
+        });
+        println!("{}", st.report());
+        let nat = Backend::native();
+        let st2 = BenchStats::run("native full_grad 8192x32", 3, 20, || {
+            std::hint::black_box(nat.full_grad(&a, &b, &x));
+        });
+        println!("{}", st2.report());
+        let idx: Vec<Vec<usize>> = (0..50).map(|_| rng.indices(64, n)).collect();
+        let pinv = Mat::eye(d);
+        let st3 = BenchStats::run("pjrt sgd_chunk r=64 T=50", 2, 10, || {
+            std::hint::black_box(auto.sgd_chunk(
+                &a,
+                &b,
+                &x,
+                &pinv,
+                &idx,
+                0.1,
+                2.0 * n as f64 / 64.0,
+                &Constraint::Unconstrained,
+                None,
+            ));
+        });
+        println!(
+            "{}  [{:.1}us/iter]",
+            st3.report(),
+            st3.median_secs() / 50.0 * 1e6
+        );
+        let st4 = BenchStats::run("native sgd_chunk r=64 T=50 (8192x32)", 2, 10, || {
+            std::hint::black_box(nat.sgd_chunk(
+                &a,
+                &b,
+                &x,
+                &pinv,
+                &idx,
+                0.1,
+                2.0 * n as f64 / 64.0,
+                &Constraint::Unconstrained,
+                None,
+            ));
+        });
+        println!(
+            "{}  [{:.1}us/iter]",
+            st4.report(),
+            st4.median_secs() / 50.0 * 1e6
+        );
+    } else {
+        println!("(PJRT artifacts not found: run `make artifacts` for dispatch benches)");
+    }
+}

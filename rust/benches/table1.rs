@@ -1,0 +1,13 @@
+//! Regenerates Table 1 (empirical complexity scaling).
+include!("common.rs");
+
+fn main() {
+    let ctx = bench_ctx();
+    let out = hdpw::experiments::table1::run(&ctx).expect("table1");
+    println!("{}", hdpw::experiments::table1::render(&out));
+    let v = hdpw::experiments::table1::verdict(&out);
+    println!(
+        "verdict: batch_speedup={} linear_convergence={}",
+        v.batch_speedup_ok, v.linear_convergence_ok
+    );
+}

@@ -1,0 +1,8 @@
+//! Regenerates Table 2 (preconditioner cost per sketch + kappa(AR^-1)).
+include!("common.rs");
+
+fn main() {
+    let ctx = bench_ctx();
+    let out = hdpw::experiments::table2::run(&ctx).expect("table2");
+    println!("{}", hdpw::experiments::table2::render(&out));
+}

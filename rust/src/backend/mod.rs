@@ -1,0 +1,603 @@
+//! Numerical backend: PJRT artifacts when shapes match the manifest,
+//! from-scratch native kernels otherwise.
+//!
+//! Every solver expresses its numerics through this interface, so the same
+//! solver code runs (a) fully native at arbitrary shapes and (b) through the
+//! AOT-compiled L1/L2 graphs at the canonical shapes. The two paths are
+//! cross-validated in `rust/tests/pjrt_parity.rs`.
+
+use crate::linalg::{blas, Mat};
+use crate::prox::metric::MetricProjector;
+use crate::prox::Constraint;
+use crate::runtime::literal::Value;
+use crate::runtime::{Engine, EngineHandle};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Dispatch counters (observability + tests).
+#[derive(Debug, Default)]
+pub struct DispatchStats {
+    pub pjrt_calls: AtomicUsize,
+    pub native_calls: AtomicUsize,
+}
+
+/// The dual-path numerical backend.
+#[derive(Clone)]
+pub struct Backend {
+    engine: Option<EngineHandle>,
+    force_native: bool,
+    stats: Arc<DispatchStats>,
+}
+
+impl Backend {
+    /// Native-only backend (no artifacts needed).
+    pub fn native() -> Backend {
+        Backend {
+            engine: None,
+            force_native: true,
+            stats: Arc::new(DispatchStats::default()),
+        }
+    }
+
+    /// Backend with a loaded PJRT engine; falls back to native off-manifest.
+    pub fn with_engine(engine: EngineHandle) -> Backend {
+        Backend {
+            engine: Some(engine),
+            force_native: false,
+            stats: Arc::new(DispatchStats::default()),
+        }
+    }
+
+    /// Try to load artifacts from the default dir; native fallback if absent.
+    pub fn auto() -> Backend {
+        match EngineHandle::spawn(&Engine::default_dir()) {
+            Ok(e) => Backend::with_engine(e),
+            Err(_) => Backend::native(),
+        }
+    }
+
+    pub fn has_pjrt(&self) -> bool {
+        self.engine.is_some() && !self.force_native
+    }
+
+    pub fn pjrt_calls(&self) -> usize {
+        self.stats.pjrt_calls.load(Ordering::Relaxed)
+    }
+
+    pub fn native_calls(&self) -> usize {
+        self.stats.native_calls.load(Ordering::Relaxed)
+    }
+
+    fn engine_with(&self, op: &str) -> Option<&EngineHandle> {
+        if self.force_native {
+            return None;
+        }
+        let e = self.engine.as_ref()?;
+        e.has_op(op).then_some(e)
+    }
+
+    fn mark(&self, pjrt: bool) {
+        if pjrt {
+            self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.stats.native_calls.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    // ---------------------------------------------------------------------
+    // ops
+    // ---------------------------------------------------------------------
+
+    /// Randomized-Hadamard transform of the packed [A | b] (rows must be a
+    /// power of two). Artifact: `hd_transform_n{n}_c{cols}`.
+    pub fn hd_transform(&self, aug: &Mat, signs: &[f64]) -> Mat {
+        let op = format!("hd_transform_n{}_c{}", aug.rows, aug.cols);
+        if let Some(e) = self.engine_with(&op) {
+            self.mark(true);
+            let out = e
+                .execute(&op, vec![Value::Mat(aug.clone()), Value::Vec(signs.to_vec())])
+                .expect("hd_transform artifact");
+            return Mat::from_vec(aug.rows, aug.cols, out.into_iter().next().unwrap());
+        }
+        self.mark(false);
+        let mut m = aug.clone();
+        crate::sketch::fwht::randomized_hadamard(&mut m, signs);
+        m
+    }
+
+    /// Mini-batch gradient c = scale * M^T (M x - v). Artifact:
+    /// `batch_grad_r{r}_d{d}`.
+    pub fn batch_grad(&self, m: &Mat, v: &[f64], x: &[f64], scale: f64) -> Vec<f64> {
+        let op = format!("batch_grad_r{}_d{}", m.rows, m.cols);
+        if let Some(e) = self.engine_with(&op) {
+            self.mark(true);
+            let out = e
+                .execute(
+                    &op,
+                    vec![
+                        Value::Mat(m.clone()),
+                        Value::Vec(v.to_vec()),
+                        Value::Vec(x.to_vec()),
+                        Value::Scalar(scale),
+                    ],
+                )
+                .expect("batch_grad artifact");
+            return out.into_iter().next().unwrap();
+        }
+        self.mark(false);
+        blas::fused_grad(m, v, x, scale)
+    }
+
+    /// Full gradient g = 2 A^T (A x - b). Artifact: `full_grad_n{n}_d{d}`.
+    pub fn full_grad(&self, a: &Mat, b: &[f64], x: &[f64]) -> Vec<f64> {
+        let op = format!("full_grad_n{}_d{}", a.rows, a.cols);
+        if let Some(e) = self.engine_with(&op) {
+            self.mark(true);
+            let out = e
+                .execute(
+                    &op,
+                    vec![
+                        Value::Mat(a.clone()),
+                        Value::Vec(b.to_vec()),
+                        Value::Vec(x.to_vec()),
+                    ],
+                )
+                .expect("full_grad artifact");
+            return out.into_iter().next().unwrap();
+        }
+        self.mark(false);
+        blas::fused_grad(a, b, x, 2.0)
+    }
+
+    /// f(x) = ||Ax - b||^2. Artifact: `residual_sq_n{n}_d{d}`.
+    pub fn residual_sq(&self, a: &Mat, b: &[f64], x: &[f64]) -> f64 {
+        let op = format!("residual_sq_n{}_d{}", a.rows, a.cols);
+        if let Some(e) = self.engine_with(&op) {
+            self.mark(true);
+            let out = e
+                .execute(
+                    &op,
+                    vec![
+                        Value::Mat(a.clone()),
+                        Value::Vec(b.to_vec()),
+                        Value::Vec(x.to_vec()),
+                    ],
+                )
+                .expect("residual_sq artifact");
+            return out[0][0];
+        }
+        self.mark(false);
+        blas::residual_sq(a, b, x)
+    }
+
+    /// One preconditioned gradient step x <- P_W(x - eta * pinv g).
+    ///
+    /// `metric`: when Some, constrained steps use the R-metric projection
+    /// (the paper's Step-6 quadratic subproblem — see prox::metric); the
+    /// PJRT artifacts implement the Euclidean-projection variant, so metric
+    /// projections always take the native path.
+    /// Artifact: `gd_step_{cons}_d{d}`.
+    pub fn gd_step(
+        &self,
+        x: &[f64],
+        pinv: &Mat,
+        g: &[f64],
+        eta: f64,
+        cons: &Constraint,
+        metric: Option<&MetricProjector>,
+    ) -> Vec<f64> {
+        let op = format!("gd_step_{}_d{}", cons.tag(), x.len());
+        let metric_active = metric.is_some() && cons.tag() != "unc";
+        if cons.tag() != "box" && !metric_active {
+            if let Some(e) = self.engine_with(&op) {
+                self.mark(true);
+                let out = e
+                    .execute(
+                        &op,
+                        vec![
+                            Value::Vec(x.to_vec()),
+                            Value::Mat(pinv.clone()),
+                            Value::Vec(g.to_vec()),
+                            Value::Scalar(eta),
+                            Value::Scalar(cons.radius()),
+                        ],
+                    )
+                    .expect("gd_step artifact");
+                return out.into_iter().next().unwrap();
+            }
+        }
+        self.mark(false);
+        let step = blas::gemv(pinv, g);
+        let mut out = x.to_vec();
+        for (o, s) in out.iter_mut().zip(&step) {
+            *o -= eta * s;
+        }
+        match metric {
+            Some(m) => m.project(&out, cons),
+            None => {
+                cons.project(&mut out);
+                out
+            }
+        }
+    }
+
+    /// T fused mini-batch SGD steps (Algorithm 2, steps 3-7).
+    /// `idx` is (T x r) i.i.d. uniform indices. Returns (x_T, sum of x_t).
+    /// Artifact: `sgd_chunk_{cons}_n{n}_d{d}_r{r}_t{T}`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sgd_chunk(
+        &self,
+        hda: &Mat,
+        hdb: &[f64],
+        x0: &[f64],
+        pinv: &Mat,
+        idx: &[Vec<usize>],
+        eta: f64,
+        scale: f64,
+        cons: &Constraint,
+        metric: Option<&MetricProjector>,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let t = idx.len();
+        let r = idx.first().map(|v| v.len()).unwrap_or(0);
+        let op = format!(
+            "sgd_chunk_{}_n{}_d{}_r{}_t{}",
+            cons.tag(),
+            hda.rows,
+            hda.cols,
+            r,
+            t
+        );
+        let metric_active = metric.is_some() && cons.tag() != "unc";
+        if cons.tag() != "box" && !metric_active {
+            if let Some(e) = self.engine_with(&op) {
+                self.mark(true);
+                let flat: Vec<i32> = idx
+                    .iter()
+                    .flat_map(|row| row.iter().map(|&i| i as i32))
+                    .collect();
+                let out = e
+                    .execute(
+                        &op,
+                        vec![
+                            Value::Mat(hda.clone()),
+                            Value::Vec(hdb.to_vec()),
+                            Value::Vec(x0.to_vec()),
+                            Value::Mat(pinv.clone()),
+                            Value::MatI32 {
+                                rows: t,
+                                cols: r,
+                                data: flat,
+                            },
+                            Value::Scalar(eta),
+                            Value::Scalar(scale),
+                            Value::Scalar(cons.radius()),
+                        ],
+                    )
+                    .expect("sgd_chunk artifact");
+                let mut it = out.into_iter();
+                return (it.next().unwrap(), it.next().unwrap());
+            }
+        }
+        self.mark(false);
+        let d = hda.cols;
+        let mut x = x0.to_vec();
+        let mut xsum = vec![0.0; d];
+        let mut mbuf = Mat::zeros(r, d);
+        let mut vbuf = vec![0.0; r];
+        for tau in idx {
+            for (k, &i) in tau.iter().enumerate() {
+                mbuf.row_mut(k).copy_from_slice(hda.row(i));
+                vbuf[k] = hdb[i];
+            }
+            let c = blas::fused_grad(&mbuf, &vbuf, &x, scale);
+            let step = blas::gemv(pinv, &c);
+            for (xi, si) in x.iter_mut().zip(&step) {
+                *xi -= eta * si;
+            }
+            match metric {
+                Some(m) => x = m.project(&x, cons),
+                None => cons.project(&mut x),
+            }
+            for (s, xi) in xsum.iter_mut().zip(&x) {
+                *s += xi;
+            }
+        }
+        (x, xsum)
+    }
+
+    /// T fused accelerated (Ghadimi-Lan) mini-batch steps (Algorithm 6).
+    /// Returns (x_T, xhat_T). Artifact: `acc_chunk_{cons}_n{n}_d{d}_r{r}_t{T}`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn acc_chunk(
+        &self,
+        hda: &Mat,
+        hdb: &[f64],
+        x0: &[f64],
+        xhat0: &[f64],
+        pinv: &Mat,
+        idx: &[Vec<usize>],
+        alphas: &[f64],
+        qs: &[f64],
+        etas: &[f64],
+        mu: f64,
+        scale: f64,
+        cons: &Constraint,
+        metric: Option<&MetricProjector>,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let t = idx.len();
+        let r = idx.first().map(|v| v.len()).unwrap_or(0);
+        let op = format!(
+            "acc_chunk_{}_n{}_d{}_r{}_t{}",
+            cons.tag(),
+            hda.rows,
+            hda.cols,
+            r,
+            t
+        );
+        let metric_active = metric.is_some() && cons.tag() != "unc";
+        if cons.tag() != "box" && !metric_active {
+            if let Some(e) = self.engine_with(&op) {
+                self.mark(true);
+                let flat: Vec<i32> = idx
+                    .iter()
+                    .flat_map(|row| row.iter().map(|&i| i as i32))
+                    .collect();
+                let out = e
+                    .execute(
+                        &op,
+                        vec![
+                            Value::Mat(hda.clone()),
+                            Value::Vec(hdb.to_vec()),
+                            Value::Vec(x0.to_vec()),
+                            Value::Vec(xhat0.to_vec()),
+                            Value::Mat(pinv.clone()),
+                            Value::MatI32 {
+                                rows: t,
+                                cols: r,
+                                data: flat,
+                            },
+                            Value::Vec(alphas.to_vec()),
+                            Value::Vec(qs.to_vec()),
+                            Value::Vec(etas.to_vec()),
+                            Value::Scalar(mu),
+                            Value::Scalar(scale),
+                            Value::Scalar(cons.radius()),
+                        ],
+                    )
+                    .expect("acc_chunk artifact");
+                let mut it = out.into_iter();
+                return (it.next().unwrap(), it.next().unwrap());
+            }
+        }
+        self.mark(false);
+        let d = hda.cols;
+        let mut x = x0.to_vec();
+        let mut xhat = xhat0.to_vec();
+        let mut mbuf = Mat::zeros(r, d);
+        let mut vbuf = vec![0.0; r];
+        for (step_i, tau) in idx.iter().enumerate() {
+            let (a_t, q_t, eta_t) = (alphas[step_i], qs[step_i], etas[step_i]);
+            // x~ = (1 - q) xhat + q x
+            let xtilde: Vec<f64> = xhat
+                .iter()
+                .zip(&x)
+                .map(|(h, xi)| (1.0 - q_t) * h + q_t * xi)
+                .collect();
+            for (k, &i) in tau.iter().enumerate() {
+                mbuf.row_mut(k).copy_from_slice(hda.row(i));
+                vbuf[k] = hdb[i];
+            }
+            let c = blas::fused_grad(&mbuf, &vbuf, &xtilde, scale);
+            let pc = blas::gemv(pinv, &c);
+            let denom = 1.0 + eta_t * mu;
+            let mut xn: Vec<f64> = (0..d)
+                .map(|j| (eta_t * mu * xtilde[j] + x[j] - eta_t * pc[j]) / denom)
+                .collect();
+            match metric {
+                Some(m) => xn = m.project(&xn, cons),
+                None => cons.project(&mut xn),
+            }
+            for j in 0..d {
+                xhat[j] = (1.0 - a_t) * xhat[j] + a_t * xn[j];
+            }
+            x = xn;
+        }
+        (x, xhat)
+    }
+
+    /// T fused pwGradient steps (Algorithm 4). Artifact:
+    /// `pw_gradient_chunk_{cons}_n{n}_d{d}_t{T}`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pw_gradient_chunk(
+        &self,
+        a: &Mat,
+        b: &[f64],
+        x0: &[f64],
+        pinv: &Mat,
+        eta: f64,
+        t: usize,
+        cons: &Constraint,
+        metric: Option<&MetricProjector>,
+    ) -> Vec<f64> {
+        let op = format!(
+            "pw_gradient_chunk_{}_n{}_d{}_t{}",
+            cons.tag(),
+            a.rows,
+            a.cols,
+            t
+        );
+        let metric_active = metric.is_some() && cons.tag() != "unc";
+        if cons.tag() != "box" && !metric_active {
+            if let Some(e) = self.engine_with(&op) {
+                self.mark(true);
+                let out = e
+                    .execute(
+                        &op,
+                        vec![
+                            Value::Mat(a.clone()),
+                            Value::Vec(b.to_vec()),
+                            Value::Vec(x0.to_vec()),
+                            Value::Mat(pinv.clone()),
+                            Value::Scalar(eta),
+                            Value::Scalar(cons.radius()),
+                        ],
+                    )
+                    .expect("pw_gradient_chunk artifact");
+                return out.into_iter().next().unwrap();
+            }
+        }
+        self.mark(false);
+        let mut x = x0.to_vec();
+        for _ in 0..t {
+            let g = blas::fused_grad(a, b, &x, 2.0);
+            let step = blas::gemv(pinv, &g);
+            for (xi, si) in x.iter_mut().zip(&step) {
+                *xi -= eta * si;
+            }
+            match metric {
+                Some(m) => x = m.project(&x, cons),
+                None => cons.project(&mut x),
+            }
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, d: usize) -> (Mat, Vec<f64>, Vec<f64>, Mat, Rng) {
+        let mut rng = Rng::new(42);
+        let a = Mat::gaussian(n, d, &mut rng);
+        let b = rng.gaussians(n);
+        let x = rng.gaussians(d);
+        // a simple SPD pinv: identity (keeps tests about plumbing, not math)
+        let pinv = Mat::eye(d);
+        (a, b, x, pinv, rng)
+    }
+
+    #[test]
+    fn native_batch_grad_matches_fused() {
+        let (a, b, x, _, _) = setup(32, 5);
+        let be = Backend::native();
+        let got = be.batch_grad(&a, &b, &x, 3.0);
+        let want = blas::fused_grad(&a, &b, &x, 3.0);
+        assert_eq!(got, want);
+        assert_eq!(be.native_calls(), 1);
+        assert_eq!(be.pjrt_calls(), 0);
+    }
+
+    #[test]
+    fn native_full_grad_and_residual() {
+        let (a, b, x, _, _) = setup(64, 4);
+        let be = Backend::native();
+        let g = be.full_grad(&a, &b, &x);
+        assert_eq!(g, blas::fused_grad(&a, &b, &x, 2.0));
+        let f = be.residual_sq(&a, &b, &x);
+        assert!((f - blas::residual_sq(&a, &b, &x)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn native_gd_step_projects() {
+        let (_, _, _, pinv, mut rng) = setup(4, 4);
+        let be = Backend::native();
+        let x = rng.gaussians(4);
+        let g = rng.gaussians(4);
+        let cons = Constraint::L2Ball { radius: 0.1 };
+        let out = be.gd_step(&x, &pinv, &g, 0.5, &cons, None);
+        assert!(cons.contains(&out, 1e-12));
+        // unconstrained matches manual update
+        let unc = be.gd_step(&x, &pinv, &g, 0.5, &Constraint::Unconstrained, None);
+        for j in 0..4 {
+            assert!((unc[j] - (x[j] - 0.5 * g[j])).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn native_sgd_chunk_decreases_objective() {
+        let (a, _, xtrue, _, mut rng) = setup(256, 6);
+        // planted solution with small noise so the optimum is well below f(0)
+        let mut b = blas::gemv(&a, &xtrue);
+        for v in &mut b {
+            *v += 0.01 * rng.gaussian();
+        }
+        // well-conditioned gaussian problem: pinv = (A^T A)^{-1} via QR
+        let r = crate::linalg::qr::qr_r(&a);
+        let pinv = crate::linalg::tri::pinv_dense(&r);
+        let be = Backend::native();
+        let x0 = vec![0.0; 6];
+        let t = 100;
+        let rr = 8;
+        let idx: Vec<Vec<usize>> = (0..t).map(|_| rng.indices(rr, 256)).collect();
+        let scale = 2.0 * 256.0 / rr as f64;
+        let (xt, xsum) = be.sgd_chunk(
+            &a,
+            &b,
+            &x0,
+            &pinv,
+            &idx,
+            0.05,
+            scale,
+            &Constraint::Unconstrained,
+            None,
+        );
+        let f0 = blas::residual_sq(&a, &b, &x0);
+        let ft = blas::residual_sq(&a, &b, &xt);
+        assert!(
+            ft < 0.2 * f0,
+            "sgd made too little progress: {ft} vs {f0}"
+        );
+        assert_eq!(xsum.len(), 6);
+    }
+
+    #[test]
+    fn native_pw_gradient_converges_linearly() {
+        let (a, b, _, _, _) = setup(512, 5);
+        let r = crate::linalg::qr::qr_r(&a);
+        let pinv = crate::linalg::tri::pinv_dense(&r);
+        let be = Backend::native();
+        let x0 = vec![0.0; 5];
+        let x10 =
+            be.pw_gradient_chunk(&a, &b, &x0, &pinv, 0.5, 10, &Constraint::Unconstrained, None);
+        // exact preconditioner + eta=1/2 solves in ONE step (Newton); after
+        // 10 it must be at machine precision of the LS optimum
+        let xstar = crate::linalg::qr::lstsq(&a, &b);
+        for (u, v) in x10.iter().zip(&xstar) {
+            assert!((u - v).abs() < 1e-8, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn native_acc_chunk_runs_and_projects() {
+        let (a, b, _, _, mut rng) = setup(128, 4);
+        let r = crate::linalg::qr::qr_r(&a);
+        let pinv = crate::linalg::tri::pinv_dense(&r);
+        let be = Backend::native();
+        let t = 20;
+        let rr = 4;
+        let idx: Vec<Vec<usize>> = (0..t).map(|_| rng.indices(rr, 128)).collect();
+        let alphas: Vec<f64> = (1..=t).map(|k| 2.0 / (k as f64 + 1.0)).collect();
+        let qs = alphas.clone();
+        let etas = vec![0.05; t];
+        let cons = Constraint::L2Ball { radius: 0.5 };
+        let (x, xhat) = be.acc_chunk(
+            &a,
+            &b,
+            &vec![0.0; 4],
+            &vec![0.0; 4],
+            &pinv,
+            &idx,
+            &alphas,
+            &qs,
+            &etas,
+            2.0,
+            2.0 * 128.0 / rr as f64,
+            &cons,
+            None,
+        );
+        assert!(cons.contains(&x, 1e-9));
+        assert_eq!(xhat.len(), 4);
+    }
+}

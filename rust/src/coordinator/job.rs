@@ -1,0 +1,265 @@
+//! Job specs and results — the coordinator's wire format.
+//!
+//! A `JobRequest` fully describes one solve: dataset (by name + scale, or
+//! preloaded), solver, constraint, accuracy target, trial count. JSON in,
+//! JSON out — usable from the CLI, config files, and the serve socket.
+
+use crate::prox::Constraint;
+use crate::sketch::SketchKind;
+use crate::solvers::{SolveReport, SolverOpts};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct JobRequest {
+    pub id: u64,
+    /// dataset name: syn1 | syn2 | year | buzz (or "csv:<path>")
+    pub dataset: String,
+    /// rows to generate (simulated datasets)
+    pub n: usize,
+    pub solver: String,
+    pub constraint: String, // unc | l1 | l2
+    /// ball radius; 0 = derive from the unconstrained optimum (paper setup)
+    pub radius: f64,
+    pub batch_size: usize,
+    pub max_iters: usize,
+    pub time_budget: f64,
+    /// relative-error target (vs exact optimum) to stop at; 0 = none
+    pub target_rel_err: f64,
+    pub trials: usize,
+    pub seed: u64,
+    pub sketch: String,
+    pub sketch_size: usize, // 0 = auto
+    pub eta: f64,           // 0 = theory default
+    pub normalize: bool,
+}
+
+impl Default for JobRequest {
+    fn default() -> Self {
+        JobRequest {
+            id: 0,
+            dataset: "syn2".into(),
+            n: 16_384,
+            solver: "hdpwbatchsgd".into(),
+            constraint: "unc".into(),
+            radius: 0.0,
+            batch_size: 64,
+            max_iters: 5_000,
+            time_budget: 30.0,
+            target_rel_err: 0.0,
+            trials: 1,
+            seed: 1,
+            sketch: "countsketch".into(),
+            sketch_size: 0,
+            eta: 0.0,
+            normalize: false,
+        }
+    }
+}
+
+impl JobRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("dataset", Json::str(self.dataset.clone())),
+            ("n", Json::num(self.n as f64)),
+            ("solver", Json::str(self.solver.clone())),
+            ("constraint", Json::str(self.constraint.clone())),
+            ("radius", Json::num(self.radius)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("max_iters", Json::num(self.max_iters as f64)),
+            ("time_budget", Json::num(self.time_budget)),
+            ("target_rel_err", Json::num(self.target_rel_err)),
+            ("trials", Json::num(self.trials as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("sketch", Json::str(self.sketch.clone())),
+            ("sketch_size", Json::num(self.sketch_size as f64)),
+            ("eta", Json::num(self.eta)),
+            ("normalize", Json::Bool(self.normalize)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobRequest> {
+        let def = JobRequest::default();
+        let get_n = |k: &str, d: f64| j.get(k).and_then(Json::as_f64).unwrap_or(d);
+        let get_s = |k: &str, d: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .unwrap_or(d)
+                .to_string()
+        };
+        let req = JobRequest {
+            id: get_n("id", 0.0) as u64,
+            dataset: get_s("dataset", &def.dataset),
+            n: get_n("n", def.n as f64) as usize,
+            solver: get_s("solver", &def.solver),
+            constraint: get_s("constraint", &def.constraint),
+            radius: get_n("radius", def.radius),
+            batch_size: get_n("batch_size", def.batch_size as f64) as usize,
+            max_iters: get_n("max_iters", def.max_iters as f64) as usize,
+            time_budget: get_n("time_budget", def.time_budget),
+            target_rel_err: get_n("target_rel_err", def.target_rel_err),
+            trials: (get_n("trials", def.trials as f64) as usize).max(1),
+            seed: get_n("seed", def.seed as f64) as u64,
+            sketch: get_s("sketch", &def.sketch),
+            sketch_size: get_n("sketch_size", 0.0) as usize,
+            eta: get_n("eta", 0.0),
+            normalize: j
+                .get("normalize")
+                .and_then(Json::as_bool)
+                .unwrap_or(def.normalize),
+        };
+        req.validate()?;
+        Ok(req)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if crate::solvers::by_name(&self.solver).is_none() {
+            bail!(
+                "unknown solver {:?}; available: {:?}",
+                self.solver,
+                crate::solvers::all_names()
+            );
+        }
+        if !matches!(self.constraint.as_str(), "unc" | "l1" | "l2") {
+            bail!("unknown constraint {:?} (unc | l1 | l2)", self.constraint);
+        }
+        if SketchKind::parse(&self.sketch).is_none() {
+            bail!("unknown sketch {:?}", self.sketch);
+        }
+        if self.batch_size == 0 || self.max_iters == 0 {
+            bail!("batch_size and max_iters must be positive");
+        }
+        Ok(())
+    }
+
+    /// Build SolverOpts given the resolved constraint radius and optimum.
+    pub fn solver_opts(&self, radius: f64, f_star: Option<f64>) -> Result<SolverOpts> {
+        let constraint = match self.constraint.as_str() {
+            "unc" => Constraint::Unconstrained,
+            "l1" => Constraint::L1Ball { radius },
+            "l2" => Constraint::L2Ball { radius },
+            other => bail!("unknown constraint {other:?}"),
+        };
+        let sketch =
+            SketchKind::parse(&self.sketch).context("sketch kind")?;
+        Ok(SolverOpts {
+            constraint,
+            batch_size: self.batch_size,
+            max_iters: self.max_iters,
+            eps_abs: match (self.target_rel_err, f_star) {
+                (e, Some(fs)) if e > 0.0 => Some(e * fs),
+                _ => None,
+            },
+            f_star,
+            time_budget: self.time_budget,
+            sketch,
+            sketch_size: (self.sketch_size > 0).then_some(self.sketch_size),
+            eta: (self.eta > 0.0).then_some(self.eta),
+            chunk: 50,
+            seed: self.seed,
+        })
+    }
+}
+
+/// Result of a job: the best trial's report plus aggregate info.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: u64,
+    pub solver: String,
+    pub dataset: String,
+    pub f_star: f64,
+    pub best_f: f64,
+    pub best_rel_err: f64,
+    pub trials_run: usize,
+    pub total_secs: f64,
+    pub best: SolveReport,
+}
+
+impl JobResult {
+    pub fn to_json(&self) -> Json {
+        let trace: Vec<Json> = self
+            .best
+            .trace
+            .iter()
+            .map(|p| {
+                Json::Arr(vec![
+                    Json::num(p.iters as f64),
+                    Json::num(p.secs),
+                    Json::num(p.f),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("solver", Json::str(self.solver.clone())),
+            ("dataset", Json::str(self.dataset.clone())),
+            ("f_star", Json::num(self.f_star)),
+            ("best_f", Json::num(self.best_f)),
+            ("best_rel_err", Json::num(self.best_rel_err)),
+            ("trials_run", Json::num(self.trials_run as f64)),
+            ("total_secs", Json::num(self.total_secs)),
+            ("iters", Json::num(self.best.iters as f64)),
+            ("setup_secs", Json::num(self.best.setup_secs)),
+            ("solve_secs", Json::num(self.best.solve_secs)),
+            ("trace", Json::Arr(trace)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut req = JobRequest::default();
+        req.id = 7;
+        req.solver = "pwgradient".into();
+        req.constraint = "l1".into();
+        req.trials = 10;
+        let j = req.to_json();
+        let back = JobRequest::from_json(&j).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.solver, "pwgradient");
+        assert_eq!(back.constraint, "l1");
+        assert_eq!(back.trials, 10);
+        assert_eq!(back.n, req.n);
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let j = Json::parse(r#"{"solver": "ihs"}"#).unwrap();
+        let req = JobRequest::from_json(&j).unwrap();
+        assert_eq!(req.solver, "ihs");
+        assert_eq!(req.dataset, "syn2");
+        assert_eq!(req.trials, 1);
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let j = Json::parse(r#"{"solver": "nope"}"#).unwrap();
+        assert!(JobRequest::from_json(&j).is_err());
+        let j = Json::parse(r#"{"constraint": "l7"}"#).unwrap();
+        assert!(JobRequest::from_json(&j).is_err());
+        let j = Json::parse(r#"{"sketch": "fourier"}"#).unwrap();
+        assert!(JobRequest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn solver_opts_mapping() {
+        let mut req = JobRequest::default();
+        req.constraint = "l2".into();
+        req.target_rel_err = 0.01;
+        req.eta = 0.5;
+        req.sketch_size = 777;
+        let opts = req.solver_opts(2.0, Some(100.0)).unwrap();
+        assert_eq!(opts.constraint, Constraint::L2Ball { radius: 2.0 });
+        assert_eq!(opts.eps_abs, Some(1.0));
+        assert_eq!(opts.eta, Some(0.5));
+        assert_eq!(opts.sketch_size, Some(777));
+        // no f_star -> no eps_abs
+        let opts2 = req.solver_opts(2.0, None).unwrap();
+        assert_eq!(opts2.eps_abs, None);
+    }
+}

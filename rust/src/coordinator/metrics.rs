@@ -1,0 +1,94 @@
+//! Service metrics: counters + latency histogram for the coordinator.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicUsize,
+    pub jobs_completed: AtomicUsize,
+    pub jobs_failed: AtomicUsize,
+    pub trials_run: AtomicUsize,
+    /// total solve nanoseconds (across trials)
+    solve_nanos: AtomicU64,
+    /// recent job latencies (seconds), bounded ring
+    latencies: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_job(&self, secs: f64, trials: usize, ok: bool) {
+        if ok {
+            self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.trials_run.fetch_add(trials, Ordering::Relaxed);
+        self.solve_nanos
+            .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        let mut l = self.latencies.lock().unwrap();
+        if l.len() >= 4096 {
+            l.remove(0);
+        }
+        l.push(secs);
+    }
+
+    pub fn total_solve_secs(&self) -> f64 {
+        self.solve_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn latency_percentile(&self, p: f64) -> Option<f64> {
+        let l = self.latencies.lock().unwrap();
+        if l.is_empty() {
+            return None;
+        }
+        Some(crate::util::stats::percentile(&l, p))
+    }
+
+    pub fn snapshot(&self) -> String {
+        format!(
+            "jobs: submitted={} completed={} failed={} trials={} solve_time={:.2}s p50={} p99={}",
+            self.jobs_submitted.load(Ordering::Relaxed),
+            self.jobs_completed.load(Ordering::Relaxed),
+            self.jobs_failed.load(Ordering::Relaxed),
+            self.trials_run.load(Ordering::Relaxed),
+            self.total_solve_secs(),
+            self.latency_percentile(50.0)
+                .map(crate::util::stats::fmt_duration)
+                .unwrap_or_else(|| "-".into()),
+            self.latency_percentile(99.0)
+                .map(crate::util::stats::fmt_duration)
+                .unwrap_or_else(|| "-".into()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.jobs_submitted.fetch_add(3, Ordering::Relaxed);
+        m.record_job(1.0, 10, true);
+        m.record_job(3.0, 10, true);
+        m.record_job(0.5, 1, false);
+        assert_eq!(m.jobs_completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.jobs_failed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.trials_run.load(Ordering::Relaxed), 21);
+        assert!((m.total_solve_secs() - 4.5).abs() < 1e-6);
+        assert_eq!(m.latency_percentile(50.0), Some(1.0));
+        let snap = m.snapshot();
+        assert!(snap.contains("completed=2"));
+    }
+
+    #[test]
+    fn empty_percentile_is_none() {
+        let m = Metrics::new();
+        assert!(m.latency_percentile(50.0).is_none());
+    }
+}

@@ -1,0 +1,24 @@
+//! L3 coordinator: the solver *service*.
+//!
+//! Owns process topology and the request loop. Components:
+//!
+//! * [`job`] — job specs/results with JSON (de)serialization: the wire and
+//!   config format for a solve request.
+//! * [`scheduler`] — bounded worker pool running jobs concurrently with
+//!   backpressure, best-of-k trial replication (the paper runs every method
+//!   10 times and reports the best), and deterministic per-trial seeds.
+//! * [`metrics`] — service counters (jobs, solve latencies, dispatch mix).
+//! * [`server`] — line-delimited JSON protocol over TCP or stdin; the
+//!   `hdpw serve` mode.
+//!
+//! The coordinator holds one [`Backend`] shared by all workers: artifacts
+//! are compiled once at startup and reused across jobs (PJRT executables are
+//! thread-safe behind the engine's immutable registry).
+
+pub mod job;
+pub mod scheduler;
+pub mod metrics;
+pub mod server;
+
+pub use job::{JobRequest, JobResult};
+pub use scheduler::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,193 @@
+//! Serve mode: line-delimited JSON over TCP (or an in-process connection
+//! for tests). One `JobRequest` JSON object per line in; one `JobResult`
+//! JSON object (or `{"error": ...}`) per line out, in completion order.
+//!
+//! Protocol extras:
+//!   {"cmd": "metrics"} -> one-line metrics snapshot
+//!   {"cmd": "ping"}    -> {"ok": true}
+//!   {"cmd": "quit"}    -> closes the connection
+
+use super::job::JobRequest;
+use super::scheduler::Coordinator;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Handle one connection (blocking). Returns when the peer closes or sends
+/// {"cmd": "quit"}.
+pub fn handle_connection<R: BufRead, W: Write + Send + 'static>(
+    coord: &Arc<Coordinator>,
+    reader: R,
+    mut writer: W,
+) -> Result<()> {
+    // writer is owned by a dedicated thread; completions stream through a
+    // channel so concurrent jobs cannot interleave partial lines.
+    let (tx, rx) = mpsc::channel::<String>();
+    let writer_thread = std::thread::spawn(move || {
+        while let Ok(line) = rx.recv() {
+            if writer.write_all(line.as_bytes()).is_err() {
+                break;
+            }
+            if writer.write_all(b"\n").is_err() {
+                break;
+            }
+            let _ = writer.flush();
+        }
+    });
+
+    for line in reader.lines() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let parsed = match Json::parse(trimmed) {
+            Ok(j) => j,
+            Err(e) => {
+                let _ = tx
+                    .send(Json::obj(vec![("error", Json::str(format!("bad json: {e}")))]).to_string());
+                continue;
+            }
+        };
+        if let Some(cmd) = parsed.get("cmd").and_then(Json::as_str) {
+            match cmd {
+                "ping" => {
+                    let _ = tx.send("{\"ok\":true}".to_string());
+                }
+                "metrics" => {
+                    let snap = coord.metrics.snapshot();
+                    let _ = tx.send(Json::obj(vec![("metrics", Json::str(snap))]).to_string());
+                }
+                "quit" => break,
+                other => {
+                    let _ = tx.send(
+                        Json::obj(vec![("error", Json::str(format!("unknown cmd {other}")))])
+                            .to_string(),
+                    );
+                }
+            }
+            continue;
+        }
+        match JobRequest::from_json(&parsed) {
+            Ok(req) => {
+                let tx = tx.clone();
+                coord.submit(req, move |res| {
+                    let line = match res {
+                        Ok(r) => r.to_json().to_string(),
+                        Err(e) => {
+                            Json::obj(vec![("error", Json::str(format!("{e}")))]).to_string()
+                        }
+                    };
+                    let _ = tx.send(line);
+                });
+            }
+            Err(e) => {
+                let _ = tx.send(Json::obj(vec![("error", Json::str(format!("{e}")))]).to_string());
+            }
+        }
+    }
+    coord.drain();
+    drop(tx);
+    let _ = writer_thread.join();
+    Ok(())
+}
+
+/// Blocking TCP accept loop on `addr` (e.g. "127.0.0.1:7878").
+pub fn serve_tcp(coord: Arc<Coordinator>, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    crate::log_info!("hdpw serving on {addr}");
+    for stream in listener.incoming() {
+        let stream: TcpStream = stream?;
+        let peer = stream.peer_addr()?;
+        crate::log_info!("connection from {peer}");
+        let reader = BufReader::new(stream.try_clone()?);
+        let coord = Arc::clone(&coord);
+        std::thread::spawn(move || {
+            if let Err(e) = handle_connection(&coord, reader, stream) {
+                crate::log_warn!("connection {peer} error: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+/// stdin/stdout loop (`hdpw serve --stdio`).
+pub fn serve_stdio(coord: Arc<Coordinator>) -> Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    handle_connection(&coord, stdin.lock(), stdout)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Backend;
+    use crate::coordinator::scheduler::CoordinatorConfig;
+    use std::io::Cursor;
+    use std::sync::Mutex;
+
+    #[derive(Clone)]
+    struct VecWriter(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for VecWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn run_session(input: &str) -> Vec<Json> {
+        let coord = Arc::new(Coordinator::new(
+            Backend::native(),
+            CoordinatorConfig::default(),
+        ));
+        let out = Arc::new(Mutex::new(Vec::new()));
+        handle_connection(&coord, Cursor::new(input.to_string()), VecWriter(Arc::clone(&out)))
+            .unwrap();
+        let bytes = out.lock().unwrap().clone();
+        String::from_utf8(bytes)
+            .unwrap()
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| Json::parse(l).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn ping_and_metrics() {
+        let out = run_session("{\"cmd\":\"ping\"}\n{\"cmd\":\"metrics\"}\n");
+        assert_eq!(out[0].get("ok").and_then(Json::as_bool), Some(true));
+        assert!(out[1].get("metrics").is_some());
+    }
+
+    #[test]
+    fn solve_job_over_wire() {
+        let req = r#"{"solver":"exact","dataset":"syn2","n":512,"max_iters":10}"#;
+        let out = run_session(&format!("{req}\n"));
+        assert_eq!(out.len(), 1);
+        let res = &out[0];
+        assert_eq!(res.get("solver").and_then(Json::as_str), Some("exact"));
+        assert!(res.get("best_rel_err").and_then(Json::as_f64).unwrap() < 1e-9);
+        assert!(res.get("trace").and_then(Json::as_arr).is_some());
+    }
+
+    #[test]
+    fn bad_input_yields_error_lines_not_crashes() {
+        let out = run_session("not json at all\n{\"solver\":\"nope\"}\n{\"cmd\":\"ping\"}\n");
+        assert!(out[0].get("error").is_some());
+        assert!(out[1].get("error").is_some());
+        assert_eq!(out[2].get("ok").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn quit_stops_processing() {
+        let out = run_session("{\"cmd\":\"quit\"}\n{\"cmd\":\"ping\"}\n");
+        assert!(out.is_empty());
+    }
+}

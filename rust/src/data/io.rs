@@ -1,0 +1,198 @@
+//! Dataset persistence: a simple binary format (magic + dims + f64 LE
+//! payload) for caching generated datasets between bench runs, plus CSV
+//! import for external data.
+
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::util::csv;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"HDPWDS01";
+
+/// Write a dataset to the binary cache format.
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    let name = ds.name.as_bytes();
+    f.write_all(&(name.len() as u32).to_le_bytes())?;
+    f.write_all(name)?;
+    f.write_all(&(ds.n() as u64).to_le_bytes())?;
+    f.write_all(&(ds.d() as u64).to_le_bytes())?;
+    for v in &ds.a.data {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    for v in &ds.b {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load a dataset from the binary cache format.
+pub fn load(path: &Path) -> Result<Dataset> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a hdpw dataset file");
+    }
+    let mut u32b = [0u8; 4];
+    f.read_exact(&mut u32b)?;
+    let name_len = u32::from_le_bytes(u32b) as usize;
+    if name_len > 4096 {
+        bail!("unreasonable name length {name_len}");
+    }
+    let mut name = vec![0u8; name_len];
+    f.read_exact(&mut name)?;
+    let mut u64b = [0u8; 8];
+    f.read_exact(&mut u64b)?;
+    let n = u64::from_le_bytes(u64b) as usize;
+    f.read_exact(&mut u64b)?;
+    let d = u64::from_le_bytes(u64b) as usize;
+    let mut read_f64s = |count: usize| -> Result<Vec<f64>> {
+        let mut buf = vec![0u8; count * 8];
+        f.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    };
+    let a = Mat::from_vec(n, d, read_f64s(n * d)?);
+    let b = read_f64s(n)?;
+    Ok(Dataset {
+        name: String::from_utf8(name)?,
+        a,
+        b,
+        x_star_planted: None,
+    })
+}
+
+/// Load from CSV: last column is the response b, earlier columns form A.
+pub fn load_csv(path: &Path, skip_header: bool) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)?;
+    let (n, cols, data) = csv::parse_numeric(&text, skip_header)?;
+    if cols < 2 {
+        bail!("need at least 2 columns (features + response)");
+    }
+    let full = Mat::from_vec(n, cols, data);
+    let (a, b) = full.split_last_col();
+    Ok(Dataset {
+        name: path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "csv".into()),
+        a,
+        b,
+        x_star_planted: None,
+    })
+}
+
+/// Load from cache if present, else generate via `make_ds` and cache.
+pub fn load_or_generate(
+    cache_dir: &Path,
+    key: &str,
+    make_ds: impl FnOnce() -> Dataset,
+) -> Result<Dataset> {
+    let path = cache_dir.join(format!("{key}.ds"));
+    if path.exists() {
+        if let Ok(ds) = load(&path) {
+            return Ok(ds);
+        }
+    }
+    let ds = make_ds();
+    std::fs::create_dir_all(cache_dir)?;
+    save(&ds, &path)?;
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "hdpw_io_test_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let mut rng = Rng::new(1);
+        let ds = Dataset {
+            name: "roundtrip".into(),
+            a: Mat::gaussian(17, 3, &mut rng),
+            b: rng.gaussians(17),
+            x_star_planted: None,
+        };
+        let dir = tmpdir();
+        let path = dir.join("x.ds");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.name, "roundtrip");
+        assert_eq!(back.a, ds.a);
+        assert_eq!(back.b, ds.b);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = tmpdir();
+        let path = dir.join("bad.ds");
+        std::fs::write(&path, b"NOTMAGIC123").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn csv_roundtrip_with_header() {
+        let dir = tmpdir();
+        let path = dir.join("d.csv");
+        std::fs::write(&path, "f1,f2,y\n1,2,3\n4,5,6\n").unwrap();
+        let ds = load_csv(&path, true).unwrap();
+        assert_eq!((ds.n(), ds.d()), (2, 2));
+        assert_eq!(ds.b, vec![3.0, 6.0]);
+        assert_eq!(ds.a.row(1), &[4.0, 5.0]);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn load_or_generate_caches() {
+        let dir = tmpdir();
+        let mut calls = 0;
+        let make = || {
+            let mut rng = Rng::new(9);
+            Dataset {
+                name: "gen".into(),
+                a: Mat::gaussian(5, 2, &mut rng),
+                b: rng.gaussians(5),
+                x_star_planted: None,
+            }
+        };
+        let d1 = load_or_generate(&dir, "k", || {
+            calls += 1;
+            make()
+        })
+        .unwrap();
+        let mut calls2 = 0;
+        let d2 = load_or_generate(&dir, "k", || {
+            calls2 += 1;
+            make()
+        })
+        .unwrap();
+        assert_eq!(calls, 1);
+        assert_eq!(calls2, 0); // served from cache
+        assert_eq!(d1.a, d2.a);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+}

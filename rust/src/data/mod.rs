@@ -1,0 +1,116 @@
+//! Datasets: synthetic generators with controlled spectra, simulated UCI
+//! workloads, normalization, and binary/CSV IO.
+
+pub mod synthetic;
+pub mod uci_sim;
+pub mod io;
+
+use crate::linalg::{blas, Mat};
+
+/// A regression problem instance: `min_{x in W} ||Ax - b||^2`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub a: Mat,
+    pub b: Vec<f64>,
+    /// Planted solution when known (synthetic data): for diagnostics only.
+    pub x_star_planted: Option<Vec<f64>>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.a.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.a.cols
+    }
+
+    /// f(x) = ||Ax - b||^2.
+    pub fn objective(&self, x: &[f64]) -> f64 {
+        blas::residual_sq(&self.a, &self.b, x)
+    }
+
+    /// Normalize features to zero mean / unit variance and b to unit
+    /// variance (the paper normalizes datasets for the low-precision
+    /// solvers). Returns the per-column (mean, std) used.
+    pub fn normalize(&mut self) -> Vec<(f64, f64)> {
+        let n = self.n() as f64;
+        let d = self.d();
+        let mut stats = Vec::with_capacity(d + 1);
+        for j in 0..d {
+            let mut mean = 0.0;
+            for i in 0..self.a.rows {
+                mean += self.a.at(i, j);
+            }
+            mean /= n;
+            let mut var = 0.0;
+            for i in 0..self.a.rows {
+                let v = self.a.at(i, j) - mean;
+                var += v * v;
+            }
+            var /= n;
+            let std = var.sqrt().max(1e-300);
+            for i in 0..self.a.rows {
+                let v = self.a.at(i, j);
+                *self.a.at_mut(i, j) = (v - mean) / std;
+            }
+            stats.push((mean, std));
+        }
+        // scale b only (keep affine relationship simple)
+        let bmean = self.b.iter().sum::<f64>() / n;
+        let bvar = self.b.iter().map(|v| (v - bmean) * (v - bmean)).sum::<f64>() / n;
+        let bstd = bvar.sqrt().max(1e-300);
+        for v in &mut self.b {
+            *v = (*v - bmean) / bstd;
+        }
+        stats.push((bmean, bstd));
+        self.x_star_planted = None; // invalidated by the affine change
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn objective_matches_manual() {
+        let a = Mat::from_vec(2, 1, vec![1.0, 2.0]);
+        let ds = Dataset {
+            name: "t".into(),
+            a,
+            b: vec![1.0, 0.0],
+            x_star_planted: None,
+        };
+        // x = 1 -> residuals (0, 2) -> f = 4
+        assert!((ds.objective(&[1.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_zeroes_means_and_unit_vars() {
+        let mut rng = Rng::new(1);
+        let mut a = Mat::gaussian(500, 3, &mut rng);
+        for i in 0..a.rows {
+            *a.at_mut(i, 1) = a.at(i, 1) * 100.0 + 5.0; // wildly scaled col
+        }
+        let b: Vec<f64> = (0..500).map(|_| rng.gaussian() * 10.0 + 3.0).collect();
+        let mut ds = Dataset {
+            name: "t".into(),
+            a,
+            b,
+            x_star_planted: None,
+        };
+        ds.normalize();
+        for j in 0..3 {
+            let col = ds.a.col(j);
+            let mean = col.iter().sum::<f64>() / 500.0;
+            let var = col.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / 500.0;
+            assert!(mean.abs() < 1e-10);
+            assert!((var - 1.0).abs() < 1e-10);
+        }
+        let bmean = ds.b.iter().sum::<f64>() / 500.0;
+        assert!(bmean.abs() < 1e-10);
+    }
+}

@@ -1,0 +1,142 @@
+//! Simulated UCI datasets (Year / Buzz).
+//!
+//! SUBSTITUTION (DESIGN.md section 7): the paper evaluates on
+//! YearPredictionMSD (5e5 x 90, kappa ~ 3e3) and Buzz-in-social-media
+//! (5e5 x 77, kappa ~ 1e8) from the UCI repository; this environment has no
+//! network access, so we generate matrices that match the *published
+//! statistics the algorithms are sensitive to*: shape, condition number,
+//! row-norm (leverage) spread, and noise level. The paper's methods interact
+//! with the data only through these quantities — kappa drives the
+//! preconditioning benefit, leverage spread drives the HD-step benefit.
+//!
+//! * `year`: correlated smooth features — exact spectral construction with
+//!   kappa = 3e3 and mildly non-uniform leverage scores.
+//! * `buzz`: heavy-tailed social-media counts — log-normal row scaling on
+//!   top of a kappa-controlled base, giving the extreme leverage spread and
+//!   a measured kappa ~ 1e8 that the dataset exhibits after raw ingestion.
+
+use super::synthetic::{generate, SynSpec};
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// YearPredictionMSD-like: n x 90, kappa = 3e3 (Table 3).
+pub fn year(n: usize, rng: &mut Rng) -> Dataset {
+    let spec = SynSpec {
+        name: "year".into(),
+        n,
+        d: 90,
+        kappa: 3e3,
+        noise: 0.1,
+        signal_scale: SynSpec::signal_auto(n),
+    };
+    let mut ds = generate(&spec, rng);
+    // mild leverage spread: scale a random 5% of rows by 3x (audio outliers)
+    let boosted = (n / 20).max(1);
+    for _ in 0..boosted {
+        let i = rng.below(n);
+        for v in ds.a.row_mut(i) {
+            *v *= 3.0;
+        }
+        ds.b[i] *= 3.0;
+    }
+    ds.name = "year".into();
+    ds
+}
+
+/// Buzz-in-social-media-like: n x 77, heavy tails, kappa ~ 1e8 (Table 3).
+pub fn buzz(n: usize, rng: &mut Rng) -> Dataset {
+    let spec = SynSpec {
+        name: "buzz".into(),
+        n,
+        d: 77,
+        // base spectrum well short of the target: the row scaling inflates
+        // the spread to the ~1e8 regime measured on the raw UCI matrix.
+        kappa: 1e6,
+        noise: 0.1,
+        signal_scale: SynSpec::signal_auto(n),
+    };
+    let mut ds = generate(&spec, rng);
+    // heavy-tailed (log-normal, sigma = 2) row scales: social-media counts
+    for i in 0..n {
+        let s = (2.0 * rng.gaussian()).exp();
+        for v in ds.a.row_mut(i) {
+            *v *= s;
+        }
+        ds.b[i] *= s;
+    }
+    ds.name = "buzz".into();
+    ds.x_star_planted = None; // scaling reweights the LS problem
+    ds
+}
+
+/// Build a dataset by name (coordinator / CLI entry point).
+pub fn by_name(name: &str, n: usize, rng: &mut Rng) -> Option<Dataset> {
+    match name {
+        "syn1" => Some(generate(&SynSpec::syn1(n), rng)),
+        "syn2" => Some(generate(&SynSpec::syn2(n), rng)),
+        "year" => Some(year(n, rng)),
+        "buzz" => Some(buzz(n, rng)),
+        // canonical PJRT-artifact shape (n = 8192, d = 32): the dataset the
+        // e2e example runs through the compiled L1/L2 graphs end to end
+        "pjrt8k" => Some(generate(
+            &SynSpec {
+                name: "pjrt8k".into(),
+                n: 8192,
+                d: 32,
+                kappa: 1e6,
+                noise: 1.0,
+                signal_scale: SynSpec::signal_auto(8192),
+            },
+            rng,
+        )),
+        _ => None,
+    }
+}
+
+/// Paper-scale row counts from Table 3 (used with `--paper-scale`).
+pub fn paper_scale_n(name: &str) -> usize {
+    match name {
+        "syn1" | "syn2" => 100_000,
+        "year" | "buzz" => 500_000,
+        _ => 65_536,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{blas, eigen};
+
+    #[test]
+    fn year_shape_and_kappa() {
+        let mut rng = Rng::new(1);
+        let ds = year(2000, &mut rng);
+        assert_eq!(ds.d(), 90);
+        assert_eq!(ds.n(), 2000);
+        let kappa = eigen::cond(&ds.a);
+        // row boosting perturbs the exact 3e3; stay within a factor ~3
+        assert!(kappa > 1e3 && kappa < 1e4, "kappa {kappa}");
+    }
+
+    #[test]
+    fn buzz_has_heavy_leverage_tails_and_huge_kappa() {
+        let mut rng = Rng::new(2);
+        let ds = buzz(2000, &mut rng);
+        assert_eq!(ds.d(), 77);
+        let norms: Vec<f64> = (0..ds.n()).map(|i| blas::nrm2(ds.a.row(i))).collect();
+        let mean = norms.iter().sum::<f64>() / norms.len() as f64;
+        let max = norms.iter().cloned().fold(0.0, f64::max);
+        assert!(max / mean > 20.0, "leverage not heavy: {}", max / mean);
+        let kappa = eigen::cond(&ds.a);
+        assert!(kappa > 1e6, "kappa {kappa}");
+    }
+
+    #[test]
+    fn by_name_dispatch() {
+        let mut rng = Rng::new(3);
+        assert!(by_name("syn1", 128, &mut rng).is_some());
+        assert!(by_name("syn2", 128, &mut rng).is_some());
+        assert!(by_name("nope", 128, &mut rng).is_none());
+        assert_eq!(paper_scale_n("buzz"), 500_000);
+    }
+}

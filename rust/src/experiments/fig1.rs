@@ -1,0 +1,117 @@
+//! Figure 1: HDpwBatchSGD iteration complexity vs batch size r on Syn1 and
+//! Syn2 (unconstrained).
+//!
+//! The paper's claim: doubling r halves the iteration count to a given
+//! relative error — the *optimal* speed-up (Theorem 3's T = Theta(d log n /
+//! (r eps^2))). One relative-error-vs-iterations curve per batch size.
+
+use super::ExpCtx;
+use crate::util::plot::Figure;
+
+pub const BATCH_SIZES: [usize; 5] = [1, 2, 4, 8, 16];
+
+pub struct Fig1Output {
+    pub figures: Vec<Figure>,
+    /// (dataset, r, iterations to reach eps) rows
+    pub speedup_rows: Vec<(String, usize, Option<usize>)>,
+    pub eps: f64,
+}
+
+pub fn run(ctx: &ExpCtx) -> anyhow::Result<Fig1Output> {
+    // quick-mode-reachable threshold: the paper's Fig 1 tracks the 1e-1 ..
+    // 1e-2 band; at the bench's reduced n the variance floor sits near 5e-2.
+    let eps = 1e-1;
+    let mut figures = Vec::new();
+    let mut rows = Vec::new();
+    for dataset in ["syn1", "syn2"] {
+        let mut fig = Figure::new(
+            format!("Fig 1: HDpwBatchSGD batch-size speed-up on {dataset}"),
+            "iterations",
+            "relative error",
+            true,
+        );
+        for r in BATCH_SIZES {
+            let mut req = ctx.job(dataset, "hdpwbatchsgd");
+            req.batch_size = r;
+            req.normalize = true; // paper normalizes for low precision
+            req.max_iters = 200_000 / r.max(1); // same work budget per curve
+            req.target_rel_err = eps / 2.0;
+            let res = ctx.coord.run_job(&req)?;
+            let mut series = crate::util::plot::Series::new(format!("r={r}"));
+            let mut hit: Option<usize> = None;
+            for (it, _, rel) in res.best.rel_errors(res.f_star) {
+                series.push(it, rel.max(1e-16));
+                if hit.is_none() && rel <= eps {
+                    hit = Some(it as usize);
+                }
+            }
+            rows.push((dataset.to_string(), r, hit));
+            fig.add(series);
+        }
+        figures.push(fig);
+    }
+    Ok(Fig1Output {
+        figures,
+        speedup_rows: rows,
+        eps,
+    })
+}
+
+/// Render the iterations-to-eps table (the quantitative form of Fig 1).
+pub fn render_table(out: &Fig1Output) -> String {
+    let mut s = format!(
+        "iterations to relative error <= {:.0e} (— = not reached)\n",
+        out.eps
+    );
+    s.push_str(&format!(
+        "{:<8} {:>6} {:>12} {:>10}\n",
+        "dataset", "r", "iters", "speed-up"
+    ));
+    let mut base: Option<f64> = None;
+    let mut last_ds = String::new();
+    for (ds, r, hit) in &out.speedup_rows {
+        if *ds != last_ds {
+            base = hit.map(|h| h as f64);
+            last_ds = ds.clone();
+        }
+        let (iters_s, speedup_s) = match hit {
+            Some(h) => (
+                h.to_string(),
+                base.map(|b| format!("{:.2}x", b / *h as f64))
+                    .unwrap_or_else(|| "-".into()),
+            ),
+            None => ("—".into(), "-".into()),
+        };
+        s.push_str(&format!("{ds:<8} {r:>6} {iters_s:>12} {speedup_s:>10}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_shows_speedup_trend() {
+        let mut ctx = ExpCtx::new(true);
+        ctx.n = 4096;
+        ctx.trials = 1;
+        ctx.budget = 30.0;
+        let out = run(&ctx).unwrap();
+        assert_eq!(out.figures.len(), 2);
+        // syn2 rows: the largest batch should need fewer iters than r=1
+        let syn2: Vec<_> = out
+            .speedup_rows
+            .iter()
+            .filter(|(ds, _, _)| ds == "syn2")
+            .collect();
+        let first = syn2.first().and_then(|(_, _, h)| *h);
+        let last = syn2.last().and_then(|(_, _, h)| *h);
+        if let (Some(a), Some(b)) = (first, last) {
+            assert!(b < a, "r=16 ({b}) should need fewer iters than r=1 ({a})");
+        }
+        let table = render_table(&out);
+        assert!(table.contains("syn1"));
+        assert!(table.contains("syn2"));
+    }
+}

@@ -1,0 +1,136 @@
+//! Figure 2: Syn1 (unconstrained), low- and high-precision solver races.
+//!
+//! Left panel: relative error vs wall-clock for the low-precision solvers
+//! (HDpwBatchSGD at several batch sizes, pwSGD, SGD, Adagrad) on the
+//! normalized dataset.
+//! Right panel: log relative error vs wall-clock for the high-precision
+//! solvers (pwGradient, IHS, pwSVRG at two batch sizes).
+
+use super::ExpCtx;
+use crate::coordinator::JobRequest;
+use crate::util::plot::Figure;
+
+pub struct RacePanels {
+    pub low: Figure,
+    pub high: Figure,
+}
+
+/// The standard low-precision lineup (paper Figures 2/4/6).
+pub fn low_precision_lineup(ctx: &ExpCtx, dataset: &str, constraint: &str) -> Vec<(String, JobRequest)> {
+    let mut jobs = Vec::new();
+    for r in [64usize, 256] {
+        let mut req = ctx.job(dataset, "hdpwbatchsgd");
+        req.batch_size = r;
+        req.constraint = constraint.into();
+        req.normalize = true;
+        req.max_iters = 50_000;
+        jobs.push((format!("HDpwBatchSGD r={r}"), req));
+    }
+    let mut req = ctx.job(dataset, "pwsgd");
+    req.batch_size = 1;
+    req.constraint = constraint.into();
+    req.normalize = true;
+    req.max_iters = 50_000;
+    jobs.push(("pwSGD".into(), req));
+    for solver in ["sgd", "adagrad"] {
+        let mut req = ctx.job(dataset, solver);
+        req.batch_size = 64;
+        req.constraint = constraint.into();
+        req.normalize = true;
+        req.max_iters = 50_000;
+        jobs.push((solver.to_uppercase(), req));
+    }
+    jobs
+}
+
+/// The standard high-precision lineup (paper Figures 2/3/4/5).
+pub fn high_precision_lineup(ctx: &ExpCtx, dataset: &str, constraint: &str) -> Vec<(String, JobRequest)> {
+    let mut jobs = Vec::new();
+    let mut req = ctx.job(dataset, "pwgradient");
+    req.constraint = constraint.into();
+    req.max_iters = 400;
+    req.target_rel_err = 1e-12;
+    jobs.push(("pwGradient".into(), req));
+    let mut req = ctx.job(dataset, "ihs");
+    req.constraint = constraint.into();
+    req.max_iters = 400;
+    req.target_rel_err = 1e-12;
+    jobs.push(("IHS".into(), req));
+    for r in [16usize, 256] {
+        let mut req = ctx.job(dataset, "pwsvrg");
+        req.batch_size = r;
+        req.constraint = constraint.into();
+        req.max_iters = 60_000;
+        req.target_rel_err = 1e-12;
+        jobs.push((format!("pwSVRG r={r}"), req));
+    }
+    jobs
+}
+
+/// Run both panels for one dataset/constraint (Figure 2 = syn1/"unc").
+pub fn run_panels(ctx: &ExpCtx, dataset: &str, constraint: &str) -> anyhow::Result<RacePanels> {
+    let mut low = Figure::new(
+        format!("{dataset} ({constraint}): low-precision solvers"),
+        "seconds",
+        "relative error",
+        true,
+    );
+    for (label, req) in low_precision_lineup(ctx, dataset, constraint) {
+        let (_, by_time, _) = ctx.run_series(&req, &label)?;
+        low.add(by_time);
+    }
+    let mut high = Figure::new(
+        format!("{dataset} ({constraint}): high-precision solvers"),
+        "seconds",
+        "relative error",
+        true,
+    );
+    for (label, req) in high_precision_lineup(ctx, dataset, constraint) {
+        let (_, by_time, _) = ctx.run_series(&req, &label)?;
+        high.add(by_time);
+    }
+    Ok(RacePanels { low, high })
+}
+
+pub fn run(ctx: &ExpCtx) -> anyhow::Result<RacePanels> {
+    run_panels(ctx, "syn1", "unc")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lineups_cover_paper_solvers() {
+        let ctx = ExpCtx::new(true);
+        let low = low_precision_lineup(&ctx, "syn1", "unc");
+        let names: Vec<&str> = low.iter().map(|(_, r)| r.solver.as_str()).collect();
+        assert!(names.contains(&"hdpwbatchsgd"));
+        assert!(names.contains(&"pwsgd"));
+        assert!(names.contains(&"sgd"));
+        assert!(names.contains(&"adagrad"));
+        let high = high_precision_lineup(&ctx, "syn1", "unc");
+        let names: Vec<&str> = high.iter().map(|(_, r)| r.solver.as_str()).collect();
+        assert!(names.contains(&"pwgradient"));
+        assert!(names.contains(&"ihs"));
+        assert!(names.contains(&"pwsvrg"));
+    }
+
+    #[test]
+    fn tiny_high_precision_panel_runs() {
+        let mut ctx = ExpCtx::new(true);
+        ctx.n = 2048;
+        ctx.trials = 1;
+        ctx.budget = 15.0;
+        let mut fig = Figure::new("t", "s", "e", true);
+        for (label, mut req) in high_precision_lineup(&ctx, "syn2", "unc") {
+            req.max_iters = req.max_iters.min(300);
+            let (_, by_time, _) = ctx.run_series(&req, &label).unwrap();
+            fig.add(by_time);
+        }
+        // pwGradient must reach at least 1e-8 relative error in this regime
+        let pw = &fig.series[0];
+        let min_err = pw.ys.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(min_err < 1e-8, "pwGradient floor {min_err}");
+    }
+}

@@ -1,0 +1,91 @@
+//! Figures 3-6: the (simulated) UCI datasets.
+//!
+//! * Fig 3 — Year, high precision: unconstrained / l1 / l2.
+//! * Fig 4 — Buzz, unconstrained: low- and high-precision panels.
+//! * Fig 5 — Buzz, high precision: l1 / l2.
+//! * Fig 6 — Buzz, low precision: l1 / l2.
+//!
+//! All reuse the solver lineups of [`super::fig2`]; only the dataset and
+//! constraint grids differ, exactly as in the paper.
+
+use super::fig2::{high_precision_lineup, low_precision_lineup};
+use super::ExpCtx;
+use crate::util::plot::Figure;
+
+fn one_panel(
+    ctx: &ExpCtx,
+    dataset: &str,
+    constraint: &str,
+    high: bool,
+) -> anyhow::Result<Figure> {
+    let precision = if high { "high" } else { "low" };
+    let mut fig = Figure::new(
+        format!("{dataset} ({constraint}): {precision}-precision solvers"),
+        "seconds",
+        "relative error",
+        true,
+    );
+    let lineup = if high {
+        high_precision_lineup(ctx, dataset, constraint)
+    } else {
+        low_precision_lineup(ctx, dataset, constraint)
+    };
+    for (label, req) in lineup {
+        let (_, by_time, _) = ctx.run_series(&req, &label)?;
+        fig.add(by_time);
+    }
+    Ok(fig)
+}
+
+/// Fig 3: Year high precision — unc, l1, l2.
+pub fn fig3(ctx: &ExpCtx) -> anyhow::Result<Vec<Figure>> {
+    ["unc", "l1", "l2"]
+        .iter()
+        .map(|c| one_panel(ctx, "year", c, true))
+        .collect()
+}
+
+/// Fig 4: Buzz unconstrained — low + high panels.
+pub fn fig4(ctx: &ExpCtx) -> anyhow::Result<Vec<Figure>> {
+    Ok(vec![
+        one_panel(ctx, "buzz", "unc", false)?,
+        one_panel(ctx, "buzz", "unc", true)?,
+    ])
+}
+
+/// Fig 5: Buzz high precision — l1, l2.
+pub fn fig5(ctx: &ExpCtx) -> anyhow::Result<Vec<Figure>> {
+    ["l1", "l2"]
+        .iter()
+        .map(|c| one_panel(ctx, "buzz", c, true))
+        .collect()
+}
+
+/// Fig 6: Buzz low precision — l1, l2.
+pub fn fig6(ctx: &ExpCtx) -> anyhow::Result<Vec<Figure>> {
+    ["l1", "l2"]
+        .iter()
+        .map(|c| one_panel(ctx, "buzz", c, false))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn year_high_precision_panel_tiny() {
+        let mut ctx = ExpCtx::new(true);
+        ctx.n = 2048;
+        ctx.trials = 1;
+        ctx.budget = 20.0;
+        let fig = one_panel(&ctx, "year", "unc", true).unwrap();
+        assert_eq!(fig.series.len(), 4);
+        // pwGradient should get furthest down
+        let floor = |s: &crate::util::plot::Series| {
+            s.ys.iter().cloned().fold(f64::INFINITY, f64::min)
+        };
+        let pw = floor(&fig.series[0]);
+        assert!(pw < 1e-7, "pwGradient floor on year-sim: {pw}");
+    }
+}

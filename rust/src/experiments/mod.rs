@@ -1,0 +1,123 @@
+//! Experiment drivers: one module per table/figure of the paper.
+//!
+//! Each driver builds its workload, runs the paper's protocol (best-of-k
+//! trials through the [`Coordinator`]), and returns [`Figure`]s /
+//! formatted tables. The `rust/benches/*` binaries are thin wrappers that
+//! call these drivers, print the ASCII rendering and save the CSV series
+//! under `out/`.
+
+pub mod fig1;
+pub mod fig2;
+pub mod figs_real;
+pub mod table1;
+pub mod table2;
+
+use crate::backend::Backend;
+use crate::coordinator::{Coordinator, CoordinatorConfig, JobRequest};
+use crate::util::plot::{Figure, Series};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Shared experiment context.
+pub struct ExpCtx {
+    pub coord: Arc<Coordinator>,
+    pub out_dir: PathBuf,
+    /// row count for generated datasets (quick mode shrinks this)
+    pub n: usize,
+    pub trials: usize,
+    pub seed: u64,
+    /// time budget per solver run (seconds)
+    pub budget: f64,
+}
+
+impl ExpCtx {
+    /// Standard context: PJRT backend when artifacts exist, else native.
+    /// `quick` shrinks workloads for CI-speed runs.
+    pub fn new(quick: bool) -> ExpCtx {
+        let backend = Backend::auto();
+        let coord = Arc::new(Coordinator::new(
+            backend,
+            CoordinatorConfig {
+                workers: 1, // figures time solvers: no co-tenancy
+                max_queue: 4,
+                cache_dir: None,
+            },
+        ));
+        ExpCtx {
+            coord,
+            out_dir: PathBuf::from("out"),
+            n: if quick { 8_192 } else { 65_536 },
+            trials: if quick { 3 } else { 10 },
+            seed: 20180201, // AAAI-18
+            budget: if quick { 10.0 } else { 60.0 },
+        }
+    }
+
+    /// Base job for a dataset/solver pair.
+    pub fn job(&self, dataset: &str, solver: &str) -> JobRequest {
+        let mut req = JobRequest::default();
+        req.dataset = dataset.into();
+        req.n = self.n;
+        req.solver = solver.into();
+        req.trials = self.trials;
+        req.seed = self.seed;
+        req.time_budget = self.budget;
+        req
+    }
+
+    /// Run a job and convert its best trace into two figure series:
+    /// (relative error vs iterations, relative error vs seconds).
+    pub fn run_series(
+        &self,
+        req: &JobRequest,
+        label: &str,
+    ) -> anyhow::Result<(Series, Series, f64)> {
+        let res = self.coord.run_job(req)?;
+        let mut by_iter = Series::new(label);
+        let mut by_time = Series::new(label);
+        for (it, secs, rel) in res.best.rel_errors(res.f_star) {
+            let clamped = rel.max(1e-16);
+            by_iter.push(it, clamped);
+            by_time.push(secs, clamped);
+        }
+        Ok((by_iter, by_time, res.f_star))
+    }
+
+    pub fn save_and_render(&self, fig: &Figure, stem: &str) -> String {
+        let _ = fig.save_csv(&self.out_dir, stem);
+        fig.ascii(72, 18)
+    }
+}
+
+/// Format a markdown-style table row.
+pub fn table_row(cells: &[String], widths: &[usize]) -> String {
+    let mut s = String::from("|");
+    for (c, w) in cells.iter().zip(widths) {
+        s.push_str(&format!(" {c:<w$} |"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_quick_builds_and_runs_tiny_job() {
+        let mut ctx = ExpCtx::new(true);
+        ctx.n = 1024;
+        ctx.trials = 1;
+        let mut req = ctx.job("syn2", "exact");
+        req.max_iters = 5;
+        let (si, st, fstar) = ctx.run_series(&req, "exact").unwrap();
+        assert!(fstar > 0.0);
+        assert!(!si.is_empty());
+        assert_eq!(si.len(), st.len());
+    }
+
+    #[test]
+    fn table_row_formats() {
+        let row = table_row(&["a".into(), "bb".into()], &[4, 6]);
+        assert_eq!(row, "| a    | bb     |");
+    }
+}

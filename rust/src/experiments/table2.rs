@@ -1,0 +1,134 @@
+//! Table 2: cost of computing the preconditioner R per sketch construction,
+//! plus the achieved kappa(A R^{-1}).
+//!
+//! The paper lists Gaussian / SRHT / CountSketch / Sparse-l2 with their
+//! asymptotic costs and kappa = O(1); we measure wall time (sketch + QR)
+//! and the actual condition number on a Syn-style matrix.
+
+use super::ExpCtx;
+use crate::data::uci_sim;
+use crate::linalg::{blas, eigen};
+use crate::precond::precondition;
+use crate::sketch::{default_sketch_size, SketchKind};
+use crate::util::rng::Rng;
+
+pub struct Table2Row {
+    pub sketch: &'static str,
+    pub sketch_secs: f64,
+    pub qr_secs: f64,
+    pub kappa_preconditioned: f64,
+}
+
+pub struct Table2Output {
+    pub dataset: String,
+    pub n: usize,
+    pub d: usize,
+    pub kappa_raw: f64,
+    pub sketch_rows: usize,
+    pub rows: Vec<Table2Row>,
+}
+
+pub fn run(ctx: &ExpCtx) -> anyhow::Result<Table2Output> {
+    let mut rng = Rng::new(ctx.seed);
+    let ds = uci_sim::by_name("syn1", ctx.n, &mut rng).expect("syn1");
+    let gram = blas::gram(&ds.a);
+    let kappa_raw = {
+        let evs = eigen::sym_eigenvalues(&gram);
+        let lmin = evs.first().copied().unwrap_or(0.0).max(1e-300);
+        (evs.last().copied().unwrap_or(0.0) / lmin).sqrt()
+    };
+    let s = default_sketch_size(ds.n(), ds.d());
+    let mut rows = Vec::new();
+    for kind in [
+        SketchKind::Gaussian,
+        SketchKind::Srht,
+        SketchKind::CountSketch,
+        SketchKind::SparseEmbed,
+    ] {
+        // best of `trials` runs (timing stability), kappa from the last
+        let mut best_sketch = f64::INFINITY;
+        let mut best_qr = f64::INFINITY;
+        let mut kappa = f64::INFINITY;
+        for _ in 0..ctx.trials.max(1) {
+            let pre = precondition(&ds.a, kind, s, &mut rng);
+            best_sketch = best_sketch.min(pre.sketch_secs);
+            best_qr = best_qr.min(pre.qr_secs);
+            kappa = eigen::cond_preconditioned(&gram, &pre.r);
+        }
+        rows.push(Table2Row {
+            sketch: kind.name(),
+            sketch_secs: best_sketch,
+            qr_secs: best_qr,
+            kappa_preconditioned: kappa,
+        });
+    }
+    Ok(Table2Output {
+        dataset: ds.name.clone(),
+        n: ds.n(),
+        d: ds.d(),
+        kappa_raw,
+        sketch_rows: s,
+        rows,
+    })
+}
+
+pub fn render(out: &Table2Output) -> String {
+    let mut s = format!(
+        "Table 2: preconditioner cost on {} (n={}, d={}, kappa(A)={:.2e}, s={})\n",
+        out.dataset, out.n, out.d, out.kappa_raw, out.sketch_rows
+    );
+    s.push_str(&format!(
+        "{:<14} {:>12} {:>12} {:>12} {:>16}\n",
+        "sketch", "S*A time", "QR time", "total", "kappa(AR^-1)"
+    ));
+    for row in &out.rows {
+        s.push_str(&format!(
+            "{:<14} {:>12} {:>12} {:>12} {:>16.4}\n",
+            row.sketch,
+            crate::util::stats::fmt_duration(row.sketch_secs),
+            crate::util::stats::fmt_duration(row.qr_secs),
+            crate::util::stats::fmt_duration(row.sketch_secs + row.qr_secs),
+            row.kappa_preconditioned,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_sketches_achieve_o1_kappa_on_syn1() {
+        let mut ctx = ExpCtx::new(true);
+        ctx.n = 4096;
+        ctx.trials = 1;
+        let out = run(&ctx).unwrap();
+        assert_eq!(out.rows.len(), 4);
+        assert!(out.kappa_raw > 1e6, "syn1 should be ill-conditioned");
+        for row in &out.rows {
+            assert!(
+                row.kappa_preconditioned < 5.0,
+                "{}: kappa {}",
+                row.sketch,
+                row.kappa_preconditioned
+            );
+        }
+        // countsketch must beat gaussian on sketch time (O(nnz) vs O(nd^2))
+        let t = |name: &str| {
+            out.rows
+                .iter()
+                .find(|r| r.sketch == name)
+                .map(|r| r.sketch_secs)
+                .unwrap()
+        };
+        assert!(
+            t("countsketch") < t("gaussian"),
+            "countsketch {:.4}s vs gaussian {:.4}s",
+            t("countsketch"),
+            t("gaussian")
+        );
+        let rendered = render(&out);
+        assert!(rendered.contains("srht"));
+    }
+}

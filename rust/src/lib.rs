@@ -1,0 +1,50 @@
+//! # hdpw — large-scale constrained linear regression via two-step preconditioning
+//!
+//! A production-grade reproduction of *"Large Scale Constrained Linear
+//! Regression Revisited: Faster Algorithms via Preconditioning"* (Di Wang,
+//! Jinhui Xu, AAAI 2018).
+//!
+//! The library solves `min_{x in W} ||Ax - b||^2` for tall matrices
+//! `A in R^{n x d}` (n >> d) and convex constraint sets `W` (unconstrained,
+//! l1-ball, l2-ball), implementing the paper's algorithms:
+//!
+//! * [`solvers::HdpwBatchSgd`] — Algorithm 2: two-step preconditioning
+//!   (sketch-QR + randomized Hadamard transform) followed by uniform
+//!   mini-batch SGD with *optimal* batch-size speed-up.
+//! * [`solvers::HdpwAccBatchSgd`] — Algorithm 6: same preconditioning with
+//!   multi-epoch accelerated (Ghadimi–Lan) mini-batch SGD.
+//! * [`solvers::PwGradient`] — Algorithm 4: preconditioned projected full
+//!   gradient descent; a one-sketch reformulation of Iterative Hessian
+//!   Sketch with linear convergence.
+//! * Baselines from the paper's evaluation: [`solvers::Ihs`] (Pilanci &
+//!   Wainwright), [`solvers::PwSgd`] (Yang et al. leverage-score SGD),
+//!   plain [`solvers::Sgd`], [`solvers::Adagrad`], [`solvers::Svrg`] /
+//!   pwSVRG, and an exact QR solver for ground truth.
+//!
+//! ## Architecture
+//!
+//! Three layers (see `DESIGN.md`):
+//!
+//! 1. **L1 Pallas kernels + L2 JAX graphs** (`python/compile/`) are lowered
+//!    *once* at build time (`make artifacts`) to HLO text artifacts.
+//! 2. **Runtime bridge** ([`runtime`]) loads the artifacts into a PJRT CPU
+//!    client; the [`backend`] abstraction dispatches each numerical op to a
+//!    compiled executable when the shape matches the manifest, falling back
+//!    to the from-scratch native implementations in [`linalg`]/[`sketch`].
+//! 3. **L3 coordinator** ([`coordinator`]) owns jobs, scheduling, trials,
+//!    metrics and the serve loop. Python is never on the request path.
+
+pub mod util;
+pub mod linalg;
+pub mod sketch;
+pub mod prox;
+pub mod precond;
+pub mod data;
+pub mod solvers;
+pub mod runtime;
+pub mod backend;
+pub mod coordinator;
+pub mod experiments;
+
+pub use linalg::matrix::Mat;
+pub use util::rng::Rng;

@@ -1,0 +1,450 @@
+//! Level-1/2/3 dense kernels — the native backend's hot path.
+//!
+//! `gemm` uses register-tiled micro-kernels over cache-sized row/column
+//! blocks and parallelizes across row blocks; `gemv`/`gemv_t` are unrolled
+//! and parallelized for the full-gradient path `A^T(Ax - b)` which dominates
+//! pwGradient/IHS. Correctness is pinned to naive reference implementations
+//! in the tests and to the PJRT backend in the integration suite.
+
+use super::matrix::Mat;
+use crate::util::threadpool::{default_threads, parallel_for_each_index};
+
+// ---------------------------------------------------------------------------
+// level 1
+// ---------------------------------------------------------------------------
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: breaks the dependency chain so the
+    // compiler can keep 4 FMA pipes busy.
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    let mut s3 = 0.0;
+    let chunks = a.len() / 4;
+    for k in 0..chunks {
+        let i = k * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+pub fn nrm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+pub fn scale_vec(x: &mut [f64], s: f64) {
+    for v in x {
+        *v *= s;
+    }
+}
+
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+// ---------------------------------------------------------------------------
+// level 2
+// ---------------------------------------------------------------------------
+
+/// y = A x  (A: m x n, x: n) — row-parallel.
+pub fn gemv(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols, x.len());
+    let mut y = vec![0.0; a.rows];
+    let threads = if a.rows * a.cols > 1 << 16 {
+        default_threads()
+    } else {
+        1
+    };
+    if threads <= 1 {
+        for i in 0..a.rows {
+            y[i] = dot(a.row(i), x);
+        }
+    } else {
+        let yptr = SendPtr(y.as_mut_ptr());
+        let block = a.rows.div_ceil(threads * 4).max(64);
+        let nblocks = a.rows.div_ceil(block);
+        parallel_for_each_index(nblocks, threads, |bi| {
+            let lo = bi * block;
+            let hi = (lo + block).min(a.rows);
+            for i in lo..hi {
+                unsafe {
+                    *yptr.get().add(i) = dot(a.row(i), x);
+                }
+            }
+        });
+    }
+    y
+}
+
+/// y = A^T x  (A: m x n, x: m, y: n) — walks A row-wise (cache friendly) and
+/// accumulates with axpy; parallel over row blocks with per-thread partials.
+pub fn gemv_t(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows, x.len());
+    let threads = if a.rows * a.cols > 1 << 16 {
+        default_threads()
+    } else {
+        1
+    };
+    if threads <= 1 {
+        let mut y = vec![0.0; a.cols];
+        for i in 0..a.rows {
+            axpy(x[i], a.row(i), &mut y);
+        }
+        return y;
+    }
+    let block = a.rows.div_ceil(threads).max(64);
+    let nblocks = a.rows.div_ceil(block);
+    let partials: Vec<std::sync::Mutex<Vec<f64>>> = (0..nblocks)
+        .map(|_| std::sync::Mutex::new(vec![0.0; a.cols]))
+        .collect();
+    parallel_for_each_index(nblocks, threads, |bi| {
+        let lo = bi * block;
+        let hi = (lo + block).min(a.rows);
+        let mut local = partials[bi].lock().unwrap();
+        for i in lo..hi {
+            axpy(x[i], a.row(i), &mut local);
+        }
+    });
+    let mut y = vec![0.0; a.cols];
+    for p in &partials {
+        axpy(1.0, &p.lock().unwrap(), &mut y);
+    }
+    y
+}
+
+/// Fused residual + transposed matvec: g = scale * A^T (A x - b).
+/// THE native hot kernel for pwGradient / IHS / SVRG full passes: one walk
+/// over A computes the residual, a second accumulates the gradient — both
+/// row-major sequential, parallelized over row blocks.
+pub fn fused_grad(a: &Mat, b: &[f64], x: &[f64], scale: f64) -> Vec<f64> {
+    assert_eq!(a.rows, b.len());
+    assert_eq!(a.cols, x.len());
+    let threads = if a.rows * a.cols > 1 << 16 {
+        default_threads()
+    } else {
+        1
+    };
+    let block = a.rows.div_ceil(threads.max(1)).max(64);
+    let nblocks = a.rows.div_ceil(block);
+    let partials: Vec<std::sync::Mutex<Vec<f64>>> = (0..nblocks)
+        .map(|_| std::sync::Mutex::new(vec![0.0; a.cols]))
+        .collect();
+    parallel_for_each_index(nblocks, threads, |bi| {
+        let lo = bi * block;
+        let hi = (lo + block).min(a.rows);
+        let mut local = partials[bi].lock().unwrap();
+        for i in lo..hi {
+            let r = dot(a.row(i), x) - b[i];
+            axpy(r, a.row(i), &mut local);
+        }
+    });
+    let mut g = vec![0.0; a.cols];
+    for p in &partials {
+        axpy(1.0, &p.lock().unwrap(), &mut g);
+    }
+    scale_vec(&mut g, scale);
+    g
+}
+
+/// ||A x - b||^2 without materializing the residual vector.
+pub fn residual_sq(a: &Mat, b: &[f64], x: &[f64]) -> f64 {
+    assert_eq!(a.rows, b.len());
+    let threads = if a.rows * a.cols > 1 << 16 {
+        default_threads()
+    } else {
+        1
+    };
+    let block = a.rows.div_ceil(threads.max(1)).max(64);
+    let nblocks = a.rows.div_ceil(block);
+    let partials: Vec<std::sync::atomic::AtomicU64> = (0..nblocks)
+        .map(|_| std::sync::atomic::AtomicU64::new(0))
+        .collect();
+    parallel_for_each_index(nblocks, threads, |bi| {
+        let lo = bi * block;
+        let hi = (lo + block).min(a.rows);
+        let mut s = 0.0;
+        for i in lo..hi {
+            let r = dot(a.row(i), x) - b[i];
+            s += r * r;
+        }
+        partials[bi].store(s.to_bits(), std::sync::atomic::Ordering::Relaxed);
+    });
+    partials
+        .iter()
+        .map(|p| f64::from_bits(p.load(std::sync::atomic::Ordering::Relaxed)))
+        .sum()
+}
+
+// ---------------------------------------------------------------------------
+// level 3
+// ---------------------------------------------------------------------------
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> SendPtr<T> {
+    #[inline]
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+/// C = A B with register-tiled 4x4 micro-kernel, row-block parallel.
+pub fn gemm(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let threads = if flops > 1e6 { default_threads() } else { 1 };
+    let cptr = SendPtr(c.data.as_mut_ptr());
+    // row blocks sized so an (MB x k) panel of A + (k x NB) panel of B fit L2
+    const MB: usize = 64;
+    let nblocks = m.div_ceil(MB);
+    parallel_for_each_index(nblocks, threads, |bi| {
+        let i0 = bi * MB;
+        let i1 = (i0 + MB).min(m);
+        unsafe {
+            gemm_block(a, b, cptr.get(), i0, i1, k, n);
+        }
+    });
+    c
+}
+
+/// Compute rows [i0, i1) of C = A B into the raw pointer (each row block is
+/// written by exactly one thread — no aliasing).
+unsafe fn gemm_block(a: &Mat, b: &Mat, c: *mut f64, i0: usize, i1: usize, k: usize, n: usize) {
+    // 4-row x full-width micro-panels: stream B once per 4 rows of A.
+    let mut i = i0;
+    while i + 4 <= i1 {
+        let (a0, a1, a2, a3) = (a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3));
+        let (c0, c1, c2, c3) = (
+            std::slice::from_raw_parts_mut(c.add(i * n), n),
+            std::slice::from_raw_parts_mut(c.add((i + 1) * n), n),
+            std::slice::from_raw_parts_mut(c.add((i + 2) * n), n),
+            std::slice::from_raw_parts_mut(c.add((i + 3) * n), n),
+        );
+        for p in 0..k {
+            let brow = b.row(p);
+            let (v0, v1, v2, v3) = (a0[p], a1[p], a2[p], a3[p]);
+            for j in 0..n {
+                let bj = brow[j];
+                c0[j] += v0 * bj;
+                c1[j] += v1 * bj;
+                c2[j] += v2 * bj;
+                c3[j] += v3 * bj;
+            }
+        }
+        i += 4;
+    }
+    while i < i1 {
+        let ai = a.row(i);
+        let ci = std::slice::from_raw_parts_mut(c.add(i * n), n);
+        for p in 0..k {
+            axpy(ai[p], b.row(p), ci);
+        }
+        i += 1;
+    }
+}
+
+/// G = A^T A (d x d Gram matrix), exploiting symmetry; used for condition
+/// number estimation and the exact normal-equation solver.
+pub fn gram(a: &Mat) -> Mat {
+    let d = a.cols;
+    let mut g = Mat::zeros(d, d);
+    let threads = if a.rows * d * d > 1 << 18 {
+        default_threads()
+    } else {
+        1
+    };
+    let block = a.rows.div_ceil(threads.max(1)).max(128);
+    let nblocks = a.rows.div_ceil(block);
+    let partials: Vec<std::sync::Mutex<Mat>> = (0..nblocks)
+        .map(|_| std::sync::Mutex::new(Mat::zeros(d, d)))
+        .collect();
+    parallel_for_each_index(nblocks, threads, |bi| {
+        let lo = bi * block;
+        let hi = (lo + block).min(a.rows);
+        let mut local = partials[bi].lock().unwrap();
+        for i in lo..hi {
+            let row = a.row(i);
+            // upper triangle only
+            for p in 0..d {
+                let v = row[p];
+                if v != 0.0 {
+                    let dst = &mut local.data[p * d..(p + 1) * d];
+                    for q in p..d {
+                        dst[q] += v * row[q];
+                    }
+                }
+            }
+        }
+    });
+    for p in &partials {
+        let local = p.lock().unwrap();
+        for i in 0..d * d {
+            g.data[i] += local.data[i];
+        }
+    }
+    // mirror
+    for p in 0..d {
+        for q in (p + 1)..d {
+            g.data[q * d + p] = g.data[p * d + q];
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_gemm(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for p in 0..a.cols {
+                    s += a.at(i, p) * b.at(p, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(2);
+        for len in [0, 1, 3, 4, 7, 64, 129] {
+            let a = rng.gaussians(len);
+            let b = rng.gaussians(len);
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-10 * (1.0 + naive.abs()));
+        }
+    }
+
+    #[test]
+    fn gemv_matches_naive() {
+        let mut rng = Rng::new(3);
+        let a = Mat::gaussian(83, 17, &mut rng);
+        let x = rng.gaussians(17);
+        let y = gemv(&a, &x);
+        for i in 0..a.rows {
+            let want = dot(a.row(i), &x);
+            assert!((y[i] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gemv_parallel_path_matches() {
+        let mut rng = Rng::new(4);
+        let a = Mat::gaussian(1 << 10, 300, &mut rng); // big enough to go parallel
+        let x = rng.gaussians(300);
+        let y = gemv(&a, &x);
+        for i in [0, 511, 1023] {
+            let want = dot(a.row(i), &x);
+            assert!((y[i] - want).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn gemv_t_matches_explicit_transpose() {
+        let mut rng = Rng::new(5);
+        let a = Mat::gaussian(400, 31, &mut rng);
+        let x = rng.gaussians(400);
+        let y = gemv_t(&a, &x);
+        let yt = gemv(&a.transpose(), &x);
+        for (u, v) in y.iter().zip(&yt) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fused_grad_matches_composition() {
+        let mut rng = Rng::new(6);
+        let a = Mat::gaussian(500, 23, &mut rng);
+        let b = rng.gaussians(500);
+        let x = rng.gaussians(23);
+        let g = fused_grad(&a, &b, &x, 2.0);
+        let r = sub(&gemv(&a, &x), &b);
+        let mut want = gemv_t(&a, &r);
+        scale_vec(&mut want, 2.0);
+        for (u, v) in g.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn residual_sq_matches() {
+        let mut rng = Rng::new(7);
+        let a = Mat::gaussian(300, 11, &mut rng);
+        let b = rng.gaussians(300);
+        let x = rng.gaussians(11);
+        let r = sub(&gemv(&a, &x), &b);
+        let want: f64 = r.iter().map(|v| v * v).sum();
+        assert!((residual_sq(&a, &b, &x) - want).abs() < 1e-9 * want);
+    }
+
+    #[test]
+    fn gemm_matches_naive_small_and_odd_shapes() {
+        let mut rng = Rng::new(8);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (8, 8, 8), (17, 31, 13), (65, 9, 40)] {
+            let a = Mat::gaussian(m, k, &mut rng);
+            let b = Mat::gaussian(k, n, &mut rng);
+            let c = gemm(&a, &b);
+            let want = naive_gemm(&a, &b);
+            assert!(c.max_abs_diff(&want) < 1e-10, "shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn gemm_parallel_path_matches() {
+        let mut rng = Rng::new(9);
+        let a = Mat::gaussian(257, 64, &mut rng);
+        let b = Mat::gaussian(64, 129, &mut rng);
+        let c = gemm(&a, &b);
+        let want = naive_gemm(&a, &b);
+        assert!(c.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn gram_is_symmetric_and_correct() {
+        let mut rng = Rng::new(10);
+        let a = Mat::gaussian(200, 15, &mut rng);
+        let g = gram(&a);
+        let want = naive_gemm(&a.transpose(), &a);
+        assert!(g.max_abs_diff(&want) < 1e-9);
+        for i in 0..15 {
+            for j in 0..15 {
+                assert_eq!(g.at(i, j), g.at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_and_nrm2() {
+        let x = [1.0, 2.0];
+        let mut y = [10.0, 20.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0]);
+        assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,286 @@
+//! Symmetric eigensolver (cyclic Jacobi) + condition-number utilities.
+//!
+//! Used for (a) measuring kappa(AR^{-1}) in Table 2, (b) constructing
+//! synthetic datasets with an exact target condition number, and
+//! (c) estimating smoothness/strong-convexity constants for step sizes.
+//! Matrices here are d x d Gram matrices (d <= ~100), where Jacobi is both
+//! simple and accurate.
+
+use super::blas;
+use super::matrix::Mat;
+
+/// Full symmetric eigendecomposition A = V diag(vals) V^T via cyclic
+/// Jacobi, accumulating the rotations. `vals` ascending; columns of `v`
+/// are the matching eigenvectors.
+pub struct SymEigen {
+    pub vals: Vec<f64>,
+    pub v: Mat,
+}
+
+pub fn sym_eigen(a: &Mat) -> SymEigen {
+    let d = a.rows;
+    assert_eq!(a.cols, d);
+    let mut m = a.clone();
+    let mut v = Mat::eye(d);
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..d {
+            for j in (i + 1)..d {
+                off += m.at(i, j) * m.at(i, j);
+            }
+        }
+        if off.sqrt() <= 1e-14 * (1.0 + m.frob_norm()) {
+            break;
+        }
+        for p in 0..d {
+            for q in (p + 1)..d {
+                let apq = m.at(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                for k in 0..d {
+                    let akp = m.at(k, p);
+                    let akq = m.at(k, q);
+                    *m.at_mut(k, p) = c * akp - s * akq;
+                    *m.at_mut(k, q) = s * akp + c * akq;
+                }
+                for k in 0..d {
+                    let apk = m.at(p, k);
+                    let aqk = m.at(q, k);
+                    *m.at_mut(p, k) = c * apk - s * aqk;
+                    *m.at_mut(q, k) = s * apk + c * aqk;
+                }
+                // accumulate V <- V J
+                for k in 0..d {
+                    let vkp = v.at(k, p);
+                    let vkq = v.at(k, q);
+                    *v.at_mut(k, p) = c * vkp - s * vkq;
+                    *v.at_mut(k, q) = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // sort ascending, permuting V's columns
+    let mut order: Vec<usize> = (0..d).collect();
+    let diag: Vec<f64> = (0..d).map(|i| m.at(i, i)).collect();
+    order.sort_by(|&i, &j| diag[i].partial_cmp(&diag[j]).unwrap());
+    let vals: Vec<f64> = order.iter().map(|&i| diag[i]).collect();
+    let mut vs = Mat::zeros(d, d);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        for i in 0..d {
+            *vs.at_mut(i, new_j) = v.at(i, old_j);
+        }
+    }
+    SymEigen { vals, v: vs }
+}
+
+/// Eigenvalues (ascending) of a symmetric matrix via cyclic Jacobi.
+pub fn sym_eigenvalues(a: &Mat) -> Vec<f64> {
+    let d = a.rows;
+    assert_eq!(a.cols, d);
+    let mut m = a.clone();
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        // off-diagonal Frobenius norm
+        let mut off = 0.0;
+        for i in 0..d {
+            for j in (i + 1)..d {
+                off += m.at(i, j) * m.at(i, j);
+            }
+        }
+        if off.sqrt() <= 1e-14 * (1.0 + m.frob_norm()) {
+            break;
+        }
+        for p in 0..d {
+            for q in (p + 1)..d {
+                let apq = m.at(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // rotate rows/cols p and q
+                for k in 0..d {
+                    let akp = m.at(k, p);
+                    let akq = m.at(k, q);
+                    *m.at_mut(k, p) = c * akp - s * akq;
+                    *m.at_mut(k, q) = s * akp + c * akq;
+                }
+                for k in 0..d {
+                    let apk = m.at(p, k);
+                    let aqk = m.at(q, k);
+                    *m.at_mut(p, k) = c * apk - s * aqk;
+                    *m.at_mut(q, k) = s * apk + c * aqk;
+                }
+            }
+        }
+    }
+    let mut evs: Vec<f64> = (0..d).map(|i| m.at(i, i)).collect();
+    evs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    evs
+}
+
+/// Singular values of a tall matrix via eigenvalues of its Gram matrix.
+pub fn singular_values(a: &Mat) -> Vec<f64> {
+    let g = blas::gram(a);
+    sym_eigenvalues(&g)
+        .into_iter()
+        .map(|l| l.max(0.0).sqrt())
+        .collect()
+}
+
+/// Condition number sigma_max / sigma_min of a tall full-rank matrix.
+pub fn cond(a: &Mat) -> f64 {
+    let sv = singular_values(a);
+    let smin = sv.first().copied().unwrap_or(0.0);
+    let smax = sv.last().copied().unwrap_or(0.0);
+    if smin <= 0.0 {
+        f64::INFINITY
+    } else {
+        smax / smin
+    }
+}
+
+/// Condition number of AR^{-1} *without* forming the n x d product:
+/// kappa(AR^{-1})^2 = kappa(R^{-T} (A^T A) R^{-1}); we form the small d x d
+/// matrix via triangular solves against the Gram matrix columns.
+pub fn cond_preconditioned(gram_a: &Mat, r: &Mat) -> f64 {
+    let d = gram_a.rows;
+    // B = R^{-T} G R^{-1}: solve column-wise
+    let mut b = Mat::zeros(d, d);
+    for j in 0..d {
+        // col_j of G R^{-1}: solve R^T y = G e_j? careful:
+        // G R^{-1} has columns G (R^{-1} e_j); R^{-1} e_j = solve_upper(R, e_j)
+        let mut e = vec![0.0; d];
+        e[j] = 1.0;
+        let rinv_ej = super::tri::solve_upper(r, &e);
+        let g_col = blas::gemv(gram_a, &rinv_ej);
+        let col = super::tri::solve_upper_t(r, &g_col);
+        for i in 0..d {
+            *b.at_mut(i, j) = col[i];
+        }
+    }
+    // symmetrize numerical noise
+    for i in 0..d {
+        for j in (i + 1)..d {
+            let avg = 0.5 * (b.at(i, j) + b.at(j, i));
+            *b.at_mut(i, j) = avg;
+            *b.at_mut(j, i) = avg;
+        }
+    }
+    let evs = sym_eigenvalues(&b);
+    let lmin = evs.first().copied().unwrap_or(0.0);
+    let lmax = evs.last().copied().unwrap_or(0.0);
+    if lmin <= 0.0 {
+        f64::INFINITY
+    } else {
+        (lmax / lmin).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::qr_r;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn eigenvalues_of_diagonal() {
+        let mut m = Mat::zeros(4, 4);
+        for (i, v) in [4.0, 1.0, 3.0, 2.0].iter().enumerate() {
+            *m.at_mut(i, i) = *v;
+        }
+        let evs = sym_eigenvalues(&m);
+        assert_eq!(evs, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn eigenvalues_match_trace_and_det_2x2() {
+        let m = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let evs = sym_eigenvalues(&m);
+        assert!((evs[0] - 1.0).abs() < 1e-12);
+        assert!((evs[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_eigs_are_nonnegative() {
+        let mut rng = Rng::new(1);
+        let a = Mat::gaussian(50, 8, &mut rng);
+        let evs = sym_eigenvalues(&blas::gram(&a));
+        assert!(evs.iter().all(|&l| l > -1e-9));
+    }
+
+    #[test]
+    fn singular_values_of_orthogonal_are_one() {
+        let mut rng = Rng::new(2);
+        let a = Mat::gaussian(40, 6, &mut rng);
+        let q = crate::linalg::qr::qr(&a).q.unwrap();
+        let sv = singular_values(&q);
+        for s in sv {
+            assert!((s - 1.0).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn cond_of_scaled_identityish() {
+        // diag(1..5) embedded in a tall matrix via known construction
+        let mut a = Mat::zeros(10, 5);
+        for i in 0..5 {
+            *a.at_mut(i, i) = (i + 1) as f64;
+        }
+        assert!((cond(&a) - 5.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn preconditioning_kills_condition_number() {
+        // The core claim behind Table 2: kappa(A R^{-1}) = O(1) when R is the
+        // R-factor of (a sketch of) A. With the exact QR, kappa == 1.
+        let mut rng = Rng::new(3);
+        let a = Mat::gaussian(200, 10, &mut rng);
+        let r = qr_r(&a);
+        let g = blas::gram(&a);
+        let k = cond_preconditioned(&g, &r);
+        assert!(
+            (k - 1.0).abs() < 1e-6,
+            "exact preconditioning should give kappa=1, got {k}"
+        );
+    }
+
+    #[test]
+    fn cond_preconditioned_matches_explicit_product() {
+        let mut rng = Rng::new(4);
+        let a = Mat::gaussian(120, 6, &mut rng);
+        // an *approximate* R (from a sub-sampled QR) leaves kappa > 1
+        let sub = a.gather_rows(&(0..40).collect::<Vec<_>>());
+        let r = qr_r(&sub);
+        let g = blas::gram(&a);
+        let fast = cond_preconditioned(&g, &r);
+        // explicit U = A R^{-1}
+        let rinv = crate::linalg::tri::inv_upper(&r);
+        let u = blas::gemm(&a, &rinv);
+        let explicit = cond(&u);
+        assert!(
+            (fast - explicit).abs() < 1e-6 * explicit,
+            "fast {fast} vs explicit {explicit}"
+        );
+    }
+}

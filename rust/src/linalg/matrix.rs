@@ -1,0 +1,249 @@
+//! Row-major dense matrix over f64.
+//!
+//! Row-major is the natural layout here: every solver samples *rows* of the
+//! (preconditioned) data matrix, so a mini-batch gather is `r` contiguous
+//! memcpys, and the PJRT literal layout (default XLA major-to-minor) matches
+//! byte-for-byte.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a closure f(i, j).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    pub fn gaussian(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: rng.gaussians(rows * cols),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // simple cache-blocked transpose
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Gather rows by index into a new (idx.len() x cols) matrix.
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Horizontal stack [self | other].
+    pub fn hstack(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+
+    /// Split off the last column (used for the packed [A | b] layout).
+    pub fn split_last_col(&self) -> (Mat, Vec<f64>) {
+        assert!(self.cols >= 1);
+        let d = self.cols - 1;
+        let mut a = Mat::zeros(self.rows, d);
+        let mut b = Vec::with_capacity(self.rows);
+        for i in 0..self.rows {
+            a.row_mut(i).copy_from_slice(&self.row(i)[..d]);
+            b.push(self.row(i)[d]);
+        }
+        (a, b)
+    }
+
+    /// Take the first `rows` rows.
+    pub fn top_rows(&self, rows: usize) -> Mat {
+        assert!(rows <= self.rows);
+        Mat {
+            rows,
+            cols: self.cols,
+            data: self.data[..rows * self.cols].to_vec(),
+        }
+    }
+
+    /// Pad with zero rows up to `rows` (power-of-two padding for FWHT).
+    pub fn pad_rows(&self, rows: usize) -> Mat {
+        assert!(rows >= self.rows);
+        let mut data = self.data.clone();
+        data.resize(rows * self.cols, 0.0);
+        Mat {
+            rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+}
+
+/// next power of two >= n (FWHT padding).
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.at(0, 2), 3.0);
+        assert_eq!(m.at(1, 0), 4.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.col(1), vec![2., 5.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = Mat::gaussian(37, 53, &mut rng);
+        let t = m.transpose();
+        assert_eq!((t.rows, t.cols), (53, 37));
+        assert_eq!(t.transpose(), m);
+        for i in 0..m.rows {
+            for j in 0..m.cols {
+                assert_eq!(m.at(i, j), t.at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn gather_rows_copies() {
+        let m = Mat::from_fn(5, 2, |i, j| (i * 2 + j) as f64);
+        let g = m.gather_rows(&[4, 0, 4]);
+        assert_eq!(g.rows, 3);
+        assert_eq!(g.row(0), &[8., 9.]);
+        assert_eq!(g.row(1), &[0., 1.]);
+        assert_eq!(g.row(2), &[8., 9.]);
+    }
+
+    #[test]
+    fn hstack_and_split() {
+        let a = Mat::from_fn(3, 2, |i, j| (i + j) as f64);
+        let b = Mat::from_fn(3, 1, |i, _| 100.0 + i as f64);
+        let ab = a.hstack(&b);
+        assert_eq!(ab.cols, 3);
+        let (a2, bv) = ab.split_last_col();
+        assert_eq!(a2, a);
+        assert_eq!(bv, vec![100., 101., 102.]);
+    }
+
+    #[test]
+    fn pad_and_top() {
+        let m = Mat::from_fn(3, 2, |i, j| (i * 2 + j) as f64);
+        let p = m.pad_rows(8);
+        assert_eq!(p.rows, 8);
+        assert_eq!(p.row(7), &[0., 0.]);
+        assert_eq!(p.top_rows(3), m);
+    }
+
+    #[test]
+    fn eye_and_frob() {
+        let i3 = Mat::eye(3);
+        assert_eq!(i3.at(1, 1), 1.0);
+        assert_eq!(i3.at(0, 1), 0.0);
+        assert!((i3.frob_norm() - 3f64.sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn next_pow2_values() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(5), 8);
+        assert_eq!(next_pow2(1024), 1024);
+        assert_eq!(next_pow2(1025), 2048);
+    }
+}

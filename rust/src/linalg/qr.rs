@@ -1,0 +1,215 @@
+//! Householder thin-QR.
+//!
+//! Algorithm 1 of the paper QR-factors the sketched matrix `SA` (s x d with
+//! s = O(d log d) << n), so this runs on *small* inputs — clarity and
+//! numerical robustness matter more than blocking. We still keep the
+//! reflector application cache-friendly (row-major, applied panel-wise).
+
+use super::blas;
+use super::matrix::Mat;
+
+/// Result of a thin QR: `r` is d x d upper-triangular with non-negative
+/// diagonal; `q` (optional) is m x d with orthonormal columns.
+pub struct QrResult {
+    pub q: Option<Mat>,
+    pub r: Mat,
+}
+
+/// Householder QR of a (m x d, m >= d). Returns R only (the paper's
+/// Algorithm 1 step 2 needs just R to form the preconditioner).
+pub fn qr_r(a: &Mat) -> Mat {
+    qr_impl(a, false).r
+}
+
+/// Householder QR returning both Q (thin) and R.
+pub fn qr(a: &Mat) -> QrResult {
+    qr_impl(a, true)
+}
+
+fn qr_impl(a: &Mat, want_q: bool) -> QrResult {
+    let (m, d) = (a.rows, a.cols);
+    assert!(m >= d, "thin QR needs m >= d (got {m} x {d})");
+    let mut work = a.clone();
+    // store reflectors v_k in the lower part of work + betas
+    let mut betas = vec![0.0; d];
+    for k in 0..d {
+        // build the Householder vector for column k from rows k..m
+        let mut norm2 = 0.0;
+        for i in k..m {
+            let v = work.at(i, k);
+            norm2 += v * v;
+        }
+        let norm = norm2.sqrt();
+        if norm == 0.0 {
+            betas[k] = 0.0;
+            continue;
+        }
+        let akk = work.at(k, k);
+        let alpha = if akk >= 0.0 { -norm } else { norm };
+        // v = x - alpha e1 ; normalized so v[k] = 1
+        let v0 = akk - alpha;
+        betas[k] = -v0 / alpha; // = 2 / (v^T v) * v0^2 scaled form
+        let inv_v0 = 1.0 / v0;
+        for i in (k + 1)..m {
+            *work.at_mut(i, k) *= inv_v0;
+        }
+        *work.at_mut(k, k) = alpha;
+        // apply (I - beta v v^T) to the trailing columns
+        let beta = betas[k];
+        for j in (k + 1)..d {
+            // w = v^T col_j  (v[k] = 1 implicit)
+            let mut w = work.at(k, j);
+            for i in (k + 1)..m {
+                w += work.at(i, k) * work.at(i, j);
+            }
+            w *= beta;
+            *work.at_mut(k, j) -= w;
+            for i in (k + 1)..m {
+                let vik = work.at(i, k);
+                *work.at_mut(i, j) -= w * vik;
+            }
+        }
+    }
+    // extract R with non-negative diagonal (flip row signs as needed)
+    let mut r = Mat::zeros(d, d);
+    let mut flips = vec![false; d];
+    for i in 0..d {
+        let diag = work.at(i, i);
+        flips[i] = diag < 0.0;
+        let s = if flips[i] { -1.0 } else { 1.0 };
+        for j in i..d {
+            *r.at_mut(i, j) = s * work.at(i, j);
+        }
+    }
+    let q = if want_q {
+        // accumulate Q = H_0 ... H_{d-1} I_thin
+        let mut q = Mat::zeros(m, d);
+        for i in 0..d {
+            *q.at_mut(i, i) = 1.0;
+        }
+        for k in (0..d).rev() {
+            let beta = betas[k];
+            if beta == 0.0 {
+                continue;
+            }
+            for j in 0..d {
+                let mut w = q.at(k, j);
+                for i in (k + 1)..m {
+                    w += work.at(i, k) * q.at(i, j);
+                }
+                w *= beta;
+                *q.at_mut(k, j) -= w;
+                for i in (k + 1)..m {
+                    let vik = work.at(i, k);
+                    *q.at_mut(i, j) -= w * vik;
+                }
+            }
+        }
+        // apply the same sign flips to Q's columns
+        for (k, &flip) in flips.iter().enumerate() {
+            if flip {
+                for i in 0..m {
+                    *q.at_mut(i, k) = -q.at(i, k);
+                }
+            }
+        }
+        Some(q)
+    } else {
+        None
+    };
+    QrResult { q, r }
+}
+
+/// Solve the unconstrained least-squares problem min ||Ax - b|| via QR of A.
+/// Used as the exact ground-truth solver (f(x*)) for the figures.
+pub fn lstsq(a: &Mat, b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows, b.len());
+    let QrResult { q, r } = qr(a);
+    let q = q.expect("qr with q");
+    // x = R^{-1} Q^T b
+    let qtb = blas::gemv_t(&q, b);
+    super::tri::solve_upper(&r, &qtb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn r_is_upper_triangular_with_nonneg_diag() {
+        let mut rng = Rng::new(1);
+        let a = Mat::gaussian(50, 8, &mut rng);
+        let r = qr_r(&a);
+        for i in 0..8 {
+            assert!(r.at(i, i) >= 0.0);
+            for j in 0..i {
+                assert_eq!(r.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_reconstructs_a() {
+        let mut rng = Rng::new(2);
+        let a = Mat::gaussian(40, 7, &mut rng);
+        let QrResult { q, r } = qr(&a);
+        let q = q.unwrap();
+        let qr_prod = blas::gemm(&q, &r);
+        assert!(qr_prod.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn q_has_orthonormal_columns() {
+        let mut rng = Rng::new(3);
+        let a = Mat::gaussian(60, 10, &mut rng);
+        let q = qr(&a).q.unwrap();
+        let qtq = blas::gram(&q);
+        assert!(qtq.max_abs_diff(&Mat::eye(10)) < 1e-10);
+    }
+
+    #[test]
+    fn gram_of_a_equals_rtr() {
+        // The preconditioner identity the paper relies on: A^T A = R^T R.
+        let mut rng = Rng::new(4);
+        let a = Mat::gaussian(80, 6, &mut rng);
+        let r = qr_r(&a);
+        let rtr = blas::gemm(&r.transpose(), &r);
+        let ata = blas::gram(&a);
+        assert!(rtr.max_abs_diff(&ata) < 1e-8);
+    }
+
+    #[test]
+    fn lstsq_recovers_planted_solution() {
+        let mut rng = Rng::new(5);
+        let a = Mat::gaussian(100, 5, &mut rng);
+        let xstar = rng.gaussians(5);
+        let b = blas::gemv(&a, &xstar);
+        let x = lstsq(&a, &b);
+        for (u, v) in x.iter().zip(&xstar) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn lstsq_residual_is_orthogonal_to_range() {
+        let mut rng = Rng::new(6);
+        let a = Mat::gaussian(90, 4, &mut rng);
+        let b = rng.gaussians(90);
+        let x = lstsq(&a, &b);
+        let r = blas::sub(&blas::gemv(&a, &x), &b);
+        let atr = blas::gemv_t(&a, &r);
+        for v in atr {
+            assert!(v.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn handles_square_and_nearly_rank_deficient() {
+        let mut rng = Rng::new(7);
+        let a = Mat::gaussian(6, 6, &mut rng);
+        let QrResult { q, r } = qr(&a);
+        let prod = blas::gemm(&q.unwrap(), &r);
+        assert!(prod.max_abs_diff(&a) < 1e-10);
+    }
+}

@@ -1,0 +1,161 @@
+//! Upper-triangular solves and inverses — applying the preconditioner.
+//!
+//! The two-step preconditioning never forms `U = AR^{-1}` (that would cost
+//! O(nd^2), exactly what the paper avoids); it applies `R^{-1}`/`R^{-T}` to
+//! d-vectors. These routines are O(d^2) each.
+
+use super::matrix::Mat;
+
+/// Solve R x = b for upper-triangular R (back substitution).
+pub fn solve_upper(r: &Mat, b: &[f64]) -> Vec<f64> {
+    let d = r.rows;
+    assert_eq!(r.cols, d);
+    assert_eq!(b.len(), d);
+    let mut x = b.to_vec();
+    for i in (0..d).rev() {
+        let mut s = x[i];
+        let row = r.row(i);
+        for j in (i + 1)..d {
+            s -= row[j] * x[j];
+        }
+        let diag = row[i];
+        assert!(diag != 0.0, "singular triangular factor at {i}");
+        x[i] = s / diag;
+    }
+    x
+}
+
+/// Solve R^T x = b for upper-triangular R (forward substitution on R^T).
+pub fn solve_upper_t(r: &Mat, b: &[f64]) -> Vec<f64> {
+    let d = r.rows;
+    assert_eq!(r.cols, d);
+    assert_eq!(b.len(), d);
+    let mut x = b.to_vec();
+    for i in 0..d {
+        let mut s = x[i];
+        for j in 0..i {
+            s -= r.at(j, i) * x[j];
+        }
+        let diag = r.at(i, i);
+        assert!(diag != 0.0, "singular triangular factor at {i}");
+        x[i] = s / diag;
+    }
+    x
+}
+
+/// Apply the preconditioner kernel: y = R^{-1} R^{-T} g.
+/// This is `pinv @ g` in the L2 graphs (pinv = R^{-1}R^{-T} = (A^T A)^{-1}
+/// in exact arithmetic when R comes from a full QR of A).
+pub fn apply_pinv(r: &Mat, g: &[f64]) -> Vec<f64> {
+    solve_upper(r, &solve_upper_t(r, g))
+}
+
+/// Explicit R^{-1} (d x d). Needed once per job to ship the dense `pinv`
+/// matrix to the PJRT artifacts; O(d^3) but d <= ~100 here.
+pub fn inv_upper(r: &Mat) -> Mat {
+    let d = r.rows;
+    assert_eq!(r.cols, d);
+    let mut inv = Mat::zeros(d, d);
+    // solve R x = e_j column by column
+    for j in 0..d {
+        let mut e = vec![0.0; d];
+        e[j] = 1.0;
+        let x = solve_upper(r, &e);
+        for i in 0..d {
+            *inv.at_mut(i, j) = x[i];
+        }
+    }
+    inv
+}
+
+/// Dense pinv = R^{-1} R^{-T} for the artifact inputs.
+pub fn pinv_dense(r: &Mat) -> Mat {
+    let rinv = inv_upper(r);
+    super::blas::gemm(&rinv, &rinv.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{gemm, gemv};
+    use crate::linalg::qr::qr_r;
+    use crate::util::rng::Rng;
+
+    fn random_upper(d: usize, rng: &mut Rng) -> Mat {
+        let mut r = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in i..d {
+                *r.at_mut(i, j) = rng.gaussian();
+            }
+            // keep well-conditioned
+            *r.at_mut(i, i) = 1.0 + rng.uniform();
+        }
+        r
+    }
+
+    #[test]
+    fn solve_upper_roundtrip() {
+        let mut rng = Rng::new(1);
+        let r = random_upper(9, &mut rng);
+        let x = rng.gaussians(9);
+        let b = gemv(&r, &x);
+        let got = solve_upper(&r, &b);
+        for (u, v) in got.iter().zip(&x) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn solve_upper_t_roundtrip() {
+        let mut rng = Rng::new(2);
+        let r = random_upper(7, &mut rng);
+        let x = rng.gaussians(7);
+        let b = gemv(&r.transpose(), &x);
+        let got = solve_upper_t(&r, &b);
+        for (u, v) in got.iter().zip(&x) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn inv_upper_is_inverse() {
+        let mut rng = Rng::new(3);
+        let r = random_upper(8, &mut rng);
+        let inv = inv_upper(&r);
+        let prod = gemm(&r, &inv);
+        assert!(prod.max_abs_diff(&Mat::eye(8)) < 1e-10);
+    }
+
+    #[test]
+    fn apply_pinv_matches_dense() {
+        let mut rng = Rng::new(4);
+        let r = random_upper(10, &mut rng);
+        let g = rng.gaussians(10);
+        let fast = apply_pinv(&r, &g);
+        let dense = pinv_dense(&r);
+        let want = gemv(&dense, &g);
+        for (u, v) in fast.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn pinv_from_qr_equals_normal_equation_inverse() {
+        // R from QR(A) => R^{-1}R^{-T} = (A^T A)^{-1}
+        let mut rng = Rng::new(5);
+        let a = Mat::gaussian(60, 5, &mut rng);
+        let r = qr_r(&a);
+        let pinv = pinv_dense(&r);
+        let ata = crate::linalg::blas::gram(&a);
+        let prod = gemm(&pinv, &ata);
+        assert!(prod.max_abs_diff(&Mat::eye(5)) < 1e-8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn singular_factor_panics() {
+        let mut r = Mat::eye(3);
+        *r.at_mut(1, 1) = 0.0;
+        solve_upper(&r, &[1.0, 1.0, 1.0]);
+    }
+}

@@ -1,0 +1,321 @@
+//! `hdpw` — the coordinator binary.
+//!
+//! Subcommands:
+//!   solve       run one regression job and print the report
+//!   serve       run the solver service (TCP or stdio)
+//!   experiment  run a paper experiment (fig1..fig6, table1, table2)
+//!   datasets    describe the built-in datasets (Table 3)
+//!   artifacts   inspect the AOT artifact manifest
+//!   bench-info  print backend/dispatch information
+
+use hdpw::backend::Backend;
+use hdpw::coordinator::{Coordinator, CoordinatorConfig, JobRequest};
+use hdpw::experiments::{self, ExpCtx};
+use hdpw::runtime::Engine;
+use hdpw::util::cli::Command;
+use hdpw::util::logging;
+use std::sync::Arc;
+
+fn main() {
+    logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (sub, rest) = match argv.split_first() {
+        Some((s, rest)) => (s.as_str(), rest.to_vec()),
+        None => {
+            print_usage();
+            std::process::exit(2);
+        }
+    };
+    let code = match sub {
+        "solve" => cmd_solve(&rest),
+        "serve" => cmd_serve(&rest),
+        "experiment" => cmd_experiment(&rest),
+        "datasets" => cmd_datasets(&rest),
+        "artifacts" => cmd_artifacts(&rest),
+        "bench-info" => cmd_bench_info(&rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    eprintln!(
+        "hdpw — large-scale constrained linear regression via two-step preconditioning
+
+usage: hdpw <subcommand> [options]
+
+subcommands:
+  solve        run one regression job           (hdpw solve --help)
+  serve        run the solver service           (hdpw serve --help)
+  experiment   regenerate a paper table/figure  (hdpw experiment fig1)
+  datasets     list built-in datasets (Table 3)
+  artifacts    inspect the AOT artifact manifest
+  bench-info   print backend information"
+    );
+}
+
+fn parse_or_exit(cmd: &Command, argv: &[String]) -> hdpw::util::cli::Args {
+    match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_solve(argv: &[String]) -> i32 {
+    let cmd = Command::new("hdpw solve", "run one regression job")
+        .opt("dataset", "syn1|syn2|year|buzz|pjrt8k|csv:<path> (default syn2)")
+        .opt("n", "rows for generated datasets (default 16384)")
+        .opt("solver", "solver name (default hdpwbatchsgd)")
+        .opt("constraint", "unc|l1|l2 (default unc)")
+        .opt("radius", "ball radius (default: norm of unconstrained optimum)")
+        .opt("batch-size", "mini-batch size r (default 64)")
+        .opt("max-iters", "iteration cap (default 5000)")
+        .opt("time-budget", "seconds (default 30)")
+        .opt("target-rel-err", "stop at this relative error")
+        .opt("trials", "best-of-k trials (default 1; paper uses 10)")
+        .opt("seed", "rng seed (default 1)")
+        .opt("sketch", "gaussian|srht|countsketch|sparse (default countsketch)")
+        .opt("sketch-size", "sketch rows s (default auto)")
+        .opt("eta", "fixed step size (default: theory)")
+        .flag_opt("normalize", "normalize the dataset first")
+        .flag_opt("native", "force the native backend (skip PJRT artifacts)")
+        .flag_opt("json", "emit the result as JSON");
+    let args = parse_or_exit(&cmd, argv);
+
+    let mut req = JobRequest::default();
+    req.dataset = args.get_or("dataset", "syn2");
+    req.n = args.get_usize("n", req.n);
+    req.solver = args.get_or("solver", "hdpwbatchsgd");
+    req.constraint = args.get_or("constraint", "unc");
+    req.radius = args.get_f64("radius", 0.0);
+    req.batch_size = args.get_usize("batch-size", req.batch_size);
+    req.max_iters = args.get_usize("max-iters", req.max_iters);
+    req.time_budget = args.get_f64("time-budget", req.time_budget);
+    req.target_rel_err = args.get_f64("target-rel-err", 0.0);
+    req.trials = args.get_usize("trials", 1);
+    req.seed = args.get_u64("seed", 1);
+    req.sketch = args.get_or("sketch", "countsketch");
+    req.sketch_size = args.get_usize("sketch-size", 0);
+    req.eta = args.get_f64("eta", 0.0);
+    req.normalize = args.flag("normalize");
+
+    let backend = if args.flag("native") {
+        Backend::native()
+    } else {
+        Backend::auto()
+    };
+    let pjrt = backend.has_pjrt();
+    let coord = Coordinator::new(backend, CoordinatorConfig::default());
+    match coord.run_job(&req) {
+        Ok(res) => {
+            if args.flag("json") {
+                println!("{}", res.to_json());
+            } else {
+                println!("solver     : {}", res.solver);
+                println!("dataset    : {} (n={})", res.dataset, req.n);
+                println!(
+                    "backend    : {}",
+                    if pjrt { "pjrt+native" } else { "native" }
+                );
+                println!("f*         : {:.6e}", res.f_star);
+                println!("f(best)    : {:.6e}", res.best_f);
+                println!("rel error  : {:.3e}", res.best_rel_err);
+                println!("iters      : {}", res.best.iters);
+                println!(
+                    "setup/solve: {} / {}",
+                    hdpw::util::stats::fmt_duration(res.best.setup_secs),
+                    hdpw::util::stats::fmt_duration(res.best.solve_secs)
+                );
+                println!("trials     : {}", res.trials_run);
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(argv: &[String]) -> i32 {
+    let cmd = Command::new("hdpw serve", "run the solver service")
+        .opt("addr", "TCP listen address (default 127.0.0.1:7878)")
+        .opt("workers", "concurrent jobs (default 2)")
+        .opt("max-queue", "queue bound for backpressure (default 16)")
+        .flag_opt("stdio", "serve stdin/stdout instead of TCP")
+        .flag_opt("native", "force the native backend");
+    let args = parse_or_exit(&cmd, argv);
+    let backend = if args.flag("native") {
+        Backend::native()
+    } else {
+        Backend::auto()
+    };
+    let coord = Arc::new(Coordinator::new(
+        backend,
+        CoordinatorConfig {
+            workers: args.get_usize("workers", 2),
+            max_queue: args.get_usize("max-queue", 16),
+            cache_dir: Some(std::path::PathBuf::from(".hdpw_cache")),
+        },
+    ));
+    let result = if args.flag("stdio") {
+        hdpw::coordinator::server::serve_stdio(coord)
+    } else {
+        let addr = args.get_or("addr", "127.0.0.1:7878");
+        hdpw::coordinator::server::serve_tcp(coord, &addr)
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("serve error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_experiment(argv: &[String]) -> i32 {
+    let cmd = Command::new(
+        "hdpw experiment",
+        "regenerate a paper table/figure (positional: fig1..fig6 | table1 | table2 | all)",
+    )
+    .opt("n", "dataset rows (default 65536; quick: 8192)")
+    .opt("trials", "best-of-k (default 10; quick: 3)")
+    .opt("budget", "seconds per solver run")
+    .flag_opt("quick", "small fast configuration");
+    let args = parse_or_exit(&cmd, argv);
+    let which = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let mut ctx = ExpCtx::new(args.flag("quick"));
+    ctx.n = args.get_usize("n", ctx.n);
+    ctx.trials = args.get_usize("trials", ctx.trials);
+    ctx.budget = args.get_f64("budget", ctx.budget);
+
+    let run_one = |ctx: &ExpCtx, name: &str| -> anyhow::Result<()> {
+        match name {
+            "fig1" => {
+                let out = experiments::fig1::run(ctx)?;
+                for (i, fig) in out.figures.iter().enumerate() {
+                    println!("{}", ctx.save_and_render(fig, &format!("fig1_{i}")));
+                }
+                println!("{}", experiments::fig1::render_table(&out));
+            }
+            "fig2" => {
+                let panels = experiments::fig2::run(ctx)?;
+                println!("{}", ctx.save_and_render(&panels.low, "fig2_low"));
+                println!("{}", ctx.save_and_render(&panels.high, "fig2_high"));
+            }
+            "fig3" | "fig4" | "fig5" | "fig6" => {
+                let figs = match name {
+                    "fig3" => experiments::figs_real::fig3(ctx)?,
+                    "fig4" => experiments::figs_real::fig4(ctx)?,
+                    "fig5" => experiments::figs_real::fig5(ctx)?,
+                    _ => experiments::figs_real::fig6(ctx)?,
+                };
+                for (i, fig) in figs.iter().enumerate() {
+                    println!("{}", ctx.save_and_render(fig, &format!("{name}_{i}")));
+                }
+            }
+            "table1" => {
+                let out = experiments::table1::run(ctx)?;
+                println!("{}", experiments::table1::render(&out));
+                let v = experiments::table1::verdict(&out);
+                println!(
+                    "verdict: batch_speedup={} linear_convergence={}",
+                    v.batch_speedup_ok, v.linear_convergence_ok
+                );
+            }
+            "table2" => {
+                let out = experiments::table2::run(ctx)?;
+                println!("{}", experiments::table2::render(&out));
+            }
+            other => anyhow::bail!("unknown experiment {other:?}"),
+        }
+        Ok(())
+    };
+
+    let names: Vec<&str> = if which == "all" {
+        vec![
+            "table2", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "table1",
+        ]
+    } else {
+        vec![which.as_str()]
+    };
+    for name in names {
+        println!("===== {name} =====");
+        if let Err(e) = run_one(&ctx, name) {
+            eprintln!("experiment {name} failed: {e:#}");
+            return 1;
+        }
+    }
+    0
+}
+
+fn cmd_datasets(_argv: &[String]) -> i32 {
+    println!("built-in datasets (Table 3 of the paper; generated, see DESIGN.md section 7):");
+    println!(
+        "{:<8} {:>10} {:>8} {:>12} {:>14} note",
+        "name", "rows*", "cols", "kappa", "sketch size"
+    );
+    for (name, d, kappa, note) in [
+        ("syn1", 20, "1e8", "exact spectrum"),
+        ("syn2", 20, "1e3", "exact spectrum"),
+        ("year", 90, "~3e3", "UCI Year simulated"),
+        ("buzz", 77, "~1e8", "UCI Buzz simulated (heavy tails)"),
+        ("pjrt8k", 32, "1e6", "canonical AOT-artifact shape"),
+    ] {
+        let n = hdpw::data::uci_sim::paper_scale_n(name);
+        let s = hdpw::sketch::default_sketch_size(n, d);
+        println!("{name:<8} {n:>10} {d:>8} {kappa:>12} {s:>14} {note}");
+    }
+    println!("* paper-scale rows; every command accepts --n to rescale");
+    0
+}
+
+fn cmd_artifacts(_argv: &[String]) -> i32 {
+    match Engine::load(&Engine::default_dir()) {
+        Ok(engine) => {
+            let meta = &engine.manifest_meta;
+            println!(
+                "artifacts at {:?}: canonical n={} d={} rs={:?} chunk_t={} pw_t={}",
+                engine.dir, meta.n, meta.d, meta.rs, meta.chunk_t, meta.pw_t
+            );
+            for name in engine.op_names() {
+                let sig = engine.signature(name).unwrap();
+                println!(
+                    "  {name:<44} inputs={} outputs={}",
+                    sig.inputs.len(),
+                    sig.outputs
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("no artifacts: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_bench_info(_argv: &[String]) -> i32 {
+    let backend = Backend::auto();
+    println!("pjrt artifacts : {}", backend.has_pjrt());
+    println!(
+        "threads        : {}",
+        hdpw::util::threadpool::default_threads()
+    );
+    0
+}

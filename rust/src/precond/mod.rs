@@ -1,0 +1,194 @@
+//! Two-step preconditioning — the paper's core contribution.
+//!
+//! Step 1 (Algorithm 1): sketch `SA`, thin-QR it, keep `R`; `U = AR^{-1}` is
+//! (O(sqrt d), O(1), 2)-conditioned, i.e. kappa(AR^{-1}) = O(1). We never
+//! form U.
+//!
+//! Step 2 (Algorithm 2, step 2): apply the Randomized Hadamard Transform
+//! `HD` to `[A | b]`, spreading row norms (Theorem 1) so *uniform*
+//! mini-batch sampling has the variance bound of Lemma 9.
+
+use crate::linalg::{qr, tri, Mat};
+use crate::sketch::fwht::randomized_hadamard;
+use crate::sketch::SketchKind;
+use crate::util::rng::Rng;
+use crate::util::stats::Timer;
+
+/// Output of step 1: the triangular preconditioner + timing for Table 2.
+pub struct Precondition {
+    /// Upper-triangular R from QR(SA): the preconditioner factor.
+    pub r: Mat,
+    /// Dense R^{-1}R^{-T} — shipped to the PJRT artifacts as `pinv`.
+    pub pinv: Mat,
+    /// Wall-clock cost of the sketch + QR (Table 2 measurements).
+    pub sketch_secs: f64,
+    pub qr_secs: f64,
+    pub sketch_kind: SketchKind,
+    pub sketch_rows: usize,
+}
+
+/// Step 1 of Algorithm 2/4/6: compute R such that AR^{-1} is
+/// well-conditioned, via a sketch of the packed [A | b] (we sketch A only;
+/// b is irrelevant to conditioning).
+pub fn precondition(
+    a: &Mat,
+    kind: SketchKind,
+    sketch_rows: usize,
+    rng: &mut Rng,
+) -> Precondition {
+    assert!(sketch_rows > a.cols, "sketch size must exceed d");
+    let t = Timer::start();
+    let sk = kind.build(sketch_rows, a.rows, rng);
+    let sa = sk.apply(a);
+    let sketch_secs = t.secs();
+    let t = Timer::start();
+    let r = qr::qr_r(&sa);
+    let pinv = tri::pinv_dense(&r);
+    let qr_secs = t.secs();
+    Precondition {
+        r,
+        pinv,
+        sketch_secs,
+        qr_secs,
+        sketch_kind: kind,
+        sketch_rows,
+    }
+}
+
+/// Step 2: the Randomized Hadamard Transform applied to [A | b] packed as an
+/// n x (d+1) matrix. Pads n to a power of two. Returns (HDA, HDb, n_pad).
+///
+/// Padding note: FWHT needs 2^k rows; padding appends zero rows, which are
+/// valid "samples" of the transformed system (they contribute zero
+/// gradient in expectation scaled consistently) — we keep the *padded* row
+/// count as the sampling universe exactly like zero-padding the dataset.
+pub struct HdTransformed {
+    pub hda: Mat,
+    pub hdb: Vec<f64>,
+    /// padded row count (sampling universe size)
+    pub n_pad: usize,
+    pub secs: f64,
+}
+
+pub fn hd_transform(a: &Mat, b: &[f64], rng: &mut Rng) -> HdTransformed {
+    assert_eq!(a.rows, b.len());
+    let t = Timer::start();
+    let bmat = Mat::from_vec(b.len(), 1, b.to_vec());
+    let packed = a.hstack(&bmat);
+    let n_pad = packed.rows.next_power_of_two();
+    let mut padded = if n_pad == packed.rows {
+        packed
+    } else {
+        packed.pad_rows(n_pad)
+    };
+    let signs = rng.signs(n_pad);
+    randomized_hadamard(&mut padded, &signs);
+    let (hda, hdb) = padded.split_last_col();
+    HdTransformed {
+        hda,
+        hdb,
+        n_pad,
+        secs: t.secs(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::linalg::eigen;
+
+    fn syn(n: usize, d: usize, seed: u64) -> (Mat, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let a = Mat::gaussian(n, d, &mut rng);
+        let b = rng.gaussians(n);
+        (a, b)
+    }
+
+    #[test]
+    fn preconditioner_gives_o1_condition_number() {
+        let (a, _) = syn(2048, 12, 1);
+        let mut rng = Rng::new(7);
+        for kind in [
+            SketchKind::CountSketch,
+            SketchKind::Srht,
+            SketchKind::Gaussian,
+            SketchKind::SparseEmbed,
+        ] {
+            let p = precondition(&a, kind, 480, &mut rng);
+            let g = blas::gram(&a);
+            let kappa = eigen::cond_preconditioned(&g, &p.r);
+            assert!(
+                kappa < 3.0,
+                "{}: kappa(AR^-1) = {kappa}, expected O(1)",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn preconditioner_beats_raw_condition_number() {
+        // ill-conditioned A: scale columns wildly
+        let (mut a, _) = syn(1024, 8, 2);
+        for i in 0..a.rows {
+            for j in 0..a.cols {
+                *a.at_mut(i, j) *= 10f64.powi(j as i32);
+            }
+        }
+        let raw_kappa = eigen::cond(&a);
+        assert!(raw_kappa > 1e5);
+        let mut rng = Rng::new(3);
+        let p = precondition(&a, SketchKind::CountSketch, 400, &mut rng);
+        let g = blas::gram(&a);
+        let kappa = eigen::cond_preconditioned(&g, &p.r);
+        assert!(kappa < 5.0, "kappa {kappa}");
+    }
+
+    #[test]
+    fn hd_transform_preserves_objective() {
+        // ||HDAx - HDb|| == ||Ax - b|| for any x (H, D orthogonal) modulo
+        // zero padding (which adds zero rows to both sides).
+        let (a, b) = syn(500, 6, 4); // pads to 512
+        let mut rng = Rng::new(5);
+        let hd = hd_transform(&a, &b, &mut rng);
+        assert_eq!(hd.n_pad, 512);
+        let x = rng.gaussians(6);
+        let f_orig = blas::residual_sq(&a, &b, &x);
+        let f_hd = blas::residual_sq(&hd.hda, &hd.hdb, &x);
+        assert!(
+            (f_orig - f_hd).abs() < 1e-8 * (1.0 + f_orig),
+            "{f_orig} vs {f_hd}"
+        );
+    }
+
+    #[test]
+    fn hd_transform_flattens_leverage() {
+        // row norms of HDA are far more uniform than those of a spiky A
+        let mut a = Mat::zeros(256, 4);
+        for j in 0..4 {
+            *a.at_mut(j, j) = 10.0;
+        }
+        let b = vec![0.0; 256];
+        let mut rng = Rng::new(6);
+        let hd = hd_transform(&a, &b, &mut rng);
+        let norms: Vec<f64> = (0..hd.hda.rows)
+            .map(|i| blas::nrm2(hd.hda.row(i)))
+            .collect();
+        let max = norms.iter().cloned().fold(0.0, f64::max);
+        let mean = norms.iter().sum::<f64>() / norms.len() as f64;
+        assert!(
+            max / mean < 6.0,
+            "row norms still spiky: max {max}, mean {mean}"
+        );
+    }
+
+    #[test]
+    fn timings_are_recorded() {
+        let (a, b) = syn(1024, 8, 7);
+        let mut rng = Rng::new(8);
+        let p = precondition(&a, SketchKind::CountSketch, 200, &mut rng);
+        assert!(p.sketch_secs >= 0.0 && p.qr_secs >= 0.0);
+        let hd = hd_transform(&a, &b, &mut rng);
+        assert!(hd.secs >= 0.0);
+    }
+}

@@ -1,0 +1,269 @@
+//! Euclidean projections onto the constraint sets W.
+//!
+//! The paper evaluates the unconstrained case and l1-/l2-ball constraints
+//! (the ball radii set to the norms of the unconstrained optimum). The
+//! projections here mirror the `_project` functions in the L2 graphs
+//! (python/compile/model.py) and are cross-checked against them in the
+//! integration tests.
+
+pub mod metric;
+
+use crate::linalg::blas::nrm2;
+
+/// The constraint set for a regression job.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Constraint {
+    /// W = R^d.
+    Unconstrained,
+    /// W = {x : ||x||_2 <= radius}.
+    L2Ball { radius: f64 },
+    /// W = {x : ||x||_1 <= radius}.
+    L1Ball { radius: f64 },
+    /// W = {x : lo <= x_i <= hi} (box; used by the examples).
+    Box { lo: f64, hi: f64 },
+}
+
+impl Constraint {
+    /// Short tag used in artifact names / reports.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Constraint::Unconstrained => "unc",
+            Constraint::L2Ball { .. } => "l2",
+            Constraint::L1Ball { .. } => "l1",
+            Constraint::Box { .. } => "box",
+        }
+    }
+
+    /// Ball radius (0 when not applicable) — artifact scalar input.
+    pub fn radius(&self) -> f64 {
+        match self {
+            Constraint::L2Ball { radius } | Constraint::L1Ball { radius } => *radius,
+            _ => 0.0,
+        }
+    }
+
+    /// Project x onto W in place.
+    pub fn project(&self, x: &mut [f64]) {
+        match *self {
+            Constraint::Unconstrained => {}
+            Constraint::L2Ball { radius } => project_l2(x, radius),
+            Constraint::L1Ball { radius } => project_l1(x, radius),
+            Constraint::Box { lo, hi } => {
+                for v in x {
+                    *v = v.clamp(lo, hi);
+                }
+            }
+        }
+    }
+
+    pub fn contains(&self, x: &[f64], tol: f64) -> bool {
+        match *self {
+            Constraint::Unconstrained => true,
+            Constraint::L2Ball { radius } => nrm2(x) <= radius + tol,
+            Constraint::L1Ball { radius } => {
+                x.iter().map(|v| v.abs()).sum::<f64>() <= radius + tol
+            }
+            Constraint::Box { lo, hi } => {
+                x.iter().all(|&v| v >= lo - tol && v <= hi + tol)
+            }
+        }
+    }
+
+    /// Diameter term D_W = sqrt(max 0.5||x||^2 - min 0.5||x||^2) from
+    /// Theorem 2 (used in the theoretical step size). For the unconstrained
+    /// case callers supply an estimate; for balls it is radius/sqrt(2).
+    pub fn diameter(&self) -> Option<f64> {
+        match *self {
+            Constraint::Unconstrained => None,
+            Constraint::L2Ball { radius } | Constraint::L1Ball { radius } => {
+                Some(radius / 2f64.sqrt())
+            }
+            Constraint::Box { lo, hi } => {
+                let m = lo.abs().max(hi.abs());
+                Some(m / 2f64.sqrt())
+            }
+        }
+    }
+}
+
+/// Project onto the l2 ball (in place).
+pub fn project_l2(x: &mut [f64], radius: f64) {
+    let n = nrm2(x);
+    if n > radius {
+        let s = radius / n;
+        for v in x {
+            *v *= s;
+        }
+    }
+}
+
+/// Project onto the l1 ball via the Duchi et al. (2008) pivot algorithm
+/// (O(d log d) with a sort — d is small here so the sort variant is right).
+pub fn project_l1(x: &mut [f64], radius: f64) {
+    assert!(radius >= 0.0);
+    let l1: f64 = x.iter().map(|v| v.abs()).sum();
+    if l1 <= radius {
+        return;
+    }
+    let mut u: Vec<f64> = x.iter().map(|v| v.abs()).collect();
+    u.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut css = 0.0;
+    let mut theta = 0.0;
+    let mut rho = 0;
+    for (j, &uj) in u.iter().enumerate() {
+        css += uj;
+        let t = (css - radius) / (j + 1) as f64;
+        if uj - t > 0.0 {
+            rho = j + 1;
+            theta = t;
+        }
+    }
+    debug_assert!(rho > 0);
+    for v in x.iter_mut() {
+        let mag = (v.abs() - theta).max(0.0);
+        *v = v.signum() * mag;
+    }
+}
+
+/// Soft-threshold operator (prox of lambda*||.||_1) — used by the
+/// signal-recovery example's ISTA baseline.
+pub fn soft_threshold(x: &mut [f64], lambda: f64) {
+    for v in x.iter_mut() {
+        let mag = (v.abs() - lambda).max(0.0);
+        *v = v.signum() * mag;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn l1_norm(x: &[f64]) -> f64 {
+        x.iter().map(|v| v.abs()).sum()
+    }
+
+    #[test]
+    fn l2_inside_untouched_outside_scaled() {
+        let mut x = vec![0.3, 0.4];
+        project_l2(&mut x, 1.0);
+        assert_eq!(x, vec![0.3, 0.4]);
+        let mut y = vec![3.0, 4.0];
+        project_l2(&mut y, 1.0);
+        assert!((nrm2(&y) - 1.0).abs() < 1e-12);
+        assert!((y[0] / y[1] - 0.75).abs() < 1e-12); // direction preserved
+    }
+
+    #[test]
+    fn l1_inside_untouched() {
+        let mut x = vec![0.2, -0.3];
+        project_l1(&mut x, 1.0);
+        assert_eq!(x, vec![0.2, -0.3]);
+    }
+
+    #[test]
+    fn l1_projection_lands_on_boundary() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let mut x = rng.gaussians(20);
+            for v in &mut x {
+                *v *= 3.0;
+            }
+            let radius = 1.5;
+            if l1_norm(&x) <= radius {
+                continue;
+            }
+            project_l1(&mut x, radius);
+            assert!((l1_norm(&x) - radius).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn l1_projection_is_euclidean_optimal() {
+        // property: the projection must be at least as close as a grid of
+        // feasible candidates (including sign-pattern variations).
+        let mut rng = Rng::new(2);
+        let orig = rng.gaussians(5);
+        let radius = 1.0;
+        let mut proj = orig.clone();
+        project_l1(&mut proj, radius);
+        let d_proj: f64 = orig
+            .iter()
+            .zip(&proj)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        for _ in 0..2000 {
+            let mut cand = rng.gaussians(5);
+            let l1 = l1_norm(&cand);
+            if l1 > radius {
+                for v in &mut cand {
+                    *v *= radius / l1;
+                }
+            }
+            let d_cand: f64 = orig
+                .iter()
+                .zip(&cand)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            assert!(d_cand >= d_proj - 1e-9);
+        }
+    }
+
+    #[test]
+    fn l1_preserves_signs_and_sparsifies() {
+        let mut x = vec![2.0, -0.1, 1.0, -3.0];
+        project_l1(&mut x, 2.0);
+        assert!(x[0] > 0.0 && x[3] < 0.0);
+        assert_eq!(x[1], 0.0); // tiny coordinate zeroed
+    }
+
+    #[test]
+    fn box_projection_clamps() {
+        let c = Constraint::Box { lo: -1.0, hi: 1.0 };
+        let mut x = vec![-5.0, 0.5, 7.0];
+        c.project(&mut x);
+        assert_eq!(x, vec![-1.0, 0.5, 1.0]);
+        assert!(c.contains(&x, 1e-12));
+    }
+
+    #[test]
+    fn constraint_dispatch_and_contains() {
+        let mut x = vec![3.0, 4.0];
+        let c = Constraint::L2Ball { radius: 1.0 };
+        assert!(!c.contains(&x, 0.0));
+        c.project(&mut x);
+        assert!(c.contains(&x, 1e-12));
+        assert_eq!(c.tag(), "l2");
+        assert_eq!(c.radius(), 1.0);
+
+        let u = Constraint::Unconstrained;
+        let mut y = vec![1e9];
+        u.project(&mut y);
+        assert_eq!(y, vec![1e9]);
+        assert!(u.contains(&y, 0.0));
+    }
+
+    #[test]
+    fn soft_threshold_shrinks() {
+        let mut x = vec![3.0, -0.5, 0.0];
+        soft_threshold(&mut x, 1.0);
+        assert_eq!(x, vec![2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn idempotent_projections() {
+        let mut rng = Rng::new(3);
+        for c in [
+            Constraint::L2Ball { radius: 0.8 },
+            Constraint::L1Ball { radius: 0.8 },
+        ] {
+            let mut x = rng.gaussians(10);
+            c.project(&mut x);
+            let once = x.clone();
+            c.project(&mut x);
+            for (a, b) in x.iter().zip(&once) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Artifact registry + PJRT execution engine.
+//!
+//! The engine owns one PJRT CPU client and one compiled executable per
+//! manifest entry. Dispatch is by op name; input shapes are validated
+//! against the manifest signature before execution so shape bugs surface as
+//! errors, not garbage numerics.
+
+use super::literal::{self, Value};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Declared signature of one artifact (from manifest.json).
+#[derive(Clone, Debug)]
+pub struct OpSignature {
+    pub name: String,
+    pub file: String,
+    /// per-input (dims, dtype tag) — dims [] means scalar
+    pub inputs: Vec<(Vec<usize>, String)>,
+    /// number of tuple outputs
+    pub outputs: usize,
+}
+
+struct CompiledOp {
+    sig: OpSignature,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT engine: client + compiled artifact registry.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    ops: HashMap<String, CompiledOp>,
+    pub manifest_meta: ManifestMeta,
+    pub dir: PathBuf,
+}
+
+/// Top-level manifest metadata (canonical shapes the artifacts were built
+/// for — the backend uses these to decide PJRT vs native dispatch).
+#[derive(Clone, Debug, Default)]
+pub struct ManifestMeta {
+    pub n: usize,
+    pub d: usize,
+    pub rs: Vec<usize>,
+    pub chunk_t: usize,
+    pub pw_t: usize,
+}
+
+impl Engine {
+    /// Load + compile every artifact listed in `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        let meta = ManifestMeta {
+            n: json.req("n")?.as_usize().context("manifest n")?,
+            d: json.req("d")?.as_usize().context("manifest d")?,
+            rs: json
+                .req("rs")?
+                .as_arr()
+                .context("manifest rs")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            chunk_t: json.req("chunk_t")?.as_usize().context("chunk_t")?,
+            pw_t: json.req("pw_t")?.as_usize().context("pw_t")?,
+        };
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut ops = HashMap::new();
+        for op in json.req("ops")?.as_arr().context("manifest ops")? {
+            let sig = parse_signature(op)?;
+            let path = dir.join(&sig.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path utf8")?,
+            )
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", sig.name))?;
+            ops.insert(sig.name.clone(), CompiledOp { sig, exe });
+        }
+        Ok(Engine {
+            client,
+            ops,
+            manifest_meta: meta,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Default artifact directory: $HDPW_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("HDPW_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn has_op(&self, name: &str) -> bool {
+        self.ops.contains_key(name)
+    }
+
+    pub fn op_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.ops.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn signature(&self, name: &str) -> Option<&OpSignature> {
+        self.ops.get(name).map(|c| &c.sig)
+    }
+
+    /// Execute an artifact. Inputs are shape/dtype-checked against the
+    /// manifest signature; outputs come back as flat f64 vectors (all
+    /// artifact outputs are f64 arrays or scalars).
+    pub fn execute(&self, name: &str, inputs: &[Value]) -> Result<Vec<Vec<f64>>> {
+        let op = self
+            .ops
+            .get(name)
+            .with_context(|| format!("no artifact named {name:?} (have: {:?})", self.op_names()))?;
+        // validate
+        if inputs.len() != op.sig.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                op.sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (val, (dims, dtype))) in inputs.iter().zip(&op.sig.inputs).enumerate() {
+            if &val.dims() != dims || val.dtype_tag() != dtype {
+                bail!(
+                    "{name}: input {i} is {:?}/{} but manifest wants {:?}/{}",
+                    val.dims(),
+                    val.dtype_tag(),
+                    dims,
+                    dtype
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Value::to_literal)
+            .collect::<Result<_>>()?;
+        let result = op.exe.execute::<xla::Literal>(&literals)?;
+        let out = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple
+        let parts = out.to_tuple()?;
+        if parts.len() != op.sig.outputs {
+            bail!(
+                "{name}: artifact returned {} outputs, manifest says {}",
+                parts.len(),
+                op.sig.outputs
+            );
+        }
+        parts.iter().map(literal::literal_to_f64s).collect()
+    }
+}
+
+fn parse_signature(op: &Json) -> Result<OpSignature> {
+    let name = op.req("name")?.as_str().context("op name")?.to_string();
+    let file = op.req("file")?.as_str().context("op file")?.to_string();
+    let mut inputs = Vec::new();
+    for inp in op.req("inputs")?.as_arr().context("op inputs")? {
+        let dims: Vec<usize> = inp
+            .req("shape")?
+            .as_arr()
+            .context("input shape")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let dtype = inp
+            .req("dtype")?
+            .as_str()
+            .context("input dtype")?
+            .to_string();
+        inputs.push((dims, dtype));
+    }
+    let outputs = op.req("outputs")?.as_usize().context("op outputs")?;
+    Ok(OpSignature {
+        name,
+        file,
+        inputs,
+        outputs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signature_parsing() {
+        let j = Json::parse(
+            r#"{"name": "op1", "file": "op1.hlo.txt",
+                "inputs": [{"shape": [4, 2], "dtype": "f64"},
+                           {"shape": [], "dtype": "f64"}],
+                "outputs": 2}"#,
+        )
+        .unwrap();
+        let sig = parse_signature(&j).unwrap();
+        assert_eq!(sig.name, "op1");
+        assert_eq!(sig.inputs.len(), 2);
+        assert_eq!(sig.inputs[0], (vec![4, 2], "f64".to_string()));
+        assert_eq!(sig.inputs[1], (vec![], "f64".to_string()));
+        assert_eq!(sig.outputs, 2);
+    }
+
+    #[test]
+    fn signature_missing_field_errors() {
+        let j = Json::parse(r#"{"name": "x"}"#).unwrap();
+        assert!(parse_signature(&j).is_err());
+    }
+
+    #[test]
+    fn default_dir_env_override() {
+        // NOTE: env-var manipulation is process-global; keep this the only
+        // test touching HDPW_ARTIFACTS.
+        std::env::set_var("HDPW_ARTIFACTS", "/tmp/some_artifacts");
+        assert_eq!(
+            Engine::default_dir(),
+            PathBuf::from("/tmp/some_artifacts")
+        );
+        std::env::remove_var("HDPW_ARTIFACTS");
+        assert_eq!(Engine::default_dir(), PathBuf::from("artifacts"));
+    }
+
+    #[test]
+    fn load_missing_dir_is_helpful() {
+        let msg = match Engine::load(Path::new("/nonexistent/path")) {
+            Ok(_) => panic!("expected error"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

@@ -1,0 +1,144 @@
+//! Thread-safe handle to the PJRT engine.
+//!
+//! The `xla` crate's PJRT client is `Rc`-based (neither `Send` nor `Sync`),
+//! so the [`Engine`] lives on a dedicated actor thread; this handle is a
+//! cloneable, `Send + Sync` facade that forwards execute requests over a
+//! channel and blocks for the reply. Manifest metadata and op signatures are
+//! snapshotted at spawn so lookups never cross the channel.
+
+use super::engine::{Engine, ManifestMeta, OpSignature};
+use super::literal::Value;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+enum Request {
+    Execute {
+        op: String,
+        inputs: Vec<Value>,
+        reply: mpsc::Sender<Result<Vec<Vec<f64>>>>,
+    },
+    Shutdown,
+}
+
+struct Shared {
+    tx: std::sync::Mutex<mpsc::Sender<Request>>,
+    meta: ManifestMeta,
+    signatures: HashMap<String, OpSignature>,
+    dir: PathBuf,
+}
+
+/// Cloneable, thread-safe engine facade.
+#[derive(Clone)]
+pub struct EngineHandle {
+    shared: Arc<Shared>,
+}
+
+impl EngineHandle {
+    /// Load artifacts on a fresh actor thread. Fails fast (before
+    /// returning) if the manifest is missing or any artifact fails to
+    /// compile.
+    pub fn spawn(dir: &Path) -> Result<EngineHandle> {
+        let (ready_tx, ready_rx) = mpsc::channel();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let dir_owned = dir.to_path_buf();
+        std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let engine = match Engine::load(&dir_owned) {
+                    Ok(e) => {
+                        let sigs: HashMap<String, OpSignature> = e
+                            .op_names()
+                            .iter()
+                            .map(|n| (n.to_string(), e.signature(n).unwrap().clone()))
+                            .collect();
+                        let _ = ready_tx.send(Ok((e.manifest_meta.clone(), sigs)));
+                        e
+                    }
+                    Err(err) => {
+                        let _ = ready_tx.send(Err(err));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Execute { op, inputs, reply } => {
+                            let _ = reply.send(engine.execute(&op, &inputs));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        let (meta, signatures) = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during load"))??;
+        Ok(EngineHandle {
+            shared: Arc::new(Shared {
+                tx: std::sync::Mutex::new(tx),
+                meta,
+                signatures,
+                dir: dir.to_path_buf(),
+            }),
+        })
+    }
+
+    pub fn meta(&self) -> &ManifestMeta {
+        &self.shared.meta
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.shared.dir
+    }
+
+    pub fn has_op(&self, name: &str) -> bool {
+        self.shared.signatures.contains_key(name)
+    }
+
+    pub fn signature(&self, name: &str) -> Option<&OpSignature> {
+        self.shared.signatures.get(name)
+    }
+
+    pub fn op_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.shared.signatures.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Execute an artifact on the engine thread (blocking).
+    pub fn execute(&self, op: &str, inputs: Vec<Value>) -> Result<Vec<Vec<f64>>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let tx = self.shared.tx.lock().unwrap();
+            tx.send(Request::Execute {
+                op: op.to_string(),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread dropped the reply"))?
+    }
+
+    pub fn shutdown(&self) {
+        if let Ok(tx) = self.shared.tx.lock() {
+            let _ = tx.send(Request::Shutdown);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spawn_on_missing_dir_errors() {
+        assert!(EngineHandle::spawn(Path::new("/nonexistent/x")).is_err());
+    }
+
+    // Happy-path behavior is covered by rust/tests/pjrt_parity.rs (needs
+    // generated artifacts).
+}

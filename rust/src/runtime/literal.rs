@@ -1,0 +1,129 @@
+//! Conversions between the native [`Mat`]/vector types and XLA literals.
+//!
+//! `Mat` is row-major; XLA's default layout is also major-to-minor row-major,
+//! so the byte payloads line up and conversions are a reshape over a flat
+//! copy.
+
+use crate::linalg::Mat;
+use anyhow::Result;
+
+/// Value passed into / received from a compiled artifact.
+#[derive(Clone, Debug)]
+pub enum Value {
+    /// 0-d f64 scalar.
+    Scalar(f64),
+    /// 1-d f64 vector.
+    Vec(Vec<f64>),
+    /// 2-d f64 row-major matrix.
+    Mat(Mat),
+    /// 2-d i32 row-major matrix (sample index blocks).
+    MatI32 {
+        rows: usize,
+        cols: usize,
+        data: Vec<i32>,
+    },
+    /// 1-d i64 vector (shape metadata etc.).
+    VecI64(Vec<i64>),
+}
+
+impl Value {
+    /// Shape as a dims list (empty = scalar).
+    pub fn dims(&self) -> Vec<usize> {
+        match self {
+            Value::Scalar(_) => vec![],
+            Value::Vec(v) => vec![v.len()],
+            Value::Mat(m) => vec![m.rows, m.cols],
+            Value::MatI32 { rows, cols, .. } => vec![*rows, *cols],
+            Value::VecI64(v) => vec![v.len()],
+        }
+    }
+
+    pub fn dtype_tag(&self) -> &'static str {
+        match self {
+            Value::MatI32 { .. } => "i32",
+            Value::VecI64(_) => "i64",
+            _ => "f64",
+        }
+    }
+
+    /// Convert to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Value::Scalar(x) => xla::Literal::scalar(*x),
+            Value::Vec(v) => xla::Literal::vec1(v),
+            Value::Mat(m) => {
+                xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?
+            }
+            Value::MatI32 { rows, cols, data } => {
+                xla::Literal::vec1(data).reshape(&[*rows as i64, *cols as i64])?
+            }
+            Value::VecI64(v) => xla::Literal::vec1(v),
+        })
+    }
+}
+
+/// Read a literal back as an f64 vector (works for any f64 array shape).
+pub fn literal_to_f64s(lit: &xla::Literal) -> Result<Vec<f64>> {
+    Ok(lit.to_vec::<f64>()?)
+}
+
+/// Read a literal back as a Mat with the given shape.
+pub fn literal_to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let data = literal_to_f64s(lit)?;
+    anyhow::ensure!(
+        data.len() == rows * cols,
+        "literal has {} elems, want {}x{}",
+        data.len(),
+        rows,
+        cols
+    );
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+/// Read a scalar f64 result.
+pub fn literal_to_scalar(lit: &xla::Literal) -> Result<f64> {
+    let v = literal_to_f64s(lit)?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_and_dtypes() {
+        assert_eq!(Value::Scalar(1.0).dims(), Vec::<usize>::new());
+        assert_eq!(Value::Vec(vec![1.0; 3]).dims(), vec![3]);
+        let m = Mat::zeros(2, 5);
+        assert_eq!(Value::Mat(m).dims(), vec![2, 5]);
+        let i = Value::MatI32 {
+            rows: 4,
+            cols: 2,
+            data: vec![0; 8],
+        };
+        assert_eq!(i.dims(), vec![4, 2]);
+        assert_eq!(i.dtype_tag(), "i32");
+        assert_eq!(Value::Scalar(0.0).dtype_tag(), "f64");
+    }
+
+    #[test]
+    fn literal_roundtrip_f64() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let lit = Value::Mat(m.clone()).to_literal().unwrap();
+        let back = literal_to_mat(&lit, 2, 3).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn literal_scalar_roundtrip() {
+        let lit = Value::Scalar(2.5).to_literal().unwrap();
+        assert_eq!(literal_to_scalar(&lit).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        let lit = Value::Vec(vec![1.0; 6]).to_literal().unwrap();
+        assert!(literal_to_mat(&lit, 2, 4).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime bridge: load AOT artifacts, compile once, execute on the
+//! request path.
+//!
+//! `make artifacts` (python/compile/aot.py) writes HLO-text modules plus
+//! `manifest.json`; [`Engine::load`] parses the manifest, compiles every
+//! artifact on a PJRT CPU client and exposes typed execution entry points.
+//! Python is never involved at runtime — the `hdpw` binary plus the
+//! `artifacts/` directory is a complete deployment.
+
+pub mod literal;
+pub mod engine;
+pub mod handle;
+
+pub use engine::{Engine, OpSignature};
+pub use handle::EngineHandle;

@@ -1,0 +1,128 @@
+//! CountSketch: each input row is hashed to one output row with a random
+//! sign. Computing `SA` costs O(nnz(A)) — the fastest construction in
+//! Table 2 and the one the paper's own experiments use.
+
+use super::Sketch;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+pub struct CountSketch {
+    s: usize,
+    /// target row for each input row
+    bucket: Vec<u32>,
+    /// +-1 sign for each input row
+    sign: Vec<f64>,
+}
+
+impl CountSketch {
+    pub fn new(s: usize, n: usize, rng: &mut Rng) -> Self {
+        assert!(s > 0 && s <= u32::MAX as usize);
+        let bucket = (0..n).map(|_| rng.below(s) as u32).collect();
+        let sign = rng.signs(n);
+        CountSketch { s, bucket, sign }
+    }
+}
+
+impl Sketch for CountSketch {
+    fn rows(&self) -> usize {
+        self.s
+    }
+
+    fn apply(&self, a: &Mat) -> Mat {
+        assert_eq!(a.rows, self.bucket.len());
+        let mut out = Mat::zeros(self.s, a.cols);
+        for i in 0..a.rows {
+            let dst = self.bucket[i] as usize;
+            let sg = self.sign[i];
+            let row = a.row(i);
+            let orow = out.row_mut(dst);
+            if sg > 0.0 {
+                for (o, v) in orow.iter_mut().zip(row) {
+                    *o += v;
+                }
+            } else {
+                for (o, v) in orow.iter_mut().zip(row) {
+                    *o -= v;
+                }
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "countsketch"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_shape() {
+        let mut rng = Rng::new(1);
+        let cs = CountSketch::new(16, 100, &mut rng);
+        let a = Mat::gaussian(100, 4, &mut rng);
+        let sa = cs.apply(&a);
+        assert_eq!((sa.rows, sa.cols), (16, 4));
+    }
+
+    #[test]
+    fn single_row_lands_in_one_bucket_with_sign() {
+        let mut rng = Rng::new(2);
+        let cs = CountSketch::new(8, 1, &mut rng);
+        let a = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let sa = cs.apply(&a);
+        let mut nonzero_rows = 0;
+        for i in 0..8 {
+            let nrm: f64 = sa.row(i).iter().map(|v| v.abs()).sum();
+            if nrm > 0.0 {
+                nonzero_rows += 1;
+                let s = sa.at(i, 0).signum();
+                assert_eq!(sa.row(i), &[s * 1.0, s * 2.0, s * 3.0]);
+            }
+        }
+        assert_eq!(nonzero_rows, 1);
+    }
+
+    #[test]
+    fn linearity() {
+        let mut rng = Rng::new(3);
+        let cs = CountSketch::new(32, 50, &mut rng);
+        let a = Mat::gaussian(50, 3, &mut rng);
+        let b = Mat::gaussian(50, 3, &mut rng);
+        let mut apb = a.clone();
+        for (x, y) in apb.data.iter_mut().zip(&b.data) {
+            *x += y;
+        }
+        let sa = cs.apply(&a);
+        let sb = cs.apply(&b);
+        let sab = cs.apply(&apb);
+        for i in 0..sab.data.len() {
+            assert!((sab.data[i] - sa.data[i] - sb.data[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn norm_preserved_in_expectation() {
+        // E||SAx||^2 = ||Ax||^2; check the empirical mean over fresh sketches.
+        let mut rng = Rng::new(4);
+        let a = Mat::gaussian(256, 4, &mut rng);
+        let x = rng.gaussians(4);
+        let ax = crate::linalg::blas::gemv(&a, &x);
+        let target: f64 = ax.iter().map(|v| v * v).sum();
+        let mut acc = 0.0;
+        let trials = 200;
+        for _ in 0..trials {
+            let cs = CountSketch::new(64, 256, &mut rng);
+            let sa = cs.apply(&a);
+            let sax = crate::linalg::blas::gemv(&sa, &x);
+            acc += sax.iter().map(|v| v * v).sum::<f64>();
+        }
+        let mean = acc / trials as f64;
+        assert!(
+            (mean / target - 1.0).abs() < 0.1,
+            "mean {mean} vs target {target}"
+        );
+    }
+}

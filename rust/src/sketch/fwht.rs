@@ -1,0 +1,258 @@
+//! In-place fast Walsh-Hadamard transform — the native counterpart of the
+//! Pallas `fwht` kernel (python/compile/kernels/fwht.py).
+//!
+//! The orthonormal convention matches the paper's Definition 2:
+//! H = H_n / sqrt(n), so `fwht` is an involution and preserves l2 norms.
+//! The matrix variant transforms all columns at once by processing whole
+//! rows per butterfly (row-major friendly: the inner loop is a contiguous
+//! row +- row operation, vectorizable and parallel over column panels).
+
+use crate::linalg::Mat;
+use crate::util::threadpool::{default_threads, parallel_for_each_index};
+
+/// In-place FWHT of a single vector (len must be a power of two), including
+/// the 1/sqrt(n) normalization.
+pub fn fwht_vec(x: &mut [f64]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fwht length must be a power of two");
+    let mut h = 1;
+    while h < n {
+        let step = 2 * h;
+        for i in (0..n).step_by(step) {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+        }
+        h = step;
+    }
+    let scale = 1.0 / (n as f64).sqrt();
+    for v in x {
+        *v *= scale;
+    }
+}
+
+/// In-place FWHT along axis 0 of a row-major matrix (rows must be a power of
+/// two): every column is transformed. The butterfly works on whole rows, so
+/// the inner loop is contiguous; columns are implicitly vectorized.
+pub fn fwht_mat(a: &mut Mat) {
+    let n = a.rows;
+    let d = a.cols;
+    assert!(n.is_power_of_two(), "fwht rows must be a power of two");
+    let threads = if n * d > 1 << 15 { default_threads() } else { 1 };
+    if threads <= 1 || d < 2 {
+        fwht_rows(&mut a.data, n, d, 0, d);
+        let scale = 1.0 / (n as f64).sqrt();
+        for v in &mut a.data {
+            *v *= scale;
+        }
+        return;
+    }
+    // parallel over column panels: each worker transforms a [0..n) x panel
+    // strip independently (butterflies never mix columns).
+    let panel = d.div_ceil(threads).max(8);
+    let npanels = d.div_ceil(panel);
+    struct SendPtr(*mut f64);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    impl SendPtr {
+        fn get(&self) -> *mut f64 {
+            self.0
+        }
+    }
+    let ptr = SendPtr(a.data.as_mut_ptr());
+    parallel_for_each_index(npanels, threads, |pi| {
+        let lo = pi * panel;
+        let hi = (lo + panel).min(d);
+        let data = unsafe { std::slice::from_raw_parts_mut(ptr.get(), n * d) };
+        fwht_rows(data, n, d, lo, hi);
+        let scale = 1.0 / (n as f64).sqrt();
+        for i in 0..n {
+            for v in &mut data[i * d + lo..i * d + hi] {
+                *v *= scale;
+            }
+        }
+    });
+}
+
+/// Butterfly over rows restricted to columns [c0, c1).
+///
+/// PERF: radix-4 — two radix-2 stages fused per pass, halving the number of
+/// sweeps over the matrix (the transform is memory-bound; see
+/// EXPERIMENTS.md §Perf). For odd log2(n) a single radix-2 stage runs first.
+fn fwht_rows(data: &mut [f64], n: usize, d: usize, c0: usize, c1: usize) {
+    let mut h = 1;
+    // leading radix-2 stage when log2(n) is odd
+    if n.trailing_zeros() % 2 == 1 {
+        for j in (0..n).step_by(2) {
+            let (r0, r1) = (j * d, (j + 1) * d);
+            for c in c0..c1 {
+                let a = data[r0 + c];
+                let b = data[r1 + c];
+                data[r0 + c] = a + b;
+                data[r1 + c] = a - b;
+            }
+        }
+        h = 2;
+    }
+    // radix-4 stages: combine butterflies at distance h and 2h
+    while h < n {
+        let step = 4 * h;
+        for i in (0..n).step_by(step) {
+            for j in i..i + h {
+                let (r0, r1, r2, r3) =
+                    (j * d, (j + h) * d, (j + 2 * h) * d, (j + 3 * h) * d);
+                for c in c0..c1 {
+                    let a = data[r0 + c];
+                    let b = data[r1 + c];
+                    let cc = data[r2 + c];
+                    let dd = data[r3 + c];
+                    let apb = a + b;
+                    let amb = a - b;
+                    let cpd = cc + dd;
+                    let cmd = cc - dd;
+                    data[r0 + c] = apb + cpd;
+                    data[r1 + c] = amb + cmd;
+                    data[r2 + c] = apb - cpd;
+                    data[r3 + c] = amb - cmd;
+                }
+            }
+        }
+        h = step;
+    }
+}
+
+/// The paper's Randomized Hadamard Transform HD: flip row signs by the
+/// Rademacher vector, then FWHT. Operates in place.
+pub fn randomized_hadamard(a: &mut Mat, signs: &[f64]) {
+    assert_eq!(a.rows, signs.len());
+    for i in 0..a.rows {
+        let s = signs[i];
+        if s < 0.0 {
+            for v in a.row_mut(i) {
+                *v = -*v;
+            }
+        }
+    }
+    fwht_mat(a);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn vec_matches_explicit_h2() {
+        let mut x = vec![1.0, 2.0];
+        fwht_vec(&mut x);
+        let s = 1.0 / 2f64.sqrt();
+        assert!((x[0] - 3.0 * s).abs() < 1e-15);
+        assert!((x[1] - (-1.0) * s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn involution_preserves_input() {
+        let mut rng = Rng::new(1);
+        let orig = rng.gaussians(256);
+        let mut x = orig.clone();
+        fwht_vec(&mut x);
+        fwht_vec(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn preserves_l2_norm() {
+        let mut rng = Rng::new(2);
+        let mut x = rng.gaussians(512);
+        let before = crate::linalg::blas::nrm2(&x);
+        fwht_vec(&mut x);
+        let after = crate::linalg::blas::nrm2(&x);
+        assert!((before - after).abs() < 1e-10);
+    }
+
+    #[test]
+    fn mat_transform_matches_per_column_vec_transform() {
+        let mut rng = Rng::new(3);
+        let mut m = Mat::gaussian(128, 5, &mut rng);
+        let cols: Vec<Vec<f64>> = (0..5).map(|j| m.col(j)).collect();
+        fwht_mat(&mut m);
+        for (j, col) in cols.into_iter().enumerate() {
+            let mut c = col;
+            fwht_vec(&mut c);
+            for i in 0..128 {
+                assert!((m.at(i, j) - c[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn mat_parallel_path_matches_serial() {
+        let mut rng = Rng::new(4);
+        let big = Mat::gaussian(1024, 64, &mut rng); // crosses the parallel threshold
+        let mut par = big.clone();
+        fwht_mat(&mut par);
+        // serial reference: per column
+        for j in 0..big.cols {
+            let mut c = big.col(j);
+            fwht_vec(&mut c);
+            for i in 0..big.rows {
+                assert!((par.at(i, j) - c[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn randomized_hadamard_is_orthogonal() {
+        let mut rng = Rng::new(5);
+        let a = Mat::gaussian(256, 4, &mut rng);
+        let signs = rng.signs(256);
+        let mut hd = a.clone();
+        randomized_hadamard(&mut hd, &signs);
+        // norms of each column preserved
+        for j in 0..4 {
+            let n0 = crate::linalg::blas::nrm2(&a.col(j));
+            let n1 = crate::linalg::blas::nrm2(&hd.col(j));
+            assert!((n0 - n1).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn randomized_hadamard_flattens_row_norms() {
+        // Theorem 1: after HD, max row norm of an orthogonal-ish matrix is
+        // O(sqrt(d/n) * log n). Build a spiky matrix (identity block) and
+        // check the max row norm drops dramatically.
+        let n = 1024;
+        let d = 8;
+        let mut a = Mat::zeros(n, d);
+        for j in 0..d {
+            *a.at_mut(j, j) = 1.0; // all mass on the first d rows
+        }
+        let mut rng = Rng::new(6);
+        let signs = rng.signs(n);
+        let max_before = (0..n)
+            .map(|i| crate::linalg::blas::nrm2(a.row(i)))
+            .fold(0.0, f64::max);
+        randomized_hadamard(&mut a, &signs);
+        let max_after = (0..n)
+            .map(|i| crate::linalg::blas::nrm2(a.row(i)))
+            .fold(0.0, f64::max);
+        assert!((max_before - 1.0).abs() < 1e-12);
+        // perfectly spread would be sqrt(d/n) ~ 0.088; allow the log factor
+        assert!(
+            max_after < 0.5,
+            "HD failed to spread rows: max row norm {max_after}"
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_pow2_panics() {
+        let mut x = vec![0.0; 3];
+        fwht_vec(&mut x);
+    }
+}

@@ -1,0 +1,61 @@
+//! Dense Gaussian sketch: S_ij ~ N(0, 1/s). The classical JL embedding —
+//! O(n d s) to apply (a gemm), listed in Table 2 as the slow-but-simple
+//! baseline construction.
+
+use super::Sketch;
+use crate::linalg::{blas, Mat};
+use crate::util::rng::Rng;
+
+pub struct GaussianSketch {
+    mat: Mat, // s x n, pre-scaled by 1/sqrt(s)
+}
+
+impl GaussianSketch {
+    pub fn new(s: usize, n: usize, rng: &mut Rng) -> Self {
+        let mut mat = Mat::gaussian(s, n, rng);
+        let scale = 1.0 / (s as f64).sqrt();
+        mat.scale(scale);
+        GaussianSketch { mat }
+    }
+}
+
+impl Sketch for GaussianSketch {
+    fn rows(&self) -> usize {
+        self.mat.rows
+    }
+
+    fn apply(&self, a: &Mat) -> Mat {
+        blas::gemm(&self.mat, a)
+    }
+
+    fn name(&self) -> &'static str {
+        "gaussian"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_scaling() {
+        let mut rng = Rng::new(1);
+        let g = GaussianSketch::new(64, 256, &mut rng);
+        assert_eq!(g.rows(), 64);
+        // entries should have variance ~ 1/s
+        let var = g.mat.data.iter().map(|v| v * v).sum::<f64>() / g.mat.data.len() as f64;
+        assert!((var - 1.0 / 64.0).abs() < 0.2 / 64.0);
+    }
+
+    #[test]
+    fn preserves_norms_on_average() {
+        let mut rng = Rng::new(2);
+        let a = Mat::gaussian(512, 6, &mut rng);
+        let g = GaussianSketch::new(300, 512, &mut rng);
+        let sa = g.apply(&a);
+        let x = rng.gaussians(6);
+        let ax = blas::nrm2(&blas::gemv(&a, &x));
+        let sax = blas::nrm2(&blas::gemv(&sa, &x));
+        assert!((sax / ax - 1.0).abs() < 0.25);
+    }
+}

@@ -1,0 +1,106 @@
+//! Subsampled Randomized Hadamard Transform (Tropp 2011):
+//! S = sqrt(n/s) * P H D, where D is a Rademacher diagonal, H the
+//! orthonormal Walsh-Hadamard matrix and P samples s rows uniformly.
+//! Applying to an n x d matrix costs O(nd log n) via the FWHT.
+
+use super::fwht::randomized_hadamard;
+use super::Sketch;
+use crate::linalg::matrix::next_pow2;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+pub struct Srht {
+    s: usize,
+    n: usize,
+    n_pad: usize,
+    signs: Vec<f64>,
+    picked: Vec<usize>,
+}
+
+impl Srht {
+    pub fn new(s: usize, n: usize, rng: &mut Rng) -> Self {
+        let n_pad = next_pow2(n);
+        let signs = rng.signs(n_pad);
+        let picked = (0..s).map(|_| rng.below(n_pad)).collect();
+        Srht {
+            s,
+            n,
+            n_pad,
+            signs,
+            picked,
+        }
+    }
+}
+
+impl Sketch for Srht {
+    fn rows(&self) -> usize {
+        self.s
+    }
+
+    fn apply(&self, a: &Mat) -> Mat {
+        assert_eq!(a.rows, self.n);
+        // pad to a power of two (H is only defined for 2^k)
+        let mut padded = if self.n_pad == self.n {
+            a.clone()
+        } else {
+            a.pad_rows(self.n_pad)
+        };
+        randomized_hadamard(&mut padded, &self.signs);
+        let mut out = padded.gather_rows(&self.picked);
+        // variance correction: uniform row sampling of an orthonormal mixing
+        out.scale((self.n_pad as f64 / self.s as f64).sqrt());
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "srht"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+
+    #[test]
+    fn shape_with_padding() {
+        let mut rng = Rng::new(1);
+        let srht = Srht::new(50, 300, &mut rng); // 300 pads to 512
+        let a = Mat::gaussian(300, 4, &mut rng);
+        let sa = srht.apply(&a);
+        assert_eq!((sa.rows, sa.cols), (50, 4));
+    }
+
+    #[test]
+    fn norm_preserved_in_expectation() {
+        let mut rng = Rng::new(2);
+        let a = Mat::gaussian(256, 4, &mut rng);
+        let x = rng.gaussians(4);
+        let target: f64 = {
+            let ax = blas::gemv(&a, &x);
+            ax.iter().map(|v| v * v).sum()
+        };
+        let mut acc = 0.0;
+        let trials = 100;
+        for _ in 0..trials {
+            let srht = Srht::new(128, 256, &mut rng);
+            let sa = srht.apply(&a);
+            let sax = blas::gemv(&sa, &x);
+            acc += sax.iter().map(|v| v * v).sum::<f64>();
+        }
+        let mean = acc / trials as f64;
+        assert!(
+            (mean / target - 1.0).abs() < 0.15,
+            "mean {mean} vs target {target}"
+        );
+    }
+
+    #[test]
+    fn works_when_n_is_pow2() {
+        let mut rng = Rng::new(3);
+        let srht = Srht::new(64, 512, &mut rng);
+        let a = Mat::gaussian(512, 3, &mut rng);
+        let sa = srht.apply(&a);
+        assert_eq!(sa.rows, 64);
+    }
+}

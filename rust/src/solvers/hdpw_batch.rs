@@ -1,0 +1,217 @@
+//! HDpwBatchSGD — Algorithm 2, the paper's low-precision contribution.
+//!
+//! Two-step preconditioning (sketch-QR for R, then the Randomized Hadamard
+//! Transform on [A | b]) followed by *uniform* mini-batch SGD in the
+//! R-metric. Theorem 3: T = Theta(d log n / (r eps^2)) iterations — the
+//! iteration count divides by the batch size r, the paper's optimal
+//! speed-up property (Figure 1).
+//!
+//! The output iterate is the running average x_T^avg = (1/T) sum x_t, as in
+//! the algorithm statement; the trace reports f at the averaged iterate.
+
+use super::{
+    estimate_sigma_sq, theory_step_size, timed, Solver, SolveReport, SolverOpts, TraceRecorder,
+};
+use crate::backend::Backend;
+use crate::data::Dataset;
+use crate::precond::{hd_transform, precondition};
+use crate::sketch::default_sketch_size_for;
+use crate::util::rng::Rng;
+use crate::util::stats::Timer;
+
+pub struct HdpwBatchSgd;
+
+impl Solver for HdpwBatchSgd {
+    fn name(&self) -> &'static str {
+        "hdpwbatchsgd"
+    }
+
+    fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport {
+        let mut rng = Rng::new(opts.seed);
+        let d = ds.d();
+        let r = opts.batch_size.max(1);
+        let s = opts
+            .sketch_size
+            .unwrap_or_else(|| default_sketch_size_for(ds.n(), d, opts.sketch));
+
+        // ---- setup: two-step preconditioning (on the solve clock) --------
+        let setup_timer = Timer::start();
+        let pre = precondition(&ds.a, opts.sketch, s, &mut rng);
+        let hd = hd_transform(&ds.a, &ds.b, &mut rng);
+        // constrained runs need the R-metric projector (Step 6's quadratic
+        // subproblem); its eigendecomposition is part of setup.
+        let metric = match opts.constraint {
+            crate::prox::Constraint::Unconstrained => None,
+            _ => Some(crate::prox::metric::MetricProjector::from_r(&pre.r)),
+        };
+        let setup_secs = setup_timer.secs();
+
+        let n_pad = hd.n_pad;
+        let scale = 2.0 * n_pad as f64 / r as f64;
+        let x0 = vec![0.0; d];
+        let f0 = backend.residual_sq(&ds.a, &ds.b, &x0);
+
+        // Theorem-2 fixed step: sigma^2 of single-row gradients, divided by r
+        // for the batch (Lemma: sigma_batch^2 <= sigma^2 / r).
+        let sigma_sq = estimate_sigma_sq(
+            backend, &hd.hda, &hd.hdb, &pre.r, &x0, n_pad, &mut rng,
+        );
+        let r_norm = pre.r.frob_norm();
+        let eta = theory_step_size(opts, sigma_sq / r as f64, f0, opts.max_iters, r_norm);
+
+        let mut rec = TraceRecorder::new(setup_secs, f0);
+        let mut x = x0;
+        let mut xsum = vec![0.0; d];
+        let mut total_t = 0usize;
+        while !rec.should_stop(opts, current_f(backend, ds, &xsum, total_t, &x)) {
+            let t_chunk = opts.chunk.min(opts.max_iters - rec.iters()).max(1);
+            let idx: Vec<Vec<usize>> =
+                (0..t_chunk).map(|_| rng.indices(r, n_pad)).collect();
+            let ((xt, xs), secs) = timed(|| {
+                backend.sgd_chunk(
+                    &hd.hda,
+                    &hd.hdb,
+                    &x,
+                    &pre.pinv,
+                    &idx,
+                    eta,
+                    scale,
+                    &opts.constraint,
+                    metric.as_ref(),
+                )
+            });
+            x = xt;
+            for (acc, v) in xsum.iter_mut().zip(&xs) {
+                *acc += v;
+            }
+            total_t += t_chunk;
+            // evaluate at the averaged iterate (off the clock)
+            let xavg = average(&xsum, total_t);
+            let f = backend.residual_sq(&ds.a, &ds.b, &xavg);
+            rec.record(t_chunk, secs, f);
+        }
+        let xavg = average(&xsum, total_t.max(1));
+        let f = backend.residual_sq(&ds.a, &ds.b, &xavg);
+        rec.finish("hdpwbatchsgd", xavg, f, setup_secs)
+    }
+}
+
+fn average(xsum: &[f64], t: usize) -> Vec<f64> {
+    let inv = 1.0 / t.max(1) as f64;
+    xsum.iter().map(|v| v * inv).collect()
+}
+
+fn current_f(
+    backend: &Backend,
+    ds: &Dataset,
+    xsum: &[f64],
+    t: usize,
+    x: &[f64],
+) -> f64 {
+    if t == 0 {
+        backend.residual_sq(&ds.a, &ds.b, x)
+    } else {
+        backend.residual_sq(&ds.a, &ds.b, &average(xsum, t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::linalg::Mat;
+    use crate::prox::Constraint;
+    use crate::solvers::exact::ground_truth;
+
+    fn dataset(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let a = Mat::gaussian(n, d, &mut rng);
+        let xt = rng.gaussians(d);
+        let mut b = blas::gemv(&a, &xt);
+        for v in &mut b {
+            *v += 1.0 * rng.gaussian();
+        }
+        Dataset {
+            name: "t".into(),
+            a,
+            b,
+            x_star_planted: Some(xt),
+        }
+    }
+
+    #[test]
+    fn converges_to_low_precision_unconstrained() {
+        let ds = dataset(2048, 8, 1);
+        let gt = ground_truth(&ds);
+        let mut opts = SolverOpts::default();
+        opts.batch_size = 32;
+        opts.max_iters = 3000;
+        opts.chunk = 100;
+        opts.seed = 7;
+        let rep = HdpwBatchSgd.solve(&Backend::native(), &ds, &opts);
+        let rel = (rep.f_final - gt.f_star) / gt.f_star;
+        assert!(rel < 0.05, "relative error {rel}");
+        assert!(rep.trace.len() > 2);
+    }
+
+    #[test]
+    fn constrained_iterates_stay_feasible() {
+        let ds = dataset(1024, 6, 2);
+        let gt = ground_truth(&ds);
+        for cons in [
+            Constraint::L2Ball { radius: gt.l2_radius },
+            Constraint::L1Ball { radius: gt.l1_radius },
+        ] {
+            let mut opts = SolverOpts::default();
+            opts.constraint = cons;
+            opts.batch_size = 16;
+            opts.max_iters = 800;
+            opts.chunk = 100;
+            let rep = HdpwBatchSgd.solve(&Backend::native(), &ds, &opts);
+            assert!(cons.contains(&rep.x, 1e-6), "{} violated", cons.tag());
+            let rel = (rep.f_final - gt.f_star) / gt.f_star;
+            assert!(rel < 0.5, "{}: rel {rel}", cons.tag());
+        }
+    }
+
+    #[test]
+    fn batch_size_speedup_on_iterations() {
+        // Figure 1's property: iterations-to-eps roughly halves as r doubles.
+        let ds = dataset(4096, 8, 3);
+        let gt = ground_truth(&ds);
+        let eps = 0.05;
+        let mut iters = Vec::new();
+        for r in [4usize, 16, 64] {
+            let mut opts = SolverOpts::default();
+            opts.batch_size = r;
+            opts.max_iters = 20_000;
+            opts.chunk = 50;
+            opts.seed = 11;
+            opts.f_star = Some(gt.f_star);
+            opts.eps_abs = Some(eps * gt.f_star);
+            let rep = HdpwBatchSgd.solve(&Backend::native(), &ds, &opts);
+            let it = rep
+                .iters_to_rel_err(gt.f_star, eps)
+                .unwrap_or(rep.iters.max(1));
+            iters.push(it as f64);
+        }
+        // r x16 => expect >= ~4x fewer iterations (allow generous slack for
+        // stochastic noise and chunk quantization)
+        assert!(
+            iters[0] / iters[2] > 2.0,
+            "no speed-up with batch size: {iters:?}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = dataset(512, 5, 4);
+        let mut opts = SolverOpts::default();
+        opts.max_iters = 200;
+        opts.chunk = 50;
+        let r1 = HdpwBatchSgd.solve(&Backend::native(), &ds, &opts);
+        let r2 = HdpwBatchSgd.solve(&Backend::native(), &ds, &opts);
+        assert_eq!(r1.x, r2.x);
+        assert_eq!(r1.iters, r2.iters);
+    }
+}

@@ -1,0 +1,133 @@
+//! Iterative Hessian Sketch (Pilanci & Wainwright 2016) — Algorithm 3.
+//!
+//! The high-precision baseline pwGradient improves on: every iteration draws
+//! a *fresh* sketch S^{t+1}, forms M = S^{t+1} A, QR-factors it and takes
+//! the Newton-like step
+//!     x_{t+1} = P_W(x_t - (R_t^T R_t)^{-1} A^T (A x_t - b)).
+//! The re-sketching (O(nnz(A)) or O(nd log n) per iteration, plus a d^2
+//! QR) is exactly the cost pwGradient's frozen sketch removes; the benches
+//! surface this as the per-iteration time gap.
+
+use super::{timed, Solver, SolveReport, SolverOpts, TraceRecorder};
+use crate::backend::Backend;
+use crate::data::Dataset;
+use crate::precond::precondition;
+use crate::sketch::default_sketch_size_for;
+use crate::util::rng::Rng;
+
+pub struct Ihs;
+
+impl Solver for Ihs {
+    fn name(&self) -> &'static str {
+        "ihs"
+    }
+
+    fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport {
+        let mut rng = Rng::new(opts.seed);
+        let d = ds.d();
+        let s = opts
+            .sketch_size
+            .unwrap_or_else(|| default_sketch_size_for(ds.n(), d, opts.sketch));
+        let x0 = vec![0.0; d];
+        let f0 = backend.residual_sq(&ds.a, &ds.b, &x0);
+        // IHS has no setup phase: the sketching cost recurs inside the loop.
+        let mut rec = TraceRecorder::new(0.0, f0);
+        let mut x = x0;
+        let mut f = f0;
+        while !rec.should_stop(opts, f) {
+            let (xn, secs) = timed(|| {
+                // fresh sketch + QR every iteration (the method's signature
+                // cost, kept inside the timed region deliberately)
+                let pre = precondition(&ds.a, opts.sketch, s, &mut rng);
+                let metric = match opts.constraint {
+                    crate::prox::Constraint::Unconstrained => None,
+                    _ => Some(crate::prox::metric::MetricProjector::from_r(&pre.r)),
+                };
+                let g = backend.full_grad(&ds.a, &ds.b, &x);
+                // full_grad returns 2 A^T r; the IHS step applies
+                // (R^T R)^{-1} A^T r, i.e. gd_step with eta = 1/2.
+                backend.gd_step(&x, &pre.pinv, &g, 0.5, &opts.constraint, metric.as_ref())
+            });
+            x = xn;
+            f = backend.residual_sq(&ds.a, &ds.b, &x);
+            rec.record(1, secs, f);
+        }
+        rec.finish("ihs", x, f, 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{blas, Mat};
+    use crate::solvers::exact::ground_truth;
+    use crate::solvers::pw_gradient::PwGradient;
+
+    fn dataset(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let a = Mat::gaussian(n, d, &mut rng);
+        let xt = rng.gaussians(d);
+        let mut b = blas::gemv(&a, &xt);
+        for v in &mut b {
+            *v += 0.05 * rng.gaussian();
+        }
+        Dataset {
+            name: "t".into(),
+            a,
+            b,
+            x_star_planted: Some(xt),
+        }
+    }
+
+    #[test]
+    fn converges_linearly_to_high_precision() {
+        let ds = dataset(2048, 8, 1);
+        let gt = ground_truth(&ds);
+        let mut opts = SolverOpts::default();
+        opts.max_iters = 60;
+        opts.f_star = Some(gt.f_star);
+        opts.eps_abs = Some(1e-10 * gt.f_star);
+        let rep = Ihs.solve(&Backend::native(), &ds, &opts);
+        let rel = (rep.f_final - gt.f_star) / gt.f_star;
+        assert!(rel < 1e-9, "relative error {rel}");
+    }
+
+    #[test]
+    fn per_iteration_cost_exceeds_pw_gradient() {
+        // The paper's complexity claim, observable on a single box: IHS pays
+        // a sketch + QR every step, pwGradient only pays the gradient.
+        let ds = dataset(8192, 16, 2);
+        let mut opts = SolverOpts::default();
+        opts.max_iters = 12;
+        opts.chunk = 1;
+        let ihs = Ihs.solve(&Backend::native(), &ds, &opts);
+        let pw = PwGradient.solve(&Backend::native(), &ds, &opts);
+        // compare marginal per-iteration time (exclude pw's setup, which is
+        // already excluded by construction of the comparison: setup is in
+        // trace[0] for pw, while ihs amortizes nothing)
+        let ihs_per_it = ihs.solve_secs / ihs.iters.max(1) as f64;
+        let pw_per_it = (pw.solve_secs - pw.setup_secs) / pw.iters.max(1) as f64;
+        assert!(
+            ihs_per_it > 1.2 * pw_per_it,
+            "ihs {ihs_per_it}s/it vs pw {pw_per_it}s/it"
+        );
+    }
+
+    #[test]
+    fn pw_gradient_with_eta_half_matches_ihs_fixed_point() {
+        // Both must land on the same optimum (the LS solution).
+        let ds = dataset(1024, 6, 3);
+        let gt = ground_truth(&ds);
+        let mut opts = SolverOpts::default();
+        opts.max_iters = 50;
+        let ihs = Ihs.solve(&Backend::native(), &ds, &opts);
+        let pw = PwGradient.solve(&Backend::native(), &ds, &opts);
+        for j in 0..ds.d() {
+            assert!(
+                (ihs.x[j] - gt.x_star[j]).abs() < 1e-6,
+                "ihs coord {j}"
+            );
+            assert!((pw.x[j] - gt.x_star[j]).abs() < 1e-6, "pw coord {j}");
+        }
+    }
+}

@@ -1,0 +1,442 @@
+//! The solver family: the paper's algorithms plus every baseline its
+//! evaluation compares against.
+//!
+//! | solver              | paper role                          | module        |
+//! |---------------------|-------------------------------------|---------------|
+//! | HDpwBatchSGD        | Algorithm 2 (low precision)         | [`hdpw_batch`]|
+//! | HDpwAccBatchSGD     | Algorithm 6 (accelerated)           | [`hdpw_acc`]  |
+//! | pwGradient          | Algorithm 4 (high precision)        | [`pw_gradient`]|
+//! | IHS                 | Algorithm 3 baseline (P&W 2016)     | [`ihs`]       |
+//! | pwSGD               | Yang et al. 2016 baseline           | [`pwsgd`]     |
+//! | SGD                 | classical baseline                  | [`sgd`]       |
+//! | Adagrad             | classical baseline                  | [`adagrad`]   |
+//! | pwSVRG / SVRG       | high-precision stochastic baseline  | [`svrg`]      |
+//! | Exact (QR)          | ground truth f(x*)                  | [`exact`]     |
+//!
+//! Every solver implements [`Solver`]: it receives a [`Backend`] (PJRT or
+//! native), a [`Dataset`] and [`SolverOpts`], and produces a [`SolveReport`]
+//! with a convergence trace sampled at chunk boundaries (evaluation time is
+//! excluded from the solve clock, mirroring how the paper measures).
+
+pub mod exact;
+pub mod sgd;
+pub mod adagrad;
+pub mod pwsgd;
+pub mod svrg;
+pub mod hdpw_batch;
+pub mod hdpw_acc;
+pub mod pw_gradient;
+pub mod ihs;
+
+pub use adagrad::Adagrad;
+pub use exact::ExactQr;
+pub use hdpw_acc::HdpwAccBatchSgd;
+pub use hdpw_batch::HdpwBatchSgd;
+pub use ihs::Ihs;
+pub use pw_gradient::PwGradient;
+pub use pwsgd::PwSgd;
+pub use sgd::Sgd;
+pub use svrg::Svrg;
+
+use crate::backend::Backend;
+use crate::data::Dataset;
+use crate::prox::Constraint;
+use crate::sketch::SketchKind;
+use crate::util::stats::Timer;
+
+/// Options shared by all solvers.
+#[derive(Clone, Debug)]
+pub struct SolverOpts {
+    pub constraint: Constraint,
+    /// Mini-batch size r (stochastic solvers).
+    pub batch_size: usize,
+    /// Hard cap on iterations (inner steps for stochastic solvers).
+    pub max_iters: usize,
+    /// Stop when f(x) - f_star <= eps_abs (needs f_star).
+    pub eps_abs: Option<f64>,
+    /// Known optimum value (for stopping + relative-error traces).
+    pub f_star: Option<f64>,
+    /// Wall-clock budget for the solve loop (seconds).
+    pub time_budget: f64,
+    /// Sketch construction for preconditioned solvers.
+    pub sketch: SketchKind,
+    /// Sketch rows s; default derived from d when None.
+    pub sketch_size: Option<usize>,
+    /// Fixed step size; solver-specific theory default when None.
+    pub eta: Option<f64>,
+    /// Iterations per trace point (and per PJRT chunk dispatch).
+    pub chunk: usize,
+    pub seed: u64,
+}
+
+impl Default for SolverOpts {
+    fn default() -> Self {
+        SolverOpts {
+            constraint: Constraint::Unconstrained,
+            batch_size: 64,
+            max_iters: 20_000,
+            eps_abs: None,
+            f_star: None,
+            time_budget: 60.0,
+            sketch: SketchKind::CountSketch,
+            sketch_size: None,
+            eta: None,
+            chunk: 50,
+            seed: 1,
+        }
+    }
+}
+
+/// One convergence-trace sample.
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    /// Inner iterations completed.
+    pub iters: usize,
+    /// Cumulative solve seconds (setup included once at iter 0; objective
+    /// evaluations excluded).
+    pub secs: f64,
+    /// f(x) at this point.
+    pub f: f64,
+}
+
+/// Result of one solve.
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    pub solver: String,
+    pub x: Vec<f64>,
+    pub f_final: f64,
+    pub iters: usize,
+    /// Preconditioning / sketching setup cost, already included in trace[0].
+    pub setup_secs: f64,
+    pub solve_secs: f64,
+    pub trace: Vec<TracePoint>,
+}
+
+impl SolveReport {
+    /// Relative error trace against a known optimum: (iters, secs, relerr).
+    pub fn rel_errors(&self, f_star: f64) -> Vec<(f64, f64, f64)> {
+        self.trace
+            .iter()
+            .map(|p| {
+                (
+                    p.iters as f64,
+                    p.secs,
+                    ((p.f - f_star) / f_star.max(1e-300)).max(0.0),
+                )
+            })
+            .collect()
+    }
+
+    /// First time at which relative error drops below eps (None if never).
+    pub fn time_to_rel_err(&self, f_star: f64, eps: f64) -> Option<f64> {
+        self.rel_errors(f_star)
+            .into_iter()
+            .find(|&(_, _, e)| e <= eps)
+            .map(|(_, s, _)| s)
+    }
+
+    /// First iteration count at which relative error drops below eps.
+    pub fn iters_to_rel_err(&self, f_star: f64, eps: f64) -> Option<usize> {
+        self.rel_errors(f_star)
+            .into_iter()
+            .find(|&(_, _, e)| e <= eps)
+            .map(|(i, _, _)| i as usize)
+    }
+}
+
+/// A regression solver.
+pub trait Solver: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport;
+}
+
+/// Solver registry (CLI / coordinator dispatch).
+pub fn by_name(name: &str) -> Option<Box<dyn Solver>> {
+    match name.to_ascii_lowercase().as_str() {
+        "hdpwbatchsgd" | "hdpw_batch_sgd" | "hdpw" => Some(Box::new(HdpwBatchSgd)),
+        "hdpwaccbatchsgd" | "hdpw_acc_batch_sgd" | "hdpw_acc" => {
+            Some(Box::new(HdpwAccBatchSgd))
+        }
+        "pwgradient" | "pw_gradient" => Some(Box::new(PwGradient)),
+        "ihs" => Some(Box::new(Ihs)),
+        "pwsgd" | "pw_sgd" => Some(Box::new(PwSgd)),
+        "sgd" => Some(Box::new(Sgd)),
+        "adagrad" => Some(Box::new(Adagrad)),
+        "svrg" => Some(Box::new(Svrg { preconditioned: false })),
+        "pwsvrg" | "pw_svrg" => Some(Box::new(Svrg { preconditioned: true })),
+        "exact" | "qr" => Some(Box::new(ExactQr)),
+        _ => None,
+    }
+}
+
+pub fn all_names() -> &'static [&'static str] {
+    &[
+        "hdpwbatchsgd",
+        "hdpwaccbatchsgd",
+        "pwgradient",
+        "ihs",
+        "pwsgd",
+        "sgd",
+        "adagrad",
+        "svrg",
+        "pwsvrg",
+        "exact",
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// shared solve-loop machinery
+// ---------------------------------------------------------------------------
+
+/// Tracks the solve clock (setup + per-chunk compute, excluding objective
+/// evaluations) and assembles the trace.
+pub struct TraceRecorder {
+    pub trace: Vec<TracePoint>,
+    solve_secs: f64,
+    iters: usize,
+}
+
+impl TraceRecorder {
+    pub fn new(setup_secs: f64, f0: f64) -> Self {
+        TraceRecorder {
+            trace: vec![TracePoint {
+                iters: 0,
+                secs: setup_secs,
+                f: f0,
+            }],
+            solve_secs: setup_secs,
+            iters: 0,
+        }
+    }
+
+    /// Record a chunk: `secs` of solve time advancing `iters` iterations,
+    /// reaching objective value `f`.
+    pub fn record(&mut self, iters: usize, secs: f64, f: f64) {
+        self.iters += iters;
+        self.solve_secs += secs;
+        self.trace.push(TracePoint {
+            iters: self.iters,
+            secs: self.solve_secs,
+            f,
+        });
+    }
+
+    pub fn iters(&self) -> usize {
+        self.iters
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.solve_secs
+    }
+
+    /// Stop condition shared by all solve loops.
+    pub fn should_stop(&self, opts: &SolverOpts, f: f64) -> bool {
+        if self.iters >= opts.max_iters {
+            return true;
+        }
+        if self.solve_secs >= opts.time_budget {
+            return true;
+        }
+        if let (Some(eps), Some(fs)) = (opts.eps_abs, opts.f_star) {
+            if f - fs <= eps {
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn finish(self, solver: &str, x: Vec<f64>, f: f64, setup_secs: f64) -> SolveReport {
+        SolveReport {
+            solver: solver.to_string(),
+            f_final: f,
+            iters: self.iters,
+            setup_secs,
+            solve_secs: self.solve_secs,
+            trace: self.trace,
+            x,
+        }
+    }
+}
+
+/// Estimate the stochastic-gradient variance sigma^2 of the *preconditioned*
+/// problem at x0 by sampling K single-row gradients y_i = R^{-T} c_i and
+/// computing their empirical variance. Used by the theory step size
+/// (Theorem 2: eta = min(1/(2L), sqrt(D^2 / (2 T sigma^2)))).
+pub fn estimate_sigma_sq(
+    backend: &Backend,
+    hda: &crate::linalg::Mat,
+    hdb: &[f64],
+    r_factor: &crate::linalg::Mat,
+    x0: &[f64],
+    n_universe: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> f64 {
+    let k = 24usize;
+    let d = hda.cols;
+    let mut grads: Vec<Vec<f64>> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let i = rng.below(n_universe);
+        let m = hda.gather_rows(&[i]);
+        let v = [hdb[i]];
+        let c = backend.batch_grad(&m, &v, x0, 2.0 * n_universe as f64);
+        // transform to the y-metric: g = R^{-T} c
+        let g = crate::linalg::tri::solve_upper_t(r_factor, &c);
+        grads.push(g);
+    }
+    let mut mean = vec![0.0; d];
+    for g in &grads {
+        for (m, v) in mean.iter_mut().zip(g) {
+            *m += v / k as f64;
+        }
+    }
+    let mut var = 0.0;
+    for g in &grads {
+        for (m, v) in mean.iter().zip(g) {
+            var += (v - m) * (v - m);
+        }
+    }
+    var / (k as f64 - 1.0)
+}
+
+/// Theorem-2 style fixed step for the preconditioned problem: the
+/// L-smoothness of g(y) = ||Uy - HDb||^2 with kappa(U) = O(1) is ~2, so
+/// 1/(2L) = 1/4; the variance term uses the estimated sigma^2 and the
+/// constraint diameter (or an f(x0)-based surrogate when unconstrained).
+pub fn theory_step_size(
+    opts: &SolverOpts,
+    sigma_sq_batch: f64,
+    f0: f64,
+    t_planned: usize,
+    r_norm: f64,
+) -> f64 {
+    if let Some(eta) = opts.eta {
+        return eta;
+    }
+    let l: f64 = 2.0;
+    // The diameter D_W' lives in the y = Rx metric: a ball of radius rho in
+    // x-space maps to an ellipsoid with radii up to sigma_max(R) * rho, so
+    // the x-space diameter is scaled by `r_norm` (an upper bound on
+    // sigma_max(R), e.g. ||R||_F). The unconstrained surrogate sqrt(f0) is
+    // already in the y-metric (mu ~ 2 strong convexity of g(y) bounds
+    // ||y0 - y*|| <= sqrt(2 (g(y0) - g*) / mu) <= sqrt(f0)).
+    let d_w = opts
+        .constraint
+        .diameter()
+        .map(|d| d * r_norm.max(1.0))
+        .unwrap_or_else(|| f0.sqrt());
+    let var_term =
+        (d_w * d_w / (2.0 * t_planned.max(1) as f64 * sigma_sq_batch.max(1e-300))).sqrt();
+    (1.0 / (2.0 * l)).min(var_term)
+}
+
+/// Timer wrapper for a solve chunk.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.secs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for name in all_names() {
+            assert!(by_name(name).is_some(), "missing {name}");
+        }
+        assert!(by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn registry_aliases() {
+        assert_eq!(by_name("hdpw").unwrap().name(), "hdpwbatchsgd");
+        assert_eq!(by_name("pw_gradient").unwrap().name(), "pwgradient");
+        assert_eq!(by_name("pwsvrg").unwrap().name(), "pwsvrg");
+    }
+
+    #[test]
+    fn trace_recorder_accumulates() {
+        let mut tr = TraceRecorder::new(0.5, 100.0);
+        tr.record(10, 0.2, 50.0);
+        tr.record(10, 0.2, 25.0);
+        assert_eq!(tr.iters(), 20);
+        assert!((tr.secs() - 0.9).abs() < 1e-12);
+        let rep = tr.finish("t", vec![], 25.0, 0.5);
+        assert_eq!(rep.trace.len(), 3);
+        assert_eq!(rep.trace[0].iters, 0);
+        assert!((rep.trace[2].secs - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stop_conditions() {
+        let mut opts = SolverOpts::default();
+        opts.max_iters = 15;
+        opts.time_budget = 1e9;
+        let mut tr = TraceRecorder::new(0.0, 1.0);
+        tr.record(10, 0.0, 1.0);
+        assert!(!tr.should_stop(&opts, 1.0));
+        tr.record(10, 0.0, 1.0);
+        assert!(tr.should_stop(&opts, 1.0)); // iters
+        let mut opts2 = SolverOpts::default();
+        opts2.eps_abs = Some(0.1);
+        opts2.f_star = Some(1.0);
+        let tr2 = TraceRecorder::new(0.0, 2.0);
+        assert!(tr2.should_stop(&opts2, 1.05)); // f close enough
+        assert!(!tr2.should_stop(&opts2, 1.5));
+    }
+
+    #[test]
+    fn report_rel_error_helpers() {
+        let rep = SolveReport {
+            solver: "t".into(),
+            x: vec![],
+            f_final: 1.1,
+            iters: 20,
+            setup_secs: 0.0,
+            solve_secs: 2.0,
+            trace: vec![
+                TracePoint {
+                    iters: 0,
+                    secs: 0.0,
+                    f: 3.0,
+                },
+                TracePoint {
+                    iters: 10,
+                    secs: 1.0,
+                    f: 2.0,
+                },
+                TracePoint {
+                    iters: 20,
+                    secs: 2.0,
+                    f: 1.1,
+                },
+            ],
+        };
+        let errs = rep.rel_errors(1.0);
+        assert!((errs[0].2 - 2.0).abs() < 1e-12);
+        assert_eq!(rep.time_to_rel_err(1.0, 0.5), Some(2.0));
+        assert_eq!(rep.iters_to_rel_err(1.0, 0.5), Some(20));
+        assert_eq!(rep.time_to_rel_err(1.0, 0.01), None);
+    }
+
+    #[test]
+    fn theory_step_caps_at_quarter() {
+        let opts = SolverOpts::default();
+        // tiny variance -> variance term huge -> cap at 1/4
+        assert!((theory_step_size(&opts, 1e-12, 1.0, 100, 1.0) - 0.25).abs() < 1e-12);
+        // huge variance -> small step
+        let eta = theory_step_size(&opts, 1e12, 1.0, 100, 1.0);
+        assert!(eta < 1e-4);
+        // explicit override wins
+        let mut o2 = SolverOpts::default();
+        o2.eta = Some(0.123);
+        assert_eq!(theory_step_size(&o2, 1.0, 1.0, 10, 1.0), 0.123);
+        // constrained diameter scales with the R-metric norm
+        let mut o3 = SolverOpts::default();
+        o3.constraint = crate::prox::Constraint::L2Ball { radius: 1.0 };
+        let small = theory_step_size(&o3, 1e6, 1.0, 100, 1.0);
+        let big = theory_step_size(&o3, 1e6, 1.0, 100, 100.0);
+        assert!(big > 10.0 * small, "metric scaling missing: {small} vs {big}");
+    }
+}

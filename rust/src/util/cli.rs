@@ -1,0 +1,216 @@
+//! Tiny declarative CLI argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands; generates usage text from the declared options.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments: option values + positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    eprintln!("invalid value for --{name}: {v}");
+                    std::process::exit(2);
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    eprintln!("invalid value for --{name}: {v}");
+                    std::process::exit(2);
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    eprintln!("invalid value for --{name}: {v}");
+                    std::process::exit(2);
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Command definition: declared options + parser.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: None,
+        });
+        self
+    }
+
+    pub fn flag_opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let arg = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            s.push_str(&format!("  {arg:<24} {}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse a raw argv slice (without the program/subcommand name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                if key == "help" {
+                    return Err(self.usage());
+                }
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} needs a value"))?
+                        }
+                    };
+                    out.values.insert(key, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} takes no value"));
+                    }
+                    out.flags.push(key);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("solve", "solve a regression job")
+            .opt("dataset", "dataset name")
+            .opt("eps", "target accuracy")
+            .flag_opt("verbose", "chatty output")
+    }
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = cmd()
+            .parse(&argv(&["--dataset", "syn1", "--eps=0.01"]))
+            .unwrap();
+        assert_eq!(a.get("dataset"), Some("syn1"));
+        assert_eq!(a.get_f64("eps", 1.0), 0.01);
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = cmd().parse(&argv(&["pos1", "--verbose", "pos2"])).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(cmd().parse(&argv(&["--nope"])).is_err());
+        assert!(cmd().parse(&argv(&["--eps"])).is_err());
+        assert!(cmd().parse(&argv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_or("dataset", "syn2"), "syn2");
+    }
+
+    #[test]
+    fn help_yields_usage() {
+        let err = cmd().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("solve"));
+        assert!(err.contains("--dataset"));
+    }
+}

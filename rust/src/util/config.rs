@@ -1,0 +1,277 @@
+//! TOML-subset config parser + typed experiment configuration.
+//!
+//! The coordinator and benches are driven by small config files
+//! (`configs/*.toml` style). We support the subset of TOML a config actually
+//! uses: `[section]` / `[section.sub]` headers, `key = value` with string,
+//! integer, float, boolean and flat-array values, comments and blank lines.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Parsed config: dotted-path -> value (e.g. `"dataset.n"`).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| ConfigError {
+                line: lineno + 1,
+                msg: msg.to_string(),
+            };
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(err("unterminated section header"));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| err("expected key = value"))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(val.trim()).map_err(|m| err(&m))?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(path, value);
+        }
+        Ok(Config { entries })
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Config::parse(&text)?)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        self.get(path)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.get(path).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn usize_list(&self, path: &str, default: &[usize]) -> Vec<usize> {
+        self.get(path)
+            .and_then(Value::as_arr)
+            .map(|a| a.iter().filter_map(Value::as_usize).collect())
+            .unwrap_or_else(|| default.to_vec())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err("unterminated string".into());
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err("unterminated array".into());
+        }
+        let inner = s[1..s.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(x) = s.parse::<f64>() {
+        return Ok(Value::Float(x));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "fig1"         # inline comment
+seed = 42
+
+[dataset]
+n = 100_000
+d = 20
+kappa = 1e8
+normalize = true
+
+[solver]
+batch_sizes = [1, 2, 4, 8]
+eta = 0.5
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("name", ""), "fig1");
+        assert_eq!(c.usize_or("seed", 0), 42);
+        assert_eq!(c.usize_or("dataset.n", 0), 100_000);
+        assert_eq!(c.f64_or("dataset.kappa", 0.0), 1e8);
+        assert!(c.bool_or("dataset.normalize", false));
+        assert_eq!(c.usize_list("solver.batch_sizes", &[]), vec![1, 2, 4, 8]);
+        assert_eq!(c.f64_or("solver.eta", 0.0), 0.5);
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("nope", 3), 3);
+        assert_eq!(c.str_or("nope", "x"), "x");
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let c = Config::parse("s = \"a#b\"").unwrap();
+        assert_eq!(c.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn reports_line_numbers() {
+        let err = Config::parse("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("k = ").is_err());
+        assert!(Config::parse("k = [1, 2").is_err());
+        assert!(Config::parse("k = \"oops").is_err());
+    }
+
+    #[test]
+    fn ints_vs_floats() {
+        let c = Config::parse("a = 3\nb = 3.0").unwrap();
+        assert_eq!(c.get("a"), Some(&Value::Int(3)));
+        assert_eq!(c.get("b"), Some(&Value::Float(3.0)));
+        assert_eq!(c.f64_or("a", 0.0), 3.0); // int coerces to f64
+    }
+}

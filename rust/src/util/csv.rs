@@ -1,0 +1,165 @@
+//! Small CSV reader/writer (RFC-4180 subset: quoted fields, embedded commas
+//! and newlines in quotes). Used for dataset import/export and the figure
+//! series emitted by the benches.
+
+/// Parse CSV text into rows of fields.
+pub fn parse(text: &str) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    let mut row = Vec::new();
+    let mut field = String::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+    let mut any = false;
+    while let Some(c) = chars.next() {
+        any = true;
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => {
+                    row.push(std::mem::take(&mut field));
+                }
+                '\r' => {}
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    rows.push(std::mem::take(&mut row));
+                }
+                c => field.push(c),
+            }
+        }
+    }
+    if any && (!field.is_empty() || !row.is_empty()) {
+        row.push(field);
+        rows.push(row);
+    }
+    rows
+}
+
+/// Escape a field if needed and append.
+fn write_field(out: &mut String, f: &str) {
+    if f.contains([',', '"', '\n', '\r']) {
+        out.push('"');
+        for c in f.chars() {
+            if c == '"' {
+                out.push('"');
+            }
+            out.push(c);
+        }
+        out.push('"');
+    } else {
+        out.push_str(f);
+    }
+}
+
+/// Serialize rows to CSV text.
+pub fn write(rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    for row in rows {
+        for (i, f) in row.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            write_field(&mut out, f);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a numeric CSV (optionally skipping a header row) into an
+/// (n_rows, n_cols, data) triple in row-major order. Non-numeric rows error.
+pub fn parse_numeric(text: &str, skip_header: bool) -> anyhow::Result<(usize, usize, Vec<f64>)> {
+    let rows = parse(text);
+    let start = usize::from(skip_header);
+    let mut data = Vec::new();
+    let mut cols = 0usize;
+    let mut n = 0usize;
+    for (ri, row) in rows.iter().enumerate().skip(start) {
+        if row.len() == 1 && row[0].trim().is_empty() {
+            continue;
+        }
+        if cols == 0 {
+            cols = row.len();
+        } else if row.len() != cols {
+            anyhow::bail!("row {ri}: expected {cols} fields, got {}", row.len());
+        }
+        for f in row {
+            data.push(
+                f.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("row {ri}: bad number {f:?}"))?,
+            );
+        }
+        n += 1;
+    }
+    Ok((n, cols, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_rows() {
+        let rows = parse("a,b,c\n1,2,3\n");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], vec!["a", "b", "c"]);
+        assert_eq!(rows[1], vec!["1", "2", "3"]);
+    }
+
+    #[test]
+    fn quoted_fields() {
+        let rows = parse("\"a,b\",\"say \"\"hi\"\"\",\"multi\nline\"\n");
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0][0], "a,b");
+        assert_eq!(rows[0][1], "say \"hi\"");
+        assert_eq!(rows[0][2], "multi\nline");
+    }
+
+    #[test]
+    fn missing_trailing_newline() {
+        let rows = parse("x,y");
+        assert_eq!(rows, vec![vec!["x".to_string(), "y".to_string()]]);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let rows = vec![
+            vec!["plain".to_string(), "with,comma".to_string()],
+            vec!["with \"quote\"".to_string(), "3.14".to_string()],
+        ];
+        let text = write(&rows);
+        assert_eq!(parse(&text), rows);
+    }
+
+    #[test]
+    fn numeric_parse_with_header() {
+        let (n, c, data) = parse_numeric("x,y\n1,2\n3,4\n", true).unwrap();
+        assert_eq!((n, c), (2, 2));
+        assert_eq!(data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn numeric_parse_rejects_ragged_and_nonnumeric() {
+        assert!(parse_numeric("1,2\n3\n", false).is_err());
+        assert!(parse_numeric("1,abc\n", false).is_err());
+    }
+
+    #[test]
+    fn crlf_handled() {
+        let rows = parse("a,b\r\nc,d\r\n");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1], vec!["c", "d"]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Shared infrastructure substrates, all implemented from scratch.
+//!
+//! Nothing in this tree depends on external crates (only `std`): the build
+//! environment vendors exactly the `xla` crate closure, so the PRNG, CLI
+//! parser, config format, JSON parser, thread pool, stats and plotting
+//! utilities that a framework normally pulls from crates.io are implemented
+//! here and unit-tested in place.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod config;
+pub mod stats;
+pub mod plot;
+pub mod csv;
+pub mod threadpool;
+pub mod logging;

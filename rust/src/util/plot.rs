@@ -1,0 +1,220 @@
+//! ASCII line plots + series containers for the figure benches.
+//!
+//! Every figure in the paper is an error-vs-iterations or error-vs-seconds
+//! line chart; the benches regenerate them as (a) CSV files under `out/` and
+//! (b) terminal ASCII plots so the shape comparison (who wins, crossovers)
+//! is visible directly in `cargo bench` output.
+
+use std::fmt::Write as _;
+
+/// One named curve: x (iterations or seconds) vs y (relative error).
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Series {
+            name: name.into(),
+            xs: Vec::new(),
+            ys: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.xs.push(x);
+        self.ys.push(y);
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// First x at which y drops to or below the threshold (e.g. time-to-eps).
+    pub fn x_at_y_below(&self, thresh: f64) -> Option<f64> {
+        self.xs
+            .iter()
+            .zip(&self.ys)
+            .find(|(_, &y)| y <= thresh)
+            .map(|(&x, _)| x)
+    }
+}
+
+/// A figure = several series + axis labels.
+#[derive(Clone, Debug)]
+pub struct Figure {
+    pub title: String,
+    pub xlabel: String,
+    pub ylabel: String,
+    pub logy: bool,
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    pub fn new(title: impl Into<String>, xlabel: &str, ylabel: &str, logy: bool) -> Self {
+        Figure {
+            title: title.into(),
+            xlabel: xlabel.to_string(),
+            ylabel: ylabel.to_string(),
+            logy,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, s: Series) {
+        self.series.push(s);
+    }
+
+    /// Render an ASCII chart `width` x `height` characters.
+    pub fn ascii(&self, width: usize, height: usize) -> String {
+        let marks = ['*', '+', 'o', 'x', '#', '@', '%', '&'];
+        let tf = |y: f64| -> f64 {
+            if self.logy {
+                y.max(1e-300).log10()
+            } else {
+                y
+            }
+        };
+        let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+        for s in &self.series {
+            for (&x, &y) in s.xs.iter().zip(&s.ys) {
+                if !x.is_finite() || !y.is_finite() {
+                    continue;
+                }
+                xmin = xmin.min(x);
+                xmax = xmax.max(x);
+                let ty = tf(y);
+                ymin = ymin.min(ty);
+                ymax = ymax.max(ty);
+            }
+        }
+        if !xmin.is_finite() || xmin == xmax {
+            xmax = xmin + 1.0;
+        }
+        if !ymin.is_finite() || ymin == ymax {
+            ymax = ymin + 1.0;
+        }
+        let mut grid = vec![vec![' '; width]; height];
+        for (si, s) in self.series.iter().enumerate() {
+            let mark = marks[si % marks.len()];
+            for (&x, &y) in s.xs.iter().zip(&s.ys) {
+                if !x.is_finite() || !y.is_finite() {
+                    continue;
+                }
+                let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round()
+                    as usize;
+                let cy = ((tf(y) - ymin) / (ymax - ymin) * (height - 1) as f64)
+                    .round() as usize;
+                let row = height - 1 - cy.min(height - 1);
+                grid[row][cx.min(width - 1)] = mark;
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let ylab = if self.logy {
+            format!("log10({})", self.ylabel)
+        } else {
+            self.ylabel.clone()
+        };
+        let _ = writeln!(out, "y: {ylab}  [{ymin:.3} .. {ymax:.3}]");
+        for row in &grid {
+            let _ = writeln!(out, "|{}|", row.iter().collect::<String>());
+        }
+        let _ = writeln!(
+            out,
+            " x: {}  [{:.4} .. {:.4}]",
+            self.xlabel, xmin, xmax
+        );
+        for (si, s) in self.series.iter().enumerate() {
+            let _ = writeln!(out, "  {} = {}", marks[si % marks.len()], s.name);
+        }
+        out
+    }
+
+    /// CSV: long format `series,x,y` — one file regenerates one figure.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("series,x,y\n");
+        for s in &self.series {
+            for (&x, &y) in s.xs.iter().zip(&s.ys) {
+                let _ = writeln!(out, "{},{},{}", s.name, x, y);
+            }
+        }
+        out
+    }
+
+    /// Write CSV under dir, creating it; returns the path.
+    pub fn save_csv(&self, dir: &std::path::Path, stem: &str) -> anyhow::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{stem}.csv"));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig() -> Figure {
+        let mut f = Figure::new("test", "iter", "relerr", true);
+        let mut s = Series::new("solver-a");
+        for i in 0..10 {
+            s.push(i as f64, 10f64.powi(-i));
+        }
+        f.add(s);
+        f
+    }
+
+    #[test]
+    fn series_threshold_crossing() {
+        let f = fig();
+        assert_eq!(f.series[0].x_at_y_below(1e-5), Some(5.0));
+        assert_eq!(f.series[0].x_at_y_below(1e-20), None);
+    }
+
+    #[test]
+    fn ascii_contains_marks_and_legend() {
+        let art = fig().ascii(40, 10);
+        assert!(art.contains('*'));
+        assert!(art.contains("solver-a"));
+        assert!(art.contains("log10"));
+    }
+
+    #[test]
+    fn csv_roundtrip_rows() {
+        let csv = fig().to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 11); // header + 10 points
+        assert_eq!(lines[0], "series,x,y");
+        assert!(lines[1].starts_with("solver-a,0,"));
+    }
+
+    #[test]
+    fn ascii_handles_degenerate_ranges() {
+        let mut f = Figure::new("flat", "x", "y", false);
+        let mut s = Series::new("flat");
+        s.push(1.0, 2.0);
+        f.add(s);
+        let art = f.ascii(20, 5);
+        assert!(art.contains("flat"));
+    }
+
+    #[test]
+    fn ascii_skips_nonfinite() {
+        let mut f = Figure::new("nan", "x", "y", true);
+        let mut s = Series::new("n");
+        s.push(0.0, f64::NAN);
+        s.push(1.0, 1.0);
+        s.push(2.0, 0.1);
+        f.add(s);
+        let _ = f.ascii(20, 5); // must not panic
+    }
+}

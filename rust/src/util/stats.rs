@@ -1,0 +1,202 @@
+//! Timing and summary statistics for the bench harness and coordinator
+//! metrics. `BenchStats` implements the criterion-style protocol used by all
+//! `rust/benches/*`: warmup, timed repetitions, robust summaries.
+
+use std::time::{Duration, Instant};
+
+/// Online mean/variance (Welford) plus min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub count: usize,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary {
+            count: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.count as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.count < 2 {
+            0.0
+        } else {
+            self.m2 / (self.count - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Percentile over a copy of the samples (nearest-rank).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+pub fn median(samples: &[f64]) -> f64 {
+    percentile(samples, 50.0)
+}
+
+/// A single timed region.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Criterion-style micro-bench runner: warms up, then runs timed reps and
+/// reports median/mean/std. Used by `rust/benches/kernels.rs` and the
+/// experiment drivers for preconditioning-cost tables.
+pub struct BenchStats {
+    pub name: String,
+    pub samples_secs: Vec<f64>,
+}
+
+impl BenchStats {
+    pub fn run<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Self {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t = Timer::start();
+            f();
+            samples.push(t.secs());
+        }
+        BenchStats {
+            name: name.to_string(),
+            samples_secs: samples,
+        }
+    }
+
+    pub fn median_secs(&self) -> f64 {
+        median(&self.samples_secs)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let mut s = Summary::new();
+        for &x in &self.samples_secs {
+            s.add(x);
+        }
+        s.mean()
+    }
+
+    pub fn std_secs(&self) -> f64 {
+        let mut s = Summary::new();
+        for &x in &self.samples_secs {
+            s.add(x);
+        }
+        s.std()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} median {:>10} mean {:>10} +-{:>9} ({} reps)",
+            self.name,
+            fmt_duration(self.median_secs()),
+            fmt_duration(self.mean_secs()),
+            fmt_duration(self.std_secs()),
+            self.samples_secs.len(),
+        )
+    }
+}
+
+/// Human duration: picks ns/us/ms/s.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_matches_direct_computation() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut s = Summary::new();
+        for &x in &xs {
+            s.add(x);
+        }
+        assert_eq!(s.count, 5);
+        assert!((s.mean() - 4.0).abs() < 1e-12);
+        let direct_var =
+            xs.iter().map(|x| (x - 4.0) * (x - 4.0)).sum::<f64>() / 4.0;
+        assert!((s.var() - direct_var).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 10.0);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = [5.0, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(median(&xs), 3.0);
+    }
+
+    #[test]
+    fn bench_runs_expected_reps() {
+        let mut n = 0;
+        let b = BenchStats::run("noop", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(b.samples_secs.len(), 5);
+        assert!(b.median_secs() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_duration_scales() {
+        assert!(fmt_duration(2.5e-9).ends_with("ns"));
+        assert!(fmt_duration(2.5e-6).ends_with("us"));
+        assert!(fmt_duration(2.5e-3).ends_with("ms"));
+        assert!(fmt_duration(2.5).ends_with('s'));
+    }
+}

@@ -1,0 +1,396 @@
+//! Scoped data-parallel helpers over std::thread.
+//!
+//! Two primitives cover every parallel site in the codebase:
+//! * [`parallel_for_chunks`] — split a mutable slice into contiguous chunks
+//!   and process them on worker threads (gemm row blocks, FWHT column
+//!   panels, dataset generation).
+//! * [`ThreadPool`] — a long-lived task queue used by the coordinator to run
+//!   solver jobs concurrently with bounded parallelism and backpressure.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// Number of worker threads to use by default: respects
+/// `HDPW_THREADS` env var, otherwise available_parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("HDPW_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Process `data` in contiguous chunks of at most `chunk` elements, calling
+/// `f(chunk_start_index, chunk_slice)` from up to `threads` workers.
+/// Falls back to sequential execution for a single thread or single chunk.
+pub fn parallel_for_chunks<T, F>(data: &mut [T], chunk: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Send + Sync,
+{
+    assert!(chunk > 0);
+    let n_chunks = data.len().div_ceil(chunk.max(1));
+    if threads <= 1 || n_chunks <= 1 {
+        for (ci, sl) in data.chunks_mut(chunk).enumerate() {
+            f(ci * chunk, sl);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let chunks: Vec<(usize, &mut [T])> = data
+        .chunks_mut(chunk)
+        .enumerate()
+        .map(|(ci, sl)| (ci * chunk, sl))
+        .collect();
+    let chunks = Mutex::new(chunks.into_iter().map(Some).collect::<Vec<_>>());
+    thread::scope(|scope| {
+        for _ in 0..threads.min(n_chunks) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let item = {
+                    let mut guard = chunks.lock().unwrap();
+                    if i >= guard.len() {
+                        return;
+                    }
+                    guard[i].take()
+                };
+                if let Some((start, sl)) = item {
+                    f(start, sl);
+                }
+            });
+        }
+    });
+}
+
+/// Run `f(i)` for i in 0..n across worker threads, work-stealing by an
+/// atomic counter. Used where iterations are independent and index-addressed.
+///
+/// PERF: dispatches to a lazily-started *persistent* worker pool — spawning
+/// OS threads per call costs ~1-3 ms at 32 threads, which dominated mid-size
+/// gemv/fused_grad calls (see EXPERIMENTS.md section Perf). If the pool is
+/// busy with another caller's loop, this falls back to inline serial
+/// execution (deadlock-free by construction).
+pub fn parallel_for_each_index<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Send + Sync,
+{
+    if threads <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    static_pool().run(n, &f);
+}
+
+// ---------------------------------------------------------------------------
+// persistent data-parallel pool
+// ---------------------------------------------------------------------------
+
+struct PoolJob {
+    /// type-erased &(dyn Fn(usize) + Sync); valid until `active` hits 0 and
+    /// the submitter (who owns the closure) observes completion
+    f: *const (dyn Fn(usize) + Sync),
+    n: usize,
+    next: Arc<AtomicUsize>,
+    /// submitter + workers currently inside the job
+    active: Arc<AtomicUsize>,
+}
+
+unsafe impl Send for PoolJob {}
+
+struct StaticPoolState {
+    job: Option<PoolJob>,
+    epoch: u64,
+}
+
+pub struct StaticPool {
+    state: Mutex<StaticPoolState>,
+    work_cv: Condvar,
+}
+
+static STATIC_POOL: std::sync::OnceLock<&'static StaticPool> = std::sync::OnceLock::new();
+
+/// The process-wide data-parallel pool (workers = default_threads - 1;
+/// the submitting thread always participates).
+pub fn static_pool() -> &'static StaticPool {
+    STATIC_POOL.get_or_init(|| {
+        let pool: &'static StaticPool = Box::leak(Box::new(StaticPool {
+            state: Mutex::new(StaticPoolState {
+                job: None,
+                epoch: 0,
+            }),
+            work_cv: Condvar::new(),
+        }));
+        let workers = default_threads().saturating_sub(1).min(64);
+        for _ in 0..workers {
+            thread::Builder::new()
+                .name("hdpw-pool".into())
+                .spawn(move || pool.worker_loop())
+                .expect("spawn pool worker");
+        }
+        pool
+    })
+}
+
+impl StaticPool {
+    fn worker_loop(&self) {
+        let mut seen_epoch = 0u64;
+        loop {
+            // wait for a job with a fresh epoch
+            let job = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if st.epoch != seen_epoch {
+                        if let Some(j) = &st.job {
+                            seen_epoch = st.epoch;
+                            if j.next.load(Ordering::Relaxed) < j.n {
+                                j.active.fetch_add(1, Ordering::AcqRel);
+                                break PoolJob {
+                                    f: j.f,
+                                    n: j.n,
+                                    next: Arc::clone(&j.next),
+                                    active: Arc::clone(&j.active),
+                                };
+                            }
+                        } else {
+                            seen_epoch = st.epoch;
+                        }
+                    }
+                    st = self.work_cv.wait(st).unwrap();
+                }
+            };
+            // process
+            let f = unsafe { &*job.f };
+            loop {
+                let i = job.next.fetch_add(1, Ordering::Relaxed);
+                if i >= job.n {
+                    break;
+                }
+                f(i);
+            }
+            job.active.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+
+    /// Run f(0..n) with pool help; the caller participates and blocks until
+    /// every index is done. Falls back to serial if the pool is occupied.
+    pub fn run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        let next = Arc::new(AtomicUsize::new(0));
+        let active = Arc::new(AtomicUsize::new(1)); // the submitter
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.job.is_some() {
+                drop(st);
+                // pool busy (another caller or nested parallelism): serial
+                for i in 0..n {
+                    f(i);
+                }
+                return;
+            }
+            st.job = Some(PoolJob {
+                // erase the lifetime: we do not return until next >= n and
+                // active == 0, so the borrow outlives every use
+                f: unsafe {
+                    std::mem::transmute::<
+                        *const (dyn Fn(usize) + Sync),
+                        *const (dyn Fn(usize) + Sync),
+                    >(f as *const _)
+                },
+                n,
+                next: Arc::clone(&next),
+                active: Arc::clone(&active),
+            });
+            st.epoch += 1;
+            self.work_cv.notify_all();
+        }
+        // the submitter works too
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            f(i);
+        }
+        active.fetch_sub(1, Ordering::AcqRel);
+        // wait for stragglers, then clear the job slot
+        while active.load(Ordering::Acquire) > 0 {
+            std::hint::spin_loop();
+        }
+        let mut st = self.state.lock().unwrap();
+        st.job = None;
+        st.epoch += 1;
+    }
+}
+
+enum Task {
+    Run(Box<dyn FnOnce() + Send>),
+    Shutdown,
+}
+
+/// A bounded task queue + worker threads. `submit` blocks when
+/// `max_queue` tasks are already waiting — this is the coordinator's
+/// backpressure mechanism (jobs arrive faster than solvers finish).
+pub struct ThreadPool {
+    tx: mpsc::Sender<Task>,
+    workers: Vec<thread::JoinHandle<()>>,
+    inflight: Arc<(Mutex<usize>, Condvar)>,
+    max_queue: usize,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize, max_queue: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = mpsc::channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut workers = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let rx = Arc::clone(&rx);
+            let inflight = Arc::clone(&inflight);
+            workers.push(thread::spawn(move || loop {
+                let task = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match task {
+                    Ok(Task::Run(f)) => {
+                        f();
+                        let (lock, cv) = &*inflight;
+                        let mut n = lock.lock().unwrap();
+                        *n -= 1;
+                        cv.notify_all();
+                    }
+                    Ok(Task::Shutdown) | Err(_) => return,
+                }
+            }));
+        }
+        ThreadPool {
+            tx,
+            workers,
+            inflight,
+            max_queue,
+        }
+    }
+
+    /// Submit a task; blocks while the queue is at capacity (backpressure).
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let (lock, cv) = &*self.inflight;
+        let mut n = lock.lock().unwrap();
+        while *n >= self.max_queue {
+            n = cv.wait(n).unwrap();
+        }
+        *n += 1;
+        drop(n);
+        self.tx.send(Task::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Block until every submitted task has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.inflight;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+
+    pub fn inflight(&self) -> usize {
+        *self.inflight.0.lock().unwrap()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.wait_idle();
+        for _ in &self.workers {
+            let _ = self.tx.send(Task::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunked_touches_every_element_once() {
+        let mut v = vec![0u32; 1000];
+        parallel_for_chunks(&mut v, 37, 4, |_, sl| {
+            for x in sl {
+                *x += 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn chunked_passes_correct_offsets() {
+        let mut v: Vec<usize> = vec![0; 100];
+        parallel_for_chunks(&mut v, 7, 3, |start, sl| {
+            for (i, x) in sl.iter_mut().enumerate() {
+                *x = start + i;
+            }
+        });
+        let want: Vec<usize> = (0..100).collect();
+        assert_eq!(v, want);
+    }
+
+    #[test]
+    fn index_parallel_covers_range() {
+        let sum = AtomicU64::new(0);
+        parallel_for_each_index(1000, 8, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn sequential_fallback_matches() {
+        let mut a = vec![1i64; 64];
+        let mut b = vec![1i64; 64];
+        parallel_for_chunks(&mut a, 8, 1, |s, sl| {
+            for (i, x) in sl.iter_mut().enumerate() {
+                *x = (s + i) as i64;
+            }
+        });
+        parallel_for_chunks(&mut b, 8, 4, |s, sl| {
+            for (i, x) in sl.iter_mut().enumerate() {
+                *x = (s + i) as i64;
+            }
+        });
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pool_runs_all_tasks() {
+        let pool = ThreadPool::new(4, 16);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_backpressure_bounds_inflight() {
+        let pool = ThreadPool::new(2, 4);
+        for _ in 0..32 {
+            pool.submit(move || {
+                thread::sleep(std::time::Duration::from_millis(1));
+            });
+            assert!(pool.inflight() <= 4);
+        }
+        pool.wait_idle();
+    }
+}

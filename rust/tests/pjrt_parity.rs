@@ -1,0 +1,236 @@
+//! Integration: the PJRT artifact path and the native path must agree.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise). Every op in
+//! the manifest is exercised at its canonical shape with random inputs and
+//! compared against the native implementation to f64 tolerance.
+
+use hdpw::backend::Backend;
+use hdpw::linalg::{blas, qr, tri, Mat};
+use hdpw::prox::Constraint;
+use hdpw::runtime::{Engine, EngineHandle};
+use hdpw::util::rng::Rng;
+
+fn engine() -> Option<EngineHandle> {
+    match EngineHandle::spawn(&Engine::default_dir()) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP pjrt parity tests: {err:#}");
+            None
+        }
+    }
+}
+
+struct Setup {
+    pjrt: Backend,
+    native: Backend,
+    n: usize,
+    d: usize,
+    rs: Vec<usize>,
+    chunk_t: usize,
+    pw_t: usize,
+    a: Mat,
+    b: Vec<f64>,
+    pinv: Mat,
+    rng: Rng,
+}
+
+fn setup() -> Option<Setup> {
+    let e = engine()?;
+    let meta = e.meta().clone();
+    let mut rng = Rng::new(2024);
+    let a = Mat::gaussian(meta.n, meta.d, &mut rng);
+    let xt = rng.gaussians(meta.d);
+    let mut b = blas::gemv(&a, &xt);
+    for v in &mut b {
+        *v += 0.1 * rng.gaussian();
+    }
+    let r = qr::qr_r(&a);
+    let pinv = tri::pinv_dense(&r);
+    Some(Setup {
+        pjrt: Backend::with_engine(e.clone()),
+        native: Backend::native(),
+        n: meta.n,
+        d: meta.d,
+        rs: meta.rs,
+        chunk_t: meta.chunk_t,
+        pw_t: meta.pw_t,
+        a,
+        b,
+        pinv,
+        rng,
+    })
+}
+
+fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    let scale = 1.0 + a.iter().map(|v| v.abs()).fold(0.0, f64::max);
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{what}[{i}]: pjrt {x} vs native {y} (tol {tol}, scale {scale})"
+        );
+    }
+}
+
+#[test]
+fn manifest_has_expected_ops() {
+    let Some(e) = engine() else { return };
+    let names = e.op_names();
+    assert!(names.iter().any(|n| n.starts_with("hd_transform")));
+    assert!(names.iter().any(|n| n.starts_with("batch_grad")));
+    assert!(names.iter().any(|n| n.starts_with("sgd_chunk_unc")));
+    assert!(names.iter().any(|n| n.starts_with("acc_chunk_l1")));
+    assert!(names.iter().any(|n| n.starts_with("pw_gradient_chunk_l2")));
+    assert!(e.meta().n > 0 && e.meta().d > 0);
+}
+
+#[test]
+fn hd_transform_parity() {
+    let Some(mut s) = setup() else { return };
+    let bmat = Mat::from_vec(s.n, 1, s.b.clone());
+    let aug = s.a.hstack(&bmat);
+    let signs = s.rng.signs(s.n);
+    let got = s.pjrt.hd_transform(&aug, &signs);
+    let want = s.native.hd_transform(&aug, &signs);
+    assert!(s.pjrt.pjrt_calls() == 1, "did not dispatch to PJRT");
+    let diff = got.max_abs_diff(&want);
+    assert!(diff < 1e-9, "hd_transform diff {diff}");
+}
+
+#[test]
+fn batch_grad_parity_all_r() {
+    let Some(mut s) = setup() else { return };
+    for &r in &s.rs {
+        let idx = s.rng.indices(r, s.n);
+        let m = s.a.gather_rows(&idx);
+        let v: Vec<f64> = idx.iter().map(|&i| s.b[i]).collect();
+        let x = s.rng.gaussians(s.d);
+        let scale = 2.0 * s.n as f64 / r as f64;
+        let got = s.pjrt.batch_grad(&m, &v, &x, scale);
+        let want = s.native.batch_grad(&m, &v, &x, scale);
+        assert_close(&got, &want, 1e-9, &format!("batch_grad r={r}"));
+    }
+}
+
+#[test]
+fn full_grad_and_residual_parity() {
+    let Some(mut s) = setup() else { return };
+    let x = s.rng.gaussians(s.d);
+    let got = s.pjrt.full_grad(&s.a, &s.b, &x);
+    let want = s.native.full_grad(&s.a, &s.b, &x);
+    assert_close(&got, &want, 1e-9, "full_grad");
+    let fp = s.pjrt.residual_sq(&s.a, &s.b, &x);
+    let fnat = s.native.residual_sq(&s.a, &s.b, &x);
+    assert!(
+        (fp - fnat).abs() < 1e-9 * (1.0 + fnat),
+        "residual_sq {fp} vs {fnat}"
+    );
+}
+
+#[test]
+fn gd_step_parity_all_constraints() {
+    let Some(mut s) = setup() else { return };
+    let x = s.rng.gaussians(s.d);
+    let g = s.rng.gaussians(s.d);
+    for cons in [
+        Constraint::Unconstrained,
+        Constraint::L2Ball { radius: 0.7 },
+        Constraint::L1Ball { radius: 0.9 },
+    ] {
+        let got = s.pjrt.gd_step(&x, &s.pinv, &g, 0.5, &cons, None);
+        let want = s.native.gd_step(&x, &s.pinv, &g, 0.5, &cons, None);
+        assert_close(&got, &want, 1e-9, &format!("gd_step {}", cons.tag()));
+        assert!(cons.contains(&got, 1e-9));
+    }
+}
+
+#[test]
+fn sgd_chunk_parity_all_constraints() {
+    let Some(mut s) = setup() else { return };
+    let r = s.rs[s.rs.len() / 2];
+    let idx: Vec<Vec<usize>> = (0..s.chunk_t).map(|_| s.rng.indices(r, s.n)).collect();
+    let x0 = s.rng.gaussians(s.d);
+    let scale = 2.0 * s.n as f64 / r as f64;
+    for cons in [
+        Constraint::Unconstrained,
+        Constraint::L2Ball { radius: 1.0 },
+        Constraint::L1Ball { radius: 2.0 },
+    ] {
+        let (xt_p, xs_p) =
+            s.pjrt
+                .sgd_chunk(&s.a, &s.b, &x0, &s.pinv, &idx, 0.1, scale, &cons, None);
+        let (xt_n, xs_n) =
+            s.native
+                .sgd_chunk(&s.a, &s.b, &x0, &s.pinv, &idx, 0.1, scale, &cons, None);
+        assert_close(&xt_p, &xt_n, 1e-8, &format!("sgd_chunk x {}", cons.tag()));
+        assert_close(&xs_p, &xs_n, 1e-8, &format!("sgd_chunk xsum {}", cons.tag()));
+    }
+}
+
+#[test]
+fn acc_chunk_parity() {
+    let Some(mut s) = setup() else { return };
+    // acc artifacts exist only for the middle r (see aot.py)
+    let r = s.rs[s.rs.len() / 2];
+    let t = s.chunk_t;
+    let idx: Vec<Vec<usize>> = (0..t).map(|_| s.rng.indices(r, s.n)).collect();
+    let alphas: Vec<f64> = (1..=t).map(|k| 2.0 / (k as f64 + 1.0)).collect();
+    let qs = alphas.clone();
+    let etas = vec![0.05; t];
+    let x0 = s.rng.gaussians(s.d);
+    let xhat0 = x0.clone();
+    let scale = 2.0 * s.n as f64 / r as f64;
+    for cons in [
+        Constraint::Unconstrained,
+        Constraint::L2Ball { radius: 1.0 },
+        Constraint::L1Ball { radius: 2.0 },
+    ] {
+        let (x_p, xh_p) = s.pjrt.acc_chunk(
+            &s.a, &s.b, &x0, &xhat0, &s.pinv, &idx, &alphas, &qs, &etas, 2.0, scale, &cons, None,
+        );
+        let (x_n, xh_n) = s.native.acc_chunk(
+            &s.a, &s.b, &x0, &xhat0, &s.pinv, &idx, &alphas, &qs, &etas, 2.0, scale, &cons, None,
+        );
+        assert_close(&x_p, &x_n, 1e-8, &format!("acc_chunk x {}", cons.tag()));
+        assert_close(&xh_p, &xh_n, 1e-8, &format!("acc_chunk xhat {}", cons.tag()));
+    }
+}
+
+#[test]
+fn pw_gradient_chunk_parity_and_convergence() {
+    let Some(s) = setup() else { return };
+    let x0 = vec![0.0; s.d];
+    for cons in [
+        Constraint::Unconstrained,
+        Constraint::L2Ball { radius: 0.5 },
+        Constraint::L1Ball { radius: 1.0 },
+    ] {
+        let got = s
+            .pjrt
+            .pw_gradient_chunk(&s.a, &s.b, &x0, &s.pinv, 0.5, s.pw_t, &cons, None);
+        let want = s
+            .native
+            .pw_gradient_chunk(&s.a, &s.b, &x0, &s.pinv, 0.5, s.pw_t, &cons, None);
+        assert_close(&got, &want, 1e-8, &format!("pw_gradient {}", cons.tag()));
+    }
+    // exact pinv + eta=1/2: unconstrained solution == least squares optimum
+    let xt = s
+        .pjrt
+        .pw_gradient_chunk(&s.a, &s.b, &x0, &s.pinv, 0.5, s.pw_t, &Constraint::Unconstrained, None);
+    let xstar = qr::lstsq(&s.a, &s.b);
+    assert_close(&xt, &xstar, 1e-7, "pwGradient vs exact");
+}
+
+#[test]
+fn dispatch_falls_back_on_shape_mismatch() {
+    let Some(e) = engine() else { return };
+    let be = Backend::with_engine(e);
+    let mut rng = Rng::new(1);
+    // off-manifest shape: must fall back to native without error
+    let a = Mat::gaussian(100, 7, &mut rng);
+    let b = rng.gaussians(100);
+    let x = rng.gaussians(7);
+    let _ = be.full_grad(&a, &b, &x);
+    assert_eq!(be.pjrt_calls(), 0);
+    assert_eq!(be.native_calls(), 1);
+}
