@@ -1,0 +1,779 @@
+//! The executor layer: pluggable numerical backends behind one trait.
+//!
+//! [`Executor`] is the op-level contract every backend implements. The
+//! [`crate::backend::Backend`] facade owns a priority-ordered registry of
+//! executors and routes each op to the first one whose registry claims it
+//! ([`Executor::supports`] keyed by the canonical op-name strings in
+//! [`opkey`]). Two implementations ship today:
+//!
+//! * [`NativeExecutor`] — from-scratch kernels, parallel and block-aware:
+//!   dense linear algebra goes through the row-block-parallel [`blas`]
+//!   kernels, and sketch application streams [`RowBlocks`] shards through
+//!   worker threads (`sketch::apply_streamed`), counting every shard folded
+//!   in [`DispatchStats::native_block_calls`]. Supports every op.
+//! * [`PjrtExecutor`] — dispatches to AOT-compiled PJRT artifacts when the
+//!   op name is in the manifest. Claims nothing else.
+//!
+//! A third backend (GPU, remote) plugs in by implementing this trait and
+//! registering with the facade — no solver code changes.
+
+// The op signatures mirror the PJRT artifact calling conventions; several
+// ops legitimately take >7 scalars/arrays.
+#![allow(clippy::too_many_arguments)]
+
+use crate::linalg::{blas, Mat};
+use crate::prox::metric::MetricProjector;
+use crate::prox::Constraint;
+use crate::runtime::literal::Value;
+use crate::runtime::EngineHandle;
+use crate::sketch::{apply_streamed, Sketch};
+use crate::util::threadpool::default_threads;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Canonical op-name keys: the shared vocabulary between the facade's
+/// registry lookups and the PJRT manifest.
+pub mod opkey {
+    use crate::prox::Constraint;
+
+    pub fn hd_transform(n: usize, cols: usize) -> String {
+        format!("hd_transform_n{n}_c{cols}")
+    }
+
+    pub fn batch_grad(r: usize, d: usize) -> String {
+        format!("batch_grad_r{r}_d{d}")
+    }
+
+    pub fn full_grad(n: usize, d: usize) -> String {
+        format!("full_grad_n{n}_d{d}")
+    }
+
+    pub fn residual_sq(n: usize, d: usize) -> String {
+        format!("residual_sq_n{n}_d{d}")
+    }
+
+    pub fn gd_step(cons: &Constraint, d: usize) -> String {
+        format!("gd_step_{}_d{}", cons.tag(), d)
+    }
+
+    pub fn sgd_chunk(cons: &Constraint, n: usize, d: usize, r: usize, t: usize) -> String {
+        format!("sgd_chunk_{}_n{}_d{}_r{}_t{}", cons.tag(), n, d, r, t)
+    }
+
+    pub fn acc_chunk(cons: &Constraint, n: usize, d: usize, r: usize, t: usize) -> String {
+        format!("acc_chunk_{}_n{}_d{}_r{}_t{}", cons.tag(), n, d, r, t)
+    }
+
+    pub fn pw_gradient_chunk(cons: &Constraint, n: usize, d: usize, t: usize) -> String {
+        format!("pw_gradient_chunk_{}_n{}_d{}_t{}", cons.tag(), n, d, t)
+    }
+
+    pub fn sketch_apply(s: usize, n: usize, d: usize) -> String {
+        format!("sketch_apply_s{s}_n{n}_d{d}")
+    }
+}
+
+/// Dispatch counters (observability + tests).
+#[derive(Debug, Default)]
+pub struct DispatchStats {
+    /// Ops served by the PJRT executor.
+    pub pjrt_calls: AtomicUsize,
+    /// Ops served by the native executor.
+    pub native_calls: AtomicUsize,
+    /// Row shards folded by native block-streamed paths (sketch folds).
+    pub native_block_calls: AtomicUsize,
+    /// Why `Backend::auto()` fell back to native (None when PJRT loaded).
+    pub pjrt_fallback_reason: Mutex<Option<String>>,
+}
+
+impl DispatchStats {
+    pub fn mark(&self, pjrt: bool) {
+        if pjrt {
+            self.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.native_calls.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn add_block_calls(&self, shards: usize) {
+        self.native_block_calls.fetch_add(shards, Ordering::Relaxed);
+    }
+
+    pub fn set_fallback_reason(&self, reason: String) {
+        *self.pjrt_fallback_reason.lock().unwrap() = Some(reason);
+    }
+
+    pub fn fallback_reason(&self) -> Option<String> {
+        self.pjrt_fallback_reason.lock().unwrap().clone()
+    }
+
+    /// Fold another stats block's counters into this one. Per-request
+    /// backend forks are absorbed into the shared backend's stats after the
+    /// job, so service-level dashboards see pinned-executor work too.
+    pub fn absorb(&self, other: &DispatchStats) {
+        self.pjrt_calls
+            .fetch_add(other.pjrt_calls.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.native_calls
+            .fetch_add(other.native_calls.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.native_block_calls.fetch_add(
+            other.native_block_calls.load(Ordering::Relaxed),
+            Ordering::Relaxed,
+        );
+    }
+}
+
+/// One numerical backend: executes ops it `supports`.
+///
+/// Constrained-step caveat: the PJRT artifacts implement the Euclidean
+/// projection only, so the facade never routes a call with an active
+/// R-metric projector (or a box constraint) to a non-native executor —
+/// implementations may assume `metric` is inactive unless they are the
+/// native catch-all.
+pub trait Executor: Send + Sync {
+    /// Registry identity ("native", "pjrt", ...) — display only, never used
+    /// for dispatch or stats decisions.
+    fn name(&self) -> &'static str;
+
+    /// Whether dispatches served by this executor count as accelerated
+    /// ([`DispatchStats::pjrt_calls`]) rather than native. Third-party
+    /// executors opt in here instead of spoofing a name.
+    fn accelerated(&self) -> bool {
+        false
+    }
+
+    /// Op-registry membership for a canonical [`opkey`] string.
+    fn supports(&self, op: &str) -> bool;
+
+    /// Randomized-Hadamard transform of the packed [A | b] (rows must be a
+    /// power of two).
+    fn hd_transform(&self, aug: &Mat, signs: &[f64]) -> Mat;
+
+    /// In-place randomized-Hadamard for the streaming pipeline. Default:
+    /// delegates to [`Executor::hd_transform`] (artifact semantics produce a
+    /// fresh buffer); memory-aware executors override to transform in place
+    /// so the padded [A | b] is the *only* materialization.
+    fn hd_transform_mut(&self, aug: &mut Mat, signs: &[f64]) {
+        *aug = self.hd_transform(aug, signs);
+    }
+
+    /// Mini-batch gradient c = scale * M^T (M x - v).
+    fn batch_grad(&self, m: &Mat, v: &[f64], x: &[f64], scale: f64) -> Vec<f64>;
+
+    /// Full gradient g = 2 A^T (A x - b).
+    fn full_grad(&self, a: &Mat, b: &[f64], x: &[f64]) -> Vec<f64>;
+
+    /// f(x) = ||Ax - b||^2.
+    fn residual_sq(&self, a: &Mat, b: &[f64], x: &[f64]) -> f64;
+
+    /// One preconditioned gradient step x <- P_W(x - eta * pinv g).
+    fn gd_step(
+        &self,
+        x: &[f64],
+        pinv: &Mat,
+        g: &[f64],
+        eta: f64,
+        cons: &Constraint,
+        metric: Option<&MetricProjector>,
+    ) -> Vec<f64>;
+
+    /// T fused mini-batch SGD steps (Algorithm 2, steps 3-7); returns
+    /// (x_T, sum of x_t).
+    fn sgd_chunk(
+        &self,
+        hda: &Mat,
+        hdb: &[f64],
+        x0: &[f64],
+        pinv: &Mat,
+        idx: &[Vec<usize>],
+        eta: f64,
+        scale: f64,
+        cons: &Constraint,
+        metric: Option<&MetricProjector>,
+    ) -> (Vec<f64>, Vec<f64>);
+
+    /// T fused accelerated (Ghadimi-Lan) mini-batch steps (Algorithm 6);
+    /// returns (x_T, xhat_T).
+    fn acc_chunk(
+        &self,
+        hda: &Mat,
+        hdb: &[f64],
+        x0: &[f64],
+        xhat0: &[f64],
+        pinv: &Mat,
+        idx: &[Vec<usize>],
+        alphas: &[f64],
+        qs: &[f64],
+        etas: &[f64],
+        mu: f64,
+        scale: f64,
+        cons: &Constraint,
+        metric: Option<&MetricProjector>,
+    ) -> (Vec<f64>, Vec<f64>);
+
+    /// T fused pwGradient steps (Algorithm 4).
+    fn pw_gradient_chunk(
+        &self,
+        a: &Mat,
+        b: &[f64],
+        x0: &[f64],
+        pinv: &Mat,
+        eta: f64,
+        t: usize,
+        cons: &Constraint,
+        metric: Option<&MetricProjector>,
+    ) -> Vec<f64>;
+
+    /// Compute `S A` for the preconditioner. Default: dense single pass;
+    /// block-aware executors override to stream shards.
+    fn sketch_apply(
+        &self,
+        sk: &(dyn Sketch + Send + Sync),
+        a: &Mat,
+        block_rows: Option<usize>,
+    ) -> Mat {
+        let _ = block_rows;
+        sk.apply(a)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NativeExecutor
+// ---------------------------------------------------------------------------
+
+/// The from-scratch backend: parallel, block-aware, supports every op.
+pub struct NativeExecutor {
+    threads: usize,
+    /// Default shard height for streamed ops (None = per-shape heuristic);
+    /// a per-call `block_rows` overrides it.
+    block_rows: Option<usize>,
+    stats: Arc<DispatchStats>,
+}
+
+impl NativeExecutor {
+    pub fn new(stats: Arc<DispatchStats>) -> NativeExecutor {
+        NativeExecutor {
+            threads: default_threads(),
+            block_rows: None,
+            stats,
+        }
+    }
+
+    /// Override the worker count and default shard height (tests, tuning).
+    pub fn with_tuning(
+        stats: Arc<DispatchStats>,
+        threads: usize,
+        block_rows: Option<usize>,
+    ) -> NativeExecutor {
+        NativeExecutor {
+            threads: threads.max(1),
+            block_rows,
+            stats,
+        }
+    }
+}
+
+impl Executor for NativeExecutor {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports(&self, _op: &str) -> bool {
+        true
+    }
+
+    fn hd_transform(&self, aug: &Mat, signs: &[f64]) -> Mat {
+        let mut m = aug.clone();
+        crate::sketch::fwht::randomized_hadamard(&mut m, signs);
+        m
+    }
+
+    fn hd_transform_mut(&self, aug: &mut Mat, signs: &[f64]) {
+        crate::sketch::fwht::randomized_hadamard(aug, signs);
+    }
+
+    fn batch_grad(&self, m: &Mat, v: &[f64], x: &[f64], scale: f64) -> Vec<f64> {
+        blas::fused_grad(m, v, x, scale)
+    }
+
+    fn full_grad(&self, a: &Mat, b: &[f64], x: &[f64]) -> Vec<f64> {
+        blas::fused_grad(a, b, x, 2.0)
+    }
+
+    fn residual_sq(&self, a: &Mat, b: &[f64], x: &[f64]) -> f64 {
+        blas::residual_sq(a, b, x)
+    }
+
+    fn gd_step(
+        &self,
+        x: &[f64],
+        pinv: &Mat,
+        g: &[f64],
+        eta: f64,
+        cons: &Constraint,
+        metric: Option<&MetricProjector>,
+    ) -> Vec<f64> {
+        let step = blas::gemv(pinv, g);
+        let mut out = x.to_vec();
+        for (o, s) in out.iter_mut().zip(&step) {
+            *o -= eta * s;
+        }
+        match metric {
+            Some(m) => m.project(&out, cons),
+            None => {
+                cons.project(&mut out);
+                out
+            }
+        }
+    }
+
+    fn sgd_chunk(
+        &self,
+        hda: &Mat,
+        hdb: &[f64],
+        x0: &[f64],
+        pinv: &Mat,
+        idx: &[Vec<usize>],
+        eta: f64,
+        scale: f64,
+        cons: &Constraint,
+        metric: Option<&MetricProjector>,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let r = idx.first().map(|v| v.len()).unwrap_or(0);
+        let d = hda.cols;
+        let mut x = x0.to_vec();
+        let mut xsum = vec![0.0; d];
+        let mut mbuf = Mat::zeros(r, d);
+        let mut vbuf = vec![0.0; r];
+        for tau in idx {
+            for (k, &i) in tau.iter().enumerate() {
+                mbuf.row_mut(k).copy_from_slice(hda.row(i));
+                vbuf[k] = hdb[i];
+            }
+            let c = blas::fused_grad(&mbuf, &vbuf, &x, scale);
+            let step = blas::gemv(pinv, &c);
+            for (xi, si) in x.iter_mut().zip(&step) {
+                *xi -= eta * si;
+            }
+            match metric {
+                Some(m) => x = m.project(&x, cons),
+                None => cons.project(&mut x),
+            }
+            for (s, xi) in xsum.iter_mut().zip(&x) {
+                *s += xi;
+            }
+        }
+        (x, xsum)
+    }
+
+    fn acc_chunk(
+        &self,
+        hda: &Mat,
+        hdb: &[f64],
+        x0: &[f64],
+        xhat0: &[f64],
+        pinv: &Mat,
+        idx: &[Vec<usize>],
+        alphas: &[f64],
+        qs: &[f64],
+        etas: &[f64],
+        mu: f64,
+        scale: f64,
+        cons: &Constraint,
+        metric: Option<&MetricProjector>,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let r = idx.first().map(|v| v.len()).unwrap_or(0);
+        let d = hda.cols;
+        let mut x = x0.to_vec();
+        let mut xhat = xhat0.to_vec();
+        let mut mbuf = Mat::zeros(r, d);
+        let mut vbuf = vec![0.0; r];
+        for (step_i, tau) in idx.iter().enumerate() {
+            let (a_t, q_t, eta_t) = (alphas[step_i], qs[step_i], etas[step_i]);
+            // x~ = (1 - q) xhat + q x
+            let xtilde: Vec<f64> = xhat
+                .iter()
+                .zip(&x)
+                .map(|(h, xi)| (1.0 - q_t) * h + q_t * xi)
+                .collect();
+            for (k, &i) in tau.iter().enumerate() {
+                mbuf.row_mut(k).copy_from_slice(hda.row(i));
+                vbuf[k] = hdb[i];
+            }
+            let c = blas::fused_grad(&mbuf, &vbuf, &xtilde, scale);
+            let pc = blas::gemv(pinv, &c);
+            let denom = 1.0 + eta_t * mu;
+            let mut xn: Vec<f64> = (0..d)
+                .map(|j| (eta_t * mu * xtilde[j] + x[j] - eta_t * pc[j]) / denom)
+                .collect();
+            match metric {
+                Some(m) => xn = m.project(&xn, cons),
+                None => cons.project(&mut xn),
+            }
+            for j in 0..d {
+                xhat[j] = (1.0 - a_t) * xhat[j] + a_t * xn[j];
+            }
+            x = xn;
+        }
+        (x, xhat)
+    }
+
+    fn pw_gradient_chunk(
+        &self,
+        a: &Mat,
+        b: &[f64],
+        x0: &[f64],
+        pinv: &Mat,
+        eta: f64,
+        t: usize,
+        cons: &Constraint,
+        metric: Option<&MetricProjector>,
+    ) -> Vec<f64> {
+        let mut x = x0.to_vec();
+        for _ in 0..t {
+            let g = blas::fused_grad(a, b, &x, 2.0);
+            let step = blas::gemv(pinv, &g);
+            for (xi, si) in x.iter_mut().zip(&step) {
+                *xi -= eta * si;
+            }
+            match metric {
+                Some(m) => x = m.project(&x, cons),
+                None => cons.project(&mut x),
+            }
+        }
+        x
+    }
+
+    /// Block-streamed sketch application: shards are folded on worker
+    /// threads and merged deterministically; every shard folded is counted
+    /// in `DispatchStats::native_block_calls`. Dense-fallback passes (SRHT,
+    /// single shard, empty input) fold zero shards and count zero — the
+    /// counter means "the block-streamed path ran", nothing else.
+    fn sketch_apply(
+        &self,
+        sk: &(dyn Sketch + Send + Sync),
+        a: &Mat,
+        block_rows: Option<usize>,
+    ) -> Mat {
+        let br = block_rows.or(self.block_rows);
+        let (sa, shards) = apply_streamed(sk, a, br, self.threads);
+        if shards > 1 {
+            self.stats.add_block_calls(shards);
+        }
+        sa
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PjrtExecutor
+// ---------------------------------------------------------------------------
+
+/// The artifact backend: executes ops whose canonical name is in the loaded
+/// PJRT manifest. The facade guarantees eligibility (no metric projection,
+/// no box constraints) before routing here.
+pub struct PjrtExecutor {
+    engine: EngineHandle,
+}
+
+impl PjrtExecutor {
+    pub fn new(engine: EngineHandle) -> PjrtExecutor {
+        PjrtExecutor { engine }
+    }
+
+    pub fn engine(&self) -> &EngineHandle {
+        &self.engine
+    }
+
+    fn flat_idx(idx: &[Vec<usize>]) -> Vec<i32> {
+        idx.iter()
+            .flat_map(|row| row.iter().map(|&i| i as i32))
+            .collect()
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn accelerated(&self) -> bool {
+        true
+    }
+
+    fn supports(&self, op: &str) -> bool {
+        self.engine.has_op(op)
+    }
+
+    fn hd_transform(&self, aug: &Mat, signs: &[f64]) -> Mat {
+        let op = opkey::hd_transform(aug.rows, aug.cols);
+        let out = self
+            .engine
+            .execute(&op, vec![Value::Mat(aug.clone()), Value::Vec(signs.to_vec())])
+            .expect("hd_transform artifact");
+        Mat::from_vec(aug.rows, aug.cols, out.into_iter().next().unwrap())
+    }
+
+    fn batch_grad(&self, m: &Mat, v: &[f64], x: &[f64], scale: f64) -> Vec<f64> {
+        let op = opkey::batch_grad(m.rows, m.cols);
+        let out = self
+            .engine
+            .execute(
+                &op,
+                vec![
+                    Value::Mat(m.clone()),
+                    Value::Vec(v.to_vec()),
+                    Value::Vec(x.to_vec()),
+                    Value::Scalar(scale),
+                ],
+            )
+            .expect("batch_grad artifact");
+        out.into_iter().next().unwrap()
+    }
+
+    fn full_grad(&self, a: &Mat, b: &[f64], x: &[f64]) -> Vec<f64> {
+        let op = opkey::full_grad(a.rows, a.cols);
+        let out = self
+            .engine
+            .execute(
+                &op,
+                vec![
+                    Value::Mat(a.clone()),
+                    Value::Vec(b.to_vec()),
+                    Value::Vec(x.to_vec()),
+                ],
+            )
+            .expect("full_grad artifact");
+        out.into_iter().next().unwrap()
+    }
+
+    fn residual_sq(&self, a: &Mat, b: &[f64], x: &[f64]) -> f64 {
+        let op = opkey::residual_sq(a.rows, a.cols);
+        let out = self
+            .engine
+            .execute(
+                &op,
+                vec![
+                    Value::Mat(a.clone()),
+                    Value::Vec(b.to_vec()),
+                    Value::Vec(x.to_vec()),
+                ],
+            )
+            .expect("residual_sq artifact");
+        out[0][0]
+    }
+
+    fn gd_step(
+        &self,
+        x: &[f64],
+        pinv: &Mat,
+        g: &[f64],
+        eta: f64,
+        cons: &Constraint,
+        metric: Option<&MetricProjector>,
+    ) -> Vec<f64> {
+        debug_assert!(
+            metric.is_none() || cons.tag() == "unc",
+            "facade must not route metric projections to PJRT"
+        );
+        let op = opkey::gd_step(cons, x.len());
+        let out = self
+            .engine
+            .execute(
+                &op,
+                vec![
+                    Value::Vec(x.to_vec()),
+                    Value::Mat(pinv.clone()),
+                    Value::Vec(g.to_vec()),
+                    Value::Scalar(eta),
+                    Value::Scalar(cons.radius()),
+                ],
+            )
+            .expect("gd_step artifact");
+        out.into_iter().next().unwrap()
+    }
+
+    fn sgd_chunk(
+        &self,
+        hda: &Mat,
+        hdb: &[f64],
+        x0: &[f64],
+        pinv: &Mat,
+        idx: &[Vec<usize>],
+        eta: f64,
+        scale: f64,
+        cons: &Constraint,
+        metric: Option<&MetricProjector>,
+    ) -> (Vec<f64>, Vec<f64>) {
+        debug_assert!(metric.is_none() || cons.tag() == "unc");
+        let t = idx.len();
+        let r = idx.first().map(|v| v.len()).unwrap_or(0);
+        let op = opkey::sgd_chunk(cons, hda.rows, hda.cols, r, t);
+        let out = self
+            .engine
+            .execute(
+                &op,
+                vec![
+                    Value::Mat(hda.clone()),
+                    Value::Vec(hdb.to_vec()),
+                    Value::Vec(x0.to_vec()),
+                    Value::Mat(pinv.clone()),
+                    Value::MatI32 {
+                        rows: t,
+                        cols: r,
+                        data: Self::flat_idx(idx),
+                    },
+                    Value::Scalar(eta),
+                    Value::Scalar(scale),
+                    Value::Scalar(cons.radius()),
+                ],
+            )
+            .expect("sgd_chunk artifact");
+        let mut it = out.into_iter();
+        (it.next().unwrap(), it.next().unwrap())
+    }
+
+    fn acc_chunk(
+        &self,
+        hda: &Mat,
+        hdb: &[f64],
+        x0: &[f64],
+        xhat0: &[f64],
+        pinv: &Mat,
+        idx: &[Vec<usize>],
+        alphas: &[f64],
+        qs: &[f64],
+        etas: &[f64],
+        mu: f64,
+        scale: f64,
+        cons: &Constraint,
+        metric: Option<&MetricProjector>,
+    ) -> (Vec<f64>, Vec<f64>) {
+        debug_assert!(metric.is_none() || cons.tag() == "unc");
+        let t = idx.len();
+        let r = idx.first().map(|v| v.len()).unwrap_or(0);
+        let op = opkey::acc_chunk(cons, hda.rows, hda.cols, r, t);
+        let out = self
+            .engine
+            .execute(
+                &op,
+                vec![
+                    Value::Mat(hda.clone()),
+                    Value::Vec(hdb.to_vec()),
+                    Value::Vec(x0.to_vec()),
+                    Value::Vec(xhat0.to_vec()),
+                    Value::Mat(pinv.clone()),
+                    Value::MatI32 {
+                        rows: t,
+                        cols: r,
+                        data: Self::flat_idx(idx),
+                    },
+                    Value::Vec(alphas.to_vec()),
+                    Value::Vec(qs.to_vec()),
+                    Value::Vec(etas.to_vec()),
+                    Value::Scalar(mu),
+                    Value::Scalar(scale),
+                    Value::Scalar(cons.radius()),
+                ],
+            )
+            .expect("acc_chunk artifact");
+        let mut it = out.into_iter();
+        (it.next().unwrap(), it.next().unwrap())
+    }
+
+    fn pw_gradient_chunk(
+        &self,
+        a: &Mat,
+        b: &[f64],
+        x0: &[f64],
+        pinv: &Mat,
+        eta: f64,
+        t: usize,
+        cons: &Constraint,
+        metric: Option<&MetricProjector>,
+    ) -> Vec<f64> {
+        debug_assert!(metric.is_none() || cons.tag() == "unc");
+        let op = opkey::pw_gradient_chunk(cons, a.rows, a.cols, t);
+        let out = self
+            .engine
+            .execute(
+                &op,
+                vec![
+                    Value::Mat(a.clone()),
+                    Value::Vec(b.to_vec()),
+                    Value::Vec(x0.to_vec()),
+                    Value::Mat(pinv.clone()),
+                    Value::Scalar(eta),
+                    Value::Scalar(cons.radius()),
+                ],
+            )
+            .expect("pw_gradient_chunk artifact");
+        out.into_iter().next().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_supports_everything_and_counts_blocks() {
+        let stats = Arc::new(DispatchStats::default());
+        let ex = NativeExecutor::with_tuning(Arc::clone(&stats), 4, Some(16));
+        assert!(ex.supports("anything_at_all"));
+        assert_eq!(ex.name(), "native");
+        let mut rng = Rng::new(1);
+        let a = Mat::gaussian(200, 4, &mut rng);
+        let sk = crate::sketch::SketchKind::CountSketch.build(32, 200, &mut rng);
+        let sa = ex.sketch_apply(sk.as_ref(), &a, None);
+        let dense = sk.apply(&a);
+        assert!(sa.max_abs_diff(&dense) < 1e-12);
+        // 200 rows / 16-row shards = 13 shards folded
+        assert_eq!(stats.native_block_calls.load(Ordering::Relaxed), 13);
+    }
+
+    #[test]
+    fn dense_fallback_does_not_count_block_calls() {
+        let stats = Arc::new(DispatchStats::default());
+        let ex = NativeExecutor::with_tuning(Arc::clone(&stats), 4, Some(16));
+        let mut rng = Rng::new(5);
+        let a = Mat::gaussian(200, 4, &mut rng);
+        // SRHT: documented dense fallback — folds zero shards
+        let srht = crate::sketch::SketchKind::Srht.build(32, 200, &mut rng);
+        let _ = ex.sketch_apply(srht.as_ref(), &a, None);
+        // single-shard streamable sketch: also a dense pass
+        let cs = crate::sketch::SketchKind::CountSketch.build(32, 200, &mut rng);
+        let _ = ex.sketch_apply(cs.as_ref(), &a, Some(4096));
+        assert_eq!(stats.native_block_calls.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn per_call_block_rows_overrides_executor_default() {
+        let stats = Arc::new(DispatchStats::default());
+        let ex = NativeExecutor::with_tuning(Arc::clone(&stats), 2, Some(64));
+        let mut rng = Rng::new(2);
+        let a = Mat::gaussian(128, 3, &mut rng);
+        let sk = crate::sketch::SketchKind::SparseEmbed.build(24, 128, &mut rng);
+        let _ = ex.sketch_apply(sk.as_ref(), &a, Some(32));
+        assert_eq!(stats.native_block_calls.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn dispatch_stats_fallback_reason_roundtrip() {
+        let stats = DispatchStats::default();
+        assert!(stats.fallback_reason().is_none());
+        stats.set_fallback_reason("no artifacts".into());
+        assert_eq!(stats.fallback_reason().as_deref(), Some("no artifacts"));
+    }
+
+    #[test]
+    fn opkeys_match_manifest_grammar() {
+        assert_eq!(opkey::hd_transform(8192, 33), "hd_transform_n8192_c33");
+        assert_eq!(opkey::batch_grad(64, 32), "batch_grad_r64_d32");
+        let unc = Constraint::Unconstrained;
+        assert_eq!(opkey::gd_step(&unc, 32), "gd_step_unc_d32");
+        assert_eq!(
+            opkey::sgd_chunk(&unc, 8192, 32, 64, 50),
+            "sgd_chunk_unc_n8192_d32_r64_t50"
+        );
+    }
+}

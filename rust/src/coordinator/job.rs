@@ -10,6 +10,10 @@ use crate::solvers::{SolveReport, SolverOpts};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 
+/// Valid `JobRequest::executor` values — the single authority shared by
+/// request validation and the scheduler's backend dispatch.
+pub const EXECUTOR_CHOICES: &[&str] = &["", "default", "native", "auto", "pjrt"];
+
 #[derive(Clone, Debug)]
 pub struct JobRequest {
     pub id: u64,
@@ -32,6 +36,11 @@ pub struct JobRequest {
     pub sketch_size: usize, // 0 = auto
     pub eta: f64,           // 0 = theory default
     pub normalize: bool,
+    /// Backend for this request: default (coordinator's shared backend) |
+    /// native | auto | pjrt (pjrt = hard-require artifacts).
+    pub executor: String,
+    /// Row-shard height for block-streamed setup ops; 0 = heuristic.
+    pub block_rows: usize,
 }
 
 impl Default for JobRequest {
@@ -53,6 +62,8 @@ impl Default for JobRequest {
             sketch_size: 0,
             eta: 0.0,
             normalize: false,
+            executor: "default".into(),
+            block_rows: 0,
         }
     }
 }
@@ -76,6 +87,8 @@ impl JobRequest {
             ("sketch_size", Json::num(self.sketch_size as f64)),
             ("eta", Json::num(self.eta)),
             ("normalize", Json::Bool(self.normalize)),
+            ("executor", Json::str(self.executor.clone())),
+            ("block_rows", Json::num(self.block_rows as f64)),
         ])
     }
 
@@ -108,6 +121,8 @@ impl JobRequest {
                 .get("normalize")
                 .and_then(Json::as_bool)
                 .unwrap_or(def.normalize),
+            executor: get_s("executor", &def.executor),
+            block_rows: get_n("block_rows", def.block_rows as f64) as usize,
         };
         req.validate()?;
         Ok(req)
@@ -129,6 +144,13 @@ impl JobRequest {
         }
         if self.batch_size == 0 || self.max_iters == 0 {
             bail!("batch_size and max_iters must be positive");
+        }
+        if !EXECUTOR_CHOICES.contains(&self.executor.as_str()) {
+            bail!(
+                "unknown executor {:?} (valid: {:?})",
+                self.executor,
+                EXECUTOR_CHOICES
+            );
         }
         Ok(())
     }
@@ -157,6 +179,7 @@ impl JobRequest {
             sketch_size: (self.sketch_size > 0).then_some(self.sketch_size),
             eta: (self.eta > 0.0).then_some(self.eta),
             chunk: 50,
+            block_rows: (self.block_rows > 0).then_some(self.block_rows),
             seed: self.seed,
         })
     }
@@ -244,6 +267,29 @@ mod tests {
         assert!(JobRequest::from_json(&j).is_err());
         let j = Json::parse(r#"{"sketch": "fourier"}"#).unwrap();
         assert!(JobRequest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn executor_and_block_rows_roundtrip() {
+        let mut req = JobRequest::default();
+        req.executor = "native".into();
+        req.block_rows = 4096;
+        let back = JobRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back.executor, "native");
+        assert_eq!(back.block_rows, 4096);
+        // missing fields default
+        let j = Json::parse(r#"{"solver": "exact"}"#).unwrap();
+        let d = JobRequest::from_json(&j).unwrap();
+        assert_eq!(d.executor, "default");
+        assert_eq!(d.block_rows, 0);
+        // bad executor rejected
+        let j = Json::parse(r#"{"executor": "gpu9000"}"#).unwrap();
+        assert!(JobRequest::from_json(&j).is_err());
+        // block_rows threads into SolverOpts
+        let opts = back.solver_opts(0.0, None).unwrap();
+        assert_eq!(opts.block_rows, Some(4096));
+        let opts0 = d.solver_opts(0.0, None).unwrap();
+        assert_eq!(opts0.block_rows, None);
     }
 
     #[test]

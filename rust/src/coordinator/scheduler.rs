@@ -7,7 +7,7 @@
 //! the unconstrained optimum; datasets are normalized for low-precision
 //! solvers when requested.
 
-use super::job::{JobRequest, JobResult};
+use super::job::{JobRequest, JobResult, EXECUTOR_CHOICES};
 use super::metrics::Metrics;
 use crate::backend::Backend;
 use crate::data::{io, uci_sim, Dataset};
@@ -16,7 +16,7 @@ use crate::solvers::SolveReport;
 use crate::util::rng::Rng;
 use crate::util::stats::Timer;
 use crate::util::threadpool::ThreadPool;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
@@ -68,6 +68,50 @@ impl Coordinator {
 
     pub fn backend(&self) -> &Backend {
         &self.backend
+    }
+
+    /// Resolve the backend serving one request (the serve loop's
+    /// per-request executor selection):
+    ///   default -> the coordinator's shared backend;
+    ///   native  -> a fresh native backend (isolated dispatch stats);
+    ///   auto    -> shared backend (it already made the auto decision);
+    ///   pjrt    -> a stats-isolated fork of the shared backend that
+    ///              *hard-requires* artifacts — missing engine errors here,
+    ///              and off-manifest shapes are caught after the solve
+    ///              (zero PJRT dispatches on the fork = the request silently
+    ///              ran native, which this mode exists to forbid).
+    fn backend_for(&self, req: &JobRequest) -> Result<Backend> {
+        match req.executor.as_str() {
+            "" | "default" | "auto" => Ok(self.backend.clone()),
+            // inherits the shared backend's thread/shard tuning, drops pjrt
+            "native" => Ok(self.backend.fork_native()),
+            "pjrt" => {
+                // constrained solves activate the R-metric projection, which
+                // the artifacts don't implement — the iteration loop would
+                // silently run native, defeating the hard-require contract
+                if req.constraint != "unc" {
+                    bail!(
+                        "executor \"pjrt\" supports unconstrained jobs only: \
+                         constrained solves use the native-only R-metric projection"
+                    );
+                }
+                if self.backend.has_pjrt() {
+                    // fresh counters: concurrent jobs on the shared backend
+                    // must not mask this request's dispatch mix
+                    Ok(self.backend.fork_stats())
+                } else {
+                    bail!(
+                        "executor \"pjrt\" requested but no PJRT engine is loaded: {}",
+                        self.backend
+                            .pjrt_fallback_reason()
+                            .unwrap_or_else(|| "backend was constructed native-only".into())
+                    );
+                }
+            }
+            // unreachable after validate(); kept as a guard so a choice
+            // added to EXECUTOR_CHOICES without a dispatch arm fails loudly
+            other => bail!("executor {other:?} validated but has no dispatch arm ({EXECUTOR_CHOICES:?})"),
+        }
     }
 
     /// Resolve (generate or load) the dataset + ground truth for a request.
@@ -139,12 +183,32 @@ impl Coordinator {
             }
         };
         let solver = crate::solvers::by_name(&req.solver).expect("validated");
+        let backend = self.backend_for(req)?;
         let mut seed_rng = Rng::new(req.seed);
         let mut best: Option<SolveReport> = None;
+        let mut hard_require_err: Option<anyhow::Error> = None;
         for trial in 0..req.trials {
             let mut opts = req.solver_opts(radius, Some(gt.f_star))?;
             opts.seed = seed_rng.fork(trial as u64).next_u64();
-            let rep = solver.solve(&self.backend, ds, &opts);
+            let rep = solver.solve(&backend, ds, &opts);
+            // pjrt hard-require: the fork's counters see only this job. Check
+            // after the FIRST trial (dispatch mix is identical across trials)
+            // so off-manifest jobs fail fast instead of burning all trials.
+            // A solver that dispatched nothing at all (e.g. exact QR runs
+            // entirely in-process) has nothing to enforce.
+            if trial == 0
+                && req.executor == "pjrt"
+                && backend.pjrt_calls() == 0
+                && backend.native_calls() > 0
+            {
+                hard_require_err = Some(anyhow!(
+                    "executor \"pjrt\" requested but no op of this job hit the \
+                     manifest (n={}, solver {:?}); the solve ran fully native",
+                    ds.n(),
+                    req.solver
+                ));
+                break;
+            }
             let better = match &best {
                 None => true,
                 Some(b) => rep.f_final < b.f_final,
@@ -152,6 +216,17 @@ impl Coordinator {
             if better {
                 best = Some(rep);
             }
+        }
+        // pinned-executor jobs ran on a private backend; fold their dispatch
+        // counters into the shared stats so the serve loop's metrics line
+        // reflects every request — including ones about to fail the
+        // hard-require check (that misrouted work is exactly what the
+        // metrics exist to expose)
+        if matches!(req.executor.as_str(), "native" | "pjrt") {
+            self.backend.stats().absorb(backend.stats());
+        }
+        if let Some(err) = hard_require_err {
+            return Err(err);
         }
         let best = best.expect("at least one trial");
         let total_secs = timer.secs();
@@ -284,6 +359,22 @@ mod tests {
             c.metrics.jobs_completed.load(Ordering::Relaxed),
             6
         );
+    }
+
+    #[test]
+    fn per_request_executor_selection() {
+        let c = coord();
+        // explicit native executor works and solves
+        let mut req = small_req("pwgradient");
+        req.executor = "native".into();
+        req.block_rows = 128;
+        let res = c.run_job(&req).unwrap();
+        assert!(res.best_rel_err < 1e-6);
+        // pjrt required but the coordinator is native-only -> clean error
+        let mut req2 = small_req("exact");
+        req2.executor = "pjrt".into();
+        let err = c.run_job(&req2).unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
     }
 
     #[test]

@@ -58,8 +58,23 @@ pub fn handle_connection<R: BufRead, W: Write + Send + 'static>(
                     let _ = tx.send("{\"ok\":true}".to_string());
                 }
                 "metrics" => {
-                    let snap = coord.metrics.snapshot();
-                    let _ = tx.send(Json::obj(vec![("metrics", Json::str(snap))]).to_string());
+                    // dispatch-mix visibility: a native fallback must be
+                    // distinguishable from a healthy PJRT deploy over the wire
+                    let be = coord.backend();
+                    let mut fields = vec![
+                        ("metrics", Json::str(coord.metrics.snapshot())),
+                        ("pjrt", Json::Bool(be.has_pjrt())),
+                        ("pjrt_calls", Json::num(be.pjrt_calls() as f64)),
+                        ("native_calls", Json::num(be.native_calls() as f64)),
+                        (
+                            "native_block_calls",
+                            Json::num(be.native_block_calls() as f64),
+                        ),
+                    ];
+                    if let Some(reason) = be.pjrt_fallback_reason() {
+                        fields.push(("pjrt_fallback", Json::str(reason)));
+                    }
+                    let _ = tx.send(Json::obj(fields).to_string());
                 }
                 "quit" => break,
                 other => {
@@ -164,6 +179,9 @@ mod tests {
         let out = run_session("{\"cmd\":\"ping\"}\n{\"cmd\":\"metrics\"}\n");
         assert_eq!(out[0].get("ok").and_then(Json::as_bool), Some(true));
         assert!(out[1].get("metrics").is_some());
+        // backend status rides along so operators can spot a native fallback
+        assert_eq!(out[1].get("pjrt").and_then(Json::as_bool), Some(false));
+        assert!(out[1].get("native_calls").is_some());
     }
 
     #[test]

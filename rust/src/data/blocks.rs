@@ -1,0 +1,210 @@
+//! Sharded, zero-copy row-block views — the unit of work for the streaming
+//! sketch/precondition pipeline.
+//!
+//! A [`RowBlocks`] view carves a row-major [`Mat`] into contiguous shards of
+//! `block_rows` rows each (the last shard may be short). Nothing is copied:
+//! each [`RowBlock`] borrows its slice of the parent's payload, so a shard
+//! can be handed to a worker thread, folded into a sketch accumulator, or
+//! shipped to an executor without touching the heap.
+//!
+//! Block-size heuristic ([`default_block_rows`]): shards are sized to fit a
+//! core's L2 slice (~256 KiB of f64) while still producing enough shards to
+//! keep every worker busy with a few tasks each — the same shape the
+//! coordinator uses for job-level parallelism, applied at the data level.
+
+use crate::linalg::Mat;
+use crate::util::threadpool::default_threads;
+
+/// One contiguous shard of rows, borrowed from the parent matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct RowBlock<'a> {
+    /// Global index (in the parent) of this shard's first row.
+    pub start: usize,
+    /// Number of rows in this shard.
+    pub rows: usize,
+    /// Column count (same as the parent).
+    pub cols: usize,
+    /// Borrowed row-major payload: exactly `rows * cols` elements.
+    pub data: &'a [f64],
+}
+
+impl<'a> RowBlock<'a> {
+    /// Row `k` of the shard (local index).
+    #[inline]
+    pub fn row(&self, k: usize) -> &'a [f64] {
+        &self.data[k * self.cols..(k + 1) * self.cols]
+    }
+
+    /// Global row index of local row `k`.
+    #[inline]
+    pub fn global_row(&self, k: usize) -> usize {
+        self.start + k
+    }
+}
+
+/// Sharded view of a matrix as contiguous row blocks (no copying).
+#[derive(Clone, Copy)]
+pub struct RowBlocks<'a> {
+    mat: &'a Mat,
+    block_rows: usize,
+}
+
+impl<'a> RowBlocks<'a> {
+    /// View `mat` as shards of `block_rows` rows. `block_rows` must be > 0.
+    pub fn new(mat: &'a Mat, block_rows: usize) -> RowBlocks<'a> {
+        assert!(block_rows > 0, "block_rows must be positive");
+        RowBlocks { mat, block_rows }
+    }
+
+    /// View with the heuristic shard size for this shape.
+    pub fn auto(mat: &'a Mat) -> RowBlocks<'a> {
+        RowBlocks::new(mat, default_block_rows(mat.rows, mat.cols))
+    }
+
+    pub fn block_rows(&self) -> usize {
+        self.block_rows
+    }
+
+    /// Number of shards (0 for an empty matrix).
+    pub fn num_blocks(&self) -> usize {
+        self.mat.rows.div_ceil(self.block_rows)
+    }
+
+    /// Shard `i`; the last shard may hold fewer than `block_rows` rows.
+    pub fn block(&self, i: usize) -> RowBlock<'a> {
+        let start = i * self.block_rows;
+        assert!(start < self.mat.rows, "block index {i} out of range");
+        let rows = self.block_rows.min(self.mat.rows - start);
+        let cols = self.mat.cols;
+        RowBlock {
+            start,
+            rows,
+            cols,
+            data: &self.mat.data[start * cols..(start + rows) * cols],
+        }
+    }
+
+    /// Iterate shards in row order.
+    pub fn iter(&self) -> RowBlocksIter<'a> {
+        RowBlocksIter {
+            blocks: *self,
+            next: 0,
+        }
+    }
+}
+
+impl<'a> IntoIterator for RowBlocks<'a> {
+    type Item = RowBlock<'a>;
+    type IntoIter = RowBlocksIter<'a>;
+
+    fn into_iter(self) -> RowBlocksIter<'a> {
+        RowBlocksIter {
+            blocks: self,
+            next: 0,
+        }
+    }
+}
+
+/// Iterator over the shards of a [`RowBlocks`] view.
+pub struct RowBlocksIter<'a> {
+    blocks: RowBlocks<'a>,
+    next: usize,
+}
+
+impl<'a> Iterator for RowBlocksIter<'a> {
+    type Item = RowBlock<'a>;
+
+    fn next(&mut self) -> Option<RowBlock<'a>> {
+        if self.next >= self.blocks.num_blocks() {
+            return None;
+        }
+        let b = self.blocks.block(self.next);
+        self.next += 1;
+        Some(b)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = self.blocks.num_blocks().saturating_sub(self.next);
+        (left, Some(left))
+    }
+}
+
+impl ExactSizeIterator for RowBlocksIter<'_> {}
+
+/// Heuristic shard height for an `n x d` matrix.
+///
+/// Two pressures, take the tighter: (a) a shard should stay within ~256 KiB
+/// of f64 payload so a worker's fold runs out of L2; (b) there should be at
+/// least ~4 shards per worker thread so the atomic-counter work queue can
+/// balance uneven progress. Always at least 1 row and never more than n.
+pub fn default_block_rows(n: usize, d: usize) -> usize {
+    const TARGET_ELEMS: usize = 32 * 1024; // 256 KiB / 8 bytes
+    let n = n.max(1);
+    let by_cache = (TARGET_ELEMS / d.max(1)).max(1);
+    let by_threads = n.div_ceil(4 * default_threads().max(1)).max(1);
+    by_cache.min(by_threads).min(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn blocks_tile_the_matrix_exactly() {
+        let mut rng = Rng::new(1);
+        for n in [1usize, 7, 64, 100, 127] {
+            let m = Mat::gaussian(n, 3, &mut rng);
+            for br in [1usize, 2, 5, 64, 200] {
+                let view = RowBlocks::new(&m, br);
+                let mut covered = 0usize;
+                for (bi, blk) in view.iter().enumerate() {
+                    assert_eq!(blk.start, bi * br);
+                    assert_eq!(blk.cols, 3);
+                    for k in 0..blk.rows {
+                        assert_eq!(blk.row(k), m.row(blk.global_row(k)));
+                    }
+                    covered += blk.rows;
+                }
+                assert_eq!(covered, n, "n={n} br={br}");
+                assert_eq!(view.iter().count(), view.num_blocks());
+            }
+        }
+    }
+
+    #[test]
+    fn zero_copy_borrows_parent_payload() {
+        let m = Mat::from_fn(10, 2, |i, j| (i * 2 + j) as f64);
+        let view = RowBlocks::new(&m, 4);
+        let b = view.block(1);
+        // same addresses, not a copy
+        assert!(std::ptr::eq(b.data.as_ptr(), m.row(4).as_ptr()));
+        assert_eq!(b.rows, 4);
+        let last = view.block(2);
+        assert_eq!(last.rows, 2);
+        assert_eq!(last.start, 8);
+    }
+
+    #[test]
+    fn heuristic_bounds() {
+        // tiny inputs never exceed n and never hit zero
+        assert_eq!(default_block_rows(1, 5), 1);
+        assert!(default_block_rows(10, 5) >= 1);
+        // large n: cache bound dominates, shards stay modest
+        let br = default_block_rows(1 << 20, 50);
+        assert!(br >= 1 && br <= 32 * 1024 / 50 + 1, "br={br}");
+        // many blocks exist for a big matrix (parallel criterion)
+        let n = 1 << 17;
+        let br2 = default_block_rows(n, 50);
+        assert!(n.div_ceil(br2) > 1, "expected multiple shards");
+        // degenerate d=0 must not divide by zero
+        assert!(default_block_rows(100, 0) >= 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_block_rows_rejected() {
+        let m = Mat::zeros(4, 2);
+        let _ = RowBlocks::new(&m, 0);
+    }
+}

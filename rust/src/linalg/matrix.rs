@@ -114,6 +114,45 @@ impl Mat {
         out
     }
 
+    /// Pack [self | col] into a fresh matrix with `rows_out >= rows` rows
+    /// (extra rows zero). One allocation, one pass — the streaming
+    /// precondition pipeline uses this to build the padded [A | b] FWHT
+    /// buffer directly instead of hstack-then-pad (which materializes the
+    /// dense [A | b] twice).
+    pub fn hstack_col_padded(&self, col: &[f64], rows_out: usize) -> Mat {
+        assert_eq!(self.rows, col.len());
+        assert!(rows_out >= self.rows);
+        let d = self.cols;
+        let mut out = Mat::zeros(rows_out, d + 1);
+        for i in 0..self.rows {
+            let orow = out.row_mut(i);
+            orow[..d].copy_from_slice(self.row(i));
+            orow[d] = col[i];
+        }
+        out
+    }
+
+    /// Split off the last column *in place* (no second allocation for the
+    /// left block): rows are compacted forward within the existing buffer.
+    /// Counterpart of [`Mat::split_last_col`] for owned packed matrices.
+    pub fn into_split_last_col(mut self) -> (Mat, Vec<f64>) {
+        assert!(self.cols >= 1);
+        let d = self.cols - 1;
+        let n = self.rows;
+        let mut b = Vec::with_capacity(n);
+        for i in 0..n {
+            let src = i * (d + 1);
+            // read b[i] before compacting: later rows' writes stay below
+            // their own source offsets, so forward compaction never clobbers
+            // unread data
+            b.push(self.data[src + d]);
+            self.data.copy_within(src..src + d, i * d);
+        }
+        self.data.truncate(n * d);
+        self.cols = d;
+        (self, b)
+    }
+
     /// Split off the last column (used for the packed [A | b] layout).
     pub fn split_last_col(&self) -> (Mat, Vec<f64>) {
         assert!(self.cols >= 1);
@@ -220,6 +259,31 @@ mod tests {
         let (a2, bv) = ab.split_last_col();
         assert_eq!(a2, a);
         assert_eq!(bv, vec![100., 101., 102.]);
+    }
+
+    #[test]
+    fn packed_padded_matches_hstack_then_pad() {
+        let mut rng = Rng::new(7);
+        for (n, pad) in [(5usize, 8usize), (8, 8), (1, 4)] {
+            let a = Mat::gaussian(n, 3, &mut rng);
+            let b = rng.gaussians(n);
+            let direct = a.hstack_col_padded(&b, pad);
+            let bmat = Mat::from_vec(n, 1, b.clone());
+            let two_step = a.hstack(&bmat).pad_rows(pad);
+            assert_eq!(direct, two_step, "n={n} pad={pad}");
+        }
+    }
+
+    #[test]
+    fn into_split_matches_copy_split() {
+        let mut rng = Rng::new(8);
+        for (n, d) in [(6usize, 4usize), (1, 1), (9, 2)] {
+            let m = Mat::gaussian(n, d + 1, &mut rng);
+            let (want_a, want_b) = m.split_last_col();
+            let (got_a, got_b) = m.clone().into_split_last_col();
+            assert_eq!(got_a, want_a, "n={n} d={d}");
+            assert_eq!(got_b, want_b);
+        }
     }
 
     #[test]

@@ -88,6 +88,8 @@ fn cmd_solve(argv: &[String]) -> i32 {
         .opt("sketch", "gaussian|srht|countsketch|sparse (default countsketch)")
         .opt("sketch-size", "sketch rows s (default auto)")
         .opt("eta", "fixed step size (default: theory)")
+        .opt("executor", "default|native|auto|pjrt (per-request backend)")
+        .opt("block-rows", "row-shard height for streamed setup (default auto)")
         .flag_opt("normalize", "normalize the dataset first")
         .flag_opt("native", "force the native backend (skip PJRT artifacts)")
         .flag_opt("json", "emit the result as JSON");
@@ -108,6 +110,8 @@ fn cmd_solve(argv: &[String]) -> i32 {
     req.sketch = args.get_or("sketch", "countsketch");
     req.sketch_size = args.get_usize("sketch-size", 0);
     req.eta = args.get_f64("eta", 0.0);
+    req.executor = args.get_or("executor", "default");
+    req.block_rows = args.get_usize("block-rows", 0);
     req.normalize = args.flag("normalize");
 
     let backend = if args.flag("native") {
@@ -116,6 +120,7 @@ fn cmd_solve(argv: &[String]) -> i32 {
         Backend::auto()
     };
     let pjrt = backend.has_pjrt();
+    let fallback = backend.pjrt_fallback_reason();
     let coord = Coordinator::new(backend, CoordinatorConfig::default());
     match coord.run_job(&req) {
         Ok(res) => {
@@ -124,10 +129,19 @@ fn cmd_solve(argv: &[String]) -> i32 {
             } else {
                 println!("solver     : {}", res.solver);
                 println!("dataset    : {} (n={})", res.dataset, req.n);
+                // reflect the effective per-request executor, not just the
+                // process-wide backend
                 println!(
                     "backend    : {}",
-                    if pjrt { "pjrt+native" } else { "native" }
+                    match req.executor.as_str() {
+                        "native" => "native (forced per-request)",
+                        _ if pjrt => "pjrt+native",
+                        _ => "native",
+                    }
                 );
+                if let Some(reason) = &fallback {
+                    println!("pjrt fell back: {reason}");
+                }
                 println!("f*         : {:.6e}", res.f_star);
                 println!("f(best)    : {:.6e}", res.best_f);
                 println!("rel error  : {:.3e}", res.best_rel_err);
@@ -313,9 +327,16 @@ fn cmd_artifacts(_argv: &[String]) -> i32 {
 fn cmd_bench_info(_argv: &[String]) -> i32 {
     let backend = Backend::auto();
     println!("pjrt artifacts : {}", backend.has_pjrt());
+    if let Some(reason) = backend.pjrt_fallback_reason() {
+        println!("pjrt fallback  : {reason}");
+    }
     println!(
         "threads        : {}",
         hdpw::util::threadpool::default_threads()
+    );
+    println!(
+        "block heuristic: {} rows for a 2^17 x 50 workload",
+        hdpw::data::default_block_rows(1 << 17, 50)
     );
     0
 }

@@ -8,8 +8,8 @@
 //! `HD` to `[A | b]`, spreading row norms (Theorem 1) so *uniform*
 //! mini-batch sampling has the variance bound of Lemma 9.
 
+use crate::backend::Backend;
 use crate::linalg::{qr, tri, Mat};
-use crate::sketch::fwht::randomized_hadamard;
 use crate::sketch::SketchKind;
 use crate::util::rng::Rng;
 use crate::util::stats::Timer;
@@ -28,18 +28,28 @@ pub struct Precondition {
 }
 
 /// Step 1 of Algorithm 2/4/6: compute R such that AR^{-1} is
-/// well-conditioned, via a sketch of the packed [A | b] (we sketch A only;
-/// b is irrelevant to conditioning).
-pub fn precondition(
+/// well-conditioned, via a sketch of A (we sketch A only; b is irrelevant
+/// to conditioning).
+///
+/// The sketch streams row shards of `A` through the backend's executor
+/// ([`Backend::sketch_apply`]): shards fold into per-worker partial
+/// accumulators in parallel and merge deterministically, so nothing beyond
+/// the `s x d` accumulators is allocated and the result matches the dense
+/// single-pass product to 1e-12 (`tests/streaming_sketch.rs`). SRHT is the
+/// documented dense-fallback exception. `block_rows = None` uses the
+/// cache/thread heuristic.
+pub fn precondition_with(
+    backend: &Backend,
     a: &Mat,
     kind: SketchKind,
     sketch_rows: usize,
     rng: &mut Rng,
+    block_rows: Option<usize>,
 ) -> Precondition {
     assert!(sketch_rows > a.cols, "sketch size must exceed d");
     let t = Timer::start();
     let sk = kind.build(sketch_rows, a.rows, rng);
-    let sa = sk.apply(a);
+    let sa = backend.sketch_apply(sk.as_ref(), a, block_rows);
     let sketch_secs = t.secs();
     let t = Timer::start();
     let r = qr::qr_r(&sa);
@@ -53,6 +63,17 @@ pub fn precondition(
         sketch_kind: kind,
         sketch_rows,
     }
+}
+
+/// Backend-less convenience wrapper (benches, tests, one-off callers):
+/// streams through a throwaway native executor with heuristic shard size.
+pub fn precondition(
+    a: &Mat,
+    kind: SketchKind,
+    sketch_rows: usize,
+    rng: &mut Rng,
+) -> Precondition {
+    precondition_with(&Backend::native(), a, kind, sketch_rows, rng, None)
 }
 
 /// Step 2: the Randomized Hadamard Transform applied to [A | b] packed as an
@@ -70,26 +91,38 @@ pub struct HdTransformed {
     pub secs: f64,
 }
 
-pub fn hd_transform(a: &Mat, b: &[f64], rng: &mut Rng) -> HdTransformed {
+/// Backend-routed HD transform. Memory discipline: the padded [A | b] FWHT
+/// buffer is built in ONE allocation (`Mat::hstack_col_padded` — the dense
+/// [A | b] is never materialized separately, and no pad-time clone exists),
+/// transformed in place on the native route (`Backend::hd_transform_mut`),
+/// and split in place afterwards (`Mat::into_split_last_col`). Peak extra
+/// memory beyond the caller's `A` is the single padded buffer,
+/// `n_pad x (d+1)` — versus the seed's hstack + pad + split chain which
+/// held ~3 copies of A at once.
+pub fn hd_transform_with(
+    backend: &Backend,
+    a: &Mat,
+    b: &[f64],
+    rng: &mut Rng,
+) -> HdTransformed {
     assert_eq!(a.rows, b.len());
     let t = Timer::start();
-    let bmat = Mat::from_vec(b.len(), 1, b.to_vec());
-    let packed = a.hstack(&bmat);
-    let n_pad = packed.rows.next_power_of_two();
-    let mut padded = if n_pad == packed.rows {
-        packed
-    } else {
-        packed.pad_rows(n_pad)
-    };
+    let n_pad = a.rows.next_power_of_two();
+    let mut padded = a.hstack_col_padded(b, n_pad);
     let signs = rng.signs(n_pad);
-    randomized_hadamard(&mut padded, &signs);
-    let (hda, hdb) = padded.split_last_col();
+    backend.hd_transform_mut(&mut padded, &signs);
+    let (hda, hdb) = padded.into_split_last_col();
     HdTransformed {
         hda,
         hdb,
         n_pad,
         secs: t.secs(),
     }
+}
+
+/// Backend-less convenience wrapper (tests, one-off callers).
+pub fn hd_transform(a: &Mat, b: &[f64], rng: &mut Rng) -> HdTransformed {
+    hd_transform_with(&Backend::native(), a, b, rng)
 }
 
 #[cfg(test)]
@@ -180,6 +213,44 @@ mod tests {
             max / mean < 6.0,
             "row norms still spiky: max {max}, mean {mean}"
         );
+    }
+
+    #[test]
+    fn streamed_precondition_matches_dense_r() {
+        // R from the block-streamed parallel sketch must equal R from the
+        // dense single-pass apply to 1e-12, for every construction
+        let (a, _) = syn(1024, 10, 9);
+        for kind in [
+            SketchKind::CountSketch,
+            SketchKind::Gaussian,
+            SketchKind::SparseEmbed,
+            SketchKind::Srht,
+        ] {
+            // dense reference, sketch sampled from an identical rng stream
+            let mut r1 = Rng::new(42);
+            let sk = kind.build(300, a.rows, &mut r1);
+            let dense_r = qr::qr_r(&sk.apply(&a));
+            let mut r2 = Rng::new(42);
+            let be = Backend::native_with(4, None);
+            let p = precondition_with(&be, &a, kind, 300, &mut r2, Some(128));
+            assert!(
+                p.r.max_abs_diff(&dense_r) < 1e-12,
+                "{}: streamed R != dense R",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn hd_with_backend_matches_wrapper() {
+        let (a, b) = syn(300, 4, 11); // pads to 512
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let via_wrapper = hd_transform(&a, &b, &mut r1);
+        let via_backend = hd_transform_with(&Backend::native(), &a, &b, &mut r2);
+        assert_eq!(via_wrapper.n_pad, via_backend.n_pad);
+        assert_eq!(via_wrapper.hdb, via_backend.hdb);
+        assert!(via_wrapper.hda.max_abs_diff(&via_backend.hda) == 0.0);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! Table 2 and the one the paper's own experiments use.
 
 use super::Sketch;
+use crate::data::blocks::RowBlock;
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
 
@@ -51,6 +52,33 @@ impl Sketch for CountSketch {
 
     fn name(&self) -> &'static str {
         "countsketch"
+    }
+
+    /// Streaming fold: each input row touches exactly one bucket, so a shard
+    /// contributes its rows' signed sums independently of every other shard.
+    fn apply_block(&self, block: &RowBlock<'_>, acc: &mut Mat) {
+        assert_eq!(acc.rows, self.s);
+        assert_eq!(acc.cols, block.cols);
+        for k in 0..block.rows {
+            let i = block.global_row(k);
+            let dst = self.bucket[i] as usize;
+            let sg = self.sign[i];
+            let row = block.row(k);
+            let orow = acc.row_mut(dst);
+            if sg > 0.0 {
+                for (o, v) in orow.iter_mut().zip(row) {
+                    *o += v;
+                }
+            } else {
+                for (o, v) in orow.iter_mut().zip(row) {
+                    *o -= v;
+                }
+            }
+        }
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
     }
 }
 

@@ -3,6 +3,7 @@
 //! baseline construction.
 
 use super::Sketch;
+use crate::data::blocks::RowBlock;
 use crate::linalg::{blas, Mat};
 use crate::util::rng::Rng;
 
@@ -30,6 +31,31 @@ impl Sketch for GaussianSketch {
 
     fn name(&self) -> &'static str {
         "gaussian"
+    }
+
+    /// Streaming fold: SA restricted to a row shard is the rank-`rows`
+    /// update `S[:, start..start+rows] · block`, accumulated as saxpy rows
+    /// (the contiguous `block.row(k)` is the inner loop, so the fold is
+    /// cache- and vectorizer-friendly despite the strided column access
+    /// into S).
+    fn apply_block(&self, block: &RowBlock<'_>, acc: &mut Mat) {
+        assert_eq!(acc.rows, self.mat.rows);
+        assert_eq!(acc.cols, block.cols);
+        assert!(block.start + block.rows <= self.mat.cols);
+        for i in 0..self.mat.rows {
+            let srow = self.mat.row(i);
+            let orow = acc.row_mut(i);
+            for k in 0..block.rows {
+                let coef = srow[block.start + k];
+                for (o, v) in orow.iter_mut().zip(block.row(k)) {
+                    *o += coef * v;
+                }
+            }
+        }
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
     }
 }
 

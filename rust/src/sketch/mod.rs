@@ -18,10 +18,19 @@ pub mod gaussian;
 pub mod srht;
 pub mod sparse_embed;
 
+use crate::data::blocks::{RowBlock, RowBlocks};
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_for_each_index;
 
 /// A sampled sketching operator: apply to the (packed) data matrix.
+///
+/// Streaming contract: for sketches that report `supports_streaming()`,
+/// `S` applied to disjoint contiguous row shards is additive —
+/// `S A = Σ_j fold(shard_j)` — so [`apply_streamed`] can fold shards on
+/// worker threads and [`Sketch::merge`] the partials. SRHT is the documented
+/// exception: the Hadamard butterfly mixes *all* rows, so it keeps the dense
+/// path (`supports_streaming` stays false).
 pub trait Sketch {
     /// The sketch output row count `s`.
     fn rows(&self) -> usize;
@@ -29,6 +38,79 @@ pub trait Sketch {
     fn apply(&self, a: &Mat) -> Mat;
     /// Name for reports (Table 2 rows).
     fn name(&self) -> &'static str;
+
+    /// Fold one contiguous row shard into the `s x d` accumulator `acc`.
+    /// Rows are addressed globally through `block.global_row`, so folding a
+    /// disjoint cover of shards (in any grouping) accumulates exactly the
+    /// terms of the dense product. Only called when `supports_streaming()`.
+    fn apply_block(&self, block: &RowBlock<'_>, acc: &mut Mat) {
+        let _ = (block, acc);
+        panic!("{}: block streaming not supported (dense fallback)", self.name());
+    }
+
+    /// Merge a partial accumulator into `acc` (elementwise sum).
+    fn merge(&self, acc: &mut Mat, partial: &Mat) {
+        assert_eq!((acc.rows, acc.cols), (partial.rows, partial.cols));
+        for (a, p) in acc.data.iter_mut().zip(&partial.data) {
+            *a += p;
+        }
+    }
+
+    /// Whether [`Sketch::apply_block`] is implemented.
+    fn supports_streaming(&self) -> bool {
+        false
+    }
+}
+
+/// Compute `S A` by folding contiguous row shards in parallel.
+///
+/// Shards are grouped into at most `threads` contiguous ranges; each worker
+/// folds its range (in shard order) into a private partial, and partials are
+/// merged in range order. The result is therefore deterministic for a fixed
+/// (block size, thread count) and equal to the dense `apply` up to
+/// floating-point re-association (verified to 1e-12 in
+/// `tests/streaming_sketch.rs`). Peak extra memory is
+/// `min(threads, blocks) * s * d` — partials, never a second copy of `A`.
+///
+/// Returns `(SA, shards_folded)`; `shards_folded == 1` means the dense path
+/// ran (streaming unsupported, single shard, or empty input).
+pub fn apply_streamed(
+    sk: &(dyn Sketch + Send + Sync),
+    a: &Mat,
+    block_rows: Option<usize>,
+    threads: usize,
+) -> (Mat, usize) {
+    if !sk.supports_streaming() || a.rows == 0 {
+        return (sk.apply(a), 1);
+    }
+    let view = match block_rows {
+        Some(br) => RowBlocks::new(a, br),
+        None => RowBlocks::auto(a),
+    };
+    let nb = view.num_blocks();
+    if nb <= 1 {
+        return (sk.apply(a), 1);
+    }
+    let (s, d) = (sk.rows(), a.cols);
+    let workers = threads.max(1).min(nb);
+    // one partial per worker range, each written by exactly one task
+    let partials: Vec<std::sync::Mutex<Mat>> =
+        (0..workers).map(|_| std::sync::Mutex::new(Mat::zeros(s, d))).collect();
+    parallel_for_each_index(workers, workers, |w| {
+        let lo = w * nb / workers;
+        let hi = (w + 1) * nb / workers;
+        let mut acc = partials[w].lock().unwrap();
+        for bi in lo..hi {
+            let block = view.block(bi);
+            sk.apply_block(&block, &mut acc);
+        }
+    });
+    let mut out = Mat::zeros(s, d);
+    for p in &partials {
+        let guard = p.lock().unwrap();
+        sk.merge(&mut out, &guard);
+    }
+    (out, nb)
 }
 
 /// Which sketch construction to use (CLI / config selectable).
@@ -149,5 +231,59 @@ mod tests {
         check_embedding(SketchKind::CountSketch, 400, 2048, 8, 0.35);
         check_embedding(SketchKind::Srht, 400, 2048, 8, 0.35);
         check_embedding(SketchKind::SparseEmbed, 400, 2048, 8, 0.35);
+    }
+
+    #[test]
+    fn streaming_support_flags() {
+        let mut rng = Rng::new(17);
+        for (kind, streaming) in [
+            (SketchKind::Gaussian, true),
+            (SketchKind::CountSketch, true),
+            (SketchKind::SparseEmbed, true),
+            (SketchKind::Srht, false), // documented dense fallback
+        ] {
+            let sk = kind.build(32, 128, &mut rng);
+            assert_eq!(sk.supports_streaming(), streaming, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn streamed_matches_dense_small() {
+        // the heavyweight sweep lives in tests/streaming_sketch.rs; this is
+        // the in-crate smoke check
+        let mut rng = Rng::new(23);
+        let a = Mat::gaussian(301, 5, &mut rng);
+        for kind in [
+            SketchKind::Gaussian,
+            SketchKind::CountSketch,
+            SketchKind::SparseEmbed,
+            SketchKind::Srht,
+        ] {
+            let sk = kind.build(64, 301, &mut rng);
+            let dense = sk.apply(&a);
+            let (streamed, shards) = apply_streamed(sk.as_ref(), &a, Some(37), 4);
+            assert!(
+                streamed.max_abs_diff(&dense) < 1e-12,
+                "{}: streamed != dense",
+                kind.name()
+            );
+            if sk.supports_streaming() {
+                assert!(shards > 1, "{}: expected multiple shards", kind.name());
+            } else {
+                assert_eq!(shards, 1, "{}: dense fallback expected", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_deterministic_across_thread_counts() {
+        let mut rng = Rng::new(29);
+        let a = Mat::gaussian(257, 4, &mut rng);
+        let sk = SketchKind::CountSketch.build(48, 257, &mut rng);
+        let (one, _) = apply_streamed(sk.as_ref(), &a, Some(16), 1);
+        let (eight, _) = apply_streamed(sk.as_ref(), &a, Some(16), 8);
+        // grouping is by fixed worker ranges, so differing thread counts may
+        // regroup partials; equality must still hold to f64 noise
+        assert!(one.max_abs_diff(&eight) < 1e-12);
     }
 }

@@ -5,6 +5,7 @@
 //! CountSketch's single hash.
 
 use super::Sketch;
+use crate::data::blocks::RowBlock;
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
 
@@ -75,6 +76,30 @@ impl Sketch for SparseEmbed {
 
     fn name(&self) -> &'static str {
         "sparse_embed"
+    }
+
+    /// Streaming fold: every input row scatters into its k private buckets,
+    /// so shards contribute independently, same as CountSketch.
+    fn apply_block(&self, block: &RowBlock<'_>, acc: &mut Mat) {
+        assert_eq!(acc.rows, self.s);
+        assert_eq!(acc.cols, block.cols);
+        let scale = 1.0 / (self.k as f64).sqrt();
+        for kk in 0..block.rows {
+            let i = block.global_row(kk);
+            let row = block.row(kk);
+            for t in 0..self.k {
+                let dst = self.buckets[i * self.k + t] as usize;
+                let sg = self.signs[i * self.k + t] * scale;
+                let orow = acc.row_mut(dst);
+                for (o, v) in orow.iter_mut().zip(row) {
+                    *o += sg * v;
+                }
+            }
+        }
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
     }
 }
 

@@ -33,6 +33,13 @@ impl Srht {
 }
 
 impl Sketch for Srht {
+    // STREAMING FALLBACK (documented): the Hadamard butterfly mixes every
+    // input row with every other row, so `S A` does not decompose into
+    // independent row-shard contributions the way hash/Gaussian sketches do.
+    // A streaming SRHT would need a distributed FWHT (log n block-exchange
+    // rounds); until an executor provides one, SRHT keeps the trait's
+    // default `supports_streaming() == false` and `apply_streamed` routes
+    // it through this dense path.
     fn rows(&self) -> usize {
         self.s
     }

@@ -11,7 +11,7 @@
 use super::{estimate_sigma_sq, timed, Solver, SolveReport, SolverOpts, TraceRecorder};
 use crate::backend::Backend;
 use crate::data::Dataset;
-use crate::precond::{hd_transform, precondition};
+use crate::precond::{hd_transform_with, precondition_with};
 use crate::sketch::default_sketch_size_for;
 use crate::util::rng::Rng;
 use crate::util::stats::Timer;
@@ -33,8 +33,9 @@ impl Solver for HdpwAccBatchSgd {
 
         // ---- setup ---------------------------------------------------------
         let setup_timer = Timer::start();
-        let pre = precondition(&ds.a, opts.sketch, s_rows, &mut rng);
-        let hd = hd_transform(&ds.a, &ds.b, &mut rng);
+        let pre =
+            precondition_with(backend, &ds.a, opts.sketch, s_rows, &mut rng, opts.block_rows);
+        let hd = hd_transform_with(backend, &ds.a, &ds.b, &mut rng);
         let metric = match opts.constraint {
             crate::prox::Constraint::Unconstrained => None,
             _ => Some(crate::prox::metric::MetricProjector::from_r(&pre.r)),

@@ -14,7 +14,7 @@ use super::{
 };
 use crate::backend::Backend;
 use crate::data::Dataset;
-use crate::precond::{hd_transform, precondition};
+use crate::precond::{hd_transform_with, precondition_with};
 use crate::sketch::default_sketch_size_for;
 use crate::util::rng::Rng;
 use crate::util::stats::Timer;
@@ -35,9 +35,12 @@ impl Solver for HdpwBatchSgd {
             .unwrap_or_else(|| default_sketch_size_for(ds.n(), d, opts.sketch));
 
         // ---- setup: two-step preconditioning (on the solve clock) --------
+        // both steps stream through the backend's executor: the sketch folds
+        // row shards in parallel, the HD transform owns its single padded
+        // buffer (no dense [A | b] clone)
         let setup_timer = Timer::start();
-        let pre = precondition(&ds.a, opts.sketch, s, &mut rng);
-        let hd = hd_transform(&ds.a, &ds.b, &mut rng);
+        let pre = precondition_with(backend, &ds.a, opts.sketch, s, &mut rng, opts.block_rows);
+        let hd = hd_transform_with(backend, &ds.a, &ds.b, &mut rng);
         // constrained runs need the R-metric projector (Step 6's quadratic
         // subproblem); its eigendecomposition is part of setup.
         let metric = match opts.constraint {

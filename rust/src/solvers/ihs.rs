@@ -11,7 +11,7 @@
 use super::{timed, Solver, SolveReport, SolverOpts, TraceRecorder};
 use crate::backend::Backend;
 use crate::data::Dataset;
-use crate::precond::precondition;
+use crate::precond::precondition_with;
 use crate::sketch::default_sketch_size_for;
 use crate::util::rng::Rng;
 
@@ -38,7 +38,8 @@ impl Solver for Ihs {
             let (xn, secs) = timed(|| {
                 // fresh sketch + QR every iteration (the method's signature
                 // cost, kept inside the timed region deliberately)
-                let pre = precondition(&ds.a, opts.sketch, s, &mut rng);
+                let pre =
+                    precondition_with(backend, &ds.a, opts.sketch, s, &mut rng, opts.block_rows);
                 let metric = match opts.constraint {
                     crate::prox::Constraint::Unconstrained => None,
                     _ => Some(crate::prox::metric::MetricProjector::from_r(&pre.r)),

@@ -66,6 +66,9 @@ pub struct SolverOpts {
     pub eta: Option<f64>,
     /// Iterations per trace point (and per PJRT chunk dispatch).
     pub chunk: usize,
+    /// Row-shard height for block-streamed setup ops (sketch folds);
+    /// None = per-shape cache/thread heuristic (data::default_block_rows).
+    pub block_rows: Option<usize>,
     pub seed: u64,
 }
 
@@ -82,6 +85,7 @@ impl Default for SolverOpts {
             sketch_size: None,
             eta: None,
             chunk: 50,
+            block_rows: None,
             seed: 1,
         }
     }

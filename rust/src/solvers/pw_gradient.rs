@@ -10,7 +10,7 @@
 use super::{timed, Solver, SolveReport, SolverOpts, TraceRecorder};
 use crate::backend::Backend;
 use crate::data::Dataset;
-use crate::precond::precondition;
+use crate::precond::precondition_with;
 use crate::sketch::default_sketch_size_for;
 use crate::util::rng::Rng;
 use crate::util::stats::Timer;
@@ -33,7 +33,7 @@ impl Solver for PwGradient {
 
         // ---- setup: ONE sketch + QR (the whole point vs IHS) --------------
         let setup_timer = Timer::start();
-        let pre = precondition(&ds.a, opts.sketch, s, &mut rng);
+        let pre = precondition_with(backend, &ds.a, opts.sketch, s, &mut rng, opts.block_rows);
         let metric = match opts.constraint {
             crate::prox::Constraint::Unconstrained => None,
             _ => Some(crate::prox::metric::MetricProjector::from_r(&pre.r)),

@@ -15,7 +15,7 @@ use super::{timed, Solver, SolveReport, SolverOpts, TraceRecorder};
 use crate::backend::Backend;
 use crate::data::Dataset;
 use crate::linalg::{blas, tri, Mat};
-use crate::precond::precondition;
+use crate::precond::precondition_with;
 use crate::sketch::default_sketch_size_for;
 use crate::util::rng::{AliasTable, Rng};
 use crate::util::stats::Timer;
@@ -73,7 +73,7 @@ impl Solver for PwSgd {
 
         // ---- setup: preconditioner + leverage scores + alias table ---------
         let setup_timer = Timer::start();
-        let pre = precondition(&ds.a, opts.sketch, s, &mut rng);
+        let pre = precondition_with(backend, &ds.a, opts.sketch, s, &mut rng, opts.block_rows);
         let scores = approx_leverage_scores(&ds.a, &pre.r, &mut rng);
         let total: f64 = scores.iter().sum();
         let probs: Vec<f64> = scores.iter().map(|l| (l / total).max(1e-300)).collect();

@@ -15,7 +15,7 @@ use super::{timed, Solver, SolveReport, SolverOpts, TraceRecorder};
 use crate::backend::Backend;
 use crate::data::Dataset;
 use crate::linalg::{blas, Mat};
-use crate::precond::precondition;
+use crate::precond::precondition_with;
 use crate::sketch::default_sketch_size_for;
 use crate::util::rng::Rng;
 use crate::util::stats::Timer;
@@ -45,7 +45,8 @@ impl Solver for Svrg {
             let s = opts
                 .sketch_size
                 .unwrap_or_else(|| default_sketch_size_for(n, d, opts.sketch));
-            let pre = precondition(&ds.a, opts.sketch, s, &mut rng);
+            let pre =
+                precondition_with(backend, &ds.a, opts.sketch, s, &mut rng, opts.block_rows);
             let metric = match opts.constraint {
                 crate::prox::Constraint::Unconstrained => None,
                 _ => Some(crate::prox::metric::MetricProjector::from_r(&pre.r)),

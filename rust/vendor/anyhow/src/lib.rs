@@ -1,0 +1,203 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! This repo builds in network-isolated CI, so instead of pulling the real
+//! crate from crates.io we vendor the small slice of its API the codebase
+//! uses: [`Error`], [`Result`], the [`Context`] extension trait and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Semantics match real anyhow where
+//! it matters here:
+//!
+//! * `Display` prints the outermost message only; the alternate form `{:#}`
+//!   prints the whole context chain joined by `": "`.
+//! * Any `std::error::Error + Send + Sync + 'static` converts via `?`.
+//! * `Error` itself intentionally does NOT implement `std::error::Error`
+//!   (that would clash with the blanket `From` impl, exactly as upstream).
+
+use std::fmt;
+
+/// Error: an ordered chain of messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `anyhow::Result<T>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build from a single printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Push an outer context message onto the chain.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Mirrors anyhow's debug rendering: message, then the cause chain.
+        match self.chain.split_first() {
+            None => Ok(()),
+            Some((head, rest)) => {
+                write!(f, "{head}")?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for (i, c) in rest.iter().enumerate() {
+                        write!(f, "\n    {i}: {c}")?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        // Flatten the source chain into our message chain.
+        let mut chain = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_plain_vs_alternate() {
+        let e: Error = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading file").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading file: gone");
+        let o: Option<u32> = None;
+        let e2 = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e2}"), "missing 7");
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x == 0 {
+                bail!("zero not allowed");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(0).unwrap_err()), "zero not allowed");
+        assert_eq!(format!("{}", f(-2).unwrap_err()), "negative: -2");
+        let e = anyhow!("plain {}", 1);
+        assert_eq!(format!("{e}"), "plain 1");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn g() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", g().unwrap_err()), "gone");
+    }
+}
