@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
         CoordinatorConfig {
             workers: 3,
             max_queue: 8,
-            cache_dir: None,
+            ..CoordinatorConfig::default()
         },
     ));
     {

@@ -41,6 +41,24 @@ pub struct JobRequest {
     pub executor: String,
     /// Row-shard height for block-streamed setup ops; 0 = heuristic.
     pub block_rows: usize,
+    /// Acquire the preconditioner through the coordinator's artifact cache
+    /// (keyed by the *job* seed) instead of resampling per trial. Default
+    /// off — the paper's fresh-sketch-per-trial protocol — overridable
+    /// process-wide with HDPW_REUSE_PRECOND=1.
+    pub reuse_precond: bool,
+    /// Start trials after the first from the best iterate so far. Default
+    /// off (paper protocol); HDPW_WARM_START=1 flips the default.
+    pub warm_start: bool,
+}
+
+/// Truthy env flag ("1" | "true" | "yes") — the single authority for the
+/// HDPW_REUSE_PRECOND / HDPW_WARM_START process defaults (bench-info must
+/// report exactly what `JobRequest::default` will do).
+pub fn env_flag(name: &str) -> bool {
+    matches!(
+        std::env::var(name).ok().as_deref(),
+        Some("1") | Some("true") | Some("yes")
+    )
 }
 
 impl Default for JobRequest {
@@ -64,6 +82,8 @@ impl Default for JobRequest {
             normalize: false,
             executor: "default".into(),
             block_rows: 0,
+            reuse_precond: env_flag("HDPW_REUSE_PRECOND"),
+            warm_start: env_flag("HDPW_WARM_START"),
         }
     }
 }
@@ -89,6 +109,8 @@ impl JobRequest {
             ("normalize", Json::Bool(self.normalize)),
             ("executor", Json::str(self.executor.clone())),
             ("block_rows", Json::num(self.block_rows as f64)),
+            ("reuse_precond", Json::Bool(self.reuse_precond)),
+            ("warm_start", Json::Bool(self.warm_start)),
         ])
     }
 
@@ -123,6 +145,14 @@ impl JobRequest {
                 .unwrap_or(def.normalize),
             executor: get_s("executor", &def.executor),
             block_rows: get_n("block_rows", def.block_rows as f64) as usize,
+            reuse_precond: j
+                .get("reuse_precond")
+                .and_then(Json::as_bool)
+                .unwrap_or(def.reuse_precond),
+            warm_start: j
+                .get("warm_start")
+                .and_then(Json::as_bool)
+                .unwrap_or(def.warm_start),
         };
         req.validate()?;
         Ok(req)
@@ -181,6 +211,9 @@ impl JobRequest {
             chunk: 50,
             block_rows: (self.block_rows > 0).then_some(self.block_rows),
             seed: self.seed,
+            // the cache handle / dataset id / warm iterate are attached by
+            // the scheduler, which owns them
+            session: Default::default(),
         })
     }
 }
@@ -225,6 +258,13 @@ impl JobResult {
             ("iters", Json::num(self.best.iters as f64)),
             ("setup_secs", Json::num(self.best.setup_secs)),
             ("solve_secs", Json::num(self.best.solve_secs)),
+            // "off" | "miss" | "hit" | "upgrade": a cold cache is
+            // distinguishable from a broken one (and from reuse never
+            // being requested)
+            (
+                "precond_cache",
+                Json::str(self.best.precond_cache.as_str().to_string()),
+            ),
             ("trace", Json::Arr(trace)),
         ])
     }
@@ -290,6 +330,25 @@ mod tests {
         assert_eq!(opts.block_rows, Some(4096));
         let opts0 = d.solver_opts(0.0, None).unwrap();
         assert_eq!(opts0.block_rows, None);
+    }
+
+    #[test]
+    fn reuse_and_warm_start_roundtrip() {
+        let mut req = JobRequest::default();
+        req.reuse_precond = true;
+        req.warm_start = true;
+        let back = JobRequest::from_json(&req.to_json()).unwrap();
+        assert!(back.reuse_precond);
+        assert!(back.warm_start);
+        // explicit false survives even if an env default would say true
+        let j = Json::parse(r#"{"reuse_precond": false, "warm_start": false}"#).unwrap();
+        let d = JobRequest::from_json(&j).unwrap();
+        assert!(!d.reuse_precond);
+        assert!(!d.warm_start);
+        // solver_opts leaves the session for the scheduler to attach
+        let opts = back.solver_opts(0.0, None).unwrap();
+        assert!(!opts.session.reuse_precond);
+        assert!(opts.session.cache.is_none());
     }
 
     #[test]

@@ -9,6 +9,8 @@ pub struct Metrics {
     pub jobs_completed: AtomicUsize,
     pub jobs_failed: AtomicUsize,
     pub trials_run: AtomicUsize,
+    /// trials that started from a warm iterate (warm_start jobs, trial > 0)
+    pub warm_starts: AtomicUsize,
     /// total solve nanoseconds (across trials)
     solve_nanos: AtomicU64,
     /// recent job latencies (seconds), bounded ring
@@ -36,6 +38,10 @@ impl Metrics {
         l.push(secs);
     }
 
+    pub fn record_warm_start(&self) {
+        self.warm_starts.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn total_solve_secs(&self) -> f64 {
         self.solve_nanos.load(Ordering::Relaxed) as f64 / 1e9
     }
@@ -50,11 +56,12 @@ impl Metrics {
 
     pub fn snapshot(&self) -> String {
         format!(
-            "jobs: submitted={} completed={} failed={} trials={} solve_time={:.2}s p50={} p99={}",
+            "jobs: submitted={} completed={} failed={} trials={} warm_starts={} solve_time={:.2}s p50={} p99={}",
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
             self.trials_run.load(Ordering::Relaxed),
+            self.warm_starts.load(Ordering::Relaxed),
             self.total_solve_secs(),
             self.latency_percentile(50.0)
                 .map(crate::util::stats::fmt_duration)
@@ -82,8 +89,10 @@ mod tests {
         assert_eq!(m.trials_run.load(Ordering::Relaxed), 21);
         assert!((m.total_solve_secs() - 4.5).abs() < 1e-6);
         assert_eq!(m.latency_percentile(50.0), Some(1.0));
+        m.record_warm_start();
         let snap = m.snapshot();
         assert!(snap.contains("completed=2"));
+        assert!(snap.contains("warm_starts=1"));
     }
 
     #[test]

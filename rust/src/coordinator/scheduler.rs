@@ -11,6 +11,8 @@ use super::job::{JobRequest, JobResult, EXECUTOR_CHOICES};
 use super::metrics::Metrics;
 use crate::backend::Backend;
 use crate::data::{io, uci_sim, Dataset};
+use crate::precond::PrecondCache;
+use crate::solvers::driver::SessionCtx;
 use crate::solvers::exact::{ground_truth, GroundTruth};
 use crate::solvers::SolveReport;
 use crate::util::rng::Rng;
@@ -29,6 +31,9 @@ pub struct CoordinatorConfig {
     pub max_queue: usize,
     /// dataset cache directory (None = no caching)
     pub cache_dir: Option<PathBuf>,
+    /// byte budget for the preconditioner artifact cache
+    /// (default: HDPW_PRECOND_CACHE_MB, 256 MiB)
+    pub precond_cache_bytes: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -37,6 +42,7 @@ impl Default for CoordinatorConfig {
             workers: 2,
             max_queue: 16,
             cache_dir: None,
+            precond_cache_bytes: PrecondCache::default_budget(),
         }
     }
 }
@@ -52,6 +58,9 @@ pub struct Coordinator {
     pool: ThreadPool,
     pub metrics: Arc<Metrics>,
     prepared: Mutex<HashMap<String, Arc<Prepared>>>,
+    /// Shared preconditioner artifacts, keyed by (dataset, sketch, s, seed,
+    /// block_rows) — the setup-amortization layer for `reuse_precond` jobs.
+    precond_cache: Arc<PrecondCache>,
     config: CoordinatorConfig,
 }
 
@@ -62,12 +71,17 @@ impl Coordinator {
             pool: ThreadPool::new(config.workers.max(1), config.max_queue.max(1)),
             metrics: Arc::new(Metrics::new()),
             prepared: Mutex::new(HashMap::new()),
+            precond_cache: Arc::new(PrecondCache::new(config.precond_cache_bytes)),
             config,
         }
     }
 
     pub fn backend(&self) -> &Backend {
         &self.backend
+    }
+
+    pub fn precond_cache(&self) -> &Arc<PrecondCache> {
+        &self.precond_cache
     }
 
     /// Resolve the backend serving one request (the serve loop's
@@ -114,12 +128,18 @@ impl Coordinator {
         }
     }
 
-    /// Resolve (generate or load) the dataset + ground truth for a request.
-    fn prepare(&self, req: &JobRequest) -> Result<Arc<Prepared>> {
-        let key = format!(
+    /// Dataset identity for the prepared-dataset cache AND the precond
+    /// artifact cache key (same string: everything the data depends on).
+    fn dataset_key(req: &JobRequest) -> String {
+        format!(
             "{}_n{}_norm{}_seed{}",
             req.dataset, req.n, req.normalize, req.seed
-        );
+        )
+    }
+
+    /// Resolve (generate or load) the dataset + ground truth for a request.
+    fn prepare(&self, req: &JobRequest) -> Result<Arc<Prepared>> {
+        let key = Self::dataset_key(req);
         if let Some(p) = self.prepared.lock().unwrap().get(&key) {
             return Ok(Arc::clone(p));
         }
@@ -187,9 +207,30 @@ impl Coordinator {
         let mut seed_rng = Rng::new(req.seed);
         let mut best: Option<SolveReport> = None;
         let mut hard_require_err: Option<anyhow::Error> = None;
+        let dataset_id = Self::dataset_key(req);
         for trial in 0..req.trials {
             let mut opts = req.solver_opts(radius, Some(gt.f_star))?;
             opts.seed = seed_rng.fork(trial as u64).next_u64();
+            if req.reuse_precond || req.warm_start {
+                // session state the paper protocol doesn't have: the shared
+                // artifact cache (keyed by the JOB seed, so trials share one
+                // preconditioner) and the warm-start iterate
+                let warm_x = req
+                    .warm_start
+                    .then(|| best.as_ref().map(|b| b.x.clone()))
+                    .flatten();
+                if warm_x.is_some() {
+                    self.metrics.record_warm_start();
+                }
+                opts.session = SessionCtx {
+                    reuse_precond: req.reuse_precond,
+                    warm_start: req.warm_start,
+                    cache: req.reuse_precond.then(|| Arc::clone(&self.precond_cache)),
+                    dataset_id: Some(dataset_id.clone()),
+                    artifact_seed: req.seed,
+                    x0: warm_x,
+                };
+            }
             let rep = solver.solve(&backend, ds, &opts);
             // pjrt hard-require: the fork's counters see only this job. Check
             // after the FIRST trial (dispatch mix is identical across trials)
@@ -282,7 +323,7 @@ mod tests {
             CoordinatorConfig {
                 workers: 2,
                 max_queue: 8,
-                cache_dir: None,
+                ..CoordinatorConfig::default()
             },
         ))
     }
@@ -375,6 +416,79 @@ mod tests {
         req2.executor = "pjrt".into();
         let err = c.run_job(&req2).unwrap_err();
         assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
+    }
+
+    #[test]
+    fn reuse_precond_hits_cache_on_second_job() {
+        let c = coord();
+        let mut req = small_req("pwgradient");
+        req.reuse_precond = true;
+        req.seed = 11;
+        let r1 = c.run_job(&req).unwrap();
+        assert_eq!(
+            r1.best.precond_cache,
+            crate::precond::CacheOutcome::Miss,
+            "cold cache: first job computes"
+        );
+        let misses_after_first = c.precond_cache().misses();
+        let r2 = c.run_job(&req).unwrap();
+        assert_eq!(r2.best.precond_cache, crate::precond::CacheOutcome::Hit);
+        assert_eq!(
+            c.precond_cache().misses(),
+            misses_after_first,
+            "second job must not miss"
+        );
+        // cache-keyed artifacts are pure functions of the key: both jobs
+        // solve identically
+        assert_eq!(r1.best.x, r2.best.x);
+        assert_eq!(r1.best_f, r2.best_f);
+    }
+
+    #[test]
+    fn trials_share_one_artifact_under_reuse() {
+        let c = coord();
+        let mut req = small_req("hdpwbatchsgd");
+        req.reuse_precond = true;
+        req.trials = 3;
+        req.max_iters = 200;
+        let _ = c.run_job(&req).unwrap();
+        // trial 0 misses (1 get + 1 insert), trials 1-2 hit
+        assert_eq!(c.precond_cache().misses(), 1);
+        assert_eq!(c.precond_cache().hits(), 2);
+        assert_eq!(c.precond_cache().entries(), 1);
+    }
+
+    #[test]
+    fn warm_start_counts_and_stays_correct() {
+        let c = coord();
+        let mut req = small_req("pwgradient");
+        req.warm_start = true;
+        req.trials = 3;
+        let res = c.run_job(&req).unwrap();
+        assert!(res.best_rel_err < 1e-6, "rel {}", res.best_rel_err);
+        assert_eq!(
+            c.metrics
+                .warm_starts
+                .load(std::sync::atomic::Ordering::Relaxed),
+            2,
+            "trials 1 and 2 start warm"
+        );
+    }
+
+    #[test]
+    fn default_path_never_touches_the_cache() {
+        let c = coord();
+        // explicit, not relying on JobRequest::default(): the CI variant
+        // flips the default with HDPW_REUSE_PRECOND=1
+        let mut r1 = small_req("pwgradient");
+        r1.reuse_precond = false;
+        let mut r2 = small_req("hdpwbatchsgd");
+        r2.reuse_precond = false;
+        let _ = c.run_job(&r1).unwrap();
+        let _ = c.run_job(&r2).unwrap();
+        assert_eq!(c.precond_cache().hits(), 0);
+        assert_eq!(c.precond_cache().misses(), 0);
+        assert_eq!(c.precond_cache().entries(), 0);
     }
 
     #[test]

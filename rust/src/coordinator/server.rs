@@ -61,6 +61,7 @@ pub fn handle_connection<R: BufRead, W: Write + Send + 'static>(
                     // dispatch-mix visibility: a native fallback must be
                     // distinguishable from a healthy PJRT deploy over the wire
                     let be = coord.backend();
+                    let cache = coord.precond_cache();
                     let mut fields = vec![
                         ("metrics", Json::str(coord.metrics.snapshot())),
                         ("pjrt", Json::Bool(be.has_pjrt())),
@@ -69,6 +70,20 @@ pub fn handle_connection<R: BufRead, W: Write + Send + 'static>(
                         (
                             "native_block_calls",
                             Json::num(be.native_block_calls() as f64),
+                        ),
+                        // precond-cache health: all-zero = reuse never
+                        // requested; misses with no hits = cold (or broken
+                        // keying); evictions = byte budget too small
+                        ("precond_hits", Json::num(cache.hits() as f64)),
+                        ("precond_misses", Json::num(cache.misses() as f64)),
+                        ("precond_evictions", Json::num(cache.evictions() as f64)),
+                        ("precond_entries", Json::num(cache.entries() as f64)),
+                        ("precond_bytes", Json::num(cache.bytes() as f64)),
+                        (
+                            "warm_starts",
+                            Json::num(coord.metrics.warm_starts.load(
+                                std::sync::atomic::Ordering::Relaxed,
+                            ) as f64),
                         ),
                     ];
                     if let Some(reason) = be.pjrt_fallback_reason() {
@@ -182,6 +197,45 @@ mod tests {
         // backend status rides along so operators can spot a native fallback
         assert_eq!(out[1].get("pjrt").and_then(Json::as_bool), Some(false));
         assert!(out[1].get("native_calls").is_some());
+        // precond-cache + warm-start counters ride along too (a cold cache
+        // must be distinguishable from a broken one in dashboards)
+        for field in [
+            "precond_hits",
+            "precond_misses",
+            "precond_evictions",
+            "precond_entries",
+            "precond_bytes",
+            "warm_starts",
+        ] {
+            assert!(out[1].get(field).and_then(Json::as_f64).is_some(), "{field}");
+        }
+    }
+
+    #[test]
+    fn reused_job_reports_cache_outcome_over_wire() {
+        // NOTE: output is in completion order and the metrics cmd is handled
+        // inline (possibly before the async jobs finish) — identify lines by
+        // content, not position
+        let req =
+            r#"{"solver":"pwgradient","dataset":"syn2","n":1024,"max_iters":100,"reuse_precond":true}"#;
+        let out = run_session(&format!("{req}\n{req}\n{{\"cmd\":\"metrics\"}}\n"));
+        assert_eq!(out.len(), 3);
+        let mut outcomes: Vec<&str> = out
+            .iter()
+            .filter_map(|j| j.get("precond_cache").and_then(Json::as_str))
+            .collect();
+        outcomes.sort_unstable();
+        // two job results; single-flight guarantees exactly one computes
+        // (miss) and the other is served from the cache (hit), even when
+        // the 2-worker pool runs them concurrently
+        assert_eq!(outcomes, vec!["hit", "miss"], "{out:?}");
+        let metrics_line = out
+            .iter()
+            .find(|j| j.get("precond_hits").is_some())
+            .expect("metrics line present");
+        for field in ["precond_misses", "precond_evictions", "precond_bytes"] {
+            assert!(metrics_line.get(field).and_then(Json::as_f64).is_some(), "{field}");
+        }
     }
 
     #[test]

@@ -40,7 +40,7 @@ impl ExpCtx {
             CoordinatorConfig {
                 workers: 1, // figures time solvers: no co-tenancy
                 max_queue: 4,
-                cache_dir: None,
+                ..CoordinatorConfig::default()
             },
         ));
         ExpCtx {

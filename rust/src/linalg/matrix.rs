@@ -14,6 +14,13 @@ pub struct Mat {
     pub data: Vec<f64>,
 }
 
+impl Default for Mat {
+    /// The empty 0 x 0 matrix — placeholder for lazily initialized state.
+    fn default() -> Mat {
+        Mat::zeros(0, 0)
+    }
+}
+
 impl Mat {
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Mat {

@@ -91,6 +91,8 @@ fn cmd_solve(argv: &[String]) -> i32 {
         .opt("executor", "default|native|auto|pjrt (per-request backend)")
         .opt("block-rows", "row-shard height for streamed setup (default auto)")
         .flag_opt("normalize", "normalize the dataset first")
+        .flag_opt("reuse-precond", "reuse the preconditioner across trials via the artifact cache")
+        .flag_opt("warm-start", "start trials after the first from the best iterate so far")
         .flag_opt("native", "force the native backend (skip PJRT artifacts)")
         .flag_opt("json", "emit the result as JSON");
     let args = parse_or_exit(&cmd, argv);
@@ -113,6 +115,9 @@ fn cmd_solve(argv: &[String]) -> i32 {
     req.executor = args.get_or("executor", "default");
     req.block_rows = args.get_usize("block-rows", 0);
     req.normalize = args.flag("normalize");
+    // flags OR onto the env-driven defaults (HDPW_REUSE_PRECOND / _WARM_START)
+    req.reuse_precond |= args.flag("reuse-precond");
+    req.warm_start |= args.flag("warm-start");
 
     let backend = if args.flag("native") {
         Backend::native()
@@ -145,6 +150,9 @@ fn cmd_solve(argv: &[String]) -> i32 {
                 println!("f*         : {:.6e}", res.f_star);
                 println!("f(best)    : {:.6e}", res.best_f);
                 println!("rel error  : {:.3e}", res.best_rel_err);
+                if res.best.precond_cache != hdpw::precond::CacheOutcome::Off {
+                    println!("precond    : {} (artifact cache)", res.best.precond_cache.as_str());
+                }
                 println!("iters      : {}", res.best.iters);
                 println!(
                     "setup/solve: {} / {}",
@@ -167,6 +175,10 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt("addr", "TCP listen address (default 127.0.0.1:7878)")
         .opt("workers", "concurrent jobs (default 2)")
         .opt("max-queue", "queue bound for backpressure (default 16)")
+        .opt(
+            "precond-cache-mb",
+            "preconditioner artifact cache budget in MiB (default 256)",
+        )
         .flag_opt("stdio", "serve stdin/stdout instead of TCP")
         .flag_opt("native", "force the native backend");
     let args = parse_or_exit(&cmd, argv);
@@ -175,12 +187,17 @@ fn cmd_serve(argv: &[String]) -> i32 {
     } else {
         Backend::auto()
     };
+    let default_cache_mb = hdpw::precond::PrecondCache::default_budget() >> 20;
     let coord = Arc::new(Coordinator::new(
         backend,
         CoordinatorConfig {
             workers: args.get_usize("workers", 2),
             max_queue: args.get_usize("max-queue", 16),
             cache_dir: Some(std::path::PathBuf::from(".hdpw_cache")),
+            precond_cache_bytes: args
+                .get_usize("precond-cache-mb", default_cache_mb)
+                .max(1)
+                << 20,
         },
     ));
     let result = if args.flag("stdio") {
@@ -337,6 +354,15 @@ fn cmd_bench_info(_argv: &[String]) -> i32 {
     println!(
         "block heuristic: {} rows for a 2^17 x 50 workload",
         hdpw::data::default_block_rows(1 << 17, 50)
+    );
+    println!(
+        "precond cache  : {} MiB budget (HDPW_PRECOND_CACHE_MB), reuse default {}",
+        hdpw::precond::PrecondCache::default_budget() >> 20,
+        if hdpw::coordinator::job::env_flag("HDPW_REUSE_PRECOND") {
+            "on (HDPW_REUSE_PRECOND)"
+        } else {
+            "off (paper protocol)"
+        }
     );
     0
 }

@@ -1,0 +1,461 @@
+//! Keyed LRU cache for [`PrecondArtifact`]s, bounded by a byte budget.
+//!
+//! The paper's two-step preconditioning amortizes: O(nnz + d^3) setup buys
+//! O(1)-conditioned iterations forever. The service throws that away if
+//! every trial recomputes setup, so the coordinator keeps one process-wide
+//! `PrecondCache` beside the dataset cache. Keys capture everything the
+//! artifact is a function of — `(dataset_id, sketch kind, sketch rows,
+//! artifact seed, block_rows, backend kind)`; the thread count is fixed per
+//! backend, so within one coordinator the key fully determines the bits.
+//! Misses are single-flight: concurrent identical jobs elect one computer
+//! and the rest wait, so the O(nnz + d^3) setup runs once.
+//!
+//! Eviction is LRU by a configurable byte budget (`HDPW_PRECOND_CACHE_MB`,
+//! default 256 MiB). The budget is honored down to a *single* artifact: the
+//! most recently inserted entry is never evicted, so one oversize artifact
+//! still caches (bounded by one artifact's size, which is bounded by the
+//! dataset the operator already chose to hold in memory).
+//!
+//! Hit/miss/eviction counters are exposed so dashboards can tell a cold
+//! cache from a broken one (all-miss forever = broken keying).
+
+use super::artifact::PrecondArtifact;
+use crate::sketch::SketchKind;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Everything a cached preconditioner is a function of.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PrecondKey {
+    /// Coordinator dataset identity (name + scale + normalize + data seed).
+    pub dataset_id: String,
+    pub sketch: SketchKind,
+    pub sketch_rows: usize,
+    /// Artifact sampling seed — the *job* seed, not a per-trial fork, so
+    /// all trials of a job (and identical jobs) share one artifact.
+    pub seed: u64,
+    /// Row-shard height used during setup (0 = heuristic); different shard
+    /// sizes re-associate the fold, so they key distinct artifacts.
+    pub block_rows: usize,
+    /// Backend kind the artifact was computed on ("native" | "pjrt"):
+    /// per-request executors must not alias each other's numerics.
+    pub backend: String,
+}
+
+/// How a solve acquired its preconditioner (reported per solve).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum CacheOutcome {
+    /// No cache in play (reuse disabled, or a solver without a precond step).
+    #[default]
+    Off,
+    /// Cache consulted, artifact computed and inserted.
+    Miss,
+    /// Artifact served from the cache (setup collapses to the lookup cost).
+    Hit,
+    /// Step 1 (sketch-QR) reused from the cache, but the HD transform had
+    /// to be computed and filled in — cheaper than a miss, dearer than a
+    /// hit; reported distinctly so "hit == lookup cost" stays true.
+    Upgrade,
+}
+
+impl CacheOutcome {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CacheOutcome::Off => "off",
+            CacheOutcome::Miss => "miss",
+            CacheOutcome::Hit => "hit",
+            CacheOutcome::Upgrade => "upgrade",
+        }
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<PrecondKey, Arc<PrecondArtifact>>,
+    /// LRU order: front = coldest, back = most recently used.
+    order: Vec<PrecondKey>,
+    bytes: usize,
+    /// Keys currently being computed (single-flight): concurrent identical
+    /// requests wait for the first compute instead of duplicating it.
+    in_flight: HashSet<PrecondKey>,
+}
+
+/// Byte-budgeted LRU of shared preconditioner artifacts.
+pub struct PrecondCache {
+    budget: usize,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    evictions: AtomicUsize,
+    inserts: AtomicUsize,
+}
+
+/// Result of a single-flight lookup.
+pub enum Lookup<'a> {
+    /// Cached artifact (recency refreshed, hit counted).
+    Found(Arc<PrecondArtifact>),
+    /// Nothing cached and nobody computing: the caller owns the compute
+    /// (miss counted). Publish the result or the claim is abandoned on drop.
+    Claimed(ComputeClaim<'a>),
+    /// Another caller is computing this key: `wait_for` it, then retry.
+    Busy,
+}
+
+/// RAII claim on a key being computed. Dropping without `publish` (panic,
+/// bail-out) releases the key so a waiter can re-claim instead of hanging.
+pub struct ComputeClaim<'a> {
+    cache: &'a PrecondCache,
+    key: Option<PrecondKey>,
+}
+
+impl ComputeClaim<'_> {
+    /// Insert the computed artifact and wake waiters.
+    pub fn publish(mut self, art: Arc<PrecondArtifact>) {
+        let key = self.key.take().expect("claim published once");
+        self.cache.insert(key.clone(), art);
+        self.cache.clear_in_flight(&key);
+    }
+}
+
+impl Drop for ComputeClaim<'_> {
+    fn drop(&mut self) {
+        if let Some(key) = self.key.take() {
+            self.cache.clear_in_flight(&key);
+        }
+    }
+}
+
+impl std::fmt::Debug for PrecondCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PrecondCache")
+            .field("budget", &self.budget)
+            .field("entries", &self.entries())
+            .field("bytes", &self.bytes())
+            .field("hits", &self.hits())
+            .field("misses", &self.misses())
+            .field("evictions", &self.evictions())
+            .finish()
+    }
+}
+
+impl PrecondCache {
+    pub fn new(budget_bytes: usize) -> PrecondCache {
+        PrecondCache {
+            budget: budget_bytes.max(1),
+            inner: Mutex::new(Inner::default()),
+            cv: Condvar::new(),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+            inserts: AtomicUsize::new(0),
+        }
+    }
+
+    /// Budget from `HDPW_PRECOND_CACHE_MB` (default 256 MiB).
+    pub fn default_budget() -> usize {
+        std::env::var("HDPW_PRECOND_CACHE_MB")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(256)
+            .saturating_mul(1 << 20)
+            .max(1)
+    }
+
+    pub fn with_default_budget() -> PrecondCache {
+        PrecondCache::new(PrecondCache::default_budget())
+    }
+
+    /// Look up an artifact; records a hit (and refreshes recency) or a miss.
+    pub fn get(&self, key: &PrecondKey) -> Option<Arc<PrecondArtifact>> {
+        let mut g = self.inner.lock().unwrap();
+        match g.map.get(key).cloned() {
+            Some(art) => {
+                if let Some(p) = g.order.iter().position(|k| k == key) {
+                    let k = g.order.remove(p);
+                    g.order.push(k);
+                }
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(art)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Single-flight lookup: at most one caller computes a given key at a
+    /// time. Waiters (`Busy`) block on [`PrecondCache::wait_for`] and then
+    /// retry — they count a *hit* when the published artifact arrives, so
+    /// concurrent identical jobs record exactly one miss.
+    pub fn lookup_or_claim(&self, key: &PrecondKey) -> Lookup<'_> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(art) = g.map.get(key).cloned() {
+            if let Some(p) = g.order.iter().position(|k| k == key) {
+                let k = g.order.remove(p);
+                g.order.push(k);
+            }
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Lookup::Found(art);
+        }
+        if g.in_flight.contains(key) {
+            return Lookup::Busy;
+        }
+        g.in_flight.insert(key.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Lookup::Claimed(ComputeClaim {
+            cache: self,
+            key: Some(key.clone()),
+        })
+    }
+
+    /// Block until `key` is no longer being computed (published or
+    /// abandoned), then return so the caller can retry `lookup_or_claim`.
+    pub fn wait_for(&self, key: &PrecondKey) {
+        let mut g = self.inner.lock().unwrap();
+        while g.in_flight.contains(key) {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn clear_in_flight(&self, key: &PrecondKey) {
+        let mut g = self.inner.lock().unwrap();
+        g.in_flight.remove(key);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Insert (or replace) an artifact, then evict cold entries until the
+    /// byte budget is met — never evicting the entry just inserted.
+    pub fn insert(&self, key: PrecondKey, art: Arc<PrecondArtifact>) {
+        let added = art.bytes();
+        let mut g = self.inner.lock().unwrap();
+        if let Some(old) = g.map.insert(key.clone(), art) {
+            g.bytes = g.bytes.saturating_sub(old.bytes());
+            if let Some(p) = g.order.iter().position(|k| k == &key) {
+                g.order.remove(p);
+            }
+        }
+        g.bytes += added;
+        g.order.push(key);
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        while g.bytes > self.budget && g.order.len() > 1 {
+            let victim = g.order.remove(0);
+            if let Some(a) = g.map.remove(&victim) {
+                g.bytes = g.bytes.saturating_sub(a.bytes());
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> usize {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn inserts(&self) -> usize {
+        self.inserts.load(Ordering::Relaxed)
+    }
+
+    pub fn entries(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// One-line stats for the metrics snapshot / dashboards.
+    pub fn snapshot(&self) -> String {
+        format!(
+            "precond_cache: hits={} misses={} evictions={} entries={} bytes={}/{}",
+            self.hits(),
+            self.misses(),
+            self.evictions(),
+            self.entries(),
+            self.bytes(),
+            self.budget
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Backend;
+    use crate::data::Dataset;
+    use crate::linalg::Mat;
+    use crate::util::rng::Rng;
+
+    fn artifact(seed: u64, with_hd: bool) -> Arc<PrecondArtifact> {
+        let mut rng = Rng::new(seed);
+        let a = Mat::gaussian(256, 4, &mut rng);
+        let b = rng.gaussians(256);
+        let ds = Dataset {
+            name: "t".into(),
+            a,
+            b,
+            x_star_planted: None,
+        };
+        Arc::new(PrecondArtifact::compute_keyed(
+            &Backend::native(),
+            &ds,
+            &key(seed),
+            None,
+            with_hd,
+        ))
+    }
+
+    fn key(seed: u64) -> PrecondKey {
+        PrecondKey {
+            dataset_id: format!("ds{seed}"),
+            sketch: SketchKind::CountSketch,
+            sketch_rows: 64,
+            seed,
+            block_rows: 0,
+            backend: "native".into(),
+        }
+    }
+
+    #[test]
+    fn hit_miss_counters_and_lru_refresh() {
+        let cache = PrecondCache::new(1 << 30);
+        assert!(cache.get(&key(1)).is_none());
+        assert_eq!(cache.misses(), 1);
+        cache.insert(key(1), artifact(1, false));
+        let got = cache.get(&key(1)).unwrap();
+        assert_eq!(got.meta.sketch_rows, 64);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.entries(), 1);
+        assert!(cache.bytes() > 0);
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_first() {
+        let a1 = artifact(1, false);
+        let a2 = artifact(2, false);
+        let a3 = artifact(3, false);
+        // budget fits exactly two step-1 artifacts
+        let cache = PrecondCache::new(a1.bytes() + a2.bytes());
+        cache.insert(key(1), a1);
+        cache.insert(key(2), a2);
+        assert_eq!(cache.entries(), 2);
+        assert_eq!(cache.evictions(), 0);
+        // touch key 1 so key 2 becomes the LRU victim
+        assert!(cache.get(&key(1)).is_some());
+        cache.insert(key(3), a3);
+        assert_eq!(cache.evictions(), 1);
+        assert!(cache.get(&key(2)).is_none(), "LRU entry should be gone");
+        assert!(cache.get(&key(1)).is_some());
+        assert!(cache.get(&key(3)).is_some());
+        assert!(cache.bytes() <= cache.budget() || cache.entries() == 1);
+    }
+
+    #[test]
+    fn oversize_artifact_still_caches_alone() {
+        let big = artifact(1, true);
+        let cache = PrecondCache::new(16); // absurdly small budget
+        cache.insert(key(1), Arc::clone(&big));
+        assert_eq!(cache.entries(), 1, "newest entry is never evicted");
+        assert!(cache.get(&key(1)).is_some());
+        // a second insert evicts the previous oversize one
+        cache.insert(key(2), artifact(2, false));
+        assert_eq!(cache.entries(), 1);
+        assert!(cache.get(&key(1)).is_none());
+    }
+
+    #[test]
+    fn replace_same_key_updates_bytes_not_entries() {
+        let cache = PrecondCache::new(1 << 30);
+        let plain = artifact(1, false);
+        let full = artifact(1, true);
+        cache.insert(key(1), plain);
+        let b1 = cache.bytes();
+        cache.insert(key(1), Arc::clone(&full));
+        assert_eq!(cache.entries(), 1);
+        assert_eq!(cache.bytes(), full.bytes());
+        assert!(cache.bytes() > b1);
+        assert_eq!(cache.inserts(), 2);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let cache = PrecondCache::new(1 << 30);
+        cache.insert(key(1), artifact(1, false));
+        let mut k2 = key(1);
+        k2.block_rows = 512;
+        assert!(cache.get(&k2).is_none(), "block_rows is part of the key");
+        let mut k3 = key(1);
+        k3.sketch = SketchKind::Gaussian;
+        assert!(cache.get(&k3).is_none(), "sketch kind is part of the key");
+        let mut k4 = key(1);
+        k4.backend = "pjrt".into();
+        assert!(
+            cache.get(&k4).is_none(),
+            "backend kind is part of the key — executors must not alias"
+        );
+    }
+
+    #[test]
+    fn single_flight_elects_one_computer() {
+        let cache = Arc::new(PrecondCache::new(1 << 30));
+        // first caller claims
+        let claim = match cache.lookup_or_claim(&key(1)) {
+            Lookup::Claimed(c) => c,
+            _ => panic!("empty cache must yield a claim"),
+        };
+        // second caller must NOT claim or count a second miss
+        assert!(matches!(cache.lookup_or_claim(&key(1)), Lookup::Busy));
+        assert_eq!(cache.misses(), 1);
+        // a concurrent waiter blocks until publish, then finds the artifact
+        let waiter = {
+            let cache = Arc::clone(&cache);
+            std::thread::spawn(move || {
+                cache.wait_for(&key(1));
+                matches!(cache.lookup_or_claim(&key(1)), Lookup::Found(_))
+            })
+        };
+        claim.publish(artifact(1, false));
+        assert!(waiter.join().unwrap(), "waiter must find the published artifact");
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.entries(), 1);
+    }
+
+    #[test]
+    fn abandoned_claim_unblocks_waiters() {
+        let cache = PrecondCache::new(1 << 30);
+        let claim = match cache.lookup_or_claim(&key(2)) {
+            Lookup::Claimed(c) => c,
+            _ => panic!("expected claim"),
+        };
+        drop(claim); // compute bailed (panic path): key must be released
+        match cache.lookup_or_claim(&key(2)) {
+            Lookup::Claimed(c) => c.publish(artifact(2, false)),
+            _ => panic!("abandoned key must be re-claimable"),
+        }
+        assert!(cache.get(&key(2)).is_some());
+    }
+
+    #[test]
+    fn snapshot_mentions_all_counters() {
+        let cache = PrecondCache::new(1024);
+        let s = cache.snapshot();
+        for field in ["hits=", "misses=", "evictions=", "entries=", "bytes="] {
+            assert!(s.contains(field), "{s}");
+        }
+    }
+}

@@ -8,6 +8,12 @@
 //! `HD` to `[A | b]`, spreading row norms (Theorem 1) so *uniform*
 //! mini-batch sampling has the variance bound of Lemma 9.
 
+pub mod artifact;
+pub mod cache;
+
+pub use artifact::{ArtifactMeta, HdParts, PrecondArtifact};
+pub use cache::{CacheOutcome, ComputeClaim, Lookup, PrecondCache, PrecondKey};
+
 use crate::backend::Backend;
 use crate::linalg::{qr, tri, Mat};
 use crate::sketch::SketchKind;

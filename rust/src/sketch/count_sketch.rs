@@ -56,7 +56,11 @@ impl Sketch for CountSketch {
 
     /// Streaming fold: each input row touches exactly one bucket, so a shard
     /// contributes its rows' signed sums independently of every other shard.
-    fn apply_block(&self, block: &RowBlock<'_>, acc: &mut Mat) {
+    fn apply_block(
+        &self,
+        block: &RowBlock<'_>,
+        acc: &mut Mat,
+    ) -> Result<(), crate::sketch::StreamUnsupported> {
         assert_eq!(acc.rows, self.s);
         assert_eq!(acc.cols, block.cols);
         for k in 0..block.rows {
@@ -75,6 +79,7 @@ impl Sketch for CountSketch {
                 }
             }
         }
+        Ok(())
     }
 
     fn supports_streaming(&self) -> bool {

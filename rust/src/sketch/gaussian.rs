@@ -38,7 +38,11 @@ impl Sketch for GaussianSketch {
     /// (the contiguous `block.row(k)` is the inner loop, so the fold is
     /// cache- and vectorizer-friendly despite the strided column access
     /// into S).
-    fn apply_block(&self, block: &RowBlock<'_>, acc: &mut Mat) {
+    fn apply_block(
+        &self,
+        block: &RowBlock<'_>,
+        acc: &mut Mat,
+    ) -> Result<(), crate::sketch::StreamUnsupported> {
         assert_eq!(acc.rows, self.mat.rows);
         assert_eq!(acc.cols, block.cols);
         assert!(block.start + block.rows <= self.mat.cols);
@@ -52,6 +56,7 @@ impl Sketch for GaussianSketch {
                 }
             }
         }
+        Ok(())
     }
 
     fn supports_streaming(&self) -> bool {

@@ -22,6 +22,23 @@ use crate::data::blocks::{RowBlock, RowBlocks};
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_for_each_index;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// A sketch was asked to fold a row shard it cannot stream (e.g. a
+/// mis-routed SRHT block). Recoverable: callers degrade to the dense
+/// single-pass product instead of dying.
+#[derive(Clone, Debug)]
+pub struct StreamUnsupported {
+    pub sketch: &'static str,
+}
+
+impl std::fmt::Display for StreamUnsupported {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: block streaming not supported (dense fallback)", self.sketch)
+    }
+}
+
+impl std::error::Error for StreamUnsupported {}
 
 /// A sampled sketching operator: apply to the (packed) data matrix.
 ///
@@ -42,10 +59,12 @@ pub trait Sketch {
     /// Fold one contiguous row shard into the `s x d` accumulator `acc`.
     /// Rows are addressed globally through `block.global_row`, so folding a
     /// disjoint cover of shards (in any grouping) accumulates exactly the
-    /// terms of the dense product. Only called when `supports_streaming()`.
-    fn apply_block(&self, block: &RowBlock<'_>, acc: &mut Mat) {
+    /// terms of the dense product. Only called when `supports_streaming()`;
+    /// a mis-routed call returns `Err` (never panics — a serve worker must
+    /// survive it) and the caller degrades to the dense product.
+    fn apply_block(&self, block: &RowBlock<'_>, acc: &mut Mat) -> Result<(), StreamUnsupported> {
         let _ = (block, acc);
-        panic!("{}: block streaming not supported (dense fallback)", self.name());
+        Err(StreamUnsupported { sketch: self.name() })
     }
 
     /// Merge a partial accumulator into `acc` (elementwise sum).
@@ -96,15 +115,32 @@ pub fn apply_streamed(
     // one partial per worker range, each written by exactly one task
     let partials: Vec<std::sync::Mutex<Mat>> =
         (0..workers).map(|_| std::sync::Mutex::new(Mat::zeros(s, d))).collect();
+    let failed = AtomicBool::new(false);
     parallel_for_each_index(workers, workers, |w| {
         let lo = w * nb / workers;
         let hi = (w + 1) * nb / workers;
         let mut acc = partials[w].lock().unwrap();
         for bi in lo..hi {
+            if failed.load(Ordering::Relaxed) {
+                return;
+            }
             let block = view.block(bi);
-            sk.apply_block(&block, &mut acc);
+            if sk.apply_block(&block, &mut acc).is_err() {
+                failed.store(true, Ordering::Relaxed);
+                return;
+            }
         }
     });
+    if failed.load(Ordering::Relaxed) {
+        // a sketch that advertises streaming but rejects shards (or a
+        // mis-routed SRHT) degrades to the dense product instead of killing
+        // the worker; partials are discarded, so the result is exact
+        crate::log_warn!(
+            "{}: shard fold rejected despite supports_streaming(); degrading to the dense product",
+            sk.name()
+        );
+        return (sk.apply(a), 1);
+    }
     let mut out = Mat::zeros(s, d);
     for p in &partials {
         let guard = p.lock().unwrap();
@@ -114,7 +150,7 @@ pub fn apply_streamed(
 }
 
 /// Which sketch construction to use (CLI / config selectable).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SketchKind {
     Gaussian,
     Srht,
@@ -273,6 +309,49 @@ mod tests {
                 assert_eq!(shards, 1, "{}: dense fallback expected", kind.name());
             }
         }
+    }
+
+    /// A sketch that *claims* streaming but rejects every shard — the
+    /// mis-routed-SRHT failure mode. The streamed path must degrade to the
+    /// dense product instead of panicking a worker.
+    struct LyingSrht(srht::Srht);
+
+    impl Sketch for LyingSrht {
+        fn rows(&self) -> usize {
+            self.0.rows()
+        }
+        fn apply(&self, a: &Mat) -> Mat {
+            self.0.apply(a)
+        }
+        fn name(&self) -> &'static str {
+            "lying_srht"
+        }
+        // no apply_block override: the default returns Err
+        fn supports_streaming(&self) -> bool {
+            true
+        }
+    }
+
+    #[test]
+    fn misrouted_shard_degrades_to_dense_instead_of_panicking() {
+        let mut rng = Rng::new(31);
+        let a = Mat::gaussian(257, 5, &mut rng);
+        let lying = LyingSrht(srht::Srht::new(64, 257, &mut rng));
+        let dense = lying.apply(&a);
+        let (streamed, shards) = apply_streamed(&lying, &a, Some(32), 4);
+        assert_eq!(shards, 1, "fallback must report the dense single pass");
+        assert_eq!(streamed.max_abs_diff(&dense), 0.0);
+    }
+
+    #[test]
+    fn default_apply_block_reports_unsupported() {
+        let mut rng = Rng::new(37);
+        let sk = SketchKind::Srht.build(16, 64, &mut rng);
+        let a = Mat::gaussian(64, 3, &mut rng);
+        let view = RowBlocks::new(&a, 16);
+        let mut acc = Mat::zeros(16, 3);
+        let err = sk.apply_block(&view.block(0), &mut acc).unwrap_err();
+        assert!(err.to_string().contains("srht"), "{err}");
     }
 
     #[test]

@@ -80,7 +80,11 @@ impl Sketch for SparseEmbed {
 
     /// Streaming fold: every input row scatters into its k private buckets,
     /// so shards contribute independently, same as CountSketch.
-    fn apply_block(&self, block: &RowBlock<'_>, acc: &mut Mat) {
+    fn apply_block(
+        &self,
+        block: &RowBlock<'_>,
+        acc: &mut Mat,
+    ) -> Result<(), crate::sketch::StreamUnsupported> {
         assert_eq!(acc.rows, self.s);
         assert_eq!(acc.cols, block.cols);
         let scale = 1.0 / (self.k as f64).sqrt();
@@ -96,6 +100,7 @@ impl Sketch for SparseEmbed {
                 }
             }
         }
+        Ok(())
     }
 
     fn supports_streaming(&self) -> bool {

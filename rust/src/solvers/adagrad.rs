@@ -2,13 +2,73 @@
 //! sizes on the raw problem. Baseline in the paper's low-precision figures
 //! (via the SGDLibrary implementation the authors used).
 
-use super::{timed, Solver, SolveReport, SolverOpts, TraceRecorder};
+use super::driver::{drive, SolveSession, StepRule};
+use super::{Solver, SolveReport, SolverOpts};
 use crate::backend::Backend;
 use crate::data::Dataset;
 use crate::linalg::{blas, Mat};
-use crate::util::rng::Rng;
 
 pub struct Adagrad;
+
+/// Per-coordinate adaptive steps as a step rule: no setup phase; the G_t
+/// accumulator persists across chunks.
+#[derive(Default)]
+struct AdagradRule {
+    x: Vec<f64>,
+    gsq: Vec<f64>,
+    eta: f64,
+    scale: f64,
+    r: usize,
+    n: usize,
+    mbuf: Mat,
+    vbuf: Vec<f64>,
+}
+
+impl StepRule for AdagradRule {
+    fn name(&self) -> &'static str {
+        "adagrad"
+    }
+
+    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], _f0: f64) {
+        let (n, d) = (sess.ds.n(), sess.ds.d());
+        let r = sess.opts.batch_size.max(1);
+        // global learning rate: scale-free thanks to the G_t normalization
+        self.eta = sess.opts.eta.unwrap_or(0.1);
+        self.scale = 2.0 * n as f64 / r as f64;
+        self.r = r;
+        self.n = n;
+        self.gsq = vec![0.0; d];
+        self.mbuf = Mat::zeros(r, d);
+        self.vbuf = vec![0.0; r];
+        self.x = x0.to_vec();
+    }
+
+    fn chunk_len(&self, sess: &SolveSession, _f: f64) -> usize {
+        sess.opts.chunk
+    }
+
+    fn step(&mut self, sess: &mut SolveSession, t: usize) {
+        let eps = 1e-10;
+        let d = self.x.len();
+        for _ in 0..t {
+            let idx = sess.rng.indices(self.r, self.n);
+            for (row, &i) in idx.iter().enumerate() {
+                self.mbuf.row_mut(row).copy_from_slice(sess.ds.a.row(i));
+                self.vbuf[row] = sess.ds.b[i];
+            }
+            let g = blas::fused_grad(&self.mbuf, &self.vbuf, &self.x, self.scale);
+            for j in 0..d {
+                self.gsq[j] += g[j] * g[j];
+                self.x[j] -= self.eta * g[j] / (self.gsq[j].sqrt() + eps);
+            }
+            sess.opts.constraint.project(&mut self.x);
+        }
+    }
+
+    fn eval_x(&self, _sess: &SolveSession) -> Vec<f64> {
+        self.x.clone()
+    }
+}
 
 impl Solver for Adagrad {
     fn name(&self) -> &'static str {
@@ -16,44 +76,7 @@ impl Solver for Adagrad {
     }
 
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport {
-        let mut rng = Rng::new(opts.seed);
-        let n = ds.n();
-        let d = ds.d();
-        let r = opts.batch_size.max(1);
-        let scale = 2.0 * n as f64 / r as f64;
-        let x0 = vec![0.0; d];
-        let f0 = backend.residual_sq(&ds.a, &ds.b, &x0);
-        // global learning rate: scale-free thanks to the G_t normalization
-        let eta = opts.eta.unwrap_or(0.1);
-        let eps = 1e-10;
-
-        let mut rec = TraceRecorder::new(0.0, f0);
-        let mut x = x0;
-        let mut f = f0;
-        let mut gsq = vec![0.0; d]; // accumulated squared gradients
-        let mut mbuf = Mat::zeros(r, d);
-        let mut vbuf = vec![0.0; r];
-        while !rec.should_stop(opts, f) {
-            let t_chunk = opts.chunk.min(opts.max_iters - rec.iters()).max(1);
-            let (_, secs) = timed(|| {
-                for _ in 0..t_chunk {
-                    let idx = rng.indices(r, n);
-                    for (row, &i) in idx.iter().enumerate() {
-                        mbuf.row_mut(row).copy_from_slice(ds.a.row(i));
-                        vbuf[row] = ds.b[i];
-                    }
-                    let g = blas::fused_grad(&mbuf, &vbuf, &x, scale);
-                    for j in 0..d {
-                        gsq[j] += g[j] * g[j];
-                        x[j] -= eta * g[j] / (gsq[j].sqrt() + eps);
-                    }
-                    opts.constraint.project(&mut x);
-                }
-            });
-            f = backend.residual_sq(&ds.a, &ds.b, &x);
-            rec.record(t_chunk, secs, f);
-        }
-        rec.finish("adagrad", x, f, 0.0)
+        drive(&mut AdagradRule::default(), backend, ds, opts)
     }
 }
 
@@ -62,6 +85,7 @@ mod tests {
     use super::*;
     use crate::prox::Constraint;
     use crate::solvers::exact::ground_truth;
+    use crate::util::rng::Rng;
 
     fn dataset(n: usize, d: usize, seed: u64) -> Dataset {
         let mut rng = Rng::new(seed);

@@ -1,0 +1,519 @@
+//! The unified solve-session driver.
+//!
+//! Every solver used to re-implement the same frame: seed an rng, time a
+//! setup phase (sketch-QR, HD transform, metric projector), evaluate f at
+//! x0, then loop chunks against the eps/time/iter stopping rules while
+//! recording a trace. [`SolveSession`] owns that frame once; the solvers
+//! shrink to [`StepRule`]s — just the arithmetic that advances iterates —
+//! and [`drive`] runs the shared loop.
+//!
+//! The session also owns *artifact acquisition*. On the default path
+//! (`SessionCtx::reuse_precond == false`) it computes the preconditioner
+//! inline from the session rng, consuming the stream in exactly the order
+//! the pre-driver solvers did — traces are bit-compatible with the paper's
+//! fresh-sketch-per-trial protocol. With reuse enabled it consults the
+//! coordinator's [`PrecondCache`]: artifacts are keyed, sampled from
+//! key-derived rng streams (trial streams never observe cache state), and
+//! `setup_secs` collapses to the lookup cost on a hit.
+
+use super::{timed, SolveReport, SolverOpts, TraceRecorder};
+use crate::backend::Backend;
+use crate::data::Dataset;
+use crate::precond::{
+    precondition_with, CacheOutcome, Lookup, PrecondArtifact, PrecondCache, PrecondKey,
+    Precondition,
+};
+use crate::prox::metric::MetricProjector;
+use crate::prox::Constraint;
+use crate::sketch::default_sketch_size_for;
+use crate::util::rng::Rng;
+use crate::util::stats::Timer;
+use std::sync::Arc;
+
+/// Per-request session context threaded from the coordinator into
+/// [`SolverOpts`]. The default (everything off) reproduces the paper's
+/// protocol: fresh sketch per trial, cold start, no shared state.
+#[derive(Clone, Debug, Default)]
+pub struct SessionCtx {
+    /// Acquire the preconditioner cache-or-compute instead of resampling.
+    pub reuse_precond: bool,
+    /// Start from `x0` (a previous trial's best iterate) instead of zeros.
+    pub warm_start: bool,
+    /// The coordinator's shared artifact cache (None = always compute).
+    pub cache: Option<Arc<PrecondCache>>,
+    /// Cache-key dataset identity (the coordinator's prepared-dataset key).
+    pub dataset_id: Option<String>,
+    /// Artifact sampling seed — the *job* seed, shared by all trials.
+    pub artifact_seed: u64,
+    /// Warm-start iterate (used only when `warm_start` is set).
+    pub x0: Option<Vec<f64>>,
+}
+
+impl SessionCtx {
+    fn reuse_enabled(&self) -> bool {
+        self.reuse_precond && self.cache.is_some() && self.dataset_id.is_some()
+    }
+}
+
+/// Owns the cross-cutting state of one solve: rng, setup clock, artifact
+/// acquisition, warm start, trace, and stopping rules.
+pub struct SolveSession<'a> {
+    pub backend: &'a Backend,
+    pub ds: &'a Dataset,
+    pub opts: &'a SolverOpts,
+    /// The per-trial stream (seeded from `opts.seed`); step rules draw
+    /// batch indices etc. from here.
+    pub rng: Rng,
+    /// Started lazily on the first acquisition, so solvers without a setup
+    /// phase report exactly 0 — and a cache hit reports only lookup cost.
+    setup_timer: Option<Timer>,
+    setup_secs: f64,
+    outcome: CacheOutcome,
+    rec: Option<TraceRecorder>,
+}
+
+impl<'a> SolveSession<'a> {
+    pub fn new(backend: &'a Backend, ds: &'a Dataset, opts: &'a SolverOpts) -> SolveSession<'a> {
+        SolveSession {
+            backend,
+            ds,
+            opts,
+            rng: Rng::new(opts.seed),
+            setup_timer: None,
+            setup_secs: 0.0,
+            outcome: CacheOutcome::Off,
+            rec: None,
+        }
+    }
+
+    /// Sketch rows s for this job (explicit or construction-aware default).
+    pub fn sketch_rows(&self) -> usize {
+        self.opts
+            .sketch_size
+            .unwrap_or_else(|| default_sketch_size_for(self.ds.n(), self.ds.d(), self.opts.sketch))
+    }
+
+    fn touch_setup(&mut self) {
+        if self.setup_timer.is_none() {
+            self.setup_timer = Some(Timer::start());
+        }
+    }
+
+    /// Acquire the two-step preconditioner (with the HD transform when
+    /// `with_hd`): cache-or-compute under reuse, inline from the session
+    /// rng otherwise. Runs on the setup clock.
+    pub fn precond(&mut self, with_hd: bool) -> Arc<PrecondArtifact> {
+        self.touch_setup();
+        let s = self.sketch_rows();
+        let sc = &self.opts.session;
+        if sc.reuse_enabled() {
+            let cache = sc.cache.as_ref().expect("reuse_enabled");
+            let key = PrecondKey {
+                dataset_id: sc.dataset_id.clone().expect("reuse_enabled"),
+                sketch: self.opts.sketch,
+                sketch_rows: s,
+                seed: sc.artifact_seed,
+                block_rows: self.opts.block_rows.unwrap_or(0),
+                // artifacts are a function of the executing backend's
+                // numerics: per-request executors must not alias
+                backend: (if self.backend.has_pjrt() { "pjrt" } else { "native" }).into(),
+            };
+            loop {
+                match cache.lookup_or_claim(&key) {
+                    Lookup::Found(art) => {
+                        if !with_hd || art.hd.is_some() {
+                            self.outcome = CacheOutcome::Hit;
+                            return art;
+                        }
+                        // step-2 upgrade: the cached artifact lacks the HD
+                        // parts; fill them from the key stream and re-insert.
+                        // Step 1 (the expensive sketch-QR) is still reused,
+                        // but the HD cost is real — reported as Upgrade, not
+                        // Hit, so "hit == lookup cost" stays true.
+                        let art = Arc::new(art.with_hd(self.backend, self.ds, &key));
+                        cache.insert(key, Arc::clone(&art));
+                        self.outcome = CacheOutcome::Upgrade;
+                        return art;
+                    }
+                    Lookup::Claimed(claim) => {
+                        // single-flight: this caller owns the compute;
+                        // concurrent identical jobs wait instead of
+                        // duplicating the O(nnz + d^3) setup
+                        let art = Arc::new(PrecondArtifact::compute_keyed(
+                            self.backend,
+                            self.ds,
+                            &key,
+                            self.opts.block_rows,
+                            with_hd,
+                        ));
+                        claim.publish(Arc::clone(&art));
+                        self.outcome = CacheOutcome::Miss;
+                        return art;
+                    }
+                    Lookup::Busy => cache.wait_for(&key),
+                }
+            }
+        }
+        // paper-fidelity path: sample from the session rng in the exact
+        // order the pre-driver solvers did
+        Arc::new(PrecondArtifact::compute_inline(
+            self.backend,
+            self.ds,
+            self.opts.sketch,
+            s,
+            &mut self.rng,
+            self.opts.block_rows,
+            with_hd,
+        ))
+    }
+
+    /// An always-fresh step-1 preconditioner sampled from the session rng —
+    /// IHS's per-iteration re-sketch. Never cached, never on the setup
+    /// clock (the re-sketching cost is the method's signature cost and
+    /// belongs inside the timed step).
+    pub fn fresh_precond(&mut self) -> Precondition {
+        let s = self.sketch_rows();
+        precondition_with(
+            self.backend,
+            &self.ds.a,
+            self.opts.sketch,
+            s,
+            &mut self.rng,
+            self.opts.block_rows,
+        )
+    }
+
+    /// The R-metric projector for constrained solves (None when
+    /// unconstrained) — shared through the artifact, so a cached artifact
+    /// amortizes the H = R^T R eigendecomposition too.
+    pub fn metric(&mut self, art: &PrecondArtifact) -> Option<Arc<MetricProjector>> {
+        match self.opts.constraint {
+            Constraint::Unconstrained => None,
+            _ => {
+                self.touch_setup();
+                Some(art.metric())
+            }
+        }
+    }
+
+    /// The start iterate: zeros, or the session's warm-start vector when
+    /// enabled and dimension-compatible.
+    pub fn start_x(&self) -> Vec<f64> {
+        let d = self.ds.d();
+        if self.opts.session.warm_start {
+            if let Some(x0) = &self.opts.session.x0 {
+                if x0.len() == d {
+                    return x0.clone();
+                }
+            }
+        }
+        vec![0.0; d]
+    }
+
+    fn end_setup(&mut self) {
+        if let Some(t) = self.setup_timer.take() {
+            self.setup_secs = t.secs();
+        }
+    }
+
+    /// f(x) off the solve clock (trace evaluation, mirrors the paper).
+    pub fn objective(&self, x: &[f64]) -> f64 {
+        self.backend.residual_sq(&self.ds.a, &self.ds.b, x)
+    }
+
+    fn start_trace(&mut self, f0: f64) {
+        self.rec = Some(TraceRecorder::new(self.setup_secs, f0));
+    }
+
+    /// Inner iterations completed so far.
+    pub fn iters(&self) -> usize {
+        self.rec.as_ref().map(|r| r.iters()).unwrap_or(0)
+    }
+
+    pub fn should_stop(&self, f: f64) -> bool {
+        self.rec
+            .as_ref()
+            .map(|r| r.should_stop(self.opts, f))
+            .unwrap_or(false)
+    }
+
+    fn cap_chunk(&self, want: usize) -> usize {
+        want.min(self.opts.max_iters.saturating_sub(self.iters()))
+            .max(1)
+    }
+
+    pub fn record(&mut self, iters: usize, secs: f64, f: f64) {
+        self.rec
+            .as_mut()
+            .expect("trace started")
+            .record(iters, secs, f);
+    }
+
+    fn finish(self, name: &str, x: Vec<f64>, f: f64) -> SolveReport {
+        let setup = self.setup_secs;
+        let outcome = self.outcome;
+        let mut rep = self.rec.expect("trace started").finish(name, x, f, setup);
+        rep.precond_cache = outcome;
+        rep
+    }
+}
+
+/// A solver reduced to its arithmetic: how to set up, how far to step, and
+/// which iterate to evaluate. The shared frame (rng, clocks, trace, stop
+/// rules, artifact acquisition) lives in [`SolveSession`] / [`drive`].
+pub trait StepRule {
+    fn name(&self) -> &'static str;
+
+    /// Acquire artifacts through the session (runs on the setup clock).
+    fn setup(&mut self, sess: &mut SolveSession) {
+        let _ = sess;
+    }
+
+    /// Untimed initialization after setup: step sizes, variance probes,
+    /// state allocation. `x0`/`f0` are the session's start point.
+    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], f0: f64);
+
+    /// Desired iterations for the next chunk given the current objective;
+    /// 0 = rule-initiated stop. The driver clamps to the remaining
+    /// iteration budget.
+    fn chunk_len(&self, sess: &SolveSession, f: f64) -> usize;
+
+    /// Solve-clock work at a chunk boundary *before* stepping (SVRG
+    /// snapshots, epoch schedules). `Some(secs)` is recorded as a
+    /// 0-iteration trace point; `None` records nothing.
+    fn pre_chunk(&mut self, sess: &mut SolveSession, f: f64) -> Option<f64> {
+        let _ = (sess, f);
+        None
+    }
+
+    /// Advance exactly `t` iterations (the driver times this call).
+    fn step(&mut self, sess: &mut SolveSession, t: usize);
+
+    /// The iterate to evaluate f at — and to report at the end (averaged
+    /// iterate for the SGD family, xhat for the accelerated scheme).
+    fn eval_x(&self, sess: &SolveSession) -> Vec<f64>;
+
+    /// Hook after the off-clock evaluation (epoch restarts).
+    fn post_eval(&mut self, sess: &mut SolveSession, f: f64) {
+        let _ = (sess, f);
+    }
+}
+
+/// Run a [`StepRule`] through the shared solve loop.
+pub fn drive<R: StepRule>(
+    rule: &mut R,
+    backend: &Backend,
+    ds: &Dataset,
+    opts: &SolverOpts,
+) -> SolveReport {
+    let mut sess = SolveSession::new(backend, ds, opts);
+    rule.setup(&mut sess);
+    sess.end_setup();
+    let x0 = sess.start_x();
+    let f0 = sess.objective(&x0);
+    rule.init(&mut sess, &x0, f0);
+    sess.start_trace(f0);
+    let mut f = f0;
+    // the iterate last evaluated; nothing mutates it between the final
+    // record and loop exit, so the closing report reuses it instead of
+    // paying another full O(nd) residual pass
+    let mut last: Option<Vec<f64>> = None;
+    while !sess.should_stop(f) {
+        if let Some(secs) = rule.pre_chunk(&mut sess, f) {
+            sess.record(0, secs, f);
+        }
+        let want = rule.chunk_len(&sess, f);
+        if want == 0 {
+            break;
+        }
+        let t = sess.cap_chunk(want);
+        let ((), secs) = timed(|| rule.step(&mut sess, t));
+        let x = rule.eval_x(&sess);
+        f = sess.objective(&x);
+        sess.record(t, secs, f);
+        rule.post_eval(&mut sess, f);
+        last = Some(x);
+    }
+    let (x, f_final) = match last {
+        Some(x) => (x, f),
+        None => {
+            // no chunk ran (stopped at f0): evaluate the start iterate
+            let x = rule.eval_x(&sess);
+            let fx = sess.objective(&x);
+            (x, fx)
+        }
+    };
+    sess.finish(rule.name(), x, f_final)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{blas, Mat};
+    use crate::sketch::SketchKind;
+
+    fn dataset(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let a = Mat::gaussian(n, d, &mut rng);
+        let xt = rng.gaussians(d);
+        let mut b = blas::gemv(&a, &xt);
+        for v in &mut b {
+            *v += 0.05 * rng.gaussian();
+        }
+        Dataset {
+            name: "t".into(),
+            a,
+            b,
+            x_star_planted: Some(xt),
+        }
+    }
+
+    fn reuse_opts(cache: &Arc<PrecondCache>, seed: u64) -> SolverOpts {
+        let mut opts = SolverOpts::default();
+        opts.seed = seed;
+        opts.session = SessionCtx {
+            reuse_precond: true,
+            warm_start: false,
+            cache: Some(Arc::clone(cache)),
+            dataset_id: Some("ds-test".into()),
+            artifact_seed: 99,
+            x0: None,
+        };
+        opts
+    }
+
+    #[test]
+    fn inline_acquisition_consumes_session_rng_like_legacy() {
+        let ds = dataset(512, 6, 1);
+        let be = Backend::native();
+        let opts = SolverOpts::default();
+        let mut sess = SolveSession::new(&be, &ds, &opts);
+        let art = sess.precond(true);
+        // legacy sequence with the same seed
+        let mut rng = Rng::new(opts.seed);
+        let s = default_sketch_size_for(ds.n(), ds.d(), opts.sketch);
+        let pre = precondition_with(&be, &ds.a, opts.sketch, s, &mut rng, None);
+        let hd = crate::precond::hd_transform_with(&be, &ds.a, &ds.b, &mut rng);
+        assert_eq!(art.r.max_abs_diff(&pre.r), 0.0);
+        assert_eq!(art.hd.as_ref().unwrap().hda.max_abs_diff(&hd.hda), 0.0);
+        // session rng continues where the legacy stream would
+        assert_eq!(sess.rng.next_u64(), rng.next_u64());
+    }
+
+    #[test]
+    fn cached_acquisition_leaves_session_rng_untouched() {
+        let ds = dataset(400, 5, 2);
+        let be = Backend::native();
+        let cache = Arc::new(PrecondCache::new(1 << 30));
+        let opts = reuse_opts(&cache, 7);
+        // miss path
+        let mut s1 = SolveSession::new(&be, &ds, &opts);
+        let a1 = s1.precond(false);
+        let draw_after_miss = s1.rng.next_u64();
+        // hit path: same key, fresh session
+        let mut s2 = SolveSession::new(&be, &ds, &opts);
+        let a2 = s2.precond(false);
+        let draw_after_hit = s2.rng.next_u64();
+        assert_eq!(a1.r.max_abs_diff(&a2.r), 0.0);
+        assert_eq!(
+            draw_after_miss, draw_after_hit,
+            "trial stream must not observe cache state"
+        );
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn hd_upgrade_on_cached_step1_artifact() {
+        let ds = dataset(300, 4, 3);
+        let be = Backend::native();
+        let cache = Arc::new(PrecondCache::new(1 << 30));
+        let opts = reuse_opts(&cache, 5);
+        // first acquisition: step 1 only (a pwgradient-style solver)
+        let mut s1 = SolveSession::new(&be, &ds, &opts);
+        let a1 = s1.precond(false);
+        assert!(a1.hd.is_none());
+        // second acquisition wants HD: upgrade, same R
+        let mut s2 = SolveSession::new(&be, &ds, &opts);
+        let a2 = s2.precond(true);
+        assert!(a2.hd.is_some());
+        assert_eq!(a1.r.max_abs_diff(&a2.r), 0.0);
+        // third acquisition finds the upgraded artifact directly
+        let mut s3 = SolveSession::new(&be, &ds, &opts);
+        let a3 = s3.precond(true);
+        assert!(Arc::ptr_eq(&a2, &a3) || a3.hd.is_some());
+        assert_eq!(cache.hits(), 2);
+    }
+
+    #[test]
+    fn warm_start_uses_session_x0() {
+        let ds = dataset(128, 4, 4);
+        let be = Backend::native();
+        let mut opts = SolverOpts::default();
+        opts.session.warm_start = true;
+        opts.session.x0 = Some(vec![1.0, 2.0, 3.0, 4.0]);
+        let sess = SolveSession::new(&be, &ds, &opts);
+        assert_eq!(sess.start_x(), vec![1.0, 2.0, 3.0, 4.0]);
+        // dimension mismatch falls back to zeros
+        opts.session.x0 = Some(vec![1.0]);
+        let sess = SolveSession::new(&be, &ds, &opts);
+        assert_eq!(sess.start_x(), vec![0.0; 4]);
+        // warm_start off ignores x0
+        opts.session.warm_start = false;
+        opts.session.x0 = Some(vec![1.0, 2.0, 3.0, 4.0]);
+        let sess = SolveSession::new(&be, &ds, &opts);
+        assert_eq!(sess.start_x(), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn setup_clock_is_zero_without_acquisitions() {
+        let ds = dataset(64, 3, 5);
+        let be = Backend::native();
+        let opts = SolverOpts::default();
+
+        /// A do-nothing rule: one empty chunk, then stop.
+        struct Noop {
+            x: Vec<f64>,
+            stepped: bool,
+        }
+        impl StepRule for Noop {
+            fn name(&self) -> &'static str {
+                "noop"
+            }
+            fn init(&mut self, _s: &mut SolveSession, x0: &[f64], _f0: f64) {
+                self.x = x0.to_vec();
+            }
+            fn chunk_len(&self, _s: &SolveSession, _f: f64) -> usize {
+                if self.stepped {
+                    0
+                } else {
+                    1
+                }
+            }
+            fn step(&mut self, _s: &mut SolveSession, _t: usize) {
+                self.stepped = true;
+            }
+            fn eval_x(&self, _s: &SolveSession) -> Vec<f64> {
+                self.x.clone()
+            }
+        }
+
+        let mut rule = Noop { x: vec![], stepped: false };
+        let rep = drive(&mut rule, &be, &ds, &opts);
+        assert_eq!(rep.setup_secs, 0.0, "no acquisition => setup exactly 0");
+        assert_eq!(rep.iters, 1);
+        assert_eq!(rep.trace.len(), 2);
+        assert_eq!(rep.precond_cache, CacheOutcome::Off);
+    }
+
+    #[test]
+    fn sketch_size_override_respected() {
+        let ds = dataset(256, 4, 6);
+        let be = Backend::native();
+        let mut opts = SolverOpts::default();
+        opts.sketch = SketchKind::Gaussian;
+        opts.sketch_size = Some(77);
+        let sess = SolveSession::new(&be, &ds, &opts);
+        assert_eq!(sess.sketch_rows(), 77);
+    }
+}

@@ -36,6 +36,7 @@ impl Solver for ExactQr {
                 f,
             }],
             x,
+            precond_cache: crate::precond::CacheOutcome::Off,
         }
     }
 }

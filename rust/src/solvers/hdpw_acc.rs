@@ -8,15 +8,172 @@
 //! sqrt(3 V0 2^{-(s-1)} / (2 mu sigma^2 N_s (N_s+1)^2))) — Theorem 5 gives
 //! O(log(V0/eps) + d log n / (r eps)) total iterations.
 
-use super::{estimate_sigma_sq, timed, Solver, SolveReport, SolverOpts, TraceRecorder};
+use super::driver::{drive, SolveSession, StepRule};
+use super::{estimate_sigma_sq, Solver, SolveReport, SolverOpts};
 use crate::backend::Backend;
 use crate::data::Dataset;
-use crate::precond::{hd_transform_with, precondition_with};
-use crate::sketch::default_sketch_size_for;
-use crate::util::rng::Rng;
-use crate::util::stats::Timer;
+use crate::precond::PrecondArtifact;
+use crate::prox::metric::MetricProjector;
+use std::sync::Arc;
 
 pub struct HdpwAccBatchSgd;
+
+/// Algorithm 6 as a step rule. The multi-epoch structure maps onto the
+/// driver loop: `pre_chunk` opens an epoch (computes N_s and eta_s from the
+/// measured gap, untimed — schedule work, not solve work), `chunk_len`
+/// bounds chunks to the epoch remainder, and `post_eval` restarts from the
+/// aggregated iterate when the epoch completes.
+#[derive(Default)]
+struct HdpwAccRule {
+    art: Option<Arc<PrecondArtifact>>,
+    metric: Option<Arc<MetricProjector>>,
+    scale: f64,
+    n_pad: usize,
+    r: usize,
+    l_smooth: f64,
+    mu: f64,
+    sigma_sq: f64,
+    v0: f64,
+    x: Vec<f64>,
+    xhat: Vec<f64>,
+    epoch: usize,
+    t_done: usize,
+    n_s: usize,
+    eta_s: f64,
+    exhausted: bool,
+}
+
+impl StepRule for HdpwAccRule {
+    fn name(&self) -> &'static str {
+        "hdpwaccbatchsgd"
+    }
+
+    fn setup(&mut self, sess: &mut SolveSession) {
+        let art = sess.precond(true);
+        self.metric = sess.metric(&art);
+        self.art = Some(art);
+    }
+
+    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], f0: f64) {
+        let art = self.art.as_ref().expect("setup ran");
+        let hd = art.hd.as_ref().expect("two-step artifact");
+        let r = sess.opts.batch_size.max(1);
+        self.n_pad = hd.n_pad;
+        self.scale = 2.0 * self.n_pad as f64 / r as f64;
+        self.r = r;
+        // constants of the preconditioned problem (kappa(U) = O(1))
+        self.l_smooth = 2.0;
+        self.mu = 2.0;
+        self.sigma_sq = estimate_sigma_sq(
+            sess.backend,
+            &hd.hda,
+            &hd.hdb,
+            &art.r,
+            x0,
+            self.n_pad,
+            &mut sess.rng,
+        ) / r as f64;
+        // V0 >= f(x0) - f* ; f* >= 0 so f0 is a valid bound
+        self.v0 = f0.max(1e-300);
+        self.x = x0.to_vec();
+        self.xhat = x0.to_vec();
+    }
+
+    fn pre_chunk(&mut self, sess: &mut SolveSession, f: f64) -> Option<f64> {
+        if self.exhausted || self.t_done > 0 {
+            return None; // mid-epoch: schedule already fixed
+        }
+        // Algorithm 5 sets V_s = V0 2^{-s}, assuming each epoch halves
+        // the gap; with an *estimated* sigma^2 that faith-based schedule
+        // can collapse eta_s while the gap is still large. We bound the
+        // current gap by the measured objective (valid since f* >= 0),
+        // which self-corrects the schedule; the theoretical 2^{-s}
+        // decay remains its lower envelope.
+        let vs = f.min(self.v0).max(1e-300);
+        let n_s = (4.0 * (2.0 * self.l_smooth / self.mu).sqrt())
+            .max(64.0 * self.sigma_sq / (3.0 * self.mu * vs))
+            .ceil() as usize;
+        self.n_s = n_s.clamp(4, 100_000);
+        // base step of the epoch; the per-iteration step grows linearly
+        // (eta_t = eta_s * t), the Ghadimi-Lan AC-SA schedule that gives
+        // the accelerated rate. At t = N_s the step equals
+        // sqrt(3 V_s / (2 mu sigma^2 N_s)) capped at 1/(4L).
+        self.eta_s = sess.opts.eta.unwrap_or_else(|| {
+            (3.0 * vs
+                / (2.0 * self.mu
+                    * self.sigma_sq.max(1e-300)
+                    * self.n_s as f64
+                    * (self.n_s as f64 + 1.0).powi(2)))
+            .sqrt()
+        });
+        None // schedule work is untimed (it was outside the timed region)
+    }
+
+    fn chunk_len(&self, sess: &SolveSession, _f: f64) -> usize {
+        if self.exhausted {
+            0
+        } else {
+            sess.opts.chunk.min(self.n_s - self.t_done)
+        }
+    }
+
+    fn step(&mut self, sess: &mut SolveSession, t: usize) {
+        let art = self.art.as_ref().expect("setup ran");
+        let hd = art.hd.as_ref().expect("two-step artifact");
+        // alpha_t = q_t = 2/(t+1), restarting each epoch
+        let idx: Vec<Vec<usize>> = (0..t)
+            .map(|_| sess.rng.indices(self.r, self.n_pad))
+            .collect();
+        let alphas: Vec<f64> = (0..t)
+            .map(|k| 2.0 / ((self.t_done + k + 1) as f64 + 1.0))
+            .collect();
+        let qs = alphas.clone();
+        let etas: Vec<f64> = (0..t)
+            .map(|k| {
+                let t_in_epoch = (self.t_done + k + 1) as f64;
+                if let Some(e) = sess.opts.eta {
+                    e
+                } else {
+                    (self.eta_s * t_in_epoch).min(1.0 / (4.0 * self.l_smooth) * 2.0)
+                }
+            })
+            .collect();
+        let (xn, xh) = sess.backend.acc_chunk(
+            &hd.hda,
+            &hd.hdb,
+            &self.x,
+            &self.xhat,
+            &art.pinv,
+            &idx,
+            &alphas,
+            &qs,
+            &etas,
+            self.mu,
+            self.scale,
+            &sess.opts.constraint,
+            self.metric.as_deref(),
+        );
+        self.x = xn;
+        self.xhat = xh;
+        self.t_done += t;
+    }
+
+    fn eval_x(&self, _sess: &SolveSession) -> Vec<f64> {
+        self.xhat.clone()
+    }
+
+    fn post_eval(&mut self, _sess: &mut SolveSession, _f: f64) {
+        if self.t_done >= self.n_s && self.n_s > 0 {
+            // epoch restart from the aggregated iterate p_s = xhat_{N_s}
+            self.x = self.xhat.clone();
+            self.t_done = 0;
+            self.epoch += 1;
+            if self.epoch > 60 {
+                self.exhausted = true; // V0 2^-60: beyond f64 resolution
+            }
+        }
+    }
+}
 
 impl Solver for HdpwAccBatchSgd {
     fn name(&self) -> &'static str {
@@ -24,126 +181,7 @@ impl Solver for HdpwAccBatchSgd {
     }
 
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport {
-        let mut rng = Rng::new(opts.seed);
-        let d = ds.d();
-        let r = opts.batch_size.max(1);
-        let s_rows = opts
-            .sketch_size
-            .unwrap_or_else(|| default_sketch_size_for(ds.n(), d, opts.sketch));
-
-        // ---- setup ---------------------------------------------------------
-        let setup_timer = Timer::start();
-        let pre =
-            precondition_with(backend, &ds.a, opts.sketch, s_rows, &mut rng, opts.block_rows);
-        let hd = hd_transform_with(backend, &ds.a, &ds.b, &mut rng);
-        let metric = match opts.constraint {
-            crate::prox::Constraint::Unconstrained => None,
-            _ => Some(crate::prox::metric::MetricProjector::from_r(&pre.r)),
-        };
-        let setup_secs = setup_timer.secs();
-
-        let n_pad = hd.n_pad;
-        let scale = 2.0 * n_pad as f64 / r as f64;
-        let x0 = vec![0.0; d];
-        let f0 = backend.residual_sq(&ds.a, &ds.b, &x0);
-
-        // constants of the preconditioned problem (kappa(U) = O(1))
-        let l_smooth: f64 = 2.0;
-        let mu: f64 = 2.0;
-        let sigma_sq =
-            estimate_sigma_sq(backend, &hd.hda, &hd.hdb, &pre.r, &x0, n_pad, &mut rng)
-                / r as f64;
-        // V0 >= f(x0) - f* ; f* >= 0 so f0 is a valid bound
-        let v0 = f0.max(1e-300);
-
-        let mut rec = TraceRecorder::new(setup_secs, f0);
-        let mut x = x0.clone();
-        let mut xhat = x0;
-        let mut f_cur = f0;
-        let mut epoch = 0usize;
-        'outer: while !rec.should_stop(opts, f_cur) {
-            // Algorithm 5 sets V_s = V0 2^{-s}, assuming each epoch halves
-            // the gap; with an *estimated* sigma^2 that faith-based schedule
-            // can collapse eta_s while the gap is still large. We bound the
-            // current gap by the measured objective (valid since f* >= 0),
-            // which self-corrects the schedule; the theoretical 2^{-s}
-            // decay remains its lower envelope.
-            let vs = f_cur.min(v0).max(1e-300);
-            let n_s = (4.0 * (2.0 * l_smooth / mu).sqrt())
-                .max(64.0 * sigma_sq / (3.0 * mu * vs))
-                .ceil() as usize;
-            let n_s = n_s.clamp(4, 100_000);
-            // base step of the epoch; the per-iteration step grows linearly
-            // (eta_t = eta_s * t), the Ghadimi-Lan AC-SA schedule that gives
-            // the accelerated rate. At t = N_s the step equals
-            // sqrt(3 V_s / (2 mu sigma^2 N_s)) capped at 1/(4L).
-            let eta_s = opts.eta.unwrap_or_else(|| {
-                (3.0 * vs
-                    / (2.0 * mu
-                        * sigma_sq.max(1e-300)
-                        * n_s as f64
-                        * (n_s as f64 + 1.0).powi(2)))
-                .sqrt()
-            });
-            // run the epoch in chunks; alpha_t = q_t = 2/(t+1) restart each epoch
-            let mut t_done = 0usize;
-            while t_done < n_s {
-                let t_chunk = opts
-                    .chunk
-                    .min(n_s - t_done)
-                    .min(opts.max_iters.saturating_sub(rec.iters()))
-                    .max(1);
-                let idx: Vec<Vec<usize>> =
-                    (0..t_chunk).map(|_| rng.indices(r, n_pad)).collect();
-                let alphas: Vec<f64> = (0..t_chunk)
-                    .map(|k| 2.0 / ((t_done + k + 1) as f64 + 1.0))
-                    .collect();
-                let qs = alphas.clone();
-                let etas: Vec<f64> = (0..t_chunk)
-                    .map(|k| {
-                        let t_in_epoch = (t_done + k + 1) as f64;
-                        if let Some(e) = opts.eta {
-                            e
-                        } else {
-                            (eta_s * t_in_epoch).min(1.0 / (4.0 * l_smooth) * 2.0)
-                        }
-                    })
-                    .collect();
-                let ((xn, xh), secs) = timed(|| {
-                    backend.acc_chunk(
-                        &hd.hda,
-                        &hd.hdb,
-                        &x,
-                        &xhat,
-                        &pre.pinv,
-                        &idx,
-                        &alphas,
-                        &qs,
-                        &etas,
-                        mu,
-                        scale,
-                        &opts.constraint,
-                        metric.as_ref(),
-                    )
-                });
-                x = xn;
-                xhat = xh;
-                t_done += t_chunk;
-                f_cur = backend.residual_sq(&ds.a, &ds.b, &xhat);
-                rec.record(t_chunk, secs, f_cur);
-                if rec.should_stop(opts, f_cur) {
-                    break 'outer;
-                }
-            }
-            // epoch restart from the aggregated iterate p_s = xhat_{N_s}
-            x = xhat.clone();
-            epoch += 1;
-            if epoch > 60 {
-                break; // V0 2^-60: beyond f64 resolution
-            }
-        }
-        let f = backend.residual_sq(&ds.a, &ds.b, &xhat);
-        rec.finish("hdpwaccbatchsgd", xhat, f, setup_secs)
+        drive(&mut HdpwAccRule::default(), backend, ds, opts)
     }
 }
 
@@ -153,6 +191,7 @@ mod tests {
     use crate::linalg::{blas, Mat};
     use crate::prox::Constraint;
     use crate::solvers::exact::ground_truth;
+    use crate::util::rng::Rng;
 
     fn dataset(n: usize, d: usize, seed: u64) -> Dataset {
         let mut rng = Rng::new(seed);

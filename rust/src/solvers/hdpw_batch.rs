@@ -9,17 +9,118 @@
 //! The output iterate is the running average x_T^avg = (1/T) sum x_t, as in
 //! the algorithm statement; the trace reports f at the averaged iterate.
 
-use super::{
-    estimate_sigma_sq, theory_step_size, timed, Solver, SolveReport, SolverOpts, TraceRecorder,
-};
+use super::driver::{drive, SolveSession, StepRule};
+use super::{estimate_sigma_sq, theory_step_size, Solver, SolveReport, SolverOpts};
 use crate::backend::Backend;
 use crate::data::Dataset;
-use crate::precond::{hd_transform_with, precondition_with};
-use crate::sketch::default_sketch_size_for;
-use crate::util::rng::Rng;
-use crate::util::stats::Timer;
+use crate::precond::PrecondArtifact;
+use crate::prox::metric::MetricProjector;
+use std::sync::Arc;
 
 pub struct HdpwBatchSgd;
+
+/// Algorithm 2 as a step rule. Setup acquires the full two-step artifact
+/// (sketch-QR + HD transform — both stream through the backend's executor);
+/// the untimed init estimates sigma^2 and fixes the Theorem-2 step; every
+/// chunk is a fused uniform mini-batch SGD dispatch. The reported iterate
+/// is the running average x_T^avg, as in the algorithm statement.
+#[derive(Default)]
+struct HdpwBatchRule {
+    art: Option<Arc<PrecondArtifact>>,
+    metric: Option<Arc<MetricProjector>>,
+    eta: f64,
+    scale: f64,
+    n_pad: usize,
+    r: usize,
+    x: Vec<f64>,
+    x0: Vec<f64>,
+    xsum: Vec<f64>,
+    total_t: usize,
+}
+
+impl StepRule for HdpwBatchRule {
+    fn name(&self) -> &'static str {
+        "hdpwbatchsgd"
+    }
+
+    fn setup(&mut self, sess: &mut SolveSession) {
+        let art = sess.precond(true);
+        // constrained runs need the R-metric projector (Step 6's quadratic
+        // subproblem); its eigendecomposition is part of setup — and shared
+        // through the artifact when the cache is on.
+        self.metric = sess.metric(&art);
+        self.art = Some(art);
+    }
+
+    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], f0: f64) {
+        let art = self.art.as_ref().expect("setup ran");
+        let hd = art.hd.as_ref().expect("two-step artifact");
+        let r = sess.opts.batch_size.max(1);
+        self.n_pad = hd.n_pad;
+        self.scale = 2.0 * self.n_pad as f64 / r as f64;
+        self.r = r;
+        // Theorem-2 fixed step: sigma^2 of single-row gradients, divided by r
+        // for the batch (Lemma: sigma_batch^2 <= sigma^2 / r).
+        let sigma_sq = estimate_sigma_sq(
+            sess.backend,
+            &hd.hda,
+            &hd.hdb,
+            &art.r,
+            x0,
+            self.n_pad,
+            &mut sess.rng,
+        );
+        let r_norm = art.r.frob_norm();
+        self.eta = theory_step_size(
+            sess.opts,
+            sigma_sq / r as f64,
+            f0,
+            sess.opts.max_iters,
+            r_norm,
+        );
+        self.x = x0.to_vec();
+        self.x0 = x0.to_vec();
+        self.xsum = vec![0.0; x0.len()];
+    }
+
+    fn chunk_len(&self, sess: &SolveSession, _f: f64) -> usize {
+        sess.opts.chunk
+    }
+
+    fn step(&mut self, sess: &mut SolveSession, t: usize) {
+        let art = self.art.as_ref().expect("setup ran");
+        let hd = art.hd.as_ref().expect("two-step artifact");
+        let idx: Vec<Vec<usize>> = (0..t)
+            .map(|_| sess.rng.indices(self.r, self.n_pad))
+            .collect();
+        let (xt, xs) = sess.backend.sgd_chunk(
+            &hd.hda,
+            &hd.hdb,
+            &self.x,
+            &art.pinv,
+            &idx,
+            self.eta,
+            self.scale,
+            &sess.opts.constraint,
+            self.metric.as_deref(),
+        );
+        self.x = xt;
+        for (acc, v) in self.xsum.iter_mut().zip(&xs) {
+            *acc += v;
+        }
+        self.total_t += t;
+    }
+
+    fn eval_x(&self, _sess: &SolveSession) -> Vec<f64> {
+        // the averaged iterate (the algorithm's output); before any step,
+        // the start iterate itself
+        if self.total_t == 0 {
+            self.x0.clone()
+        } else {
+            average(&self.xsum, self.total_t)
+        }
+    }
+}
 
 impl Solver for HdpwBatchSgd {
     fn name(&self) -> &'static str {
@@ -27,95 +128,13 @@ impl Solver for HdpwBatchSgd {
     }
 
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport {
-        let mut rng = Rng::new(opts.seed);
-        let d = ds.d();
-        let r = opts.batch_size.max(1);
-        let s = opts
-            .sketch_size
-            .unwrap_or_else(|| default_sketch_size_for(ds.n(), d, opts.sketch));
-
-        // ---- setup: two-step preconditioning (on the solve clock) --------
-        // both steps stream through the backend's executor: the sketch folds
-        // row shards in parallel, the HD transform owns its single padded
-        // buffer (no dense [A | b] clone)
-        let setup_timer = Timer::start();
-        let pre = precondition_with(backend, &ds.a, opts.sketch, s, &mut rng, opts.block_rows);
-        let hd = hd_transform_with(backend, &ds.a, &ds.b, &mut rng);
-        // constrained runs need the R-metric projector (Step 6's quadratic
-        // subproblem); its eigendecomposition is part of setup.
-        let metric = match opts.constraint {
-            crate::prox::Constraint::Unconstrained => None,
-            _ => Some(crate::prox::metric::MetricProjector::from_r(&pre.r)),
-        };
-        let setup_secs = setup_timer.secs();
-
-        let n_pad = hd.n_pad;
-        let scale = 2.0 * n_pad as f64 / r as f64;
-        let x0 = vec![0.0; d];
-        let f0 = backend.residual_sq(&ds.a, &ds.b, &x0);
-
-        // Theorem-2 fixed step: sigma^2 of single-row gradients, divided by r
-        // for the batch (Lemma: sigma_batch^2 <= sigma^2 / r).
-        let sigma_sq = estimate_sigma_sq(
-            backend, &hd.hda, &hd.hdb, &pre.r, &x0, n_pad, &mut rng,
-        );
-        let r_norm = pre.r.frob_norm();
-        let eta = theory_step_size(opts, sigma_sq / r as f64, f0, opts.max_iters, r_norm);
-
-        let mut rec = TraceRecorder::new(setup_secs, f0);
-        let mut x = x0;
-        let mut xsum = vec![0.0; d];
-        let mut total_t = 0usize;
-        while !rec.should_stop(opts, current_f(backend, ds, &xsum, total_t, &x)) {
-            let t_chunk = opts.chunk.min(opts.max_iters - rec.iters()).max(1);
-            let idx: Vec<Vec<usize>> =
-                (0..t_chunk).map(|_| rng.indices(r, n_pad)).collect();
-            let ((xt, xs), secs) = timed(|| {
-                backend.sgd_chunk(
-                    &hd.hda,
-                    &hd.hdb,
-                    &x,
-                    &pre.pinv,
-                    &idx,
-                    eta,
-                    scale,
-                    &opts.constraint,
-                    metric.as_ref(),
-                )
-            });
-            x = xt;
-            for (acc, v) in xsum.iter_mut().zip(&xs) {
-                *acc += v;
-            }
-            total_t += t_chunk;
-            // evaluate at the averaged iterate (off the clock)
-            let xavg = average(&xsum, total_t);
-            let f = backend.residual_sq(&ds.a, &ds.b, &xavg);
-            rec.record(t_chunk, secs, f);
-        }
-        let xavg = average(&xsum, total_t.max(1));
-        let f = backend.residual_sq(&ds.a, &ds.b, &xavg);
-        rec.finish("hdpwbatchsgd", xavg, f, setup_secs)
+        drive(&mut HdpwBatchRule::default(), backend, ds, opts)
     }
 }
 
 fn average(xsum: &[f64], t: usize) -> Vec<f64> {
     let inv = 1.0 / t.max(1) as f64;
     xsum.iter().map(|v| v * inv).collect()
-}
-
-fn current_f(
-    backend: &Backend,
-    ds: &Dataset,
-    xsum: &[f64],
-    t: usize,
-    x: &[f64],
-) -> f64 {
-    if t == 0 {
-        backend.residual_sq(&ds.a, &ds.b, x)
-    } else {
-        backend.residual_sq(&ds.a, &ds.b, &average(xsum, t))
-    }
 }
 
 #[cfg(test)]
@@ -125,6 +144,7 @@ mod tests {
     use crate::linalg::Mat;
     use crate::prox::Constraint;
     use crate::solvers::exact::ground_truth;
+    use crate::util::rng::Rng;
 
     fn dataset(n: usize, d: usize, seed: u64) -> Dataset {
         let mut rng = Rng::new(seed);

@@ -8,14 +8,62 @@
 //! QR) is exactly the cost pwGradient's frozen sketch removes; the benches
 //! surface this as the per-iteration time gap.
 
-use super::{timed, Solver, SolveReport, SolverOpts, TraceRecorder};
+use super::driver::{drive, SolveSession, StepRule};
+use super::{Solver, SolveReport, SolverOpts};
 use crate::backend::Backend;
 use crate::data::Dataset;
-use crate::precond::precondition_with;
-use crate::sketch::default_sketch_size_for;
-use crate::util::rng::Rng;
 
 pub struct Ihs;
+
+/// IHS as a step rule with NO setup phase: the fresh sketch + QR recurs
+/// inside every timed step — the method's signature cost, and exactly what
+/// the artifact cache must never short-circuit (so the rule goes through
+/// [`SolveSession::fresh_precond`], which bypasses the cache by contract).
+#[derive(Default)]
+struct IhsRule {
+    x: Vec<f64>,
+}
+
+impl StepRule for IhsRule {
+    fn name(&self) -> &'static str {
+        "ihs"
+    }
+
+    fn init(&mut self, _sess: &mut SolveSession, x0: &[f64], _f0: f64) {
+        self.x = x0.to_vec();
+    }
+
+    fn chunk_len(&self, _sess: &SolveSession, _f: f64) -> usize {
+        1 // trace every (expensive) iteration
+    }
+
+    fn step(&mut self, sess: &mut SolveSession, t: usize) {
+        for _ in 0..t {
+            // fresh sketch + QR every iteration (the method's signature
+            // cost, kept inside the timed region deliberately)
+            let pre = sess.fresh_precond();
+            let metric = match sess.opts.constraint {
+                crate::prox::Constraint::Unconstrained => None,
+                _ => Some(crate::prox::metric::MetricProjector::from_r(&pre.r)),
+            };
+            let g = sess.backend.full_grad(&sess.ds.a, &sess.ds.b, &self.x);
+            // full_grad returns 2 A^T r; the IHS step applies
+            // (R^T R)^{-1} A^T r, i.e. gd_step with eta = 1/2.
+            self.x = sess.backend.gd_step(
+                &self.x,
+                &pre.pinv,
+                &g,
+                0.5,
+                &sess.opts.constraint,
+                metric.as_ref(),
+            );
+        }
+    }
+
+    fn eval_x(&self, _sess: &SolveSession) -> Vec<f64> {
+        self.x.clone()
+    }
+}
 
 impl Solver for Ihs {
     fn name(&self) -> &'static str {
@@ -23,37 +71,7 @@ impl Solver for Ihs {
     }
 
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport {
-        let mut rng = Rng::new(opts.seed);
-        let d = ds.d();
-        let s = opts
-            .sketch_size
-            .unwrap_or_else(|| default_sketch_size_for(ds.n(), d, opts.sketch));
-        let x0 = vec![0.0; d];
-        let f0 = backend.residual_sq(&ds.a, &ds.b, &x0);
-        // IHS has no setup phase: the sketching cost recurs inside the loop.
-        let mut rec = TraceRecorder::new(0.0, f0);
-        let mut x = x0;
-        let mut f = f0;
-        while !rec.should_stop(opts, f) {
-            let (xn, secs) = timed(|| {
-                // fresh sketch + QR every iteration (the method's signature
-                // cost, kept inside the timed region deliberately)
-                let pre =
-                    precondition_with(backend, &ds.a, opts.sketch, s, &mut rng, opts.block_rows);
-                let metric = match opts.constraint {
-                    crate::prox::Constraint::Unconstrained => None,
-                    _ => Some(crate::prox::metric::MetricProjector::from_r(&pre.r)),
-                };
-                let g = backend.full_grad(&ds.a, &ds.b, &x);
-                // full_grad returns 2 A^T r; the IHS step applies
-                // (R^T R)^{-1} A^T r, i.e. gd_step with eta = 1/2.
-                backend.gd_step(&x, &pre.pinv, &g, 0.5, &opts.constraint, metric.as_ref())
-            });
-            x = xn;
-            f = backend.residual_sq(&ds.a, &ds.b, &x);
-            rec.record(1, secs, f);
-        }
-        rec.finish("ihs", x, f, 0.0)
+        drive(&mut IhsRule::default(), backend, ds, opts)
     }
 }
 
@@ -63,6 +81,7 @@ mod tests {
     use crate::linalg::{blas, Mat};
     use crate::solvers::exact::ground_truth;
     use crate::solvers::pw_gradient::PwGradient;
+    use crate::util::rng::Rng;
 
     fn dataset(n: usize, d: usize, seed: u64) -> Dataset {
         let mut rng = Rng::new(seed);

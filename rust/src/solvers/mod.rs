@@ -17,7 +17,15 @@
 //! native), a [`Dataset`] and [`SolverOpts`], and produces a [`SolveReport`]
 //! with a convergence trace sampled at chunk boundaries (evaluation time is
 //! excluded from the solve clock, mirroring how the paper measures).
+//!
+//! The iterative solvers are [`StepRule`]s run by the shared
+//! [`driver::SolveSession`] loop, which owns rng seeding, artifact
+//! acquisition (cache-or-compute through the coordinator's
+//! [`crate::precond::PrecondCache`]), warm starts, trace recording and the
+//! stopping rules. `ExactQr` is the one exception: a closed-form oracle
+//! with no iteration loop to drive.
 
+pub mod driver;
 pub mod exact;
 pub mod sgd;
 pub mod adagrad;
@@ -29,6 +37,7 @@ pub mod pw_gradient;
 pub mod ihs;
 
 pub use adagrad::Adagrad;
+pub use driver::{drive, SessionCtx, SolveSession, StepRule};
 pub use exact::ExactQr;
 pub use hdpw_acc::HdpwAccBatchSgd;
 pub use hdpw_batch::HdpwBatchSgd;
@@ -70,6 +79,10 @@ pub struct SolverOpts {
     /// None = per-shape cache/thread heuristic (data::default_block_rows).
     pub block_rows: Option<usize>,
     pub seed: u64,
+    /// Session context (precond reuse, warm start) threaded by the
+    /// coordinator; the default reproduces the paper's fresh-per-trial
+    /// protocol exactly.
+    pub session: SessionCtx,
 }
 
 impl Default for SolverOpts {
@@ -87,6 +100,7 @@ impl Default for SolverOpts {
             chunk: 50,
             block_rows: None,
             seed: 1,
+            session: SessionCtx::default(),
         }
     }
 }
@@ -114,6 +128,9 @@ pub struct SolveReport {
     pub setup_secs: f64,
     pub solve_secs: f64,
     pub trace: Vec<TracePoint>,
+    /// How the preconditioner was acquired (off / miss / hit) — lets a
+    /// serve response distinguish a reused artifact from a fresh one.
+    pub precond_cache: crate::precond::CacheOutcome,
 }
 
 impl SolveReport {
@@ -258,6 +275,7 @@ impl TraceRecorder {
             solve_secs: self.solve_secs,
             trace: self.trace,
             x,
+            precond_cache: crate::precond::CacheOutcome::Off,
         }
     }
 }
@@ -399,6 +417,7 @@ mod tests {
             iters: 20,
             setup_secs: 0.0,
             solve_secs: 2.0,
+            precond_cache: crate::precond::CacheOutcome::Off,
             trace: vec![
                 TracePoint {
                     iters: 0,

@@ -7,15 +7,67 @@
 //! iteration with the sketch frozen — the paper's key observation that one
 //! sketch suffices, removing IHS's per-iteration re-sketching cost.
 
-use super::{timed, Solver, SolveReport, SolverOpts, TraceRecorder};
+use super::driver::{drive, SolveSession, StepRule};
+use super::{Solver, SolveReport, SolverOpts};
 use crate::backend::Backend;
 use crate::data::Dataset;
-use crate::precond::precondition_with;
-use crate::sketch::default_sketch_size_for;
-use crate::util::rng::Rng;
-use crate::util::stats::Timer;
+use crate::precond::PrecondArtifact;
+use crate::prox::metric::MetricProjector;
+use std::sync::Arc;
 
 pub struct PwGradient;
+
+/// Algorithm 4 as a step rule: setup acquires ONE sketch-QR artifact (the
+/// whole point vs IHS — and exactly what the preconditioner cache reuses),
+/// then every chunk is plain preconditioned projected gradient descent.
+#[derive(Default)]
+struct PwGradientRule {
+    art: Option<Arc<PrecondArtifact>>,
+    metric: Option<Arc<MetricProjector>>,
+    eta: f64,
+    x: Vec<f64>,
+}
+
+impl StepRule for PwGradientRule {
+    fn name(&self) -> &'static str {
+        "pwgradient"
+    }
+
+    fn setup(&mut self, sess: &mut SolveSession) {
+        let art = sess.precond(false);
+        self.metric = sess.metric(&art);
+        self.art = Some(art);
+    }
+
+    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], _f0: f64) {
+        // eta = 1/2 realizes the IHS-equivalent step (paper's default).
+        self.eta = sess.opts.eta.unwrap_or(0.5);
+        self.x = x0.to_vec();
+    }
+
+    fn chunk_len(&self, sess: &SolveSession, _f: f64) -> usize {
+        // full-gradient steps are expensive; trace every few steps
+        sess.opts.chunk.clamp(1, 10)
+    }
+
+    fn step(&mut self, sess: &mut SolveSession, t: usize) {
+        let art = self.art.as_ref().expect("setup ran");
+        self.x = sess.backend.pw_gradient_chunk(
+            &sess.ds.a,
+            &sess.ds.b,
+            &self.x,
+            &art.pinv,
+            self.eta,
+            t,
+            &sess.opts.constraint,
+            self.metric.as_deref(),
+        );
+    }
+
+    fn eval_x(&self, _sess: &SolveSession) -> Vec<f64> {
+        self.x.clone()
+    }
+}
 
 impl Solver for PwGradient {
     fn name(&self) -> &'static str {
@@ -23,49 +75,7 @@ impl Solver for PwGradient {
     }
 
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport {
-        let mut rng = Rng::new(opts.seed);
-        let d = ds.d();
-        let s = opts
-            .sketch_size
-            .unwrap_or_else(|| default_sketch_size_for(ds.n(), d, opts.sketch));
-        // eta = 1/2 realizes the IHS-equivalent step (paper's default).
-        let eta = opts.eta.unwrap_or(0.5);
-
-        // ---- setup: ONE sketch + QR (the whole point vs IHS) --------------
-        let setup_timer = Timer::start();
-        let pre = precondition_with(backend, &ds.a, opts.sketch, s, &mut rng, opts.block_rows);
-        let metric = match opts.constraint {
-            crate::prox::Constraint::Unconstrained => None,
-            _ => Some(crate::prox::metric::MetricProjector::from_r(&pre.r)),
-        };
-        let setup_secs = setup_timer.secs();
-
-        let x0 = vec![0.0; d];
-        let f0 = backend.residual_sq(&ds.a, &ds.b, &x0);
-        let mut rec = TraceRecorder::new(setup_secs, f0);
-        let mut x = x0;
-        let mut f = f0;
-        // full-gradient steps are expensive; trace every few steps
-        let chunk_t = opts.chunk.clamp(1, 10);
-        while !rec.should_stop(opts, f) {
-            let t_chunk = chunk_t.min(opts.max_iters - rec.iters()).max(1);
-            let (xn, secs) = timed(|| {
-                backend.pw_gradient_chunk(
-                    &ds.a,
-                    &ds.b,
-                    &x,
-                    &pre.pinv,
-                    eta,
-                    t_chunk,
-                    &opts.constraint,
-                    metric.as_ref(),
-                )
-            });
-            x = xn;
-            f = backend.residual_sq(&ds.a, &ds.b, &x);
-            rec.record(t_chunk, secs, f);
-        }
-        rec.finish("pwgradient", x, f, setup_secs)
+        drive(&mut PwGradientRule::default(), backend, ds, opts)
     }
 }
 
@@ -75,6 +85,7 @@ mod tests {
     use crate::linalg::{blas, Mat};
     use crate::prox::Constraint;
     use crate::solvers::exact::ground_truth;
+    use crate::util::rng::Rng;
 
     fn dataset(n: usize, d: usize, seed: u64) -> Dataset {
         let mut rng = Rng::new(seed);

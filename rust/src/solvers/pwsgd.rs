@@ -11,14 +11,15 @@
 //! experimental variant (exact scores, O(nd^2) — what the paper notes the
 //! authors actually used in experiments).
 
-use super::{timed, Solver, SolveReport, SolverOpts, TraceRecorder};
+use super::driver::{drive, SolveSession, StepRule};
+use super::{Solver, SolveReport, SolverOpts};
 use crate::backend::Backend;
 use crate::data::Dataset;
 use crate::linalg::{blas, tri, Mat};
-use crate::precond::precondition_with;
-use crate::sketch::default_sketch_size_for;
+use crate::precond::PrecondArtifact;
+use crate::prox::metric::MetricProjector;
 use crate::util::rng::{AliasTable, Rng};
-use crate::util::stats::Timer;
+use std::sync::Arc;
 
 pub struct PwSgd;
 
@@ -58,95 +59,128 @@ pub fn exact_leverage_scores(a: &Mat, r_factor: &Mat) -> Vec<f64> {
         .collect()
 }
 
+/// Yang et al.'s leverage-score weighted SGD as a step rule. Setup acquires
+/// the step-1 artifact, then derives the per-trial sampling machinery
+/// (approximate scores via a JL projection, alias table) — the scores are
+/// rng-dependent, so they stay per-trial even when the artifact is cached.
+#[derive(Default)]
+struct PwSgdRule {
+    art: Option<Arc<PrecondArtifact>>,
+    metric: Option<Arc<MetricProjector>>,
+    probs: Vec<f64>,
+    alias: Option<AliasTable>,
+    eta: f64,
+    r: usize,
+    n: usize,
+    x: Vec<f64>,
+    x0: Vec<f64>,
+    xsum: Vec<f64>,
+    total_t: usize,
+}
+
+impl StepRule for PwSgdRule {
+    fn name(&self) -> &'static str {
+        "pwsgd"
+    }
+
+    fn setup(&mut self, sess: &mut SolveSession) {
+        // preconditioner + leverage scores + alias table, all on the setup
+        // clock (the scores are what pwSGD pays beyond HDpw's setup)
+        let art = sess.precond(false);
+        let scores = approx_leverage_scores(&sess.ds.a, &art.r, &mut sess.rng);
+        let total: f64 = scores.iter().sum();
+        self.probs = scores.iter().map(|l| (l / total).max(1e-300)).collect();
+        self.alias = Some(AliasTable::new(&scores));
+        self.metric = sess.metric(&art);
+        self.art = Some(art);
+    }
+
+    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], f0: f64) {
+        let art = self.art.as_ref().expect("setup ran");
+        let alias = self.alias.as_ref().expect("setup ran");
+        let n = sess.ds.n();
+        // Yang et al. run r = 1 (their mini-batch variant has no guarantee);
+        // we honor opts.batch_size but default figures use 1.
+        let r = sess.opts.batch_size.max(1);
+        // step size: same theory scale as HDpw (the preconditioned problem
+        // is O(1)-smooth); variance estimated from a few weighted draws.
+        let mut sig = 0.0;
+        for _ in 0..16 {
+            let i = alias.sample(&mut sess.rng);
+            // single-draw estimator: grad = (1/p_i) * grad f_i, so the
+            // coefficient on A_i is 2 * residual_i / p_i
+            let gi = 2.0 * (blas::dot(sess.ds.a.row(i), x0) - sess.ds.b[i]) / self.probs[i];
+            let c: Vec<f64> = sess.ds.a.row(i).iter().map(|v| gi * v).collect();
+            let y = tri::solve_upper_t(&art.r, &c);
+            sig += blas::dot(&y, &y);
+        }
+        let sigma_sq = sig / 15.0 / r as f64;
+        self.eta = super::theory_step_size(
+            sess.opts,
+            sigma_sq,
+            f0,
+            sess.opts.max_iters,
+            art.r.frob_norm(),
+        );
+        self.r = r;
+        self.n = n;
+        self.x = x0.to_vec();
+        self.x0 = x0.to_vec();
+        self.xsum = vec![0.0; x0.len()];
+    }
+
+    fn chunk_len(&self, sess: &SolveSession, _f: f64) -> usize {
+        sess.opts.chunk
+    }
+
+    fn step(&mut self, sess: &mut SolveSession, t: usize) {
+        let art = self.art.as_ref().expect("setup ran");
+        let alias = self.alias.as_ref().expect("setup ran");
+        let d = self.x.len();
+        let n = self.n as f64;
+        for _ in 0..t {
+            // weighted sample of r rows; importance-weighted gradient
+            let mut c = vec![0.0; d];
+            for _ in 0..self.r {
+                let i = alias.sample(&mut sess.rng);
+                let w = 1.0 / (n * self.probs[i] * self.r as f64);
+                let gi = 2.0 * n * w * (blas::dot(sess.ds.a.row(i), &self.x) - sess.ds.b[i]);
+                blas::axpy(gi, sess.ds.a.row(i), &mut c);
+            }
+            let step = blas::gemv(&art.pinv, &c);
+            for (xi, si) in self.x.iter_mut().zip(&step) {
+                *xi -= self.eta * si;
+            }
+            match self.metric.as_deref() {
+                Some(m) => self.x = m.project(&self.x, &sess.opts.constraint),
+                None => sess.opts.constraint.project(&mut self.x),
+            }
+            for (acc, xi) in self.xsum.iter_mut().zip(&self.x) {
+                *acc += xi;
+            }
+            self.total_t += 1;
+        }
+    }
+
+    fn eval_x(&self, _sess: &SolveSession) -> Vec<f64> {
+        if self.total_t == 0 {
+            self.x0.clone()
+        } else {
+            self.xsum
+                .iter()
+                .map(|v| v / self.total_t as f64)
+                .collect()
+        }
+    }
+}
+
 impl Solver for PwSgd {
     fn name(&self) -> &'static str {
         "pwsgd"
     }
 
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport {
-        let mut rng = Rng::new(opts.seed);
-        let n = ds.n();
-        let d = ds.d();
-        let s = opts
-            .sketch_size
-            .unwrap_or_else(|| default_sketch_size_for(n, d, opts.sketch));
-
-        // ---- setup: preconditioner + leverage scores + alias table ---------
-        let setup_timer = Timer::start();
-        let pre = precondition_with(backend, &ds.a, opts.sketch, s, &mut rng, opts.block_rows);
-        let scores = approx_leverage_scores(&ds.a, &pre.r, &mut rng);
-        let total: f64 = scores.iter().sum();
-        let probs: Vec<f64> = scores.iter().map(|l| (l / total).max(1e-300)).collect();
-        let alias = AliasTable::new(&scores);
-        let metric = match opts.constraint {
-            crate::prox::Constraint::Unconstrained => None,
-            _ => Some(crate::prox::metric::MetricProjector::from_r(&pre.r)),
-        };
-        let setup_secs = setup_timer.secs();
-
-        let x0 = vec![0.0; d];
-        let f0 = backend.residual_sq(&ds.a, &ds.b, &x0);
-        // Yang et al. run r = 1 (their mini-batch variant has no guarantee);
-        // we honor opts.batch_size but default figures use 1.
-        let r = opts.batch_size.max(1);
-        // step size: same theory scale as HDpw (the preconditioned problem
-        // is O(1)-smooth); variance estimated from a few weighted draws.
-        let mut sig = 0.0;
-        for _ in 0..16 {
-            let i = alias.sample(&mut rng);
-            // single-draw estimator: grad = (1/p_i) * grad f_i, so the
-            // coefficient on A_i is 2 * residual_i / p_i
-            let gi = 2.0 * (blas::dot(ds.a.row(i), &x0) - ds.b[i]) / probs[i];
-            let c: Vec<f64> = ds.a.row(i).iter().map(|v| gi * v).collect();
-            let y = tri::solve_upper_t(&pre.r, &c);
-            sig += blas::dot(&y, &y);
-        }
-        let sigma_sq = sig / 15.0 / r as f64;
-        let eta =
-            super::theory_step_size(opts, sigma_sq, f0, opts.max_iters, pre.r.frob_norm());
-
-        let mut rec = TraceRecorder::new(setup_secs, f0);
-        let mut x = x0;
-        let mut xsum = vec![0.0; d];
-        let mut total_t = 0usize;
-        let mut f = f0;
-        while !rec.should_stop(opts, f) {
-            let t_chunk = opts.chunk.min(opts.max_iters - rec.iters()).max(1);
-            let (_, secs) = timed(|| {
-                for _ in 0..t_chunk {
-                    // weighted sample of r rows; importance-weighted gradient
-                    let mut c = vec![0.0; d];
-                    for _ in 0..r {
-                        let i = alias.sample(&mut rng);
-                        let w = 1.0 / (n as f64 * probs[i] * r as f64);
-                        let gi =
-                            2.0 * n as f64 * w * (blas::dot(ds.a.row(i), &x) - ds.b[i]);
-                        blas::axpy(gi, ds.a.row(i), &mut c);
-                    }
-                    let step = blas::gemv(&pre.pinv, &c);
-                    for (xi, si) in x.iter_mut().zip(&step) {
-                        *xi -= eta * si;
-                    }
-                    match &metric {
-                        Some(m) => x = m.project(&x, &opts.constraint),
-                        None => opts.constraint.project(&mut x),
-                    }
-                    for (acc, xi) in xsum.iter_mut().zip(&x) {
-                        *acc += xi;
-                    }
-                    total_t += 1;
-                }
-            });
-            let xavg: Vec<f64> = xsum.iter().map(|v| v / total_t as f64).collect();
-            f = backend.residual_sq(&ds.a, &ds.b, &xavg);
-            rec.record(t_chunk, secs, f);
-        }
-        let xavg: Vec<f64> = xsum
-            .iter()
-            .map(|v| v / total_t.max(1) as f64)
-            .collect();
-        let f = backend.residual_sq(&ds.a, &ds.b, &xavg);
-        rec.finish("pwsgd", xavg, f, setup_secs)
+        drive(&mut PwSgdRule::default(), backend, ds, opts)
     }
 }
 

@@ -5,13 +5,77 @@
 //! datasets of Table 3 this stalls far above the preconditioned methods,
 //! which is precisely the paper's point.
 
-use super::{timed, Solver, SolveReport, SolverOpts, TraceRecorder};
+use super::driver::{drive, SolveSession, StepRule};
+use super::{Solver, SolveReport, SolverOpts};
 use crate::backend::Backend;
 use crate::data::Dataset;
 use crate::linalg::{blas, Mat};
-use crate::util::rng::Rng;
 
 pub struct Sgd;
+
+/// Decaying-step mini-batch SGD as a step rule: no setup phase, O(1/sqrt(t))
+/// decay anchored at the iteration count the session has already recorded.
+#[derive(Default)]
+struct SgdRule {
+    x: Vec<f64>,
+    eta0: f64,
+    t0: f64,
+    scale: f64,
+    r: usize,
+    n: usize,
+    mbuf: Mat,
+    vbuf: Vec<f64>,
+}
+
+impl StepRule for SgdRule {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], _f0: f64) {
+        let (n, d) = (sess.ds.n(), sess.ds.d());
+        let r = sess.opts.batch_size.max(1);
+        // eta0 from the inverse row second moment: a safe scale for
+        // E||A_i||^2-smooth stochastic gradients.
+        let row_ms: f64 = sess.ds.a.data.iter().map(|v| v * v).sum::<f64>() / n as f64;
+        self.eta0 = sess
+            .opts
+            .eta
+            .unwrap_or(0.25 / (2.0 * n as f64 * row_ms.max(1e-300)));
+        self.t0 = 100.0;
+        self.scale = 2.0 * n as f64 / r as f64;
+        self.r = r;
+        self.n = n;
+        self.mbuf = Mat::zeros(r, d);
+        self.vbuf = vec![0.0; r];
+        self.x = x0.to_vec();
+    }
+
+    fn chunk_len(&self, sess: &SolveSession, _f: f64) -> usize {
+        sess.opts.chunk
+    }
+
+    fn step(&mut self, sess: &mut SolveSession, t: usize) {
+        let base_t = sess.iters();
+        for k in 0..t {
+            let idx = sess.rng.indices(self.r, self.n);
+            for (row, &i) in idx.iter().enumerate() {
+                self.mbuf.row_mut(row).copy_from_slice(sess.ds.a.row(i));
+                self.vbuf[row] = sess.ds.b[i];
+            }
+            let g = blas::fused_grad(&self.mbuf, &self.vbuf, &self.x, self.scale);
+            let eta = self.eta0 / (1.0 + (base_t + k) as f64 / self.t0).sqrt();
+            for (xi, gi) in self.x.iter_mut().zip(&g) {
+                *xi -= eta * gi;
+            }
+            sess.opts.constraint.project(&mut self.x);
+        }
+    }
+
+    fn eval_x(&self, _sess: &SolveSession) -> Vec<f64> {
+        self.x.clone()
+    }
+}
 
 impl Solver for Sgd {
     fn name(&self) -> &'static str {
@@ -19,46 +83,7 @@ impl Solver for Sgd {
     }
 
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport {
-        let mut rng = Rng::new(opts.seed);
-        let n = ds.n();
-        let d = ds.d();
-        let r = opts.batch_size.max(1);
-        let scale = 2.0 * n as f64 / r as f64;
-        let x0 = vec![0.0; d];
-        let f0 = backend.residual_sq(&ds.a, &ds.b, &x0);
-        // eta0 from the inverse row second moment: a safe scale for
-        // E||A_i||^2-smooth stochastic gradients.
-        let row_ms: f64 = ds.a.data.iter().map(|v| v * v).sum::<f64>() / n as f64;
-        let eta0 = opts.eta.unwrap_or(0.25 / (2.0 * n as f64 * row_ms.max(1e-300)));
-        let t0 = 100.0;
-
-        let mut rec = TraceRecorder::new(0.0, f0);
-        let mut x = x0;
-        let mut f = f0;
-        let mut mbuf = Mat::zeros(r, d);
-        let mut vbuf = vec![0.0; r];
-        while !rec.should_stop(opts, f) {
-            let t_chunk = opts.chunk.min(opts.max_iters - rec.iters()).max(1);
-            let base_t = rec.iters();
-            let (_, secs) = timed(|| {
-                for k in 0..t_chunk {
-                    let idx = rng.indices(r, n);
-                    for (row, &i) in idx.iter().enumerate() {
-                        mbuf.row_mut(row).copy_from_slice(ds.a.row(i));
-                        vbuf[row] = ds.b[i];
-                    }
-                    let g = blas::fused_grad(&mbuf, &vbuf, &x, scale);
-                    let eta = eta0 / (1.0 + (base_t + k) as f64 / t0).sqrt();
-                    for (xi, gi) in x.iter_mut().zip(&g) {
-                        *xi -= eta * gi;
-                    }
-                    opts.constraint.project(&mut x);
-                }
-            });
-            f = backend.residual_sq(&ds.a, &ds.b, &x);
-            rec.record(t_chunk, secs, f);
-        }
-        rec.finish("sgd", x, f, 0.0)
+        drive(&mut SgdRule::default(), backend, ds, opts)
     }
 }
 
@@ -67,6 +92,7 @@ mod tests {
     use super::*;
     use crate::prox::Constraint;
     use crate::solvers::exact::ground_truth;
+    use crate::util::rng::Rng;
 
     fn dataset(n: usize, d: usize, seed: u64) -> Dataset {
         let mut rng = Rng::new(seed);

@@ -11,17 +11,132 @@
 //! at all on the kappa = 1e8 datasets (the paper notes plain SVRG performs
 //! poorly there, which the solver_convergence tests reproduce).
 
-use super::{timed, Solver, SolveReport, SolverOpts, TraceRecorder};
+use super::driver::{drive, SolveSession, StepRule};
+use super::{timed, Solver, SolveReport, SolverOpts};
 use crate::backend::Backend;
 use crate::data::Dataset;
 use crate::linalg::{blas, Mat};
-use crate::precond::precondition_with;
-use crate::sketch::default_sketch_size_for;
-use crate::util::rng::Rng;
-use crate::util::stats::Timer;
+use crate::precond::PrecondArtifact;
+use crate::prox::metric::MetricProjector;
+use std::sync::Arc;
 
 pub struct Svrg {
     pub preconditioned: bool,
+}
+
+/// (pw)SVRG as a step rule: `pre_chunk` takes the epoch snapshot + full
+/// gradient on the solve clock (recorded as a 0-iteration trace point, as
+/// before), inner chunks apply the variance-reduced direction, optionally
+/// through the shared step-1 artifact in pw mode.
+#[derive(Default)]
+struct SvrgRule {
+    preconditioned: bool,
+    art: Option<Arc<PrecondArtifact>>,
+    metric: Option<Arc<MetricProjector>>,
+    eta: f64,
+    scale: f64,
+    m_inner: usize,
+    r: usize,
+    n: usize,
+    x: Vec<f64>,
+    snapshot: Vec<f64>,
+    mu_g: Vec<f64>,
+    done: usize,
+    mbuf: Mat,
+    vbuf: Vec<f64>,
+}
+
+impl StepRule for SvrgRule {
+    fn name(&self) -> &'static str {
+        if self.preconditioned {
+            "pwsvrg"
+        } else {
+            "svrg"
+        }
+    }
+
+    fn setup(&mut self, sess: &mut SolveSession) {
+        if self.preconditioned {
+            let art = sess.precond(false);
+            self.metric = sess.metric(&art);
+            self.art = Some(art);
+        }
+    }
+
+    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], _f0: f64) {
+        let (n, d) = (sess.ds.n(), sess.ds.d());
+        let r = sess.opts.batch_size.max(1);
+        // step size: preconditioned problem is ~2-smooth => 0.1 stable;
+        // raw problem must scale by the (unknown) smoothness — use the row
+        // moment bound like plain SGD.
+        let preconditioned = self.preconditioned;
+        self.eta = sess.opts.eta.unwrap_or_else(|| {
+            if preconditioned {
+                0.1
+            } else {
+                let row_ms: f64 =
+                    sess.ds.a.data.iter().map(|v| v * v).sum::<f64>() / n as f64;
+                0.05 / (2.0 * n as f64 * row_ms.max(1e-300))
+            }
+        });
+        // epoch length: 2n/r inner steps (standard SVRG choice)
+        self.m_inner = (2 * n / r).clamp(16, 20_000);
+        self.scale = 2.0 * n as f64 / r as f64;
+        self.r = r;
+        self.n = n;
+        self.x = x0.to_vec();
+        self.done = self.m_inner; // force a snapshot on the first chunk
+        self.mbuf = Mat::zeros(r, d);
+        self.vbuf = vec![0.0; r];
+    }
+
+    fn pre_chunk(&mut self, sess: &mut SolveSession, _f: f64) -> Option<f64> {
+        if self.done < self.m_inner {
+            return None; // mid-epoch
+        }
+        // snapshot + full gradient (counted as solve time)
+        self.snapshot = self.x.clone();
+        let (mu_g, snap_secs) = timed(|| {
+            sess.backend
+                .full_grad(&sess.ds.a, &sess.ds.b, &self.snapshot)
+        });
+        self.mu_g = mu_g;
+        self.done = 0;
+        Some(snap_secs)
+    }
+
+    fn chunk_len(&self, sess: &SolveSession, _f: f64) -> usize {
+        sess.opts.chunk.min(self.m_inner - self.done)
+    }
+
+    fn step(&mut self, sess: &mut SolveSession, t: usize) {
+        let d = self.x.len();
+        for _ in 0..t {
+            let idx = sess.rng.indices(self.r, self.n);
+            for (row, &i) in idx.iter().enumerate() {
+                self.mbuf.row_mut(row).copy_from_slice(sess.ds.a.row(i));
+                self.vbuf[row] = sess.ds.b[i];
+            }
+            let g_x = blas::fused_grad(&self.mbuf, &self.vbuf, &self.x, self.scale);
+            let g_s = blas::fused_grad(&self.mbuf, &self.vbuf, &self.snapshot, self.scale);
+            let mut v: Vec<f64> = (0..d).map(|j| g_x[j] - g_s[j] + self.mu_g[j]).collect();
+            if let Some(art) = &self.art {
+                v = blas::gemv(&art.pinv, &v);
+            }
+            for (xi, vi) in self.x.iter_mut().zip(&v) {
+                *xi -= self.eta * vi;
+            }
+            match self.metric.as_deref() {
+                Some(m) => self.x = m.project(&self.x, &sess.opts.constraint),
+                None => sess.opts.constraint.project(&mut self.x),
+            }
+        }
+        self.done += t;
+    }
+
+    fn eval_x(&self, _sess: &SolveSession) -> Vec<f64> {
+        self.x.clone()
+    }
 }
 
 impl Solver for Svrg {
@@ -34,99 +149,11 @@ impl Solver for Svrg {
     }
 
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport {
-        let mut rng = Rng::new(opts.seed);
-        let n = ds.n();
-        let d = ds.d();
-        let r = opts.batch_size.max(1);
-
-        // ---- setup (preconditioner only in pw mode) ------------------------
-        let setup_timer = Timer::start();
-        let (pinv, metric) = if self.preconditioned {
-            let s = opts
-                .sketch_size
-                .unwrap_or_else(|| default_sketch_size_for(n, d, opts.sketch));
-            let pre =
-                precondition_with(backend, &ds.a, opts.sketch, s, &mut rng, opts.block_rows);
-            let metric = match opts.constraint {
-                crate::prox::Constraint::Unconstrained => None,
-                _ => Some(crate::prox::metric::MetricProjector::from_r(&pre.r)),
-            };
-            (Some(pre.pinv), metric)
-        } else {
-            (None, None)
+        let mut rule = SvrgRule {
+            preconditioned: self.preconditioned,
+            ..SvrgRule::default()
         };
-        let setup_secs = setup_timer.secs();
-
-        let x0 = vec![0.0; d];
-        let f0 = backend.residual_sq(&ds.a, &ds.b, &x0);
-        // step size: preconditioned problem is ~2-smooth => 0.1 stable;
-        // raw problem must scale by the (unknown) smoothness — use the row
-        // moment bound like plain SGD.
-        let eta = opts.eta.unwrap_or_else(|| {
-            if self.preconditioned {
-                0.1
-            } else {
-                let row_ms: f64 =
-                    ds.a.data.iter().map(|v| v * v).sum::<f64>() / n as f64;
-                0.05 / (2.0 * n as f64 * row_ms.max(1e-300))
-            }
-        });
-        // epoch length: 2n/r inner steps (standard SVRG choice)
-        let m_inner = (2 * n / r).clamp(16, 20_000);
-        let scale = 2.0 * n as f64 / r as f64;
-
-        let mut rec = TraceRecorder::new(setup_secs, f0);
-        let mut x = x0;
-        let mut f = f0;
-        let mut mbuf = Mat::zeros(r, d);
-        let mut vbuf = vec![0.0; r];
-        'outer: while !rec.should_stop(opts, f) {
-            // snapshot + full gradient (counted as solve time)
-            let snapshot = x.clone();
-            let (mu_g, snap_secs) =
-                timed(|| backend.full_grad(&ds.a, &ds.b, &snapshot));
-            rec.record(0, snap_secs, f);
-            let mut done = 0usize;
-            while done < m_inner {
-                let t_chunk = opts
-                    .chunk
-                    .min(m_inner - done)
-                    .min(opts.max_iters.saturating_sub(rec.iters()))
-                    .max(1);
-                let (_, secs) = timed(|| {
-                    for _ in 0..t_chunk {
-                        let idx = rng.indices(r, n);
-                        for (row, &i) in idx.iter().enumerate() {
-                            mbuf.row_mut(row).copy_from_slice(ds.a.row(i));
-                            vbuf[row] = ds.b[i];
-                        }
-                        let g_x = blas::fused_grad(&mbuf, &vbuf, &x, scale);
-                        let g_s = blas::fused_grad(&mbuf, &vbuf, &snapshot, scale);
-                        let mut v: Vec<f64> = (0..d)
-                            .map(|j| g_x[j] - g_s[j] + mu_g[j])
-                            .collect();
-                        if let Some(p) = &pinv {
-                            v = blas::gemv(p, &v);
-                        }
-                        for (xi, vi) in x.iter_mut().zip(&v) {
-                            *xi -= eta * vi;
-                        }
-                        match &metric {
-                            Some(m) => x = m.project(&x, &opts.constraint),
-                            None => opts.constraint.project(&mut x),
-                        }
-                    }
-                });
-                done += t_chunk;
-                f = backend.residual_sq(&ds.a, &ds.b, &x);
-                rec.record(t_chunk, secs, f);
-                if rec.should_stop(opts, f) {
-                    break 'outer;
-                }
-            }
-        }
-        let name = if self.preconditioned { "pwsvrg" } else { "svrg" };
-        rec.finish(name, x, f, setup_secs)
+        drive(&mut rule, backend, ds, opts)
     }
 }
 
@@ -134,6 +161,7 @@ impl Solver for Svrg {
 mod tests {
     use super::*;
     use crate::solvers::exact::ground_truth;
+    use crate::util::rng::Rng;
 
     fn dataset(n: usize, d: usize, seed: u64) -> Dataset {
         let mut rng = Rng::new(seed);

@@ -1,0 +1,154 @@
+//! Reference-implementation coverage for `prox/`:
+//! * l1-ball projection checked against an O(d^2) brute-force dual search;
+//! * box constraint edge cases (lo == hi, no violation);
+//! * R-metric projection consistency with the Euclidean path when R = I.
+
+use hdpw::linalg::Mat;
+use hdpw::prox::metric::MetricProjector;
+use hdpw::prox::{project_l1, project_l2, Constraint};
+use hdpw::Rng;
+
+/// O(d^2) reference for the Euclidean l1-ball projection: for each support
+/// size k over the magnitudes sorted descending, compute the candidate
+/// threshold theta_k = (sum of top-k - radius) / k and keep the one whose
+/// soft-threshold lands exactly on the ball boundary. No pivot tricks —
+/// just the KKT conditions checked exhaustively.
+fn brute_force_l1(x: &[f64], radius: f64) -> Vec<f64> {
+    let l1: f64 = x.iter().map(|v| v.abs()).sum();
+    if l1 <= radius {
+        return x.to_vec();
+    }
+    let mut mags: Vec<f64> = x.iter().map(|v| v.abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let d = mags.len();
+    let mut best_theta = 0.0;
+    for k in 1..=d {
+        // O(d) prefix sum per candidate k => O(d^2) total, by design
+        let prefix: f64 = mags[..k].iter().sum();
+        let theta = (prefix - radius) / k as f64;
+        // valid iff every kept coordinate stays positive after shrinking
+        // and every dropped coordinate would not survive
+        let kept_ok = mags[k - 1] - theta > 0.0;
+        let dropped_ok = k == d || mags[k] - theta <= 0.0;
+        if kept_ok && dropped_ok {
+            best_theta = theta;
+        }
+    }
+    x.iter()
+        .map(|v| v.signum() * (v.abs() - best_theta).max(0.0))
+        .collect()
+}
+
+#[test]
+fn l1_projection_matches_brute_force_reference() {
+    let mut rng = Rng::new(1);
+    for trial in 0..200 {
+        let d = 2 + (trial % 30);
+        let mut x: Vec<f64> = rng.gaussians(d).iter().map(|v| v * 3.0).collect();
+        let radius = 0.1 + rng.uniform() * 4.0;
+        let reference = brute_force_l1(&x, radius);
+        project_l1(&mut x, radius);
+        for (a, b) in x.iter().zip(&reference) {
+            assert!(
+                (a - b).abs() < 1e-10,
+                "trial {trial}: pivot {a} vs brute force {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn l1_projection_brute_force_on_adversarial_shapes() {
+    // ties, zeros, one dominant coordinate, all-equal magnitudes
+    let cases: Vec<(Vec<f64>, f64)> = vec![
+        (vec![1.0, 1.0, 1.0, 1.0], 2.0),
+        (vec![5.0, 0.0, 0.0], 1.0),
+        (vec![-2.0, 2.0, -2.0, 2.0], 3.0),
+        (vec![1e-12, 1.0, -1e-12], 0.5),
+        (vec![3.0, -0.1, 1.0, -3.0], 2.0),
+    ];
+    for (x0, radius) in cases {
+        let reference = brute_force_l1(&x0, radius);
+        let mut x = x0.clone();
+        project_l1(&mut x, radius);
+        let l1: f64 = x.iter().map(|v| v.abs()).sum();
+        assert!(l1 <= radius + 1e-9, "{x0:?}: left the ball ({l1})");
+        for (a, b) in x.iter().zip(&reference) {
+            assert!((a - b).abs() < 1e-10, "{x0:?}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn box_degenerate_lo_equals_hi_pins_every_coordinate() {
+    let c = Constraint::Box { lo: 0.7, hi: 0.7 };
+    let mut x = vec![-3.0, 0.7, 12.0, 0.0];
+    c.project(&mut x);
+    assert_eq!(x, vec![0.7; 4]);
+    assert!(c.contains(&x, 1e-12));
+    // idempotent on the degenerate box too
+    c.project(&mut x);
+    assert_eq!(x, vec![0.7; 4]);
+}
+
+#[test]
+fn box_with_no_violation_is_identity() {
+    let c = Constraint::Box { lo: -1.0, hi: 1.0 };
+    let inside = vec![0.3, -0.9999, 0.0, 1.0, -1.0];
+    let mut x = inside.clone();
+    c.project(&mut x);
+    assert_eq!(x, inside, "interior/boundary points must be untouched");
+    assert!(c.contains(&x, 0.0));
+}
+
+#[test]
+fn metric_projection_with_identity_r_matches_euclidean_l2_and_l1() {
+    // H = R^T R = I: the quadratic subproblem degenerates to the Euclidean
+    // projection; the metric path must agree with the direct one.
+    let mut rng = Rng::new(7);
+    let proj = MetricProjector::from_r(&Mat::eye(9));
+    for _ in 0..20 {
+        let z: Vec<f64> = rng.gaussians(9).iter().map(|v| v * 4.0).collect();
+        // l2
+        let got = proj.project(&z, &Constraint::L2Ball { radius: 1.3 });
+        let mut want = z.clone();
+        project_l2(&mut want, 1.3);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-8, "l2: {a} vs {b}");
+        }
+        // l1 (ADMM path) — also cross-checked against the brute force
+        let got = proj.project(&z, &Constraint::L1Ball { radius: 2.0 });
+        let want = brute_force_l1(&z, 2.0);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6, "l1: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn metric_projection_with_identity_r_matches_euclidean_box() {
+    let mut rng = Rng::new(9);
+    let proj = MetricProjector::from_r(&Mat::eye(6));
+    let cons = Constraint::Box { lo: -0.5, hi: 0.25 };
+    for _ in 0..20 {
+        let z: Vec<f64> = rng.gaussians(6).iter().map(|v| v * 2.0).collect();
+        let got = proj.project(&z, &cons);
+        let mut want = z.clone();
+        cons.project(&mut want);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6, "box: {a} vs {b}");
+        }
+        assert!(cons.contains(&got, 1e-9));
+    }
+}
+
+#[test]
+fn metric_projection_unconstrained_is_identity() {
+    let mut rng = Rng::new(11);
+    let a = Mat::gaussian(40, 5, &mut rng);
+    let r = hdpw::linalg::qr::qr_r(&a);
+    let proj = MetricProjector::from_r(&r);
+    let z: Vec<f64> = rng.gaussians(5);
+    let got = proj.project(&z, &Constraint::Unconstrained);
+    assert_eq!(got, z);
+}
