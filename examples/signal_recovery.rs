@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
     let ds = Dataset {
         name: "signal".into(),
         a,
+        csr: None,
         b,
         x_star_planted: Some(x0.clone()),
     };

@@ -76,6 +76,64 @@ fn main() {
         println!("{}", st.report());
     }
 
+    // ---- sparse vs dense sketch+precondition (acceptance: >= 5x) -----------
+    // A 2^20 x 100 synthetic at 1% density: the CSR CountSketch pipeline
+    // touches ~nnz = 2^20 stored entries where the dense pipeline streams
+    // all 2^20 * 100 cells, so sketch+QR wall clock should drop >= 5x.
+    {
+        let n = 1 << 20;
+        let d = 100;
+        let s = 1000; // rotation-scale sketch keeps the shared QR cost small
+        let spec = hdpw::data::sparse_gen::SparseSpec {
+            name: "bench_sparse".into(),
+            n,
+            d,
+            density: 0.01,
+            kappa: 1e3,
+            noise: 0.1,
+            signal_scale: 1.0,
+        };
+        let mut gen_rng = rng.fork(41);
+        let ds = hdpw::data::sparse_gen::generate_sparse(&spec, &mut gen_rng);
+        let csr = ds.csr.as_ref().expect("sparse dataset");
+        println!(
+            "sparse workload: {}x{} nnz={} density={:.4}",
+            n,
+            d,
+            csr.nnz(),
+            ds.density()
+        );
+        let be = Backend::native();
+        let mut dense_rng = rng.fork(42);
+        let st_dense = BenchStats::run("precondition dense 2^20x100 countsketch", 1, 3, || {
+            std::hint::black_box(hdpw::precond::precondition_with(
+                &be,
+                &ds.a,
+                SketchKind::CountSketch,
+                s,
+                &mut dense_rng,
+                None,
+            ));
+        });
+        println!("{}", st_dense.report());
+        let mut csr_rng = rng.fork(42);
+        let st_csr = BenchStats::run("precondition csr   2^20x100 countsketch", 1, 3, || {
+            std::hint::black_box(hdpw::precond::precondition_csr_with(
+                &be,
+                csr,
+                SketchKind::CountSketch,
+                s,
+                &mut csr_rng,
+                None,
+            ));
+        });
+        println!("{}", st_csr.report());
+        println!(
+            "sparse sketch+precondition speedup: {:.1}x (acceptance: >= 5x)",
+            st_dense.median_secs() / st_csr.median_secs()
+        );
+    }
+
     // ---- QR + triangular ------------------------------------------------------
     let sa = Mat::gaussian(1000, 20, &mut rng);
     let st = BenchStats::run("qr_r 1000x20", 3, 20, || {

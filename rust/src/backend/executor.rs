@@ -21,12 +21,12 @@
 // ops legitimately take >7 scalars/arrays.
 #![allow(clippy::too_many_arguments)]
 
-use crate::linalg::{blas, Mat};
+use crate::linalg::{blas, CsrMat, Mat};
 use crate::prox::metric::MetricProjector;
 use crate::prox::Constraint;
 use crate::runtime::literal::Value;
 use crate::runtime::EngineHandle;
-use crate::sketch::{apply_streamed, Sketch};
+use crate::sketch::{apply_streamed, apply_streamed_csr, Sketch};
 use crate::util::threadpool::default_threads;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -70,6 +70,10 @@ pub mod opkey {
 
     pub fn sketch_apply(s: usize, n: usize, d: usize) -> String {
         format!("sketch_apply_s{s}_n{n}_d{d}")
+    }
+
+    pub fn sketch_apply_csr(s: usize, nnz: usize, d: usize) -> String {
+        format!("sketch_apply_csr_s{s}_nnz{nnz}_d{d}")
     }
 }
 
@@ -233,6 +237,21 @@ pub trait Executor: Send + Sync {
     ) -> Mat {
         let _ = block_rows;
         sk.apply(a)
+    }
+
+    /// Compute `S A` for a CSR matrix — the input-sparsity-time setup path.
+    /// Default: the sketch's own `apply_csr` single pass (O(nnz) for hash
+    /// sketches); block-aware executors override to stream nnz-balanced
+    /// shards. `block_nnz` is the per-shard stored-entry budget (None =
+    /// heuristic).
+    fn sketch_apply_csr(
+        &self,
+        sk: &(dyn Sketch + Send + Sync),
+        a: &CsrMat,
+        block_nnz: Option<usize>,
+    ) -> Mat {
+        let _ = block_nnz;
+        sk.apply_csr(a)
     }
 }
 
@@ -456,6 +475,26 @@ impl Executor for NativeExecutor {
     ) -> Mat {
         let br = block_rows.or(self.block_rows);
         let (sa, shards) = apply_streamed(sk, a, br, self.threads);
+        if shards > 1 {
+            self.stats.add_block_calls(shards);
+        }
+        sa
+    }
+
+    /// nnz-sharded streamed CSR sketch application; shards folded count in
+    /// `DispatchStats::native_block_calls` exactly like the dense path.
+    /// When no explicit nnz budget arrives, the executor's default row
+    /// tuning (if any) is translated via the mean row occupancy, so
+    /// per-backend `block_rows` tuning means the same thing in both
+    /// representations.
+    fn sketch_apply_csr(
+        &self,
+        sk: &(dyn Sketch + Send + Sync),
+        a: &CsrMat,
+        block_nnz: Option<usize>,
+    ) -> Mat {
+        let bn = block_nnz.or_else(|| self.block_rows.map(|br| a.nnz_budget_for_rows(br)));
+        let (sa, shards) = apply_streamed_csr(sk, a, bn, self.threads);
         if shards > 1 {
             self.stats.add_block_calls(shards);
         }

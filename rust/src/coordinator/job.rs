@@ -14,6 +14,13 @@ use anyhow::{bail, Context, Result};
 /// request validation and the scheduler's backend dispatch.
 pub const EXECUTOR_CHOICES: &[&str] = &["", "default", "native", "auto", "pjrt"];
 
+/// Valid `JobRequest::format` values — the dataset representation:
+///   dense   — the paper's dense pipeline (default);
+///   sparse  — named generators produce the CSR sparse variant;
+///   libsvm  — like sparse, but round-tripped through the libsvm parser
+///             (and `dataset: "libsvm:<path>"` loads a file directly).
+pub const FORMAT_CHOICES: &[&str] = &["", "dense", "sparse", "libsvm"];
+
 #[derive(Clone, Debug)]
 pub struct JobRequest {
     pub id: u64,
@@ -49,6 +56,15 @@ pub struct JobRequest {
     /// Start trials after the first from the best iterate so far. Default
     /// off (paper protocol); HDPW_WARM_START=1 flips the default.
     pub warm_start: bool,
+    /// Dataset representation: dense | sparse | libsvm (see
+    /// [`FORMAT_CHOICES`]). Default "dense"; HDPW_FORMAT overrides the
+    /// process default (the sparse tier-1 CI variant sets
+    /// HDPW_FORMAT=libsvm so the whole suite runs against generated sparse
+    /// datasets round-tripped through the parser).
+    pub format: String,
+    /// Target nnz fraction for generated sparse datasets; 0 = the
+    /// generator default (0.1). Ignored for dense format and file loads.
+    pub density: f64,
 }
 
 /// Truthy env flag ("1" | "true" | "yes") — the single authority for the
@@ -84,6 +100,11 @@ impl Default for JobRequest {
             block_rows: 0,
             reuse_precond: env_flag("HDPW_REUSE_PRECOND"),
             warm_start: env_flag("HDPW_WARM_START"),
+            format: std::env::var("HDPW_FORMAT")
+                .ok()
+                .filter(|v| !v.is_empty())
+                .unwrap_or_else(|| "dense".into()),
+            density: 0.0,
         }
     }
 }
@@ -111,6 +132,8 @@ impl JobRequest {
             ("block_rows", Json::num(self.block_rows as f64)),
             ("reuse_precond", Json::Bool(self.reuse_precond)),
             ("warm_start", Json::Bool(self.warm_start)),
+            ("format", Json::str(self.format.clone())),
+            ("density", Json::num(self.density)),
         ])
     }
 
@@ -153,6 +176,8 @@ impl JobRequest {
                 .get("warm_start")
                 .and_then(Json::as_bool)
                 .unwrap_or(def.warm_start),
+            format: get_s("format", &def.format),
+            density: get_n("density", def.density),
         };
         req.validate()?;
         Ok(req)
@@ -181,6 +206,16 @@ impl JobRequest {
                 self.executor,
                 EXECUTOR_CHOICES
             );
+        }
+        if !FORMAT_CHOICES.contains(&self.format.as_str()) {
+            bail!(
+                "unknown format {:?} (valid: {:?})",
+                self.format,
+                FORMAT_CHOICES
+            );
+        }
+        if !(0.0..=1.0).contains(&self.density) {
+            bail!("density must be in [0, 1], got {}", self.density);
         }
         Ok(())
     }
@@ -229,6 +264,14 @@ pub struct JobResult {
     pub best_rel_err: f64,
     pub trials_run: usize,
     pub total_secs: f64,
+    /// Stored entries of the solved dataset (n*d when dense).
+    pub nnz: usize,
+    /// nnz / (n*d). NOTE: a CSR dataset generated at density 1.0 also
+    /// reports 1.0 — use `sparse` for the representation, not this value.
+    pub density: f64,
+    /// Whether the job ran on the CSR pipeline (the representation flag; a
+    /// fully dense CSR payload still reports true here).
+    pub sparse: bool,
     pub best: SolveReport,
 }
 
@@ -255,6 +298,9 @@ impl JobResult {
             ("best_rel_err", Json::num(self.best_rel_err)),
             ("trials_run", Json::num(self.trials_run as f64)),
             ("total_secs", Json::num(self.total_secs)),
+            ("nnz", Json::num(self.nnz as f64)),
+            ("density", Json::num(self.density)),
+            ("sparse", Json::Bool(self.sparse)),
             ("iters", Json::num(self.best.iters as f64)),
             ("setup_secs", Json::num(self.best.setup_secs)),
             ("solve_secs", Json::num(self.best.solve_secs)),
@@ -349,6 +395,25 @@ mod tests {
         let opts = back.solver_opts(0.0, None).unwrap();
         assert!(!opts.session.reuse_precond);
         assert!(opts.session.cache.is_none());
+    }
+
+    #[test]
+    fn format_and_density_roundtrip_and_validate() {
+        let mut req = JobRequest::default();
+        req.format = "sparse".into();
+        req.density = 0.05;
+        let back = JobRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back.format, "sparse");
+        assert!((back.density - 0.05).abs() < 1e-15);
+        // bad format rejected
+        let j = Json::parse(r#"{"format": "parquet"}"#).unwrap();
+        assert!(JobRequest::from_json(&j).is_err());
+        // bad density rejected
+        let j = Json::parse(r#"{"density": 1.5}"#).unwrap();
+        assert!(JobRequest::from_json(&j).is_err());
+        // libsvm is a valid format
+        let j = Json::parse(r#"{"format": "libsvm"}"#).unwrap();
+        assert_eq!(JobRequest::from_json(&j).unwrap().format, "libsvm");
     }
 
     #[test]

@@ -11,6 +11,11 @@ pub struct Metrics {
     pub trials_run: AtomicUsize,
     /// trials that started from a warm iterate (warm_start jobs, trial > 0)
     pub warm_starts: AtomicUsize,
+    /// jobs solved on a CSR dataset (the sparse workload class)
+    pub sparse_jobs: AtomicUsize,
+    /// total stored entries across sparse jobs (throughput accounting for
+    /// the O(nnz) pipeline)
+    pub sparse_nnz: AtomicU64,
     /// total solve nanoseconds (across trials)
     solve_nanos: AtomicU64,
     /// recent job latencies (seconds), bounded ring
@@ -42,6 +47,11 @@ impl Metrics {
         self.warm_starts.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_sparse_job(&self, nnz: usize) {
+        self.sparse_jobs.fetch_add(1, Ordering::Relaxed);
+        self.sparse_nnz.fetch_add(nnz as u64, Ordering::Relaxed);
+    }
+
     pub fn total_solve_secs(&self) -> f64 {
         self.solve_nanos.load(Ordering::Relaxed) as f64 / 1e9
     }
@@ -56,12 +66,14 @@ impl Metrics {
 
     pub fn snapshot(&self) -> String {
         format!(
-            "jobs: submitted={} completed={} failed={} trials={} warm_starts={} solve_time={:.2}s p50={} p99={}",
+            "jobs: submitted={} completed={} failed={} trials={} warm_starts={} sparse_jobs={} sparse_nnz={} solve_time={:.2}s p50={} p99={}",
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
             self.trials_run.load(Ordering::Relaxed),
             self.warm_starts.load(Ordering::Relaxed),
+            self.sparse_jobs.load(Ordering::Relaxed),
+            self.sparse_nnz.load(Ordering::Relaxed),
             self.total_solve_secs(),
             self.latency_percentile(50.0)
                 .map(crate::util::stats::fmt_duration)
@@ -90,9 +102,13 @@ mod tests {
         assert!((m.total_solve_secs() - 4.5).abs() < 1e-6);
         assert_eq!(m.latency_percentile(50.0), Some(1.0));
         m.record_warm_start();
+        m.record_sparse_job(1234);
+        m.record_sparse_job(766);
         let snap = m.snapshot();
         assert!(snap.contains("completed=2"));
         assert!(snap.contains("warm_starts=1"));
+        assert!(snap.contains("sparse_jobs=2"), "{snap}");
+        assert!(snap.contains("sparse_nnz=2000"), "{snap}");
     }
 
     #[test]

@@ -7,12 +7,19 @@
 //! can be handed to a worker thread, folded into a sketch accumulator, or
 //! shipped to an executor without touching the heap.
 //!
-//! Block-size heuristic ([`default_block_rows`]): shards are sized to fit a
-//! core's L2 slice (~256 KiB of f64) while still producing enough shards to
-//! keep every worker busy with a few tasks each — the same shape the
-//! coordinator uses for job-level parallelism, applied at the data level.
+//! The sparse analog is [`CsrBlocks`]: contiguous row shards of a
+//! [`CsrMat`], sharded by **nnz** rather than row count — on a skewed
+//! sparse matrix (a few dense rows among millions of near-empty ones)
+//! row-count shards give one worker all the work; nnz shards keep the fold
+//! balanced because fold cost is proportional to stored entries, not rows.
+//!
+//! Block-size heuristic ([`default_block_rows`] / [`default_block_nnz`]):
+//! shards are sized to fit a core's L2 slice (~256 KiB of f64) while still
+//! producing enough shards to keep every worker busy with a few tasks each
+//! — the same shape the coordinator uses for job-level parallelism, applied
+//! at the data level.
 
-use crate::linalg::Mat;
+use crate::linalg::{CsrMat, Mat};
 use crate::util::threadpool::default_threads;
 
 /// One contiguous shard of rows, borrowed from the parent matrix.
@@ -145,6 +152,144 @@ pub fn default_block_rows(n: usize, d: usize) -> usize {
     by_cache.min(by_threads).min(n)
 }
 
+/// Heuristic nnz budget per CSR shard — the sparse analog of
+/// [`default_block_rows`]: fold cost on CSR is proportional to stored
+/// entries, so the cache bound is on nnz directly (a value + an index per
+/// entry), and the parallelism bound asks for ~4 shards per worker.
+pub fn default_block_nnz(nnz: usize) -> usize {
+    const TARGET_ENTRIES: usize = 32 * 1024;
+    let nnz = nnz.max(1);
+    let by_threads = nnz.div_ceil(4 * default_threads().max(1)).max(1);
+    TARGET_ENTRIES.min(by_threads).min(nnz)
+}
+
+// ---------------------------------------------------------------------------
+// CSR shards (nnz-balanced)
+// ---------------------------------------------------------------------------
+
+/// One contiguous shard of CSR rows, borrowed from the parent matrix.
+#[derive(Clone, Copy)]
+pub struct CsrBlock<'a> {
+    mat: &'a CsrMat,
+    /// Global index (in the parent) of this shard's first row.
+    pub start: usize,
+    /// Number of rows in this shard.
+    pub rows: usize,
+}
+
+impl<'a> CsrBlock<'a> {
+    /// The whole matrix as a single shard — lets the hash sketches
+    /// implement their single-pass `apply_csr` through the exact same fold
+    /// as the streamed path (one scatter loop to maintain, not two).
+    pub fn whole(mat: &'a CsrMat) -> CsrBlock<'a> {
+        CsrBlock {
+            mat,
+            start: 0,
+            rows: mat.rows,
+        }
+    }
+
+    /// Column count (same as the parent).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.mat.cols
+    }
+
+    /// Local row `k` as (column-index, value) slices.
+    #[inline]
+    pub fn row(&self, k: usize) -> (&'a [u32], &'a [f64]) {
+        debug_assert!(k < self.rows);
+        self.mat.row(self.start + k)
+    }
+
+    /// Global row index of local row `k`.
+    #[inline]
+    pub fn global_row(&self, k: usize) -> usize {
+        self.start + k
+    }
+
+    /// Stored entries in this shard.
+    pub fn nnz(&self) -> usize {
+        self.mat.indptr[self.start + self.rows] - self.mat.indptr[self.start]
+    }
+
+    /// Densify just this shard (rows x cols) — the bounded scratch the
+    /// densify-per-shard sketch fallbacks (Gaussian) use.
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.mat.cols);
+        for k in 0..self.rows {
+            let (cols, vals) = self.row(k);
+            let orow = out.row_mut(k);
+            for (c, v) in cols.iter().zip(vals) {
+                orow[*c as usize] = *v;
+            }
+        }
+        out
+    }
+}
+
+/// Sharded view of a CSR matrix as contiguous row shards balanced by nnz
+/// (no copying). Shard boundaries are chosen greedily: rows accumulate into
+/// the current shard until its nnz reaches the budget, then the shard
+/// closes (so every shard except possibly the last holds >= `block_nnz`
+/// entries, and none holds more than `block_nnz` plus one row's worth).
+/// Shards always tile the row range exactly.
+#[derive(Clone)]
+pub struct CsrBlocks<'a> {
+    mat: &'a CsrMat,
+    /// Shard boundaries: bounds[i]..bounds[i+1] are shard i's rows.
+    bounds: Vec<usize>,
+}
+
+impl<'a> CsrBlocks<'a> {
+    /// View `mat` as shards of at most ~`block_nnz` stored entries each.
+    /// `block_nnz` must be > 0.
+    pub fn new(mat: &'a CsrMat, block_nnz: usize) -> CsrBlocks<'a> {
+        assert!(block_nnz > 0, "block_nnz must be positive");
+        let mut bounds = vec![0usize];
+        let mut shard_start_off = 0usize;
+        for i in 0..mat.rows {
+            let end_off = mat.indptr[i + 1];
+            // close the shard once it holds >= block_nnz entries (a single
+            // oversize row still forms a one-row shard)
+            if end_off - shard_start_off >= block_nnz && i + 1 < mat.rows {
+                bounds.push(i + 1);
+                shard_start_off = end_off;
+            }
+        }
+        if mat.rows > 0 {
+            bounds.push(mat.rows);
+        }
+        CsrBlocks { mat, bounds }
+    }
+
+    /// View with the heuristic nnz budget for this matrix.
+    pub fn auto(mat: &'a CsrMat) -> CsrBlocks<'a> {
+        CsrBlocks::new(mat, default_block_nnz(mat.nnz()))
+    }
+
+    /// Number of shards (0 for an empty matrix).
+    pub fn num_blocks(&self) -> usize {
+        self.bounds.len().saturating_sub(1)
+    }
+
+    /// Shard `i`.
+    pub fn block(&self, i: usize) -> CsrBlock<'a> {
+        let start = self.bounds[i];
+        let end = self.bounds[i + 1];
+        CsrBlock {
+            mat: self.mat,
+            start,
+            rows: end - start,
+        }
+    }
+
+    /// Iterate shards in row order.
+    pub fn iter(&self) -> impl Iterator<Item = CsrBlock<'a>> + '_ {
+        (0..self.num_blocks()).map(|i| self.block(i))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,5 +351,92 @@ mod tests {
     fn zero_block_rows_rejected() {
         let m = Mat::zeros(4, 2);
         let _ = RowBlocks::new(&m, 0);
+    }
+
+    /// A skewed sparse matrix: row i holds i % 7 entries.
+    fn skewed_csr(n: usize, d: usize, seed: u64) -> CsrMat {
+        let mut rng = Rng::new(seed);
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for i in 0..n {
+            let k = (i % 7).min(d);
+            for j in 0..k {
+                indices.push(j as u32);
+                values.push(rng.gaussian());
+            }
+            indptr.push(indices.len());
+        }
+        CsrMat::new(n, d, indptr, indices, values)
+    }
+
+    #[test]
+    fn csr_blocks_tile_rows_and_balance_nnz() {
+        let m = skewed_csr(100, 8, 1);
+        for budget in [1usize, 5, 17, 64, 100_000] {
+            let view = CsrBlocks::new(&m, budget);
+            let mut covered = 0usize;
+            let mut nnz_total = 0usize;
+            let mut prev_end = 0usize;
+            for blk in view.iter() {
+                assert_eq!(blk.start, prev_end, "shards must be contiguous");
+                prev_end = blk.start + blk.rows;
+                covered += blk.rows;
+                nnz_total += blk.nnz();
+                for k in 0..blk.rows {
+                    let (cols, vals) = blk.row(k);
+                    let (wc, wv) = m.row(blk.global_row(k));
+                    assert_eq!(cols, wc);
+                    assert_eq!(vals, wv);
+                }
+            }
+            assert_eq!(covered, 100, "budget={budget}");
+            assert_eq!(nnz_total, m.nnz());
+            // every shard except the last meets the budget
+            for i in 0..view.num_blocks().saturating_sub(1) {
+                assert!(view.block(i).nnz() >= budget, "budget={budget} shard {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn csr_block_to_dense_matches_parent_slice() {
+        let m = skewed_csr(30, 6, 2);
+        let dense = m.to_dense();
+        let view = CsrBlocks::new(&m, 10);
+        assert!(view.num_blocks() > 1);
+        for blk in view.iter() {
+            let d = blk.to_dense();
+            assert_eq!(d.rows, blk.rows);
+            for k in 0..blk.rows {
+                assert_eq!(d.row(k), dense.row(blk.global_row(k)));
+            }
+        }
+    }
+
+    #[test]
+    fn csr_blocks_edge_cases() {
+        // empty matrix: zero shards
+        let empty = CsrMat::new(0, 4, vec![0], vec![], vec![]);
+        assert_eq!(CsrBlocks::new(&empty, 8).num_blocks(), 0);
+        // all-empty rows: one shard covering everything
+        let hollow = CsrMat::new(5, 4, vec![0; 6], vec![], vec![]);
+        let view = CsrBlocks::new(&hollow, 8);
+        assert_eq!(view.num_blocks(), 1);
+        assert_eq!(view.block(0).rows, 5);
+        assert_eq!(view.block(0).nnz(), 0);
+        // auto heuristic resolves
+        let m = skewed_csr(64, 4, 3);
+        assert!(CsrBlocks::auto(&m).num_blocks() >= 1);
+        // heuristic bounds
+        assert_eq!(default_block_nnz(0), 1);
+        assert!(default_block_nnz(1 << 24) <= 32 * 1024);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_block_nnz_rejected() {
+        let m = skewed_csr(4, 2, 4);
+        let _ = CsrBlocks::new(&m, 0);
     }
 }

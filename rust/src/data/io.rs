@@ -65,6 +65,7 @@ pub fn load(path: &Path) -> Result<Dataset> {
     Ok(Dataset {
         name: String::from_utf8(name)?,
         a,
+        csr: None,
         b,
         x_star_planted: None,
     })
@@ -85,6 +86,7 @@ pub fn load_csv(path: &Path, skip_header: bool) -> Result<Dataset> {
             .map(|s| s.to_string_lossy().into_owned())
             .unwrap_or_else(|| "csv".into()),
         a,
+        csr: None,
         b,
         x_star_planted: None,
     })
@@ -132,6 +134,7 @@ mod tests {
         let ds = Dataset {
             name: "roundtrip".into(),
             a: Mat::gaussian(17, 3, &mut rng),
+            csr: None,
             b: rng.gaussians(17),
             x_star_planted: None,
         };
@@ -175,6 +178,7 @@ mod tests {
             Dataset {
                 name: "gen".into(),
                 a: Mat::gaussian(5, 2, &mut rng),
+                csr: None,
                 b: rng.gaussians(5),
                 x_star_planted: None,
             }

@@ -1,0 +1,321 @@
+//! libsvm / svmlight text ingestion — the sparse serve-path workload class.
+//!
+//! One row per line: `<label> <index>:<value> <index>:<value> ... # comment`.
+//! The loader is deliberately liberal where the ecosystem is inconsistent
+//! and strict where silent acceptance would corrupt data:
+//!
+//! * **1-based vs 0-based indices**: auto-detected over the whole file — if
+//!   any row uses index 0 the file is 0-based, otherwise the libsvm
+//!   standard 1-based convention applies.
+//! * **Out-of-order features**: accepted (sorted on ingest); real exports
+//!   produce them.
+//! * **Duplicate feature indices** within a row: rejected with the line
+//!   number — "last wins" and "sum" are both plausible, so guessing would
+//!   silently change the regression.
+//! * **Trailing comments** (`# ...`) and blank lines: stripped/skipped.
+//! * **Empty rows** (label only): kept as all-zero feature rows.
+//! * **Column count**: inferred as `max index + 1 - base` — which would
+//!   silently shrink a matrix whose trailing columns hold no entries — so
+//!   [`to_text`] writes (and the parser honors) a `# hdpw: cols=<d>`
+//!   header comment declaring the true dimension. Foreign files without
+//!   the header fall back to inference; a declared dimension acts as a
+//!   floor (data may still widen it).
+//! * **Malformed anything** (bad numbers, missing `:`, negative or
+//!   non-integer indices, non-finite values): `Err` with the line number —
+//!   never a panic, so a serve worker surfaces it as a job error.
+
+use super::Dataset;
+use crate::linalg::CsrMat;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// The dimension-declaration header [`to_text`] writes: `# hdpw: cols=<d>`.
+const COLS_HEADER: &str = "hdpw: cols=";
+
+/// Parse libsvm text into a sparse [`Dataset`] (labels become `b`).
+pub fn parse_str(name: &str, text: &str) -> Result<Dataset> {
+    let mut rows: Vec<(f64, Vec<(u64, f64)>)> = Vec::new();
+    let mut saw_zero_index = false;
+    let mut max_index: u64 = 0;
+    let mut any_feature = false;
+    let mut declared_cols: usize = 0;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line_no = lineno + 1;
+        // dimension declaration (a comment to every other libsvm reader)
+        if let Some(rest) = raw.trim().strip_prefix('#') {
+            if let Some(v) = rest.trim().strip_prefix(COLS_HEADER) {
+                let cols: usize = v.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("line {line_no}: bad cols declaration {v:?}")
+                })?;
+                declared_cols = declared_cols.max(cols);
+            }
+        }
+        // strip trailing comment, then surrounding whitespace
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let label_tok = toks.next().expect("non-empty line has a first token");
+        let label: f64 = label_tok
+            .parse()
+            .map_err(|_| anyhow::anyhow!("line {line_no}: bad label {label_tok:?}"))?;
+        if !label.is_finite() {
+            bail!("line {line_no}: non-finite label {label_tok:?}");
+        }
+        let mut feats: Vec<(u64, f64)> = Vec::new();
+        for tok in toks {
+            let (idx_s, val_s) = tok
+                .split_once(':')
+                .with_context(|| format!("line {line_no}: expected index:value, got {tok:?}"))?;
+            let idx: u64 = idx_s.parse().map_err(|_| {
+                anyhow::anyhow!("line {line_no}: bad feature index {idx_s:?} in {tok:?}")
+            })?;
+            // bound indices up front so the d = max+1-base arithmetic and
+            // the u32 CSR column type can never overflow/panic downstream
+            // (the parser's contract is Err, never panic)
+            if idx > u32::MAX as u64 {
+                bail!("line {line_no}: feature index {idx} out of supported range (max {})", u32::MAX);
+            }
+            let val: f64 = val_s.parse().map_err(|_| {
+                anyhow::anyhow!("line {line_no}: bad feature value {val_s:?} in {tok:?}")
+            })?;
+            if !val.is_finite() {
+                bail!("line {line_no}: non-finite feature value in {tok:?}");
+            }
+            feats.push((idx, val));
+        }
+        // out-of-order indices are fine; duplicates are ambiguous
+        feats.sort_unstable_by_key(|f| f.0);
+        for w in feats.windows(2) {
+            if w[0].0 == w[1].0 {
+                bail!("line {line_no}: duplicate feature index {}", w[0].0);
+            }
+        }
+        for &(idx, _) in &feats {
+            saw_zero_index |= idx == 0;
+            max_index = max_index.max(idx);
+            any_feature = true;
+        }
+        rows.push((label, feats));
+    }
+    if rows.is_empty() {
+        bail!("libsvm {name:?}: no data rows");
+    }
+    // index convention: any 0 => 0-based, else the libsvm-standard 1-based
+    let base: u64 = if saw_zero_index { 0 } else { 1 };
+    // max_index <= u32::MAX (checked per token), so this cannot overflow;
+    // a declared dimension widens the inferred one (empty trailing columns
+    // have no stored entries to infer from)
+    let inferred = if any_feature {
+        (max_index + 1 - base) as usize
+    } else {
+        0
+    };
+    let d = inferred.max(declared_cols);
+    if d == 0 {
+        bail!("libsvm {name:?}: no features in any row");
+    }
+    if d > u32::MAX as usize {
+        bail!("libsvm {name:?}: feature dimension {d} out of supported range");
+    }
+    let n = rows.len();
+    let mut indptr = Vec::with_capacity(n + 1);
+    let mut indices = Vec::with_capacity(rows.iter().map(|r| r.1.len()).sum());
+    let mut values = Vec::with_capacity(indices.capacity());
+    let mut b = Vec::with_capacity(n);
+    indptr.push(0);
+    for (label, feats) in rows {
+        for (idx, val) in feats {
+            indices.push((idx - base) as u32);
+            values.push(val);
+        }
+        indptr.push(indices.len());
+        b.push(label);
+    }
+    let csr = CsrMat::new(n, d, indptr, indices, values);
+    Ok(Dataset::from_csr(name, csr, b, None))
+}
+
+/// Load a libsvm file from disk.
+pub fn load(path: &Path) -> Result<Dataset> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("read libsvm file {path:?}"))?;
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "libsvm".into());
+    parse_str(&name, &text).with_context(|| format!("parse libsvm file {path:?}"))
+}
+
+/// Serialize a dataset as libsvm text (1-based indices; shortest-roundtrip
+/// float formatting; a `# hdpw: cols=<d>` header pins the column count even
+/// when trailing columns hold no stored entries — so `parse(to_text(ds))`
+/// reproduces shape and payload bit-for-bit). Dense datasets are written
+/// row by row with zeros elided.
+pub fn to_text(ds: &Dataset) -> String {
+    let mut out = format!("# {COLS_HEADER}{}\n", ds.d());
+    for i in 0..ds.n() {
+        out.push_str(&ds.b[i].to_string());
+        match &ds.csr {
+            Some(c) => {
+                let (cols, vals) = c.row(i);
+                for (cidx, v) in cols.iter().zip(vals) {
+                    out.push_str(&format!(" {}:{}", *cidx as u64 + 1, v));
+                }
+            }
+            None => {
+                for (j, v) in ds.a.row(i).iter().enumerate() {
+                    if *v != 0.0 {
+                        out.push_str(&format!(" {}:{}", j + 1, v));
+                    }
+                }
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse_gen::{generate_sparse, SparseSpec};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parses_standard_one_based_rows() {
+        let ds = parse_str("t", "1.5 1:2.0 3:4.0\n-0.5 2:1.0\n").unwrap();
+        assert_eq!((ds.n(), ds.d()), (2, 3));
+        assert_eq!(ds.b, vec![1.5, -0.5]);
+        assert_eq!(ds.a.row(0), &[2.0, 0.0, 4.0]);
+        assert_eq!(ds.a.row(1), &[0.0, 1.0, 0.0]);
+        assert!(ds.is_sparse());
+        assert_eq!(ds.nnz(), 3);
+    }
+
+    #[test]
+    fn detects_zero_based_indexing() {
+        let ds = parse_str("t", "1 0:7.0 2:8.0\n2 1:9.0\n").unwrap();
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.a.row(0), &[7.0, 0.0, 8.0]);
+        assert_eq!(ds.a.row(1), &[0.0, 9.0, 0.0]);
+    }
+
+    #[test]
+    fn out_of_order_indices_are_sorted() {
+        let ds = parse_str("t", "1 3:30 1:10 2:20\n").unwrap();
+        assert_eq!(ds.a.row(0), &[10.0, 20.0, 30.0]);
+        let (cols, _) = ds.csr.as_ref().unwrap().row(0);
+        assert_eq!(cols, &[0, 1, 2]);
+    }
+
+    #[test]
+    fn comments_blank_lines_and_empty_rows() {
+        let text = "# header comment\n1 1:5 # trailing\n\n2\n3 2:6\n";
+        let ds = parse_str("t", text).unwrap();
+        assert_eq!(ds.n(), 3, "blank lines skipped, label-only row kept");
+        assert_eq!(ds.b, vec![1.0, 2.0, 3.0]);
+        assert_eq!(ds.csr.as_ref().unwrap().row_nnz(1), 0, "empty row");
+        assert_eq!(ds.a.row(2), &[0.0, 6.0]);
+    }
+
+    #[test]
+    fn malformed_lines_error_with_line_numbers() {
+        for (text, needle) in [
+            ("abc 1:2\n", "line 1"),                 // bad label
+            ("1 x:2\n", "bad feature index"),        // non-numeric index
+            ("1 -1:2\n", "bad feature index"),       // negative index
+            ("1 1:zz\n", "bad feature value"),       // non-numeric value
+            ("1 12\n", "expected index:value"),      // missing colon
+            ("1 1:2 1:3\n", "duplicate feature"),    // duplicate index
+            ("1 1:nan\n", "non-finite"),             // NaN value
+            ("nan 1:2\n", "non-finite"),             // NaN label
+            ("", "no data rows"),                    // empty file
+            ("1\n2\n", "no features"),               // rows but zero features
+            // huge index must Err, never overflow/panic (serve contract)
+            ("1 0:1 18446744073709551615:2\n", "out of supported range"),
+            ("1 4294967296:2\n", "out of supported range"),
+        ] {
+            let err = parse_str("t", text).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "{text:?}: {msg}");
+        }
+        // line numbers point at the offending row
+        let err = parse_str("t", "1 1:2\n2 1:oops\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"), "{err:#}");
+    }
+
+    #[test]
+    fn roundtrip_preserves_payload_bit_for_bit() {
+        let mut rng = Rng::new(11);
+        let ds = generate_sparse(
+            &SparseSpec {
+                name: "rt".into(),
+                n: 64,
+                d: 12,
+                density: 0.3,
+                kappa: 1e3,
+                noise: 0.1,
+                signal_scale: 1.0,
+            },
+            &mut rng,
+        );
+        let text = to_text(&ds);
+        let back = parse_str("rt", &text).unwrap();
+        assert_eq!(back.csr, ds.csr, "CSR payload must survive the round trip");
+        assert_eq!(back.b, ds.b);
+        assert_eq!(back.a, ds.a);
+    }
+
+    #[test]
+    fn dense_dataset_serializes_with_zeros_elided() {
+        let a = crate::linalg::Mat::from_vec(2, 3, vec![1.0, 0.0, 2.0, 0.0, 0.0, 3.0]);
+        let ds = Dataset {
+            name: "t".into(),
+            a,
+            csr: None,
+            b: vec![9.0, 8.0],
+            x_star_planted: None,
+        };
+        let text = to_text(&ds);
+        assert_eq!(text, "# hdpw: cols=3\n9 1:1 3:2\n8 3:3\n");
+        let back = parse_str("t", &text).unwrap();
+        assert_eq!(back.a, ds.a);
+        assert_eq!(back.b, ds.b);
+    }
+
+    #[test]
+    fn roundtrip_preserves_empty_trailing_columns() {
+        // last column has no stored entries: inference alone would shrink
+        // d; the cols header must pin the true shape
+        let a = crate::linalg::Mat::from_vec(2, 4, vec![1.0, 0.0, 0.0, 0.0, 0.0, 2.0, 0.0, 0.0]);
+        let ds = Dataset::from_csr("t", CsrMat::from_dense(&a), vec![5.0, 6.0], None);
+        let back = parse_str("t", &to_text(&ds)).unwrap();
+        assert_eq!(back.d(), 4, "declared dimension survives the round trip");
+        assert_eq!(back.a, ds.a);
+        assert_eq!(back.csr, ds.csr);
+        // an all-empty-rows dataset round-trips too (header supplies d)
+        let hollow = Dataset::from_csr(
+            "h",
+            CsrMat::new(3, 2, vec![0; 4], vec![], vec![]),
+            vec![1.0, 2.0, 3.0],
+            None,
+        );
+        let back2 = parse_str("h", &to_text(&hollow)).unwrap();
+        assert_eq!((back2.n(), back2.d()), (3, 2));
+        assert_eq!(back2.nnz(), 0);
+        // foreign files without the header still infer, and a declared
+        // floor never shrinks real data
+        let widened = parse_str("t", "# hdpw: cols=2\n1 5:9\n").unwrap();
+        assert_eq!(widened.d(), 5);
+        // malformed declaration errors cleanly
+        assert!(parse_str("t", "# hdpw: cols=abc\n1 1:2\n").is_err());
+    }
+
+    #[test]
+    fn load_surfaces_missing_file_as_error() {
+        let err = load(Path::new("/nonexistent/definitely_missing.svm")).unwrap_err();
+        assert!(format!("{err:#}").contains("libsvm"), "{err:#}");
+    }
+}

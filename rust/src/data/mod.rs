@@ -1,26 +1,58 @@
 //! Datasets: synthetic generators with controlled spectra, simulated UCI
-//! workloads, normalization, and binary/CSV IO.
+//! workloads, sparse (CSR) generation and libsvm ingestion, normalization,
+//! and binary/CSV IO.
 
 pub mod blocks;
 pub mod synthetic;
+pub mod sparse_gen;
 pub mod uci_sim;
 pub mod io;
+pub mod libsvm;
 
-pub use blocks::{default_block_rows, RowBlock, RowBlocks};
+pub use blocks::{
+    default_block_nnz, default_block_rows, CsrBlock, CsrBlocks, RowBlock, RowBlocks,
+};
 
-use crate::linalg::{blas, Mat};
+use crate::linalg::{blas, CsrMat, Mat};
 
 /// A regression problem instance: `min_{x in W} ||Ax - b||^2`.
 #[derive(Clone, Debug)]
 pub struct Dataset {
     pub name: String,
     pub a: Mat,
+    /// CSR payload when this dataset is sparse (libsvm ingest, sparse
+    /// synthetic generation). INVARIANT: when present, `a` holds the dense
+    /// materialization `csr.to_dense()` — dense-only stages (QR ground
+    /// truth, the HD transform's FWHT, normalization) read `a`, while the
+    /// flop-heavy paths (sketching, mini-batch gradients, objective
+    /// evaluation) route through `csr` in O(nnz). See DESIGN.md §10 for the
+    /// representation contract and the memory caveat.
+    pub csr: Option<CsrMat>,
     pub b: Vec<f64>,
     /// Planted solution when known (synthetic data): for diagnostics only.
     pub x_star_planted: Option<Vec<f64>>,
 }
 
 impl Dataset {
+    /// Build a sparse dataset from a CSR payload (the dense mirror is
+    /// materialized eagerly; see the `csr` field invariant).
+    pub fn from_csr(
+        name: impl Into<String>,
+        csr: CsrMat,
+        b: Vec<f64>,
+        x_star_planted: Option<Vec<f64>>,
+    ) -> Dataset {
+        assert_eq!(csr.rows, b.len());
+        let a = csr.to_dense();
+        Dataset {
+            name: name.into(),
+            a,
+            csr: Some(csr),
+            b,
+            x_star_planted,
+        }
+    }
+
     pub fn n(&self) -> usize {
         self.a.rows
     }
@@ -29,9 +61,66 @@ impl Dataset {
         self.a.cols
     }
 
-    /// f(x) = ||Ax - b||^2.
+    /// Whether the CSR fast paths are active.
+    pub fn is_sparse(&self) -> bool {
+        self.csr.is_some()
+    }
+
+    /// Stored entries: nnz for sparse datasets, n*d for dense ones.
+    pub fn nnz(&self) -> usize {
+        match &self.csr {
+            Some(c) => c.nnz(),
+            None => self.a.rows * self.a.cols,
+        }
+    }
+
+    /// nnz / (n*d); exactly 1.0 for dense datasets.
+    pub fn density(&self) -> f64 {
+        match &self.csr {
+            Some(c) => c.density(),
+            None => 1.0,
+        }
+    }
+
+    /// f(x) = ||Ax - b||^2 — O(nnz) on sparse datasets.
     pub fn objective(&self, x: &[f64]) -> f64 {
-        blas::residual_sq(&self.a, &self.b, x)
+        match &self.csr {
+            Some(c) => c.residual_sq(&self.b, x),
+            None => blas::residual_sq(&self.a, &self.b, x),
+        }
+    }
+
+    /// `A_i · x` — O(nnz(row)) on sparse datasets; on dense ones this is
+    /// exactly `blas::dot(a.row(i), x)` (bit-identical to the pre-sparse
+    /// code path).
+    #[inline]
+    pub fn row_dot(&self, i: usize, x: &[f64]) -> f64 {
+        match &self.csr {
+            Some(c) => c.row_dot(i, x),
+            None => blas::dot(self.a.row(i), x),
+        }
+    }
+
+    /// `out += coef * A_i` — O(nnz(row)) on sparse datasets; bit-identical
+    /// `blas::axpy` on dense ones.
+    #[inline]
+    pub fn row_axpy(&self, i: usize, coef: f64, out: &mut [f64]) {
+        match &self.csr {
+            Some(c) => c.row_axpy(i, coef, out),
+            None => blas::axpy(coef, self.a.row(i), out),
+        }
+    }
+
+    /// `coef * A_i` as a dense vector (pwSGD's variance probe).
+    pub fn row_scaled(&self, i: usize, coef: f64) -> Vec<f64> {
+        match &self.csr {
+            Some(c) => {
+                let mut out = vec![0.0; self.d()];
+                c.row_axpy(i, coef, &mut out);
+                out
+            }
+            None => self.a.row(i).iter().map(|v| coef * v).collect(),
+        }
     }
 
     /// Contiguous row shards of `A` without copying. `block_rows = None`
@@ -43,10 +132,32 @@ impl Dataset {
         }
     }
 
+    /// nnz-sharded CSR shards (sparse datasets only). An explicit
+    /// `block_rows` tuning knob is translated into an nnz budget via the
+    /// mean row occupancy, so `--block-rows` means "about this many rows
+    /// per shard" in both representations.
+    pub fn csr_blocks(&self, block_rows: Option<usize>) -> Option<CsrBlocks<'_>> {
+        let c = self.csr.as_ref()?;
+        Some(match block_rows {
+            Some(br) => CsrBlocks::new(c, c.nnz_budget_for_rows(br)),
+            None => CsrBlocks::auto(c),
+        })
+    }
+
     /// Normalize features to zero mean / unit variance and b to unit
     /// variance (the paper normalizes datasets for the low-precision
     /// solvers). Returns the per-column (mean, std) used.
+    ///
+    /// Mean-centering fills in every zero, so a sparse dataset is densified
+    /// here: the CSR payload is dropped (with a warning) and the dataset
+    /// continues on the dense paths.
     pub fn normalize(&mut self) -> Vec<(f64, f64)> {
+        if self.csr.take().is_some() {
+            crate::log_warn!(
+                "normalize({}): mean-centering densifies — dropping the CSR payload",
+                self.name
+            );
+        }
         let n = self.n() as f64;
         let d = self.d();
         let mut stats = Vec::with_capacity(d + 1);
@@ -93,6 +204,7 @@ mod tests {
         let ds = Dataset {
             name: "t".into(),
             a,
+            csr: None,
             b: vec![1.0, 0.0],
             x_star_planted: None,
         };
@@ -106,6 +218,7 @@ mod tests {
         let ds = Dataset {
             name: "t".into(),
             a: Mat::gaussian(10, 2, &mut rng),
+            csr: None,
             b: vec![0.0; 10],
             x_star_planted: None,
         };
@@ -119,6 +232,43 @@ mod tests {
         ));
         // heuristic variant resolves to a valid tiling too
         assert!(ds.row_blocks(None).num_blocks() >= 1);
+        // dense datasets have no CSR shards
+        assert!(ds.csr_blocks(None).is_none());
+        assert!(!ds.is_sparse());
+        assert_eq!(ds.nnz(), 20);
+        assert_eq!(ds.density(), 1.0);
+    }
+
+    #[test]
+    fn sparse_dataset_routes_csr_and_mirrors_dense() {
+        let mut rng = Rng::new(3);
+        let dense = Mat::from_fn(12, 4, |_, _| {
+            if rng.uniform() < 0.4 {
+                rng.gaussian()
+            } else {
+                0.0
+            }
+        });
+        let b = rng.gaussians(12);
+        let csr = CsrMat::from_dense(&dense);
+        let nnz = csr.nnz();
+        let ds = Dataset::from_csr("sp", csr, b.clone(), None);
+        assert!(ds.is_sparse());
+        assert_eq!(ds.a, dense, "dense mirror must match the CSR payload");
+        assert_eq!(ds.nnz(), nnz);
+        assert!(ds.density() < 1.0);
+        let x = rng.gaussians(4);
+        let f_sparse = ds.objective(&x);
+        let f_dense = blas::residual_sq(&dense, &b, &x);
+        assert!((f_sparse - f_dense).abs() < 1e-10 * (1.0 + f_dense));
+        // row helpers agree with the dense mirror
+        for i in 0..12 {
+            assert!((ds.row_dot(i, &x) - blas::dot(dense.row(i), &x)).abs() < 1e-12);
+        }
+        // nnz-sharded view exists and tiles the rows
+        let view = ds.csr_blocks(Some(3)).unwrap();
+        let covered: usize = view.iter().map(|b| b.rows).sum();
+        assert_eq!(covered, 12);
     }
 
     #[test]
@@ -132,6 +282,7 @@ mod tests {
         let mut ds = Dataset {
             name: "t".into(),
             a,
+            csr: None,
             b,
             x_star_planted: None,
         };
@@ -145,5 +296,23 @@ mod tests {
         }
         let bmean = ds.b.iter().sum::<f64>() / 500.0;
         assert!(bmean.abs() < 1e-10);
+    }
+
+    #[test]
+    fn normalize_drops_csr_payload() {
+        let mut rng = Rng::new(4);
+        let dense = Mat::from_fn(50, 3, |_, _| {
+            if rng.uniform() < 0.5 {
+                rng.gaussian()
+            } else {
+                0.0
+            }
+        });
+        let b = rng.gaussians(50);
+        let mut ds = Dataset::from_csr("sp", CsrMat::from_dense(&dense), b, None);
+        assert!(ds.is_sparse());
+        ds.normalize();
+        assert!(!ds.is_sparse(), "centering densifies");
+        assert_eq!(ds.density(), 1.0);
     }
 }

@@ -94,6 +94,7 @@ pub fn generate(spec: &SynSpec, rng: &mut Rng) -> Dataset {
     Dataset {
         name: spec.name.clone(),
         a,
+        csr: None,
         b,
         x_star_planted: Some(x_star),
     }

@@ -47,4 +47,5 @@ pub mod coordinator;
 pub mod experiments;
 
 pub use linalg::matrix::Mat;
+pub use linalg::sparse::CsrMat;
 pub use util::rng::Rng;

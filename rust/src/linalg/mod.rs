@@ -1,15 +1,18 @@
-//! Dense linear algebra substrate, written from scratch.
+//! Linear algebra substrate, written from scratch.
 //!
-//! The solvers need exactly: a row-major dense matrix type, fast
-//! matrix-matrix / matrix-vector products (the native-backend hot path),
-//! Householder thin-QR (Algorithm 1's factorization of the sketch `SA`),
-//! triangular solves (applying `R^{-1}`), and symmetric eigensolves on small
-//! Gram matrices (condition numbers for Table 2 / dataset construction).
+//! The solvers need exactly: a row-major dense matrix type, a CSR sparse
+//! matrix type for the input-sparsity-time pipeline, fast matrix-matrix /
+//! matrix-vector products (the native-backend hot path), Householder
+//! thin-QR (Algorithm 1's factorization of the sketch `SA`), triangular
+//! solves (applying `R^{-1}`), and symmetric eigensolves on small Gram
+//! matrices (condition numbers for Table 2 / dataset construction).
 
 pub mod matrix;
+pub mod sparse;
 pub mod blas;
 pub mod qr;
 pub mod tri;
 pub mod eigen;
 
 pub use matrix::Mat;
+pub use sparse::CsrMat;

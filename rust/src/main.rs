@@ -74,7 +74,18 @@ fn parse_or_exit(cmd: &Command, argv: &[String]) -> hdpw::util::cli::Args {
 
 fn cmd_solve(argv: &[String]) -> i32 {
     let cmd = Command::new("hdpw solve", "run one regression job")
-        .opt("dataset", "syn1|syn2|year|buzz|pjrt8k|csv:<path> (default syn2)")
+        .opt(
+            "dataset",
+            "syn1|syn2|year|buzz|pjrt8k|csv:<path>|libsvm:<path> (default syn2)",
+        )
+        .opt(
+            "format",
+            "dense|sparse|libsvm dataset representation (default dense; HDPW_FORMAT overrides)",
+        )
+        .opt(
+            "density",
+            "target nnz fraction for generated sparse datasets (default 0.1)",
+        )
         .opt("n", "rows for generated datasets (default 16384)")
         .opt("solver", "solver name (default hdpwbatchsgd)")
         .opt("constraint", "unc|l1|l2 (default unc)")
@@ -114,6 +125,11 @@ fn cmd_solve(argv: &[String]) -> i32 {
     req.eta = args.get_f64("eta", 0.0);
     req.executor = args.get_or("executor", "default");
     req.block_rows = args.get_usize("block-rows", 0);
+    // default honors the HDPW_FORMAT process default baked into the request
+    if let Some(fmt) = args.get("format") {
+        req.format = fmt.to_string();
+    }
+    req.density = args.get_f64("density", req.density);
     req.normalize = args.flag("normalize");
     // flags OR onto the env-driven defaults (HDPW_REUSE_PRECOND / _WARM_START)
     req.reuse_precond |= args.flag("reuse-precond");
@@ -146,6 +162,12 @@ fn cmd_solve(argv: &[String]) -> i32 {
                 );
                 if let Some(reason) = &fallback {
                     println!("pjrt fell back: {reason}");
+                }
+                if res.sparse {
+                    println!(
+                        "sparse     : nnz={} density={:.4} (CSR pipeline)",
+                        res.nnz, res.density
+                    );
                 }
                 println!("f*         : {:.6e}", res.f_star);
                 println!("f(best)    : {:.6e}", res.best_f);
@@ -313,6 +335,10 @@ fn cmd_datasets(_argv: &[String]) -> i32 {
         println!("{name:<8} {n:>10} {d:>8} {kappa:>12} {s:>14} {note}");
     }
     println!("* paper-scale rows; every command accepts --n to rescale");
+    println!(
+        "sparse variants: --format sparse|libsvm generates the CSR twin of any \
+         name above (--density, default 0.1); --dataset libsvm:<path> loads a file"
+    );
     0
 }
 

@@ -22,7 +22,7 @@
 //!   ([`PrecondArtifact::with_hd`]) without replaying the sketch draws.
 
 use super::cache::PrecondKey;
-use super::{hd_transform_with, precondition_with, HdTransformed, Precondition};
+use super::{hd_transform_with, precondition_ds_with, HdTransformed, Precondition};
 use crate::backend::Backend;
 use crate::data::Dataset;
 use crate::linalg::Mat;
@@ -103,7 +103,10 @@ impl PrecondArtifact {
     }
 
     /// Paper-fidelity construction: consume `rng` exactly as the pre-driver
-    /// solvers did (sketch first, then HD signs when `with_hd`).
+    /// solvers did (sketch first, then HD signs when `with_hd`). Sparse
+    /// datasets route the sketch through the O(nnz) CSR pipeline; the HD
+    /// transform reads the dense mirror (the FWHT densifies regardless —
+    /// see DESIGN.md §10).
     pub fn compute_inline(
         backend: &Backend,
         ds: &Dataset,
@@ -113,7 +116,7 @@ impl PrecondArtifact {
         block_rows: Option<usize>,
         with_hd: bool,
     ) -> PrecondArtifact {
-        let pre = precondition_with(backend, &ds.a, kind, sketch_rows, rng, block_rows);
+        let pre = precondition_ds_with(backend, ds, kind, sketch_rows, rng, block_rows);
         let hd = with_hd.then(|| hd_transform_with(backend, &ds.a, &ds.b, rng));
         PrecondArtifact::from_parts(pre, hd)
     }
@@ -139,9 +142,9 @@ impl PrecondArtifact {
         with_hd: bool,
     ) -> PrecondArtifact {
         let (mut sketch_rng, mut hd_rng) = PrecondArtifact::keyed_rngs(key);
-        let pre = precondition_with(
+        let pre = precondition_ds_with(
             backend,
-            &ds.a,
+            ds,
             key.sketch,
             key.sketch_rows,
             &mut sketch_rng,
@@ -210,6 +213,7 @@ impl PrecondArtifact {
 mod tests {
     use super::*;
     use crate::linalg::blas;
+    use crate::precond::precondition_with;
 
     fn ds(n: usize, d: usize, seed: u64) -> Dataset {
         let mut rng = Rng::new(seed);
@@ -218,6 +222,7 @@ mod tests {
         Dataset {
             name: "t".into(),
             a,
+            csr: None,
             b,
             x_star_planted: None,
         }
@@ -231,6 +236,7 @@ mod tests {
             seed,
             block_rows: 0,
             backend: "native".into(),
+            repr: "dense".into(),
         }
     }
 

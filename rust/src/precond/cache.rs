@@ -41,6 +41,10 @@ pub struct PrecondKey {
     /// Backend kind the artifact was computed on ("native" | "pjrt"):
     /// per-request executors must not alias each other's numerics.
     pub backend: String,
+    /// Data representation the artifact was computed from ("dense" |
+    /// "csr"): the CSR fold re-associates the sketch sum, so dense and
+    /// sparse artifacts for the same dataset must never alias.
+    pub repr: String,
 }
 
 /// How a solve acquired its preconditioner (reported per solve).
@@ -307,6 +311,7 @@ mod tests {
         let ds = Dataset {
             name: "t".into(),
             a,
+            csr: None,
             b,
             x_star_planted: None,
         };
@@ -327,6 +332,7 @@ mod tests {
             seed,
             block_rows: 0,
             backend: "native".into(),
+            repr: "dense".into(),
         }
     }
 
@@ -406,6 +412,12 @@ mod tests {
         assert!(
             cache.get(&k4).is_none(),
             "backend kind is part of the key — executors must not alias"
+        );
+        let mut k5 = key(1);
+        k5.repr = "csr".into();
+        assert!(
+            cache.get(&k5).is_none(),
+            "representation is part of the key — dense and sparse artifacts must not alias"
         );
     }
 

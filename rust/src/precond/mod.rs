@@ -15,7 +15,8 @@ pub use artifact::{ArtifactMeta, HdParts, PrecondArtifact};
 pub use cache::{CacheOutcome, ComputeClaim, Lookup, PrecondCache, PrecondKey};
 
 use crate::backend::Backend;
-use crate::linalg::{qr, tri, Mat};
+use crate::data::Dataset;
+use crate::linalg::{qr, tri, CsrMat, Mat};
 use crate::sketch::SketchKind;
 use crate::util::rng::Rng;
 use crate::util::stats::Timer;
@@ -80,6 +81,60 @@ pub fn precondition(
     rng: &mut Rng,
 ) -> Precondition {
     precondition_with(&Backend::native(), a, kind, sketch_rows, rng, None)
+}
+
+/// Step 1 on a CSR matrix — the input-sparsity-time setup. The sketch is
+/// sampled from `rng` exactly as the dense path would (construction depends
+/// only on `(s, n)`), then applied through the backend's nnz-sharded CSR
+/// stream: O(nnz) for CountSketch, O(nnz log d) for the sparse embedding,
+/// densify-per-shard for Gaussian and whole-matrix densify for SRHT
+/// (documented fallbacks). The resulting `R` matches the dense path within
+/// floating-point re-association (1e-10 acceptance in
+/// `tests/sparse_parity.rs`).
+pub fn precondition_csr_with(
+    backend: &Backend,
+    a: &CsrMat,
+    kind: SketchKind,
+    sketch_rows: usize,
+    rng: &mut Rng,
+    block_rows: Option<usize>,
+) -> Precondition {
+    assert!(sketch_rows > a.cols, "sketch size must exceed d");
+    let t = Timer::start();
+    let sk = kind.build(sketch_rows, a.rows, rng);
+    let sa = backend.sketch_apply_csr(sk.as_ref(), a, block_rows);
+    let sketch_secs = t.secs();
+    let t = Timer::start();
+    let r = qr::qr_r(&sa);
+    let pinv = tri::pinv_dense(&r);
+    let qr_secs = t.secs();
+    Precondition {
+        r,
+        pinv,
+        sketch_secs,
+        qr_secs,
+        sketch_kind: kind,
+        sketch_rows,
+    }
+}
+
+/// Representation-aware step 1 for a [`Dataset`]: routes the CSR pipeline
+/// when the dataset is sparse, the dense streamed pipeline otherwise. The
+/// rng consumption is identical either way (the sketch is sampled before
+/// representation matters), so dense and sparse artifacts for the same
+/// seed use the *same* sketch operator — the parity tests rely on this.
+pub fn precondition_ds_with(
+    backend: &Backend,
+    ds: &Dataset,
+    kind: SketchKind,
+    sketch_rows: usize,
+    rng: &mut Rng,
+    block_rows: Option<usize>,
+) -> Precondition {
+    match &ds.csr {
+        Some(c) => precondition_csr_with(backend, c, kind, sketch_rows, rng, block_rows),
+        None => precondition_with(backend, &ds.a, kind, sketch_rows, rng, block_rows),
+    }
 }
 
 /// Step 2: the Randomized Hadamard Transform applied to [A | b] packed as an
@@ -245,6 +300,66 @@ mod tests {
                 kind.name()
             );
         }
+    }
+
+    #[test]
+    fn csr_precondition_matches_dense_within_reassociation() {
+        let mut rng = Rng::new(21);
+        let dense = Mat::from_fn(600, 8, |_, _| {
+            if rng.uniform() < 0.25 {
+                rng.gaussian()
+            } else {
+                0.0
+            }
+        });
+        let csr = crate::linalg::CsrMat::from_dense(&dense);
+        let be = Backend::native_with(4, None);
+        for kind in [
+            SketchKind::CountSketch,
+            SketchKind::SparseEmbed,
+            SketchKind::Gaussian,
+            SketchKind::Srht,
+        ] {
+            let mut r1 = Rng::new(77);
+            let p_dense = precondition_with(&be, &dense, kind, 160, &mut r1, Some(64));
+            let mut r2 = Rng::new(77);
+            let p_csr = precondition_csr_with(&be, &csr, kind, 160, &mut r2, Some(64));
+            assert!(
+                p_csr.r.max_abs_diff(&p_dense.r) < 1e-10,
+                "{}: csr R != dense R",
+                kind.name()
+            );
+            // and the rng streams end in the same state (same sketch draws)
+            assert_eq!(r1.next_u64(), r2.next_u64(), "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn ds_precondition_routes_by_representation() {
+        let mut rng = Rng::new(23);
+        let dense = Mat::from_fn(300, 5, |_, _| {
+            if rng.uniform() < 0.3 {
+                rng.gaussian()
+            } else {
+                0.0
+            }
+        });
+        let b = rng.gaussians(300);
+        let csr = crate::linalg::CsrMat::from_dense(&dense);
+        let ds_sparse = crate::data::Dataset::from_csr("sp", csr, b.clone(), None);
+        let ds_dense = crate::data::Dataset {
+            name: "dn".into(),
+            a: dense,
+            csr: None,
+            b,
+            x_star_planted: None,
+        };
+        let be = Backend::native();
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let ps = precondition_ds_with(&be, &ds_sparse, SketchKind::CountSketch, 80, &mut r1, None);
+        let pd = precondition_ds_with(&be, &ds_dense, SketchKind::CountSketch, 80, &mut r2, None);
+        assert!(ps.r.max_abs_diff(&pd.r) < 1e-10);
     }
 
     #[test]

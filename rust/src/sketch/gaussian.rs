@@ -3,7 +3,7 @@
 //! baseline construction.
 
 use super::Sketch;
-use crate::data::blocks::RowBlock;
+use crate::data::blocks::{CsrBlock, RowBlock};
 use crate::linalg::{blas, Mat};
 use crate::util::rng::Rng;
 
@@ -60,6 +60,32 @@ impl Sketch for GaussianSketch {
     }
 
     fn supports_streaming(&self) -> bool {
+        true
+    }
+
+    /// DENSIFY-PER-SHARD FALLBACK (documented): the Gaussian fold is a
+    /// dense rank-`rows` update, so a CSR shard is materialized into a
+    /// `shard_rows x d` scratch and folded through the dense
+    /// [`Sketch::apply_block`] arithmetic. Scratch memory is bounded by one
+    /// shard — never the whole matrix — so the streaming pipeline still
+    /// avoids a full densify; the flop count stays O(s * rows * d) because
+    /// a dense gaussian S has no sparsity to exploit.
+    fn apply_csr_block(
+        &self,
+        block: &CsrBlock<'_>,
+        acc: &mut Mat,
+    ) -> Result<(), crate::sketch::StreamUnsupported> {
+        let dense = block.to_dense();
+        let rb = RowBlock {
+            start: block.start,
+            rows: block.rows,
+            cols: block.cols(),
+            data: &dense.data,
+        };
+        self.apply_block(&rb, acc)
+    }
+
+    fn supports_csr_streaming(&self) -> bool {
         true
     }
 }

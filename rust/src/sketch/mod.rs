@@ -18,8 +18,8 @@ pub mod gaussian;
 pub mod srht;
 pub mod sparse_embed;
 
-use crate::data::blocks::{RowBlock, RowBlocks};
-use crate::linalg::Mat;
+use crate::data::blocks::{CsrBlock, CsrBlocks, RowBlock, RowBlocks};
+use crate::linalg::{CsrMat, Mat};
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_for_each_index;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -77,6 +77,35 @@ pub trait Sketch {
 
     /// Whether [`Sketch::apply_block`] is implemented.
     fn supports_streaming(&self) -> bool {
+        false
+    }
+
+    /// Compute `S A` for a CSR matrix. Hash sketches (CountSketch,
+    /// SparseEmbed) override with true O(nnz) scatters; the default
+    /// densifies the whole matrix — the documented fallback for SRHT, whose
+    /// Hadamard butterfly needs every row at once.
+    fn apply_csr(&self, a: &CsrMat) -> Mat {
+        self.apply(&a.to_dense())
+    }
+
+    /// Fold one CSR row shard into the `s x d` accumulator — O(nnz(shard))
+    /// for hash sketches; Gaussian densifies *per shard* (bounded scratch,
+    /// documented fallback). Same additive contract as
+    /// [`Sketch::apply_block`]: folding a disjoint cover of shards
+    /// accumulates exactly the terms of `S A`. Only called when
+    /// `supports_csr_streaming()`; a mis-routed call returns `Err` and the
+    /// caller degrades to the dense product.
+    fn apply_csr_block(
+        &self,
+        block: &CsrBlock<'_>,
+        acc: &mut Mat,
+    ) -> Result<(), StreamUnsupported> {
+        let _ = (block, acc);
+        Err(StreamUnsupported { sketch: self.name() })
+    }
+
+    /// Whether [`Sketch::apply_csr_block`] is implemented.
+    fn supports_csr_streaming(&self) -> bool {
         false
     }
 }
@@ -140,6 +169,73 @@ pub fn apply_streamed(
             sk.name()
         );
         return (sk.apply(a), 1);
+    }
+    let mut out = Mat::zeros(s, d);
+    for p in &partials {
+        let guard = p.lock().unwrap();
+        sk.merge(&mut out, &guard);
+    }
+    (out, nb)
+}
+
+/// Compute `S A` for a CSR matrix by folding nnz-balanced row shards in
+/// parallel — the sparse twin of [`apply_streamed`]. Shards are grouped
+/// into at most `threads` contiguous ranges; each worker folds its range
+/// into a private partial and partials merge in range order, so the result
+/// is deterministic for a fixed (nnz budget, thread count) and equals the
+/// dense product up to floating-point re-association (1e-10 acceptance in
+/// `tests/sparse_parity.rs`). Cost is O(nnz) for hash sketches
+/// (CountSketch, SparseEmbed); Gaussian densifies per shard; SRHT reports
+/// no CSR streaming and takes the whole-matrix densify fallback.
+///
+/// Returns `(SA, shards_folded)`; `shards_folded == 1` means the dense
+/// fallback ran (CSR streaming unsupported, single shard, or empty input).
+pub fn apply_streamed_csr(
+    sk: &(dyn Sketch + Send + Sync),
+    a: &CsrMat,
+    block_nnz: Option<usize>,
+    threads: usize,
+) -> (Mat, usize) {
+    if !sk.supports_csr_streaming() || a.rows == 0 {
+        return (sk.apply_csr(a), 1);
+    }
+    let view = match block_nnz {
+        Some(bn) => CsrBlocks::new(a, bn),
+        None => CsrBlocks::auto(a),
+    };
+    let nb = view.num_blocks();
+    if nb <= 1 {
+        return (sk.apply_csr(a), 1);
+    }
+    let (s, d) = (sk.rows(), a.cols);
+    let workers = threads.max(1).min(nb);
+    let partials: Vec<std::sync::Mutex<Mat>> =
+        (0..workers).map(|_| std::sync::Mutex::new(Mat::zeros(s, d))).collect();
+    let failed = AtomicBool::new(false);
+    parallel_for_each_index(workers, workers, |w| {
+        let lo = w * nb / workers;
+        let hi = (w + 1) * nb / workers;
+        let mut acc = partials[w].lock().unwrap();
+        for bi in lo..hi {
+            if failed.load(Ordering::Relaxed) {
+                return;
+            }
+            let block = view.block(bi);
+            if sk.apply_csr_block(&block, &mut acc).is_err() {
+                failed.store(true, Ordering::Relaxed);
+                return;
+            }
+        }
+    });
+    if failed.load(Ordering::Relaxed) {
+        // same degradation contract as the dense fold: partials are
+        // discarded and the single-pass product runs instead of killing a
+        // serve worker
+        crate::log_warn!(
+            "{}: CSR shard fold rejected despite supports_csr_streaming(); degrading to the dense product",
+            sk.name()
+        );
+        return (sk.apply_csr(a), 1);
     }
     let mut out = Mat::zeros(s, d);
     for p in &partials {
@@ -280,7 +376,114 @@ mod tests {
         ] {
             let sk = kind.build(32, 128, &mut rng);
             assert_eq!(sk.supports_streaming(), streaming, "{}", kind.name());
+            // the CSR contract mirrors the dense one: hash sketches stream
+            // in O(nnz), Gaussian streams via per-shard densify, SRHT keeps
+            // the whole-matrix densify fallback
+            assert_eq!(
+                sk.supports_csr_streaming(),
+                streaming,
+                "{} (csr)",
+                kind.name()
+            );
         }
+    }
+
+    /// Random CSR matrix with ~density nonzeros (plus its dense twin).
+    fn sparse_pair(n: usize, d: usize, density: f64, seed: u64) -> (CsrMat, Mat) {
+        let mut rng = Rng::new(seed);
+        let dense = Mat::from_fn(n, d, |_, _| {
+            if rng.uniform() < density {
+                rng.gaussian()
+            } else {
+                0.0
+            }
+        });
+        (CsrMat::from_dense(&dense), dense)
+    }
+
+    #[test]
+    fn csr_apply_matches_dense_all_kinds() {
+        let (csr, dense) = sparse_pair(301, 6, 0.15, 41);
+        for kind in [
+            SketchKind::CountSketch,
+            SketchKind::SparseEmbed,
+            SketchKind::Gaussian,
+            SketchKind::Srht,
+        ] {
+            let mut rng = Rng::new(43);
+            let sk = kind.build(48, 301, &mut rng);
+            let want = sk.apply(&dense);
+            let got = sk.apply_csr(&csr);
+            assert!(
+                got.max_abs_diff(&want) < 1e-12,
+                "{}: apply_csr != apply",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn csr_streamed_matches_dense_and_reports_shards() {
+        let (csr, dense) = sparse_pair(257, 5, 0.2, 47);
+        for kind in [
+            SketchKind::CountSketch,
+            SketchKind::SparseEmbed,
+            SketchKind::Gaussian,
+            SketchKind::Srht,
+        ] {
+            let mut rng = Rng::new(51);
+            let sk = kind.build(32, 257, &mut rng);
+            let want = sk.apply(&dense);
+            let (got, shards) = apply_streamed_csr(sk.as_ref(), &csr, Some(16), 4);
+            assert!(
+                got.max_abs_diff(&want) < 1e-12,
+                "{}: streamed csr != dense",
+                kind.name()
+            );
+            if sk.supports_csr_streaming() {
+                assert!(shards > 1, "{}: expected multiple shards", kind.name());
+            } else {
+                assert_eq!(shards, 1, "{}: densify fallback expected", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn csr_streamed_deterministic_across_thread_counts() {
+        let (csr, _) = sparse_pair(400, 4, 0.3, 53);
+        let mut rng = Rng::new(59);
+        let sk = SketchKind::CountSketch.build(24, 400, &mut rng);
+        let (one, _) = apply_streamed_csr(sk.as_ref(), &csr, Some(20), 1);
+        let (eight, _) = apply_streamed_csr(sk.as_ref(), &csr, Some(20), 8);
+        assert!(one.max_abs_diff(&eight) < 1e-12);
+    }
+
+    #[test]
+    fn csr_misrouted_shard_degrades_to_dense() {
+        /// Claims CSR streaming but rejects every shard.
+        struct LyingCsr(srht::Srht);
+        impl Sketch for LyingCsr {
+            fn rows(&self) -> usize {
+                self.0.rows()
+            }
+            fn apply(&self, a: &Mat) -> Mat {
+                self.0.apply(a)
+            }
+            fn name(&self) -> &'static str {
+                "lying_csr"
+            }
+            // no apply_csr_block override: the default returns Err
+            fn supports_csr_streaming(&self) -> bool {
+                true
+            }
+        }
+        let (csr, dense) = sparse_pair(128, 4, 0.25, 61);
+        let mut rng = Rng::new(67);
+        let lying = LyingCsr(srht::Srht::new(16, 128, &mut rng));
+        let want = lying.apply(&dense);
+        let (got, shards) = apply_streamed_csr(&lying, &csr, Some(8), 4);
+        assert_eq!(shards, 1, "fallback must report the dense single pass");
+        assert_eq!(got.max_abs_diff(&want), 0.0);
     }
 
     #[test]

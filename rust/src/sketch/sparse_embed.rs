@@ -5,8 +5,8 @@
 //! CountSketch's single hash.
 
 use super::Sketch;
-use crate::data::blocks::RowBlock;
-use crate::linalg::Mat;
+use crate::data::blocks::{CsrBlock, RowBlock};
+use crate::linalg::{CsrMat, Mat};
 use crate::util::rng::Rng;
 
 pub struct SparseEmbed {
@@ -104,6 +104,45 @@ impl Sketch for SparseEmbed {
     }
 
     fn supports_streaming(&self) -> bool {
+        true
+    }
+
+    /// O(nnz(A) * k) on CSR — Table 2's O(nnz log d) with k = O(log d):
+    /// every stored entry scatters into its row's k buckets. Delegates to
+    /// the shard fold over the whole matrix (one scatter loop to maintain).
+    fn apply_csr(&self, a: &CsrMat) -> Mat {
+        assert_eq!(a.rows * self.k, self.buckets.len());
+        let mut out = Mat::zeros(self.s, a.cols);
+        self.apply_csr_block(&CsrBlock::whole(a), &mut out)
+            .expect("sparse embedding streams CSR");
+        out
+    }
+
+    /// Streaming CSR fold: same scatter through global row indices.
+    fn apply_csr_block(
+        &self,
+        block: &CsrBlock<'_>,
+        acc: &mut Mat,
+    ) -> Result<(), crate::sketch::StreamUnsupported> {
+        assert_eq!(acc.rows, self.s);
+        assert_eq!(acc.cols, block.cols());
+        let scale = 1.0 / (self.k as f64).sqrt();
+        for kk in 0..block.rows {
+            let i = block.global_row(kk);
+            let (cols, vals) = block.row(kk);
+            for t in 0..self.k {
+                let dst = self.buckets[i * self.k + t] as usize;
+                let sg = self.signs[i * self.k + t] * scale;
+                let orow = acc.row_mut(dst);
+                for (c, v) in cols.iter().zip(vals) {
+                    orow[*c as usize] += sg * v;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn supports_csr_streaming(&self) -> bool {
         true
     }
 }

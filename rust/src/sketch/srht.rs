@@ -40,6 +40,13 @@ impl Sketch for Srht {
     // rounds); until an executor provides one, SRHT keeps the trait's
     // default `supports_streaming() == false` and `apply_streamed` routes
     // it through this dense path.
+    //
+    // CSR FALLBACK (documented): for the same reason SRHT keeps the
+    // trait's default `supports_csr_streaming() == false` and
+    // `apply_csr` densifies the WHOLE matrix before the FWHT — a sparse
+    // input gains nothing from SRHT (the transform destroys sparsity in
+    // its first butterfly round anyway). `apply_streamed_csr` reports one
+    // shard so callers/metrics can see the fallback ran.
     fn rows(&self) -> usize {
         self.s
     }

@@ -50,13 +50,21 @@ impl StepRule for AdagradRule {
     fn step(&mut self, sess: &mut SolveSession, t: usize) {
         let eps = 1e-10;
         let d = self.x.len();
+        let ds = sess.ds;
         for _ in 0..t {
             let idx = sess.rng.indices(self.r, self.n);
-            for (row, &i) in idx.iter().enumerate() {
-                self.mbuf.row_mut(row).copy_from_slice(sess.ds.a.row(i));
-                self.vbuf[row] = sess.ds.b[i];
-            }
-            let g = blas::fused_grad(&self.mbuf, &self.vbuf, &self.x, self.scale);
+            let g = match &ds.csr {
+                // sparse row-gather gradient: O(nnz(batch)) — the G_t
+                // update stays dense (it is d-dimensional regardless)
+                Some(csr) => csr.batch_grad(&idx, &ds.b, &self.x, self.scale),
+                None => {
+                    for (row, &i) in idx.iter().enumerate() {
+                        self.mbuf.row_mut(row).copy_from_slice(ds.a.row(i));
+                        self.vbuf[row] = ds.b[i];
+                    }
+                    blas::fused_grad(&self.mbuf, &self.vbuf, &self.x, self.scale)
+                }
+            };
             for j in 0..d {
                 self.gsq[j] += g[j] * g[j];
                 self.x[j] -= self.eta * g[j] / (self.gsq[j].sqrt() + eps);
@@ -98,6 +106,7 @@ mod tests {
         Dataset {
             name: "t".into(),
             a,
+            csr: None,
             b,
             x_star_planted: Some(xt),
         }
@@ -137,6 +146,7 @@ mod tests {
         let ds = Dataset {
             name: "scaled".into(),
             a,
+            csr: None,
             b,
             x_star_planted: None,
         };

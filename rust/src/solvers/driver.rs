@@ -20,7 +20,7 @@ use super::{timed, SolveReport, SolverOpts, TraceRecorder};
 use crate::backend::Backend;
 use crate::data::Dataset;
 use crate::precond::{
-    precondition_with, CacheOutcome, Lookup, PrecondArtifact, PrecondCache, PrecondKey,
+    precondition_ds_with, CacheOutcome, Lookup, PrecondArtifact, PrecondCache, PrecondKey,
     Precondition,
 };
 use crate::prox::metric::MetricProjector;
@@ -117,6 +117,10 @@ impl<'a> SolveSession<'a> {
                 // artifacts are a function of the executing backend's
                 // numerics: per-request executors must not alias
                 backend: (if self.backend.has_pjrt() { "pjrt" } else { "native" }).into(),
+                // ...and of the data representation: the CSR fold
+                // re-associates the sketch sum, so dense and sparse
+                // artifacts for the same dataset must not alias either
+                repr: (if self.ds.is_sparse() { "csr" } else { "dense" }).into(),
             };
             loop {
                 match cache.lookup_or_claim(&key) {
@@ -170,12 +174,14 @@ impl<'a> SolveSession<'a> {
     /// An always-fresh step-1 preconditioner sampled from the session rng —
     /// IHS's per-iteration re-sketch. Never cached, never on the setup
     /// clock (the re-sketching cost is the method's signature cost and
-    /// belongs inside the timed step).
+    /// belongs inside the timed step). Representation-aware: on a sparse
+    /// dataset the re-sketch is O(nnz) per iteration — exactly the cost the
+    /// input-sparsity-time IHS literature promises.
     pub fn fresh_precond(&mut self) -> Precondition {
         let s = self.sketch_rows();
-        precondition_with(
+        precondition_ds_with(
             self.backend,
-            &self.ds.a,
+            self.ds,
             self.opts.sketch,
             s,
             &mut self.rng,
@@ -216,9 +222,23 @@ impl<'a> SolveSession<'a> {
         }
     }
 
-    /// f(x) off the solve clock (trace evaluation, mirrors the paper).
+    /// f(x) off the solve clock (trace evaluation, mirrors the paper) —
+    /// O(nnz) on sparse datasets, backend-routed on dense ones.
     pub fn objective(&self, x: &[f64]) -> f64 {
-        self.backend.residual_sq(&self.ds.a, &self.ds.b, x)
+        match &self.ds.csr {
+            Some(c) => c.residual_sq(&self.ds.b, x),
+            None => self.backend.residual_sq(&self.ds.a, &self.ds.b, x),
+        }
+    }
+
+    /// Full gradient `2 A^T (A x - b)` — O(nnz) on sparse datasets (SVRG
+    /// snapshots), backend-routed on dense ones so PJRT deployments keep
+    /// their artifact dispatch.
+    pub fn full_grad(&self, x: &[f64]) -> Vec<f64> {
+        match &self.ds.csr {
+            Some(c) => c.fused_grad(&self.ds.b, x, 2.0),
+            None => self.backend.full_grad(&self.ds.a, &self.ds.b, x),
+        }
     }
 
     fn start_trace(&mut self, f0: f64) {
@@ -350,6 +370,7 @@ pub fn drive<R: StepRule>(
 mod tests {
     use super::*;
     use crate::linalg::{blas, Mat};
+    use crate::precond::precondition_with;
     use crate::sketch::SketchKind;
 
     fn dataset(n: usize, d: usize, seed: u64) -> Dataset {
@@ -363,6 +384,7 @@ mod tests {
         Dataset {
             name: "t".into(),
             a,
+            csr: None,
             b,
             x_star_planted: Some(xt),
         }

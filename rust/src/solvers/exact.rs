@@ -82,6 +82,7 @@ mod tests {
         Dataset {
             name: "t".into(),
             a,
+            csr: None,
             b,
             x_star_planted: Some(xt),
         }

@@ -57,13 +57,21 @@ impl StepRule for SgdRule {
 
     fn step(&mut self, sess: &mut SolveSession, t: usize) {
         let base_t = sess.iters();
+        let ds = sess.ds;
         for k in 0..t {
             let idx = sess.rng.indices(self.r, self.n);
-            for (row, &i) in idx.iter().enumerate() {
-                self.mbuf.row_mut(row).copy_from_slice(sess.ds.a.row(i));
-                self.vbuf[row] = sess.ds.b[i];
-            }
-            let g = blas::fused_grad(&self.mbuf, &self.vbuf, &self.x, self.scale);
+            let g = match &ds.csr {
+                // sparse row-gather gradient: O(nnz(batch)) — no dense row
+                // copies, residual + scatter touch only stored entries
+                Some(csr) => csr.batch_grad(&idx, &ds.b, &self.x, self.scale),
+                None => {
+                    for (row, &i) in idx.iter().enumerate() {
+                        self.mbuf.row_mut(row).copy_from_slice(ds.a.row(i));
+                        self.vbuf[row] = ds.b[i];
+                    }
+                    blas::fused_grad(&self.mbuf, &self.vbuf, &self.x, self.scale)
+                }
+            };
             let eta = self.eta0 / (1.0 + (base_t + k) as f64 / self.t0).sqrt();
             for (xi, gi) in self.x.iter_mut().zip(&g) {
                 *xi -= eta * gi;
@@ -105,9 +113,59 @@ mod tests {
         Dataset {
             name: "t".into(),
             a,
+            csr: None,
             b,
             x_star_planted: Some(xt),
         }
+    }
+
+    #[test]
+    fn sparse_gradient_path_tracks_dense() {
+        // same data in both representations, same seed: the CSR batch
+        // gradient only re-associates sums, so the runs track each other
+        use crate::linalg::CsrMat;
+        let dense_ds = {
+            let mut rng = Rng::new(9);
+            let a = Mat::from_fn(1024, 6, |_, _| {
+                if rng.uniform() < 0.3 {
+                    rng.gaussian()
+                } else {
+                    0.0
+                }
+            });
+            let xt = rng.gaussians(6);
+            let mut b = blas::gemv(&a, &xt);
+            for v in &mut b {
+                *v += 0.05 * rng.gaussian();
+            }
+            Dataset {
+                name: "t".into(),
+                a,
+                csr: None,
+                b,
+                x_star_planted: None,
+            }
+        };
+        let sparse_ds = Dataset::from_csr(
+            "t",
+            CsrMat::from_dense(&dense_ds.a),
+            dense_ds.b.clone(),
+            None,
+        );
+        let mut opts = SolverOpts::default();
+        opts.batch_size = 8;
+        opts.max_iters = 400;
+        opts.chunk = 100;
+        opts.time_budget = 1e9;
+        let rd = Sgd.solve(&Backend::native(), &dense_ds, &opts);
+        let rs = Sgd.solve(&Backend::native(), &sparse_ds, &opts);
+        assert_eq!(rd.iters, rs.iters);
+        assert!(
+            (rd.f_final - rs.f_final).abs() < 1e-8 * (1.0 + rd.f_final),
+            "dense {} vs sparse {}",
+            rd.f_final,
+            rs.f_final
+        );
     }
 
     #[test]

@@ -94,12 +94,10 @@ impl StepRule for SvrgRule {
         if self.done < self.m_inner {
             return None; // mid-epoch
         }
-        // snapshot + full gradient (counted as solve time)
+        // snapshot + full gradient (counted as solve time); the session
+        // routes O(nnz) on sparse datasets, backend-dispatched on dense
         self.snapshot = self.x.clone();
-        let (mu_g, snap_secs) = timed(|| {
-            sess.backend
-                .full_grad(&sess.ds.a, &sess.ds.b, &self.snapshot)
-        });
+        let (mu_g, snap_secs) = timed(|| sess.full_grad(&self.snapshot));
         self.mu_g = mu_g;
         self.done = 0;
         Some(snap_secs)
@@ -111,14 +109,27 @@ impl StepRule for SvrgRule {
 
     fn step(&mut self, sess: &mut SolveSession, t: usize) {
         let d = self.x.len();
+        let ds = sess.ds;
         for _ in 0..t {
             let idx = sess.rng.indices(self.r, self.n);
-            for (row, &i) in idx.iter().enumerate() {
-                self.mbuf.row_mut(row).copy_from_slice(sess.ds.a.row(i));
-                self.vbuf[row] = sess.ds.b[i];
-            }
-            let g_x = blas::fused_grad(&self.mbuf, &self.vbuf, &self.x, self.scale);
-            let g_s = blas::fused_grad(&self.mbuf, &self.vbuf, &self.snapshot, self.scale);
+            let (g_x, g_s) = match &ds.csr {
+                // sparse row-gather variance-reduced pair: both gradients
+                // read the same sampled rows in O(nnz(batch))
+                Some(csr) => (
+                    csr.batch_grad(&idx, &ds.b, &self.x, self.scale),
+                    csr.batch_grad(&idx, &ds.b, &self.snapshot, self.scale),
+                ),
+                None => {
+                    for (row, &i) in idx.iter().enumerate() {
+                        self.mbuf.row_mut(row).copy_from_slice(ds.a.row(i));
+                        self.vbuf[row] = ds.b[i];
+                    }
+                    (
+                        blas::fused_grad(&self.mbuf, &self.vbuf, &self.x, self.scale),
+                        blas::fused_grad(&self.mbuf, &self.vbuf, &self.snapshot, self.scale),
+                    )
+                }
+            };
             let mut v: Vec<f64> = (0..d).map(|j| g_x[j] - g_s[j] + self.mu_g[j]).collect();
             if let Some(art) = &self.art {
                 v = blas::gemv(&art.pinv, &v);
@@ -174,6 +185,7 @@ mod tests {
         Dataset {
             name: "t".into(),
             a,
+            csr: None,
             b,
             x_star_planted: Some(xt),
         }

@@ -1,0 +1,187 @@
+//! Coordinator concurrency stress (ISSUE 3 satellite): 16 threads
+//! submitting identical and distinct jobs through the scheduler, asserting
+//! single-flight precond-cache accounting (exactly one recorded miss per
+//! key), liveness under cache eviction pressure, and bitwise-equal results
+//! for identical requests.
+
+use hdpw::backend::Backend;
+use hdpw::coordinator::{Coordinator, CoordinatorConfig, JobRequest, JobResult};
+use std::sync::{Arc, Barrier};
+
+const THREADS: usize = 16;
+
+fn coordinator(precond_cache_bytes: usize) -> Arc<Coordinator> {
+    Arc::new(Coordinator::new(
+        Backend::native(),
+        CoordinatorConfig {
+            workers: THREADS,
+            max_queue: 64,
+            cache_dir: None,
+            precond_cache_bytes,
+        },
+    ))
+}
+
+fn req(seed: u64) -> JobRequest {
+    let mut r = JobRequest::default();
+    r.dataset = "syn2".into();
+    r.n = 2048;
+    r.solver = "pwgradient".into();
+    r.max_iters = 40;
+    r.batch_size = 16;
+    r.time_budget = 1e9;
+    r.trials = 1;
+    r.seed = seed;
+    r.reuse_precond = true; // the cache is the subject under test
+    r.warm_start = false;
+    r.format = "dense".into(); // pin against the HDPW_FORMAT CI variant
+    r
+}
+
+fn assert_bitwise_equal(a: &JobResult, b: &JobResult, tag: &str) {
+    assert_eq!(a.best.x, b.best.x, "{tag}: best x differs");
+    assert_eq!(a.best_f.to_bits(), b.best_f.to_bits(), "{tag}: best f differs");
+    assert_eq!(a.best.iters, b.best.iters, "{tag}: iters differ");
+}
+
+/// 16 threads, one identical request each, released simultaneously: the
+/// single-flight claim must elect exactly one computer (one recorded miss),
+/// everyone else waits and hits, and all results are bitwise equal.
+#[test]
+fn identical_concurrent_jobs_record_exactly_one_miss() {
+    let coord = coordinator(1 << 30);
+    let barrier = Arc::new(Barrier::new(THREADS));
+    let mut handles = Vec::new();
+    for _ in 0..THREADS {
+        let coord = Arc::clone(&coord);
+        let barrier = Arc::clone(&barrier);
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            coord.run_job(&req(11)).unwrap()
+        }));
+    }
+    let results: Vec<JobResult> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(
+        coord.precond_cache().misses(),
+        1,
+        "single-flight: exactly one miss for one key"
+    );
+    assert_eq!(
+        coord.precond_cache().hits(),
+        THREADS - 1,
+        "every other caller hits the published artifact"
+    );
+    assert_eq!(coord.precond_cache().entries(), 1);
+    for r in &results[1..] {
+        assert_bitwise_equal(&results[0], r, "identical request");
+    }
+}
+
+/// Distinct keys from 16 threads, big budget: one miss per key, never more.
+#[test]
+fn distinct_concurrent_jobs_miss_once_per_key() {
+    let coord = coordinator(1 << 30);
+    let barrier = Arc::new(Barrier::new(THREADS));
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let coord = Arc::clone(&coord);
+        let barrier = Arc::clone(&barrier);
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            coord.run_job(&req(100 + t as u64)).unwrap()
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(
+        coord.precond_cache().misses(),
+        THREADS,
+        "each distinct key computes exactly once"
+    );
+    assert_eq!(coord.precond_cache().hits(), 0);
+    assert_eq!(coord.precond_cache().entries(), THREADS);
+}
+
+/// Eviction pressure: a budget that holds only a couple of artifacts while
+/// 16 threads churn distinct keys AND re-request a shared key. Must
+/// complete (no deadlock between the single-flight condvar and eviction),
+/// evict continuously, and keep identical requests bitwise equal even when
+/// their artifact was evicted and recomputed (keyed artifacts are pure
+/// functions of the key).
+#[test]
+fn eviction_pressure_keeps_liveness_and_determinism() {
+    // pwgradient artifacts on syn2 (d=20) are ~tens of KiB: a 64 KiB budget
+    // forces constant eviction without starving a single insert
+    let coord = coordinator(64 << 10);
+    let barrier = Arc::new(Barrier::new(THREADS));
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let coord = Arc::clone(&coord);
+        let barrier = Arc::clone(&barrier);
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            // churn: a private key, the shared key, another private key,
+            // the shared key again — interleaved across all threads
+            let own1 = coord.run_job(&req(500 + t as u64)).unwrap();
+            let shared1 = coord.run_job(&req(7)).unwrap();
+            let own2 = coord.run_job(&req(800 + t as u64)).unwrap();
+            let shared2 = coord.run_job(&req(7)).unwrap();
+            (own1, shared1, own2, shared2)
+        }));
+    }
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(
+        coord.precond_cache().evictions() > 0,
+        "budget of a couple artifacts under 48 jobs must evict"
+    );
+    // identical requests agree bitwise across threads and across
+    // evict/recompute cycles
+    let reference = &results[0].1;
+    for (own1, shared1, own2, shared2) in &results {
+        assert_bitwise_equal(reference, shared1, "shared key (first pass)");
+        assert_bitwise_equal(reference, shared2, "shared key (after churn)");
+        // private keys solved correctly too
+        for own in [own1, own2] {
+            assert!(own.best_rel_err < 1e-6, "rel {}", own.best_rel_err);
+        }
+    }
+}
+
+/// The async submit path under the same contention: the worker pool with 16
+/// workers, mixed identical/distinct jobs, drained cleanly with every
+/// completion accounted.
+#[test]
+fn submit_path_under_contention_completes_all_jobs() {
+    let coord = coordinator(1 << 30);
+    let total = 32usize;
+    let done = Arc::new(std::sync::Mutex::new(Vec::<JobResult>::new()));
+    for i in 0..total {
+        let done = Arc::clone(&done);
+        // half identical (seed 3, even ids), half distinct
+        let seed = if i % 2 == 0 { 3 } else { 1000 + i as u64 };
+        let mut r = req(seed);
+        r.id = i as u64;
+        coord.submit(r, move |res| {
+            done.lock().unwrap().push(res.unwrap());
+        });
+    }
+    coord.drain();
+    let results = done.lock().unwrap();
+    assert_eq!(results.len(), total);
+    // the identical half (even ids) agree bitwise
+    let identical: Vec<&JobResult> = results.iter().filter(|r| r.id % 2 == 0).collect();
+    assert_eq!(identical.len(), total / 2);
+    for r in &identical[1..] {
+        assert_bitwise_equal(identical[0], r, "submit-path identical request");
+    }
+    // exactly 1 miss for seed 3 plus one per distinct seed
+    assert_eq!(coord.precond_cache().misses(), 1 + total / 2);
+    assert_eq!(
+        coord
+            .metrics
+            .jobs_completed
+            .load(std::sync::atomic::Ordering::Relaxed),
+        total
+    );
+}

@@ -1,0 +1,187 @@
+//! Golden convergence fixtures — a drift detector for every iterative
+//! solver (ISSUE 3 satellite).
+//!
+//! For each iterative solver on syn1 (kappa = 1e8) and syn2 (kappa = 1e3),
+//! a seeded, iteration-bounded run produces a relative-error-vs-iteration
+//! trace. The trace is compared point-by-point against the committed JSON
+//! fixture under `tests/golden/` with a tight relative tolerance — any
+//! change to solver numerics, rng consumption order, preconditioning, or
+//! the driver loop shows up as a failing diff instead of silently shifting
+//! convergence behavior (which `solver_convergence.rs`'s loose qualitative
+//! assertions would absorb).
+//!
+//! **Bootstrap/regeneration**: a missing fixture is written from the
+//! current run and the test passes (self-sealing, insta-style) — commit
+//! the generated files. After an *intentional* numerics change:
+//!
+//! ```text
+//! rm rust/tests/golden/*.json && cargo test --test solver_golden
+//! ```
+//!
+//! then commit the regenerated fixtures. Every run additionally replays
+//! each configuration twice and asserts bitwise equality, so determinism
+//! is enforced even on a bootstrap run.
+//!
+//! The runs pin `format: dense`, `reuse_precond: false` and
+//! `warm_start: false` explicitly — the fixtures must not depend on the
+//! HDPW_FORMAT / HDPW_REUSE_PRECOND / HDPW_WARM_START CI variants.
+
+use hdpw::backend::Backend;
+use hdpw::coordinator::{Coordinator, CoordinatorConfig, JobRequest};
+use hdpw::util::json::Json;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const DATASETS: [&str; 2] = ["syn1", "syn2"];
+
+/// (solver, max_iters, chunk-ish): full-gradient solvers get few expensive
+/// iterations, stochastic solvers get enough steps for a real trace.
+const SOLVERS: [(&str, usize); 9] = [
+    ("hdpwbatchsgd", 400),
+    ("hdpwaccbatchsgd", 400),
+    ("pwgradient", 40),
+    ("ihs", 15),
+    ("pwsgd", 400),
+    ("sgd", 400),
+    ("adagrad", 400),
+    ("svrg", 400),
+    ("pwsvrg", 400),
+];
+
+const SEED: u64 = 42;
+const N: usize = 2048;
+
+/// Per-point relative tolerance. The fixture is replayed on the platform
+/// that generated it (CI), where runs are bitwise-deterministic; the
+/// tolerance only absorbs libm differences if the fixture ever crosses
+/// platforms.
+const TOL: f64 = 1e-9;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+fn request(solver: &str, dataset: &str, max_iters: usize) -> JobRequest {
+    let mut req = JobRequest::default();
+    req.dataset = dataset.into();
+    req.n = N;
+    req.solver = solver.into();
+    req.max_iters = max_iters;
+    req.batch_size = 16;
+    req.seed = SEED;
+    req.trials = 1;
+    req.time_budget = 1e9; // determinism: stop on iteration count only
+    // pin the protocol knobs the CI env variants flip
+    req.reuse_precond = false;
+    req.warm_start = false;
+    req.format = "dense".into();
+    req
+}
+
+/// Run one configuration; returns (f_star, trace of (iters, rel_err)).
+fn run_trace(
+    coord: &Coordinator,
+    solver: &str,
+    dataset: &str,
+    max_iters: usize,
+) -> (f64, Vec<(usize, f64)>) {
+    let res = coord.run_job(&request(solver, dataset, max_iters)).unwrap();
+    let trace = res
+        .best
+        .trace
+        .iter()
+        .map(|p| {
+            let rel = ((p.f - res.f_star) / res.f_star.max(1e-300)).max(0.0);
+            (p.iters, rel)
+        })
+        .collect();
+    (res.f_star, trace)
+}
+
+fn fixture_json(solver: &str, dataset: &str, f_star: f64, trace: &[(usize, f64)]) -> Json {
+    let points: Vec<Json> = trace
+        .iter()
+        .map(|&(it, rel)| Json::Arr(vec![Json::num(it as f64), Json::num(rel)]))
+        .collect();
+    Json::obj(vec![
+        ("solver", Json::str(solver)),
+        ("dataset", Json::str(dataset)),
+        ("n", Json::num(N as f64)),
+        ("seed", Json::num(SEED as f64)),
+        ("f_star", Json::num(f_star)),
+        ("trace", Json::Arr(points)),
+    ])
+}
+
+#[test]
+fn golden_traces_replay() {
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).expect("create golden dir");
+    let coord = Arc::new(Coordinator::new(
+        Backend::native(),
+        CoordinatorConfig::default(),
+    ));
+    let mut bootstrapped = Vec::new();
+    for dataset in DATASETS {
+        for (solver, max_iters) in SOLVERS {
+            let (f_star, trace) = run_trace(&coord, solver, dataset, max_iters);
+            assert!(trace.len() >= 2, "{solver}/{dataset}: degenerate trace");
+
+            // determinism gate: an immediate replay must be bit-identical —
+            // this holds even on a bootstrap run, so a flaky solver can
+            // never seal a flaky fixture
+            let (f_star2, trace2) = run_trace(&coord, solver, dataset, max_iters);
+            assert_eq!(f_star.to_bits(), f_star2.to_bits(), "{solver}/{dataset}: f* replay");
+            assert_eq!(trace.len(), trace2.len(), "{solver}/{dataset}");
+            for (a, b) in trace.iter().zip(&trace2) {
+                assert_eq!(a.0, b.0, "{solver}/{dataset}: iters replay");
+                assert_eq!(a.1.to_bits(), b.1.to_bits(), "{solver}/{dataset}: rel-err replay");
+            }
+
+            let path = dir.join(format!("{solver}_{dataset}.json"));
+            if !path.exists() {
+                // bootstrap: seal the fixture from this (replay-verified) run
+                let json = fixture_json(solver, dataset, f_star, &trace);
+                std::fs::write(&path, format!("{json}\n")).expect("write fixture");
+                bootstrapped.push(format!("{solver}_{dataset}"));
+                continue;
+            }
+            let text = std::fs::read_to_string(&path).expect("read fixture");
+            let golden = Json::parse(text.trim()).expect("parse fixture");
+            let gpoints = golden
+                .get("trace")
+                .and_then(Json::as_arr)
+                .expect("fixture trace");
+            assert_eq!(
+                gpoints.len(),
+                trace.len(),
+                "{solver}/{dataset}: trace length drifted (regenerate if intentional: \
+                 rm rust/tests/golden/*.json && cargo test --test solver_golden)"
+            );
+            let gf = golden.get("f_star").and_then(Json::as_f64).unwrap();
+            assert!(
+                (gf - f_star).abs() <= TOL * (1.0 + gf.abs()),
+                "{solver}/{dataset}: f* drifted: {f_star} vs golden {gf}"
+            );
+            for (k, (gp, &(it, rel))) in gpoints.iter().zip(&trace).enumerate() {
+                let garr = gp.as_arr().expect("point");
+                let git = garr[0].as_f64().unwrap() as usize;
+                let grel = garr[1].as_f64().unwrap();
+                assert_eq!(git, it, "{solver}/{dataset}: trace[{k}] iteration drifted");
+                assert!(
+                    (grel - rel).abs() <= TOL * (1.0 + grel.abs()),
+                    "{solver}/{dataset}: trace[{k}] rel-err drifted: {rel} vs golden {grel} \
+                     (regenerate if intentional: rm rust/tests/golden/*.json && \
+                     cargo test --test solver_golden)"
+                );
+            }
+        }
+    }
+    if !bootstrapped.is_empty() {
+        eprintln!(
+            "solver_golden: bootstrapped {} fixture(s) under tests/golden/ — commit them: {:?}",
+            bootstrapped.len(),
+            bootstrapped
+        );
+    }
+}
