@@ -46,13 +46,7 @@ fn main() -> anyhow::Result<()> {
     for v in &mut b {
         *v += 0.05 * rng.gaussian();
     }
-    let ds = Dataset {
-        name: "signal".into(),
-        a,
-        csr: None,
-        b,
-        x_star_planted: Some(x0.clone()),
-    };
+    let ds = Dataset::dense("signal", a, b, Some(x0.clone()));
     let l1_radius: f64 = x0.iter().map(|v| v.abs()).sum();
     println!("signal recovery: n={n} d={d} k={k} ||x0||_1={l1_radius:.3}");
 
@@ -65,14 +59,14 @@ fn main() -> anyhow::Result<()> {
     opts.batch_size = 64;
     opts.max_iters = 6_000;
     opts.time_budget = 30.0;
-    let rep = HdpwBatchSgd.solve(&backend, &ds, &opts);
+    let rep = HdpwBatchSgd.solve(&backend, &ds, &opts)?;
     report("HDpwBatchSGD (l1)", &x0, &rep.x, rep.solve_secs);
 
     let mut opts = SolverOpts::default();
     opts.constraint = cons;
     opts.max_iters = 200;
     opts.time_budget = 30.0;
-    let rep = PwGradient.solve(&backend, &ds, &opts);
+    let rep = PwGradient.solve(&backend, &ds, &opts)?;
     report("pwGradient   (l1)", &x0, &rep.x, rep.solve_secs);
 
     // --- ISTA baseline (same substrate, no preconditioning) ------------------
@@ -82,7 +76,7 @@ fn main() -> anyhow::Result<()> {
     let l = 2.0 * ((n as f64).sqrt() + (d as f64).sqrt()).powi(2);
     let lambda = 0.05 * 2.0 * n as f64 * 0.05; // ~ noise-scaled
     for _ in 0..400 {
-        let g = blas::fused_grad(&ds.a, &ds.b, &x, 2.0);
+        let g = blas::fused_grad(ds.dense_if_ready().expect("dense"), &ds.b, &x, 2.0);
         for (xi, gi) in x.iter_mut().zip(&g) {
             *xi -= gi / l;
         }

@@ -95,7 +95,7 @@ fn main() {
         };
         let mut gen_rng = rng.fork(41);
         let ds = hdpw::data::sparse_gen::generate_sparse(&spec, &mut gen_rng);
-        let csr = ds.csr.as_ref().expect("sparse dataset");
+        let csr = ds.csr().expect("sparse dataset");
         println!(
             "sparse workload: {}x{} nnz={} density={:.4}",
             n,
@@ -104,11 +104,19 @@ fn main() {
             ds.density()
         );
         let be = Backend::native();
+        // the dense comparison needs a dense view: take it through the
+        // capability call on a measuring budget so the peak-bytes numbers
+        // below come from the same accounting the serve path uses
+        let dense_budget = hdpw::util::mem::MemBudget::unlimited();
+        let dense_a = ds
+            .materialize_dense(&dense_budget, "bench dense-mirror twin")
+            .expect("unlimited budget");
+        let mirror_bytes = dense_budget.peak();
         let mut dense_rng = rng.fork(42);
         let st_dense = BenchStats::run("precondition dense 2^20x100 countsketch", 1, 3, || {
             std::hint::black_box(hdpw::precond::precondition_with(
                 &be,
-                &ds.a,
+                dense_a,
                 SketchKind::CountSketch,
                 s,
                 &mut dense_rng,
@@ -132,6 +140,87 @@ fn main() {
             "sparse sketch+precondition speedup: {:.1}x (acceptance: >= 5x)",
             st_dense.median_secs() / st_csr.median_secs()
         );
+
+        // ---- peak tracked bytes: dense-mirror invariant vs lazy design ----
+        // The pre-refactor Dataset invariant forced `mirror_bytes` of dense
+        // RAM the moment a CSR dataset was loaded. The lazy DesignMatrix
+        // charges 0 bytes on the step-1-only path; the HD path charges one
+        // padded [A | b] buffer. Acceptance: lazy step-1 peak < 0.5x the
+        // mirror footprint (it is exactly 0).
+        let lazy = hdpw::data::Dataset::from_csr("bench_lazy", csr.clone(), ds.b.clone(), None);
+        let step1_budget = hdpw::util::mem::MemBudget::unlimited();
+        {
+            // the BUDGETED entry point: any tracked densification on the
+            // step-1 path charges (and fails the acceptance line) here
+            let mut r = rng.fork(43);
+            std::hint::black_box(
+                hdpw::precond::precondition_ds_budgeted(
+                    &be,
+                    &lazy,
+                    SketchKind::CountSketch,
+                    s,
+                    &mut r,
+                    None,
+                    &step1_budget,
+                )
+                .expect("unlimited budget"),
+            );
+        }
+        let step1_peak = step1_budget.peak();
+        assert!(
+            lazy.dense_if_ready().is_none(),
+            "step-1 sketch must not materialize a mirror"
+        );
+        let hd_budget = hdpw::util::mem::MemBudget::unlimited();
+        let hd_peak = {
+            let mut r = rng.fork(44);
+            let hd = hdpw::precond::hd_transform_ds_with(&be, &lazy, &mut r, &hd_budget, "bench hd")
+                .expect("unlimited budget");
+            let peak = hd_budget.peak();
+            drop(hd);
+            peak
+        };
+        println!(
+            "peak tracked bytes: dense-mirror={mirror_bytes} lazy-step1={step1_peak} \
+             lazy-hd={hd_peak} (acceptance: lazy-step1 < 0.5x mirror)"
+        );
+        println!(
+            "mem acceptance: {}",
+            if (step1_peak as f64) < 0.5 * mirror_bytes as f64 {
+                "PASS"
+            } else {
+                "FAIL"
+            }
+        );
+        let mem_json = hdpw::util::json::Json::obj(vec![
+            ("workload", hdpw::util::json::Json::str(format!("{n}x{d}@0.01"))),
+            ("nnz", hdpw::util::json::Json::num(csr.nnz() as f64)),
+            (
+                "dense_mirror_bytes",
+                hdpw::util::json::Json::num(mirror_bytes as f64),
+            ),
+            (
+                "lazy_step1_peak_bytes",
+                hdpw::util::json::Json::num(step1_peak as f64),
+            ),
+            (
+                "lazy_hd_peak_bytes",
+                hdpw::util::json::Json::num(hd_peak as f64),
+            ),
+            (
+                "densify_events_step1",
+                hdpw::util::json::Json::num(step1_budget.densify_events() as f64),
+            ),
+            (
+                "speedup",
+                hdpw::util::json::Json::num(st_dense.median_secs() / st_csr.median_secs()),
+            ),
+        ]);
+        let mem_path = "BENCH_mem.json";
+        match std::fs::write(mem_path, format!("{mem_json}\n")) {
+            Ok(()) => println!("mem trajectory artifact: {mem_path}"),
+            Err(e) => println!("mem trajectory artifact NOT written: {e}"),
+        }
     }
 
     // ---- QR + triangular ------------------------------------------------------

@@ -272,6 +272,17 @@ pub struct JobResult {
     /// Whether the job ran on the CSR pipeline (the representation flag; a
     /// fully dense CSR payload still reports true here).
     pub sparse: bool,
+    /// Admission-control estimate of the job's budget-tracked
+    /// materialization bytes (HD buffers; 0 for step-1-only solvers).
+    pub mem_est_bytes: usize,
+    /// Process-budget high-water mark observed at job completion
+    /// (`MemBudget::peak` — shared across concurrent jobs, so this is the
+    /// worker's view of process pressure, not a per-job isolate).
+    pub mem_peak_bytes: usize,
+    /// Densifications recorded on the process budget while this job ran
+    /// (exact when jobs run serially; an upper bound under concurrency).
+    /// A CSR step-1-only solve reports 0 here — the acceptance criterion.
+    pub densify_events: usize,
     pub best: SolveReport,
 }
 
@@ -301,6 +312,9 @@ impl JobResult {
             ("nnz", Json::num(self.nnz as f64)),
             ("density", Json::num(self.density)),
             ("sparse", Json::Bool(self.sparse)),
+            ("mem_est_bytes", Json::num(self.mem_est_bytes as f64)),
+            ("mem_peak_bytes", Json::num(self.mem_peak_bytes as f64)),
+            ("densify_events", Json::num(self.densify_events as f64)),
             ("iters", Json::num(self.best.iters as f64)),
             ("setup_secs", Json::num(self.best.setup_secs)),
             ("solve_secs", Json::num(self.best.solve_secs)),

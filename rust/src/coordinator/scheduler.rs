@@ -15,6 +15,7 @@ use crate::precond::PrecondCache;
 use crate::solvers::driver::SessionCtx;
 use crate::solvers::exact::{ground_truth, GroundTruth};
 use crate::solvers::SolveReport;
+use crate::util::mem::MemBudget;
 use crate::util::rng::Rng;
 use crate::util::stats::Timer;
 use crate::util::threadpool::ThreadPool;
@@ -22,6 +23,7 @@ use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -34,6 +36,10 @@ pub struct CoordinatorConfig {
     /// byte budget for the preconditioner artifact cache
     /// (default: HDPW_PRECOND_CACHE_MB, 256 MiB)
     pub precond_cache_bytes: usize,
+    /// Memory budget charged by dense materializations (HD buffers, lazy
+    /// CSR mirrors). Default: the process budget (`HDPW_MEM_MB`, overridden
+    /// by `serve --mem-mb`); tests pass a private budget.
+    pub mem_budget: Arc<MemBudget>,
 }
 
 impl Default for CoordinatorConfig {
@@ -43,6 +49,7 @@ impl Default for CoordinatorConfig {
             max_queue: 16,
             cache_dir: None,
             precond_cache_bytes: PrecondCache::default_budget(),
+            mem_budget: MemBudget::process(),
         }
     }
 }
@@ -61,6 +68,10 @@ pub struct Coordinator {
     /// Shared preconditioner artifacts, keyed by (dataset, sketch, s, seed,
     /// block_rows) — the setup-amortization layer for `reuse_precond` jobs.
     precond_cache: Arc<PrecondCache>,
+    /// The memory budget every solve's dense materializations charge; also
+    /// the admission-control authority for jobs whose materialization
+    /// estimate would bust the cap.
+    mem: Arc<MemBudget>,
     config: CoordinatorConfig,
 }
 
@@ -72,6 +83,7 @@ impl Coordinator {
             metrics: Arc::new(Metrics::new()),
             prepared: Mutex::new(HashMap::new()),
             precond_cache: Arc::new(PrecondCache::new(config.precond_cache_bytes)),
+            mem: Arc::clone(&config.mem_budget),
             config,
         }
     }
@@ -82,6 +94,28 @@ impl Coordinator {
 
     pub fn precond_cache(&self) -> &Arc<PrecondCache> {
         &self.precond_cache
+    }
+
+    /// The coordinator's memory budget (serve metrics, tests).
+    pub fn mem_budget(&self) -> &Arc<MemBudget> {
+        &self.mem
+    }
+
+    /// Admission-control estimate of a job's budget-tracked materialization
+    /// bytes: the HD solvers charge one padded `[A | b]` FWHT buffer
+    /// ([`crate::precond::hd_buffer_bytes`] — the same formula the actual
+    /// charge uses) per resident artifact; every other solver is
+    /// step-1-only (or CGLS exact) and charges nothing. The estimate
+    /// deliberately ignores untracked allocations (iterates, sketches —
+    /// O(sd + d^2), negligible next to the n-sized buffer).
+    pub fn job_mem_estimate(solver: &str, n: usize, d: usize) -> usize {
+        let canonical = crate::solvers::by_name(solver)
+            .map(|s| s.name().to_string())
+            .unwrap_or_default();
+        match canonical.as_str() {
+            "hdpwbatchsgd" | "hdpwaccbatchsgd" => crate::precond::hd_buffer_bytes(n, d),
+            _ => 0,
+        }
     }
 
     /// Resolve the backend serving one request (the serve loop's
@@ -270,10 +304,61 @@ impl Coordinator {
         };
         let solver = crate::solvers::by_name(&req.solver).expect("validated");
         let backend = self.backend_for(req)?;
+        let dataset_id = Self::dataset_key(req);
+        // admission control: a job whose materialization estimate can never
+        // fit is rejected up front; one that would fit but not *now* queues
+        // (bounded by its own time budget) for headroom instead of racing
+        // other jobs into the budget and failing mid-solve.
+        let mut mem_est = Self::job_mem_estimate(&req.solver, ds.n(), ds.d());
+        if mem_est > 0 && req.reuse_precond {
+            // cache-aware: a resident two-step artifact (whose HD bytes are
+            // already charged for as long as it is cached) means this job
+            // acquires by reference and materializes nothing new — without
+            // this, repeat HD jobs would queue against their own cached
+            // bytes until a timeout. Counter-neutral peek: admission probes
+            // must not pollute the hit/miss dashboards. Eviction between
+            // the peek and the solve just degrades to the ordinary
+            // charge-at-capability path.
+            let probe_opts = req.solver_opts(radius, Some(gt.f_star))?;
+            let key = crate::solvers::driver::precond_key(
+                &backend,
+                ds,
+                &probe_opts,
+                dataset_id.clone(),
+                req.seed,
+            );
+            if self.precond_cache.peek_has_hd(&key) == Some(true) {
+                mem_est = 0;
+            }
+        }
+        if let Some(limit) = self.mem.limit_bytes() {
+            if mem_est > limit {
+                bail!(
+                    "admission control: job needs ~{mem_est} B of dense materialization \
+                     but the memory budget is {limit} B (HDPW_MEM_MB / serve --mem-mb)"
+                );
+            }
+            if mem_est > 0 {
+                // memory pressure sheds idle cached artifacts: their HD
+                // charges release when the last Arc drops, and the precond
+                // cache's own byte budget would otherwise pin them forever
+                // from this budget's point of view. Entries a running solve
+                // still holds release later — the wait below covers that.
+                while !self.mem.would_fit(mem_est) && self.precond_cache.evict_coldest() {}
+                let wait = Duration::from_secs_f64(req.time_budget.clamp(1.0, 60.0));
+                if !self.mem.wait_for_headroom(mem_est, wait) {
+                    bail!(
+                        "admission control: timed out waiting for {mem_est} B of \
+                         memory-budget headroom ({} B in use, limit {limit} B)",
+                        self.mem.used()
+                    );
+                }
+            }
+        }
+        let densify_before = self.mem.densify_events();
         let mut seed_rng = Rng::new(req.seed);
         let mut best: Option<SolveReport> = None;
         let mut hard_require_err: Option<anyhow::Error> = None;
-        let dataset_id = Self::dataset_key(req);
         for trial in 0..req.trials {
             let mut opts = req.solver_opts(radius, Some(gt.f_star))?;
             opts.seed = seed_rng.fork(trial as u64).next_u64();
@@ -295,9 +380,21 @@ impl Coordinator {
                     dataset_id: Some(dataset_id.clone()),
                     artifact_seed: req.seed,
                     x0: warm_x,
+                    mem: None, // attached below for every trial
                 };
             }
-            let rep = solver.solve(&backend, ds, &opts);
+            opts.session.mem = Some(Arc::clone(&self.mem));
+            let rep = match solver.solve(&backend, ds, &opts) {
+                Ok(r) => r,
+                Err(e) => {
+                    // keep the dispatch-mix metrics truthful even for a
+                    // failed pinned-executor job before surfacing the error
+                    if matches!(req.executor.as_str(), "native" | "pjrt") {
+                        self.backend.stats().absorb(backend.stats());
+                    }
+                    return Err(e);
+                }
+            };
             // pjrt hard-require: the fork's counters see only this job. Check
             // after the FIRST trial (dispatch mix is identical across trials)
             // so off-manifest jobs fail fast instead of burning all trials.
@@ -354,6 +451,9 @@ impl Coordinator {
             nnz: ds.nnz(),
             density: ds.density(),
             sparse: ds.is_sparse(),
+            mem_est_bytes: mem_est,
+            mem_peak_bytes: self.mem.peak(),
+            densify_events: self.mem.densify_events() - densify_before,
             best,
         })
     }
@@ -561,6 +661,117 @@ mod tests {
         assert_eq!(c.precond_cache().hits(), 0);
         assert_eq!(c.precond_cache().misses(), 0);
         assert_eq!(c.precond_cache().entries(), 0);
+    }
+
+    #[test]
+    fn admission_rejects_impossible_jobs_and_reports_mem_fields() {
+        // a coordinator with a 1 MiB budget: an HD solver on n=16384 x 20
+        // needs a ~2.6 MiB padded buffer — rejected up front, cleanly
+        let c = Arc::new(Coordinator::new(
+            Backend::native(),
+            CoordinatorConfig {
+                workers: 1,
+                max_queue: 4,
+                mem_budget: crate::util::mem::MemBudget::with_limit_mb(1),
+                ..CoordinatorConfig::default()
+            },
+        ));
+        let mut req = small_req("hdpwbatchsgd");
+        req.n = 16_384;
+        let err = c.run_job(&req).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("admission control"),
+            "{err:#}"
+        );
+        // a step-1-only solver estimates 0 and runs inside the same budget
+        let mut ok = small_req("pwgradient");
+        ok.n = 1024;
+        let res = c.run_job(&ok).unwrap();
+        assert_eq!(res.mem_est_bytes, 0);
+        assert_eq!(res.densify_events, 0);
+        // the estimate matches the HD buffer formula
+        assert_eq!(
+            Coordinator::job_mem_estimate("hdpw", 1000, 20),
+            1024 * 21 * 8
+        );
+        assert_eq!(Coordinator::job_mem_estimate("sgd", 1000, 20), 0);
+        assert_eq!(Coordinator::job_mem_estimate("exact", 1000, 20), 0);
+    }
+
+    #[test]
+    fn admission_is_cache_aware_for_repeat_hd_jobs() {
+        // budget fits ONE hd artifact (n=4096, d=20: 4096*21*8 = 688128 B
+        // of 1 MiB); the cached artifact keeps those bytes charged, so a
+        // naive estimate would queue the repeat job against its own cache
+        // until the admission timeout — the counter-neutral peek must see
+        // the resident artifact and admit immediately with estimate 0.
+        let c = Arc::new(Coordinator::new(
+            Backend::native(),
+            CoordinatorConfig {
+                workers: 1,
+                max_queue: 4,
+                mem_budget: crate::util::mem::MemBudget::with_limit_mb(1),
+                ..CoordinatorConfig::default()
+            },
+        ));
+        let mut req = small_req("hdpwbatchsgd");
+        req.n = 4096;
+        req.max_iters = 100;
+        req.reuse_precond = true;
+        req.time_budget = 5.0;
+        let r1 = c.run_job(&req).unwrap();
+        assert_eq!(r1.best.precond_cache, crate::precond::CacheOutcome::Miss);
+        assert!(r1.mem_est_bytes > 0);
+        assert!(c.mem_budget().used() > 0, "cached artifact keeps its charge");
+        let hits_before = c.precond_cache().hits();
+        let started = std::time::Instant::now();
+        let r2 = c.run_job(&req).unwrap();
+        assert_eq!(r2.best.precond_cache, crate::precond::CacheOutcome::Hit);
+        assert_eq!(
+            r2.mem_est_bytes, 0,
+            "cache-aware admission: a resident artifact materializes nothing"
+        );
+        assert!(
+            started.elapsed() < std::time::Duration::from_secs(4),
+            "repeat job must not queue against its own cached bytes"
+        );
+        // the admission peek itself counted no cache traffic
+        assert_eq!(c.precond_cache().hits(), hits_before + 1, "one hit: the solve's");
+    }
+
+    #[test]
+    fn admission_sheds_idle_cached_artifacts_under_pressure() {
+        // different-key HD jobs: job A's cached artifact pins ~688 KB of a
+        // 1 MiB budget; job B (different seed => different key) cannot fit
+        // beside it. Admission must evict the idle artifact — whose charge
+        // releases with its last Arc — instead of queueing B against bytes
+        // nothing would ever free.
+        let c = Arc::new(Coordinator::new(
+            Backend::native(),
+            CoordinatorConfig {
+                workers: 1,
+                max_queue: 4,
+                mem_budget: crate::util::mem::MemBudget::with_limit_mb(1),
+                ..CoordinatorConfig::default()
+            },
+        ));
+        let mut req_a = small_req("hdpwbatchsgd");
+        req_a.n = 4096;
+        req_a.max_iters = 100;
+        req_a.reuse_precond = true;
+        req_a.time_budget = 5.0;
+        c.run_job(&req_a).unwrap();
+        assert!(c.mem_budget().used() > 0, "A's artifact pins its HD bytes");
+        let mut req_b = req_a.clone();
+        req_b.seed = 2; // different artifact key
+        let started = std::time::Instant::now();
+        let rb = c.run_job(&req_b).unwrap();
+        assert_eq!(rb.best.precond_cache, crate::precond::CacheOutcome::Miss);
+        assert!(
+            started.elapsed() < std::time::Duration::from_secs(4),
+            "B must be admitted by shedding, not by timing out"
+        );
+        assert!(c.precond_cache().evictions() >= 1, "A's artifact was shed");
     }
 
     #[test]

@@ -99,6 +99,32 @@ pub fn handle_connection<R: BufRead, W: Write + Send + 'static>(
                                 std::sync::atomic::Ordering::Relaxed,
                             ) as f64),
                         ),
+                        // memory-budget health: densify_events says how
+                        // often a stage requested a dense view, rejections
+                        // how often the budget refused one; limit 0 means
+                        // unlimited
+                        (
+                            "mem_used_bytes",
+                            Json::num(coord.mem_budget().used() as f64),
+                        ),
+                        (
+                            "mem_peak_bytes",
+                            Json::num(coord.mem_budget().peak() as f64),
+                        ),
+                        (
+                            "mem_limit_bytes",
+                            Json::num(
+                                coord.mem_budget().limit_bytes().unwrap_or(0) as f64
+                            ),
+                        ),
+                        (
+                            "densify_events",
+                            Json::num(coord.mem_budget().densify_events() as f64),
+                        ),
+                        (
+                            "mem_rejections",
+                            Json::num(coord.mem_budget().rejections() as f64),
+                        ),
                     ];
                     if let Some(reason) = be.pjrt_fallback_reason() {
                         fields.push(("pjrt_fallback", Json::str(reason)));
@@ -187,9 +213,14 @@ mod tests {
     }
 
     fn run_session(input: &str) -> Vec<Json> {
+        // a private budget: the per-job densify/peak assertions must not
+        // race other tests charging the shared process budget
         let coord = Arc::new(Coordinator::new(
             Backend::native(),
-            CoordinatorConfig::default(),
+            CoordinatorConfig {
+                mem_budget: crate::util::mem::MemBudget::unlimited(),
+                ..CoordinatorConfig::default()
+            },
         ));
         let out = Arc::new(Mutex::new(Vec::new()));
         handle_connection(&coord, Cursor::new(input.to_string()), VecWriter(Arc::clone(&out)))
@@ -222,6 +253,11 @@ mod tests {
             "warm_starts",
             "sparse_jobs",
             "sparse_nnz",
+            "mem_used_bytes",
+            "mem_peak_bytes",
+            "mem_limit_bytes",
+            "densify_events",
+            "mem_rejections",
         ] {
             assert!(out[1].get(field).and_then(Json::as_f64).is_some(), "{field}");
         }
@@ -241,6 +277,15 @@ mod tests {
         assert!(result.get("nnz").and_then(Json::as_f64).unwrap() > 0.0);
         // the representation flag, not density, is the CSR signal
         assert_eq!(result.get("sparse").and_then(Json::as_bool), Some(true));
+        // exact on CSR runs the CGLS oracle: zero densifications, and the
+        // mem accounting fields ride along on the result line
+        assert_eq!(
+            result.get("densify_events").and_then(Json::as_f64),
+            Some(0.0),
+            "{result:?}"
+        );
+        assert_eq!(result.get("mem_est_bytes").and_then(Json::as_f64), Some(0.0));
+        assert!(result.get("mem_peak_bytes").and_then(Json::as_f64).is_some());
         // NOTE: the metrics cmd is handled inline and may run before the
         // async job finishes — assert the counters ride along, not their
         // values (scheduler tests pin the values synchronously)

@@ -1,0 +1,418 @@
+//! Representation-polymorphic design matrix — the end of the dense mirror.
+//!
+//! `Dataset` used to pair `a: Mat` with `csr: Option<CsrMat>` under the
+//! invariant "when csr is present, `a` holds `csr.to_dense()`" — which made
+//! every CSR load pay the full dense footprint up front, on the serve path,
+//! whether or not any stage ever needed a dense view. [`DesignMatrix`]
+//! inverts that: the representation the data *arrived in* is the one that
+//! is resident, and a dense view is a **capability** requested through a
+//! [`MemBudget`]:
+//!
+//! * [`DesignMatrix::materialize_dense`] — lazily build (and keep) the
+//!   dense mirror, charging its bytes against the budget; fails with a
+//!   structured [`MemError`] when over budget instead of OOMing a worker.
+//!   The mirror is built at most once and cached (`CsrWithDense` state).
+//! * [`DesignMatrix::dense_scoped`] — a drop-after-use dense view for
+//!   one-shot consumers (production caller: the SRHT sketch on CSR data,
+//!   whose Hadamard butterfly needs every row at once —
+//!   `precond::precondition_ds_budgeted`): the charge (and the copy) is
+//!   released when the returned [`DenseView`] drops, so a transient
+//!   consumer never bloats steady-state residency.
+//! * [`DesignMatrix::dense_if_ready`] — the free accessor: `Some` only when
+//!   a dense view already exists (dense payload, or a materialized mirror).
+//!
+//! The HD transform — the other dense object a sparse setup can need — is
+//! even cheaper than a capability view: it assembles its padded `[A | b]`
+//! buffer straight from CSR (`CsrMat::hstack_col_padded`) and charges those
+//! bytes against the same [`MemBudget`] directly, never holding a full
+//! mirror. Step-1-only sparse pipelines (CountSketch/SparseEmbed sketching,
+//! mini-batch gradients, CGLS ground truth) call none of the dense
+//! capabilities, which is what `densify_events == 0` asserts end-to-end.
+
+use crate::linalg::{CsrMat, Mat};
+use crate::util::mem::{MemBudget, MemCharge, MemError};
+use std::sync::{Arc, OnceLock};
+
+/// Which representation a design matrix is resident in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Repr {
+    Dense,
+    Csr,
+}
+
+impl Repr {
+    /// The cache-key tag ("dense" | "csr").
+    pub fn tag(self) -> &'static str {
+        match self {
+            Repr::Dense => "dense",
+            Repr::Csr => "csr",
+        }
+    }
+}
+
+/// A lazily materialized dense mirror + the budget charge keeping its bytes
+/// accounted for as long as it is resident.
+struct Mirror {
+    mat: Mat,
+    _charge: Option<MemCharge>,
+}
+
+enum Inner {
+    Dense(Mat),
+    Csr {
+        csr: CsrMat,
+        mirror: OnceLock<Mirror>,
+    },
+}
+
+/// The design matrix `A` in whichever representation it arrived in; see the
+/// module docs for the capability-based densification contract.
+pub struct DesignMatrix {
+    inner: Inner,
+}
+
+/// A dense view that may own a transient materialization: borrowed from the
+/// resident representation when one exists, otherwise a budget-charged copy
+/// released (bytes and all) on drop.
+pub enum DenseView<'a> {
+    Borrowed(&'a Mat),
+    Owned(Mat, Option<MemCharge>),
+}
+
+impl std::ops::Deref for DenseView<'_> {
+    type Target = Mat;
+    fn deref(&self) -> &Mat {
+        match self {
+            DenseView::Borrowed(m) => m,
+            DenseView::Owned(m, _) => m,
+        }
+    }
+}
+
+impl DesignMatrix {
+    pub fn from_dense(a: Mat) -> DesignMatrix {
+        DesignMatrix {
+            inner: Inner::Dense(a),
+        }
+    }
+
+    pub fn from_csr(csr: CsrMat) -> DesignMatrix {
+        DesignMatrix {
+            inner: Inner::Csr {
+                csr,
+                mirror: OnceLock::new(),
+            },
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match &self.inner {
+            Inner::Dense(m) => m.rows,
+            Inner::Csr { csr, .. } => csr.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match &self.inner {
+            Inner::Dense(m) => m.cols,
+            Inner::Csr { csr, .. } => csr.cols,
+        }
+    }
+
+    pub fn repr(&self) -> Repr {
+        match &self.inner {
+            Inner::Dense(_) => Repr::Dense,
+            Inner::Csr { .. } => Repr::Csr,
+        }
+    }
+
+    /// Stored entries: nnz for CSR, rows*cols for dense.
+    pub fn nnz(&self) -> usize {
+        match &self.inner {
+            Inner::Dense(m) => m.rows * m.cols,
+            Inner::Csr { csr, .. } => csr.nnz(),
+        }
+    }
+
+    /// nnz / (rows*cols); exactly 1.0 for dense.
+    pub fn density(&self) -> f64 {
+        match &self.inner {
+            Inner::Dense(_) => 1.0,
+            Inner::Csr { csr, .. } => csr.density(),
+        }
+    }
+
+    /// The CSR payload when this design is sparse.
+    pub fn csr(&self) -> Option<&CsrMat> {
+        match &self.inner {
+            Inner::Dense(_) => None,
+            Inner::Csr { csr, .. } => Some(csr),
+        }
+    }
+
+    /// Bytes a full dense materialization would charge.
+    pub fn dense_bytes(&self) -> usize {
+        self.rows() * self.cols() * std::mem::size_of::<f64>()
+    }
+
+    /// A dense view that is *already resident* (the dense payload, or a
+    /// previously materialized mirror). Never allocates, never charges.
+    pub fn dense_if_ready(&self) -> Option<&Mat> {
+        match &self.inner {
+            Inner::Dense(m) => Some(m),
+            Inner::Csr { mirror, .. } => mirror.get().map(|m| &m.mat),
+        }
+    }
+
+    /// Whether a CSR design has its dense mirror resident (tests/metrics).
+    pub fn mirror_resident(&self) -> bool {
+        matches!(&self.inner, Inner::Csr { mirror, .. } if mirror.get().is_some())
+    }
+
+    /// Mutable dense access (dense payload or resident mirror) — generators
+    /// post-process dense data through this; it never materializes.
+    pub fn dense_mut(&mut self) -> Option<&mut Mat> {
+        match &mut self.inner {
+            Inner::Dense(m) => Some(m),
+            Inner::Csr { mirror, .. } => mirror.get_mut().map(|m| &mut m.mat),
+        }
+    }
+
+    /// The capability call: obtain a dense view, materializing (and keeping)
+    /// the mirror on first use. The materialization charges
+    /// [`DesignMatrix::dense_bytes`] against `budget` — over budget it
+    /// returns the structured error instead of allocating — and records one
+    /// densify event tagged with `stage`. Dense designs return their payload
+    /// untouched (no charge, no event).
+    pub fn materialize_dense(
+        &self,
+        budget: &Arc<MemBudget>,
+        stage: &str,
+    ) -> Result<&Mat, MemError> {
+        match &self.inner {
+            Inner::Dense(m) => Ok(m),
+            Inner::Csr { csr, mirror } => {
+                if let Some(m) = mirror.get() {
+                    return Ok(&m.mat);
+                }
+                let bytes = self.dense_bytes();
+                let charge = budget.try_charge(bytes, stage)?;
+                let mat = csr.to_dense();
+                if mirror
+                    .set(Mirror {
+                        mat,
+                        _charge: Some(charge),
+                    })
+                    .is_ok()
+                {
+                    budget.note_densify(stage, bytes);
+                }
+                // a racing loser's charge dropped with its rejected Mirror
+                Ok(&mirror.get().expect("mirror just set").mat)
+            }
+        }
+    }
+
+    /// Drop-after-use dense view for one-shot consumers — e.g. the SRHT
+    /// sketch on CSR data, which needs every row at once for one transform
+    /// and never again: borrows a resident view when one exists, otherwise
+    /// charges + copies and releases both on drop. Never populates the
+    /// cached mirror.
+    pub fn dense_scoped(
+        &self,
+        budget: &Arc<MemBudget>,
+        stage: &str,
+    ) -> Result<DenseView<'_>, MemError> {
+        if let Some(m) = self.dense_if_ready() {
+            return Ok(DenseView::Borrowed(m));
+        }
+        let csr = self.csr().expect("not-ready dense implies CSR");
+        let bytes = self.dense_bytes();
+        let charge = budget.try_charge(bytes, stage)?;
+        budget.note_densify(stage, bytes);
+        Ok(DenseView::Owned(csr.to_dense(), Some(charge)))
+    }
+
+    /// Fresh dense copy for diagnostics, tests and text serialization
+    /// references — NOT budget-tracked and NOT cached. Production paths use
+    /// [`DesignMatrix::materialize_dense`] / [`DesignMatrix::dense_scoped`],
+    /// which are.
+    pub fn dense_clone(&self) -> Mat {
+        match &self.inner {
+            Inner::Dense(m) => m.clone(),
+            Inner::Csr { csr, .. } => csr.to_dense(),
+        }
+    }
+
+    /// Scale column `j` of the design by `factors[j]` in place, in whichever
+    /// representation is resident (the sparsity-preserving normalization
+    /// path). A resident mirror is scaled too, keeping it exact.
+    pub fn scale_columns(&mut self, factors: &[f64]) {
+        assert_eq!(factors.len(), self.cols());
+        match &mut self.inner {
+            Inner::Dense(m) => {
+                for i in 0..m.rows {
+                    for (v, f) in m.row_mut(i).iter_mut().zip(factors) {
+                        *v *= f;
+                    }
+                }
+            }
+            Inner::Csr { csr, mirror } => {
+                for (c, v) in csr.indices.iter().zip(csr.values.iter_mut()) {
+                    *v *= factors[*c as usize];
+                }
+                if let Some(m) = mirror.get_mut() {
+                    for i in 0..m.mat.rows {
+                        for (v, f) in m.mat.row_mut(i).iter_mut().zip(factors) {
+                            *v *= f;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Cloning clones the resident representation only: a CSR design's lazily
+/// materialized mirror is a budget-charged cache, not state, so the clone
+/// starts un-materialized (and un-charged).
+impl Clone for DesignMatrix {
+    fn clone(&self) -> DesignMatrix {
+        match &self.inner {
+            Inner::Dense(m) => DesignMatrix::from_dense(m.clone()),
+            Inner::Csr { csr, .. } => DesignMatrix::from_csr(csr.clone()),
+        }
+    }
+}
+
+impl std::fmt::Debug for DesignMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DesignMatrix")
+            .field("repr", &self.repr())
+            .field("rows", &self.rows())
+            .field("cols", &self.cols())
+            .field("nnz", &self.nnz())
+            .field("mirror_resident", &self.mirror_resident())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sparse_mat(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(n, d, |_, _| {
+            if rng.uniform() < 0.3 {
+                rng.gaussian()
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn dense_design_needs_no_capability() {
+        let m = sparse_mat(10, 4, 1);
+        let dm = DesignMatrix::from_dense(m.clone());
+        assert_eq!(dm.repr(), Repr::Dense);
+        assert_eq!(dm.repr().tag(), "dense");
+        assert!(dm.dense_if_ready().is_some());
+        let budget = MemBudget::with_limit_mb(1);
+        // no charge, no densify event for an already-dense design
+        let got = dm.materialize_dense(&budget, "t").unwrap();
+        assert_eq!(*got, m);
+        assert_eq!(budget.used(), 0);
+        assert_eq!(budget.densify_events(), 0);
+    }
+
+    #[test]
+    fn csr_mirror_is_lazy_charged_and_cached() {
+        let dense = sparse_mat(32, 5, 2);
+        let dm = DesignMatrix::from_csr(CsrMat::from_dense(&dense));
+        assert_eq!(dm.repr(), Repr::Csr);
+        assert!(dm.dense_if_ready().is_none(), "mirror must start absent");
+        assert!(!dm.mirror_resident());
+        let budget = MemBudget::unlimited();
+        let m = dm.materialize_dense(&budget, "test-stage").unwrap();
+        assert_eq!(*m, dense);
+        assert_eq!(budget.used(), dm.dense_bytes());
+        assert_eq!(budget.densify_events(), 1);
+        assert!(dm.mirror_resident());
+        // second call is a cache read: no new charge, no new event
+        let _ = dm.materialize_dense(&budget, "test-stage").unwrap();
+        assert_eq!(budget.used(), dm.dense_bytes());
+        assert_eq!(budget.densify_events(), 1);
+        assert!(dm.dense_if_ready().is_some());
+    }
+
+    #[test]
+    fn over_budget_materialization_fails_cleanly() {
+        let dense = sparse_mat(1024, 16, 3); // 128 KiB dense
+        let dm = DesignMatrix::from_csr(CsrMat::from_dense(&dense));
+        let budget = MemBudget::with_limit_mb(1);
+        let _hog = budget.try_charge((1 << 20) - 1024, "hog").unwrap();
+        let err = dm.materialize_dense(&budget, "qr_ground_truth").unwrap_err();
+        assert_eq!(err.stage, "qr_ground_truth");
+        assert!(dm.dense_if_ready().is_none(), "failed call must not cache");
+        assert_eq!(budget.densify_events(), 0);
+        assert_eq!(budget.rejections(), 1);
+    }
+
+    #[test]
+    fn scoped_view_releases_bytes_on_drop() {
+        let dense = sparse_mat(64, 6, 4);
+        let dm = DesignMatrix::from_csr(CsrMat::from_dense(&dense));
+        let budget = MemBudget::unlimited();
+        {
+            let view = dm.dense_scoped(&budget, "one-shot").unwrap();
+            assert_eq!(view.row(0), dense.row(0));
+            assert_eq!(budget.used(), dm.dense_bytes());
+        }
+        assert_eq!(budget.used(), 0, "scoped charge released on drop");
+        assert_eq!(budget.peak(), dm.dense_bytes());
+        assert_eq!(budget.densify_events(), 1);
+        assert!(!dm.mirror_resident(), "scoped view must not cache");
+        // after a persistent materialization, scoped borrows for free
+        dm.materialize_dense(&budget, "persist").unwrap();
+        let before = budget.densify_events();
+        let v = dm.dense_scoped(&budget, "reuse").unwrap();
+        assert!(matches!(v, DenseView::Borrowed(_)));
+        assert_eq!(budget.densify_events(), before);
+    }
+
+    #[test]
+    fn clone_resets_the_mirror() {
+        let dense = sparse_mat(16, 3, 5);
+        let dm = DesignMatrix::from_csr(CsrMat::from_dense(&dense));
+        let budget = MemBudget::unlimited();
+        dm.materialize_dense(&budget, "t").unwrap();
+        let cl = dm.clone();
+        assert!(!cl.mirror_resident(), "clone starts un-materialized");
+        assert_eq!(cl.csr(), dm.csr());
+        assert_eq!(budget.used(), dm.dense_bytes(), "clone charged nothing");
+    }
+
+    #[test]
+    fn scale_columns_updates_both_representations() {
+        let dense = sparse_mat(20, 4, 6);
+        let mut dm = DesignMatrix::from_csr(CsrMat::from_dense(&dense));
+        let budget = MemBudget::unlimited();
+        dm.materialize_dense(&budget, "t").unwrap();
+        let factors = [2.0, 0.5, 1.0, -1.0];
+        dm.scale_columns(&factors);
+        let scaled_mirror = dm.dense_if_ready().unwrap().clone();
+        assert_eq!(dm.csr().unwrap().to_dense(), scaled_mirror, "mirror kept exact");
+        for i in 0..20 {
+            for j in 0..4 {
+                assert_eq!(scaled_mirror.at(i, j), dense.at(i, j) * factors[j]);
+            }
+        }
+        // dense designs scale too
+        let mut dd = DesignMatrix::from_dense(dense.clone());
+        dd.scale_columns(&factors);
+        assert_eq!(*dd.dense_if_ready().unwrap(), scaled_mirror);
+    }
+}

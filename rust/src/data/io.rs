@@ -11,8 +11,13 @@ use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"HDPWDS01";
 
-/// Write a dataset to the binary cache format.
+/// Write a dataset to the binary cache format. Dense payloads only: the
+/// disk cache predates the sparse pipeline and sparse formats deliberately
+/// skip it (caching a CSR dataset here would densify it on the serve path).
 pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    let a = ds
+        .dense_if_ready()
+        .ok_or_else(|| anyhow::anyhow!("binary dataset cache stores dense payloads only"))?;
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
     f.write_all(MAGIC)?;
     let name = ds.name.as_bytes();
@@ -20,7 +25,7 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
     f.write_all(name)?;
     f.write_all(&(ds.n() as u64).to_le_bytes())?;
     f.write_all(&(ds.d() as u64).to_le_bytes())?;
-    for v in &ds.a.data {
+    for v in &a.data {
         f.write_all(&v.to_le_bytes())?;
     }
     for v in &ds.b {
@@ -62,13 +67,7 @@ pub fn load(path: &Path) -> Result<Dataset> {
     };
     let a = Mat::from_vec(n, d, read_f64s(n * d)?);
     let b = read_f64s(n)?;
-    Ok(Dataset {
-        name: String::from_utf8(name)?,
-        a,
-        csr: None,
-        b,
-        x_star_planted: None,
-    })
+    Ok(Dataset::dense(String::from_utf8(name)?, a, b, None))
 }
 
 /// Load from CSV: last column is the response b, earlier columns form A.
@@ -80,16 +79,11 @@ pub fn load_csv(path: &Path, skip_header: bool) -> Result<Dataset> {
     }
     let full = Mat::from_vec(n, cols, data);
     let (a, b) = full.split_last_col();
-    Ok(Dataset {
-        name: path
-            .file_stem()
-            .map(|s| s.to_string_lossy().into_owned())
-            .unwrap_or_else(|| "csv".into()),
-        a,
-        csr: None,
-        b,
-        x_star_planted: None,
-    })
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "csv".into());
+    Ok(Dataset::dense(name, a, b, None))
 }
 
 /// Load from cache if present, else generate via `make_ds` and cache.
@@ -131,20 +125,26 @@ mod tests {
     #[test]
     fn binary_roundtrip() {
         let mut rng = Rng::new(1);
-        let ds = Dataset {
-            name: "roundtrip".into(),
-            a: Mat::gaussian(17, 3, &mut rng),
-            csr: None,
-            b: rng.gaussians(17),
-            x_star_planted: None,
-        };
+        let a = Mat::gaussian(17, 3, &mut rng);
+        let ds = Dataset::dense("roundtrip", a, rng.gaussians(17), None);
         let dir = tmpdir();
         let path = dir.join("x.ds");
         save(&ds, &path).unwrap();
         let back = load(&path).unwrap();
         assert_eq!(back.name, "roundtrip");
-        assert_eq!(back.a, ds.a);
+        assert_eq!(back.dense_clone(), ds.dense_clone());
         assert_eq!(back.b, ds.b);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn save_rejects_sparse_payloads() {
+        use crate::linalg::CsrMat;
+        let a = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 2.0]);
+        let ds = Dataset::from_csr("sp", CsrMat::from_dense(&a), vec![1.0, 2.0], None);
+        let dir = tmpdir();
+        let err = save(&ds, &dir.join("sp.ds")).unwrap_err();
+        assert!(format!("{err:#}").contains("dense payloads only"), "{err:#}");
         std::fs::remove_dir_all(dir).unwrap();
     }
 
@@ -165,7 +165,7 @@ mod tests {
         let ds = load_csv(&path, true).unwrap();
         assert_eq!((ds.n(), ds.d()), (2, 2));
         assert_eq!(ds.b, vec![3.0, 6.0]);
-        assert_eq!(ds.a.row(1), &[4.0, 5.0]);
+        assert_eq!(ds.dense_if_ready().unwrap().row(1), &[4.0, 5.0]);
         std::fs::remove_dir_all(dir).unwrap();
     }
 
@@ -175,13 +175,8 @@ mod tests {
         let mut calls = 0;
         let make = || {
             let mut rng = Rng::new(9);
-            Dataset {
-                name: "gen".into(),
-                a: Mat::gaussian(5, 2, &mut rng),
-                csr: None,
-                b: rng.gaussians(5),
-                x_star_planted: None,
-            }
+            let a = Mat::gaussian(5, 2, &mut rng);
+            Dataset::dense("gen", a, rng.gaussians(5), None)
         };
         let d1 = load_or_generate(&dir, "k", || {
             calls += 1;
@@ -196,7 +191,7 @@ mod tests {
         .unwrap();
         assert_eq!(calls, 1);
         assert_eq!(calls2, 0); // served from cache
-        assert_eq!(d1.a, d2.a);
+        assert_eq!(d1.dense_clone(), d2.dense_clone());
         std::fs::remove_dir_all(dir).unwrap();
     }
 }

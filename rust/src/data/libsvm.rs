@@ -23,37 +23,48 @@
 //! * **Malformed anything** (bad numbers, missing `:`, negative or
 //!   non-integer indices, non-finite values): `Err` with the line number —
 //!   never a panic, so a serve worker surfaces it as a job error.
+//!
+//! [`load`] streams the file line-by-line through `BufRead` — a multi-GB
+//! libsvm file is never slurped into one `String`, so loading cannot
+//! itself blow the memory budget the sparse pipeline exists to respect
+//! (peak transient is one line + the growing CSR arrays).
 
 use super::Dataset;
 use crate::linalg::CsrMat;
 use anyhow::{bail, Context, Result};
+use std::io::BufRead;
 use std::path::Path;
 
 /// The dimension-declaration header [`to_text`] writes: `# hdpw: cols=<d>`.
 const COLS_HEADER: &str = "hdpw: cols=";
 
-/// Parse libsvm text into a sparse [`Dataset`] (labels become `b`).
-pub fn parse_str(name: &str, text: &str) -> Result<Dataset> {
-    let mut rows: Vec<(f64, Vec<(u64, f64)>)> = Vec::new();
-    let mut saw_zero_index = false;
-    let mut max_index: u64 = 0;
-    let mut any_feature = false;
-    let mut declared_cols: usize = 0;
-    for (lineno, raw) in text.lines().enumerate() {
-        let line_no = lineno + 1;
+/// Incremental libsvm parser: feed lines one at a time, finish into a
+/// [`Dataset`]. Shared by the in-memory [`parse_str`] and the streaming
+/// [`load`], so both have identical validation and line-numbered errors.
+#[derive(Default)]
+struct Parser {
+    rows: Vec<(f64, Vec<(u64, f64)>)>,
+    saw_zero_index: bool,
+    max_index: u64,
+    any_feature: bool,
+    declared_cols: usize,
+}
+
+impl Parser {
+    fn feed(&mut self, line_no: usize, raw: &str) -> Result<()> {
         // dimension declaration (a comment to every other libsvm reader)
         if let Some(rest) = raw.trim().strip_prefix('#') {
             if let Some(v) = rest.trim().strip_prefix(COLS_HEADER) {
                 let cols: usize = v.trim().parse().map_err(|_| {
                     anyhow::anyhow!("line {line_no}: bad cols declaration {v:?}")
                 })?;
-                declared_cols = declared_cols.max(cols);
+                self.declared_cols = self.declared_cols.max(cols);
             }
         }
         // strip trailing comment, then surrounding whitespace
         let line = raw.split('#').next().unwrap_or("").trim();
         if line.is_empty() {
-            continue;
+            return Ok(());
         }
         let mut toks = line.split_whitespace();
         let label_tok = toks.next().expect("non-empty line has a first token");
@@ -93,59 +104,85 @@ pub fn parse_str(name: &str, text: &str) -> Result<Dataset> {
             }
         }
         for &(idx, _) in &feats {
-            saw_zero_index |= idx == 0;
-            max_index = max_index.max(idx);
-            any_feature = true;
+            self.saw_zero_index |= idx == 0;
+            self.max_index = self.max_index.max(idx);
+            self.any_feature = true;
         }
-        rows.push((label, feats));
+        self.rows.push((label, feats));
+        Ok(())
     }
-    if rows.is_empty() {
-        bail!("libsvm {name:?}: no data rows");
-    }
-    // index convention: any 0 => 0-based, else the libsvm-standard 1-based
-    let base: u64 = if saw_zero_index { 0 } else { 1 };
-    // max_index <= u32::MAX (checked per token), so this cannot overflow;
-    // a declared dimension widens the inferred one (empty trailing columns
-    // have no stored entries to infer from)
-    let inferred = if any_feature {
-        (max_index + 1 - base) as usize
-    } else {
-        0
-    };
-    let d = inferred.max(declared_cols);
-    if d == 0 {
-        bail!("libsvm {name:?}: no features in any row");
-    }
-    if d > u32::MAX as usize {
-        bail!("libsvm {name:?}: feature dimension {d} out of supported range");
-    }
-    let n = rows.len();
-    let mut indptr = Vec::with_capacity(n + 1);
-    let mut indices = Vec::with_capacity(rows.iter().map(|r| r.1.len()).sum());
-    let mut values = Vec::with_capacity(indices.capacity());
-    let mut b = Vec::with_capacity(n);
-    indptr.push(0);
-    for (label, feats) in rows {
-        for (idx, val) in feats {
-            indices.push((idx - base) as u32);
-            values.push(val);
+
+    fn finish(self, name: &str) -> Result<Dataset> {
+        if self.rows.is_empty() {
+            bail!("libsvm {name:?}: no data rows");
         }
-        indptr.push(indices.len());
-        b.push(label);
+        // index convention: any 0 => 0-based, else the libsvm-standard 1-based
+        let base: u64 = if self.saw_zero_index { 0 } else { 1 };
+        // max_index <= u32::MAX (checked per token), so this cannot overflow;
+        // a declared dimension widens the inferred one (empty trailing columns
+        // have no stored entries to infer from)
+        let inferred = if self.any_feature {
+            (self.max_index + 1 - base) as usize
+        } else {
+            0
+        };
+        let d = inferred.max(self.declared_cols);
+        if d == 0 {
+            bail!("libsvm {name:?}: no features in any row");
+        }
+        if d > u32::MAX as usize {
+            bail!("libsvm {name:?}: feature dimension {d} out of supported range");
+        }
+        let n = self.rows.len();
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut indices = Vec::with_capacity(self.rows.iter().map(|r| r.1.len()).sum());
+        let mut values = Vec::with_capacity(indices.capacity());
+        let mut b = Vec::with_capacity(n);
+        indptr.push(0);
+        for (label, feats) in self.rows {
+            for (idx, val) in feats {
+                indices.push((idx - base) as u32);
+                values.push(val);
+            }
+            indptr.push(indices.len());
+            b.push(label);
+        }
+        let csr = CsrMat::new(n, d, indptr, indices, values);
+        Ok(Dataset::from_csr(name, csr, b, None))
     }
-    let csr = CsrMat::new(n, d, indptr, indices, values);
-    Ok(Dataset::from_csr(name, csr, b, None))
 }
 
-/// Load a libsvm file from disk.
+/// Parse libsvm text into a sparse [`Dataset`] (labels become `b`).
+pub fn parse_str(name: &str, text: &str) -> Result<Dataset> {
+    let mut parser = Parser::default();
+    for (lineno, raw) in text.lines().enumerate() {
+        parser.feed(lineno + 1, raw)?;
+    }
+    parser.finish(name)
+}
+
+/// Load a libsvm file from disk, line by line through `BufRead` — the
+/// whole file is never resident as one `String` (a multi-GB load holds one
+/// line + the CSR arrays under construction). Errors keep line numbers.
 pub fn load(path: &Path) -> Result<Dataset> {
-    let text =
-        std::fs::read_to_string(path).with_context(|| format!("read libsvm file {path:?}"))?;
+    let file = std::fs::File::open(path).with_context(|| format!("read libsvm file {path:?}"))?;
+    let reader = std::io::BufReader::new(file);
     let name = path
         .file_stem()
         .map(|s| s.to_string_lossy().into_owned())
         .unwrap_or_else(|| "libsvm".into());
-    parse_str(&name, &text).with_context(|| format!("parse libsvm file {path:?}"))
+    let mut parser = Parser::default();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.with_context(|| {
+            format!("read libsvm file {path:?} (line {})", lineno + 1)
+        })?;
+        parser
+            .feed(lineno + 1, &line)
+            .with_context(|| format!("parse libsvm file {path:?}"))?;
+    }
+    parser
+        .finish(&name)
+        .with_context(|| format!("parse libsvm file {path:?}"))
 }
 
 /// Serialize a dataset as libsvm text (1-based indices; shortest-roundtrip
@@ -157,7 +194,7 @@ pub fn to_text(ds: &Dataset) -> String {
     let mut out = format!("# {COLS_HEADER}{}\n", ds.d());
     for i in 0..ds.n() {
         out.push_str(&ds.b[i].to_string());
-        match &ds.csr {
+        match ds.csr() {
             Some(c) => {
                 let (cols, vals) = c.row(i);
                 for (cidx, v) in cols.iter().zip(vals) {
@@ -165,7 +202,8 @@ pub fn to_text(ds: &Dataset) -> String {
                 }
             }
             None => {
-                for (j, v) in ds.a.row(i).iter().enumerate() {
+                let a = ds.dense_if_ready().expect("dense dataset");
+                for (j, v) in a.row(i).iter().enumerate() {
                     if *v != 0.0 {
                         out.push_str(&format!(" {}:{}", j + 1, v));
                     }
@@ -188,9 +226,11 @@ mod tests {
         let ds = parse_str("t", "1.5 1:2.0 3:4.0\n-0.5 2:1.0\n").unwrap();
         assert_eq!((ds.n(), ds.d()), (2, 3));
         assert_eq!(ds.b, vec![1.5, -0.5]);
-        assert_eq!(ds.a.row(0), &[2.0, 0.0, 4.0]);
-        assert_eq!(ds.a.row(1), &[0.0, 1.0, 0.0]);
+        let a = ds.dense_clone();
+        assert_eq!(a.row(0), &[2.0, 0.0, 4.0]);
+        assert_eq!(a.row(1), &[0.0, 1.0, 0.0]);
         assert!(ds.is_sparse());
+        assert!(ds.dense_if_ready().is_none(), "parsing must not densify");
         assert_eq!(ds.nnz(), 3);
     }
 
@@ -198,15 +238,16 @@ mod tests {
     fn detects_zero_based_indexing() {
         let ds = parse_str("t", "1 0:7.0 2:8.0\n2 1:9.0\n").unwrap();
         assert_eq!(ds.d(), 3);
-        assert_eq!(ds.a.row(0), &[7.0, 0.0, 8.0]);
-        assert_eq!(ds.a.row(1), &[0.0, 9.0, 0.0]);
+        let a = ds.dense_clone();
+        assert_eq!(a.row(0), &[7.0, 0.0, 8.0]);
+        assert_eq!(a.row(1), &[0.0, 9.0, 0.0]);
     }
 
     #[test]
     fn out_of_order_indices_are_sorted() {
         let ds = parse_str("t", "1 3:30 1:10 2:20\n").unwrap();
-        assert_eq!(ds.a.row(0), &[10.0, 20.0, 30.0]);
-        let (cols, _) = ds.csr.as_ref().unwrap().row(0);
+        assert_eq!(ds.dense_clone().row(0), &[10.0, 20.0, 30.0]);
+        let (cols, _) = ds.csr().unwrap().row(0);
         assert_eq!(cols, &[0, 1, 2]);
     }
 
@@ -216,8 +257,8 @@ mod tests {
         let ds = parse_str("t", text).unwrap();
         assert_eq!(ds.n(), 3, "blank lines skipped, label-only row kept");
         assert_eq!(ds.b, vec![1.0, 2.0, 3.0]);
-        assert_eq!(ds.csr.as_ref().unwrap().row_nnz(1), 0, "empty row");
-        assert_eq!(ds.a.row(2), &[0.0, 6.0]);
+        assert_eq!(ds.csr().unwrap().row_nnz(1), 0, "empty row");
+        assert_eq!(ds.dense_clone().row(2), &[0.0, 6.0]);
     }
 
     #[test]
@@ -263,25 +304,18 @@ mod tests {
         );
         let text = to_text(&ds);
         let back = parse_str("rt", &text).unwrap();
-        assert_eq!(back.csr, ds.csr, "CSR payload must survive the round trip");
+        assert_eq!(back.csr(), ds.csr(), "CSR payload must survive the round trip");
         assert_eq!(back.b, ds.b);
-        assert_eq!(back.a, ds.a);
     }
 
     #[test]
     fn dense_dataset_serializes_with_zeros_elided() {
         let a = crate::linalg::Mat::from_vec(2, 3, vec![1.0, 0.0, 2.0, 0.0, 0.0, 3.0]);
-        let ds = Dataset {
-            name: "t".into(),
-            a,
-            csr: None,
-            b: vec![9.0, 8.0],
-            x_star_planted: None,
-        };
+        let ds = Dataset::dense("t", a, vec![9.0, 8.0], None);
         let text = to_text(&ds);
         assert_eq!(text, "# hdpw: cols=3\n9 1:1 3:2\n8 3:3\n");
         let back = parse_str("t", &text).unwrap();
-        assert_eq!(back.a, ds.a);
+        assert_eq!(back.dense_clone(), ds.dense_clone());
         assert_eq!(back.b, ds.b);
     }
 
@@ -293,8 +327,7 @@ mod tests {
         let ds = Dataset::from_csr("t", CsrMat::from_dense(&a), vec![5.0, 6.0], None);
         let back = parse_str("t", &to_text(&ds)).unwrap();
         assert_eq!(back.d(), 4, "declared dimension survives the round trip");
-        assert_eq!(back.a, ds.a);
-        assert_eq!(back.csr, ds.csr);
+        assert_eq!(back.csr(), ds.csr());
         // an all-empty-rows dataset round-trips too (header supplies d)
         let hollow = Dataset::from_csr(
             "h",
@@ -311,6 +344,28 @@ mod tests {
         assert_eq!(widened.d(), 5);
         // malformed declaration errors cleanly
         assert!(parse_str("t", "# hdpw: cols=abc\n1 1:2\n").is_err());
+    }
+
+    #[test]
+    fn streamed_load_matches_parse_str_with_line_errors() {
+        let dir = std::env::temp_dir().join(format!("hdpw_libsvm_rt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ok.svm");
+        let text = "# hdpw: cols=4\n1.5 1:2 4:-3.25\n-1 2:0.5\n2\n";
+        std::fs::write(&path, text).unwrap();
+        let streamed = load(&path).unwrap();
+        let in_memory = parse_str("ok", text).unwrap();
+        assert_eq!(streamed.csr(), in_memory.csr(), "BufRead path must parse identically");
+        assert_eq!(streamed.b, in_memory.b);
+        assert_eq!(streamed.name, "ok");
+        // malformed content keeps the line number through the streaming path
+        let bad = dir.join("bad.svm");
+        std::fs::write(&bad, "1 1:2\n2 1:oops\n").unwrap();
+        let err = load(&bad).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("bad.svm"), "{msg}");
+        std::fs::remove_dir_all(dir).unwrap();
     }
 
     #[test]

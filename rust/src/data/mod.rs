@@ -3,6 +3,7 @@
 //! and binary/CSV IO.
 
 pub mod blocks;
+pub mod design;
 pub mod synthetic;
 pub mod sparse_gen;
 pub mod uci_sim;
@@ -12,30 +13,49 @@ pub mod libsvm;
 pub use blocks::{
     default_block_nnz, default_block_rows, CsrBlock, CsrBlocks, RowBlock, RowBlocks,
 };
+pub use design::{DenseView, DesignMatrix, Repr};
 
 use crate::linalg::{blas, CsrMat, Mat};
+use crate::util::mem::{MemBudget, MemError};
+use std::sync::Arc;
 
 /// A regression problem instance: `min_{x in W} ||Ax - b||^2`.
+///
+/// The design matrix is representation-polymorphic ([`DesignMatrix`]):
+/// dense datasets behave exactly as before, while CSR datasets carry *no*
+/// dense mirror until a stage explicitly requests one through the
+/// budget-accounted capability calls ([`Dataset::materialize_dense`] /
+/// [`Dataset::dense_scoped`]). See DESIGN.md §11.
 #[derive(Clone, Debug)]
 pub struct Dataset {
     pub name: String,
-    pub a: Mat,
-    /// CSR payload when this dataset is sparse (libsvm ingest, sparse
-    /// synthetic generation). INVARIANT: when present, `a` holds the dense
-    /// materialization `csr.to_dense()` — dense-only stages (QR ground
-    /// truth, the HD transform's FWHT, normalization) read `a`, while the
-    /// flop-heavy paths (sketching, mini-batch gradients, objective
-    /// evaluation) route through `csr` in O(nnz). See DESIGN.md §10 for the
-    /// representation contract and the memory caveat.
-    pub csr: Option<CsrMat>,
+    pub design: DesignMatrix,
     pub b: Vec<f64>,
     /// Planted solution when known (synthetic data): for diagnostics only.
     pub x_star_planted: Option<Vec<f64>>,
 }
 
 impl Dataset {
-    /// Build a sparse dataset from a CSR payload (the dense mirror is
-    /// materialized eagerly; see the `csr` field invariant).
+    /// Build a dense dataset.
+    pub fn dense(
+        name: impl Into<String>,
+        a: Mat,
+        b: Vec<f64>,
+        x_star_planted: Option<Vec<f64>>,
+    ) -> Dataset {
+        assert_eq!(a.rows, b.len());
+        Dataset {
+            name: name.into(),
+            design: DesignMatrix::from_dense(a),
+            b,
+            x_star_planted,
+        }
+    }
+
+    /// Build a sparse dataset from a CSR payload. NO dense mirror is
+    /// materialized — a dense view is a budget-accounted capability request
+    /// (see [`DesignMatrix`]), and step-1-only sparse pipelines never make
+    /// one.
     pub fn from_csr(
         name: impl Into<String>,
         csr: CsrMat,
@@ -43,51 +63,107 @@ impl Dataset {
         x_star_planted: Option<Vec<f64>>,
     ) -> Dataset {
         assert_eq!(csr.rows, b.len());
-        let a = csr.to_dense();
         Dataset {
             name: name.into(),
-            a,
-            csr: Some(csr),
+            design: DesignMatrix::from_csr(csr),
             b,
             x_star_planted,
         }
     }
 
     pub fn n(&self) -> usize {
-        self.a.rows
+        self.design.rows()
     }
 
     pub fn d(&self) -> usize {
-        self.a.cols
+        self.design.cols()
     }
 
     /// Whether the CSR fast paths are active.
     pub fn is_sparse(&self) -> bool {
-        self.csr.is_some()
+        self.design.repr() == Repr::Csr
+    }
+
+    /// The CSR payload when this dataset is sparse.
+    pub fn csr(&self) -> Option<&CsrMat> {
+        self.design.csr()
     }
 
     /// Stored entries: nnz for sparse datasets, n*d for dense ones.
     pub fn nnz(&self) -> usize {
-        match &self.csr {
-            Some(c) => c.nnz(),
-            None => self.a.rows * self.a.cols,
-        }
+        self.design.nnz()
     }
 
     /// nnz / (n*d); exactly 1.0 for dense datasets.
     pub fn density(&self) -> f64 {
-        match &self.csr {
-            Some(c) => c.density(),
-            None => 1.0,
-        }
+        self.design.density()
+    }
+
+    /// A dense view that already exists (dense dataset, or a materialized
+    /// mirror) — never allocates. Dense-only consumers on the hot path use
+    /// this; it is always `Some` for dense datasets.
+    pub fn dense_if_ready(&self) -> Option<&Mat> {
+        self.design.dense_if_ready()
+    }
+
+    /// Capability call: the dense view, lazily materialized through the
+    /// budget (charged + counted + logged with `stage`; `Err` over budget).
+    pub fn materialize_dense(
+        &self,
+        budget: &Arc<MemBudget>,
+        stage: &str,
+    ) -> Result<&Mat, MemError> {
+        self.design.materialize_dense(budget, stage)
+    }
+
+    /// Drop-after-use dense view for one-shot consumers (charge and copy
+    /// released when the view drops; never cached).
+    pub fn dense_scoped(
+        &self,
+        budget: &Arc<MemBudget>,
+        stage: &str,
+    ) -> Result<DenseView<'_>, MemError> {
+        self.design.dense_scoped(budget, stage)
+    }
+
+    /// Mutable dense access for dense datasets (generator post-processing).
+    pub fn dense_mut(&mut self) -> Option<&mut Mat> {
+        self.design.dense_mut()
+    }
+
+    /// Fresh dense copy — diagnostics/tests/serialization references only
+    /// (un-tracked, un-cached; see [`DesignMatrix::dense_clone`]).
+    pub fn dense_clone(&self) -> Mat {
+        self.design.dense_clone()
+    }
+
+    /// The dense view a dense-only code path may assume (dense datasets
+    /// only; CSR callers must hold a capability view instead).
+    fn dense_ref(&self) -> &Mat {
+        self.design
+            .dense_if_ready()
+            .expect("dense-only path reached a CSR dataset without a materialized view")
     }
 
     /// f(x) = ||Ax - b||^2 — O(nnz) on sparse datasets.
     pub fn objective(&self, x: &[f64]) -> f64 {
-        match &self.csr {
+        match self.csr() {
             Some(c) => c.residual_sq(&self.b, x),
-            None => blas::residual_sq(&self.a, &self.b, x),
+            None => blas::residual_sq(self.dense_ref(), &self.b, x),
         }
+    }
+
+    /// Mean squared row entry `sum_ij a_ij^2 / n` — the row-second-moment
+    /// scale the SGD-family step sizes derive from. O(nnz) on sparse
+    /// datasets; the dense branch is bit-identical to summing the dense
+    /// payload (skipped zeros are exact no-ops in IEEE addition).
+    pub fn row_mean_sq(&self) -> f64 {
+        let n = self.n() as f64;
+        let sum: f64 = match self.csr() {
+            Some(c) => c.values.iter().map(|v| v * v).sum(),
+            None => self.dense_ref().data.iter().map(|v| v * v).sum(),
+        };
+        sum / n
     }
 
     /// `A_i · x` — O(nnz(row)) on sparse datasets; on dense ones this is
@@ -95,9 +171,9 @@ impl Dataset {
     /// code path).
     #[inline]
     pub fn row_dot(&self, i: usize, x: &[f64]) -> f64 {
-        match &self.csr {
+        match self.csr() {
             Some(c) => c.row_dot(i, x),
-            None => blas::dot(self.a.row(i), x),
+            None => blas::dot(self.dense_ref().row(i), x),
         }
     }
 
@@ -105,30 +181,32 @@ impl Dataset {
     /// `blas::axpy` on dense ones.
     #[inline]
     pub fn row_axpy(&self, i: usize, coef: f64, out: &mut [f64]) {
-        match &self.csr {
+        match self.csr() {
             Some(c) => c.row_axpy(i, coef, out),
-            None => blas::axpy(coef, self.a.row(i), out),
+            None => blas::axpy(coef, self.dense_ref().row(i), out),
         }
     }
 
     /// `coef * A_i` as a dense vector (pwSGD's variance probe).
     pub fn row_scaled(&self, i: usize, coef: f64) -> Vec<f64> {
-        match &self.csr {
+        match self.csr() {
             Some(c) => {
                 let mut out = vec![0.0; self.d()];
                 c.row_axpy(i, coef, &mut out);
                 out
             }
-            None => self.a.row(i).iter().map(|v| coef * v).collect(),
+            None => self.dense_ref().row(i).iter().map(|v| coef * v).collect(),
         }
     }
 
-    /// Contiguous row shards of `A` without copying. `block_rows = None`
-    /// picks the cache/thread heuristic for this shape.
+    /// Contiguous row shards of the dense view without copying (dense
+    /// datasets; CSR callers shard with [`Dataset::csr_blocks`]).
+    /// `block_rows = None` picks the cache/thread heuristic for this shape.
     pub fn row_blocks(&self, block_rows: Option<usize>) -> RowBlocks<'_> {
+        let a = self.dense_ref();
         match block_rows {
-            Some(br) => RowBlocks::new(&self.a, br),
-            None => RowBlocks::auto(&self.a),
+            Some(br) => RowBlocks::new(a, br),
+            None => RowBlocks::auto(a),
         }
     }
 
@@ -137,46 +215,98 @@ impl Dataset {
     /// mean row occupancy, so `--block-rows` means "about this many rows
     /// per shard" in both representations.
     pub fn csr_blocks(&self, block_rows: Option<usize>) -> Option<CsrBlocks<'_>> {
-        let c = self.csr.as_ref()?;
+        let c = self.csr()?;
         Some(match block_rows {
             Some(br) => CsrBlocks::new(c, c.nnz_budget_for_rows(br)),
             None => CsrBlocks::auto(c),
         })
     }
 
-    /// Normalize features to zero mean / unit variance and b to unit
-    /// variance (the paper normalizes datasets for the low-precision
-    /// solvers). Returns the per-column (mean, std) used.
-    ///
-    /// Mean-centering fills in every zero, so a sparse dataset is densified
-    /// here: the CSR payload is dropped (with a warning) and the dataset
-    /// continues on the dense paths.
+    /// Normalize for the low-precision solvers (the paper normalizes its
+    /// datasets). Dense datasets keep the historical semantics — zero mean /
+    /// unit variance per column, b to unit variance. Sparse datasets route
+    /// to the sparsity-preserving [`Dataset::normalize_scale_only`] mode
+    /// (mean-centering would fill in every stored zero); the routing is
+    /// logged. Returns the per-column (mean, scale) used (+ b's last).
     pub fn normalize(&mut self) -> Vec<(f64, f64)> {
-        if self.csr.take().is_some() {
-            crate::log_warn!(
-                "normalize({}): mean-centering densifies — dropping the CSR payload",
+        if self.is_sparse() {
+            crate::log_info!(
+                "normalize({}): CSR dataset — scale-only mode (no centering, sparsity preserved)",
                 self.name
             );
+            return self.normalize_scale_only();
         }
+        self.normalize_center_scale()
+    }
+
+    /// Scale-only normalization: divide column j by its 2-norm scale
+    /// `s_j = ||A_:j||_2 / sqrt(n)` (the centering mode's variance scale
+    /// without the mean subtraction) and b by its own 2-norm scale. Zeros
+    /// stay zeros, so CSR payloads keep their structure exactly. Works on
+    /// both representations; the dense arithmetic per stored entry is
+    /// identical to the CSR arithmetic, so a CSR dataset and its dense twin
+    /// normalize to the same values (parity-tested).
+    pub fn normalize_scale_only(&mut self) -> Vec<(f64, f64)> {
+        let n = self.n() as f64;
+        let d = self.d();
+        let mut sumsq = vec![0.0; d];
+        match self.csr() {
+            Some(c) => {
+                for (j, v) in c.indices.iter().zip(&c.values) {
+                    sumsq[*j as usize] += v * v;
+                }
+            }
+            None => {
+                let a = self.dense_ref();
+                for i in 0..a.rows {
+                    for (j, v) in a.row(i).iter().enumerate() {
+                        sumsq[j] += v * v;
+                    }
+                }
+            }
+        }
+        let mut stats = Vec::with_capacity(d + 1);
+        let mut inv = Vec::with_capacity(d);
+        for &sq in &sumsq {
+            let s = (sq / n).sqrt().max(1e-300);
+            stats.push((0.0, s));
+            inv.push(1.0 / s);
+        }
+        self.design.scale_columns(&inv);
+        let bsq: f64 = self.b.iter().map(|v| v * v).sum();
+        let bs = (bsq / n).sqrt().max(1e-300);
+        let binv = 1.0 / bs;
+        for v in &mut self.b {
+            *v *= binv;
+        }
+        stats.push((0.0, bs));
+        self.x_star_planted = None; // column scaling reweights the problem
+        stats
+    }
+
+    /// The historical dense normalization: zero mean / unit variance per
+    /// column and b to unit variance.
+    fn normalize_center_scale(&mut self) -> Vec<(f64, f64)> {
         let n = self.n() as f64;
         let d = self.d();
         let mut stats = Vec::with_capacity(d + 1);
+        let a = self.design.dense_mut().expect("center-scale is dense-only");
         for j in 0..d {
             let mut mean = 0.0;
-            for i in 0..self.a.rows {
-                mean += self.a.at(i, j);
+            for i in 0..a.rows {
+                mean += a.at(i, j);
             }
             mean /= n;
             let mut var = 0.0;
-            for i in 0..self.a.rows {
-                let v = self.a.at(i, j) - mean;
+            for i in 0..a.rows {
+                let v = a.at(i, j) - mean;
                 var += v * v;
             }
             var /= n;
             let std = var.sqrt().max(1e-300);
-            for i in 0..self.a.rows {
-                let v = self.a.at(i, j);
-                *self.a.at_mut(i, j) = (v - mean) / std;
+            for i in 0..a.rows {
+                let v = a.at(i, j);
+                *a.at_mut(i, j) = (v - mean) / std;
             }
             stats.push((mean, std));
         }
@@ -201,13 +331,7 @@ mod tests {
     #[test]
     fn objective_matches_manual() {
         let a = Mat::from_vec(2, 1, vec![1.0, 2.0]);
-        let ds = Dataset {
-            name: "t".into(),
-            a,
-            csr: None,
-            b: vec![1.0, 0.0],
-            x_star_planted: None,
-        };
+        let ds = Dataset::dense("t", a, vec![1.0, 0.0], None);
         // x = 1 -> residuals (0, 2) -> f = 4
         assert!((ds.objective(&[1.0]) - 4.0).abs() < 1e-12);
     }
@@ -215,20 +339,14 @@ mod tests {
     #[test]
     fn row_blocks_expose_a_without_copying() {
         let mut rng = Rng::new(2);
-        let ds = Dataset {
-            name: "t".into(),
-            a: Mat::gaussian(10, 2, &mut rng),
-            csr: None,
-            b: vec![0.0; 10],
-            x_star_planted: None,
-        };
+        let ds = Dataset::dense("t", Mat::gaussian(10, 2, &mut rng), vec![0.0; 10], None);
         let view = ds.row_blocks(Some(4));
         assert_eq!(view.num_blocks(), 3);
         let covered: usize = view.iter().map(|blk| blk.rows).sum();
         assert_eq!(covered, ds.n());
         assert!(std::ptr::eq(
             view.block(0).data.as_ptr(),
-            ds.a.row(0).as_ptr()
+            ds.dense_if_ready().unwrap().row(0).as_ptr()
         ));
         // heuristic variant resolves to a valid tiling too
         assert!(ds.row_blocks(None).num_blocks() >= 1);
@@ -240,7 +358,7 @@ mod tests {
     }
 
     #[test]
-    fn sparse_dataset_routes_csr_and_mirrors_dense() {
+    fn sparse_dataset_routes_csr_without_a_mirror() {
         let mut rng = Rng::new(3);
         let dense = Mat::from_fn(12, 4, |_, _| {
             if rng.uniform() < 0.4 {
@@ -254,14 +372,17 @@ mod tests {
         let nnz = csr.nnz();
         let ds = Dataset::from_csr("sp", csr, b.clone(), None);
         assert!(ds.is_sparse());
-        assert_eq!(ds.a, dense, "dense mirror must match the CSR payload");
+        assert!(
+            ds.dense_if_ready().is_none(),
+            "the dense mirror must NOT exist until requested"
+        );
         assert_eq!(ds.nnz(), nnz);
         assert!(ds.density() < 1.0);
         let x = rng.gaussians(4);
         let f_sparse = ds.objective(&x);
         let f_dense = blas::residual_sq(&dense, &b, &x);
         assert!((f_sparse - f_dense).abs() < 1e-10 * (1.0 + f_dense));
-        // row helpers agree with the dense mirror
+        // row helpers agree with the dense data
         for i in 0..12 {
             assert!((ds.row_dot(i, &x) - blas::dot(dense.row(i), &x)).abs() < 1e-12);
         }
@@ -269,6 +390,12 @@ mod tests {
         let view = ds.csr_blocks(Some(3)).unwrap();
         let covered: usize = view.iter().map(|b| b.rows).sum();
         assert_eq!(covered, 12);
+        // the capability call materializes the exact dense twin, once
+        let budget = crate::util::mem::MemBudget::unlimited();
+        let m = ds.materialize_dense(&budget, "test").unwrap();
+        assert_eq!(*m, dense);
+        assert_eq!(budget.densify_events(), 1);
+        assert!(ds.dense_if_ready().is_some());
     }
 
     #[test]
@@ -279,16 +406,11 @@ mod tests {
             *a.at_mut(i, 1) = a.at(i, 1) * 100.0 + 5.0; // wildly scaled col
         }
         let b: Vec<f64> = (0..500).map(|_| rng.gaussian() * 10.0 + 3.0).collect();
-        let mut ds = Dataset {
-            name: "t".into(),
-            a,
-            csr: None,
-            b,
-            x_star_planted: None,
-        };
+        let mut ds = Dataset::dense("t", a, b, None);
         ds.normalize();
+        let a = ds.dense_if_ready().unwrap();
         for j in 0..3 {
-            let col = ds.a.col(j);
+            let col = a.col(j);
             let mean = col.iter().sum::<f64>() / 500.0;
             let var = col.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / 500.0;
             assert!(mean.abs() < 1e-10);
@@ -299,20 +421,77 @@ mod tests {
     }
 
     #[test]
-    fn normalize_drops_csr_payload() {
+    fn normalize_on_csr_preserves_sparsity() {
         let mut rng = Rng::new(4);
-        let dense = Mat::from_fn(50, 3, |_, _| {
+        let dense = Mat::from_fn(200, 4, |_, _| {
+            if rng.uniform() < 0.3 {
+                rng.gaussian() * 50.0
+            } else {
+                0.0
+            }
+        });
+        let b: Vec<f64> = (0..200).map(|_| rng.gaussian() * 7.0).collect();
+        let mut ds = Dataset::from_csr("sp", CsrMat::from_dense(&dense), b, None);
+        let nnz = ds.nnz();
+        let stats = ds.normalize(); // routes to scale-only for CSR
+        assert!(ds.is_sparse(), "normalization must NOT densify CSR data");
+        assert_eq!(ds.nnz(), nnz, "sparsity structure preserved");
+        assert!(ds.dense_if_ready().is_none(), "still no mirror");
+        // every column now has unit RMS over all n entries (zeros included)
+        let c = ds.csr().unwrap();
+        let mut sumsq = vec![0.0; 4];
+        for (j, v) in c.indices.iter().zip(&c.values) {
+            sumsq[*j as usize] += v * v;
+        }
+        for (j, sq) in sumsq.iter().enumerate() {
+            assert!(((sq / 200.0).sqrt() - 1.0).abs() < 1e-12, "col {j}");
+        }
+        let brms = (ds.b.iter().map(|v| v * v).sum::<f64>() / 200.0).sqrt();
+        assert!((brms - 1.0).abs() < 1e-12);
+        // reported stats: zero means, positive scales
+        assert!(stats.iter().all(|&(m, s)| m == 0.0 && s > 0.0));
+    }
+
+    #[test]
+    fn scale_only_parity_with_dense_twin() {
+        let mut rng = Rng::new(9);
+        let dense = Mat::from_fn(300, 5, |_, _| {
+            if rng.uniform() < 0.25 {
+                rng.gaussian() * 10.0
+            } else {
+                0.0
+            }
+        });
+        let b = rng.gaussians(300);
+        let mut sp = Dataset::from_csr("sp", CsrMat::from_dense(&dense), b.clone(), None);
+        let mut dn = Dataset::dense("dn", dense, b, None);
+        let s1 = sp.normalize_scale_only();
+        let s2 = dn.normalize_scale_only();
+        assert_eq!(s1, s2, "identical scales on both representations");
+        let sp_dense = sp.dense_clone();
+        let dn_dense = dn.dense_clone();
+        assert!(
+            sp_dense.max_abs_diff(&dn_dense) < 1e-12,
+            "scale-only CSR must match its dense twin"
+        );
+        assert_eq!(sp.b, dn.b);
+        assert!(sp.is_sparse());
+    }
+
+    #[test]
+    fn row_mean_sq_routes_by_representation() {
+        let mut rng = Rng::new(11);
+        let dense = Mat::from_fn(40, 3, |_, _| {
             if rng.uniform() < 0.5 {
                 rng.gaussian()
             } else {
                 0.0
             }
         });
-        let b = rng.gaussians(50);
-        let mut ds = Dataset::from_csr("sp", CsrMat::from_dense(&dense), b, None);
-        assert!(ds.is_sparse());
-        ds.normalize();
-        assert!(!ds.is_sparse(), "centering densifies");
-        assert_eq!(ds.density(), 1.0);
+        let b = vec![0.0; 40];
+        let sp = Dataset::from_csr("sp", CsrMat::from_dense(&dense), b.clone(), None);
+        let dn = Dataset::dense("dn", dense, b, None);
+        // zeros are exact no-ops in the sum, so the two agree bitwise
+        assert_eq!(sp.row_mean_sq().to_bits(), dn.row_mean_sq().to_bits());
     }
 }

@@ -40,7 +40,8 @@ pub struct SparseSpec {
     pub signal_scale: f64,
 }
 
-/// Generate a sparse dataset: CSR payload + dense mirror + planted x*.
+/// Generate a sparse dataset: CSR payload + planted x* (no dense mirror —
+/// a dense view is a budget-accounted capability request, DESIGN.md §11).
 pub fn generate_sparse(spec: &SparseSpec, rng: &mut Rng) -> Dataset {
     let (n, d) = (spec.n, spec.d);
     assert!(n > d && d >= 2, "need n > d >= 2");
@@ -143,7 +144,7 @@ mod tests {
         // 0.1 * 20 = 2 entries per row exactly
         assert_eq!(ds.nnz(), 400 * 2);
         assert!((ds.density() - 0.1).abs() < 1e-12);
-        let csr = ds.csr.as_ref().unwrap();
+        let csr = ds.csr().unwrap();
         for i in 0..ds.n() {
             assert_eq!(csr.row_nnz(i), 2, "row {i}");
         }
@@ -154,9 +155,8 @@ mod tests {
         let s = spec(200, 12, 0.25, 1e4);
         let d1 = generate_sparse(&s, &mut Rng::new(7));
         let d2 = generate_sparse(&s, &mut Rng::new(7));
-        assert_eq!(d1.csr, d2.csr);
+        assert_eq!(d1.csr(), d2.csr());
         assert_eq!(d1.b, d2.b);
-        assert_eq!(d1.a, d2.a);
     }
 
     #[test]
@@ -170,7 +170,7 @@ mod tests {
         assert!(gt.f_star.is_finite() && gt.f_star >= 0.0);
         assert!(gt.x_star.iter().all(|v| v.is_finite()));
         // every column is covered (rows 0..d guarantee it)
-        let csr = ds.csr.as_ref().unwrap();
+        let csr = ds.csr().unwrap();
         let mut seen = vec![false; 20];
         for &c in &csr.indices {
             seen[c as usize] = true;
@@ -183,8 +183,8 @@ mod tests {
         let mut rng = Rng::new(3);
         let tame = generate_sparse(&spec(600, 10, 0.5, 1.0), &mut rng);
         let harsh = generate_sparse(&spec(600, 10, 0.5, 1e6), &mut rng);
-        let k_tame = eigen::cond(&tame.a);
-        let k_harsh = eigen::cond(&harsh.a);
+        let k_tame = eigen::cond(&tame.dense_clone());
+        let k_harsh = eigen::cond(&harsh.dense_clone());
         assert!(k_tame < 100.0, "kappa=1 generated cond {k_tame}");
         assert!(
             k_harsh > 1e3 * k_tame,

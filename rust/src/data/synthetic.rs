@@ -91,13 +91,7 @@ pub fn generate(spec: &SynSpec, rng: &mut Rng) -> Dataset {
     for v in &mut b {
         *v += spec.noise * rng.gaussian();
     }
-    Dataset {
-        name: spec.name.clone(),
-        a,
-        csr: None,
-        b,
-        x_star_planted: Some(x_star),
-    }
+    Dataset::dense(spec.name.clone(), a, b, Some(x_star))
 }
 
 /// d singular values log-spaced from 1 down to 1/kappa.
@@ -136,7 +130,7 @@ mod tests {
             signal_scale: 1.0,
         };
         let ds = generate(&spec, &mut rng);
-        let kappa = eigen::cond(&ds.a);
+        let kappa = eigen::cond(ds.dense_if_ready().unwrap());
         assert!(
             (kappa / 1e4 - 1.0).abs() < 1e-6,
             "kappa {kappa} (target 1e4)"
@@ -176,7 +170,7 @@ mod tests {
         let spec = SynSpec::syn2(128);
         let d1 = generate(&spec, &mut Rng::new(5));
         let d2 = generate(&spec, &mut Rng::new(5));
-        assert_eq!(d1.a, d2.a);
+        assert_eq!(d1.dense_clone(), d2.dense_clone());
         assert_eq!(d1.b, d2.b);
     }
 }

@@ -34,7 +34,7 @@ pub fn year(n: usize, rng: &mut Rng) -> Dataset {
     let boosted = (n / 20).max(1);
     for _ in 0..boosted {
         let i = rng.below(n);
-        for v in ds.a.row_mut(i) {
+        for v in ds.dense_mut().expect("dense generator").row_mut(i) {
             *v *= 3.0;
         }
         ds.b[i] *= 3.0;
@@ -59,7 +59,7 @@ pub fn buzz(n: usize, rng: &mut Rng) -> Dataset {
     // heavy-tailed (log-normal, sigma = 2) row scales: social-media counts
     for i in 0..n {
         let s = (2.0 * rng.gaussian()).exp();
-        for v in ds.a.row_mut(i) {
+        for v in ds.dense_mut().expect("dense generator").row_mut(i) {
             *v *= s;
         }
         ds.b[i] *= s;
@@ -113,7 +113,7 @@ mod tests {
         let ds = year(2000, &mut rng);
         assert_eq!(ds.d(), 90);
         assert_eq!(ds.n(), 2000);
-        let kappa = eigen::cond(&ds.a);
+        let kappa = eigen::cond(ds.dense_if_ready().unwrap());
         // row boosting perturbs the exact 3e3; stay within a factor ~3
         assert!(kappa > 1e3 && kappa < 1e4, "kappa {kappa}");
     }
@@ -123,11 +123,11 @@ mod tests {
         let mut rng = Rng::new(2);
         let ds = buzz(2000, &mut rng);
         assert_eq!(ds.d(), 77);
-        let norms: Vec<f64> = (0..ds.n()).map(|i| blas::nrm2(ds.a.row(i))).collect();
+        let norms: Vec<f64> = (0..ds.n()).map(|i| blas::nrm2(ds.dense_if_ready().unwrap().row(i))).collect();
         let mean = norms.iter().sum::<f64>() / norms.len() as f64;
         let max = norms.iter().cloned().fold(0.0, f64::max);
         assert!(max / mean > 20.0, "leverage not heavy: {}", max / mean);
-        let kappa = eigen::cond(&ds.a);
+        let kappa = eigen::cond(ds.dense_if_ready().unwrap());
         assert!(kappa > 1e6, "kappa {kappa}");
     }
 

@@ -31,7 +31,8 @@ pub struct Table2Output {
 pub fn run(ctx: &ExpCtx) -> anyhow::Result<Table2Output> {
     let mut rng = Rng::new(ctx.seed);
     let ds = uci_sim::by_name("syn1", ctx.n, &mut rng).expect("syn1");
-    let gram = blas::gram(&ds.a);
+    let a = ds.dense_if_ready().expect("dense generator output");
+    let gram = blas::gram(a);
     let kappa_raw = {
         let evs = eigen::sym_eigenvalues(&gram);
         let lmin = evs.first().copied().unwrap_or(0.0).max(1e-300);
@@ -50,7 +51,7 @@ pub fn run(ctx: &ExpCtx) -> anyhow::Result<Table2Output> {
         let mut best_qr = f64::INFINITY;
         let mut kappa = f64::INFINITY;
         for _ in 0..ctx.trials.max(1) {
-            let pre = precondition(&ds.a, kind, s, &mut rng);
+            let pre = precondition(a, kind, s, &mut rng);
             best_sketch = best_sketch.min(pre.sketch_secs);
             best_qr = best_qr.min(pre.qr_secs);
             kappa = eigen::cond_preconditioned(&gram, &pre.r);

@@ -197,6 +197,38 @@ impl CsrMat {
         g
     }
 
+    /// `A^T v` in O(nnz) — the transpose product CGLS ground truth needs
+    /// (never forms A^T A, never densifies).
+    pub fn t_mul_vec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, v.len());
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            self.row_axpy(i, v[i], &mut out);
+        }
+        out
+    }
+
+    /// The padded `[A | b]` FWHT buffer built straight from CSR in ONE
+    /// allocation — the HD transform's entry point for sparse datasets, so
+    /// step 2 materializes only the padded buffer it is about to transform
+    /// (the FWHT densifies in its first butterfly round regardless) and
+    /// never a standalone dense mirror. Mirrors `Mat::hstack_col_padded`.
+    pub fn hstack_col_padded(&self, col: &[f64], rows_out: usize) -> Mat {
+        assert_eq!(self.rows, col.len());
+        assert!(rows_out >= self.rows);
+        let d = self.cols;
+        let mut out = Mat::zeros(rows_out, d + 1);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let orow = out.row_mut(i);
+            for (c, v) in cols.iter().zip(vals) {
+                orow[*c as usize] = *v;
+            }
+            orow[d] = col[i];
+        }
+        out
+    }
+
     /// `A B` for a dense `cols x k` right factor — O(nnz * k). Used for the
     /// JL leverage-score projection `A (R^{-1} G)` in pwSGD.
     pub fn spmm_dense(&self, b: &Mat) -> Mat {
@@ -306,6 +338,33 @@ mod tests {
         for (u, w) in got.iter().zip(&want) {
             assert!((u - w).abs() < 1e-10, "{u} vs {w}");
         }
+    }
+
+    #[test]
+    fn t_mul_vec_matches_dense_transpose_product() {
+        let a = sparse_dense(50, 6, 0.3, 12);
+        let csr = CsrMat::from_dense(&a);
+        let mut rng = Rng::new(13);
+        let v = rng.gaussians(50);
+        let got = csr.t_mul_vec(&v);
+        let want: Vec<f64> = (0..6)
+            .map(|j| (0..50).map(|i| a.at(i, j) * v[i]).sum::<f64>())
+            .collect();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-10, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn hstack_col_padded_matches_dense_equivalent() {
+        let a = sparse_dense(37, 5, 0.3, 14);
+        let csr = CsrMat::from_dense(&a);
+        let mut rng = Rng::new(15);
+        let b = rng.gaussians(37);
+        let got = csr.hstack_col_padded(&b, 64);
+        let want = a.hstack_col_padded(&b, 64);
+        assert_eq!(got, want, "CSR-built padded buffer must equal the dense one");
+        assert_eq!((got.rows, got.cols), (64, 6));
     }
 
     #[test]

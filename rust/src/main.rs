@@ -101,7 +101,11 @@ fn cmd_solve(argv: &[String]) -> i32 {
         .opt("eta", "fixed step size (default: theory)")
         .opt("executor", "default|native|auto|pjrt (per-request backend)")
         .opt("block-rows", "row-shard height for streamed setup (default auto)")
-        .flag_opt("normalize", "normalize the dataset first")
+        .opt(
+            "mem-mb",
+            "memory budget for dense materializations in MiB (0 = unlimited; HDPW_MEM_MB default)",
+        )
+        .flag_opt("normalize", "normalize the dataset first (scale-only on sparse data)")
         .flag_opt("reuse-precond", "reuse the preconditioner across trials via the artifact cache")
         .flag_opt("warm-start", "start trials after the first from the best iterate so far")
         .flag_opt("native", "force the native backend (skip PJRT artifacts)")
@@ -134,6 +138,9 @@ fn cmd_solve(argv: &[String]) -> i32 {
     // flags OR onto the env-driven defaults (HDPW_REUSE_PRECOND / _WARM_START)
     req.reuse_precond |= args.flag("reuse-precond");
     req.warm_start |= args.flag("warm-start");
+    if args.get("mem-mb").is_some() {
+        hdpw::util::mem::MemBudget::process().set_limit_mb(args.get_usize("mem-mb", 0));
+    }
 
     let backend = if args.flag("native") {
         Backend::native()
@@ -169,6 +176,12 @@ fn cmd_solve(argv: &[String]) -> i32 {
                         res.nnz, res.density
                     );
                 }
+                if res.mem_est_bytes > 0 || res.densify_events > 0 {
+                    println!(
+                        "mem        : est={}B peak={}B densify_events={}",
+                        res.mem_est_bytes, res.mem_peak_bytes, res.densify_events
+                    );
+                }
                 println!("f*         : {:.6e}", res.f_star);
                 println!("f(best)    : {:.6e}", res.best_f);
                 println!("rel error  : {:.3e}", res.best_rel_err);
@@ -201,6 +214,11 @@ fn cmd_serve(argv: &[String]) -> i32 {
             "precond-cache-mb",
             "preconditioner artifact cache budget in MiB (default 256)",
         )
+        .opt(
+            "mem-mb",
+            "hard memory budget for dense materializations in MiB (0 = unlimited; \
+             over-budget jobs get a structured error instead of OOMing a worker)",
+        )
         .flag_opt("stdio", "serve stdin/stdout instead of TCP")
         .flag_opt("native", "force the native backend");
     let args = parse_or_exit(&cmd, argv);
@@ -210,6 +228,11 @@ fn cmd_serve(argv: &[String]) -> i32 {
         Backend::auto()
     };
     let default_cache_mb = hdpw::precond::PrecondCache::default_budget() >> 20;
+    // --mem-mb re-limits the process budget (HDPW_MEM_MB default), which is
+    // the budget the coordinator's admission control and all solves charge
+    if args.get("mem-mb").is_some() {
+        hdpw::util::mem::MemBudget::process().set_limit_mb(args.get_usize("mem-mb", 0));
+    }
     let coord = Arc::new(Coordinator::new(
         backend,
         CoordinatorConfig {
@@ -220,6 +243,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
                 .get_usize("precond-cache-mb", default_cache_mb)
                 .max(1)
                 << 20,
+            ..CoordinatorConfig::default()
         },
     ));
     let result = if args.flag("stdio") {
@@ -389,6 +413,16 @@ fn cmd_bench_info(_argv: &[String]) -> i32 {
         } else {
             "off (paper protocol)"
         }
+    );
+    let mem = hdpw::util::mem::MemBudget::process();
+    println!(
+        "mem budget     : {} (HDPW_MEM_MB / --mem-mb), peak {} B, densify_events {}",
+        match mem.limit_bytes() {
+            Some(b) => format!("{} MiB", b >> 20),
+            None => "unlimited".into(),
+        },
+        mem.peak(),
+        mem.densify_events()
     );
     0
 }

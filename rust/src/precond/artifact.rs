@@ -1,13 +1,19 @@
 //! The two-step preconditioner reified as a shareable artifact.
 //!
-//! `precondition_with` / `hd_transform_with` *compute*; this module packages
-//! their outputs so acquisition can be separated from computation: a
-//! [`PrecondArtifact`] is immutable, lives behind `Arc`, and can be handed to
-//! any number of concurrent solves. The paper's amortization claim — one
+//! `precondition_with` / `hd_transform_ds_with` *compute*; this module
+//! packages their outputs so acquisition can be separated from computation:
+//! a [`PrecondArtifact`] is immutable, lives behind `Arc`, and can be handed
+//! to any number of concurrent solves. The paper's amortization claim — one
 //! sketch-QR + one Hadamard transform buys cheap iterations forever — only
 //! pays off if that artifact survives the solve that built it; see
 //! [`super::cache`] for the keyed LRU that keeps it alive across trials and
 //! jobs.
+//!
+//! Construction is **memory-budgeted**: the HD step's padded buffer is the
+//! one dense object a sparse dataset ever materializes, and it goes through
+//! [`crate::util::mem::MemBudget`] — an over-budget request fails with a
+//! structured error the serve loop reports, instead of OOM-killing a
+//! worker. Step-1-only artifacts on CSR data charge (and densify) nothing.
 //!
 //! Two construction paths with different RNG contracts:
 //!
@@ -22,12 +28,13 @@
 //!   ([`PrecondArtifact::with_hd`]) without replaying the sketch draws.
 
 use super::cache::PrecondKey;
-use super::{hd_transform_with, precondition_ds_with, HdTransformed, Precondition};
+use super::{hd_transform_ds_with, precondition_ds_budgeted, HdTransformed, Precondition};
 use crate::backend::Backend;
 use crate::data::Dataset;
 use crate::linalg::Mat;
 use crate::prox::metric::MetricProjector;
 use crate::sketch::SketchKind;
+use crate::util::mem::{MemBudget, MemCharge, MemError};
 use crate::util::rng::Rng;
 use std::sync::{Arc, Mutex};
 
@@ -41,6 +48,10 @@ pub struct HdParts {
     /// Padded row count (the sampling universe size).
     pub n_pad: usize,
     pub secs: f64,
+    /// Budget charge covering the resident HD data (kept alive as long as
+    /// the artifact is — a cached artifact's HD bytes stay accounted until
+    /// eviction drops it). `None` when built through an uncharged entry.
+    pub mem: Option<Arc<MemCharge>>,
 }
 
 /// Construction metadata: what was sampled and what it cost (Table 2).
@@ -97,6 +108,7 @@ impl PrecondArtifact {
                 hdb: h.hdb,
                 n_pad: h.n_pad,
                 secs: h.secs,
+                mem: h.mem,
             }),
             metric: Mutex::new(None),
         }
@@ -105,8 +117,11 @@ impl PrecondArtifact {
     /// Paper-fidelity construction: consume `rng` exactly as the pre-driver
     /// solvers did (sketch first, then HD signs when `with_hd`). Sparse
     /// datasets route the sketch through the O(nnz) CSR pipeline; the HD
-    /// transform reads the dense mirror (the FWHT densifies regardless —
-    /// see DESIGN.md §10).
+    /// transform charges its padded buffer against `budget` and — on CSR —
+    /// builds it straight from the sparse payload (no dense mirror, see
+    /// DESIGN.md §11). Over budget: `Err`, with the sketch draws already
+    /// consumed (the failed solve is abandoned anyway).
+    #[allow(clippy::too_many_arguments)]
     pub fn compute_inline(
         backend: &Backend,
         ds: &Dataset,
@@ -115,10 +130,17 @@ impl PrecondArtifact {
         rng: &mut Rng,
         block_rows: Option<usize>,
         with_hd: bool,
-    ) -> PrecondArtifact {
-        let pre = precondition_ds_with(backend, ds, kind, sketch_rows, rng, block_rows);
-        let hd = with_hd.then(|| hd_transform_with(backend, &ds.a, &ds.b, rng));
-        PrecondArtifact::from_parts(pre, hd)
+        budget: &Arc<MemBudget>,
+    ) -> Result<PrecondArtifact, MemError> {
+        let pre =
+            precondition_ds_budgeted(backend, ds, kind, sketch_rows, rng, block_rows, budget)?;
+        let hd = if with_hd {
+            let stage = format!("hd_transform[{}]", ds.name);
+            Some(hd_transform_ds_with(backend, ds, rng, budget, &stage)?)
+        } else {
+            None
+        };
+        Ok(PrecondArtifact::from_parts(pre, hd))
     }
 
     /// Independent rng streams derived from the cache key: forking in a
@@ -140,18 +162,25 @@ impl PrecondArtifact {
         key: &PrecondKey,
         block_rows: Option<usize>,
         with_hd: bool,
-    ) -> PrecondArtifact {
+        budget: &Arc<MemBudget>,
+    ) -> Result<PrecondArtifact, MemError> {
         let (mut sketch_rng, mut hd_rng) = PrecondArtifact::keyed_rngs(key);
-        let pre = precondition_ds_with(
+        let pre = precondition_ds_budgeted(
             backend,
             ds,
             key.sketch,
             key.sketch_rows,
             &mut sketch_rng,
             block_rows,
-        );
-        let hd = with_hd.then(|| hd_transform_with(backend, &ds.a, &ds.b, &mut hd_rng));
-        PrecondArtifact::from_parts(pre, hd)
+            budget,
+        )?;
+        let hd = if with_hd {
+            let stage = format!("hd_transform[{}]", ds.name);
+            Some(hd_transform_ds_with(backend, ds, &mut hd_rng, budget, &stage)?)
+        } else {
+            None
+        };
+        Ok(PrecondArtifact::from_parts(pre, hd))
     }
 
     /// Upgrade a step-1-only cached artifact with the HD transform, reusing
@@ -160,10 +189,17 @@ impl PrecondArtifact {
     /// `with_hd = true` would have produced.
     ///
     /// [`compute_keyed`]: PrecondArtifact::compute_keyed
-    pub fn with_hd(&self, backend: &Backend, ds: &Dataset, key: &PrecondKey) -> PrecondArtifact {
+    pub fn with_hd(
+        &self,
+        backend: &Backend,
+        ds: &Dataset,
+        key: &PrecondKey,
+        budget: &Arc<MemBudget>,
+    ) -> Result<PrecondArtifact, MemError> {
         let (_, mut hd_rng) = PrecondArtifact::keyed_rngs(key);
-        let hd = hd_transform_with(backend, &ds.a, &ds.b, &mut hd_rng);
-        PrecondArtifact {
+        let stage = format!("hd_transform[{}]", ds.name);
+        let hd = hd_transform_ds_with(backend, ds, &mut hd_rng, budget, &stage)?;
+        Ok(PrecondArtifact {
             r: self.r.clone(),
             pinv: self.pinv.clone(),
             hd: Some(HdParts {
@@ -171,10 +207,11 @@ impl PrecondArtifact {
                 hdb: hd.hdb,
                 n_pad: hd.n_pad,
                 secs: hd.secs,
+                mem: hd.mem,
             }),
             meta: self.meta,
             metric: Mutex::new(self.metric.lock().unwrap().clone()),
-        }
+        })
     }
 
     /// The shared R-metric projector (Step-6 quadratic subproblem), built on
@@ -213,19 +250,13 @@ impl PrecondArtifact {
 mod tests {
     use super::*;
     use crate::linalg::blas;
-    use crate::precond::precondition_with;
+    use crate::precond::{hd_transform_with, precondition_with};
 
     fn ds(n: usize, d: usize, seed: u64) -> Dataset {
         let mut rng = Rng::new(seed);
         let a = Mat::gaussian(n, d, &mut rng);
         let b = rng.gaussians(n);
-        Dataset {
-            name: "t".into(),
-            a,
-            csr: None,
-            b,
-            x_star_planted: None,
-        }
+        Dataset::dense("t", a, b, None)
     }
 
     fn key(seed: u64) -> PrecondKey {
@@ -240,6 +271,10 @@ mod tests {
         }
     }
 
+    fn unlimited() -> Arc<MemBudget> {
+        MemBudget::unlimited()
+    }
+
     #[test]
     fn inline_matches_legacy_rng_consumption() {
         // compute_inline must consume the caller rng exactly like the
@@ -247,11 +282,21 @@ mod tests {
         let d = ds(512, 6, 1);
         let be = Backend::native();
         let mut r1 = Rng::new(42);
-        let pre = precondition_with(&be, &d.a, SketchKind::CountSketch, 120, &mut r1, None);
-        let hd = hd_transform_with(&be, &d.a, &d.b, &mut r1);
+        let a_ref = d.dense_if_ready().unwrap();
+        let pre = precondition_with(&be, a_ref, SketchKind::CountSketch, 120, &mut r1, None);
+        let hd = hd_transform_with(&be, a_ref, &d.b, &mut r1);
         let mut r2 = Rng::new(42);
-        let art =
-            PrecondArtifact::compute_inline(&be, &d, SketchKind::CountSketch, 120, &mut r2, None, true);
+        let art = PrecondArtifact::compute_inline(
+            &be,
+            &d,
+            SketchKind::CountSketch,
+            120,
+            &mut r2,
+            None,
+            true,
+            &unlimited(),
+        )
+        .unwrap();
         assert_eq!(art.r.max_abs_diff(&pre.r), 0.0);
         let ahd = art.hd.as_ref().unwrap();
         assert_eq!(ahd.n_pad, hd.n_pad);
@@ -265,15 +310,16 @@ mod tests {
     fn keyed_is_a_pure_function_of_the_key() {
         let d = ds(300, 5, 2);
         let be = Backend::native();
-        let a1 = PrecondArtifact::compute_keyed(&be, &d, &key(9), None, true);
-        let a2 = PrecondArtifact::compute_keyed(&be, &d, &key(9), None, true);
+        let budget = unlimited();
+        let a1 = PrecondArtifact::compute_keyed(&be, &d, &key(9), None, true, &budget).unwrap();
+        let a2 = PrecondArtifact::compute_keyed(&be, &d, &key(9), None, true, &budget).unwrap();
         assert_eq!(a1.r.max_abs_diff(&a2.r), 0.0);
         assert_eq!(
             a1.hd.as_ref().unwrap().hda.max_abs_diff(&a2.hd.as_ref().unwrap().hda),
             0.0
         );
         // a different key seed samples a different sketch
-        let a3 = PrecondArtifact::compute_keyed(&be, &d, &key(10), None, false);
+        let a3 = PrecondArtifact::compute_keyed(&be, &d, &key(10), None, false, &budget).unwrap();
         assert!(a3.r.max_abs_diff(&a1.r) > 0.0);
     }
 
@@ -281,11 +327,12 @@ mod tests {
     fn with_hd_upgrade_equals_direct_keyed_compute() {
         let d = ds(300, 5, 3);
         let be = Backend::native();
+        let budget = unlimited();
         let k = key(4);
-        let plain = PrecondArtifact::compute_keyed(&be, &d, &k, None, false);
+        let plain = PrecondArtifact::compute_keyed(&be, &d, &k, None, false, &budget).unwrap();
         assert!(plain.hd.is_none());
-        let upgraded = plain.with_hd(&be, &d, &k);
-        let direct = PrecondArtifact::compute_keyed(&be, &d, &k, None, true);
+        let upgraded = plain.with_hd(&be, &d, &k, &budget).unwrap();
+        let direct = PrecondArtifact::compute_keyed(&be, &d, &k, None, true, &budget).unwrap();
         assert_eq!(upgraded.r.max_abs_diff(&direct.r), 0.0);
         let (u, v) = (upgraded.hd.as_ref().unwrap(), direct.hd.as_ref().unwrap());
         assert_eq!(u.n_pad, v.n_pad);
@@ -294,10 +341,59 @@ mod tests {
     }
 
     #[test]
+    fn hd_bytes_stay_charged_while_artifact_lives() {
+        let d = ds(300, 5, 7);
+        let be = Backend::native();
+        let budget = unlimited();
+        let art =
+            PrecondArtifact::compute_keyed(&be, &d, &key(5), None, true, &budget).unwrap();
+        let n_pad = 300usize.next_power_of_two();
+        assert_eq!(budget.used(), n_pad * 6 * 8, "HD buffer stays accounted");
+        drop(art);
+        assert_eq!(budget.used(), 0, "released with the artifact");
+    }
+
+    #[test]
+    fn over_budget_hd_is_a_structured_error() {
+        let d = ds(512, 6, 8);
+        let be = Backend::native();
+        let tight = MemBudget::with_limit_mb(1);
+        let _hog = tight.try_charge((1 << 20) - 128, "hog").unwrap();
+        let mut rng = Rng::new(1);
+        let err = PrecondArtifact::compute_inline(
+            &be,
+            &d,
+            SketchKind::CountSketch,
+            120,
+            &mut rng,
+            None,
+            true,
+            &tight,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("memory budget exceeded"), "{err}");
+        // a step-1-only request charges nothing and cannot fail
+        let mut rng2 = Rng::new(1);
+        let art = PrecondArtifact::compute_inline(
+            &be,
+            &d,
+            SketchKind::CountSketch,
+            120,
+            &mut rng2,
+            None,
+            false,
+            &tight,
+        )
+        .unwrap();
+        assert!(art.hd.is_none());
+    }
+
+    #[test]
     fn metric_is_built_once_and_shared() {
         let d = ds(256, 4, 5);
         let be = Backend::native();
-        let art = PrecondArtifact::compute_keyed(&be, &d, &key(1), None, false);
+        let art =
+            PrecondArtifact::compute_keyed(&be, &d, &key(1), None, false, &unlimited()).unwrap();
         let m1 = art.metric();
         let m2 = art.metric();
         assert!(Arc::ptr_eq(&m1, &m2));
@@ -316,14 +412,15 @@ mod tests {
     fn bytes_accounts_for_hd_payload() {
         let d = ds(256, 4, 6);
         let be = Backend::native();
-        let plain = PrecondArtifact::compute_keyed(&be, &d, &key(2), None, false);
-        let full = PrecondArtifact::compute_keyed(&be, &d, &key(2), None, true);
+        let budget = unlimited();
+        let plain = PrecondArtifact::compute_keyed(&be, &d, &key(2), None, false, &budget).unwrap();
+        let full = PrecondArtifact::compute_keyed(&be, &d, &key(2), None, true, &budget).unwrap();
         assert!(full.bytes() > plain.bytes());
         // hd payload dominates: n_pad x (d) + n_pad doubles
         let hd = full.hd.as_ref().unwrap();
         assert!(full.bytes() - plain.bytes() == (hd.hda.data.len() + hd.hdb.len()) * 8);
         // sanity: the preconditioner actually conditions
-        let g = blas::gram(&d.a);
+        let g = blas::gram(d.dense_if_ready().unwrap());
         let kappa = crate::linalg::eigen::cond_preconditioned(&g, &full.r);
         assert!(kappa < 5.0, "kappa {kappa}");
     }

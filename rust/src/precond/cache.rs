@@ -171,6 +171,35 @@ impl PrecondCache {
         PrecondCache::new(PrecondCache::default_budget())
     }
 
+    /// Evict the coldest entry — the coordinator's memory-pressure
+    /// shedding hook (admission control calls this when a job's
+    /// materialization would not fit while cached artifacts pin budget
+    /// bytes). Unlike insert-driven eviction this may remove the newest
+    /// (only) entry: under memory pressure an idle artifact is worth less
+    /// than an admittable job. Returns false when the cache is empty.
+    /// Counted in the eviction counter like any other eviction.
+    pub fn evict_coldest(&self) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.order.is_empty() {
+            return false;
+        }
+        let victim = g.order.remove(0);
+        if let Some(a) = g.map.remove(&victim) {
+            g.bytes = g.bytes.saturating_sub(a.bytes());
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        true
+    }
+
+    /// Counter-neutral peek for the coordinator's admission control:
+    /// whether `key` is resident, and with its HD parts. Touches neither
+    /// the hit/miss counters nor the LRU order — the dashboards' cache
+    /// health must reflect solves, not admission probes.
+    pub fn peek_has_hd(&self, key: &PrecondKey) -> Option<bool> {
+        let g = self.inner.lock().unwrap();
+        g.map.get(key).map(|a| a.hd.is_some())
+    }
+
     /// Look up an artifact; records a hit (and refreshes recency) or a miss.
     pub fn get(&self, key: &PrecondKey) -> Option<Arc<PrecondArtifact>> {
         let mut g = self.inner.lock().unwrap();
@@ -308,20 +337,18 @@ mod tests {
         let mut rng = Rng::new(seed);
         let a = Mat::gaussian(256, 4, &mut rng);
         let b = rng.gaussians(256);
-        let ds = Dataset {
-            name: "t".into(),
-            a,
-            csr: None,
-            b,
-            x_star_planted: None,
-        };
-        Arc::new(PrecondArtifact::compute_keyed(
-            &Backend::native(),
-            &ds,
-            &key(seed),
-            None,
-            with_hd,
-        ))
+        let ds = Dataset::dense("t", a, b, None);
+        Arc::new(
+            PrecondArtifact::compute_keyed(
+                &Backend::native(),
+                &ds,
+                &key(seed),
+                None,
+                with_hd,
+                &crate::util::mem::MemBudget::unlimited(),
+            )
+            .unwrap(),
+        )
     }
 
     fn key(seed: u64) -> PrecondKey {

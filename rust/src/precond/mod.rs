@@ -18,8 +18,10 @@ use crate::backend::Backend;
 use crate::data::Dataset;
 use crate::linalg::{qr, tri, CsrMat, Mat};
 use crate::sketch::SketchKind;
+use crate::util::mem::{MemBudget, MemCharge, MemError};
 use crate::util::rng::Rng;
 use crate::util::stats::Timer;
+use std::sync::Arc;
 
 /// Output of step 1: the triangular preconditioner + timing for Table 2.
 pub struct Precondition {
@@ -131,10 +133,57 @@ pub fn precondition_ds_with(
     rng: &mut Rng,
     block_rows: Option<usize>,
 ) -> Precondition {
-    match &ds.csr {
+    match ds.csr() {
         Some(c) => precondition_csr_with(backend, c, kind, sketch_rows, rng, block_rows),
-        None => precondition_with(backend, &ds.a, kind, sketch_rows, rng, block_rows),
+        None => precondition_with(
+            backend,
+            ds.dense_if_ready().expect("dense dataset"),
+            kind,
+            sketch_rows,
+            rng,
+            block_rows,
+        ),
     }
+}
+
+/// [`precondition_ds_with`] with the whole-matrix-densifying sketch (SRHT —
+/// its Hadamard butterfly needs every row at once, DESIGN.md §10) routed
+/// through the memory budget: the transient dense view is acquired as a
+/// drop-after-use capability ([`Dataset::dense_scoped`]) — charged, counted
+/// as a densify event, released right after the sketch — instead of the
+/// untracked `to_dense()` inside the sketch-layer fallback. Numerically
+/// identical (both paths reduce to `sk.apply(dense)` on the same matrix);
+/// over budget it fails with the structured error. Streaming kinds
+/// (CountSketch, SparseEmbed, per-shard Gaussian) charge nothing and take
+/// the plain O(nnz) route. Used by artifact construction; IHS's in-step
+/// `fresh_precond` keeps the infallible transient fallback (its `step`
+/// cannot propagate errors — a documented gap, acceptable because IHS's
+/// per-iteration re-sketch is an explicitly chosen workload, not a serve
+/// default).
+pub fn precondition_ds_budgeted(
+    backend: &Backend,
+    ds: &Dataset,
+    kind: SketchKind,
+    sketch_rows: usize,
+    rng: &mut Rng,
+    block_rows: Option<usize>,
+    budget: &Arc<MemBudget>,
+) -> Result<Precondition, MemError> {
+    if kind == SketchKind::Srht && ds.is_sparse() {
+        let stage = format!("srht_sketch[{}]", ds.name);
+        let view = ds.dense_scoped(budget, &stage)?;
+        return Ok(precondition_with(
+            backend,
+            &view,
+            kind,
+            sketch_rows,
+            rng,
+            block_rows,
+        ));
+    }
+    Ok(precondition_ds_with(
+        backend, ds, kind, sketch_rows, rng, block_rows,
+    ))
 }
 
 /// Step 2: the Randomized Hadamard Transform applied to [A | b] packed as an
@@ -150,6 +199,11 @@ pub struct HdTransformed {
     /// padded row count (sampling universe size)
     pub n_pad: usize,
     pub secs: f64,
+    /// The budget charge covering the transformed buffer — held for as long
+    /// as the HD data is resident (it rides into `HdParts`, so a cached
+    /// artifact keeps its HD bytes accounted until eviction). `None` on the
+    /// uncharged `hd_transform_with` convenience entry.
+    pub mem: Option<Arc<MemCharge>>,
 }
 
 /// Backend-routed HD transform. Memory discipline: the padded [A | b] FWHT
@@ -178,7 +232,60 @@ pub fn hd_transform_with(
         hdb,
         n_pad,
         secs: t.secs(),
+        mem: None,
     }
+}
+
+/// Bytes of the padded `[A | b]` FWHT buffer for an `n x d` dataset — the
+/// ONE formula shared by the actual charge ([`hd_transform_ds_with`]) and
+/// the coordinator's admission estimate, so the gate and the capability can
+/// never drift apart.
+pub fn hd_buffer_bytes(n: usize, d: usize) -> usize {
+    n.next_power_of_two() * (d + 1) * std::mem::size_of::<f64>()
+}
+
+/// Representation-aware, budget-accounted HD transform for a [`Dataset`]
+/// (the serve-path entry every artifact construction routes through). The
+/// padded `[A | b]` buffer — the only dense object step 2 ever needs — is
+/// charged against `budget` *before* allocating and built in one
+/// allocation either from the dense payload (bit-identical to
+/// [`hd_transform_with`]) or **straight from CSR** — a sparse dataset's HD
+/// step never materializes a standalone dense mirror. Over budget it
+/// returns the structured [`MemError`] (a job error, never an OOM); on a
+/// CSR dataset the materialization is counted as one densify event tagged
+/// with `stage`.
+pub fn hd_transform_ds_with(
+    backend: &Backend,
+    ds: &Dataset,
+    rng: &mut Rng,
+    budget: &Arc<MemBudget>,
+    stage: &str,
+) -> Result<HdTransformed, MemError> {
+    assert_eq!(ds.n(), ds.b.len());
+    let t = Timer::start();
+    let n_pad = ds.n().next_power_of_two();
+    let bytes = hd_buffer_bytes(ds.n(), ds.d());
+    let charge = budget.try_charge(bytes, stage)?;
+    let mut padded = match ds.csr() {
+        Some(c) => {
+            budget.note_densify(stage, bytes);
+            c.hstack_col_padded(&ds.b, n_pad)
+        }
+        None => ds
+            .dense_if_ready()
+            .expect("dense dataset")
+            .hstack_col_padded(&ds.b, n_pad),
+    };
+    let signs = rng.signs(n_pad);
+    backend.hd_transform_mut(&mut padded, &signs);
+    let (hda, hdb) = padded.into_split_last_col();
+    Ok(HdTransformed {
+        hda,
+        hdb,
+        n_pad,
+        secs: t.secs(),
+        mem: Some(Arc::new(charge)),
+    })
 }
 
 /// Backend-less convenience wrapper (tests, one-off callers).
@@ -347,19 +454,114 @@ mod tests {
         let b = rng.gaussians(300);
         let csr = crate::linalg::CsrMat::from_dense(&dense);
         let ds_sparse = crate::data::Dataset::from_csr("sp", csr, b.clone(), None);
-        let ds_dense = crate::data::Dataset {
-            name: "dn".into(),
-            a: dense,
-            csr: None,
-            b,
-            x_star_planted: None,
-        };
+        let ds_dense = crate::data::Dataset::dense("dn", dense, b, None);
         let be = Backend::native();
         let mut r1 = Rng::new(5);
         let mut r2 = Rng::new(5);
         let ps = precondition_ds_with(&be, &ds_sparse, SketchKind::CountSketch, 80, &mut r1, None);
         let pd = precondition_ds_with(&be, &ds_dense, SketchKind::CountSketch, 80, &mut r2, None);
         assert!(ps.r.max_abs_diff(&pd.r) < 1e-10);
+        // step 1 on CSR never touches a dense view
+        assert!(ds_sparse.dense_if_ready().is_none());
+    }
+
+    #[test]
+    fn hd_transform_ds_is_charged_and_representation_aware() {
+        let mut rng = Rng::new(31);
+        let dense = Mat::from_fn(200, 6, |_, _| {
+            if rng.uniform() < 0.3 {
+                rng.gaussian()
+            } else {
+                0.0
+            }
+        });
+        let b = rng.gaussians(200);
+        let csr = crate::linalg::CsrMat::from_dense(&dense);
+        let ds_sparse = crate::data::Dataset::from_csr("sp", csr, b.clone(), None);
+        let ds_dense = crate::data::Dataset::dense("dn", dense.clone(), b.clone(), None);
+        let be = Backend::native();
+        let budget = crate::util::mem::MemBudget::unlimited();
+        // dense route is bit-identical to the plain entry point
+        let mut r1 = Rng::new(8);
+        let mut r2 = Rng::new(8);
+        let plain = hd_transform_with(&be, &dense, &b, &mut r1);
+        let via_ds = hd_transform_ds_with(&be, &ds_dense, &mut r2, &budget, "t").unwrap();
+        assert_eq!(plain.hda.max_abs_diff(&via_ds.hda), 0.0);
+        assert_eq!(plain.hdb, via_ds.hdb);
+        assert_eq!(budget.densify_events(), 0, "dense HD is not a densification");
+        // CSR route builds the padded buffer straight from CSR: same bits,
+        // one densify event, NO mirror left behind
+        let mut r3 = Rng::new(8);
+        let via_csr = hd_transform_ds_with(&be, &ds_sparse, &mut r3, &budget, "t").unwrap();
+        assert_eq!(via_csr.hda.max_abs_diff(&plain.hda), 0.0);
+        assert_eq!(via_csr.hdb, plain.hdb);
+        assert_eq!(budget.densify_events(), 1);
+        assert!(ds_sparse.dense_if_ready().is_none(), "no mirror materialized");
+        // the charge covers the padded buffer and releases with the result
+        let n_pad = 200usize.next_power_of_two();
+        assert_eq!(budget.used(), 2 * n_pad * 7 * 8, "both HD results resident");
+        drop(via_ds);
+        drop(via_csr);
+        assert_eq!(budget.used(), 0);
+        // over budget: structured error, nothing allocated or counted extra
+        let tight = crate::util::mem::MemBudget::with_limit_mb(1);
+        let _hog = tight.try_charge((1 << 20) - 64, "hog").unwrap();
+        let mut r4 = Rng::new(8);
+        let err = hd_transform_ds_with(&be, &ds_sparse, &mut r4, &tight, "hd").unwrap_err();
+        assert_eq!(err.stage, "hd");
+        assert_eq!(tight.densify_events(), 0);
+    }
+
+    #[test]
+    fn budgeted_srht_on_csr_is_a_tracked_scoped_densify() {
+        let mut rng = Rng::new(41);
+        let dense = Mat::from_fn(256, 6, |_, _| {
+            if rng.uniform() < 0.3 {
+                rng.gaussian()
+            } else {
+                0.0
+            }
+        });
+        let b = rng.gaussians(256);
+        let csr = crate::linalg::CsrMat::from_dense(&dense);
+        let ds = crate::data::Dataset::from_csr("sp", csr, b, None);
+        let be = Backend::native();
+        let budget = crate::util::mem::MemBudget::unlimited();
+        // same rng stream: the budgeted route equals the sketch-layer
+        // fallback bit for bit (both reduce to sk.apply on the same dense)
+        let mut r1 = Rng::new(9);
+        let p_plain = precondition_ds_with(&be, &ds, SketchKind::Srht, 64, &mut r1, None);
+        let mut r2 = Rng::new(9);
+        let p_budgeted =
+            precondition_ds_budgeted(&be, &ds, SketchKind::Srht, 64, &mut r2, None, &budget)
+                .unwrap();
+        assert_eq!(p_budgeted.r.max_abs_diff(&p_plain.r), 0.0);
+        // the transient view was charged, counted, and fully released
+        assert_eq!(budget.densify_events(), 1);
+        assert_eq!(budget.peak(), 256 * 6 * 8);
+        assert_eq!(budget.used(), 0, "scoped view released on drop");
+        assert!(ds.dense_if_ready().is_none(), "scoped view must not cache");
+        // streaming kinds charge nothing through the budgeted route
+        let mut r3 = Rng::new(9);
+        let _ = precondition_ds_budgeted(
+            &be,
+            &ds,
+            SketchKind::CountSketch,
+            64,
+            &mut r3,
+            None,
+            &budget,
+        )
+        .unwrap();
+        assert_eq!(budget.densify_events(), 1);
+        // over budget: structured error, never a panic
+        let tight = crate::util::mem::MemBudget::with_limit_mb(1);
+        let _hog = tight.try_charge((1 << 20) - 64, "hog").unwrap();
+        let mut r4 = Rng::new(9);
+        assert!(
+            precondition_ds_budgeted(&be, &ds, SketchKind::Srht, 64, &mut r4, None, &tight)
+                .is_err()
+        );
     }
 
     #[test]

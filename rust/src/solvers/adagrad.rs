@@ -7,6 +7,7 @@ use super::{Solver, SolveReport, SolverOpts};
 use crate::backend::Backend;
 use crate::data::Dataset;
 use crate::linalg::{blas, Mat};
+use anyhow::Result;
 
 pub struct Adagrad;
 
@@ -53,13 +54,14 @@ impl StepRule for AdagradRule {
         let ds = sess.ds;
         for _ in 0..t {
             let idx = sess.rng.indices(self.r, self.n);
-            let g = match &ds.csr {
+            let g = match ds.csr() {
                 // sparse row-gather gradient: O(nnz(batch)) — the G_t
                 // update stays dense (it is d-dimensional regardless)
                 Some(csr) => csr.batch_grad(&idx, &ds.b, &self.x, self.scale),
                 None => {
+                    let a = ds.dense_if_ready().expect("dense dataset");
                     for (row, &i) in idx.iter().enumerate() {
-                        self.mbuf.row_mut(row).copy_from_slice(ds.a.row(i));
+                        self.mbuf.row_mut(row).copy_from_slice(a.row(i));
                         self.vbuf[row] = ds.b[i];
                     }
                     blas::fused_grad(&self.mbuf, &self.vbuf, &self.x, self.scale)
@@ -83,7 +85,7 @@ impl Solver for Adagrad {
         "adagrad"
     }
 
-    fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport {
+    fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> Result<SolveReport> {
         drive(&mut AdagradRule::default(), backend, ds, opts)
     }
 }
@@ -103,13 +105,7 @@ mod tests {
         for v in &mut b {
             *v += 0.05 * rng.gaussian();
         }
-        Dataset {
-            name: "t".into(),
-            a,
-            csr: None,
-            b,
-            x_star_planted: Some(xt),
-        }
+        Dataset::dense("t", a, b, Some(xt))
     }
 
     #[test]
@@ -120,7 +116,7 @@ mod tests {
         opts.batch_size = 16;
         opts.max_iters = 6000;
         opts.chunk = 500;
-        let rep = Adagrad.solve(&Backend::native(), &ds, &opts);
+        let rep = Adagrad.solve(&Backend::native(), &ds, &opts).unwrap();
         let rel0 = (rep.trace[0].f - gt.f_star) / gt.f_star;
         let rel = (rep.f_final - gt.f_star) / gt.f_star;
         assert!(rel < 0.3 * rel0, "adagrad no progress: {rel} vs {rel0}");
@@ -143,20 +139,14 @@ mod tests {
         for v in &mut b {
             *v += 0.01 * rng.gaussian();
         }
-        let ds = Dataset {
-            name: "scaled".into(),
-            a,
-            csr: None,
-            b,
-            x_star_planted: None,
-        };
+        let ds = Dataset::dense("scaled", a, b, None);
         let gt = ground_truth(&ds);
         let mut opts = SolverOpts::default();
         opts.batch_size = 16;
         opts.max_iters = 3000;
         opts.chunk = 500;
-        let ada = Adagrad.solve(&Backend::native(), &ds, &opts);
-        let sgd = Sgd.solve(&Backend::native(), &ds, &opts);
+        let ada = Adagrad.solve(&Backend::native(), &ds, &opts).unwrap();
+        let sgd = Sgd.solve(&Backend::native(), &ds, &opts).unwrap();
         let rel_ada = (ada.f_final - gt.f_star) / gt.f_star.max(1e-12);
         let rel_sgd = (sgd.f_final - gt.f_star) / gt.f_star.max(1e-12);
         assert!(
@@ -173,7 +163,7 @@ mod tests {
         opts.constraint = cons;
         opts.max_iters = 200;
         opts.chunk = 100;
-        let rep = Adagrad.solve(&Backend::native(), &ds, &opts);
+        let rep = Adagrad.solve(&Backend::native(), &ds, &opts).unwrap();
         assert!(cons.contains(&rep.x, 1e-9));
     }
 }

@@ -15,6 +15,12 @@
 //! coordinator's [`PrecondCache`]: artifacts are keyed, sampled from
 //! key-derived rng streams (trial streams never observe cache state), and
 //! `setup_secs` collapses to the lookup cost on a hit.
+//!
+//! Acquisition is fallible: artifact construction materializes through the
+//! session's [`MemBudget`] (the HD transform's padded buffer — the only
+//! dense object a sparse dataset's setup ever builds), so an over-budget
+//! request propagates out of [`drive`] as a structured error the serve
+//! loop reports — never a panic, never an OOM.
 
 use super::{timed, SolveReport, SolverOpts, TraceRecorder};
 use crate::backend::Backend;
@@ -26,8 +32,10 @@ use crate::precond::{
 use crate::prox::metric::MetricProjector;
 use crate::prox::Constraint;
 use crate::sketch::default_sketch_size_for;
+use crate::util::mem::MemBudget;
 use crate::util::rng::Rng;
 use crate::util::stats::Timer;
+use anyhow::Result;
 use std::sync::Arc;
 
 /// Per-request session context threaded from the coordinator into
@@ -47,11 +55,42 @@ pub struct SessionCtx {
     pub artifact_seed: u64,
     /// Warm-start iterate (used only when `warm_start` is set).
     pub x0: Option<Vec<f64>>,
+    /// Memory budget charged by dense materializations (HD buffers, scoped
+    /// dense views). `None` = the process budget (`HDPW_MEM_MB`).
+    pub mem: Option<Arc<MemBudget>>,
 }
 
 impl SessionCtx {
     fn reuse_enabled(&self) -> bool {
         self.reuse_precond && self.cache.is_some() && self.dataset_id.is_some()
+    }
+}
+
+/// The cache key a job's artifacts live under — the ONE constructor shared
+/// by the session's acquisition path and the coordinator's cache-aware
+/// admission estimate, so the two can never drift apart.
+pub fn precond_key(
+    backend: &Backend,
+    ds: &Dataset,
+    opts: &SolverOpts,
+    dataset_id: String,
+    artifact_seed: u64,
+) -> PrecondKey {
+    let sketch_rows = opts
+        .sketch_size
+        .unwrap_or_else(|| default_sketch_size_for(ds.n(), ds.d(), opts.sketch));
+    PrecondKey {
+        dataset_id,
+        sketch: opts.sketch,
+        sketch_rows,
+        seed: artifact_seed,
+        block_rows: opts.block_rows.unwrap_or(0),
+        // artifacts are a function of the executing backend's numerics:
+        // per-request executors must not alias...
+        backend: (if backend.has_pjrt() { "pjrt" } else { "native" }).into(),
+        // ...and of the data representation: the CSR fold re-associates the
+        // sketch sum, so dense and sparse artifacts must not alias either
+        repr: ds.design.repr().tag().into(),
     }
 }
 
@@ -64,6 +103,9 @@ pub struct SolveSession<'a> {
     /// The per-trial stream (seeded from `opts.seed`); step rules draw
     /// batch indices etc. from here.
     pub rng: Rng,
+    /// The memory budget materializations charge (session override or the
+    /// process default).
+    mem: Arc<MemBudget>,
     /// Started lazily on the first acquisition, so solvers without a setup
     /// phase report exactly 0 — and a cache hit reports only lookup cost.
     setup_timer: Option<Timer>,
@@ -74,11 +116,17 @@ pub struct SolveSession<'a> {
 
 impl<'a> SolveSession<'a> {
     pub fn new(backend: &'a Backend, ds: &'a Dataset, opts: &'a SolverOpts) -> SolveSession<'a> {
+        let mem = opts
+            .session
+            .mem
+            .clone()
+            .unwrap_or_else(MemBudget::process);
         SolveSession {
             backend,
             ds,
             opts,
             rng: Rng::new(opts.seed),
+            mem,
             setup_timer: None,
             setup_secs: 0.0,
             outcome: CacheOutcome::Off,
@@ -93,6 +141,11 @@ impl<'a> SolveSession<'a> {
             .unwrap_or_else(|| default_sketch_size_for(self.ds.n(), self.ds.d(), self.opts.sketch))
     }
 
+    /// The memory budget this solve charges against.
+    pub fn mem(&self) -> &Arc<MemBudget> {
+        &self.mem
+    }
+
     fn touch_setup(&mut self) {
         if self.setup_timer.is_none() {
             self.setup_timer = Some(Timer::start());
@@ -101,58 +154,59 @@ impl<'a> SolveSession<'a> {
 
     /// Acquire the two-step preconditioner (with the HD transform when
     /// `with_hd`): cache-or-compute under reuse, inline from the session
-    /// rng otherwise. Runs on the setup clock.
-    pub fn precond(&mut self, with_hd: bool) -> Arc<PrecondArtifact> {
+    /// rng otherwise. Runs on the setup clock. Fails with the structured
+    /// memory-budget error when the HD materialization would bust the
+    /// budget (a step-1-only request on CSR charges nothing and cannot
+    /// fail this way).
+    pub fn precond(&mut self, with_hd: bool) -> Result<Arc<PrecondArtifact>> {
         self.touch_setup();
         let s = self.sketch_rows();
         let sc = &self.opts.session;
         if sc.reuse_enabled() {
-            let cache = sc.cache.as_ref().expect("reuse_enabled");
-            let key = PrecondKey {
-                dataset_id: sc.dataset_id.clone().expect("reuse_enabled"),
-                sketch: self.opts.sketch,
-                sketch_rows: s,
-                seed: sc.artifact_seed,
-                block_rows: self.opts.block_rows.unwrap_or(0),
-                // artifacts are a function of the executing backend's
-                // numerics: per-request executors must not alias
-                backend: (if self.backend.has_pjrt() { "pjrt" } else { "native" }).into(),
-                // ...and of the data representation: the CSR fold
-                // re-associates the sketch sum, so dense and sparse
-                // artifacts for the same dataset must not alias either
-                repr: (if self.ds.is_sparse() { "csr" } else { "dense" }).into(),
-            };
+            let cache = Arc::clone(sc.cache.as_ref().expect("reuse_enabled"));
+            let key = precond_key(
+                self.backend,
+                self.ds,
+                self.opts,
+                sc.dataset_id.clone().expect("reuse_enabled"),
+                sc.artifact_seed,
+            );
             loop {
                 match cache.lookup_or_claim(&key) {
                     Lookup::Found(art) => {
                         if !with_hd || art.hd.is_some() {
                             self.outcome = CacheOutcome::Hit;
-                            return art;
+                            return Ok(art);
                         }
                         // step-2 upgrade: the cached artifact lacks the HD
                         // parts; fill them from the key stream and re-insert.
                         // Step 1 (the expensive sketch-QR) is still reused,
                         // but the HD cost is real — reported as Upgrade, not
                         // Hit, so "hit == lookup cost" stays true.
-                        let art = Arc::new(art.with_hd(self.backend, self.ds, &key));
+                        let art =
+                            Arc::new(art.with_hd(self.backend, self.ds, &key, &self.mem)?);
                         cache.insert(key, Arc::clone(&art));
                         self.outcome = CacheOutcome::Upgrade;
-                        return art;
+                        return Ok(art);
                     }
                     Lookup::Claimed(claim) => {
                         // single-flight: this caller owns the compute;
                         // concurrent identical jobs wait instead of
-                        // duplicating the O(nnz + d^3) setup
+                        // duplicating the O(nnz + d^3) setup. An over-budget
+                        // failure drops the claim, so a waiter re-claims
+                        // (and fails or succeeds on its own budget state)
+                        // instead of hanging.
                         let art = Arc::new(PrecondArtifact::compute_keyed(
                             self.backend,
                             self.ds,
                             &key,
                             self.opts.block_rows,
                             with_hd,
-                        ));
+                            &self.mem,
+                        )?);
                         claim.publish(Arc::clone(&art));
                         self.outcome = CacheOutcome::Miss;
-                        return art;
+                        return Ok(art);
                     }
                     Lookup::Busy => cache.wait_for(&key),
                 }
@@ -160,7 +214,7 @@ impl<'a> SolveSession<'a> {
         }
         // paper-fidelity path: sample from the session rng in the exact
         // order the pre-driver solvers did
-        Arc::new(PrecondArtifact::compute_inline(
+        Ok(Arc::new(PrecondArtifact::compute_inline(
             self.backend,
             self.ds,
             self.opts.sketch,
@@ -168,7 +222,8 @@ impl<'a> SolveSession<'a> {
             &mut self.rng,
             self.opts.block_rows,
             with_hd,
-        ))
+            &self.mem,
+        )?))
     }
 
     /// An always-fresh step-1 preconditioner sampled from the session rng —
@@ -176,7 +231,7 @@ impl<'a> SolveSession<'a> {
     /// clock (the re-sketching cost is the method's signature cost and
     /// belongs inside the timed step). Representation-aware: on a sparse
     /// dataset the re-sketch is O(nnz) per iteration — exactly the cost the
-    /// input-sparsity-time IHS literature promises.
+    /// input-sparsity-time IHS literature promises — and never densifies.
     pub fn fresh_precond(&mut self) -> Precondition {
         let s = self.sketch_rows();
         precondition_ds_with(
@@ -225,19 +280,27 @@ impl<'a> SolveSession<'a> {
     /// f(x) off the solve clock (trace evaluation, mirrors the paper) —
     /// O(nnz) on sparse datasets, backend-routed on dense ones.
     pub fn objective(&self, x: &[f64]) -> f64 {
-        match &self.ds.csr {
+        match self.ds.csr() {
             Some(c) => c.residual_sq(&self.ds.b, x),
-            None => self.backend.residual_sq(&self.ds.a, &self.ds.b, x),
+            None => self.backend.residual_sq(
+                self.ds.dense_if_ready().expect("dense dataset"),
+                &self.ds.b,
+                x,
+            ),
         }
     }
 
     /// Full gradient `2 A^T (A x - b)` — O(nnz) on sparse datasets (SVRG
-    /// snapshots), backend-routed on dense ones so PJRT deployments keep
-    /// their artifact dispatch.
+    /// snapshots, IHS/pwGradient steps), backend-routed on dense ones so
+    /// PJRT deployments keep their artifact dispatch.
     pub fn full_grad(&self, x: &[f64]) -> Vec<f64> {
-        match &self.ds.csr {
+        match self.ds.csr() {
             Some(c) => c.fused_grad(&self.ds.b, x, 2.0),
-            None => self.backend.full_grad(&self.ds.a, &self.ds.b, x),
+            None => self.backend.full_grad(
+                self.ds.dense_if_ready().expect("dense dataset"),
+                &self.ds.b,
+                x,
+            ),
         }
     }
 
@@ -285,8 +348,11 @@ pub trait StepRule {
     fn name(&self) -> &'static str;
 
     /// Acquire artifacts through the session (runs on the setup clock).
-    fn setup(&mut self, sess: &mut SolveSession) {
+    /// Fallible: an over-budget materialization surfaces here as a
+    /// structured error, which [`drive`] propagates as the job error.
+    fn setup(&mut self, sess: &mut SolveSession) -> Result<()> {
         let _ = sess;
+        Ok(())
     }
 
     /// Untimed initialization after setup: step sizes, variance probes,
@@ -319,15 +385,16 @@ pub trait StepRule {
     }
 }
 
-/// Run a [`StepRule`] through the shared solve loop.
+/// Run a [`StepRule`] through the shared solve loop. Setup failures (e.g.
+/// an over-budget HD materialization) propagate as the job's error.
 pub fn drive<R: StepRule>(
     rule: &mut R,
     backend: &Backend,
     ds: &Dataset,
     opts: &SolverOpts,
-) -> SolveReport {
+) -> Result<SolveReport> {
     let mut sess = SolveSession::new(backend, ds, opts);
-    rule.setup(&mut sess);
+    rule.setup(&mut sess)?;
     sess.end_setup();
     let x0 = sess.start_x();
     let f0 = sess.objective(&x0);
@@ -363,7 +430,7 @@ pub fn drive<R: StepRule>(
             (x, fx)
         }
     };
-    sess.finish(rule.name(), x, f_final)
+    Ok(sess.finish(rule.name(), x, f_final))
 }
 
 #[cfg(test)]
@@ -381,13 +448,7 @@ mod tests {
         for v in &mut b {
             *v += 0.05 * rng.gaussian();
         }
-        Dataset {
-            name: "t".into(),
-            a,
-            csr: None,
-            b,
-            x_star_planted: Some(xt),
-        }
+        Dataset::dense("t", a, b, Some(xt))
     }
 
     fn reuse_opts(cache: &Arc<PrecondCache>, seed: u64) -> SolverOpts {
@@ -400,6 +461,7 @@ mod tests {
             dataset_id: Some("ds-test".into()),
             artifact_seed: 99,
             x0: None,
+            mem: None,
         };
         opts
     }
@@ -410,12 +472,13 @@ mod tests {
         let be = Backend::native();
         let opts = SolverOpts::default();
         let mut sess = SolveSession::new(&be, &ds, &opts);
-        let art = sess.precond(true);
+        let art = sess.precond(true).unwrap();
         // legacy sequence with the same seed
         let mut rng = Rng::new(opts.seed);
         let s = default_sketch_size_for(ds.n(), ds.d(), opts.sketch);
-        let pre = precondition_with(&be, &ds.a, opts.sketch, s, &mut rng, None);
-        let hd = crate::precond::hd_transform_with(&be, &ds.a, &ds.b, &mut rng);
+        let a_ref = ds.dense_if_ready().unwrap();
+        let pre = precondition_with(&be, a_ref, opts.sketch, s, &mut rng, None);
+        let hd = crate::precond::hd_transform_with(&be, a_ref, &ds.b, &mut rng);
         assert_eq!(art.r.max_abs_diff(&pre.r), 0.0);
         assert_eq!(art.hd.as_ref().unwrap().hda.max_abs_diff(&hd.hda), 0.0);
         // session rng continues where the legacy stream would
@@ -430,11 +493,11 @@ mod tests {
         let opts = reuse_opts(&cache, 7);
         // miss path
         let mut s1 = SolveSession::new(&be, &ds, &opts);
-        let a1 = s1.precond(false);
+        let a1 = s1.precond(false).unwrap();
         let draw_after_miss = s1.rng.next_u64();
         // hit path: same key, fresh session
         let mut s2 = SolveSession::new(&be, &ds, &opts);
-        let a2 = s2.precond(false);
+        let a2 = s2.precond(false).unwrap();
         let draw_after_hit = s2.rng.next_u64();
         assert_eq!(a1.r.max_abs_diff(&a2.r), 0.0);
         assert_eq!(
@@ -453,18 +516,37 @@ mod tests {
         let opts = reuse_opts(&cache, 5);
         // first acquisition: step 1 only (a pwgradient-style solver)
         let mut s1 = SolveSession::new(&be, &ds, &opts);
-        let a1 = s1.precond(false);
+        let a1 = s1.precond(false).unwrap();
         assert!(a1.hd.is_none());
         // second acquisition wants HD: upgrade, same R
         let mut s2 = SolveSession::new(&be, &ds, &opts);
-        let a2 = s2.precond(true);
+        let a2 = s2.precond(true).unwrap();
         assert!(a2.hd.is_some());
         assert_eq!(a1.r.max_abs_diff(&a2.r), 0.0);
         // third acquisition finds the upgraded artifact directly
         let mut s3 = SolveSession::new(&be, &ds, &opts);
-        let a3 = s3.precond(true);
+        let a3 = s3.precond(true).unwrap();
         assert!(Arc::ptr_eq(&a2, &a3) || a3.hd.is_some());
         assert_eq!(cache.hits(), 2);
+    }
+
+    #[test]
+    fn over_budget_acquisition_surfaces_as_error_not_panic() {
+        let ds = dataset(512, 6, 9);
+        let be = Backend::native();
+        let tight = MemBudget::with_limit_mb(1);
+        let _hog = tight.try_charge((1 << 20) - 64, "hog").unwrap();
+        let mut opts = SolverOpts::default();
+        opts.session.mem = Some(Arc::clone(&tight));
+        let mut sess = SolveSession::new(&be, &ds, &opts);
+        let err = sess.precond(true).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("memory budget exceeded"),
+            "{err:#}"
+        );
+        // step-1-only acquisition charges nothing and succeeds
+        let mut sess2 = SolveSession::new(&be, &ds, &opts);
+        assert!(sess2.precond(false).is_ok());
     }
 
     #[test]
@@ -521,7 +603,7 @@ mod tests {
         }
 
         let mut rule = Noop { x: vec![], stepped: false };
-        let rep = drive(&mut rule, &be, &ds, &opts);
+        let rep = drive(&mut rule, &be, &ds, &opts).unwrap();
         assert_eq!(rep.setup_secs, 0.0, "no acquisition => setup exactly 0");
         assert_eq!(rep.iters, 1);
         assert_eq!(rep.trace.len(), 2);

@@ -1,16 +1,27 @@
-//! Exact least-squares solver (dense QR) — the ground-truth oracle.
+//! Exact least-squares solver — the ground-truth oracle.
 //!
 //! Supplies f(x*) for the relative-error y-axes of every figure. For the
 //! constrained cases the paper sets the ball radius to the norm of the
 //! *unconstrained* optimum, making x* feasible and f* identical — so the
-//! unconstrained QR solution doubles as the constrained ground truth in the
+//! unconstrained solution doubles as the constrained ground truth in the
 //! paper's experimental setup.
+//!
+//! Representation routing: dense datasets take Householder QR exactly as
+//! before (bit-identical). CSR datasets take [`sparse_lstsq`] — a
+//! sketch-preconditioned CGLS that runs in O(nnz) per iteration and **never
+//! densifies**: the paper's own step 1 (kappa(AR^{-1}) = O(1)) is what makes
+//! plain CGLS converge to machine precision in tens of iterations even at
+//! kappa(A) ~ 1e8, where raw normal equations (kappa^2) would be garbage
+//! and a dense QR would cost exactly the mirror this refactor removed.
 
 use super::{Solver, SolveReport, SolverOpts, TracePoint};
 use crate::backend::Backend;
 use crate::data::Dataset;
-use crate::linalg::qr;
+use crate::linalg::{qr, tri, CsrMat};
+use crate::sketch::SketchKind;
+use crate::util::rng::Rng;
 use crate::util::stats::Timer;
+use anyhow::Result;
 
 pub struct ExactQr;
 
@@ -19,12 +30,17 @@ impl Solver for ExactQr {
         "exact"
     }
 
-    fn solve(&self, _backend: &Backend, ds: &Dataset, _opts: &SolverOpts) -> SolveReport {
+    fn solve(
+        &self,
+        _backend: &Backend,
+        ds: &Dataset,
+        _opts: &SolverOpts,
+    ) -> Result<SolveReport> {
         let t = Timer::start();
-        let x = qr::lstsq(&ds.a, &ds.b);
+        let x = lstsq_ds(ds);
         let secs = t.secs();
         let f = ds.objective(&x);
-        SolveReport {
+        Ok(SolveReport {
             solver: "exact".into(),
             f_final: f,
             iters: 1,
@@ -37,8 +53,76 @@ impl Solver for ExactQr {
             }],
             x,
             precond_cache: crate::precond::CacheOutcome::Off,
+        })
+    }
+}
+
+/// Representation-routed unconstrained least squares.
+fn lstsq_ds(ds: &Dataset) -> Vec<f64> {
+    match ds.csr() {
+        Some(c) => sparse_lstsq(c, &ds.b),
+        None => qr::lstsq(ds.dense_if_ready().expect("dense dataset"), &ds.b),
+    }
+}
+
+/// Fixed seed for the oracle's sketch: the ground truth must be a pure,
+/// deterministic function of the data (goldens and best-of-k trials rely
+/// on it), independent of any job seed.
+const ORACLE_SEED: u64 = 0x6D5F_C615_0A17_3E2B;
+
+/// Input-sparsity-time least squares: CountSketch-QR preconditioner (the
+/// paper's Algorithm 1, O(nnz) + O(s d^2)), then CGLS on the implicitly
+/// preconditioned system `min_y ||A R^{-1} y - b||`. Each iteration is one
+/// `A v` and one `A^T v` pass (O(nnz)) plus two d x d triangular solves;
+/// with kappa(A R^{-1}) = O(1) the iteration contracts geometrically with a
+/// condition-independent rate, reaching f64 resolution in tens of steps.
+/// Crucially it never forms A^T A (no kappa^2 squaring) and never builds a
+/// dense view of A (zero densify events on the serve path).
+pub fn sparse_lstsq(csr: &CsrMat, b: &[f64]) -> Vec<f64> {
+    let (n, d) = (csr.rows, csr.cols);
+    assert_eq!(n, b.len());
+    assert!(n > 0 && d > 0);
+    let mut rng = Rng::new(ORACLE_SEED);
+    let s = crate::sketch::default_sketch_size_for(n, d, SketchKind::CountSketch);
+    let sk = SketchKind::CountSketch.build(s, n, &mut rng);
+    let sa = sk.apply_csr(csr);
+    let r_f = qr::qr_r(&sa);
+    // CGLS in the y = Rx metric
+    let mut y = vec![0.0; d];
+    let mut res = b.to_vec(); // r_0 = b - (AR^{-1}) y_0, y_0 = 0
+    let mut s_vec = tri::solve_upper_t(&r_f, &csr.t_mul_vec(&res));
+    let mut p = s_vec.clone();
+    let mut gamma: f64 = s_vec.iter().map(|v| v * v).sum();
+    let gamma0 = gamma.max(1e-300);
+    let maxit = (2 * d + 100).max(200);
+    for _ in 0..maxit {
+        // ||R^{-T} A^T r||^2 at f64 resolution: converged; a NaN'd gamma
+        // (breakdown) bails too
+        if gamma.is_nan() || gamma <= 1e-30 * gamma0 {
+            break;
+        }
+        let rp = tri::solve_upper(&r_f, &p);
+        let q: Vec<f64> = (0..n).map(|i| csr.row_dot(i, &rp)).collect();
+        let qq: f64 = q.iter().map(|v| v * v).sum();
+        if qq == 0.0 || !qq.is_finite() {
+            break;
+        }
+        let alpha = gamma / qq;
+        for (yi, pi) in y.iter_mut().zip(&p) {
+            *yi += alpha * pi;
+        }
+        for (ri, qi) in res.iter_mut().zip(&q) {
+            *ri -= alpha * qi;
+        }
+        s_vec = tri::solve_upper_t(&r_f, &csr.t_mul_vec(&res));
+        let gamma_new: f64 = s_vec.iter().map(|v| v * v).sum();
+        let beta = gamma_new / gamma.max(1e-300);
+        gamma = gamma_new;
+        for (pi, si) in p.iter_mut().zip(&s_vec) {
+            *pi = si + beta * *pi;
         }
     }
+    tri::solve_upper(&r_f, &y)
 }
 
 /// Compute the paper's experimental setup for a dataset: the unconstrained
@@ -53,7 +137,7 @@ pub struct GroundTruth {
 }
 
 pub fn ground_truth(ds: &Dataset) -> GroundTruth {
-    let x_star = qr::lstsq(&ds.a, &ds.b);
+    let x_star = lstsq_ds(ds);
     let f_star = ds.objective(&x_star);
     let l1_radius = x_star.iter().map(|v| v.abs()).sum();
     let l2_radius = crate::linalg::blas::nrm2(&x_star);
@@ -79,20 +163,16 @@ mod tests {
         for v in &mut b {
             *v += 0.05 * rng.gaussian();
         }
-        Dataset {
-            name: "t".into(),
-            a,
-            csr: None,
-            b,
-            x_star_planted: Some(xt),
-        }
+        Dataset::dense("t", a, b, Some(xt))
     }
 
     #[test]
     fn exact_achieves_minimum_gradient() {
         let d = ds();
-        let rep = ExactQr.solve(&Backend::native(), &d, &SolverOpts::default());
-        let g = blas::fused_grad(&d.a, &d.b, &rep.x, 2.0);
+        let rep = ExactQr
+            .solve(&Backend::native(), &d, &SolverOpts::default())
+            .unwrap();
+        let g = blas::fused_grad(d.dense_if_ready().unwrap(), &d.b, &rep.x, 2.0);
         for v in g {
             assert!(v.abs() < 1e-8, "gradient at optimum: {v}");
         }
@@ -109,5 +189,69 @@ mod tests {
         use crate::prox::Constraint;
         assert!(Constraint::L1Ball { radius: gt.l1_radius }.contains(&gt.x_star, 1e-9));
         assert!(Constraint::L2Ball { radius: gt.l2_radius }.contains(&gt.x_star, 1e-9));
+    }
+
+    fn sparse_pair(n: usize, d: usize, kappa: f64, seed: u64) -> (Dataset, Mat) {
+        // kappa-controlled sparse data via log-spaced column scales; the
+        // i % d == j diagonal band guarantees full column rank
+        let scales = crate::data::synthetic::log_spaced_spectrum(d, kappa);
+        let mut rng = Rng::new(seed);
+        let dense = Mat::from_fn(n, d, |i, j| {
+            if i % d == j || rng.uniform() < 0.2 {
+                rng.gaussian() * scales[j]
+            } else {
+                0.0
+            }
+        });
+        let xt = rng.gaussians(d);
+        let mut b = blas::gemv(&dense, &xt);
+        for v in &mut b {
+            *v += 0.1 * rng.gaussian();
+        }
+        let dsp = Dataset::from_csr("sp", crate::linalg::CsrMat::from_dense(&dense), b, None);
+        (dsp, dense)
+    }
+
+    #[test]
+    fn sparse_lstsq_matches_dense_qr_without_densifying() {
+        for (kappa, tol) in [(1.0, 1e-9), (1e4, 1e-7), (1e8, 1e-4)] {
+            let (dsp, dense) = sparse_pair(600, 8, kappa, 11);
+            let x_sparse = sparse_lstsq(dsp.csr().unwrap(), &dsp.b);
+            let x_dense = qr::lstsq(&dense, &dsp.b);
+            let scale = blas::nrm2(&x_dense).max(1.0);
+            for (u, v) in x_sparse.iter().zip(&x_dense) {
+                assert!(
+                    (u - v).abs() < tol * scale,
+                    "kappa={kappa}: {u} vs {v} (tol {tol})"
+                );
+            }
+            // the objective gap is second-order in the iterate gap: even the
+            // kappa=1e8 solve must pin f* to high relative accuracy
+            let f_sparse = dsp.objective(&x_sparse);
+            let f_dense = dsp.objective(&x_dense);
+            assert!(
+                (f_sparse - f_dense).abs() <= 1e-8 * (1.0 + f_dense),
+                "kappa={kappa}: f {f_sparse} vs {f_dense}"
+            );
+            assert!(
+                dsp.dense_if_ready().is_none(),
+                "the sparse oracle must never materialize a dense view"
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_ground_truth_is_deterministic_and_routed() {
+        let (dsp, _) = sparse_pair(400, 6, 1e3, 21);
+        let g1 = ground_truth(&dsp);
+        let g2 = ground_truth(&dsp);
+        assert_eq!(g1.x_star, g2.x_star, "oracle is a pure function of the data");
+        assert_eq!(g1.f_star.to_bits(), g2.f_star.to_bits());
+        // the exact "solver" takes the same sparse route
+        let rep = ExactQr
+            .solve(&Backend::native(), &dsp, &SolverOpts::default())
+            .unwrap();
+        assert_eq!(rep.x, g1.x_star);
+        assert!(dsp.dense_if_ready().is_none());
     }
 }

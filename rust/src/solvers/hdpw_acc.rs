@@ -14,6 +14,7 @@ use crate::backend::Backend;
 use crate::data::Dataset;
 use crate::precond::PrecondArtifact;
 use crate::prox::metric::MetricProjector;
+use anyhow::Result;
 use std::sync::Arc;
 
 pub struct HdpwAccBatchSgd;
@@ -48,10 +49,11 @@ impl StepRule for HdpwAccRule {
         "hdpwaccbatchsgd"
     }
 
-    fn setup(&mut self, sess: &mut SolveSession) {
-        let art = sess.precond(true);
+    fn setup(&mut self, sess: &mut SolveSession) -> Result<()> {
+        let art = sess.precond(true)?;
         self.metric = sess.metric(&art);
         self.art = Some(art);
+        Ok(())
     }
 
     fn init(&mut self, sess: &mut SolveSession, x0: &[f64], f0: f64) {
@@ -180,7 +182,7 @@ impl Solver for HdpwAccBatchSgd {
         "hdpwaccbatchsgd"
     }
 
-    fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport {
+    fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> Result<SolveReport> {
         drive(&mut HdpwAccRule::default(), backend, ds, opts)
     }
 }
@@ -201,13 +203,7 @@ mod tests {
         for v in &mut b {
             *v += 1.0 * rng.gaussian();
         }
-        Dataset {
-            name: "t".into(),
-            a,
-            csr: None,
-            b,
-            x_star_planted: Some(xt),
-        }
+        Dataset::dense("t", a, b, Some(xt))
     }
 
     #[test]
@@ -218,7 +214,7 @@ mod tests {
         opts.batch_size = 32;
         opts.max_iters = 4000;
         opts.chunk = 100;
-        let rep = HdpwAccBatchSgd.solve(&Backend::native(), &ds, &opts);
+        let rep = HdpwAccBatchSgd.solve(&Backend::native(), &ds, &opts).unwrap();
         let rel = (rep.f_final - gt.f_star) / gt.f_star;
         assert!(rel < 0.05, "relative error {rel}");
     }
@@ -235,7 +231,7 @@ mod tests {
         opts.batch_size = 16;
         opts.max_iters = 1000;
         opts.chunk = 100;
-        let rep = HdpwAccBatchSgd.solve(&Backend::native(), &ds, &opts);
+        let rep = HdpwAccBatchSgd.solve(&Backend::native(), &ds, &opts).unwrap();
         assert!(cons.contains(&rep.x, 1e-6));
     }
 
@@ -253,9 +249,9 @@ mod tests {
             opts.f_star = Some(gt.f_star);
             opts.eps_abs = Some(eps * gt.f_star);
             let rep = if acc {
-                HdpwAccBatchSgd.solve(&Backend::native(), &ds, &opts)
+                HdpwAccBatchSgd.solve(&Backend::native(), &ds, &opts).unwrap()
             } else {
-                HdpwBatchSgd.solve(&Backend::native(), &ds, &opts)
+                HdpwBatchSgd.solve(&Backend::native(), &ds, &opts).unwrap()
             };
             rep.iters_to_rel_err(gt.f_star, eps)
                 .unwrap_or(rep.iters.max(1)) as f64

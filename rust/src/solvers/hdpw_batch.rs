@@ -15,6 +15,7 @@ use crate::backend::Backend;
 use crate::data::Dataset;
 use crate::precond::PrecondArtifact;
 use crate::prox::metric::MetricProjector;
+use anyhow::Result;
 use std::sync::Arc;
 
 pub struct HdpwBatchSgd;
@@ -43,13 +44,16 @@ impl StepRule for HdpwBatchRule {
         "hdpwbatchsgd"
     }
 
-    fn setup(&mut self, sess: &mut SolveSession) {
-        let art = sess.precond(true);
+    fn setup(&mut self, sess: &mut SolveSession) -> Result<()> {
+        // the HD materialization charges the session's memory budget: over
+        // budget this is the structured job error, not an OOM
+        let art = sess.precond(true)?;
         // constrained runs need the R-metric projector (Step 6's quadratic
         // subproblem); its eigendecomposition is part of setup — and shared
         // through the artifact when the cache is on.
         self.metric = sess.metric(&art);
         self.art = Some(art);
+        Ok(())
     }
 
     fn init(&mut self, sess: &mut SolveSession, x0: &[f64], f0: f64) {
@@ -127,7 +131,7 @@ impl Solver for HdpwBatchSgd {
         "hdpwbatchsgd"
     }
 
-    fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport {
+    fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> Result<SolveReport> {
         drive(&mut HdpwBatchRule::default(), backend, ds, opts)
     }
 }
@@ -154,13 +158,7 @@ mod tests {
         for v in &mut b {
             *v += 1.0 * rng.gaussian();
         }
-        Dataset {
-            name: "t".into(),
-            a,
-            csr: None,
-            b,
-            x_star_planted: Some(xt),
-        }
+        Dataset::dense("t", a, b, Some(xt))
     }
 
     #[test]
@@ -172,7 +170,7 @@ mod tests {
         opts.max_iters = 3000;
         opts.chunk = 100;
         opts.seed = 7;
-        let rep = HdpwBatchSgd.solve(&Backend::native(), &ds, &opts);
+        let rep = HdpwBatchSgd.solve(&Backend::native(), &ds, &opts).unwrap();
         let rel = (rep.f_final - gt.f_star) / gt.f_star;
         assert!(rel < 0.05, "relative error {rel}");
         assert!(rep.trace.len() > 2);
@@ -191,7 +189,7 @@ mod tests {
             opts.batch_size = 16;
             opts.max_iters = 800;
             opts.chunk = 100;
-            let rep = HdpwBatchSgd.solve(&Backend::native(), &ds, &opts);
+            let rep = HdpwBatchSgd.solve(&Backend::native(), &ds, &opts).unwrap();
             assert!(cons.contains(&rep.x, 1e-6), "{} violated", cons.tag());
             let rel = (rep.f_final - gt.f_star) / gt.f_star;
             assert!(rel < 0.5, "{}: rel {rel}", cons.tag());
@@ -213,7 +211,7 @@ mod tests {
             opts.seed = 11;
             opts.f_star = Some(gt.f_star);
             opts.eps_abs = Some(eps * gt.f_star);
-            let rep = HdpwBatchSgd.solve(&Backend::native(), &ds, &opts);
+            let rep = HdpwBatchSgd.solve(&Backend::native(), &ds, &opts).unwrap();
             let it = rep
                 .iters_to_rel_err(gt.f_star, eps)
                 .unwrap_or(rep.iters.max(1));
@@ -233,8 +231,8 @@ mod tests {
         let mut opts = SolverOpts::default();
         opts.max_iters = 200;
         opts.chunk = 50;
-        let r1 = HdpwBatchSgd.solve(&Backend::native(), &ds, &opts);
-        let r2 = HdpwBatchSgd.solve(&Backend::native(), &ds, &opts);
+        let r1 = HdpwBatchSgd.solve(&Backend::native(), &ds, &opts).unwrap();
+        let r2 = HdpwBatchSgd.solve(&Backend::native(), &ds, &opts).unwrap();
         assert_eq!(r1.x, r2.x);
         assert_eq!(r1.iters, r2.iters);
     }

@@ -52,6 +52,7 @@ use crate::data::Dataset;
 use crate::prox::Constraint;
 use crate::sketch::SketchKind;
 use crate::util::stats::Timer;
+use anyhow::Result;
 
 /// Options shared by all solvers.
 #[derive(Clone, Debug)]
@@ -165,10 +166,13 @@ impl SolveReport {
     }
 }
 
-/// A regression solver.
+/// A regression solver. `solve` is fallible: setup-time materializations
+/// go through the session's memory budget, and an over-budget request is a
+/// structured error the coordinator reports as a job error (never a panic,
+/// never an OOM).
 pub trait Solver: Send + Sync {
     fn name(&self) -> &'static str;
-    fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport;
+    fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> Result<SolveReport>;
 }
 
 /// Solver registry (CLI / coordinator dispatch).

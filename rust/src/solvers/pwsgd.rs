@@ -19,6 +19,7 @@ use crate::linalg::{blas, tri, Mat};
 use crate::precond::PrecondArtifact;
 use crate::prox::metric::MetricProjector;
 use crate::util::rng::{AliasTable, Rng};
+use anyhow::Result;
 use std::sync::Arc;
 
 pub struct PwSgd;
@@ -69,9 +70,9 @@ pub fn approx_leverage_scores(a: &Mat, r_factor: &Mat, rng: &mut Rng) -> Vec<f64
 pub fn approx_leverage_scores_ds(ds: &Dataset, r_factor: &Mat, rng: &mut Rng) -> Vec<f64> {
     let k = JL_K.min(ds.d());
     let rg = jl_projection(ds.d(), r_factor, rng);
-    let proj = match &ds.csr {
+    let proj = match ds.csr() {
         Some(c) => c.spmm_dense(&rg),
-        None => blas::gemm(&ds.a, &rg),
+        None => blas::gemm(ds.dense_if_ready().expect("dense dataset"), &rg),
     };
     scores_from_projection(&proj, k)
 }
@@ -109,17 +110,18 @@ impl StepRule for PwSgdRule {
         "pwsgd"
     }
 
-    fn setup(&mut self, sess: &mut SolveSession) {
+    fn setup(&mut self, sess: &mut SolveSession) -> Result<()> {
         // preconditioner + leverage scores + alias table, all on the setup
         // clock (the scores are what pwSGD pays beyond HDpw's setup);
         // sparse datasets project scores in O(nnz * k)
-        let art = sess.precond(false);
+        let art = sess.precond(false)?;
         let scores = approx_leverage_scores_ds(sess.ds, &art.r, &mut sess.rng);
         let total: f64 = scores.iter().sum();
         self.probs = scores.iter().map(|l| (l / total).max(1e-300)).collect();
         self.alias = Some(AliasTable::new(&scores));
         self.metric = sess.metric(&art);
         self.art = Some(art);
+        Ok(())
     }
 
     fn init(&mut self, sess: &mut SolveSession, x0: &[f64], f0: f64) {
@@ -209,7 +211,7 @@ impl Solver for PwSgd {
         "pwsgd"
     }
 
-    fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport {
+    fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> Result<SolveReport> {
         drive(&mut PwSgdRule::default(), backend, ds, opts)
     }
 }
@@ -227,13 +229,7 @@ mod tests {
         for v in &mut b {
             *v += 1.0 * rng.gaussian();
         }
-        Dataset {
-            name: "t".into(),
-            a,
-            csr: None,
-            b,
-            x_star_planted: Some(xt),
-        }
+        Dataset::dense("t", a, b, Some(xt))
     }
 
     #[test]
@@ -249,13 +245,7 @@ mod tests {
         });
         let r = crate::linalg::qr::qr_r(&a);
         let b = rng.gaussians(300);
-        let dense_ds = Dataset {
-            name: "t".into(),
-            a: a.clone(),
-            csr: None,
-            b: b.clone(),
-            x_star_planted: None,
-        };
+        let dense_ds = Dataset::dense("t", a.clone(), b.clone(), None);
         let sparse_ds = Dataset::from_csr("t", CsrMat::from_dense(&a), b, None);
         // identical rng streams: dense branch is bit-identical to the plain
         // helper; sparse branch matches within fp re-association
@@ -304,7 +294,7 @@ mod tests {
         opts.batch_size = 1;
         opts.max_iters = 6000;
         opts.chunk = 500;
-        let rep = PwSgd.solve(&Backend::native(), &ds, &opts);
+        let rep = PwSgd.solve(&Backend::native(), &ds, &opts).unwrap();
         let rel = (rep.f_final - gt.f_star) / gt.f_star;
         assert!(rel < 0.1, "relative error {rel}");
     }
@@ -324,19 +314,13 @@ mod tests {
         for v in &mut b {
             *v += 1.0 * rng.gaussian();
         }
-        let ds = Dataset {
-            name: "spiky".into(),
-            a,
-            csr: None,
-            b,
-            x_star_planted: None,
-        };
+        let ds = Dataset::dense("spiky", a, b, None);
         let gt = ground_truth(&ds);
         let mut opts = SolverOpts::default();
         opts.batch_size = 1;
         opts.max_iters = 20_000;
         opts.chunk = 1000;
-        let rep = PwSgd.solve(&Backend::native(), &ds, &opts);
+        let rep = PwSgd.solve(&Backend::native(), &ds, &opts).unwrap();
         let rel = (rep.f_final - gt.f_star) / gt.f_star.max(1e-12);
         assert!(rel < 0.5, "relative error {rel}");
     }

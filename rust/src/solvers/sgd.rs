@@ -10,6 +10,7 @@ use super::{Solver, SolveReport, SolverOpts};
 use crate::backend::Backend;
 use crate::data::Dataset;
 use crate::linalg::{blas, Mat};
+use anyhow::Result;
 
 pub struct Sgd;
 
@@ -36,8 +37,9 @@ impl StepRule for SgdRule {
         let (n, d) = (sess.ds.n(), sess.ds.d());
         let r = sess.opts.batch_size.max(1);
         // eta0 from the inverse row second moment: a safe scale for
-        // E||A_i||^2-smooth stochastic gradients.
-        let row_ms: f64 = sess.ds.a.data.iter().map(|v| v * v).sum::<f64>() / n as f64;
+        // E||A_i||^2-smooth stochastic gradients. Representation-routed:
+        // O(nnz) on CSR, bit-identical dense sum otherwise.
+        let row_ms: f64 = sess.ds.row_mean_sq();
         self.eta0 = sess
             .opts
             .eta
@@ -60,13 +62,14 @@ impl StepRule for SgdRule {
         let ds = sess.ds;
         for k in 0..t {
             let idx = sess.rng.indices(self.r, self.n);
-            let g = match &ds.csr {
+            let g = match ds.csr() {
                 // sparse row-gather gradient: O(nnz(batch)) — no dense row
                 // copies, residual + scatter touch only stored entries
                 Some(csr) => csr.batch_grad(&idx, &ds.b, &self.x, self.scale),
                 None => {
+                    let a = ds.dense_if_ready().expect("dense dataset");
                     for (row, &i) in idx.iter().enumerate() {
-                        self.mbuf.row_mut(row).copy_from_slice(ds.a.row(i));
+                        self.mbuf.row_mut(row).copy_from_slice(a.row(i));
                         self.vbuf[row] = ds.b[i];
                     }
                     blas::fused_grad(&self.mbuf, &self.vbuf, &self.x, self.scale)
@@ -90,7 +93,7 @@ impl Solver for Sgd {
         "sgd"
     }
 
-    fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport {
+    fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> Result<SolveReport> {
         drive(&mut SgdRule::default(), backend, ds, opts)
     }
 }
@@ -110,13 +113,7 @@ mod tests {
         for v in &mut b {
             *v += 0.05 * rng.gaussian();
         }
-        Dataset {
-            name: "t".into(),
-            a,
-            csr: None,
-            b,
-            x_star_planted: Some(xt),
-        }
+        Dataset::dense("t", a, b, Some(xt))
     }
 
     #[test]
@@ -138,17 +135,11 @@ mod tests {
             for v in &mut b {
                 *v += 0.05 * rng.gaussian();
             }
-            Dataset {
-                name: "t".into(),
-                a,
-                csr: None,
-                b,
-                x_star_planted: None,
-            }
+            Dataset::dense("t", a, b, None)
         };
         let sparse_ds = Dataset::from_csr(
             "t",
-            CsrMat::from_dense(&dense_ds.a),
+            CsrMat::from_dense(dense_ds.dense_if_ready().unwrap()),
             dense_ds.b.clone(),
             None,
         );
@@ -157,8 +148,8 @@ mod tests {
         opts.max_iters = 400;
         opts.chunk = 100;
         opts.time_budget = 1e9;
-        let rd = Sgd.solve(&Backend::native(), &dense_ds, &opts);
-        let rs = Sgd.solve(&Backend::native(), &sparse_ds, &opts);
+        let rd = Sgd.solve(&Backend::native(), &dense_ds, &opts).unwrap();
+        let rs = Sgd.solve(&Backend::native(), &sparse_ds, &opts).unwrap();
         assert_eq!(rd.iters, rs.iters);
         assert!(
             (rd.f_final - rs.f_final).abs() < 1e-8 * (1.0 + rd.f_final),
@@ -176,7 +167,7 @@ mod tests {
         opts.batch_size = 16;
         opts.max_iters = 4000;
         opts.chunk = 200;
-        let rep = Sgd.solve(&Backend::native(), &ds, &opts);
+        let rep = Sgd.solve(&Backend::native(), &ds, &opts).unwrap();
         let rel0 = (rep.trace[0].f - gt.f_star) / gt.f_star;
         let rel = (rep.f_final - gt.f_star) / gt.f_star;
         assert!(rel < 0.3 * rel0, "no progress: {rel} vs {rel0}");
@@ -200,8 +191,8 @@ mod tests {
         opts.batch_size = 16;
         opts.max_iters = 2000;
         opts.chunk = 200;
-        let sgd = Sgd.solve(&Backend::native(), &ds, &opts);
-        let hdpw = HdpwBatchSgd.solve(&Backend::native(), &ds, &opts);
+        let sgd = Sgd.solve(&Backend::native(), &ds, &opts).unwrap();
+        let hdpw = HdpwBatchSgd.solve(&Backend::native(), &ds, &opts).unwrap();
         let rel_sgd = (sgd.f_final - gt.f_star) / gt.f_star.max(1e-12);
         let rel_hdpw = (hdpw.f_final - gt.f_star) / gt.f_star.max(1e-12);
         assert!(
@@ -218,7 +209,7 @@ mod tests {
         opts.constraint = cons;
         opts.max_iters = 300;
         opts.chunk = 100;
-        let rep = Sgd.solve(&Backend::native(), &ds, &opts);
+        let rep = Sgd.solve(&Backend::native(), &ds, &opts).unwrap();
         assert!(cons.contains(&rep.x, 1e-9));
     }
 }

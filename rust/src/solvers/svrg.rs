@@ -18,6 +18,7 @@ use crate::data::Dataset;
 use crate::linalg::{blas, Mat};
 use crate::precond::PrecondArtifact;
 use crate::prox::metric::MetricProjector;
+use anyhow::Result;
 use std::sync::Arc;
 
 pub struct Svrg {
@@ -55,12 +56,13 @@ impl StepRule for SvrgRule {
         }
     }
 
-    fn setup(&mut self, sess: &mut SolveSession) {
+    fn setup(&mut self, sess: &mut SolveSession) -> Result<()> {
         if self.preconditioned {
-            let art = sess.precond(false);
+            let art = sess.precond(false)?;
             self.metric = sess.metric(&art);
             self.art = Some(art);
         }
+        Ok(())
     }
 
     fn init(&mut self, sess: &mut SolveSession, x0: &[f64], _f0: f64) {
@@ -74,8 +76,7 @@ impl StepRule for SvrgRule {
             if preconditioned {
                 0.1
             } else {
-                let row_ms: f64 =
-                    sess.ds.a.data.iter().map(|v| v * v).sum::<f64>() / n as f64;
+                let row_ms: f64 = sess.ds.row_mean_sq();
                 0.05 / (2.0 * n as f64 * row_ms.max(1e-300))
             }
         });
@@ -112,7 +113,7 @@ impl StepRule for SvrgRule {
         let ds = sess.ds;
         for _ in 0..t {
             let idx = sess.rng.indices(self.r, self.n);
-            let (g_x, g_s) = match &ds.csr {
+            let (g_x, g_s) = match ds.csr() {
                 // sparse row-gather variance-reduced pair: both gradients
                 // read the same sampled rows in O(nnz(batch))
                 Some(csr) => (
@@ -120,8 +121,9 @@ impl StepRule for SvrgRule {
                     csr.batch_grad(&idx, &ds.b, &self.snapshot, self.scale),
                 ),
                 None => {
+                    let a = ds.dense_if_ready().expect("dense dataset");
                     for (row, &i) in idx.iter().enumerate() {
-                        self.mbuf.row_mut(row).copy_from_slice(ds.a.row(i));
+                        self.mbuf.row_mut(row).copy_from_slice(a.row(i));
                         self.vbuf[row] = ds.b[i];
                     }
                     (
@@ -159,7 +161,7 @@ impl Solver for Svrg {
         }
     }
 
-    fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> SolveReport {
+    fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> Result<SolveReport> {
         let mut rule = SvrgRule {
             preconditioned: self.preconditioned,
             ..SvrgRule::default()
@@ -182,13 +184,7 @@ mod tests {
         for v in &mut b {
             *v += 0.05 * rng.gaussian();
         }
-        Dataset {
-            name: "t".into(),
-            a,
-            csr: None,
-            b,
-            x_star_planted: Some(xt),
-        }
+        Dataset::dense("t", a, b, Some(xt))
     }
 
     #[test]
@@ -201,7 +197,7 @@ mod tests {
         opts.chunk = 500;
         opts.f_star = Some(gt.f_star);
         opts.eps_abs = Some(1e-9 * gt.f_star);
-        let rep = Svrg { preconditioned: false }.solve(&Backend::native(), &ds, &opts);
+        let rep = Svrg { preconditioned: false }.solve(&Backend::native(), &ds, &opts).unwrap();
         let rel = (rep.f_final - gt.f_star) / gt.f_star;
         assert!(rel < 1e-6, "svrg rel {rel}");
     }
@@ -222,8 +218,8 @@ mod tests {
         opts.batch_size = 8;
         opts.max_iters = 4000;
         opts.chunk = 500;
-        let plain = Svrg { preconditioned: false }.solve(&Backend::native(), &ds, &opts);
-        let pw = Svrg { preconditioned: true }.solve(&Backend::native(), &ds, &opts);
+        let plain = Svrg { preconditioned: false }.solve(&Backend::native(), &ds, &opts).unwrap();
+        let pw = Svrg { preconditioned: true }.solve(&Backend::native(), &ds, &opts).unwrap();
         let rel_plain = (plain.f_final - gt.f_star) / gt.f_star.max(1e-12);
         let rel_pw = (pw.f_final - gt.f_star) / gt.f_star.max(1e-12);
         assert!(
@@ -240,7 +236,7 @@ mod tests {
         opts.constraint = cons;
         opts.max_iters = 1000;
         opts.chunk = 200;
-        let rep = Svrg { preconditioned: true }.solve(&Backend::native(), &ds, &opts);
+        let rep = Svrg { preconditioned: true }.solve(&Backend::native(), &ds, &opts).unwrap();
         assert!(cons.contains(&rep.x, 1e-9));
     }
 }

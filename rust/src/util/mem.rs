@@ -1,0 +1,377 @@
+//! Process memory budget for capability-gated densification.
+//!
+//! The input-sparsity-time claim is about *memory* as much as flops: a
+//! 1M x 100 CSR design at 1% density must not silently pay the 100x dense
+//! footprint just because some stage wanted a dense view. [`MemBudget`] is
+//! the accounting authority every such materialization goes through:
+//!
+//! * every dense materialization (CSR mirror, HD-transform buffer, scoped
+//!   QR copy) charges its bytes *before* allocating and can **fail** with a
+//!   structured [`MemError`] when the budget is exhausted — a serve worker
+//!   surfaces that as a job error instead of OOM-killing the process;
+//! * charges are RAII ([`MemCharge`]): dropping the owner releases the
+//!   bytes and wakes admission-control waiters;
+//! * the high-water mark (`peak`), densification count (`densify_events`,
+//!   each logged with the requesting stage) and rejection count are exported
+//!   to job results, the serve metrics line and `bench-info`.
+//!
+//! The process-wide budget is configured with `HDPW_MEM_MB` (0 / unset =
+//! unlimited) and overridden by `hdpw serve --mem-mb` / `hdpw solve
+//! --mem-mb`; tests construct private budgets so they never race the
+//! process one.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
+use std::time::{Duration, Instant};
+
+/// Byte-accounted memory budget (see module docs). `usize::MAX` = unlimited.
+#[derive(Debug)]
+pub struct MemBudget {
+    limit: AtomicUsize,
+    used: AtomicUsize,
+    peak: AtomicUsize,
+    densify_events: AtomicUsize,
+    rejections: AtomicUsize,
+    /// Pairs with `cv` so admission control can wait for headroom; the
+    /// mutex guards nothing by itself (counters are atomic).
+    waiters: Mutex<()>,
+    cv: Condvar,
+    /// Self-handle (`Arc::new_cyclic`) so a plain `&self` charge can hand
+    /// out an owning RAII [`MemCharge`]. Budgets only exist behind `Arc`.
+    me: Weak<MemBudget>,
+}
+
+/// Structured over-budget error — the serve loop reports this as a job
+/// error; it must never surface as a panic.
+#[derive(Clone, Debug)]
+pub struct MemError {
+    /// The stage that requested the materialization (logged + reported).
+    pub stage: String,
+    pub requested: usize,
+    pub used: usize,
+    pub limit: usize,
+}
+
+impl std::fmt::Display for MemError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "memory budget exceeded in {}: requested {} B with {} B in use (limit {} B; \
+             raise HDPW_MEM_MB / --mem-mb or use a sparse-only solver)",
+            self.stage, self.requested, self.used, self.limit
+        )
+    }
+}
+
+impl std::error::Error for MemError {}
+
+/// RAII charge against a [`MemBudget`]: the bytes stay accounted exactly as
+/// long as the charged allocation is alive; dropping releases them and
+/// wakes admission-control waiters.
+pub struct MemCharge {
+    budget: Arc<MemBudget>,
+    bytes: usize,
+}
+
+impl MemCharge {
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl std::fmt::Debug for MemCharge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MemCharge").field("bytes", &self.bytes).finish()
+    }
+}
+
+impl Drop for MemCharge {
+    fn drop(&mut self) {
+        self.budget.release(self.bytes);
+    }
+}
+
+static PROCESS: OnceLock<Arc<MemBudget>> = OnceLock::new();
+
+impl MemBudget {
+    fn with_limit_bytes(limit: usize) -> Arc<MemBudget> {
+        Arc::new_cyclic(|me| MemBudget {
+            limit: AtomicUsize::new(limit),
+            used: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            densify_events: AtomicUsize::new(0),
+            rejections: AtomicUsize::new(0),
+            waiters: Mutex::new(()),
+            cv: Condvar::new(),
+            me: me.clone(),
+        })
+    }
+
+    /// A budget that never rejects (but still counts peak bytes and
+    /// densification events) — the default when `HDPW_MEM_MB` is unset.
+    pub fn unlimited() -> Arc<MemBudget> {
+        MemBudget::with_limit_bytes(usize::MAX)
+    }
+
+    /// A budget capped at `mb` MiB; `mb == 0` means unlimited.
+    pub fn with_limit_mb(mb: usize) -> Arc<MemBudget> {
+        let limit = if mb == 0 {
+            usize::MAX
+        } else {
+            mb.saturating_mul(1 << 20)
+        };
+        MemBudget::with_limit_bytes(limit)
+    }
+
+    /// The process-wide budget, initialized once from `HDPW_MEM_MB`
+    /// (0 / unset / unparsable = unlimited). `--mem-mb` CLI overrides call
+    /// [`MemBudget::set_limit_mb`] on this same instance.
+    pub fn process() -> Arc<MemBudget> {
+        Arc::clone(PROCESS.get_or_init(|| {
+            let mb = std::env::var("HDPW_MEM_MB")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(0);
+            MemBudget::with_limit_mb(mb)
+        }))
+    }
+
+    /// Re-limit a live budget (serve/solve `--mem-mb`); `mb == 0` lifts the
+    /// cap. Existing charges are untouched.
+    pub fn set_limit_mb(&self, mb: usize) {
+        let limit = if mb == 0 {
+            usize::MAX
+        } else {
+            mb.saturating_mul(1 << 20)
+        };
+        self.limit.store(limit, Ordering::Relaxed);
+        self.notify_waiters();
+    }
+
+    /// The configured cap; `None` when unlimited.
+    pub fn limit_bytes(&self) -> Option<usize> {
+        match self.limit.load(Ordering::Relaxed) {
+            usize::MAX => None,
+            v => Some(v),
+        }
+    }
+
+    /// Currently charged bytes.
+    pub fn used(&self) -> usize {
+        self.used.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of charged bytes (never resets).
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Densifications performed through this budget so far.
+    pub fn densify_events(&self) -> usize {
+        self.densify_events.load(Ordering::Relaxed)
+    }
+
+    /// Charges refused for lack of budget.
+    pub fn rejections(&self) -> usize {
+        self.rejections.load(Ordering::Relaxed)
+    }
+
+    /// Reserve `bytes` or fail with a structured error. The returned charge
+    /// releases on drop (and keeps the budget alive through its
+    /// self-handle).
+    pub fn try_charge(&self, bytes: usize, stage: &str) -> Result<MemCharge, MemError> {
+        let mut cur = self.used.load(Ordering::Relaxed);
+        loop {
+            let limit = self.limit.load(Ordering::Relaxed);
+            let next = cur.saturating_add(bytes);
+            if next > limit {
+                self.rejections.fetch_add(1, Ordering::Relaxed);
+                crate::log_warn!(
+                    "mem budget: rejected {bytes} B for {stage} ({cur} B in use, limit {limit} B)"
+                );
+                return Err(MemError {
+                    stage: stage.to_string(),
+                    requested: bytes,
+                    used: cur,
+                    limit,
+                });
+            }
+            match self.used.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.bump_peak(next);
+                    return Ok(MemCharge {
+                        budget: self.me.upgrade().expect("budgets live behind Arc"),
+                        bytes,
+                    });
+                }
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Record a densification (counted + logged with the requesting stage).
+    /// Callers invoke this exactly once per dense materialization, *after*
+    /// the charge succeeded.
+    pub fn note_densify(&self, stage: &str, bytes: usize) {
+        self.densify_events.fetch_add(1, Ordering::Relaxed);
+        crate::log_info!("mem budget: densify {bytes} B for {stage}");
+    }
+
+    /// Whether a charge of `bytes` would currently fit.
+    pub fn would_fit(&self, bytes: usize) -> bool {
+        self.used
+            .load(Ordering::Relaxed)
+            .saturating_add(bytes)
+            <= self.limit.load(Ordering::Relaxed)
+    }
+
+    /// Admission control: block until `bytes` would fit or `timeout`
+    /// elapses. Returns whether headroom appeared. This is a *gate*, not a
+    /// reservation — the eventual `try_charge` still decides.
+    pub fn wait_for_headroom(&self, bytes: usize, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut guard = self.waiters.lock().unwrap();
+        loop {
+            if self.would_fit(bytes) {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        }
+    }
+
+    fn bump_peak(&self, candidate: usize) {
+        let mut cur = self.peak.load(Ordering::Relaxed);
+        while candidate > cur {
+            match self.peak.compare_exchange_weak(
+                cur,
+                candidate,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    fn release(&self, bytes: usize) {
+        self.used.fetch_sub(bytes, Ordering::Relaxed);
+        self.notify_waiters();
+    }
+
+    /// Wake admission waiters. The (empty) critical section orders this
+    /// notify after any waiter's headroom check: without it, a release
+    /// landing between a waiter's `would_fit == false` and its
+    /// `wait_timeout` park would be lost and the waiter would sleep out
+    /// its whole timeout despite headroom having appeared.
+    fn notify_waiters(&self) {
+        drop(self.waiters.lock().unwrap());
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_accounts_and_releases_on_drop() {
+        let b = MemBudget::with_limit_mb(1); // 1 MiB
+        let c1 = b.try_charge(400_000, "t1").unwrap();
+        assert_eq!(b.used(), 400_000);
+        let c2 = b.try_charge(400_000, "t2").unwrap();
+        assert_eq!(b.used(), 800_000);
+        assert_eq!(b.peak(), 800_000);
+        drop(c1);
+        assert_eq!(b.used(), 400_000);
+        assert_eq!(b.peak(), 800_000, "peak never shrinks");
+        drop(c2);
+        assert_eq!(b.used(), 0);
+        assert_eq!(b.rejections(), 0);
+    }
+
+    #[test]
+    fn over_budget_charge_is_a_structured_error() {
+        let b = MemBudget::with_limit_mb(1);
+        let _held = b.try_charge(1_000_000, "big").unwrap();
+        let err = b.try_charge(100_000, "straw").unwrap_err();
+        assert_eq!(err.stage, "straw");
+        assert_eq!(err.requested, 100_000);
+        assert_eq!(err.limit, 1 << 20);
+        let msg = err.to_string();
+        assert!(msg.contains("memory budget exceeded in straw"), "{msg}");
+        assert_eq!(b.rejections(), 1);
+        assert_eq!(b.used(), 1_000_000, "failed charge must not leak bytes");
+    }
+
+    #[test]
+    fn unlimited_budget_never_rejects_but_still_tracks() {
+        let b = MemBudget::unlimited();
+        assert!(b.limit_bytes().is_none());
+        let c = b.try_charge(usize::MAX / 2, "huge").unwrap();
+        assert!(b.peak() >= usize::MAX / 2);
+        drop(c);
+        b.note_densify("t", 8);
+        assert_eq!(b.densify_events(), 1);
+    }
+
+    #[test]
+    fn concurrent_charges_never_oversubscribe() {
+        let b = MemBudget::with_limit_mb(1); // 1 MiB = 1048576 B
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let b = Arc::clone(&b);
+                std::thread::spawn(move || {
+                    let mut granted = 0usize;
+                    for _ in 0..64 {
+                        if let Ok(c) = b.try_charge(100_000, "race") {
+                            granted += 1;
+                            assert!(b.used() <= 1 << 20, "oversubscribed");
+                            drop(c);
+                        }
+                    }
+                    granted
+                })
+            })
+            .collect();
+        let total: usize = threads.into_iter().map(|t| t.join().unwrap()).sum();
+        assert!(total > 0);
+        assert_eq!(b.used(), 0, "all charges released");
+        assert!(b.peak() <= 1 << 20);
+    }
+
+    #[test]
+    fn headroom_wait_unblocks_on_release() {
+        let b = MemBudget::with_limit_mb(1);
+        let held = b.try_charge(1_000_000, "holder").unwrap();
+        assert!(!b.wait_for_headroom(500_000, Duration::from_millis(30)));
+        let waiter = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || b.wait_for_headroom(500_000, Duration::from_secs(10)))
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        drop(held); // releases + notifies
+        assert!(waiter.join().unwrap(), "waiter must observe the release");
+    }
+
+    #[test]
+    fn relimit_applies_to_future_charges() {
+        let b = MemBudget::with_limit_mb(1);
+        assert!(b.try_charge(2 << 20, "big").is_err());
+        b.set_limit_mb(4);
+        let c = b.try_charge(2 << 20, "big").unwrap();
+        drop(c);
+        b.set_limit_mb(0);
+        assert!(b.limit_bytes().is_none());
+    }
+}

@@ -7,6 +7,7 @@
 //! here and unit-tested in place.
 
 pub mod rng;
+pub mod mem;
 pub mod json;
 pub mod cli;
 pub mod config;

@@ -18,6 +18,7 @@ fn coordinator(precond_cache_bytes: usize) -> Arc<Coordinator> {
             max_queue: 64,
             cache_dir: None,
             precond_cache_bytes,
+            ..CoordinatorConfig::default()
         },
     ))
 }

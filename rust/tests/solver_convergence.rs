@@ -52,7 +52,7 @@ fn every_solver_improves_every_constraint() {
             };
             opts.time_budget = 30.0;
             opts.chunk = 100;
-            let rep = solver.solve(&be, &ds, &opts);
+            let rep = solver.solve(&be, &ds, &opts).unwrap();
             let rel0 = (rep.trace[0].f - gt.f_star) / gt.f_star;
             let rel = (rep.f_final - gt.f_star) / gt.f_star;
             // every solver must improve substantially from x0 = 0...
@@ -80,7 +80,7 @@ fn preconditioned_methods_dominate_on_severe_conditioning() {
         opts.max_iters = iters;
         opts.chunk = 200;
         opts.time_budget = 60.0;
-        let rep = solver.solve(&be, &ds, &opts);
+        let rep = solver.solve(&be, &ds, &opts).unwrap();
         (rep.f_final - gt.f_star) / gt.f_star.max(1e-300)
     };
     let hdpw = run("hdpwbatchsgd", 4000);
@@ -107,7 +107,7 @@ fn pw_gradient_beats_ihs_wall_clock_same_accuracy() {
         opts.f_star = Some(gt.f_star);
         opts.eps_abs = Some(1e-8 * gt.f_star);
         opts.time_budget = 60.0;
-        let rep = solver.solve(&be, &ds, &opts);
+        let rep = solver.solve(&be, &ds, &opts).unwrap();
         rep.time_to_rel_err(gt.f_star, 1e-8)
             .unwrap_or(f64::INFINITY)
     };
@@ -130,10 +130,10 @@ fn trials_protocol_is_deterministic_per_seed() {
     opts.max_iters = 500;
     opts.chunk = 100;
     opts.seed = 33;
-    let a = solver.solve(&be, &ds, &opts);
-    let b = solver.solve(&be, &ds, &opts);
+    let a = solver.solve(&be, &ds, &opts).unwrap();
+    let b = solver.solve(&be, &ds, &opts).unwrap();
     assert_eq!(a.x, b.x);
     opts.seed = 34;
-    let c = solver.solve(&be, &ds, &opts);
+    let c = solver.solve(&be, &ds, &opts).unwrap();
     assert_ne!(a.x, c.x);
 }

@@ -40,11 +40,14 @@ fn sparse_ds(n: usize, d: usize, density: f64, seed: u64) -> Dataset {
     )
 }
 
-/// The same dataset with the CSR payload dropped — the dense twin.
+/// The same data re-homed in the dense representation — the dense twin.
 fn dense_twin(ds: &Dataset) -> Dataset {
-    let mut twin = ds.clone();
-    twin.csr = None;
-    twin
+    Dataset::dense(
+        ds.name.clone(),
+        ds.dense_clone(),
+        ds.b.clone(),
+        ds.x_star_planted.clone(),
+    )
 }
 
 #[test]
@@ -55,7 +58,7 @@ fn sketched_aug_and_r_match_densified_within_1e10() {
         let ds = sparse_ds(n, d, 0.3, 1000 + n as u64);
         // packed [A | b]: the sketch target of Algorithm 1's augmented form
         let bmat = Mat::from_vec(n, 1, ds.b.clone());
-        let aug_dense = ds.a.hstack(&bmat);
+        let aug_dense = ds.dense_clone().hstack(&bmat);
         let aug_csr = CsrMat::from_dense(&aug_dense);
         for kind in KINDS {
             // identical rng stream for the dense reference and the CSR run
@@ -106,12 +109,13 @@ fn sketched_aug_and_r_match_densified_within_1e10() {
 #[test]
 fn precondition_r_matches_across_representations() {
     let ds = sparse_ds(1024, 10, 0.2, 9);
+    let dense_a = ds.dense_clone();
     let be = Backend::native_with(4, None);
     for kind in KINDS {
         let mut r1 = Rng::new(42);
-        let p_dense = precondition_with(&be, &ds.a, kind, 300, &mut r1, Some(128));
+        let p_dense = precondition_with(&be, &dense_a, kind, 300, &mut r1, Some(128));
         let mut r2 = Rng::new(42);
-        let csr = ds.csr.as_ref().unwrap();
+        let csr = ds.csr().unwrap();
         let p_csr = precondition_csr_with(&be, csr, kind, 300, &mut r2, Some(128));
         let rdiff = p_csr.r.max_abs_diff(&p_dense.r);
         assert!(rdiff < 1e-10, "{}: R diff {rdiff}", kind.name());
@@ -131,6 +135,7 @@ fn solver_traces_track_across_representations() {
         ("pwsgd", 300usize, 100usize), // leverage-score weighted SGD family
         ("ihs", 15, 1),                // fresh-sketch-per-iteration family
         ("svrg", 300, 100),            // variance-reduced family
+        ("pwgradient", 30, 2),         // frozen-sketch full-gradient family
     ] {
         let mut opts = SolverOpts::default();
         opts.batch_size = 8;
@@ -139,8 +144,12 @@ fn solver_traces_track_across_representations() {
         opts.time_budget = 1e9; // determinism: stop on iterations only
         opts.seed = 5;
         let s = by_name(solver).unwrap();
-        let rep_sparse = s.solve(&Backend::native(), &ds_sparse, &opts);
-        let rep_dense = s.solve(&Backend::native(), &ds_dense, &opts);
+        let rep_sparse = s.solve(&Backend::native(), &ds_sparse, &opts).unwrap();
+        let rep_dense = s.solve(&Backend::native(), &ds_dense, &opts).unwrap();
+        assert!(
+            ds_sparse.dense_if_ready().is_none(),
+            "{solver}: a step-1-only sparse solve must never materialize a dense view"
+        );
         assert_eq!(
             rep_sparse.iters, rep_dense.iters,
             "{solver}: iteration counts must match"
@@ -188,8 +197,8 @@ fn dense_twin_replays_bitwise() {
         opts.chunk = if solver == "ihs" { 1 } else { 100 };
         opts.time_budget = 1e9;
         let s = by_name(solver).unwrap();
-        let r1 = s.solve(&Backend::native(), &ds, &opts);
-        let r2 = s.solve(&Backend::native(), &ds, &opts);
+        let r1 = s.solve(&Backend::native(), &ds, &opts).unwrap();
+        let r2 = s.solve(&Backend::native(), &ds, &opts).unwrap();
         assert_eq!(r1.x, r2.x, "{solver}");
         assert_eq!(r1.f_final.to_bits(), r2.f_final.to_bits(), "{solver}");
     }

@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Seal (or intentionally regenerate) the solver golden fixtures.
+#
+# The drift detector (rust/tests/solver_golden.rs) replays every iterative
+# solver against committed JSON fixtures under rust/tests/golden/. On a
+# branch the test self-seals missing fixtures (bootstrap mode); on main the
+# CI golden step FAILS when no fixtures are committed — this script is the
+# supported way to produce them:
+#
+#   scripts/seal_golden.sh            # generate missing fixtures
+#   scripts/seal_golden.sh --regen    # wipe + regenerate (intentional
+#                                     # numerics change)
+#
+# then commit the rust/tests/golden/*.json files it leaves behind. The
+# script runs the suite twice: the second run must replay the sealed
+# fixtures bit-for-bit, so a flaky environment can never seal a flaky
+# fixture.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ "${1:-}" = "--regen" ]; then
+  echo "regenerating: removing committed fixtures"
+  rm -f rust/tests/golden/*.json
+fi
+
+# fixtures must not depend on the CI env variants
+unset HDPW_FORMAT HDPW_REUSE_PRECOND HDPW_WARM_START HDPW_MEM_MB
+
+echo "== pass 1: seal =="
+cargo test --test solver_golden
+echo "== pass 2: verify the sealed fixtures replay =="
+cargo test --test solver_golden
+
+echo
+echo "sealed fixtures:"
+ls -l rust/tests/golden/*.json
+echo "commit these files to arm the drift detector on main."
