@@ -1,0 +1,85 @@
+//! Nonnegative least squares + probability-simplex regression — the two
+//! constraint classes ISSUE 5 opens, end to end.
+//!
+//!     cargo run --release --example nnls_simplex
+//!
+//! **When do these sets arise?**
+//!
+//! * *Nonnegative orthant* (`--constraint nonneg`): whenever the
+//!   coefficients are physically nonnegative quantities — spectral
+//!   unmixing (material abundances), chemometrics (concentrations),
+//!   intensity estimation. The unconstrained least-squares fit of noisy
+//!   data routinely goes negative on small coefficients; projecting onto
+//!   `x >= 0` is the classical NNLS remedy.
+//! * *Probability simplex* (`--constraint simplex`): whenever the
+//!   coefficients are weights that must be nonnegative AND sum to one —
+//!   portfolio allocation (fully-invested long-only weights), mixture /
+//!   topic proportions, model averaging.
+//!
+//! The script plants a solution ON the simplex (so it is feasible for both
+//! sets), observes it through a tall gaussian design with noise, and
+//! solves with pwSGD (the paper's preconditioned weighted SGD — here with
+//! the R-metric projection doing the constrained Step 6) against the
+//! `exact` unconstrained oracle. Because the planted solution is feasible,
+//! the constrained and unconstrained optima coincide to O(1/n), and the
+//! reported relative errors show pwSGD landing on the constrained optimum.
+
+use hdpw::backend::Backend;
+use hdpw::constraints::{nonneg, simplex, ConstraintSet};
+use hdpw::data::Dataset;
+use hdpw::linalg::{blas, Mat};
+use hdpw::solvers::exact::ground_truth;
+use hdpw::solvers::{PwSgd, Solver, SolverOpts};
+use hdpw::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let (n, d) = (8_192usize, 16usize);
+    let mut rng = Rng::new(7);
+    // planted solution on the simplex: positive weights summing to 1
+    let mut xt: Vec<f64> = (0..d).map(|_| 0.5 + rng.uniform()).collect();
+    let total: f64 = xt.iter().sum();
+    for v in &mut xt {
+        *v /= total;
+    }
+    let a = Mat::gaussian(n, d, &mut rng);
+    let mut b = blas::gemv(&a, &xt);
+    for v in &mut b {
+        *v += 1e-3 * rng.gaussian();
+    }
+    let ds = Dataset::dense("nnls_simplex", a, b, Some(xt));
+    println!("nnls/simplex demo: n={n} d={d}, planted weights sum to 1");
+
+    // the unconstrained oracle: with the solution planted inside both
+    // sets, f* doubles as the constrained reference
+    let gt = ground_truth(&ds);
+    println!("exact            : f* = {:.6e}", gt.f_star);
+
+    let backend = Backend::auto();
+    for cons in [nonneg(), simplex(1.0)] {
+        let mut opts = SolverOpts::default();
+        opts.constraint = cons.clone();
+        opts.batch_size = 8;
+        opts.max_iters = 20_000;
+        opts.chunk = 500;
+        opts.time_budget = 60.0;
+        opts.f_star = Some(gt.f_star);
+        opts.eps_abs = Some(5e-4 * gt.f_star);
+        let rep = PwSgd.solve(&backend, &ds, &opts)?;
+        let rel = ((rep.f_final - gt.f_star) / gt.f_star).max(0.0);
+        println!(
+            "pwsgd {:<10} : rel_err={rel:.3e} iters={} feasible={} time={}",
+            cons.tag(),
+            rep.iters,
+            cons.contains(&rep.x, 1e-9),
+            hdpw::util::stats::fmt_duration(rep.solve_secs)
+        );
+        assert!(
+            cons.contains(&rep.x, 1e-9),
+            "{} iterate left the set",
+            cons.tag()
+        );
+    }
+    println!("(the same runs via the CLI: cargo run --release -- solve \\");
+    println!("   --solver pwsgd --constraint simplex --n 8192)");
+    Ok(())
+}

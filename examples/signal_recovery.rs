@@ -15,7 +15,8 @@
 use hdpw::backend::Backend;
 use hdpw::data::Dataset;
 use hdpw::linalg::{blas, Mat};
-use hdpw::prox::{soft_threshold, Constraint};
+use hdpw::constraints::l1_ball;
+use hdpw::prox::soft_threshold;
 use hdpw::solvers::{HdpwBatchSgd, PwGradient, Solver, SolverOpts};
 use hdpw::util::rng::Rng;
 use hdpw::util::stats::Timer;
@@ -51,11 +52,11 @@ fn main() -> anyhow::Result<()> {
     println!("signal recovery: n={n} d={d} k={k} ||x0||_1={l1_radius:.3}");
 
     let backend = Backend::auto();
-    let cons = Constraint::L1Ball { radius: l1_radius };
+    let cons = l1_ball(l1_radius);
 
     // --- paper solvers -----------------------------------------------------
     let mut opts = SolverOpts::default();
-    opts.constraint = cons;
+    opts.constraint = cons.clone();
     opts.batch_size = 64;
     opts.max_iters = 6_000;
     opts.time_budget = 30.0;
@@ -63,7 +64,7 @@ fn main() -> anyhow::Result<()> {
     report("HDpwBatchSGD (l1)", &x0, &rep.x, rep.solve_secs);
 
     let mut opts = SolverOpts::default();
-    opts.constraint = cons;
+    opts.constraint = cons.clone();
     opts.max_iters = 200;
     opts.time_budget = 30.0;
     let rep = PwGradient.solve(&backend, &ds, &opts)?;

@@ -3,7 +3,7 @@
 
 use hdpw::backend::Backend;
 use hdpw::linalg::{blas, qr, tri, Mat};
-use hdpw::prox::Constraint;
+use hdpw::constraints::Unconstrained;
 use hdpw::sketch::fwht;
 use hdpw::sketch::SketchKind;
 use hdpw::util::rng::Rng;
@@ -255,7 +255,7 @@ fn main() {
                 &idx,
                 0.1,
                 2.0 * n as f64 / r as f64,
-                &Constraint::Unconstrained,
+                &Unconstrained,
                 None,
             ));
         });
@@ -294,7 +294,7 @@ fn main() {
                 &idx,
                 0.1,
                 2.0 * n as f64 / 64.0,
-                &Constraint::Unconstrained,
+                &Unconstrained,
                 None,
             ));
         });
@@ -312,7 +312,7 @@ fn main() {
                 &idx,
                 0.1,
                 2.0 * n as f64 / 64.0,
-                &Constraint::Unconstrained,
+                &Unconstrained,
                 None,
             ));
         });

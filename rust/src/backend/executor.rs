@@ -8,7 +8,7 @@
 //!
 //! * [`NativeExecutor`] — from-scratch kernels, parallel and block-aware:
 //!   dense linear algebra goes through the row-block-parallel [`blas`]
-//!   kernels, and sketch application streams [`RowBlocks`] shards through
+//!   kernels, and sketch application streams [`crate::data::RowBlocks`] shards through
 //!   worker threads (`sketch::apply_streamed`), counting every shard folded
 //!   in [`DispatchStats::native_block_calls`]. Supports every op.
 //! * [`PjrtExecutor`] — dispatches to AOT-compiled PJRT artifacts when the
@@ -21,9 +21,9 @@
 // ops legitimately take >7 scalars/arrays.
 #![allow(clippy::too_many_arguments)]
 
+use crate::constraints::ConstraintSet;
 use crate::linalg::{blas, CsrMat, Mat};
 use crate::prox::metric::MetricProjector;
-use crate::prox::Constraint;
 use crate::runtime::literal::Value;
 use crate::runtime::EngineHandle;
 use crate::sketch::{apply_streamed, apply_streamed_csr, Sketch};
@@ -34,7 +34,7 @@ use std::sync::{Arc, Mutex};
 /// Canonical op-name keys: the shared vocabulary between the facade's
 /// registry lookups and the PJRT manifest.
 pub mod opkey {
-    use crate::prox::Constraint;
+    use crate::constraints::ConstraintSet;
 
     pub fn hd_transform(n: usize, cols: usize) -> String {
         format!("hd_transform_n{n}_c{cols}")
@@ -52,19 +52,19 @@ pub mod opkey {
         format!("residual_sq_n{n}_d{d}")
     }
 
-    pub fn gd_step(cons: &Constraint, d: usize) -> String {
+    pub fn gd_step(cons: &dyn ConstraintSet, d: usize) -> String {
         format!("gd_step_{}_d{}", cons.tag(), d)
     }
 
-    pub fn sgd_chunk(cons: &Constraint, n: usize, d: usize, r: usize, t: usize) -> String {
+    pub fn sgd_chunk(cons: &dyn ConstraintSet, n: usize, d: usize, r: usize, t: usize) -> String {
         format!("sgd_chunk_{}_n{}_d{}_r{}_t{}", cons.tag(), n, d, r, t)
     }
 
-    pub fn acc_chunk(cons: &Constraint, n: usize, d: usize, r: usize, t: usize) -> String {
+    pub fn acc_chunk(cons: &dyn ConstraintSet, n: usize, d: usize, r: usize, t: usize) -> String {
         format!("acc_chunk_{}_n{}_d{}_r{}_t{}", cons.tag(), n, d, r, t)
     }
 
-    pub fn pw_gradient_chunk(cons: &Constraint, n: usize, d: usize, t: usize) -> String {
+    pub fn pw_gradient_chunk(cons: &dyn ConstraintSet, n: usize, d: usize, t: usize) -> String {
         format!("pw_gradient_chunk_{}_n{}_d{}_t{}", cons.tag(), n, d, t)
     }
 
@@ -129,9 +129,11 @@ impl DispatchStats {
 /// One numerical backend: executes ops it `supports`.
 ///
 /// Constrained-step caveat: the PJRT artifacts implement the Euclidean
-/// projection only, so the facade never routes a call with an active
-/// R-metric projector (or a box constraint) to a non-native executor —
-/// implementations may assume `metric` is inactive unless they are the
+/// unc/l1/l2 projections only, so the facade never routes a call with an
+/// active R-metric projector (or a set whose
+/// [`ConstraintSet::accel_eligible`] is false — boxes, the simplex, the
+/// orthant, elastic-net balls, affine equalities) to a non-native executor
+/// — implementations may assume `metric` is inactive unless they are the
 /// native catch-all.
 pub trait Executor: Send + Sync {
     /// Registry identity ("native", "pjrt", ...) — display only, never used
@@ -176,7 +178,7 @@ pub trait Executor: Send + Sync {
         pinv: &Mat,
         g: &[f64],
         eta: f64,
-        cons: &Constraint,
+        cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> Vec<f64>;
 
@@ -191,7 +193,7 @@ pub trait Executor: Send + Sync {
         idx: &[Vec<usize>],
         eta: f64,
         scale: f64,
-        cons: &Constraint,
+        cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> (Vec<f64>, Vec<f64>);
 
@@ -210,7 +212,7 @@ pub trait Executor: Send + Sync {
         etas: &[f64],
         mu: f64,
         scale: f64,
-        cons: &Constraint,
+        cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> (Vec<f64>, Vec<f64>);
 
@@ -223,7 +225,7 @@ pub trait Executor: Send + Sync {
         pinv: &Mat,
         eta: f64,
         t: usize,
-        cons: &Constraint,
+        cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> Vec<f64>;
 
@@ -328,7 +330,7 @@ impl Executor for NativeExecutor {
         pinv: &Mat,
         g: &[f64],
         eta: f64,
-        cons: &Constraint,
+        cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> Vec<f64> {
         let step = blas::gemv(pinv, g);
@@ -354,7 +356,7 @@ impl Executor for NativeExecutor {
         idx: &[Vec<usize>],
         eta: f64,
         scale: f64,
-        cons: &Constraint,
+        cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> (Vec<f64>, Vec<f64>) {
         let r = idx.first().map(|v| v.len()).unwrap_or(0);
@@ -397,7 +399,7 @@ impl Executor for NativeExecutor {
         etas: &[f64],
         mu: f64,
         scale: f64,
-        cons: &Constraint,
+        cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> (Vec<f64>, Vec<f64>) {
         let r = idx.first().map(|v| v.len()).unwrap_or(0);
@@ -444,7 +446,7 @@ impl Executor for NativeExecutor {
         pinv: &Mat,
         eta: f64,
         t: usize,
-        cons: &Constraint,
+        cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> Vec<f64> {
         let mut x = x0.to_vec();
@@ -606,11 +608,11 @@ impl Executor for PjrtExecutor {
         pinv: &Mat,
         g: &[f64],
         eta: f64,
-        cons: &Constraint,
+        cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> Vec<f64> {
         debug_assert!(
-            metric.is_none() || cons.tag() == "unc",
+            metric.is_none() || cons.is_unconstrained(),
             "facade must not route metric projections to PJRT"
         );
         let op = opkey::gd_step(cons, x.len());
@@ -639,10 +641,10 @@ impl Executor for PjrtExecutor {
         idx: &[Vec<usize>],
         eta: f64,
         scale: f64,
-        cons: &Constraint,
+        cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> (Vec<f64>, Vec<f64>) {
-        debug_assert!(metric.is_none() || cons.tag() == "unc");
+        debug_assert!(metric.is_none() || cons.is_unconstrained());
         let t = idx.len();
         let r = idx.first().map(|v| v.len()).unwrap_or(0);
         let op = opkey::sgd_chunk(cons, hda.rows, hda.cols, r, t);
@@ -683,10 +685,10 @@ impl Executor for PjrtExecutor {
         etas: &[f64],
         mu: f64,
         scale: f64,
-        cons: &Constraint,
+        cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> (Vec<f64>, Vec<f64>) {
-        debug_assert!(metric.is_none() || cons.tag() == "unc");
+        debug_assert!(metric.is_none() || cons.is_unconstrained());
         let t = idx.len();
         let r = idx.first().map(|v| v.len()).unwrap_or(0);
         let op = opkey::acc_chunk(cons, hda.rows, hda.cols, r, t);
@@ -726,10 +728,10 @@ impl Executor for PjrtExecutor {
         pinv: &Mat,
         eta: f64,
         t: usize,
-        cons: &Constraint,
+        cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> Vec<f64> {
-        debug_assert!(metric.is_none() || cons.tag() == "unc");
+        debug_assert!(metric.is_none() || cons.is_unconstrained());
         let op = opkey::pw_gradient_chunk(cons, a.rows, a.cols, t);
         let out = self
             .engine
@@ -808,7 +810,7 @@ mod tests {
     fn opkeys_match_manifest_grammar() {
         assert_eq!(opkey::hd_transform(8192, 33), "hd_transform_n8192_c33");
         assert_eq!(opkey::batch_grad(64, 32), "batch_grad_r64_d32");
-        let unc = Constraint::Unconstrained;
+        let unc = crate::constraints::Unconstrained;
         assert_eq!(opkey::gd_step(&unc, 32), "gd_step_unc_d32");
         assert_eq!(
             opkey::sgd_chunk(&unc, 8192, 32, 64, 50),

@@ -5,8 +5,10 @@
 //! AOT-compiled L1/L2 graphs at the canonical shapes — and a third executor
 //! can be registered later without touching any solver. Per op call the
 //! facade computes the canonical op key ([`executor::opkey`]), checks
-//! PJRT eligibility (artifacts implement Euclidean projections only, so
-//! metric projections and box constraints are native-only), and routes to
+//! PJRT eligibility (artifacts implement the Euclidean unc/l1/l2
+//! projections only, so metric projections and every other constraint set
+//! are native-only — see [`crate::constraints::ConstraintSet::accel_eligible`]),
+//! and routes to
 //! the first executor whose registry claims the op; the native catch-all
 //! claims everything. The two paths are cross-validated in
 //! `rust/tests/pjrt_parity.rs`.
@@ -15,9 +17,9 @@ pub mod executor;
 
 pub use executor::{DispatchStats, Executor, NativeExecutor, PjrtExecutor};
 
+use crate::constraints::ConstraintSet;
 use crate::linalg::{CsrMat, Mat};
 use crate::prox::metric::MetricProjector;
-use crate::prox::Constraint;
 use crate::runtime::{Engine, EngineHandle};
 use crate::sketch::Sketch;
 use executor::opkey;
@@ -189,11 +191,13 @@ impl Backend {
         self.native.as_ref()
     }
 
-    /// Constrained calls with an active R-metric projector (or a box
-    /// constraint) must not leave the native executor.
-    fn projection_eligible(cons: &Constraint, metric: Option<&MetricProjector>) -> bool {
-        let metric_active = metric.is_some() && cons.tag() != "unc";
-        cons.tag() != "box" && !metric_active
+    /// Constrained calls may only leave the native executor when the set
+    /// itself is artifact-implemented ([`ConstraintSet::accel_eligible`] —
+    /// today: unc/l1/l2 Euclidean projections) *and* no R-metric projector
+    /// is active (the artifacts implement Euclidean projections only).
+    fn projection_eligible(cons: &dyn ConstraintSet, metric: Option<&MetricProjector>) -> bool {
+        let metric_active = metric.is_some() && !cons.is_unconstrained();
+        cons.accel_eligible() && !metric_active
     }
 
     // ---------------------------------------------------------------------
@@ -248,7 +252,7 @@ impl Backend {
         pinv: &Mat,
         g: &[f64],
         eta: f64,
-        cons: &Constraint,
+        cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> Vec<f64> {
         let op = opkey::gd_step(cons, x.len());
@@ -269,7 +273,7 @@ impl Backend {
         idx: &[Vec<usize>],
         eta: f64,
         scale: f64,
-        cons: &Constraint,
+        cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> (Vec<f64>, Vec<f64>) {
         let t = idx.len();
@@ -295,7 +299,7 @@ impl Backend {
         etas: &[f64],
         mu: f64,
         scale: f64,
-        cons: &Constraint,
+        cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> (Vec<f64>, Vec<f64>) {
         let t = idx.len();
@@ -317,7 +321,7 @@ impl Backend {
         pinv: &Mat,
         eta: f64,
         t: usize,
-        cons: &Constraint,
+        cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> Vec<f64> {
         let op = opkey::pw_gradient_chunk(cons, a.rows, a.cols, t);
@@ -403,11 +407,11 @@ mod tests {
         let be = Backend::native();
         let x = rng.gaussians(4);
         let g = rng.gaussians(4);
-        let cons = Constraint::L2Ball { radius: 0.1 };
+        let cons = crate::constraints::L2Ball { radius: 0.1 };
         let out = be.gd_step(&x, &pinv, &g, 0.5, &cons, None);
         assert!(cons.contains(&out, 1e-12));
         // unconstrained matches manual update
-        let unc = be.gd_step(&x, &pinv, &g, 0.5, &Constraint::Unconstrained, None);
+        let unc = be.gd_step(&x, &pinv, &g, 0.5, &crate::constraints::Unconstrained, None);
         for j in 0..4 {
             assert!((unc[j] - (x[j] - 0.5 * g[j])).abs() < 1e-12);
         }
@@ -438,7 +442,7 @@ mod tests {
             &idx,
             0.05,
             scale,
-            &Constraint::Unconstrained,
+            &crate::constraints::Unconstrained,
             None,
         );
         let f0 = blas::residual_sq(&a, &b, &x0);
@@ -458,7 +462,16 @@ mod tests {
         let be = Backend::native();
         let x0 = vec![0.0; 5];
         let x10 =
-            be.pw_gradient_chunk(&a, &b, &x0, &pinv, 0.5, 10, &Constraint::Unconstrained, None);
+            be.pw_gradient_chunk(
+                &a,
+                &b,
+                &x0,
+                &pinv,
+                0.5,
+                10,
+                &crate::constraints::Unconstrained,
+                None,
+            );
         // exact preconditioner + eta=1/2 solves in ONE step (Newton); after
         // 10 it must be at machine precision of the LS optimum
         let xstar = crate::linalg::qr::lstsq(&a, &b);
@@ -479,7 +492,7 @@ mod tests {
         let alphas: Vec<f64> = (1..=t).map(|k| 2.0 / (k as f64 + 1.0)).collect();
         let qs = alphas.clone();
         let etas = vec![0.05; t];
-        let cons = Constraint::L2Ball { radius: 0.5 };
+        let cons = crate::constraints::L2Ball { radius: 0.5 };
         let (x, xhat) = be.acc_chunk(
             &a,
             &b,
@@ -542,7 +555,7 @@ mod tests {
             _pinv: &Mat,
             _g: &[f64],
             _eta: f64,
-            _cons: &Constraint,
+            _cons: &dyn ConstraintSet,
             _metric: Option<&MetricProjector>,
         ) -> Vec<f64> {
             x.to_vec()
@@ -557,7 +570,7 @@ mod tests {
             _idx: &[Vec<usize>],
             _eta: f64,
             _scale: f64,
-            _cons: &Constraint,
+            _cons: &dyn ConstraintSet,
             _metric: Option<&MetricProjector>,
         ) -> (Vec<f64>, Vec<f64>) {
             (x0.to_vec(), x0.to_vec())
@@ -576,7 +589,7 @@ mod tests {
             _etas: &[f64],
             _mu: f64,
             _scale: f64,
-            _cons: &Constraint,
+            _cons: &dyn ConstraintSet,
             _metric: Option<&MetricProjector>,
         ) -> (Vec<f64>, Vec<f64>) {
             (x0.to_vec(), xhat0.to_vec())
@@ -590,7 +603,7 @@ mod tests {
             _pinv: &Mat,
             _eta: f64,
             _t: usize,
-            _cons: &Constraint,
+            _cons: &dyn ConstraintSet,
             _metric: Option<&MetricProjector>,
         ) -> Vec<f64> {
             x0.to_vec()

@@ -1,0 +1,326 @@
+//! The constraint subsystem: *which* convex set W a solve runs under.
+//!
+//! Every algorithm in this repository iterates `x <- Proj_W(x - eta g)`
+//! over an arbitrary convex W — the projection oracle is the pluggable part
+//! of the method (Pilanci & Wainwright's IHS and Cormode & Dickens' sketch
+//! -and-project both stress exactly this). This module makes the oracle a
+//! first-class extension point:
+//!
+//! * [`ConstraintSet`] — the trait every set implements: Euclidean
+//!   projection, membership, the Theorem-2 diameter term, a wire tag and a
+//!   parameter summary, plus the R-metric projection with a documented
+//!   fallback (ADMM splitting around the set's own Euclidean oracle, see
+//!   [`crate::prox::metric::MetricProjector::project_admm`]).
+//! * [`sets`] — the concrete sets: the paper's four
+//!   ([`Unconstrained`], [`L2Ball`], [`L1Ball`], [`ScalarBox`]) plus the
+//!   probability [`Simplex`], the nonnegative orthant [`NonNeg`], the
+//!   per-coordinate [`CoordBox`], the [`ElasticNetBall`], and
+//!   [`AffineEquality`] (`Cx = e`, cached QR of C^T).
+//! * [`spec`] — [`ConstraintSpec`]: the serde-friendly wire/CLI description
+//!   (`"simplex"`, `{"box": {"lo": [...], "hi": [...]}}`, `"l1:0.5"`, ...)
+//!   that [`crate::coordinator::JobRequest`] carries and builds into an
+//!   `Arc<dyn ConstraintSet>` per job.
+//!
+//! The four legacy sets reproduce the pre-trait enum arithmetic bit for bit
+//! (same projection functions in [`crate::prox`], same metric strategies in
+//! [`crate::prox::metric`]) — the golden/replay suites pin this.
+
+pub mod sets;
+pub mod spec;
+
+pub use sets::{
+    AffineEquality, CoordBox, ElasticNetBall, L1Ball, L2Ball, NonNeg, ScalarBox, Simplex,
+    Unconstrained,
+};
+pub use spec::ConstraintSpec;
+
+use crate::prox::metric::MetricProjector;
+use anyhow::Result;
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// A shared, type-erased constraint set — what [`crate::solvers::SolverOpts`]
+/// carries and every solver projects through.
+pub type ConstraintRef = Arc<dyn ConstraintSet>;
+
+/// A closed convex constraint set W with the oracles the solvers need.
+///
+/// Implementations must be cheap to share (`Send + Sync`, used behind
+/// [`Arc`]) and deterministic: `project` may not consume randomness, since
+/// it runs inside bit-replayed solve traces.
+pub trait ConstraintSet: Send + Sync + fmt::Debug {
+    /// Short stable tag ("unc", "l1", "box", "simplex", ...) — the op-key
+    /// component for executor routing and the constraint field of
+    /// [`crate::coordinator::JobResult`]. Must not encode parameters; those
+    /// go in [`ConstraintSet::params`].
+    fn tag(&self) -> &'static str;
+
+    /// Human-readable parameter summary ("radius=0.5", "lo=-1 hi=1", "")
+    /// used by reports and the CLI's constraint line. This replaces the old
+    /// enum's `radius()` as the reporting surface — a box's bounds, a
+    /// simplex's total, and an affine system's shape all survive into
+    /// artifacts of the run instead of flattening to `0.0`.
+    fn params(&self) -> String;
+
+    /// Euclidean projection onto W, in place.
+    fn project(&self, x: &mut [f64]);
+
+    /// Membership test with absolute tolerance `tol`.
+    fn contains(&self, x: &[f64], tol: f64) -> bool;
+
+    /// Diameter term D_W = sqrt(max 0.5||x||^2 - min 0.5||x||^2) from
+    /// Theorem 2, used by the theoretical step size. `None` for unbounded
+    /// sets (unconstrained, orthants, affine subspaces) — callers fall back
+    /// to an f(x0)-based surrogate.
+    fn diameter(&self) -> Option<f64>;
+
+    /// Projection onto W in the R-metric H = R^T R (the paper's Step-6
+    /// quadratic subproblem).
+    ///
+    /// Default — **the documented Euclidean-oracle fallback**: interior
+    /// points return unchanged, everything else runs
+    /// [`MetricProjector::project_admm`], which reduces the metric
+    /// projection to repeated *Euclidean* projections through
+    /// [`ConstraintSet::project`] (with H = I it collapses to a single
+    /// Euclidean projection). Correct for any closed convex set; sets with
+    /// cheaper exact solutions override (l2 ball: dual bisection; affine
+    /// equality: closed-form KKT; unconstrained: identity).
+    fn project_metric(&self, metric: &MetricProjector, z: &[f64]) -> Vec<f64> {
+        if self.contains(z, 0.0) {
+            return z.to_vec();
+        }
+        metric.project_admm(z, |u| self.project(u))
+    }
+
+    /// Whether this is W = R^d. Fast-path guard: unconstrained solves skip
+    /// the metric projector entirely.
+    fn is_unconstrained(&self) -> bool {
+        false
+    }
+
+    /// The ball-radius scalar the PJRT artifacts take as a runtime input.
+    /// Only meaningful for the ball sets the artifacts implement (l1/l2);
+    /// everything else reports `0.0` and is never routed to an accelerated
+    /// executor (see [`ConstraintSet::accel_eligible`]). Reporting surfaces
+    /// must use [`ConstraintSet::params`] instead.
+    fn radius(&self) -> f64 {
+        0.0
+    }
+
+    /// Whether an accelerated (PJRT) executor may run this set's projected
+    /// steps. Only the Euclidean unc/l1/l2 projections exist as compiled
+    /// artifacts; every other set — and any set under an active R-metric —
+    /// stays on the native executor. Defaults to `false`, so new sets are
+    /// automatically native-only.
+    fn accel_eligible(&self) -> bool {
+        false
+    }
+
+    /// Validate this set against the problem dimension `d` (vector-valued
+    /// boxes and affine systems are dimension-typed; scalar sets accept any
+    /// `d`). Called once per job by the coordinator before the first trial.
+    fn check_dim(&self, d: usize) -> Result<()> {
+        let _ = d;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// constructors
+// ---------------------------------------------------------------------------
+
+/// W = R^d.
+pub fn unconstrained() -> ConstraintRef {
+    Arc::new(Unconstrained)
+}
+
+/// W = {x : ||x||_1 <= radius}.
+pub fn l1_ball(radius: f64) -> ConstraintRef {
+    Arc::new(L1Ball { radius })
+}
+
+/// W = {x : ||x||_2 <= radius}.
+pub fn l2_ball(radius: f64) -> ConstraintRef {
+    Arc::new(L2Ball { radius })
+}
+
+/// W = {x : lo <= x_i <= hi for every i} (one scalar bound pair).
+pub fn scalar_box(lo: f64, hi: f64) -> ConstraintRef {
+    Arc::new(ScalarBox { lo, hi })
+}
+
+/// W = {x : x_i >= 0} — nonnegative least squares.
+pub fn nonneg() -> ConstraintRef {
+    Arc::new(NonNeg)
+}
+
+/// W = {x : x_i >= 0, sum_i x_i = total} — the scaled probability simplex
+/// (portfolio weights, mixture fits; `total = 1` is the standard simplex).
+pub fn simplex(total: f64) -> ConstraintRef {
+    Arc::new(Simplex { total })
+}
+
+/// W = {x : lo_i <= x_i <= hi_i} with per-coordinate bounds.
+pub fn coord_box(lo: Vec<f64>, hi: Vec<f64>) -> ConstraintRef {
+    Arc::new(CoordBox { lo, hi })
+}
+
+/// W = {x : alpha ||x||_1 + (1 - alpha)/2 ||x||_2^2 <= radius} — the
+/// elastic-net ball from the sparse-recovery literature.
+pub fn elastic_net(alpha: f64, radius: f64) -> ConstraintRef {
+    Arc::new(ElasticNetBall { alpha, radius })
+}
+
+/// W = {x : Cx = e} for a small full-row-rank C (k x d, k <= d) — equality
+/// -constrained calibration. Fails if the rows of C are linearly dependent.
+pub fn affine_eq(c: crate::linalg::Mat, e: Vec<f64>) -> Result<ConstraintRef> {
+    Ok(Arc::new(AffineEquality::new(c, e)?))
+}
+
+// ---------------------------------------------------------------------------
+// projection counter
+// ---------------------------------------------------------------------------
+
+/// A counting decorator around a [`ConstraintSet`]: delegates every oracle
+/// call and counts the projections (Euclidean and metric), so the
+/// coordinator can report a `projections` figure per job and the serve
+/// metrics can aggregate projection throughput. No-op projections of the
+/// unconstrained set are not counted.
+#[derive(Debug)]
+pub struct ProjectionCounter {
+    inner: ConstraintRef,
+    count: AtomicUsize,
+}
+
+impl ProjectionCounter {
+    /// Wrap `inner` in a fresh counter.
+    pub fn wrap(inner: ConstraintRef) -> Arc<ProjectionCounter> {
+        Arc::new(ProjectionCounter {
+            inner,
+            count: AtomicUsize::new(0),
+        })
+    }
+
+    /// Projections observed so far (Euclidean + metric).
+    pub fn count(&self) -> usize {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    fn bump(&self) {
+        if !self.inner.is_unconstrained() {
+            self.count.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+impl ConstraintSet for ProjectionCounter {
+    fn tag(&self) -> &'static str {
+        self.inner.tag()
+    }
+
+    fn params(&self) -> String {
+        self.inner.params()
+    }
+
+    fn project(&self, x: &mut [f64]) {
+        self.bump();
+        self.inner.project(x)
+    }
+
+    fn contains(&self, x: &[f64], tol: f64) -> bool {
+        self.inner.contains(x, tol)
+    }
+
+    fn diameter(&self) -> Option<f64> {
+        self.inner.diameter()
+    }
+
+    fn project_metric(&self, metric: &MetricProjector, z: &[f64]) -> Vec<f64> {
+        self.bump();
+        // delegate to the *inner* strategy (exact bisection / KKT / ADMM) —
+        // the decorator must not downgrade a specialized metric projection
+        // to the generic fallback
+        self.inner.project_metric(metric, z)
+    }
+
+    fn is_unconstrained(&self) -> bool {
+        self.inner.is_unconstrained()
+    }
+
+    fn radius(&self) -> f64 {
+        self.inner.radius()
+    }
+
+    fn accel_eligible(&self) -> bool {
+        self.inner.accel_eligible()
+    }
+
+    fn check_dim(&self, d: usize) -> Result<()> {
+        self.inner.check_dim(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_expose_tags_and_params() {
+        assert_eq!(unconstrained().tag(), "unc");
+        assert_eq!(l1_ball(0.5).tag(), "l1");
+        assert_eq!(l1_ball(0.5).params(), "radius=0.5");
+        assert_eq!(l2_ball(2.0).params(), "radius=2");
+        assert_eq!(scalar_box(-1.0, 1.0).tag(), "box");
+        assert_eq!(scalar_box(-1.0, 1.0).params(), "lo=-1 hi=1");
+        assert_eq!(nonneg().tag(), "nonneg");
+        assert_eq!(simplex(1.0).tag(), "simplex");
+        assert_eq!(simplex(2.0).params(), "total=2");
+        assert_eq!(elastic_net(0.5, 1.0).tag(), "enet");
+        assert_eq!(coord_box(vec![0.0], vec![1.0]).tag(), "box");
+    }
+
+    #[test]
+    fn accel_eligibility_matches_the_artifact_surface() {
+        assert!(unconstrained().accel_eligible());
+        assert!(l1_ball(1.0).accel_eligible());
+        assert!(l2_ball(1.0).accel_eligible());
+        for cons in [
+            scalar_box(-1.0, 1.0),
+            nonneg(),
+            simplex(1.0),
+            elastic_net(0.5, 1.0),
+            coord_box(vec![0.0], vec![1.0]),
+        ] {
+            assert!(!cons.accel_eligible(), "{} must be native-only", cons.tag());
+        }
+    }
+
+    #[test]
+    fn projection_counter_counts_and_delegates() {
+        let counted = ProjectionCounter::wrap(l2_ball(1.0));
+        let mut x = vec![3.0, 4.0];
+        counted.project(&mut x);
+        assert!((crate::linalg::blas::nrm2(&x) - 1.0).abs() < 1e-12);
+        assert_eq!(counted.count(), 1);
+        assert_eq!(counted.tag(), "l2");
+        assert_eq!(counted.radius(), 1.0);
+        assert!(counted.accel_eligible());
+        assert!(counted.contains(&x, 1e-12));
+        // the wrapper coerces to the shared trait object type
+        let as_ref: ConstraintRef = counted.clone();
+        let mut y = vec![0.1, 0.1];
+        as_ref.project(&mut y);
+        assert_eq!(counted.count(), 2);
+    }
+
+    #[test]
+    fn projection_counter_ignores_unconstrained_noops() {
+        let counted = ProjectionCounter::wrap(unconstrained());
+        let mut x = vec![1e9];
+        counted.project(&mut x);
+        counted.project(&mut x);
+        assert_eq!(counted.count(), 0);
+        assert!(counted.is_unconstrained());
+    }
+}

@@ -1,0 +1,700 @@
+//! The concrete constraint sets.
+//!
+//! The paper's four (unconstrained, l1/l2 ball, scalar box) reproduce the
+//! pre-trait enum arithmetic bit for bit; the remaining sets open the
+//! workload classes the enum could not express: probability-simplex
+//! portfolio fits ([`Simplex`]), nonnegative least squares ([`NonNeg`]),
+//! bound-constrained calibration with per-coordinate limits ([`CoordBox`]),
+//! elastic-net-ball sparse recovery ([`ElasticNetBall`]), and equality
+//! -constrained calibration ([`AffineEquality`]).
+//!
+//! Projection math lives in [`crate::prox`] (Euclidean) and
+//! [`crate::prox::metric`] (R-metric primitives); this file wires each set
+//! to its operators and documents the per-set complexity.
+
+use super::ConstraintSet;
+use crate::linalg::blas::{self, nrm2};
+use crate::linalg::{qr, tri, Mat};
+use crate::prox::metric::MetricProjector;
+use crate::prox::{
+    elastic_net_value, project_elastic_net, project_l1, project_l2, project_simplex,
+};
+use anyhow::{ensure, Result};
+use std::fmt;
+
+/// W = R^d — no projection, no diameter, PJRT-eligible.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Unconstrained;
+
+impl ConstraintSet for Unconstrained {
+    fn tag(&self) -> &'static str {
+        "unc"
+    }
+
+    fn params(&self) -> String {
+        String::new()
+    }
+
+    fn project(&self, _x: &mut [f64]) {}
+
+    fn contains(&self, _x: &[f64], _tol: f64) -> bool {
+        true
+    }
+
+    fn diameter(&self) -> Option<f64> {
+        None
+    }
+
+    fn project_metric(&self, _metric: &MetricProjector, z: &[f64]) -> Vec<f64> {
+        z.to_vec()
+    }
+
+    fn is_unconstrained(&self) -> bool {
+        true
+    }
+
+    fn accel_eligible(&self) -> bool {
+        true
+    }
+}
+
+/// W = {x : ||x||_2 <= radius}. Euclidean projection is radial rescaling
+/// (O(d)); the metric projection is the exact dual bisection
+/// ([`MetricProjector::project_l2_ball`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct L2Ball {
+    /// Ball radius (> 0).
+    pub radius: f64,
+}
+
+impl ConstraintSet for L2Ball {
+    fn tag(&self) -> &'static str {
+        "l2"
+    }
+
+    fn params(&self) -> String {
+        format!("radius={}", self.radius)
+    }
+
+    fn project(&self, x: &mut [f64]) {
+        project_l2(x, self.radius)
+    }
+
+    fn contains(&self, x: &[f64], tol: f64) -> bool {
+        nrm2(x) <= self.radius + tol
+    }
+
+    fn diameter(&self) -> Option<f64> {
+        Some(self.radius / 2f64.sqrt())
+    }
+
+    fn project_metric(&self, metric: &MetricProjector, z: &[f64]) -> Vec<f64> {
+        metric.project_l2_ball(z, self.radius)
+    }
+
+    fn radius(&self) -> f64 {
+        self.radius
+    }
+
+    fn accel_eligible(&self) -> bool {
+        true
+    }
+}
+
+/// W = {x : ||x||_1 <= radius}. Euclidean projection is the O(d log d)
+/// Duchi pivot ([`project_l1`]); the metric projection runs ADMM with the
+/// l1 pivot as its Euclidean oracle (interior points short-circuit).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct L1Ball {
+    /// Ball radius (> 0).
+    pub radius: f64,
+}
+
+impl ConstraintSet for L1Ball {
+    fn tag(&self) -> &'static str {
+        "l1"
+    }
+
+    fn params(&self) -> String {
+        format!("radius={}", self.radius)
+    }
+
+    fn project(&self, x: &mut [f64]) {
+        project_l1(x, self.radius)
+    }
+
+    fn contains(&self, x: &[f64], tol: f64) -> bool {
+        x.iter().map(|v| v.abs()).sum::<f64>() <= self.radius + tol
+    }
+
+    fn diameter(&self) -> Option<f64> {
+        Some(self.radius / 2f64.sqrt())
+    }
+
+    // project_metric: the inherited default (interior short-circuit + ADMM
+    // around `project`) IS the pre-trait l1 metric path bit for bit — the
+    // old code checked `l1 <= radius` (== `contains(z, 0.0)`) and ran ADMM
+    // with the Duchi pivot as its oracle, exactly what the default does.
+
+    fn radius(&self) -> f64 {
+        self.radius
+    }
+
+    fn accel_eligible(&self) -> bool {
+        true
+    }
+}
+
+/// W = {x : lo <= x_i <= hi} with one scalar bound pair for every
+/// coordinate — the legacy box. O(d) clamp; the metric projection is ADMM
+/// with the clamp oracle (no interior short-circuit, preserving the
+/// pre-trait arithmetic exactly).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScalarBox {
+    /// Lower bound applied to every coordinate.
+    pub lo: f64,
+    /// Upper bound applied to every coordinate.
+    pub hi: f64,
+}
+
+impl ConstraintSet for ScalarBox {
+    fn tag(&self) -> &'static str {
+        "box"
+    }
+
+    fn params(&self) -> String {
+        format!("lo={} hi={}", self.lo, self.hi)
+    }
+
+    fn project(&self, x: &mut [f64]) {
+        for v in x {
+            *v = v.clamp(self.lo, self.hi);
+        }
+    }
+
+    fn contains(&self, x: &[f64], tol: f64) -> bool {
+        x.iter().all(|&v| v >= self.lo - tol && v <= self.hi + tol)
+    }
+
+    fn diameter(&self) -> Option<f64> {
+        // LEGACY convention (bit-compat with the pre-trait enum): the
+        // per-coordinate bound m/sqrt(2), NOT scaled by sqrt(d) — an
+        // underestimate of the exact D_W that [`CoordBox`] implements. The
+        // same geometric set therefore reports a smaller diameter (and a
+        // smaller theory step) through `ScalarBox` than through a constant
+        // `CoordBox`; callers who want the exact bound use the vector form.
+        let m = self.lo.abs().max(self.hi.abs());
+        Some(m / 2f64.sqrt())
+    }
+
+    fn project_metric(&self, metric: &MetricProjector, z: &[f64]) -> Vec<f64> {
+        // box: coordinate-separable only in the Euclidean metric; use ADMM
+        // with a clamp in place of the l1 projection
+        let (lo, hi) = (self.lo, self.hi);
+        metric.project_admm(z, |u| {
+            for v in u.iter_mut() {
+                *v = v.clamp(lo, hi);
+            }
+        })
+    }
+}
+
+/// W = {x : x_i >= 0} — nonnegative least squares. O(d) clamp at zero;
+/// unbounded, so no diameter term.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NonNeg;
+
+impl ConstraintSet for NonNeg {
+    fn tag(&self) -> &'static str {
+        "nonneg"
+    }
+
+    fn params(&self) -> String {
+        String::new()
+    }
+
+    fn project(&self, x: &mut [f64]) {
+        for v in x {
+            *v = v.max(0.0);
+        }
+    }
+
+    fn contains(&self, x: &[f64], tol: f64) -> bool {
+        x.iter().all(|&v| v >= -tol)
+    }
+
+    fn diameter(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// W = {x : x_i >= 0, sum_i x_i = total} — the scaled probability simplex
+/// (`total = 1` is the standard simplex of portfolio weights / mixture
+/// coefficients). Euclidean projection is the O(d log d) sort-based pivot
+/// ([`project_simplex`]); the metric path uses the inherited ADMM fallback
+/// with that pivot as its oracle.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Simplex {
+    /// Coordinate sum (> 0); 1 for the standard probability simplex.
+    pub total: f64,
+}
+
+impl ConstraintSet for Simplex {
+    fn tag(&self) -> &'static str {
+        "simplex"
+    }
+
+    fn params(&self) -> String {
+        format!("total={}", self.total)
+    }
+
+    fn project(&self, x: &mut [f64]) {
+        project_simplex(x, self.total)
+    }
+
+    fn contains(&self, x: &[f64], tol: f64) -> bool {
+        x.iter().all(|&v| v >= -tol) && (x.iter().sum::<f64>() - self.total).abs() <= tol
+    }
+
+    fn diameter(&self) -> Option<f64> {
+        // the simplex sits inside the l1 ball of radius `total`; use the
+        // ball convention for the Theorem-2 term
+        Some(self.total / 2f64.sqrt())
+    }
+}
+
+/// W = {x : lo_i <= x_i <= hi_i} — per-coordinate bounds. O(d) clamp;
+/// dimension-typed, so [`ConstraintSet::check_dim`] enforces that the bound
+/// vectors match the dataset's `d`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoordBox {
+    /// Per-coordinate lower bounds (length d).
+    pub lo: Vec<f64>,
+    /// Per-coordinate upper bounds (length d).
+    pub hi: Vec<f64>,
+}
+
+impl ConstraintSet for CoordBox {
+    fn tag(&self) -> &'static str {
+        "box"
+    }
+
+    fn params(&self) -> String {
+        if self.lo.len() <= 4 {
+            format!("lo={:?} hi={:?}", self.lo, self.hi)
+        } else {
+            // long vectors summarize as ranges — the bounds still reach
+            // reports (the whole point of params over the old radius())
+            let range = |v: &[f64]| {
+                let lo = v.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                format!("[{lo}..{hi}]")
+            };
+            format!(
+                "d={} lo={} hi={}",
+                self.lo.len(),
+                range(&self.lo),
+                range(&self.hi)
+            )
+        }
+    }
+
+    fn project(&self, x: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.lo.len(), "CoordBox dimension mismatch");
+        for ((v, &lo), &hi) in x.iter_mut().zip(&self.lo).zip(&self.hi) {
+            *v = v.clamp(lo, hi);
+        }
+    }
+
+    fn contains(&self, x: &[f64], tol: f64) -> bool {
+        x.len() == self.lo.len()
+            && x.iter()
+                .zip(&self.lo)
+                .zip(&self.hi)
+                .all(|((&v, &lo), &hi)| v >= lo - tol && v <= hi + tol)
+    }
+
+    fn diameter(&self) -> Option<f64> {
+        // the exact Theorem-2 bound: max ||x||^2 over the box is
+        // sum_i max(lo_i^2, hi_i^2), min >= 0. Deliberately NOT the legacy
+        // per-coordinate convention `ScalarBox` keeps for bit-compat.
+        let max_sq: f64 = self
+            .lo
+            .iter()
+            .zip(&self.hi)
+            .map(|(&lo, &hi)| (lo * lo).max(hi * hi))
+            .sum();
+        Some((0.5 * max_sq).sqrt())
+    }
+
+    fn check_dim(&self, d: usize) -> Result<()> {
+        ensure!(
+            self.lo.len() == d && self.hi.len() == d,
+            "box bounds are {}-dimensional but the dataset has d={}",
+            self.lo.len(),
+            d
+        );
+        Ok(())
+    }
+}
+
+/// W = {x : alpha ||x||_1 + (1 - alpha)/2 ||x||_2^2 <= radius} — the
+/// elastic-net ball. Euclidean projection bisects the scalar dual
+/// multiplier ([`project_elastic_net`], O(d) per bisection); the metric
+/// path uses the inherited ADMM fallback. Degenerates to the l1 ball at
+/// `alpha = 1` and to the l2 ball of radius `sqrt(2 radius)` at
+/// `alpha = 0`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ElasticNetBall {
+    /// l1/l2 trade-off in [0, 1].
+    pub alpha: f64,
+    /// Sublevel value (> 0).
+    pub radius: f64,
+}
+
+impl ElasticNetBall {
+    /// The largest feasible ||x||_2: the positive root of
+    /// (1-alpha)/2 rho^2 + alpha rho = radius (any x with ||x||_1 >= ||x||_2
+    /// outside that l2 ball violates the constraint).
+    fn l2_bound(&self) -> f64 {
+        if self.alpha >= 1.0 {
+            self.radius
+        } else {
+            let a = self.alpha;
+            ((a * a + 2.0 * (1.0 - a) * self.radius).sqrt() - a) / (1.0 - a)
+        }
+    }
+}
+
+impl ConstraintSet for ElasticNetBall {
+    fn tag(&self) -> &'static str {
+        "enet"
+    }
+
+    fn params(&self) -> String {
+        format!("alpha={} radius={}", self.alpha, self.radius)
+    }
+
+    fn project(&self, x: &mut [f64]) {
+        project_elastic_net(x, self.alpha, self.radius)
+    }
+
+    fn contains(&self, x: &[f64], tol: f64) -> bool {
+        elastic_net_value(x, self.alpha) <= self.radius + tol
+    }
+
+    fn diameter(&self) -> Option<f64> {
+        Some(self.l2_bound() / 2f64.sqrt())
+    }
+}
+
+/// W = {x : Cx = e} for a small full-row-rank C (k x d, k <= d) — equality
+/// -constrained calibration (e.g. fixed totals, pinned coefficients).
+///
+/// Construction caches the thin QR of C^T once: with C^T = QR, the
+/// Euclidean projection is the O(dk) affine map
+/// `x* = (I - QQ^T) x + Q R^{-T} e` (the `Q R^{-T} e` shift is
+/// precomputed). The metric projection overrides the ADMM fallback with the
+/// exact KKT solve `x* = z - H^{-1} C^T lam`, where
+/// `(C H^{-1} C^T) lam = Cz - e` is a k x k system assembled through
+/// [`MetricProjector::h_inv_apply`].
+#[derive(Clone)]
+pub struct AffineEquality {
+    c: Mat,
+    e: Vec<f64>,
+    /// Orthonormal basis of range(C^T) (d x k) from the cached QR.
+    q: Mat,
+    /// Precomputed Q R^{-T} e — the particular-solution shift.
+    shift: Vec<f64>,
+}
+
+impl fmt::Debug for AffineEquality {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("AffineEquality")
+            .field("k", &self.c.rows)
+            .field("d", &self.c.cols)
+            .finish()
+    }
+}
+
+impl AffineEquality {
+    /// Build the set, caching the QR of C^T. Fails when the shape is
+    /// degenerate (k = 0, k > d, |e| != k) or the rows of C are linearly
+    /// dependent (a rank-deficient system has either redundant or
+    /// inconsistent rows — reformulate with independent rows).
+    pub fn new(c: Mat, e: Vec<f64>) -> Result<AffineEquality> {
+        let (k, d) = (c.rows, c.cols);
+        ensure!(k > 0 && d > 0, "affine constraint must be non-empty");
+        ensure!(
+            k <= d,
+            "affine constraint has more rows (k={k}) than dimensions (d={d})"
+        );
+        ensure!(
+            e.len() == k,
+            "affine rhs has {} entries for {k} constraint rows",
+            e.len()
+        );
+        let fact = qr::qr(&c.transpose());
+        let q = fact.q.expect("qr with q");
+        let max_diag = (0..k).map(|i| fact.r.at(i, i)).fold(0.0f64, f64::max);
+        for i in 0..k {
+            ensure!(
+                fact.r.at(i, i) > 1e-12 * max_diag.max(1e-300),
+                "rows of C are linearly dependent (pivot {i} of the QR of C^T vanished)"
+            );
+        }
+        // shift = Q R^{-T} e (the minimum-norm solution of Cx = e)
+        let shift = blas::gemv(&q, &tri::solve_upper_t(&fact.r, &e));
+        Ok(AffineEquality { c, e, q, shift })
+    }
+
+    /// The constraint matrix C (k x d).
+    pub fn matrix(&self) -> &Mat {
+        &self.c
+    }
+
+    /// The right-hand side e (length k).
+    pub fn rhs(&self) -> &[f64] {
+        &self.e
+    }
+}
+
+impl ConstraintSet for AffineEquality {
+    fn tag(&self) -> &'static str {
+        "affine"
+    }
+
+    fn params(&self) -> String {
+        format!("k={} d={}", self.c.rows, self.c.cols)
+    }
+
+    fn project(&self, x: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.c.cols, "AffineEquality dimension mismatch");
+        // x* = x - Q (Q^T x) + shift
+        let qtx = blas::gemv_t(&self.q, x);
+        let corr = blas::gemv(&self.q, &qtx);
+        for ((v, ci), si) in x.iter_mut().zip(&corr).zip(&self.shift) {
+            *v = *v - ci + si;
+        }
+    }
+
+    fn contains(&self, x: &[f64], tol: f64) -> bool {
+        x.len() == self.c.cols
+            && (0..self.c.rows)
+                .all(|i| (blas::dot(self.c.row(i), x) - self.e[i]).abs() <= tol)
+    }
+
+    fn diameter(&self) -> Option<f64> {
+        None // affine subspaces are unbounded
+    }
+
+    fn project_metric(&self, metric: &MetricProjector, z: &[f64]) -> Vec<f64> {
+        // exact KKT: x = z - H^{-1} C^T lam with (C H^{-1} C^T) lam = Cz - e
+        let k = self.c.rows;
+        let hic: Vec<Vec<f64>> = (0..k).map(|i| metric.h_inv_apply(self.c.row(i))).collect();
+        let mut mkk = Mat::zeros(k, k);
+        let mut rhs = vec![0.0; k];
+        for i in 0..k {
+            for j in 0..k {
+                *mkk.at_mut(i, j) = blas::dot(self.c.row(i), &hic[j]);
+            }
+            rhs[i] = blas::dot(self.c.row(i), z) - self.e[i];
+        }
+        let lam = qr::lstsq(&mkk, &rhs);
+        let mut x = z.to_vec();
+        for (li, hi) in lam.iter().zip(&hic) {
+            for (xj, hj) in x.iter_mut().zip(hi) {
+                *xj -= li * hj;
+            }
+        }
+        x
+    }
+
+    fn check_dim(&self, d: usize) -> Result<()> {
+        ensure!(
+            self.c.cols == d,
+            "affine constraint is {}-dimensional but the dataset has d={}",
+            self.c.cols,
+            d
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn legacy_sets_match_pre_trait_behavior() {
+        // box clamp + contains
+        let c = ScalarBox { lo: -1.0, hi: 1.0 };
+        let mut x = vec![-5.0, 0.5, 7.0];
+        c.project(&mut x);
+        assert_eq!(x, vec![-1.0, 0.5, 1.0]);
+        assert!(c.contains(&x, 1e-12));
+        // l2 dispatch + radius accessor
+        let mut y = vec![3.0, 4.0];
+        let l2 = L2Ball { radius: 1.0 };
+        assert!(!l2.contains(&y, 0.0));
+        l2.project(&mut y);
+        assert!(l2.contains(&y, 1e-12));
+        assert_eq!(l2.tag(), "l2");
+        assert_eq!(ConstraintSet::radius(&l2), 1.0);
+        // unconstrained is a no-op
+        let u = Unconstrained;
+        let mut z = vec![1e9];
+        u.project(&mut z);
+        assert_eq!(z, vec![1e9]);
+        assert!(u.contains(&z, 0.0));
+        // degenerate box pins every coordinate
+        let pin = ScalarBox { lo: 0.7, hi: 0.7 };
+        let mut w = vec![-3.0, 0.7, 12.0, 0.0];
+        pin.project(&mut w);
+        assert_eq!(w, vec![0.7; 4]);
+    }
+
+    #[test]
+    fn legacy_diameters_unchanged() {
+        assert_eq!(Unconstrained.diameter(), None);
+        assert_eq!(L2Ball { radius: 2.0 }.diameter(), Some(2.0 / 2f64.sqrt()));
+        assert_eq!(L1Ball { radius: 2.0 }.diameter(), Some(2.0 / 2f64.sqrt()));
+        assert_eq!(
+            ScalarBox { lo: -1.0, hi: 3.0 }.diameter(),
+            Some(3.0 / 2f64.sqrt())
+        );
+    }
+
+    #[test]
+    fn nonneg_projects_and_reports() {
+        let mut x = vec![-2.0, 0.0, 3.5];
+        NonNeg.project(&mut x);
+        assert_eq!(x, vec![0.0, 0.0, 3.5]);
+        assert!(NonNeg.contains(&x, 0.0));
+        assert!(!NonNeg.contains(&[-0.1], 1e-3));
+        assert!(NonNeg.contains(&[-0.1], 0.2));
+        assert_eq!(NonNeg.diameter(), None);
+    }
+
+    #[test]
+    fn simplex_set_projects_onto_simplex() {
+        let s = Simplex { total: 1.0 };
+        let mut x = vec![2.0, -1.0, 0.5];
+        s.project(&mut x);
+        assert!(s.contains(&x, 1e-12), "{x:?}");
+        assert_eq!(s.diameter(), Some(1.0 / 2f64.sqrt()));
+    }
+
+    #[test]
+    fn coord_box_clamps_per_coordinate_and_checks_dim() {
+        let b = CoordBox {
+            lo: vec![0.0, -1.0, 2.0],
+            hi: vec![1.0, 1.0, 2.0],
+        };
+        let mut x = vec![-5.0, 0.5, 7.0];
+        b.project(&mut x);
+        assert_eq!(x, vec![0.0, 0.5, 2.0]);
+        assert!(b.contains(&x, 0.0));
+        assert!(!b.contains(&[0.0, 0.0], 1.0), "length mismatch is infeasible");
+        assert!(b.check_dim(3).is_ok());
+        assert!(b.check_dim(4).is_err());
+        // diameter: sqrt(sum max(lo^2, hi^2) / 2)
+        let want = ((1.0f64 + 1.0 + 4.0) / 2.0).sqrt();
+        assert!((b.diameter().unwrap() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn elastic_net_ball_bounds_and_projects() {
+        let e = ElasticNetBall {
+            alpha: 0.5,
+            radius: 1.0,
+        };
+        let mut x = vec![4.0, -3.0, 2.0];
+        e.project(&mut x);
+        assert!(e.contains(&x, 1e-9), "{x:?}");
+        // l2_bound solves (1-a)/2 rho^2 + a rho = r
+        let rho = e.l2_bound();
+        assert!((0.25 * rho * rho + 0.5 * rho - 1.0).abs() < 1e-12);
+        // alpha = 1 degenerates to the l1 radius
+        let l1ish = ElasticNetBall {
+            alpha: 1.0,
+            radius: 2.0,
+        };
+        assert_eq!(l1ish.l2_bound(), 2.0);
+    }
+
+    #[test]
+    fn affine_equality_projects_onto_the_subspace() {
+        let mut rng = Rng::new(1);
+        // 2 x 5 system with independent rows
+        let c = Mat::gaussian(2, 5, &mut rng);
+        let e = vec![1.0, -0.5];
+        let set = AffineEquality::new(c.clone(), e.clone()).unwrap();
+        for _ in 0..20 {
+            let mut x = rng.gaussians(5);
+            set.project(&mut x);
+            assert!(set.contains(&x, 1e-9), "Cx != e after projection");
+            // idempotent
+            let once = x.clone();
+            set.project(&mut x);
+            for (a, b) in x.iter().zip(&once) {
+                assert!((a - b).abs() < 1e-10);
+            }
+        }
+        assert_eq!(set.tag(), "affine");
+        assert_eq!(set.params(), "k=2 d=5");
+        assert!(set.check_dim(5).is_ok());
+        assert!(set.check_dim(6).is_err());
+    }
+
+    #[test]
+    fn affine_equality_rejects_degenerate_systems() {
+        let mut rng = Rng::new(2);
+        // duplicate rows => rank deficient
+        let row = rng.gaussians(4);
+        let mut c = Mat::zeros(2, 4);
+        c.row_mut(0).copy_from_slice(&row);
+        c.row_mut(1).copy_from_slice(&row);
+        assert!(AffineEquality::new(c, vec![1.0, 2.0]).is_err());
+        // rhs length mismatch
+        let ok = Mat::gaussian(2, 4, &mut rng);
+        assert!(AffineEquality::new(ok.clone(), vec![1.0]).is_err());
+        // more rows than dims
+        let wide = Mat::gaussian(5, 3, &mut rng);
+        assert!(AffineEquality::new(wide, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn affine_metric_projection_satisfies_kkt() {
+        let mut rng = Rng::new(3);
+        let c = Mat::gaussian(2, 6, &mut rng);
+        let e = vec![0.7, -1.2];
+        let set = AffineEquality::new(c.clone(), e.clone()).unwrap();
+        // an ill-conditioned H
+        let a = Mat::from_fn(60, 6, |_i, j| rng.gaussian() * 10f64.powi(j as i32));
+        let r = qr::qr_r(&a);
+        let m = MetricProjector::from_r(&r);
+        let z = rng.gaussians(6);
+        let x = set.project_metric(&m, &z);
+        // feasibility
+        assert!(set.contains(&x, 1e-7), "Cx != e after metric projection");
+        // stationarity: H (x - z) must lie in range(C^T)
+        let h = blas::gemm(&r.transpose(), &r);
+        let diff = blas::sub(&x, &z);
+        let grad = blas::gemv(&h, &diff);
+        // residual of grad after projecting onto range(C^T) must vanish:
+        // grad - Q Q^T grad == 0
+        let qr_ct = qr::qr(&c.transpose());
+        let q = qr_ct.q.unwrap();
+        let qt = blas::gemv_t(&q, &grad);
+        let back = blas::gemv(&q, &qt);
+        let scale = 1.0 + blas::nrm2(&grad);
+        for (g, b) in grad.iter().zip(&back) {
+            assert!(
+                (g - b).abs() < 1e-6 * scale,
+                "gradient leaves range(C^T): {g} vs {b}"
+            );
+        }
+    }
+}

@@ -1,0 +1,704 @@
+//! [`ConstraintSpec`] — the serde-friendly wire/CLI description of a
+//! constraint set.
+//!
+//! A spec is what travels in a [`crate::coordinator::JobRequest`] (JSON
+//! field `constraint`) and on the CLI (`--constraint`); the coordinator
+//! resolves derived radii against the ground truth and calls
+//! [`ConstraintSpec::build`] to obtain the `Arc<dyn ConstraintSet>` the
+//! solvers project through.
+//!
+//! Accepted forms (every set has both a compact string and a JSON shape):
+//!
+//! | set            | string            | JSON                                          |
+//! |----------------|-------------------|-----------------------------------------------|
+//! | unconstrained  | `"unc"`           | `"unc"`                                       |
+//! | l1 ball        | `"l1"`, `"l1:0.5"`| `{"l1": 0.5}` / `{"l1": {"radius": 0.5}}`     |
+//! | l2 ball        | `"l2"`, `"l2:2"`  | `{"l2": 2}` / `{"l2": {"radius": 2}}`         |
+//! | nonneg orthant | `"nonneg"`        | `"nonneg"`                                    |
+//! | simplex        | `"simplex"`, `"simplex:2"` | `{"simplex": 2}` / `{"simplex": {"total": 2}}` |
+//! | scalar box     | `"box:-1,1"`      | `{"box": {"lo": -1, "hi": 1}}`                |
+//! | coord box      | —                 | `{"box": {"lo": [..], "hi": [..]}}`           |
+//! | elastic net    | `"enet:0.5,1"`    | `{"elastic_net": {"alpha": 0.5, "radius": 1}}`|
+//! | affine Cx = e  | —                 | `{"affine_eq": {"c": [[..],..], "e": [..]}}`  |
+//!
+//! A radius of 0 on the ball-like sets means "derive from the
+//! unconstrained optimum" — the paper's protocol (l1/l2: the norm of x*,
+//! elastic net: the penalty value at x*). Parsing is strict and errors
+//! carry the offending path (`constraint.box.lo[2]: ...`), so a bad spec on
+//! the serve socket comes back as a precise one-line error.
+
+use super::ConstraintRef;
+use crate::linalg::Mat;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// A parsed, validated constraint description (see the module docs for the
+/// accepted wire forms). `build` turns it into the runtime
+/// [`super::ConstraintSet`]; until then it is plain data — comparable,
+/// clonable, and serializable back to JSON.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub enum ConstraintSpec {
+    /// W = R^d.
+    #[default]
+    Unconstrained,
+    /// l1 ball; `radius = 0` derives from the unconstrained optimum.
+    L1Ball {
+        /// Ball radius (0 = derive).
+        radius: f64,
+    },
+    /// l2 ball; `radius = 0` derives from the unconstrained optimum.
+    L2Ball {
+        /// Ball radius (0 = derive).
+        radius: f64,
+    },
+    /// Nonnegative orthant.
+    NonNeg,
+    /// Scaled probability simplex.
+    Simplex {
+        /// Coordinate sum (> 0).
+        total: f64,
+    },
+    /// One scalar bound pair for every coordinate.
+    ScalarBox {
+        /// Lower bound.
+        lo: f64,
+        /// Upper bound.
+        hi: f64,
+    },
+    /// Per-coordinate bounds (dimension-typed; validated against the
+    /// dataset's d at job admission).
+    CoordBox {
+        /// Per-coordinate lower bounds.
+        lo: Vec<f64>,
+        /// Per-coordinate upper bounds.
+        hi: Vec<f64>,
+    },
+    /// Elastic-net ball; `radius = 0` derives from the unconstrained
+    /// optimum (the penalty value at x*).
+    ElasticNet {
+        /// l1/l2 trade-off in [0, 1].
+        alpha: f64,
+        /// Sublevel value (0 = derive).
+        radius: f64,
+    },
+    /// Affine equality Cx = e (row-major C).
+    AffineEq {
+        /// Constraint rows (k x d, row-major).
+        c: Vec<Vec<f64>>,
+        /// Right-hand side (length k).
+        e: Vec<f64>,
+    },
+}
+
+fn parse_pos(s: &str, what: &str) -> Result<f64> {
+    let v: f64 = s
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("constraint: {what} {s:?} is not a number"))?;
+    ensure!(v.is_finite() && v > 0.0, "constraint: {what} must be positive, got {s}");
+    Ok(v)
+}
+
+fn num_at(j: &Json, path: &str) -> Result<f64> {
+    let v = j
+        .as_f64()
+        .ok_or_else(|| anyhow!("{path}: expected a number, got {j}"))?;
+    ensure!(v.is_finite(), "{path}: must be finite");
+    Ok(v)
+}
+
+fn vec_at(j: &Json, path: &str) -> Result<Vec<f64>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| anyhow!("{path}: expected an array of numbers, got {j}"))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, v)| num_at(v, &format!("{path}[{i}]")))
+        .collect()
+}
+
+impl ConstraintSpec {
+    /// Parse the compact string form (see the module table). Strings
+    /// beginning with `{` are parsed as the JSON form.
+    pub fn parse_str(s: &str) -> Result<ConstraintSpec> {
+        let t = s.trim();
+        if t.starts_with('{') {
+            let j = Json::parse(t).map_err(|e| anyhow!("constraint: bad JSON ({e})"))?;
+            return ConstraintSpec::parse_json(&j);
+        }
+        let (name, args) = match t.split_once(':') {
+            Some((n, a)) => (n.trim(), Some(a.trim())),
+            None => (t, None),
+        };
+        match (name, args) {
+            ("unc" | "unconstrained" | "", None) => Ok(ConstraintSpec::Unconstrained),
+            ("l1", None) => Ok(ConstraintSpec::L1Ball { radius: 0.0 }),
+            ("l1", Some(a)) => Ok(ConstraintSpec::L1Ball {
+                radius: parse_pos(a, "l1 radius")?,
+            }),
+            ("l2", None) => Ok(ConstraintSpec::L2Ball { radius: 0.0 }),
+            ("l2", Some(a)) => Ok(ConstraintSpec::L2Ball {
+                radius: parse_pos(a, "l2 radius")?,
+            }),
+            ("nonneg" | "nn", None) => Ok(ConstraintSpec::NonNeg),
+            ("simplex", None) => Ok(ConstraintSpec::Simplex { total: 1.0 }),
+            ("simplex", Some(a)) => Ok(ConstraintSpec::Simplex {
+                total: parse_pos(a, "simplex total")?,
+            }),
+            ("box", Some(a)) => {
+                let (lo_s, hi_s) = a.split_once(',').ok_or_else(|| {
+                    anyhow!("constraint: box needs two bounds, e.g. box:-1,1 (got {a:?})")
+                })?;
+                let lo: f64 = lo_s
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("constraint: box lo {lo_s:?} is not a number"))?;
+                let hi: f64 = hi_s
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("constraint: box hi {hi_s:?} is not a number"))?;
+                ensure!(lo <= hi, "constraint: box lo ({lo}) must be <= hi ({hi})");
+                Ok(ConstraintSpec::ScalarBox { lo, hi })
+            }
+            ("box", None) => bail!(
+                "constraint: box needs bounds — box:<lo>,<hi> or \
+                 {{\"box\":{{\"lo\":[...],\"hi\":[...]}}}}"
+            ),
+            ("enet" | "elastic_net", Some(a)) => {
+                let (alpha_s, radius) = match a.split_once(',') {
+                    Some((al, r)) => (al, parse_pos(r, "elastic-net radius")?),
+                    None => (a, 0.0),
+                };
+                let alpha: f64 = alpha_s
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("constraint: enet alpha {alpha_s:?} is not a number"))?;
+                ensure!(
+                    (0.0..=1.0).contains(&alpha),
+                    "constraint: enet alpha must be in [0, 1], got {alpha}"
+                );
+                Ok(ConstraintSpec::ElasticNet { alpha, radius })
+            }
+            ("enet" | "elastic_net", None) => {
+                bail!("constraint: enet needs at least alpha — enet:<alpha>[,<radius>]")
+            }
+            _ => bail!(
+                "unknown constraint {t:?} (unc | l1[:r] | l2[:r] | nonneg | \
+                 simplex[:total] | box:lo,hi | enet:alpha[,r] | a JSON spec — \
+                 see DESIGN.md section 12)"
+            ),
+        }
+    }
+
+    /// Parse the JSON form: a string (delegates to
+    /// [`ConstraintSpec::parse_str`]) or a single-key object (see the
+    /// module table). Errors carry the offending path.
+    pub fn parse_json(j: &Json) -> Result<ConstraintSpec> {
+        match j {
+            Json::Str(s) => ConstraintSpec::parse_str(s),
+            Json::Obj(map) => {
+                ensure!(
+                    map.len() == 1,
+                    "constraint: expected one set key, got {:?}",
+                    map.keys().collect::<Vec<_>>()
+                );
+                let (key, val) = map.iter().next().expect("len checked");
+                match key.as_str() {
+                    "unc" | "unconstrained" => Ok(ConstraintSpec::Unconstrained),
+                    "nonneg" => Ok(ConstraintSpec::NonNeg),
+                    "l1" | "l2" => {
+                        let radius = match val {
+                            Json::Num(_) => num_at(val, "constraint.l*")?,
+                            _ => num_at(
+                                val.req("radius")
+                                    .map_err(|_| anyhow!("constraint.{key}: needs \"radius\""))?,
+                                &format!("constraint.{key}.radius"),
+                            )?,
+                        };
+                        ensure!(radius >= 0.0, "constraint.{key}.radius must be >= 0");
+                        Ok(if key == "l1" {
+                            ConstraintSpec::L1Ball { radius }
+                        } else {
+                            ConstraintSpec::L2Ball { radius }
+                        })
+                    }
+                    "simplex" => {
+                        let total = match val {
+                            Json::Num(_) => num_at(val, "constraint.simplex")?,
+                            Json::Obj(_) => num_at(
+                                val.req("total").map_err(|_| {
+                                    anyhow!(
+                                        "constraint.simplex: needs \"total\" (or use \
+                                         the number form {{\"simplex\": 2}} / the \
+                                         string form \"simplex\")"
+                                    )
+                                })?,
+                                "constraint.simplex.total",
+                            )?,
+                            other => bail!(
+                                "constraint.simplex: expected a number or object, got {other}"
+                            ),
+                        };
+                        ensure!(total > 0.0, "constraint.simplex.total must be positive");
+                        Ok(ConstraintSpec::Simplex { total })
+                    }
+                    "box" => {
+                        let lo_j = val
+                            .req("lo")
+                            .map_err(|_| anyhow!("constraint.box: needs \"lo\" and \"hi\""))?;
+                        let hi_j = val
+                            .req("hi")
+                            .map_err(|_| anyhow!("constraint.box: needs \"lo\" and \"hi\""))?;
+                        match (lo_j, hi_j) {
+                            (Json::Num(_), Json::Num(_)) => {
+                                let lo = num_at(lo_j, "constraint.box.lo")?;
+                                let hi = num_at(hi_j, "constraint.box.hi")?;
+                                ensure!(
+                                    lo <= hi,
+                                    "constraint.box: lo ({lo}) must be <= hi ({hi})"
+                                );
+                                Ok(ConstraintSpec::ScalarBox { lo, hi })
+                            }
+                            (Json::Arr(_), Json::Arr(_)) => {
+                                let lo = vec_at(lo_j, "constraint.box.lo")?;
+                                let hi = vec_at(hi_j, "constraint.box.hi")?;
+                                ensure!(
+                                    lo.len() == hi.len(),
+                                    "constraint.box: lo has {} entries, hi has {}",
+                                    lo.len(),
+                                    hi.len()
+                                );
+                                ensure!(!lo.is_empty(), "constraint.box: bounds are empty");
+                                for i in 0..lo.len() {
+                                    ensure!(
+                                        lo[i] <= hi[i],
+                                        "constraint.box: lo[{i}] ({}) > hi[{i}] ({})",
+                                        lo[i],
+                                        hi[i]
+                                    );
+                                }
+                                Ok(ConstraintSpec::CoordBox { lo, hi })
+                            }
+                            _ => bail!(
+                                "constraint.box: lo and hi must both be numbers (scalar \
+                                 box) or both arrays (per-coordinate box)"
+                            ),
+                        }
+                    }
+                    "elastic_net" | "enet" => {
+                        let alpha = num_at(
+                            val.req("alpha")
+                                .map_err(|_| anyhow!("constraint.{key}: needs \"alpha\""))?,
+                            &format!("constraint.{key}.alpha"),
+                        )?;
+                        ensure!(
+                            (0.0..=1.0).contains(&alpha),
+                            "constraint.{key}.alpha must be in [0, 1], got {alpha}"
+                        );
+                        let radius = match val.get("radius") {
+                            Some(r) => {
+                                let r = num_at(r, &format!("constraint.{key}.radius"))?;
+                                ensure!(r >= 0.0, "constraint.{key}.radius must be >= 0");
+                                r
+                            }
+                            None => 0.0,
+                        };
+                        Ok(ConstraintSpec::ElasticNet { alpha, radius })
+                    }
+                    "affine_eq" | "affine" => {
+                        let c_j = val
+                            .req("c")
+                            .map_err(|_| anyhow!("constraint.{key}: needs \"c\" and \"e\""))?;
+                        let e_j = val
+                            .req("e")
+                            .map_err(|_| anyhow!("constraint.{key}: needs \"c\" and \"e\""))?;
+                        let rows = c_j.as_arr().ok_or_else(|| {
+                            anyhow!("constraint.{key}.c: expected an array of rows")
+                        })?;
+                        ensure!(!rows.is_empty(), "constraint.{key}.c: no rows");
+                        let c: Vec<Vec<f64>> = rows
+                            .iter()
+                            .enumerate()
+                            .map(|(i, r)| vec_at(r, &format!("constraint.{key}.c[{i}]")))
+                            .collect::<Result<_>>()?;
+                        let d = c[0].len();
+                        ensure!(d > 0, "constraint.{key}.c: rows are empty");
+                        for (i, row) in c.iter().enumerate() {
+                            ensure!(
+                                row.len() == d,
+                                "constraint.{key}.c[{i}]: has {} entries, expected {d}",
+                                row.len()
+                            );
+                        }
+                        let e = vec_at(e_j, &format!("constraint.{key}.e"))?;
+                        ensure!(
+                            e.len() == c.len(),
+                            "constraint.{key}: e has {} entries for {} rows of c",
+                            e.len(),
+                            c.len()
+                        );
+                        Ok(ConstraintSpec::AffineEq { c, e })
+                    }
+                    other => bail!(
+                        "unknown constraint key {other:?} (l1 | l2 | box | simplex | \
+                         elastic_net | affine_eq | nonneg | unc)"
+                    ),
+                }
+            }
+            other => bail!("constraint: expected a string or object, got {other}"),
+        }
+    }
+
+    /// Serialize back to the wire form ([`ConstraintSpec::parse_json`]
+    /// round-trips it).
+    pub fn to_json(&self) -> Json {
+        match self {
+            ConstraintSpec::Unconstrained => Json::str("unc"),
+            ConstraintSpec::NonNeg => Json::str("nonneg"),
+            ConstraintSpec::L1Ball { radius } if *radius == 0.0 => Json::str("l1"),
+            ConstraintSpec::L1Ball { radius } => {
+                Json::obj(vec![("l1", Json::num(*radius))])
+            }
+            ConstraintSpec::L2Ball { radius } if *radius == 0.0 => Json::str("l2"),
+            ConstraintSpec::L2Ball { radius } => {
+                Json::obj(vec![("l2", Json::num(*radius))])
+            }
+            ConstraintSpec::Simplex { total } if *total == 1.0 => Json::str("simplex"),
+            ConstraintSpec::Simplex { total } => {
+                Json::obj(vec![("simplex", Json::num(*total))])
+            }
+            ConstraintSpec::ScalarBox { lo, hi } => Json::obj(vec![(
+                "box",
+                Json::obj(vec![("lo", Json::num(*lo)), ("hi", Json::num(*hi))]),
+            )]),
+            ConstraintSpec::CoordBox { lo, hi } => {
+                let arr = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::num(x)).collect());
+                Json::obj(vec![(
+                    "box",
+                    Json::obj(vec![("lo", arr(lo)), ("hi", arr(hi))]),
+                )])
+            }
+            ConstraintSpec::ElasticNet { alpha, radius } => Json::obj(vec![(
+                "elastic_net",
+                Json::obj(vec![
+                    ("alpha", Json::num(*alpha)),
+                    ("radius", Json::num(*radius)),
+                ]),
+            )]),
+            ConstraintSpec::AffineEq { c, e } => {
+                let arr = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::num(x)).collect());
+                Json::obj(vec![(
+                    "affine_eq",
+                    Json::obj(vec![
+                        ("c", Json::Arr(c.iter().map(|r| arr(r)).collect())),
+                        ("e", arr(e)),
+                    ]),
+                )])
+            }
+        }
+    }
+
+    /// Whether this is W = R^d (the scheduler's PJRT-eligibility guard).
+    pub fn is_unconstrained(&self) -> bool {
+        matches!(self, ConstraintSpec::Unconstrained)
+    }
+
+    /// The radius embedded in the spec itself (0 when absent or not a
+    /// radius-bearing set). A positive value here wins over the request's
+    /// legacy top-level `radius` field.
+    pub fn radius_param(&self) -> f64 {
+        match self {
+            ConstraintSpec::L1Ball { radius }
+            | ConstraintSpec::L2Ball { radius }
+            | ConstraintSpec::ElasticNet { radius, .. } => *radius,
+            _ => 0.0,
+        }
+    }
+
+    /// The paper-protocol derived radius given the unconstrained optimum's
+    /// norms: l1/l2 balls use ||x*||_1 / ||x*||_2, the elastic-net ball the
+    /// penalty *value* at x* — in every case x* sits on the boundary, so
+    /// the constrained and unconstrained optima coincide. 0 for sets with
+    /// no radius.
+    pub fn derived_radius(&self, l1_star: f64, l2_star: f64) -> f64 {
+        match self {
+            ConstraintSpec::L1Ball { .. } => l1_star,
+            ConstraintSpec::L2Ball { .. } => l2_star,
+            ConstraintSpec::ElasticNet { alpha, .. } => {
+                alpha * l1_star + 0.5 * (1.0 - alpha) * l2_star * l2_star
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// The tag the built set will report (for validation errors and logs
+    /// before a set exists).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ConstraintSpec::Unconstrained => "unc",
+            ConstraintSpec::L1Ball { .. } => "l1",
+            ConstraintSpec::L2Ball { .. } => "l2",
+            ConstraintSpec::NonNeg => "nonneg",
+            ConstraintSpec::Simplex { .. } => "simplex",
+            ConstraintSpec::ScalarBox { .. } | ConstraintSpec::CoordBox { .. } => "box",
+            ConstraintSpec::ElasticNet { .. } => "enet",
+            ConstraintSpec::AffineEq { .. } => "affine",
+        }
+    }
+
+    /// Build the runtime set. `resolved_radius` is the coordinator-resolved
+    /// scalar for radius-bearing sets (spec radius if positive, else the
+    /// request's `radius` field, else the derived paper default); sets
+    /// without a radius ignore it. Fails when a ball set still has no
+    /// positive radius, or when a set's own invariants do not hold
+    /// (dependent affine rows, lo > hi, ...).
+    pub fn build(&self, resolved_radius: f64) -> Result<ConstraintRef> {
+        let ball_radius = |name: &str| -> Result<f64> {
+            let r = if self.radius_param() > 0.0 {
+                self.radius_param()
+            } else {
+                resolved_radius
+            };
+            ensure!(
+                r > 0.0,
+                "constraint {name}: radius must be positive (0 means derive from the \
+                 unconstrained optimum, which only the coordinator can resolve)"
+            );
+            Ok(r)
+        };
+        match self {
+            ConstraintSpec::Unconstrained => Ok(super::unconstrained()),
+            ConstraintSpec::L1Ball { .. } => Ok(super::l1_ball(ball_radius("l1")?)),
+            ConstraintSpec::L2Ball { .. } => Ok(super::l2_ball(ball_radius("l2")?)),
+            ConstraintSpec::NonNeg => Ok(super::nonneg()),
+            ConstraintSpec::Simplex { total } => {
+                ensure!(*total > 0.0, "constraint simplex: total must be positive");
+                Ok(super::simplex(*total))
+            }
+            ConstraintSpec::ScalarBox { lo, hi } => {
+                ensure!(lo <= hi, "constraint box: lo ({lo}) must be <= hi ({hi})");
+                Ok(super::scalar_box(*lo, *hi))
+            }
+            ConstraintSpec::CoordBox { lo, hi } => {
+                ensure!(
+                    lo.len() == hi.len() && !lo.is_empty(),
+                    "constraint box: malformed bounds"
+                );
+                Ok(super::coord_box(lo.clone(), hi.clone()))
+            }
+            ConstraintSpec::ElasticNet { alpha, .. } => {
+                ensure!(
+                    (0.0..=1.0).contains(alpha),
+                    "constraint enet: alpha must be in [0, 1]"
+                );
+                Ok(super::elastic_net(*alpha, ball_radius("enet")?))
+            }
+            ConstraintSpec::AffineEq { c, e } => {
+                let k = c.len();
+                let d = c.first().map(|r| r.len()).unwrap_or(0);
+                let mut m = Mat::zeros(k, d);
+                for (i, row) in c.iter().enumerate() {
+                    ensure!(
+                        row.len() == d,
+                        "constraint affine_eq: ragged rows ({} vs {d})",
+                        row.len()
+                    );
+                    m.row_mut(i).copy_from_slice(row);
+                }
+                super::affine_eq(m, e.clone())
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for ConstraintSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<ConstraintSpec> {
+        ConstraintSpec::parse_str(s)
+    }
+}
+
+/// Infallible conversion for in-repo literals (tests, experiments,
+/// examples): panics with the parse error on an invalid spec. User input
+/// must go through [`ConstraintSpec::parse_str`] / [`ConstraintSpec::parse_json`].
+impl From<&str> for ConstraintSpec {
+    fn from(s: &str) -> ConstraintSpec {
+        ConstraintSpec::parse_str(s).expect("constraint spec literal")
+    }
+}
+
+impl std::fmt::Display for ConstraintSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constraints::ConstraintSet;
+
+    #[test]
+    fn string_forms_parse() {
+        assert_eq!(
+            ConstraintSpec::parse_str("unc").unwrap(),
+            ConstraintSpec::Unconstrained
+        );
+        assert_eq!(
+            ConstraintSpec::parse_str("l1").unwrap(),
+            ConstraintSpec::L1Ball { radius: 0.0 }
+        );
+        assert_eq!(
+            ConstraintSpec::parse_str("l1:0.5").unwrap(),
+            ConstraintSpec::L1Ball { radius: 0.5 }
+        );
+        assert_eq!(
+            ConstraintSpec::parse_str("simplex").unwrap(),
+            ConstraintSpec::Simplex { total: 1.0 }
+        );
+        assert_eq!(
+            ConstraintSpec::parse_str("simplex:2").unwrap(),
+            ConstraintSpec::Simplex { total: 2.0 }
+        );
+        assert_eq!(
+            ConstraintSpec::parse_str("nonneg").unwrap(),
+            ConstraintSpec::NonNeg
+        );
+        assert_eq!(
+            ConstraintSpec::parse_str("box:-1,1").unwrap(),
+            ConstraintSpec::ScalarBox { lo: -1.0, hi: 1.0 }
+        );
+        assert_eq!(
+            ConstraintSpec::parse_str("enet:0.5,1.5").unwrap(),
+            ConstraintSpec::ElasticNet {
+                alpha: 0.5,
+                radius: 1.5
+            }
+        );
+        assert_eq!(
+            ConstraintSpec::parse_str("enet:0.25").unwrap(),
+            ConstraintSpec::ElasticNet {
+                alpha: 0.25,
+                radius: 0.0
+            }
+        );
+    }
+
+    #[test]
+    fn bad_strings_error_with_guidance() {
+        for bad in ["l7", "box", "box:1", "box:2,1", "enet", "enet:1.5", "simplex:-1"] {
+            let err = ConstraintSpec::parse_str(bad).unwrap_err();
+            assert!(!format!("{err}").is_empty(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn json_forms_parse_and_roundtrip() {
+        let cases = [
+            r#""unc""#,
+            r#""nonneg""#,
+            r#""simplex""#,
+            r#"{"l1": 0.5}"#,
+            r#"{"l2": {"radius": 2}}"#,
+            r#"{"simplex": 3}"#,
+            r#"{"box": {"lo": -1, "hi": 1}}"#,
+            r#"{"box": {"lo": [0, -1], "hi": [1, 1]}}"#,
+            r#"{"elastic_net": {"alpha": 0.5, "radius": 1.5}}"#,
+            r#"{"affine_eq": {"c": [[1, 1, 1]], "e": [1]}}"#,
+        ];
+        for case in cases {
+            let j = Json::parse(case).unwrap();
+            let spec = ConstraintSpec::parse_json(&j).unwrap();
+            let back = ConstraintSpec::parse_json(&spec.to_json()).unwrap();
+            assert_eq!(spec, back, "{case}");
+        }
+    }
+
+    #[test]
+    fn json_errors_carry_paths() {
+        let bad = [
+            (r#"{"box": {"lo": [0, 1], "hi": [1]}}"#, "lo has 2"),
+            (r#"{"box": {"lo": "x", "hi": 1}}"#, "constraint.box"),
+            (r#"{"box": {"lo": [2], "hi": [1]}}"#, "lo[0]"),
+            (r#"{"affine_eq": {"c": [[1, 2], [3]], "e": [1, 2]}}"#, "c[1]"),
+            (r#"{"affine_eq": {"c": [[1, 2]], "e": [1, 2]}}"#, "e has 2"),
+            (r#"{"elastic_net": {"alpha": 2}}"#, "alpha"),
+            (r#"{"simplex": {}}"#, "total"),
+            (r#"{"simplex": {"totl": 2}}"#, "total"),
+            (r#"{"warp": 9}"#, "unknown constraint key"),
+        ];
+        for (case, needle) in bad {
+            let j = Json::parse(case).unwrap();
+            let err = format!("{:#}", ConstraintSpec::parse_json(&j).unwrap_err());
+            assert!(err.contains(needle), "{case}: {err}");
+        }
+    }
+
+    #[test]
+    fn radius_resolution_order() {
+        // spec radius wins over the resolved fallback
+        let spec = ConstraintSpec::L1Ball { radius: 2.0 };
+        let built = spec.build(5.0).unwrap();
+        assert_eq!(built.radius(), 2.0);
+        // radius 0 takes the fallback
+        let spec0 = ConstraintSpec::L1Ball { radius: 0.0 };
+        assert_eq!(spec0.build(5.0).unwrap().radius(), 5.0);
+        // no radius at all is an error for balls...
+        assert!(spec0.build(0.0).is_err());
+        // ...but fine for radius-free sets
+        assert!(ConstraintSpec::NonNeg.build(0.0).is_ok());
+        // derived radius: enet uses the penalty value at x*
+        let enet = ConstraintSpec::ElasticNet {
+            alpha: 0.5,
+            radius: 0.0,
+        };
+        let derived = enet.derived_radius(3.0, 2.0);
+        assert!((derived - (0.5 * 3.0 + 0.25 * 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn build_produces_matching_tags() {
+        let cases: Vec<(ConstraintSpec, &str)> = vec![
+            (ConstraintSpec::Unconstrained, "unc"),
+            (ConstraintSpec::L1Ball { radius: 1.0 }, "l1"),
+            (ConstraintSpec::L2Ball { radius: 1.0 }, "l2"),
+            (ConstraintSpec::NonNeg, "nonneg"),
+            (ConstraintSpec::Simplex { total: 1.0 }, "simplex"),
+            (ConstraintSpec::ScalarBox { lo: -1.0, hi: 1.0 }, "box"),
+            (
+                ConstraintSpec::CoordBox {
+                    lo: vec![0.0],
+                    hi: vec![1.0],
+                },
+                "box",
+            ),
+            (
+                ConstraintSpec::ElasticNet {
+                    alpha: 0.5,
+                    radius: 1.0,
+                },
+                "enet",
+            ),
+            (
+                ConstraintSpec::AffineEq {
+                    c: vec![vec![1.0, 1.0]],
+                    e: vec![1.0],
+                },
+                "affine",
+            ),
+        ];
+        for (spec, tag) in cases {
+            assert_eq!(spec.tag(), tag);
+            assert_eq!(spec.build(1.0).unwrap().tag(), tag);
+        }
+    }
+
+    #[test]
+    fn from_str_literals_work() {
+        let spec: ConstraintSpec = "l2".into();
+        assert_eq!(spec, ConstraintSpec::L2Ball { radius: 0.0 });
+        let parsed: ConstraintSpec = "simplex".parse().unwrap();
+        assert_eq!(parsed, ConstraintSpec::Simplex { total: 1.0 });
+    }
+}

@@ -1,10 +1,11 @@
 //! Job specs and results — the coordinator's wire format.
 //!
 //! A `JobRequest` fully describes one solve: dataset (by name + scale, or
-//! preloaded), solver, constraint, accuracy target, trial count. JSON in,
-//! JSON out — usable from the CLI, config files, and the serve socket.
+//! preloaded), solver, constraint (a [`ConstraintSpec`] — string or JSON
+//! object form), accuracy target, trial count. JSON in, JSON out — usable
+//! from the CLI, config files, and the serve socket.
 
-use crate::prox::Constraint;
+use crate::constraints::{ConstraintRef, ConstraintSpec};
 use crate::sketch::SketchKind;
 use crate::solvers::{SolveReport, SolverOpts};
 use crate::util::json::Json;
@@ -21,27 +22,44 @@ pub const EXECUTOR_CHOICES: &[&str] = &["", "default", "native", "auto", "pjrt"]
 ///             (and `dataset: "libsvm:<path>"` loads a file directly).
 pub const FORMAT_CHOICES: &[&str] = &["", "dense", "sparse", "libsvm"];
 
+/// One solve request (the line format of the serve socket and the record
+/// the CLI builds from flags).
 #[derive(Clone, Debug)]
 pub struct JobRequest {
+    /// Caller-chosen id echoed into the result.
     pub id: u64,
-    /// dataset name: syn1 | syn2 | year | buzz (or "csv:<path>")
+    /// dataset name: syn1 | syn2 | year | buzz (or `csv:<path>`)
     pub dataset: String,
     /// rows to generate (simulated datasets)
     pub n: usize,
+    /// Solver name (see [`crate::solvers::by_name`]).
     pub solver: String,
-    pub constraint: String, // unc | l1 | l2
+    /// The constraint set W — any [`ConstraintSpec`] form ("unc", "l1",
+    /// "simplex", `{"box": {...}}`, ...). Radius-bearing specs with
+    /// radius 0 derive it from the unconstrained optimum (paper setup),
+    /// possibly via the legacy top-level `radius` field.
+    pub constraint: ConstraintSpec,
     /// ball radius; 0 = derive from the unconstrained optimum (paper setup)
     pub radius: f64,
+    /// Mini-batch size r (stochastic solvers).
     pub batch_size: usize,
+    /// Hard iteration cap (inner steps for stochastic solvers).
     pub max_iters: usize,
+    /// Wall-clock budget for the solve loop (seconds).
     pub time_budget: f64,
     /// relative-error target (vs exact optimum) to stop at; 0 = none
     pub target_rel_err: f64,
+    /// Best-of-k trials (the paper runs 10 and reports the best).
     pub trials: usize,
+    /// Job seed; per-trial seeds are forked from it.
     pub seed: u64,
+    /// Sketch construction name (see [`SketchKind::parse`]).
     pub sketch: String,
-    pub sketch_size: usize, // 0 = auto
-    pub eta: f64,           // 0 = theory default
+    /// Sketch rows s; 0 = construction-aware default.
+    pub sketch_size: usize,
+    /// Fixed step size; 0 = solver-specific theory default.
+    pub eta: f64,
+    /// Normalize the dataset before solving (scale-only on sparse data).
     pub normalize: bool,
     /// Backend for this request: default (coordinator's shared backend) |
     /// native | auto | pjrt (pjrt = hard-require artifacts).
@@ -84,7 +102,7 @@ impl Default for JobRequest {
             dataset: "syn2".into(),
             n: 16_384,
             solver: "hdpwbatchsgd".into(),
-            constraint: "unc".into(),
+            constraint: ConstraintSpec::Unconstrained,
             radius: 0.0,
             batch_size: 64,
             max_iters: 5_000,
@@ -110,13 +128,15 @@ impl Default for JobRequest {
 }
 
 impl JobRequest {
+    /// Serialize to the wire form (simple constraints stay plain strings,
+    /// so pre-spec clients read the field unchanged).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("id", Json::num(self.id as f64)),
             ("dataset", Json::str(self.dataset.clone())),
             ("n", Json::num(self.n as f64)),
             ("solver", Json::str(self.solver.clone())),
-            ("constraint", Json::str(self.constraint.clone())),
+            ("constraint", self.constraint.to_json()),
             ("radius", Json::num(self.radius)),
             ("batch_size", Json::num(self.batch_size as f64)),
             ("max_iters", Json::num(self.max_iters as f64)),
@@ -137,6 +157,9 @@ impl JobRequest {
         ])
     }
 
+    /// Parse a request from its JSON form; absent fields default. A
+    /// malformed `constraint` spec errors here with the offending path, so
+    /// the serve loop reports it on the request's own line.
     pub fn from_json(j: &Json) -> Result<JobRequest> {
         let def = JobRequest::default();
         let get_n = |k: &str, d: f64| j.get(k).and_then(Json::as_f64).unwrap_or(d);
@@ -146,12 +169,16 @@ impl JobRequest {
                 .unwrap_or(d)
                 .to_string()
         };
+        let constraint = match j.get("constraint") {
+            Some(v) => ConstraintSpec::parse_json(v)?,
+            None => def.constraint.clone(),
+        };
         let req = JobRequest {
             id: get_n("id", 0.0) as u64,
             dataset: get_s("dataset", &def.dataset),
             n: get_n("n", def.n as f64) as usize,
             solver: get_s("solver", &def.solver),
-            constraint: get_s("constraint", &def.constraint),
+            constraint,
             radius: get_n("radius", def.radius),
             batch_size: get_n("batch_size", def.batch_size as f64) as usize,
             max_iters: get_n("max_iters", def.max_iters as f64) as usize,
@@ -183,6 +210,7 @@ impl JobRequest {
         Ok(req)
     }
 
+    /// Cross-field validation (the constraint spec validates at parse).
     pub fn validate(&self) -> Result<()> {
         if crate::solvers::by_name(&self.solver).is_none() {
             bail!(
@@ -190,9 +218,6 @@ impl JobRequest {
                 self.solver,
                 crate::solvers::all_names()
             );
-        }
-        if !matches!(self.constraint.as_str(), "unc" | "l1" | "l2") {
-            bail!("unknown constraint {:?} (unc | l1 | l2)", self.constraint);
         }
         if SketchKind::parse(&self.sketch).is_none() {
             bail!("unknown sketch {:?}", self.sketch);
@@ -220,14 +245,44 @@ impl JobRequest {
         Ok(())
     }
 
+    /// The radius a radius-bearing constraint actually runs at: the spec's
+    /// embedded radius if positive, else the request's legacy top-level
+    /// `radius` field, else the paper-protocol value derived from the
+    /// unconstrained optimum's norms (see
+    /// [`ConstraintSpec::derived_radius`]). 0 for radius-free sets.
+    pub fn resolved_radius(&self, l1_star: f64, l2_star: f64) -> f64 {
+        let spec_r = self.constraint.radius_param();
+        if spec_r > 0.0 {
+            spec_r
+        } else if self.radius > 0.0 {
+            self.radius
+        } else {
+            self.constraint.derived_radius(l1_star, l2_star)
+        }
+    }
+
+    /// Build the constraint set this request solves under, given the
+    /// resolved radius (see [`JobRequest::resolved_radius`]).
+    pub fn build_constraint(&self, radius: f64) -> Result<ConstraintRef> {
+        self.constraint
+            .build(radius)
+            .with_context(|| format!("constraint {:?}", self.constraint.tag()))
+    }
+
     /// Build SolverOpts given the resolved constraint radius and optimum.
     pub fn solver_opts(&self, radius: f64, f_star: Option<f64>) -> Result<SolverOpts> {
-        let constraint = match self.constraint.as_str() {
-            "unc" => Constraint::Unconstrained,
-            "l1" => Constraint::L1Ball { radius },
-            "l2" => Constraint::L2Ball { radius },
-            other => bail!("unknown constraint {other:?}"),
-        };
+        self.solver_opts_with_constraint(self.build_constraint(radius)?, f_star)
+    }
+
+    /// [`JobRequest::solver_opts`] with an already-built constraint set —
+    /// the coordinator builds (and counter-wraps) one set per job and
+    /// threads it through every trial without rebuilding (an
+    /// [`crate::constraints::AffineEquality`] build re-runs its QR).
+    pub fn solver_opts_with_constraint(
+        &self,
+        constraint: ConstraintRef,
+        f_star: Option<f64>,
+    ) -> Result<SolverOpts> {
         let sketch =
             SketchKind::parse(&self.sketch).context("sketch kind")?;
         Ok(SolverOpts {
@@ -256,14 +311,32 @@ impl JobRequest {
 /// Result of a job: the best trial's report plus aggregate info.
 #[derive(Clone, Debug)]
 pub struct JobResult {
+    /// The request's id, echoed back.
     pub id: u64,
+    /// Solver name the job ran.
     pub solver: String,
+    /// Dataset name the job ran against.
     pub dataset: String,
+    /// The exact unconstrained optimum's objective.
     pub f_star: f64,
+    /// Best trial's final objective.
     pub best_f: f64,
+    /// (best_f - f_star) / f_star, clamped at 0.
     pub best_rel_err: f64,
+    /// Trials executed.
     pub trials_run: usize,
+    /// Wall-clock seconds across all trials.
     pub total_secs: f64,
+    /// The active constraint's tag ("unc", "l1", "simplex", ...).
+    pub constraint: String,
+    /// The active constraint's parameter summary
+    /// ([`crate::constraints::ConstraintSet::params`] — e.g.
+    /// "radius=0.5", "lo=-1 hi=1"); box bounds and simplex totals survive
+    /// into reports instead of flattening to a meaningless scalar.
+    pub constraint_params: String,
+    /// Projection-oracle invocations across all trials (Euclidean +
+    /// metric; no-op unconstrained projections are not counted).
+    pub projections: usize,
     /// Stored entries of the solved dataset (n*d when dense).
     pub nnz: usize,
     /// nnz / (n*d). NOTE: a CSR dataset generated at density 1.0 also
@@ -283,10 +356,12 @@ pub struct JobResult {
     /// (exact when jobs run serially; an upper bound under concurrency).
     /// A CSR step-1-only solve reports 0 here — the acceptance criterion.
     pub densify_events: usize,
+    /// The best trial's full report (iterate, trace, cache outcome).
     pub best: SolveReport,
 }
 
 impl JobResult {
+    /// Serialize to the wire form (one line of the serve protocol).
     pub fn to_json(&self) -> Json {
         let trace: Vec<Json> = self
             .best
@@ -309,6 +384,12 @@ impl JobResult {
             ("best_rel_err", Json::num(self.best_rel_err)),
             ("trials_run", Json::num(self.trials_run as f64)),
             ("total_secs", Json::num(self.total_secs)),
+            ("constraint", Json::str(self.constraint.clone())),
+            (
+                "constraint_params",
+                Json::str(self.constraint_params.clone()),
+            ),
+            ("projections", Json::num(self.projections as f64)),
             ("nnz", Json::num(self.nnz as f64)),
             ("density", Json::num(self.density)),
             ("sparse", Json::Bool(self.sparse)),
@@ -345,9 +426,35 @@ mod tests {
         let back = JobRequest::from_json(&j).unwrap();
         assert_eq!(back.id, 7);
         assert_eq!(back.solver, "pwgradient");
-        assert_eq!(back.constraint, "l1");
+        assert_eq!(back.constraint, ConstraintSpec::L1Ball { radius: 0.0 });
         assert_eq!(back.trials, 10);
         assert_eq!(back.n, req.n);
+    }
+
+    #[test]
+    fn structured_constraints_roundtrip_through_requests() {
+        for spec in [
+            ConstraintSpec::Simplex { total: 2.0 },
+            ConstraintSpec::NonNeg,
+            ConstraintSpec::ScalarBox { lo: -1.0, hi: 1.0 },
+            ConstraintSpec::CoordBox {
+                lo: vec![0.0, -1.0],
+                hi: vec![1.0, 1.0],
+            },
+            ConstraintSpec::ElasticNet {
+                alpha: 0.5,
+                radius: 1.5,
+            },
+            ConstraintSpec::AffineEq {
+                c: vec![vec![1.0, 1.0, 0.0]],
+                e: vec![1.0],
+            },
+        ] {
+            let mut req = JobRequest::default();
+            req.constraint = spec.clone();
+            let back = JobRequest::from_json(&req.to_json()).unwrap();
+            assert_eq!(back.constraint, spec);
+        }
     }
 
     #[test]
@@ -357,6 +464,7 @@ mod tests {
         assert_eq!(req.solver, "ihs");
         assert_eq!(req.dataset, "syn2");
         assert_eq!(req.trials, 1);
+        assert!(req.constraint.is_unconstrained());
     }
 
     #[test]
@@ -364,6 +472,8 @@ mod tests {
         let j = Json::parse(r#"{"solver": "nope"}"#).unwrap();
         assert!(JobRequest::from_json(&j).is_err());
         let j = Json::parse(r#"{"constraint": "l7"}"#).unwrap();
+        assert!(JobRequest::from_json(&j).is_err());
+        let j = Json::parse(r#"{"constraint": {"box": {"lo": [1], "hi": [0]}}}"#).unwrap();
         assert!(JobRequest::from_json(&j).is_err());
         let j = Json::parse(r#"{"sketch": "fourier"}"#).unwrap();
         assert!(JobRequest::from_json(&j).is_err());
@@ -438,12 +548,36 @@ mod tests {
         req.eta = 0.5;
         req.sketch_size = 777;
         let opts = req.solver_opts(2.0, Some(100.0)).unwrap();
-        assert_eq!(opts.constraint, Constraint::L2Ball { radius: 2.0 });
+        assert_eq!(opts.constraint.tag(), "l2");
+        assert_eq!(opts.constraint.radius(), 2.0);
         assert_eq!(opts.eps_abs, Some(1.0));
         assert_eq!(opts.eta, Some(0.5));
         assert_eq!(opts.sketch_size, Some(777));
         // no f_star -> no eps_abs
         let opts2 = req.solver_opts(2.0, None).unwrap();
         assert_eq!(opts2.eps_abs, None);
+        // a ball with no radius anywhere is a build-time error
+        assert!(req.solver_opts(0.0, None).is_err());
+    }
+
+    #[test]
+    fn radius_resolution_precedence() {
+        let mut req = JobRequest::default();
+        // spec-embedded radius beats the legacy field and the derived value
+        req.constraint = ConstraintSpec::L2Ball { radius: 3.0 };
+        req.radius = 9.0;
+        assert_eq!(req.resolved_radius(1.0, 2.0), 3.0);
+        // legacy field beats the derived value
+        req.constraint = ConstraintSpec::L2Ball { radius: 0.0 };
+        assert_eq!(req.resolved_radius(1.0, 2.0), 9.0);
+        // derived value as the paper default
+        req.radius = 0.0;
+        assert_eq!(req.resolved_radius(1.0, 2.0), 2.0);
+        req.constraint = ConstraintSpec::L1Ball { radius: 0.0 };
+        assert_eq!(req.resolved_radius(1.0, 2.0), 1.0);
+        // radius-free sets resolve to 0 and still build
+        req.constraint = ConstraintSpec::Simplex { total: 1.0 };
+        assert_eq!(req.resolved_radius(1.0, 2.0), 0.0);
+        assert!(req.build_constraint(0.0).is_ok());
     }
 }

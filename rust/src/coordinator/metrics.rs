@@ -3,11 +3,16 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// Service counters + latency histogram for the coordinator.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Jobs accepted onto the worker pool.
     pub jobs_submitted: AtomicUsize,
+    /// Jobs that finished successfully.
     pub jobs_completed: AtomicUsize,
+    /// Jobs that returned an error.
     pub jobs_failed: AtomicUsize,
+    /// Trials executed across all jobs.
     pub trials_run: AtomicUsize,
     /// trials that started from a warm iterate (warm_start jobs, trial > 0)
     pub warm_starts: AtomicUsize,
@@ -16,6 +21,10 @@ pub struct Metrics {
     /// total stored entries across sparse jobs (throughput accounting for
     /// the O(nnz) pipeline)
     pub sparse_nnz: AtomicU64,
+    /// projection-oracle invocations across all jobs (Euclidean + metric;
+    /// unconstrained no-ops excluded) — the constrained-workload
+    /// throughput signal
+    pub projections: AtomicU64,
     /// total solve nanoseconds (across trials)
     solve_nanos: AtomicU64,
     /// recent job latencies (seconds), bounded ring
@@ -23,10 +32,12 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Fresh, all-zero metrics.
     pub fn new() -> Self {
         Metrics::default()
     }
 
+    /// Record one finished job (latency, trial count, outcome).
     pub fn record_job(&self, secs: f64, trials: usize, ok: bool) {
         if ok {
             self.jobs_completed.fetch_add(1, Ordering::Relaxed);
@@ -43,19 +54,28 @@ impl Metrics {
         l.push(secs);
     }
 
+    /// Count one warm-started trial.
     pub fn record_warm_start(&self) {
         self.warm_starts.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one job solved on a CSR dataset, carrying `nnz` entries.
     pub fn record_sparse_job(&self, nnz: usize) {
         self.sparse_jobs.fetch_add(1, Ordering::Relaxed);
         self.sparse_nnz.fetch_add(nnz as u64, Ordering::Relaxed);
     }
 
+    /// Add one job's projection count to the service total.
+    pub fn record_projections(&self, count: usize) {
+        self.projections.fetch_add(count as u64, Ordering::Relaxed);
+    }
+
+    /// Total solve seconds across all jobs.
     pub fn total_solve_secs(&self) -> f64 {
         self.solve_nanos.load(Ordering::Relaxed) as f64 / 1e9
     }
 
+    /// The p-th percentile of recent job latencies (None when empty).
     pub fn latency_percentile(&self, p: f64) -> Option<f64> {
         let l = self.latencies.lock().unwrap();
         if l.is_empty() {
@@ -64,9 +84,10 @@ impl Metrics {
         Some(crate::util::stats::percentile(&l, p))
     }
 
+    /// One-line human-readable summary (the serve `metrics` command).
     pub fn snapshot(&self) -> String {
         format!(
-            "jobs: submitted={} completed={} failed={} trials={} warm_starts={} sparse_jobs={} sparse_nnz={} solve_time={:.2}s p50={} p99={}",
+            "jobs: submitted={} completed={} failed={} trials={} warm_starts={} sparse_jobs={} sparse_nnz={} projections={} solve_time={:.2}s p50={} p99={}",
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
@@ -74,6 +95,7 @@ impl Metrics {
             self.warm_starts.load(Ordering::Relaxed),
             self.sparse_jobs.load(Ordering::Relaxed),
             self.sparse_nnz.load(Ordering::Relaxed),
+            self.projections.load(Ordering::Relaxed),
             self.total_solve_secs(),
             self.latency_percentile(50.0)
                 .map(crate::util::stats::fmt_duration)
@@ -104,11 +126,14 @@ mod tests {
         m.record_warm_start();
         m.record_sparse_job(1234);
         m.record_sparse_job(766);
+        m.record_projections(500);
+        m.record_projections(41);
         let snap = m.snapshot();
         assert!(snap.contains("completed=2"));
         assert!(snap.contains("warm_starts=1"));
         assert!(snap.contains("sparse_jobs=2"), "{snap}");
         assert!(snap.contains("sparse_nnz=2000"), "{snap}");
+        assert!(snap.contains("projections=541"), "{snap}");
     }
 
     #[test]

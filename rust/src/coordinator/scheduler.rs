@@ -10,6 +10,7 @@
 use super::job::{JobRequest, JobResult, EXECUTOR_CHOICES};
 use super::metrics::Metrics;
 use crate::backend::Backend;
+use crate::constraints::{ConstraintRef, ConstraintSet, ProjectionCounter};
 use crate::data::{io, libsvm, sparse_gen, uci_sim, Dataset};
 use crate::precond::PrecondCache;
 use crate::solvers::driver::SessionCtx;
@@ -25,6 +26,7 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+/// Process-level configuration for a [`Coordinator`].
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     /// worker threads for concurrent jobs
@@ -60,9 +62,11 @@ struct Prepared {
     gt: Arc<GroundTruth>,
 }
 
+/// The coordinator proper: shared backend, worker pool, caches, metrics.
 pub struct Coordinator {
     backend: Backend,
     pool: ThreadPool,
+    /// Service counters (jobs, latencies, projections, sparse workload).
     pub metrics: Arc<Metrics>,
     prepared: Mutex<HashMap<String, Arc<Prepared>>>,
     /// Shared preconditioner artifacts, keyed by (dataset, sketch, s, seed,
@@ -76,6 +80,7 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Build a coordinator around a shared backend.
     pub fn new(backend: Backend, config: CoordinatorConfig) -> Self {
         Coordinator {
             backend,
@@ -88,10 +93,12 @@ impl Coordinator {
         }
     }
 
+    /// The shared backend (serve metrics, tests).
     pub fn backend(&self) -> &Backend {
         &self.backend
     }
 
+    /// The shared preconditioner artifact cache.
     pub fn precond_cache(&self) -> &Arc<PrecondCache> {
         &self.precond_cache
     }
@@ -137,7 +144,7 @@ impl Coordinator {
                 // constrained solves activate the R-metric projection, which
                 // the artifacts don't implement — the iteration loop would
                 // silently run native, defeating the hard-require contract
-                if req.constraint != "unc" {
+                if !req.constraint.is_unconstrained() {
                     bail!(
                         "executor \"pjrt\" supports unconstrained jobs only: \
                          constrained solves use the native-only R-metric projection"
@@ -292,16 +299,19 @@ impl Coordinator {
         let prepared = self.prepare(req)?;
         let ds = &prepared.ds;
         let gt = &prepared.gt;
-        let radius = if req.radius > 0.0 {
-            req.radius
-        } else {
-            // paper setup: ball radius = norm of the unconstrained optimum
-            match req.constraint.as_str() {
-                "l1" => gt.l1_radius,
-                "l2" => gt.l2_radius,
-                _ => 0.0,
-            }
-        };
+        // paper setup: radius-bearing sets derive their radius from the
+        // unconstrained optimum unless the request pins one
+        let radius = req.resolved_radius(gt.l1_radius, gt.l2_radius);
+        // one constraint set per job, dimension-checked against the
+        // prepared dataset and wrapped in a projection counter so the
+        // result can report projection-oracle throughput
+        let counted = ProjectionCounter::wrap(req.build_constraint(radius)?);
+        counted.check_dim(ds.d())?;
+        let counted_ref: ConstraintRef = counted.clone();
+        // built once per job: trials only vary seed/session, and rebuilding
+        // the constraint per trial would redo e.g. AffineEquality's QR
+        let base_opts =
+            req.solver_opts_with_constraint(Arc::clone(&counted_ref), Some(gt.f_star))?;
         let solver = crate::solvers::by_name(&req.solver).expect("validated");
         let backend = self.backend_for(req)?;
         let dataset_id = Self::dataset_key(req);
@@ -319,11 +329,10 @@ impl Coordinator {
             // must not pollute the hit/miss dashboards. Eviction between
             // the peek and the solve just degrades to the ordinary
             // charge-at-capability path.
-            let probe_opts = req.solver_opts(radius, Some(gt.f_star))?;
             let key = crate::solvers::driver::precond_key(
                 &backend,
                 ds,
-                &probe_opts,
+                &base_opts,
                 dataset_id.clone(),
                 req.seed,
             );
@@ -360,7 +369,7 @@ impl Coordinator {
         let mut best: Option<SolveReport> = None;
         let mut hard_require_err: Option<anyhow::Error> = None;
         for trial in 0..req.trials {
-            let mut opts = req.solver_opts(radius, Some(gt.f_star))?;
+            let mut opts = base_opts.clone();
             opts.seed = seed_rng.fork(trial as u64).next_u64();
             if req.reuse_precond || req.warm_start {
                 // session state the paper protocol doesn't have: the shared
@@ -436,6 +445,7 @@ impl Coordinator {
         let total_secs = timer.secs();
         let rel = ((best.f_final - gt.f_star) / gt.f_star.max(1e-300)).max(0.0);
         self.metrics.record_job(total_secs, req.trials, true);
+        self.metrics.record_projections(counted.count());
         if ds.is_sparse() {
             self.metrics.record_sparse_job(ds.nnz());
         }
@@ -448,6 +458,9 @@ impl Coordinator {
             best_rel_err: rel,
             trials_run: req.trials,
             total_secs,
+            constraint: counted.tag().to_string(),
+            constraint_params: counted.params(),
+            projections: counted.count(),
             nnz: ds.nnz(),
             density: ds.density(),
             sparse: ds.is_sparse(),

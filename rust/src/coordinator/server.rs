@@ -99,6 +99,15 @@ pub fn handle_connection<R: BufRead, W: Write + Send + 'static>(
                                 std::sync::atomic::Ordering::Relaxed,
                             ) as f64),
                         ),
+                        // constrained-workload accounting: projection-oracle
+                        // invocations across all jobs (0 = only
+                        // unconstrained work so far)
+                        (
+                            "projections",
+                            Json::num(coord.metrics.projections.load(
+                                std::sync::atomic::Ordering::Relaxed,
+                            ) as f64),
+                        ),
                         // memory-budget health: densify_events says how
                         // often a stage requested a dense view, rejections
                         // how often the budget refused one; limit 0 means
@@ -253,6 +262,7 @@ mod tests {
             "warm_starts",
             "sparse_jobs",
             "sparse_nnz",
+            "projections",
             "mem_used_bytes",
             "mem_peak_bytes",
             "mem_limit_bytes",

@@ -5,8 +5,11 @@
 //! Jinhui Xu, AAAI 2018).
 //!
 //! The library solves `min_{x in W} ||Ax - b||^2` for tall matrices
-//! `A in R^{n x d}` (n >> d) and convex constraint sets `W` (unconstrained,
-//! l1-ball, l2-ball), implementing the paper's algorithms:
+//! `A in R^{n x d}` (n >> d) and arbitrary convex constraint sets `W`
+//! (see [`constraints`]: unconstrained, l1/l2 balls, boxes, the probability
+//! simplex, the nonnegative orthant, elastic-net balls, affine equalities —
+//! or your own [`constraints::ConstraintSet`] implementation),
+//! implementing the paper's algorithms:
 //!
 //! * [`solvers::HdpwBatchSgd`] — Algorithm 2: two-step preconditioning
 //!   (sketch-QR + randomized Hadamard transform) followed by uniform
@@ -21,9 +24,26 @@
 //!   plain [`solvers::Sgd`], [`solvers::Adagrad`], [`solvers::Svrg`] /
 //!   pwSVRG, and an exact QR solver for ground truth.
 //!
+//! ## Quickstart (library)
+//!
+//! ```no_run
+//! use hdpw::backend::Backend;
+//! use hdpw::coordinator::{Coordinator, CoordinatorConfig, JobRequest};
+//!
+//! let coord = Coordinator::new(Backend::native(), CoordinatorConfig::default());
+//! let mut req = JobRequest::default();
+//! req.solver = "pwgradient".into();
+//! req.constraint = "simplex".into(); // any ConstraintSpec form
+//! let result = coord.run_job(&req).unwrap();
+//! println!("f(best) = {:.3e} under {}", result.best_f, result.constraint);
+//! ```
+//!
+//! The `hdpw` binary wraps the same coordinator (`hdpw solve`, `hdpw
+//! serve`, `hdpw experiment`, `hdpw bench-info` — see the README).
+//!
 //! ## Architecture
 //!
-//! Three layers (see `DESIGN.md`):
+//! Three layers (see `DESIGN.md` §§1–11; §12 is the constraint guide):
 //!
 //! 1. **L1 Pallas kernels + L2 JAX graphs** (`python/compile/`) are lowered
 //!    *once* at build time (`make artifacts`) to HLO text artifacts.
@@ -33,19 +53,39 @@
 //!    to the from-scratch native implementations in [`linalg`]/[`sketch`].
 //! 3. **L3 coordinator** ([`coordinator`]) owns jobs, scheduling, trials,
 //!    metrics and the serve loop. Python is never on the request path.
+//!
+//! ## Documentation policy
+//!
+//! `#![warn(missing_docs)]` is enforced (CI runs `cargo doc` with
+//! `RUSTDOCFLAGS="-D warnings"`) on the crate's primary public surface —
+//! [`constraints`], [`prox`], [`precond`], [`solvers`], [`coordinator`].
+//! Modules carrying an explicit `#[allow(missing_docs)]` predate the gate;
+//! documenting them is an open ROADMAP item, and the allow is removed per
+//! module as its surface is finished.
 
+#![warn(missing_docs)]
+
+#[allow(missing_docs)]
 pub mod util;
+#[allow(missing_docs)]
 pub mod linalg;
+#[allow(missing_docs)]
 pub mod sketch;
 pub mod prox;
+pub mod constraints;
 pub mod precond;
+#[allow(missing_docs)]
 pub mod data;
 pub mod solvers;
+#[allow(missing_docs)]
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod backend;
 pub mod coordinator;
+#[allow(missing_docs)]
 pub mod experiments;
 
+pub use constraints::{ConstraintRef, ConstraintSet, ConstraintSpec};
 pub use linalg::matrix::Mat;
 pub use linalg::sparse::CsrMat;
 pub use util::rng::Rng;

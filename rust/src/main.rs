@@ -88,7 +88,11 @@ fn cmd_solve(argv: &[String]) -> i32 {
         )
         .opt("n", "rows for generated datasets (default 16384)")
         .opt("solver", "solver name (default hdpwbatchsgd)")
-        .opt("constraint", "unc|l1|l2 (default unc)")
+        .opt(
+            "constraint",
+            "unc|l1[:r]|l2[:r]|nonneg|simplex[:total]|box:lo,hi|enet:alpha[,r] \
+             or a JSON spec like {\"box\":{\"lo\":[...],\"hi\":[...]}} (default unc)",
+        )
         .opt("radius", "ball radius (default: norm of unconstrained optimum)")
         .opt("batch-size", "mini-batch size r (default 64)")
         .opt("max-iters", "iteration cap (default 5000)")
@@ -116,7 +120,13 @@ fn cmd_solve(argv: &[String]) -> i32 {
     req.dataset = args.get_or("dataset", "syn2");
     req.n = args.get_usize("n", req.n);
     req.solver = args.get_or("solver", "hdpwbatchsgd");
-    req.constraint = args.get_or("constraint", "unc");
+    req.constraint = match args.get_or("constraint", "unc").parse() {
+        Ok(spec) => spec,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
     req.radius = args.get_f64("radius", 0.0);
     req.batch_size = args.get_usize("batch-size", req.batch_size);
     req.max_iters = args.get_usize("max-iters", req.max_iters);
@@ -169,6 +179,18 @@ fn cmd_solve(argv: &[String]) -> i32 {
                 );
                 if let Some(reason) = &fallback {
                     println!("pjrt fell back: {reason}");
+                }
+                if res.constraint != "unc" {
+                    println!(
+                        "constraint : {}{} projections={}",
+                        res.constraint,
+                        if res.constraint_params.is_empty() {
+                            String::new()
+                        } else {
+                            format!(" ({})", res.constraint_params)
+                        },
+                        res.projections
+                    );
                 }
                 if res.sparse {
                     println!(

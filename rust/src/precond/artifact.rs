@@ -43,10 +43,13 @@ use std::sync::{Arc, Mutex};
 /// wall-clock cost of the transform.
 #[derive(Clone, Debug)]
 pub struct HdParts {
+    /// The transformed (padded) design HDA.
     pub hda: Mat,
+    /// The transformed (padded) response HDb.
     pub hdb: Vec<f64>,
     /// Padded row count (the sampling universe size).
     pub n_pad: usize,
+    /// Wall-clock cost of the transform.
     pub secs: f64,
     /// Budget charge covering the resident HD data (kept alive as long as
     /// the artifact is — a cached artifact's HD bytes stay accounted until
@@ -57,9 +60,13 @@ pub struct HdParts {
 /// Construction metadata: what was sampled and what it cost (Table 2).
 #[derive(Clone, Copy, Debug)]
 pub struct ArtifactMeta {
+    /// Sketch construction sampled.
     pub sketch_kind: SketchKind,
+    /// Sketch rows s.
     pub sketch_rows: usize,
+    /// Wall-clock cost of the sketch application.
     pub sketch_secs: f64,
+    /// Wall-clock cost of the QR factorization.
     pub qr_secs: f64,
 }
 
@@ -74,6 +81,7 @@ pub struct PrecondArtifact {
     pub pinv: Mat,
     /// Step-2 transform; `None` when only the step-1 factor was requested.
     pub hd: Option<HdParts>,
+    /// Construction metadata (what was sampled, what it cost).
     pub meta: ArtifactMeta,
     /// Lazily built H = R^T R eigendecomposition for constrained solves —
     /// computed at most once per artifact, reused across trials/jobs.
@@ -399,7 +407,7 @@ mod tests {
         assert!(Arc::ptr_eq(&m1, &m2));
         // and it projects consistently with a fresh projector
         let z = vec![3.0, -2.0, 1.0, 0.5];
-        let cons = crate::prox::Constraint::L2Ball { radius: 0.5 };
+        let cons = crate::constraints::L2Ball { radius: 0.5 };
         let fresh = MetricProjector::from_r(&art.r);
         let a = m1.project(&z, &cons);
         let b = fresh.project(&z, &cons);

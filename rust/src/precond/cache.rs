@@ -30,7 +30,9 @@ use std::sync::{Arc, Condvar, Mutex};
 pub struct PrecondKey {
     /// Coordinator dataset identity (name + scale + normalize + data seed).
     pub dataset_id: String,
+    /// Sketch construction the artifact was sampled with.
     pub sketch: SketchKind,
+    /// Sketch rows s.
     pub sketch_rows: usize,
     /// Artifact sampling seed — the *job* seed, not a per-trial fork, so
     /// all trials of a job (and identical jobs) share one artifact.
@@ -64,6 +66,7 @@ pub enum CacheOutcome {
 }
 
 impl CacheOutcome {
+    /// Wire form ("off" | "miss" | "hit" | "upgrade").
     pub fn as_str(self) -> &'static str {
         match self {
             CacheOutcome::Off => "off",
@@ -145,6 +148,7 @@ impl std::fmt::Debug for PrecondCache {
 }
 
 impl PrecondCache {
+    /// A cache bounded by `budget_bytes` (floored at one byte).
     pub fn new(budget_bytes: usize) -> PrecondCache {
         PrecondCache {
             budget: budget_bytes.max(1),
@@ -167,6 +171,7 @@ impl PrecondCache {
             .max(1)
     }
 
+    /// A cache with the [`PrecondCache::default_budget`] byte budget.
     pub fn with_default_budget() -> PrecondCache {
         PrecondCache::new(PrecondCache::default_budget())
     }
@@ -283,30 +288,37 @@ impl PrecondCache {
         }
     }
 
+    /// Lookups served from the cache.
     pub fn hits(&self) -> usize {
         self.hits.load(Ordering::Relaxed)
     }
 
+    /// Lookups that had to compute.
     pub fn misses(&self) -> usize {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Entries removed to honor the byte budget (or shed under pressure).
     pub fn evictions(&self) -> usize {
         self.evictions.load(Ordering::Relaxed)
     }
 
+    /// Total inserts (including same-key replacements).
     pub fn inserts(&self) -> usize {
         self.inserts.load(Ordering::Relaxed)
     }
 
+    /// Artifacts currently resident.
     pub fn entries(&self) -> usize {
         self.inner.lock().unwrap().map.len()
     }
 
+    /// Bytes currently resident.
     pub fn bytes(&self) -> usize {
         self.inner.lock().unwrap().bytes
     }
 
+    /// The configured byte budget.
     pub fn budget(&self) -> usize {
         self.budget
     }

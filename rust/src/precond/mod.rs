@@ -31,8 +31,11 @@ pub struct Precondition {
     pub pinv: Mat,
     /// Wall-clock cost of the sketch + QR (Table 2 measurements).
     pub sketch_secs: f64,
+    /// Wall-clock cost of the QR factorization alone.
     pub qr_secs: f64,
+    /// Sketch construction used.
     pub sketch_kind: SketchKind,
+    /// Sketch rows s.
     pub sketch_rows: usize,
 }
 
@@ -194,10 +197,13 @@ pub fn precondition_ds_budgeted(
 /// gradient in expectation scaled consistently) — we keep the *padded* row
 /// count as the sampling universe exactly like zero-padding the dataset.
 pub struct HdTransformed {
+    /// The transformed (padded) design HDA.
     pub hda: Mat,
+    /// The transformed (padded) response HDb.
     pub hdb: Vec<f64>,
     /// padded row count (sampling universe size)
     pub n_pad: usize,
+    /// Wall-clock cost of the transform.
     pub secs: f64,
     /// The budget charge covering the transformed buffer — held for as long
     /// as the HD data is resident (it rides into `HdParts`, so a cached

@@ -11,16 +11,29 @@
 //! *increase* the R-metric distance and the iteration diverges — our
 //! integration tests reproduce exactly that failure mode.
 //!
-//! Implementation: eigendecompose H = Q diag(lam) Q^T once per job (d is
-//! small), then
-//! * l2 ball — dual Newton/bisection on the Lagrange multiplier: in the
-//!   eigenbasis x(mu) = Q diag(lam/(lam+mu)) Q^T x~, with ||x(mu)||
-//!   monotone in mu; exact to tolerance in ~60 bisections, each O(d).
-//! * l1 ball — ADMM splitting min 1/2 (x-x~)^T H (x-x~) + I_{||u||_1<=rho},
-//!   x = u: the x-update is diagonal in the eigenbasis, the u-update is a
-//!   Euclidean l1 projection. Fresh-started each call (see project_admm).
+//! This module owns the *metric machinery*: the one-per-job H = Q diag(lam)
+//! Q^T eigendecomposition and three reusable primitives —
+//!
+//! * [`MetricProjector::project_l2_ball`] — dual Newton/bisection on the
+//!   Lagrange multiplier: in the eigenbasis x(mu) = Q diag(lam/(lam+mu))
+//!   Q^T x~, with ||x(mu)|| monotone in mu; exact to tolerance in ~60
+//!   bisections, each O(d).
+//! * [`MetricProjector::project_admm`] — generic ADMM splitting
+//!   min 1/2 (x-x~)^T H (x-x~) + I_C(u), x = u: the x-update is diagonal in
+//!   the eigenbasis, the u-update is any *Euclidean* projection oracle.
+//!   This is the documented fallback contract every
+//!   [`crate::constraints::ConstraintSet`] inherits: a set only needs its
+//!   Euclidean projector, and the metric projection reduces to repeated
+//!   Euclidean projections (with H = I it collapses to a single one).
+//! * [`MetricProjector::h_inv_apply`] — apply H^{-1} through the eigenbasis
+//!   (the KKT building block for sets with closed-form metric projections,
+//!   e.g. affine equality).
+//!
+//! *Which* primitive a constraint set uses is the set's decision:
+//! [`MetricProjector::project`] just dispatches to
+//! [`crate::constraints::ConstraintSet::project_metric`].
 
-use super::{project_l1, Constraint};
+use crate::constraints::ConstraintSet;
 use crate::linalg::blas::{self, nrm2};
 use crate::linalg::eigen::{sym_eigen, SymEigen};
 use crate::linalg::Mat;
@@ -40,6 +53,7 @@ impl MetricProjector {
         Self::from_h(&h)
     }
 
+    /// Build from an explicit symmetric positive-definite H.
     pub fn from_h(h: &Mat) -> MetricProjector {
         let eig = sym_eigen(h);
         let d = h.rows;
@@ -52,24 +66,19 @@ impl MetricProjector {
         }
     }
 
-    /// Project z onto the constraint set in the H-metric.
-    pub fn project(&self, z: &[f64], cons: &Constraint) -> Vec<f64> {
-        match *cons {
-            Constraint::Unconstrained => z.to_vec(),
-            Constraint::L2Ball { radius } => self.project_l2(z, radius),
-            Constraint::L1Ball { radius } => self.project_l1(z, radius),
-            // box: coordinate-separable only in the Euclidean metric; use
-            // ADMM with a clamp in place of the l1 projection
-            Constraint::Box { lo, hi } => self.project_admm(z, |u| {
-                for v in u.iter_mut() {
-                    *v = v.clamp(lo, hi);
-                }
-            }),
-        }
+    /// Project z onto the constraint set in the H-metric. Dispatches to the
+    /// set's own [`ConstraintSet::project_metric`] strategy (exact
+    /// bisection for the l2 ball, ADMM around the Euclidean oracle for most
+    /// sets, a closed-form KKT solve for affine equality, identity when
+    /// unconstrained).
+    pub fn project(&self, z: &[f64], cons: &dyn ConstraintSet) -> Vec<f64> {
+        cons.project_metric(self, z)
     }
 
-    /// l2 ball: x(mu) = (H + mu I)^{-1} H z, ||x(mu)|| decreasing in mu.
-    fn project_l2(&self, z: &[f64], radius: f64) -> Vec<f64> {
+    /// Exact metric projection onto the l2 ball: x(mu) = (H + mu I)^{-1} H z
+    /// with ||x(mu)|| decreasing in mu; bisect on the multiplier. Interior
+    /// points are returned untouched.
+    pub fn project_l2_ball(&self, z: &[f64], radius: f64) -> Vec<f64> {
         if nrm2(z) <= radius {
             return z.to_vec();
         }
@@ -112,18 +121,24 @@ impl MetricProjector {
         blas::gemv(&self.eig.v, &xw)
     }
 
-    /// l1 ball via ADMM (x-update diagonal in the eigenbasis).
-    fn project_l1(&self, z: &[f64], radius: f64) -> Vec<f64> {
-        let l1: f64 = z.iter().map(|v| v.abs()).sum();
-        if l1 <= radius {
-            return z.to_vec();
-        }
-        self.project_admm(z, |u| project_l1(u, radius))
+    /// Apply H^{-1} through the eigenbasis: H^{-1} v = Q diag(1/lam) Q^T v.
+    /// O(d^2) per call; used by closed-form KKT metric projections (affine
+    /// equality solves (C H^{-1} C^T) lam = Cz - e with this).
+    pub fn h_inv_apply(&self, v: &[f64]) -> Vec<f64> {
+        let w = blas::gemv(&self.eig.v.transpose(), v);
+        let scaled: Vec<f64> = w
+            .iter()
+            .zip(&self.eig.vals)
+            .map(|(wi, li)| wi / li.max(1e-300))
+            .collect();
+        blas::gemv(&self.eig.v, &scaled)
     }
 
     /// Generic ADMM: min 1/2 (x-z)^T H (x-z) + I_C(u), x = u, where
-    /// `proj_c` is the Euclidean projection onto C.
-    fn project_admm(&self, z: &[f64], proj_c: impl Fn(&mut [f64])) -> Vec<f64> {
+    /// `proj_c` is the *Euclidean* projection onto C. This is the fallback
+    /// contract behind [`ConstraintSet::project_metric`]: any convex set
+    /// with a Euclidean oracle gets a correct metric projection.
+    pub fn project_admm(&self, z: &[f64], proj_c: impl Fn(&mut [f64])) -> Vec<f64> {
         let d = self.d;
         let rho = self.rho_admm;
         // eigenbasis coordinates of z
@@ -171,6 +186,7 @@ impl MetricProjector {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::constraints::{L1Ball, L2Ball, Unconstrained};
     use crate::util::rng::Rng;
 
     fn h_matrix(d: usize, kappa: f64, rng: &mut Rng) -> Mat {
@@ -201,7 +217,7 @@ mod tests {
         let proj = MetricProjector::from_h(&h);
         let z: Vec<f64> = rng.gaussians(8).iter().map(|v| v * 5.0).collect();
         let radius = 1.0;
-        let x = proj.project(&z, &Constraint::L2Ball { radius });
+        let x = proj.project(&z, &L2Ball { radius });
         assert!((nrm2(&x) - radius).abs() < 1e-8, "||x|| = {}", nrm2(&x));
         // optimality: no feasible random candidate is metric-closer to z
         let dx = metric_dist(&h, &z, &x);
@@ -224,7 +240,7 @@ mod tests {
         let proj = MetricProjector::from_h(&h);
         let z: Vec<f64> = rng.gaussians(6).iter().map(|v| v * 3.0).collect();
         let radius = 1.0;
-        let x = proj.project(&z, &Constraint::L1Ball { radius });
+        let x = proj.project(&z, &L1Ball { radius });
         let l1: f64 = x.iter().map(|v| v.abs()).sum();
         assert!(l1 <= radius + 1e-7, "||x||_1 = {l1}");
         let dx = metric_dist(&h, &z, &x);
@@ -250,8 +266,8 @@ mod tests {
         let h = h_matrix(5, 100.0, &mut rng);
         let proj = MetricProjector::from_h(&h);
         let z = vec![0.01; 5];
-        let x2 = proj.project(&z, &Constraint::L2Ball { radius: 1.0 });
-        let x1 = proj.project(&z, &Constraint::L1Ball { radius: 1.0 });
+        let x2 = proj.project(&z, &L2Ball { radius: 1.0 });
+        let x1 = proj.project(&z, &L1Ball { radius: 1.0 });
         for i in 0..5 {
             assert!((x2[i] - z[i]).abs() < 1e-12);
             assert!((x1[i] - z[i]).abs() < 1e-12);
@@ -265,19 +281,41 @@ mod tests {
         let proj = MetricProjector::from_h(&h);
         let z: Vec<f64> = rng.gaussians(7).iter().map(|v| v * 4.0).collect();
         // l2
-        let got = proj.project(&z, &Constraint::L2Ball { radius: 1.0 });
+        let got = proj.project(&z, &L2Ball { radius: 1.0 });
         let mut want = z.clone();
         crate::prox::project_l2(&mut want, 1.0);
         for i in 0..7 {
             assert!((got[i] - want[i]).abs() < 1e-8);
         }
         // l1
-        let got = proj.project(&z, &Constraint::L1Ball { radius: 1.5 });
+        let got = proj.project(&z, &L1Ball { radius: 1.5 });
         let mut want = z.clone();
         crate::prox::project_l1(&mut want, 1.5);
         for i in 0..7 {
             assert!((got[i] - want[i]).abs() < 1e-6, "{} vs {}", got[i], want[i]);
         }
+    }
+
+    #[test]
+    fn h_inv_apply_inverts_h() {
+        let mut rng = Rng::new(6);
+        let h = h_matrix(7, 1e6, &mut rng);
+        let proj = MetricProjector::from_h(&h);
+        let v = rng.gaussians(7);
+        let hv = blas::gemv(&h, &v);
+        let back = proj.h_inv_apply(&hv);
+        for i in 0..7 {
+            assert!((back[i] - v[i]).abs() < 1e-6, "{} vs {}", back[i], v[i]);
+        }
+    }
+
+    #[test]
+    fn unconstrained_metric_projection_is_identity() {
+        let mut rng = Rng::new(8);
+        let h = h_matrix(5, 1e4, &mut rng);
+        let proj = MetricProjector::from_h(&h);
+        let z = rng.gaussians(5);
+        assert_eq!(proj.project(&z, &Unconstrained), z);
     }
 
     #[test]
@@ -289,7 +327,7 @@ mod tests {
         let h = blas::gemm(&r.transpose(), &r);
         let p2 = MetricProjector::from_h(&h);
         let z: Vec<f64> = rng.gaussians(6).iter().map(|v| v * 3.0).collect();
-        let c = Constraint::L2Ball { radius: 0.5 };
+        let c = L2Ball { radius: 0.5 };
         let x1 = p1.project(&z, &c);
         let x2 = p2.project(&z, &c);
         for i in 0..6 {

@@ -5,10 +5,12 @@
 use super::driver::{drive, SolveSession, StepRule};
 use super::{Solver, SolveReport, SolverOpts};
 use crate::backend::Backend;
+use crate::constraints::ConstraintSet;
 use crate::data::Dataset;
 use crate::linalg::{blas, Mat};
 use anyhow::Result;
 
+/// Per-coordinate adaptive-step SGD (classical baseline).
 pub struct Adagrad;
 
 /// Per-coordinate adaptive steps as a step rule: no setup phase; the G_t
@@ -93,7 +95,7 @@ impl Solver for Adagrad {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::prox::Constraint;
+    use crate::constraints;
     use crate::solvers::exact::ground_truth;
     use crate::util::rng::Rng;
 
@@ -158,9 +160,9 @@ mod tests {
     #[test]
     fn feasibility_under_l2() {
         let ds = dataset(512, 5, 3);
-        let cons = Constraint::L2Ball { radius: 0.4 };
+        let cons = constraints::l2_ball(0.4);
         let mut opts = SolverOpts::default();
-        opts.constraint = cons;
+        opts.constraint = cons.clone();
         opts.max_iters = 200;
         opts.chunk = 100;
         let rep = Adagrad.solve(&Backend::native(), &ds, &opts).unwrap();

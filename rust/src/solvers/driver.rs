@@ -24,13 +24,13 @@
 
 use super::{timed, SolveReport, SolverOpts, TraceRecorder};
 use crate::backend::Backend;
+use crate::constraints::ConstraintSet;
 use crate::data::Dataset;
 use crate::precond::{
     precondition_ds_with, CacheOutcome, Lookup, PrecondArtifact, PrecondCache, PrecondKey,
     Precondition,
 };
 use crate::prox::metric::MetricProjector;
-use crate::prox::Constraint;
 use crate::sketch::default_sketch_size_for;
 use crate::util::mem::MemBudget;
 use crate::util::rng::Rng;
@@ -97,8 +97,11 @@ pub fn precond_key(
 /// Owns the cross-cutting state of one solve: rng, setup clock, artifact
 /// acquisition, warm start, trace, and stopping rules.
 pub struct SolveSession<'a> {
+    /// The numerical backend every op dispatches through.
     pub backend: &'a Backend,
+    /// The dataset being solved.
     pub ds: &'a Dataset,
+    /// The solve options (constraint, budgets, sketch, session context).
     pub opts: &'a SolverOpts,
     /// The per-trial stream (seeded from `opts.seed`); step rules draw
     /// batch indices etc. from here.
@@ -115,6 +118,7 @@ pub struct SolveSession<'a> {
 }
 
 impl<'a> SolveSession<'a> {
+    /// Open a session (seeds the trial rng; nothing is acquired yet).
     pub fn new(backend: &'a Backend, ds: &'a Dataset, opts: &'a SolverOpts) -> SolveSession<'a> {
         let mem = opts
             .session
@@ -248,12 +252,11 @@ impl<'a> SolveSession<'a> {
     /// unconstrained) — shared through the artifact, so a cached artifact
     /// amortizes the H = R^T R eigendecomposition too.
     pub fn metric(&mut self, art: &PrecondArtifact) -> Option<Arc<MetricProjector>> {
-        match self.opts.constraint {
-            Constraint::Unconstrained => None,
-            _ => {
-                self.touch_setup();
-                Some(art.metric())
-            }
+        if self.opts.constraint.is_unconstrained() {
+            None
+        } else {
+            self.touch_setup();
+            Some(art.metric())
         }
     }
 
@@ -313,6 +316,7 @@ impl<'a> SolveSession<'a> {
         self.rec.as_ref().map(|r| r.iters()).unwrap_or(0)
     }
 
+    /// Whether the stop rules (iters / time / eps) fire at objective `f`.
     pub fn should_stop(&self, f: f64) -> bool {
         self.rec
             .as_ref()
@@ -325,6 +329,7 @@ impl<'a> SolveSession<'a> {
             .max(1)
     }
 
+    /// Record a chunk on the trace (`iters` steps, `secs` on the clock).
     pub fn record(&mut self, iters: usize, secs: f64, f: f64) {
         self.rec
             .as_mut()
@@ -345,6 +350,7 @@ impl<'a> SolveSession<'a> {
 /// which iterate to evaluate. The shared frame (rng, clocks, trace, stop
 /// rules, artifact acquisition) lives in [`SolveSession`] / [`drive`].
 pub trait StepRule {
+    /// Canonical solver name this rule reports as.
     fn name(&self) -> &'static str;
 
     /// Acquire artifacts through the session (runs on the setup clock).

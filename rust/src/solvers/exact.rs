@@ -23,6 +23,7 @@ use crate::util::rng::Rng;
 use crate::util::stats::Timer;
 use anyhow::Result;
 
+/// The exact (QR / preconditioned-CGLS) ground-truth oracle.
 pub struct ExactQr;
 
 impl Solver for ExactQr {
@@ -130,12 +131,17 @@ pub fn sparse_lstsq(csr: &CsrMat, b: &[f64]) -> Vec<f64> {
 /// constrained variants ("we first generate the optimal solution for the
 /// unconstrained case, and then set it as the radius of balls").
 pub struct GroundTruth {
+    /// The unconstrained optimum.
     pub x_star: Vec<f64>,
+    /// f at the unconstrained optimum.
     pub f_star: f64,
+    /// ||x*||_1 — the paper's derived l1-ball radius.
     pub l1_radius: f64,
+    /// ||x*||_2 — the paper's derived l2-ball radius.
     pub l2_radius: f64,
 }
 
+/// Compute the [`GroundTruth`] for a dataset (representation-routed).
 pub fn ground_truth(ds: &Dataset) -> GroundTruth {
     let x_star = lstsq_ds(ds);
     let f_star = ds.objective(&x_star);
@@ -186,9 +192,9 @@ mod tests {
         assert!(gt.l1_radius >= gt.l2_radius); // l1 >= l2 norm always
         assert!(gt.f_star >= 0.0);
         // x* is feasible for both balls at these radii
-        use crate::prox::Constraint;
-        assert!(Constraint::L1Ball { radius: gt.l1_radius }.contains(&gt.x_star, 1e-9));
-        assert!(Constraint::L2Ball { radius: gt.l2_radius }.contains(&gt.x_star, 1e-9));
+        use crate::constraints::{ConstraintSet, L1Ball, L2Ball};
+        assert!(L1Ball { radius: gt.l1_radius }.contains(&gt.x_star, 1e-9));
+        assert!(L2Ball { radius: gt.l2_radius }.contains(&gt.x_star, 1e-9));
     }
 
     fn sparse_pair(n: usize, d: usize, kappa: f64, seed: u64) -> (Dataset, Mat) {

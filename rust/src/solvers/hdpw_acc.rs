@@ -17,6 +17,7 @@ use crate::prox::metric::MetricProjector;
 use anyhow::Result;
 use std::sync::Arc;
 
+/// Algorithm 6: two-step preconditioning + accelerated mini-batch SGD.
 pub struct HdpwAccBatchSgd;
 
 /// Algorithm 6 as a step rule. The multi-epoch structure maps onto the
@@ -152,7 +153,7 @@ impl StepRule for HdpwAccRule {
             &etas,
             self.mu,
             self.scale,
-            &sess.opts.constraint,
+            sess.opts.constraint.as_ref(),
             self.metric.as_deref(),
         );
         self.x = xn;
@@ -190,8 +191,8 @@ impl Solver for HdpwAccBatchSgd {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::constraints::{self, ConstraintSet};
     use crate::linalg::{blas, Mat};
-    use crate::prox::Constraint;
     use crate::solvers::exact::ground_truth;
     use crate::util::rng::Rng;
 
@@ -223,11 +224,9 @@ mod tests {
     fn feasible_under_l1() {
         let ds = dataset(1024, 6, 2);
         let gt = ground_truth(&ds);
-        let cons = Constraint::L1Ball {
-            radius: gt.l1_radius,
-        };
+        let cons = constraints::l1_ball(gt.l1_radius);
         let mut opts = SolverOpts::default();
-        opts.constraint = cons;
+        opts.constraint = cons.clone();
         opts.batch_size = 16;
         opts.max_iters = 1000;
         opts.chunk = 100;

@@ -18,6 +18,7 @@ use crate::prox::metric::MetricProjector;
 use anyhow::Result;
 use std::sync::Arc;
 
+/// Algorithm 2: two-step preconditioning + uniform mini-batch SGD.
 pub struct HdpwBatchSgd;
 
 /// Algorithm 2 as a step rule. Setup acquires the full two-step artifact
@@ -105,7 +106,7 @@ impl StepRule for HdpwBatchRule {
             &idx,
             self.eta,
             self.scale,
-            &sess.opts.constraint,
+            sess.opts.constraint.as_ref(),
             self.metric.as_deref(),
         );
         self.x = xt;
@@ -144,9 +145,9 @@ fn average(xsum: &[f64], t: usize) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::constraints::{self, ConstraintSet};
     use crate::linalg::blas;
     use crate::linalg::Mat;
-    use crate::prox::Constraint;
     use crate::solvers::exact::ground_truth;
     use crate::util::rng::Rng;
 
@@ -181,11 +182,11 @@ mod tests {
         let ds = dataset(1024, 6, 2);
         let gt = ground_truth(&ds);
         for cons in [
-            Constraint::L2Ball { radius: gt.l2_radius },
-            Constraint::L1Ball { radius: gt.l1_radius },
+            constraints::l2_ball(gt.l2_radius),
+            constraints::l1_ball(gt.l1_radius),
         ] {
             let mut opts = SolverOpts::default();
-            opts.constraint = cons;
+            opts.constraint = cons.clone();
             opts.batch_size = 16;
             opts.max_iters = 800;
             opts.chunk = 100;

@@ -11,9 +11,11 @@
 use super::driver::{drive, SolveSession, StepRule};
 use super::{Solver, SolveReport, SolverOpts};
 use crate::backend::Backend;
+use crate::constraints::ConstraintSet;
 use crate::data::Dataset;
 use anyhow::Result;
 
+/// Iterative Hessian Sketch (Pilanci & Wainwright 2016 baseline).
 pub struct Ihs;
 
 /// IHS as a step rule with NO setup phase: the fresh sketch + QR recurs
@@ -43,9 +45,10 @@ impl StepRule for IhsRule {
             // fresh sketch + QR every iteration (the method's signature
             // cost, kept inside the timed region deliberately)
             let pre = sess.fresh_precond();
-            let metric = match sess.opts.constraint {
-                crate::prox::Constraint::Unconstrained => None,
-                _ => Some(crate::prox::metric::MetricProjector::from_r(&pre.r)),
+            let metric = if sess.opts.constraint.is_unconstrained() {
+                None
+            } else {
+                Some(crate::prox::metric::MetricProjector::from_r(&pre.r))
             };
             // representation-routed: O(nnz) fused gradient on CSR (no
             // dense mirror), the same backend dispatch as before on dense
@@ -57,7 +60,7 @@ impl StepRule for IhsRule {
                 &pre.pinv,
                 &g,
                 0.5,
-                &sess.opts.constraint,
+                sess.opts.constraint.as_ref(),
                 metric.as_ref(),
             );
         }

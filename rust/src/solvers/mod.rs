@@ -48,8 +48,8 @@ pub use sgd::Sgd;
 pub use svrg::Svrg;
 
 use crate::backend::Backend;
+use crate::constraints::{self, ConstraintRef, ConstraintSet};
 use crate::data::Dataset;
-use crate::prox::Constraint;
 use crate::sketch::SketchKind;
 use crate::util::stats::Timer;
 use anyhow::Result;
@@ -57,7 +57,11 @@ use anyhow::Result;
 /// Options shared by all solvers.
 #[derive(Clone, Debug)]
 pub struct SolverOpts {
-    pub constraint: Constraint,
+    /// The constraint set W every iterate is projected onto (shared,
+    /// type-erased; [`crate::constraints::unconstrained`] by default). The
+    /// coordinator builds it from the request's
+    /// [`crate::constraints::ConstraintSpec`].
+    pub constraint: ConstraintRef,
     /// Mini-batch size r (stochastic solvers).
     pub batch_size: usize,
     /// Hard cap on iterations (inner steps for stochastic solvers).
@@ -79,6 +83,8 @@ pub struct SolverOpts {
     /// Row-shard height for block-streamed setup ops (sketch folds);
     /// None = per-shape cache/thread heuristic (data::default_block_rows).
     pub block_rows: Option<usize>,
+    /// Per-trial rng seed (the coordinator forks one per trial from the
+    /// job seed).
     pub seed: u64,
     /// Session context (precond reuse, warm start) threaded by the
     /// coordinator; the default reproduces the paper's fresh-per-trial
@@ -89,7 +95,7 @@ pub struct SolverOpts {
 impl Default for SolverOpts {
     fn default() -> Self {
         SolverOpts {
-            constraint: Constraint::Unconstrained,
+            constraint: constraints::unconstrained(),
             batch_size: 64,
             max_iters: 20_000,
             eps_abs: None,
@@ -121,13 +127,19 @@ pub struct TracePoint {
 /// Result of one solve.
 #[derive(Clone, Debug)]
 pub struct SolveReport {
+    /// Canonical solver name (the registry key).
     pub solver: String,
+    /// The final iterate (averaged iterate for the SGD family).
     pub x: Vec<f64>,
+    /// f at the final iterate.
     pub f_final: f64,
+    /// Inner iterations completed.
     pub iters: usize,
     /// Preconditioning / sketching setup cost, already included in trace[0].
     pub setup_secs: f64,
+    /// Total solve seconds (setup + all chunks; objective evals excluded).
     pub solve_secs: f64,
+    /// Convergence trace sampled at chunk boundaries.
     pub trace: Vec<TracePoint>,
     /// How the preconditioner was acquired (off / miss / hit) — lets a
     /// serve response distinguish a reused artifact from a fresh one.
@@ -171,7 +183,9 @@ impl SolveReport {
 /// structured error the coordinator reports as a job error (never a panic,
 /// never an OOM).
 pub trait Solver: Send + Sync {
+    /// Canonical solver name (the registry key in [`by_name`]).
     fn name(&self) -> &'static str;
+    /// Run one solve of `ds` under `opts` on `backend`.
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> Result<SolveReport>;
 }
 
@@ -194,6 +208,7 @@ pub fn by_name(name: &str) -> Option<Box<dyn Solver>> {
     }
 }
 
+/// Every canonical solver name (CLI help, exhaustive test loops).
 pub fn all_names() -> &'static [&'static str] {
     &[
         "hdpwbatchsgd",
@@ -216,12 +231,14 @@ pub fn all_names() -> &'static [&'static str] {
 /// Tracks the solve clock (setup + per-chunk compute, excluding objective
 /// evaluations) and assembles the trace.
 pub struct TraceRecorder {
+    /// The trace so far (trace[0] is the setup point at iteration 0).
     pub trace: Vec<TracePoint>,
     solve_secs: f64,
     iters: usize,
 }
 
 impl TraceRecorder {
+    /// Start a trace at f(x0) = `f0` with `setup_secs` already on the clock.
     pub fn new(setup_secs: f64, f0: f64) -> Self {
         TraceRecorder {
             trace: vec![TracePoint {
@@ -246,10 +263,12 @@ impl TraceRecorder {
         });
     }
 
+    /// Inner iterations recorded so far.
     pub fn iters(&self) -> usize {
         self.iters
     }
 
+    /// Solve seconds recorded so far (setup included).
     pub fn secs(&self) -> f64 {
         self.solve_secs
     }
@@ -270,6 +289,7 @@ impl TraceRecorder {
         false
     }
 
+    /// Close the trace into a [`SolveReport`].
     pub fn finish(self, solver: &str, x: Vec<f64>, f: f64, setup_secs: f64) -> SolveReport {
         SolveReport {
             solver: solver.to_string(),
@@ -461,7 +481,7 @@ mod tests {
         assert_eq!(theory_step_size(&o2, 1.0, 1.0, 10, 1.0), 0.123);
         // constrained diameter scales with the R-metric norm
         let mut o3 = SolverOpts::default();
-        o3.constraint = crate::prox::Constraint::L2Ball { radius: 1.0 };
+        o3.constraint = constraints::l2_ball(1.0);
         let small = theory_step_size(&o3, 1e6, 1.0, 100, 1.0);
         let big = theory_step_size(&o3, 1e6, 1.0, 100, 100.0);
         assert!(big > 10.0 * small, "metric scaling missing: {small} vs {big}");

@@ -10,6 +10,7 @@
 use super::driver::{drive, SolveSession, StepRule};
 use super::{Solver, SolveReport, SolverOpts};
 use crate::backend::Backend;
+use crate::constraints::ConstraintSet;
 use crate::data::Dataset;
 use crate::linalg::blas;
 use crate::precond::PrecondArtifact;
@@ -17,6 +18,7 @@ use crate::prox::metric::MetricProjector;
 use anyhow::Result;
 use std::sync::Arc;
 
+/// Algorithm 4: one-sketch preconditioned projected gradient descent.
 pub struct PwGradient;
 
 /// Algorithm 4 as a step rule: setup acquires ONE sketch-QR artifact (the
@@ -67,7 +69,7 @@ impl StepRule for PwGradientRule {
                         *xi -= self.eta * si;
                     }
                     match self.metric.as_deref() {
-                        Some(m) => self.x = m.project(&self.x, &sess.opts.constraint),
+                        Some(m) => self.x = m.project(&self.x, sess.opts.constraint.as_ref()),
                         None => sess.opts.constraint.project(&mut self.x),
                     }
                 }
@@ -80,7 +82,7 @@ impl StepRule for PwGradientRule {
                     &art.pinv,
                     self.eta,
                     t,
-                    &sess.opts.constraint,
+                    sess.opts.constraint.as_ref(),
                     self.metric.as_deref(),
                 );
             }
@@ -105,8 +107,8 @@ impl Solver for PwGradient {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::constraints;
     use crate::linalg::{blas, Mat};
-    use crate::prox::Constraint;
     use crate::solvers::exact::ground_truth;
     use crate::util::rng::Rng;
 
@@ -187,11 +189,9 @@ mod tests {
         let ds = dataset(1024, 6, 3);
         let gt = ground_truth(&ds);
         // radius set to HALF the unconstrained optimum: active constraint
-        let cons = Constraint::L2Ball {
-            radius: 0.5 * gt.l2_radius,
-        };
+        let cons = constraints::l2_ball(0.5 * gt.l2_radius);
         let mut opts = SolverOpts::default();
-        opts.constraint = cons;
+        opts.constraint = cons.clone();
         opts.max_iters = 300;
         let rep = PwGradient.solve(&Backend::native(), &ds, &opts).unwrap();
         assert!(cons.contains(&rep.x, 1e-9));

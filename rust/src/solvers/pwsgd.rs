@@ -14,6 +14,7 @@
 use super::driver::{drive, SolveSession, StepRule};
 use super::{Solver, SolveReport, SolverOpts};
 use crate::backend::Backend;
+use crate::constraints::ConstraintSet;
 use crate::data::Dataset;
 use crate::linalg::{blas, tri, Mat};
 use crate::precond::PrecondArtifact;
@@ -22,6 +23,7 @@ use crate::util::rng::{AliasTable, Rng};
 use anyhow::Result;
 use std::sync::Arc;
 
+/// Leverage-score weighted SGD (Yang et al. 2016 baseline).
 pub struct PwSgd;
 
 /// JL sketch width for approximate leverage scores.
@@ -184,7 +186,7 @@ impl StepRule for PwSgdRule {
                 *xi -= self.eta * si;
             }
             match self.metric.as_deref() {
-                Some(m) => self.x = m.project(&self.x, &sess.opts.constraint),
+                Some(m) => self.x = m.project(&self.x, sess.opts.constraint.as_ref()),
                 None => sess.opts.constraint.project(&mut self.x),
             }
             for (acc, xi) in self.xsum.iter_mut().zip(&self.x) {

@@ -8,10 +8,12 @@
 use super::driver::{drive, SolveSession, StepRule};
 use super::{Solver, SolveReport, SolverOpts};
 use crate::backend::Backend;
+use crate::constraints::ConstraintSet;
 use crate::data::Dataset;
 use crate::linalg::{blas, Mat};
 use anyhow::Result;
 
+/// Plain projected mini-batch SGD (classical baseline).
 pub struct Sgd;
 
 /// Decaying-step mini-batch SGD as a step rule: no setup phase, O(1/sqrt(t))
@@ -101,7 +103,7 @@ impl Solver for Sgd {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::prox::Constraint;
+    use crate::constraints;
     use crate::solvers::exact::ground_truth;
     use crate::util::rng::Rng;
 
@@ -204,9 +206,9 @@ mod tests {
     #[test]
     fn projection_respected() {
         let ds = dataset(512, 5, 3);
-        let cons = Constraint::L1Ball { radius: 0.5 };
+        let cons = constraints::l1_ball(0.5);
         let mut opts = SolverOpts::default();
-        opts.constraint = cons;
+        opts.constraint = cons.clone();
         opts.max_iters = 300;
         opts.chunk = 100;
         let rep = Sgd.solve(&Backend::native(), &ds, &opts).unwrap();

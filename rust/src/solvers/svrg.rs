@@ -14,6 +14,7 @@
 use super::driver::{drive, SolveSession, StepRule};
 use super::{timed, Solver, SolveReport, SolverOpts};
 use crate::backend::Backend;
+use crate::constraints::ConstraintSet;
 use crate::data::Dataset;
 use crate::linalg::{blas, Mat};
 use crate::precond::PrecondArtifact;
@@ -21,7 +22,10 @@ use crate::prox::metric::MetricProjector;
 use anyhow::Result;
 use std::sync::Arc;
 
+/// SVRG / pwSVRG — (preconditioned) variance-reduced SGD, the
+/// high-precision stochastic baseline.
 pub struct Svrg {
+    /// Apply the sketch-QR preconditioner to every direction (pwSVRG).
     pub preconditioned: bool,
 }
 
@@ -140,7 +144,7 @@ impl StepRule for SvrgRule {
                 *xi -= self.eta * vi;
             }
             match self.metric.as_deref() {
-                Some(m) => self.x = m.project(&self.x, &sess.opts.constraint),
+                Some(m) => self.x = m.project(&self.x, sess.opts.constraint.as_ref()),
                 None => sess.opts.constraint.project(&mut self.x),
             }
         }
@@ -231,9 +235,9 @@ mod tests {
     #[test]
     fn constrained_feasibility() {
         let ds = dataset(512, 5, 3);
-        let cons = crate::prox::Constraint::L2Ball { radius: 0.3 };
+        let cons = crate::constraints::l2_ball(0.3);
         let mut opts = SolverOpts::default();
-        opts.constraint = cons;
+        opts.constraint = cons.clone();
         opts.max_iters = 1000;
         opts.chunk = 200;
         let rep = Svrg { preconditioned: true }.solve(&Backend::native(), &ds, &opts).unwrap();

@@ -1,0 +1,161 @@
+//! ISSUE-5 acceptance: every [`ConstraintSpec`] form survives the full
+//! serve round trip — JSON request line in, solve, `JobResult` line out
+//! with the active constraint's tag, parameter summary, and projection
+//! count — and malformed/mis-dimensioned specs come back as precise
+//! error lines, never crashes.
+
+use hdpw::backend::Backend;
+use hdpw::constraints::ConstraintSpec;
+use hdpw::coordinator::server::handle_connection;
+use hdpw::coordinator::{Coordinator, CoordinatorConfig, JobRequest};
+use hdpw::util::json::Json;
+use std::io::{Cursor, Write};
+use std::sync::{Arc, Mutex};
+
+#[derive(Clone)]
+struct VecWriter(Arc<Mutex<Vec<u8>>>);
+
+impl Write for VecWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+fn run_session(input: &str) -> Vec<Json> {
+    let coord = Arc::new(Coordinator::new(
+        Backend::native(),
+        CoordinatorConfig {
+            mem_budget: hdpw::util::mem::MemBudget::unlimited(),
+            ..CoordinatorConfig::default()
+        },
+    ));
+    let out = Arc::new(Mutex::new(Vec::new()));
+    handle_connection(
+        &coord,
+        Cursor::new(input.to_string()),
+        VecWriter(Arc::clone(&out)),
+    )
+    .unwrap();
+    let bytes = out.lock().unwrap().clone();
+    String::from_utf8(bytes)
+        .unwrap()
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).unwrap())
+        .collect()
+}
+
+#[test]
+fn every_constraint_spec_form_survives_the_serve_round_trip() {
+    // syn2 has d = 20 columns: the dimension-typed specs must match it
+    let d = 20;
+    let specs: Vec<(ConstraintSpec, &str)> = vec![
+        (ConstraintSpec::Unconstrained, "unc"),
+        (ConstraintSpec::L1Ball { radius: 0.0 }, "l1"),
+        (ConstraintSpec::L2Ball { radius: 0.0 }, "l2"),
+        (ConstraintSpec::NonNeg, "nonneg"),
+        (ConstraintSpec::Simplex { total: 1.0 }, "simplex"),
+        (ConstraintSpec::ScalarBox { lo: -2.0, hi: 2.0 }, "box"),
+        (
+            ConstraintSpec::CoordBox {
+                lo: vec![-2.0; d],
+                hi: vec![2.0; d],
+            },
+            "box",
+        ),
+        (
+            ConstraintSpec::ElasticNet {
+                alpha: 0.5,
+                radius: 0.0,
+            },
+            "enet",
+        ),
+        (
+            ConstraintSpec::AffineEq {
+                c: vec![vec![1.0; d]],
+                e: vec![0.5],
+            },
+            "affine",
+        ),
+    ];
+    let mut input = String::new();
+    for (i, (spec, _)) in specs.iter().enumerate() {
+        let mut req = JobRequest::default();
+        req.id = i as u64;
+        req.n = 256;
+        req.solver = "pwgradient".into();
+        req.max_iters = 40;
+        req.time_budget = 20.0;
+        req.trials = 1;
+        req.constraint = spec.clone();
+        input.push_str(&req.to_json().to_string());
+        input.push('\n');
+    }
+    let out = run_session(&input);
+    assert_eq!(out.len(), specs.len(), "{out:?}");
+    for (i, (spec, tag)) in specs.iter().enumerate() {
+        let line = out
+            .iter()
+            .find(|j| j.get("id").and_then(Json::as_f64) == Some(i as f64))
+            .unwrap_or_else(|| panic!("no result line for {spec:?}: {out:?}"));
+        assert!(
+            line.get("error").is_none(),
+            "{spec:?} errored: {line:?}"
+        );
+        assert_eq!(
+            line.get("constraint").and_then(Json::as_str),
+            Some(*tag),
+            "{spec:?}"
+        );
+        // the params summary rides along (the old radius-only report
+        // flattened everything but balls to nothing)
+        let params = line
+            .get("constraint_params")
+            .and_then(Json::as_str)
+            .unwrap_or_else(|| panic!("no constraint_params for {spec:?}"));
+        if *tag == "box" {
+            assert!(params.contains("lo"), "{spec:?}: params {params:?}");
+        }
+        // every constrained job projects; the unconstrained one never does
+        let projections = line
+            .get("projections")
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("no projections for {spec:?}"));
+        if *tag == "unc" {
+            assert_eq!(projections, 0.0);
+        } else {
+            assert!(projections > 0.0, "{spec:?}: projections {projections}");
+        }
+    }
+}
+
+#[test]
+fn malformed_and_mis_dimensioned_specs_error_precisely() {
+    // parse-time error: ragged box bounds — the error names the path
+    let out = run_session(
+        "{\"solver\":\"exact\",\"constraint\":{\"box\":{\"lo\":[1],\"hi\":[0,1]}}}\n",
+    );
+    let err = out[0].get("error").and_then(Json::as_str).expect("error line");
+    assert!(err.contains("constraint.box"), "{err}");
+    // admission-time error: a 3-dimensional box against syn2's d = 20
+    let mut req = JobRequest::default();
+    req.n = 256;
+    req.solver = "exact".into();
+    req.constraint = ConstraintSpec::CoordBox {
+        lo: vec![0.0; 3],
+        hi: vec![1.0; 3],
+    };
+    let out = run_session(&format!("{}\n", req.to_json()));
+    let err = out[0].get("error").and_then(Json::as_str).expect("error line");
+    assert!(err.contains("3-dimensional"), "{err}");
+    // the legacy string form still parses over the wire
+    let out = run_session(
+        "{\"solver\":\"exact\",\"n\":256,\"max_iters\":5,\"constraint\":\"l2\"}\n",
+    );
+    assert!(out[0].get("error").is_none(), "{out:?}");
+    assert_eq!(out[0].get("constraint").and_then(Json::as_str), Some("l2"));
+}

@@ -5,8 +5,8 @@
 //! compared against the native implementation to f64 tolerance.
 
 use hdpw::backend::Backend;
+use hdpw::constraints::{l1_ball, l2_ball, unconstrained, ConstraintSet};
 use hdpw::linalg::{blas, qr, tri, Mat};
-use hdpw::prox::Constraint;
 use hdpw::runtime::{Engine, EngineHandle};
 use hdpw::util::rng::Rng;
 
@@ -132,13 +132,9 @@ fn gd_step_parity_all_constraints() {
     let Some(mut s) = setup() else { return };
     let x = s.rng.gaussians(s.d);
     let g = s.rng.gaussians(s.d);
-    for cons in [
-        Constraint::Unconstrained,
-        Constraint::L2Ball { radius: 0.7 },
-        Constraint::L1Ball { radius: 0.9 },
-    ] {
-        let got = s.pjrt.gd_step(&x, &s.pinv, &g, 0.5, &cons, None);
-        let want = s.native.gd_step(&x, &s.pinv, &g, 0.5, &cons, None);
+    for cons in [unconstrained(), l2_ball(0.7), l1_ball(0.9)] {
+        let got = s.pjrt.gd_step(&x, &s.pinv, &g, 0.5, cons.as_ref(), None);
+        let want = s.native.gd_step(&x, &s.pinv, &g, 0.5, cons.as_ref(), None);
         assert_close(&got, &want, 1e-9, &format!("gd_step {}", cons.tag()));
         assert!(cons.contains(&got, 1e-9));
     }
@@ -151,17 +147,13 @@ fn sgd_chunk_parity_all_constraints() {
     let idx: Vec<Vec<usize>> = (0..s.chunk_t).map(|_| s.rng.indices(r, s.n)).collect();
     let x0 = s.rng.gaussians(s.d);
     let scale = 2.0 * s.n as f64 / r as f64;
-    for cons in [
-        Constraint::Unconstrained,
-        Constraint::L2Ball { radius: 1.0 },
-        Constraint::L1Ball { radius: 2.0 },
-    ] {
-        let (xt_p, xs_p) =
-            s.pjrt
-                .sgd_chunk(&s.a, &s.b, &x0, &s.pinv, &idx, 0.1, scale, &cons, None);
-        let (xt_n, xs_n) =
-            s.native
-                .sgd_chunk(&s.a, &s.b, &x0, &s.pinv, &idx, 0.1, scale, &cons, None);
+    for cons in [unconstrained(), l2_ball(1.0), l1_ball(2.0)] {
+        let (xt_p, xs_p) = s.pjrt.sgd_chunk(
+            &s.a, &s.b, &x0, &s.pinv, &idx, 0.1, scale, cons.as_ref(), None,
+        );
+        let (xt_n, xs_n) = s.native.sgd_chunk(
+            &s.a, &s.b, &x0, &s.pinv, &idx, 0.1, scale, cons.as_ref(), None,
+        );
         assert_close(&xt_p, &xt_n, 1e-8, &format!("sgd_chunk x {}", cons.tag()));
         assert_close(&xs_p, &xs_n, 1e-8, &format!("sgd_chunk xsum {}", cons.tag()));
     }
@@ -180,16 +172,36 @@ fn acc_chunk_parity() {
     let x0 = s.rng.gaussians(s.d);
     let xhat0 = x0.clone();
     let scale = 2.0 * s.n as f64 / r as f64;
-    for cons in [
-        Constraint::Unconstrained,
-        Constraint::L2Ball { radius: 1.0 },
-        Constraint::L1Ball { radius: 2.0 },
-    ] {
+    for cons in [unconstrained(), l2_ball(1.0), l1_ball(2.0)] {
         let (x_p, xh_p) = s.pjrt.acc_chunk(
-            &s.a, &s.b, &x0, &xhat0, &s.pinv, &idx, &alphas, &qs, &etas, 2.0, scale, &cons, None,
+            &s.a,
+            &s.b,
+            &x0,
+            &xhat0,
+            &s.pinv,
+            &idx,
+            &alphas,
+            &qs,
+            &etas,
+            2.0,
+            scale,
+            cons.as_ref(),
+            None,
         );
         let (x_n, xh_n) = s.native.acc_chunk(
-            &s.a, &s.b, &x0, &xhat0, &s.pinv, &idx, &alphas, &qs, &etas, 2.0, scale, &cons, None,
+            &s.a,
+            &s.b,
+            &x0,
+            &xhat0,
+            &s.pinv,
+            &idx,
+            &alphas,
+            &qs,
+            &etas,
+            2.0,
+            scale,
+            cons.as_ref(),
+            None,
         );
         assert_close(&x_p, &x_n, 1e-8, &format!("acc_chunk x {}", cons.tag()));
         assert_close(&xh_p, &xh_n, 1e-8, &format!("acc_chunk xhat {}", cons.tag()));
@@ -200,23 +212,26 @@ fn acc_chunk_parity() {
 fn pw_gradient_chunk_parity_and_convergence() {
     let Some(s) = setup() else { return };
     let x0 = vec![0.0; s.d];
-    for cons in [
-        Constraint::Unconstrained,
-        Constraint::L2Ball { radius: 0.5 },
-        Constraint::L1Ball { radius: 1.0 },
-    ] {
-        let got = s
-            .pjrt
-            .pw_gradient_chunk(&s.a, &s.b, &x0, &s.pinv, 0.5, s.pw_t, &cons, None);
-        let want = s
-            .native
-            .pw_gradient_chunk(&s.a, &s.b, &x0, &s.pinv, 0.5, s.pw_t, &cons, None);
+    for cons in [unconstrained(), l2_ball(0.5), l1_ball(1.0)] {
+        let got = s.pjrt.pw_gradient_chunk(
+            &s.a, &s.b, &x0, &s.pinv, 0.5, s.pw_t, cons.as_ref(), None,
+        );
+        let want = s.native.pw_gradient_chunk(
+            &s.a, &s.b, &x0, &s.pinv, 0.5, s.pw_t, cons.as_ref(), None,
+        );
         assert_close(&got, &want, 1e-8, &format!("pw_gradient {}", cons.tag()));
     }
     // exact pinv + eta=1/2: unconstrained solution == least squares optimum
-    let xt = s
-        .pjrt
-        .pw_gradient_chunk(&s.a, &s.b, &x0, &s.pinv, 0.5, s.pw_t, &Constraint::Unconstrained, None);
+    let xt = s.pjrt.pw_gradient_chunk(
+        &s.a,
+        &s.b,
+        &x0,
+        &s.pinv,
+        0.5,
+        s.pw_t,
+        &hdpw::constraints::Unconstrained,
+        None,
+    );
     let xstar = qr::lstsq(&s.a, &s.b);
     assert_close(&xt, &xstar, 1e-7, "pwGradient vs exact");
 }

@@ -1,11 +1,24 @@
-//! Reference-implementation coverage for `prox/`:
-//! * l1-ball projection checked against an O(d^2) brute-force dual search;
+//! Reference-implementation coverage for the projection layer:
+//! * l1-ball and simplex projections checked against O(d^2) brute-force
+//!   dual searches;
+//! * elastic-net projection checked against its KKT conditions, its l1/l2
+//!   degenerate cases, and random feasible candidates;
+//! * per-coordinate box and affine-equality projections checked against
+//!   independent dense references (<= 1e-10);
 //! * box constraint edge cases (lo == hi, no violation);
-//! * R-metric projection consistency with the Euclidean path when R = I.
+//! * R-metric projection consistency with the Euclidean path when R = I,
+//!   for the legacy sets AND every new set (the ADMM fallback must collapse
+//!   to a single Euclidean projection at H = I).
 
-use hdpw::linalg::Mat;
+use hdpw::constraints::{
+    affine_eq, coord_box, elastic_net, nonneg, simplex, AffineEquality, ConstraintSet, CoordBox,
+    L1Ball, L2Ball, ScalarBox, Unconstrained,
+};
+use hdpw::linalg::{blas, qr, Mat};
 use hdpw::prox::metric::MetricProjector;
-use hdpw::prox::{project_l1, project_l2, Constraint};
+use hdpw::prox::{
+    elastic_net_value, project_elastic_net, project_l1, project_l2, project_simplex,
+};
 use hdpw::Rng;
 
 /// O(d^2) reference for the Euclidean l1-ball projection: for each support
@@ -37,6 +50,28 @@ fn brute_force_l1(x: &[f64], radius: f64) -> Vec<f64> {
     x.iter()
         .map(|v| v.signum() * (v.abs() - best_theta).max(0.0))
         .collect()
+}
+
+/// O(d^2) reference for the simplex projection: scan every support size k
+/// over the coordinates sorted descending, compute the candidate shift
+/// theta_k = (sum of top-k - total) / k, and keep the k whose KKT
+/// conditions hold (kept coordinates stay positive, dropped ones would
+/// not).
+fn brute_force_simplex(x: &[f64], total: f64) -> Vec<f64> {
+    let mut sorted: Vec<f64> = x.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let d = sorted.len();
+    let mut best_theta = f64::NEG_INFINITY;
+    for k in 1..=d {
+        let prefix: f64 = sorted[..k].iter().sum();
+        let theta = (prefix - total) / k as f64;
+        let kept_ok = sorted[k - 1] - theta > 0.0;
+        let dropped_ok = k == d || sorted[k] - theta <= 0.0;
+        if kept_ok && dropped_ok {
+            best_theta = theta;
+        }
+    }
+    x.iter().map(|v| (v - best_theta).max(0.0)).collect()
 }
 
 #[test]
@@ -80,8 +115,190 @@ fn l1_projection_brute_force_on_adversarial_shapes() {
 }
 
 #[test]
+fn simplex_projection_matches_brute_force_reference() {
+    let mut rng = Rng::new(2);
+    for trial in 0..200 {
+        let d = 2 + (trial % 25);
+        let total = 0.5 + rng.uniform() * 2.0;
+        let mut x: Vec<f64> = rng.gaussians(d).iter().map(|v| v * 2.0).collect();
+        let reference = brute_force_simplex(&x, total);
+        project_simplex(&mut x, total);
+        for (a, b) in x.iter().zip(&reference) {
+            assert!(
+                (a - b).abs() < 1e-10,
+                "trial {trial}: pivot {a} vs brute force {b}"
+            );
+        }
+        // KKT spot checks: feasibility + the active-set shift is uniform
+        let sum: f64 = x.iter().sum();
+        assert!((sum - total).abs() < 1e-10);
+        assert!(x.iter().all(|&v| v >= 0.0));
+    }
+    // adversarial: ties, already-feasible, one dominant coordinate
+    for (x0, total) in [
+        (vec![0.5, 0.5, 0.5, 0.5], 1.0),
+        (vec![0.25, 0.25, 0.5], 1.0),
+        (vec![10.0, 0.0, 0.0], 1.0),
+        (vec![-1.0, -2.0, -3.0], 1.0),
+    ] {
+        let reference = brute_force_simplex(&x0, total);
+        let mut x = x0.clone();
+        project_simplex(&mut x, total);
+        for (a, b) in x.iter().zip(&reference) {
+            assert!((a - b).abs() < 1e-10, "{x0:?}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn elastic_net_projection_satisfies_kkt_and_degenerate_references() {
+    let mut rng = Rng::new(3);
+    for trial in 0..100 {
+        let d = 2 + (trial % 12);
+        let x0: Vec<f64> = rng.gaussians(d).iter().map(|v| v * 3.0).collect();
+        let alpha = rng.uniform();
+        let radius = 0.2 + rng.uniform();
+        if elastic_net_value(&x0, alpha) <= radius {
+            continue;
+        }
+        let mut y = x0.clone();
+        project_elastic_net(&mut y, alpha, radius);
+        // KKT (primal feasibility, boundary): the active constraint binds
+        let g = elastic_net_value(&y, alpha);
+        assert!((g - radius).abs() < 1e-10, "trial {trial}: g {g} vs r {radius}");
+        // KKT (stationarity): recover nu from any strictly nonzero
+        // coordinate, then every coordinate must satisfy
+        //   y_i (1 + nu (1-alpha)) = sign(y_i) max(|x_i| - nu alpha, 0)
+        let nu = y
+            .iter()
+            .zip(&x0)
+            .filter(|(yi, _)| yi.abs() > 1e-8)
+            .map(|(yi, xi)| {
+                // |x_i| - |y_i| = nu (alpha + (1-alpha) |y_i|)
+                (xi.abs() - yi.abs()) / (alpha + (1.0 - alpha) * yi.abs())
+            })
+            .next()
+            .expect("projection of an infeasible point is nonzero");
+        assert!(nu > 0.0, "trial {trial}: multiplier must be positive");
+        for (yi, xi) in y.iter().zip(&x0) {
+            let want = xi.signum() * (xi.abs() - nu * alpha).max(0.0)
+                / (1.0 + nu * (1.0 - alpha));
+            assert!(
+                (yi - want).abs() < 1e-8 * (1.0 + want.abs()),
+                "trial {trial}: stationarity {yi} vs {want}"
+            );
+        }
+        // Euclidean optimality vs random feasible candidates
+        let dy: f64 = x0.iter().zip(&y).map(|(a, b)| (a - b) * (a - b)).sum();
+        for _ in 0..200 {
+            let mut c = rng.gaussians(d);
+            // rescale until feasible (value is increasing in scale)
+            for _ in 0..60 {
+                if elastic_net_value(&c, alpha) <= radius {
+                    break;
+                }
+                for v in &mut c {
+                    *v *= 0.8;
+                }
+            }
+            let dc: f64 = x0.iter().zip(&c).map(|(a, b)| (a - b) * (a - b)).sum();
+            assert!(dc >= dy - 1e-9, "candidate beats projection");
+        }
+    }
+    // degenerate references: alpha = 1 is the (brute-forced) l1 ball,
+    // alpha = 0 the l2 ball of radius sqrt(2 r)
+    let x0: Vec<f64> = Rng::new(4).gaussians(9).iter().map(|v| v * 3.0).collect();
+    let mut e1 = x0.clone();
+    project_elastic_net(&mut e1, 1.0, 1.2);
+    for (a, b) in e1.iter().zip(&brute_force_l1(&x0, 1.2)) {
+        assert!((a - b).abs() < 1e-9, "alpha=1: {a} vs {b}");
+    }
+    let mut e0 = x0.clone();
+    project_elastic_net(&mut e0, 0.0, 1.0);
+    let mut l2 = x0.clone();
+    project_l2(&mut l2, 2f64.sqrt());
+    for (a, b) in e0.iter().zip(&l2) {
+        assert!((a - b).abs() < 1e-9, "alpha=0: {a} vs {b}");
+    }
+}
+
+#[test]
+fn coord_box_projection_matches_per_coordinate_reference() {
+    let mut rng = Rng::new(5);
+    for _ in 0..100 {
+        let d = 2 + (rng.below(12));
+        let lo: Vec<f64> = (0..d).map(|_| -1.5 + rng.uniform()).collect();
+        let hi: Vec<f64> = lo.iter().map(|&l| l + rng.uniform() * 2.0).collect();
+        let x0: Vec<f64> = rng.gaussians(d).iter().map(|v| v * 3.0).collect();
+        // independent reference: per-coordinate 1-D minimization over the
+        // three candidates {lo_i, hi_i, x_i-if-inside}
+        let reference: Vec<f64> = (0..d)
+            .map(|i| {
+                let cands = [lo[i], hi[i], x0[i].clamp(lo[i], hi[i])];
+                *cands
+                    .iter()
+                    .min_by(|a, b| {
+                        let da = (x0[i] - **a).abs();
+                        let db = (x0[i] - **b).abs();
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap()
+            })
+            .collect();
+        let set = CoordBox {
+            lo: lo.clone(),
+            hi: hi.clone(),
+        };
+        let mut x = x0.clone();
+        set.project(&mut x);
+        for (a, b) in x.iter().zip(&reference) {
+            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+        }
+        assert!(set.contains(&x, 1e-12));
+    }
+}
+
+#[test]
+fn affine_projection_matches_dense_normal_equations_reference() {
+    let mut rng = Rng::new(6);
+    for trial in 0..50 {
+        let d = 3 + trial % 8;
+        let k = 1 + trial % d.min(3);
+        let c = Mat::gaussian(k, d, &mut rng);
+        let e = rng.gaussians(k);
+        let set = AffineEquality::new(c.clone(), e.clone()).unwrap();
+        let x0 = rng.gaussians(d);
+        // independent reference: x - C^T (C C^T)^{-1} (C x - e) with the
+        // k x k system solved by dense QR
+        let cct = blas::gemm(&c, &c.transpose());
+        let mut rhs = vec![0.0; k];
+        for i in 0..k {
+            rhs[i] = blas::dot(c.row(i), &x0) - e[i];
+        }
+        let lam = qr::lstsq(&cct, &rhs);
+        let mut reference = x0.clone();
+        for i in 0..k {
+            for j in 0..d {
+                reference[j] -= c.at(i, j) * lam[i];
+            }
+        }
+        let mut x = x0.clone();
+        set.project(&mut x);
+        let scale = 1.0 + blas::nrm2(&reference);
+        for (a, b) in x.iter().zip(&reference) {
+            assert!(
+                (a - b).abs() < 1e-10 * scale,
+                "trial {trial}: {a} vs {b}"
+            );
+        }
+        // KKT spot check: residual feasibility + displacement in range(C^T)
+        assert!(set.contains(&x, 1e-9 * (1.0 + blas::nrm2(&e))));
+    }
+}
+
+#[test]
 fn box_degenerate_lo_equals_hi_pins_every_coordinate() {
-    let c = Constraint::Box { lo: 0.7, hi: 0.7 };
+    let c = ScalarBox { lo: 0.7, hi: 0.7 };
     let mut x = vec![-3.0, 0.7, 12.0, 0.0];
     c.project(&mut x);
     assert_eq!(x, vec![0.7; 4]);
@@ -93,7 +310,7 @@ fn box_degenerate_lo_equals_hi_pins_every_coordinate() {
 
 #[test]
 fn box_with_no_violation_is_identity() {
-    let c = Constraint::Box { lo: -1.0, hi: 1.0 };
+    let c = ScalarBox { lo: -1.0, hi: 1.0 };
     let inside = vec![0.3, -0.9999, 0.0, 1.0, -1.0];
     let mut x = inside.clone();
     c.project(&mut x);
@@ -110,14 +327,14 @@ fn metric_projection_with_identity_r_matches_euclidean_l2_and_l1() {
     for _ in 0..20 {
         let z: Vec<f64> = rng.gaussians(9).iter().map(|v| v * 4.0).collect();
         // l2
-        let got = proj.project(&z, &Constraint::L2Ball { radius: 1.3 });
+        let got = proj.project(&z, &L2Ball { radius: 1.3 });
         let mut want = z.clone();
         project_l2(&mut want, 1.3);
         for (a, b) in got.iter().zip(&want) {
             assert!((a - b).abs() < 1e-8, "l2: {a} vs {b}");
         }
         // l1 (ADMM path) — also cross-checked against the brute force
-        let got = proj.project(&z, &Constraint::L1Ball { radius: 2.0 });
+        let got = proj.project(&z, &L1Ball { radius: 2.0 });
         let want = brute_force_l1(&z, 2.0);
         for (a, b) in got.iter().zip(&want) {
             assert!((a - b).abs() < 1e-6, "l1: {a} vs {b}");
@@ -129,7 +346,7 @@ fn metric_projection_with_identity_r_matches_euclidean_l2_and_l1() {
 fn metric_projection_with_identity_r_matches_euclidean_box() {
     let mut rng = Rng::new(9);
     let proj = MetricProjector::from_r(&Mat::eye(6));
-    let cons = Constraint::Box { lo: -0.5, hi: 0.25 };
+    let cons = ScalarBox { lo: -0.5, hi: 0.25 };
     for _ in 0..20 {
         let z: Vec<f64> = rng.gaussians(6).iter().map(|v| v * 2.0).collect();
         let got = proj.project(&z, &cons);
@@ -143,12 +360,73 @@ fn metric_projection_with_identity_r_matches_euclidean_box() {
 }
 
 #[test]
+fn metric_fallback_with_identity_r_collapses_for_every_new_set() {
+    // the documented ADMM fallback contract: at H = I the metric
+    // projection of every new set reduces to its Euclidean projection
+    let mut rng = Rng::new(10);
+    let proj = MetricProjector::from_r(&Mat::eye(6));
+    let sets: Vec<hdpw::ConstraintRef> = vec![
+        simplex(1.0),
+        nonneg(),
+        coord_box(vec![-0.4; 6], vec![0.6; 6]),
+        elastic_net(0.5, 0.8),
+        affine_eq(Mat::from_fn(1, 6, |_, _| 1.0), vec![0.5]).unwrap(),
+    ];
+    for set in &sets {
+        for _ in 0..10 {
+            let z: Vec<f64> = rng.gaussians(6).iter().map(|v| v * 2.0).collect();
+            let got = proj.project(&z, set.as_ref());
+            let mut want = z.clone();
+            set.project(&mut want);
+            let tol = if set.tag() == "affine" { 1e-8 } else { 1e-6 };
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < tol, "{}: {a} vs {b}", set.tag());
+            }
+            assert!(set.contains(&got, 1e-6), "{} infeasible", set.tag());
+        }
+    }
+}
+
+#[test]
+fn metric_projection_respects_an_ill_conditioned_metric_for_new_sets() {
+    // a genuinely anisotropic H: the metric projection must beat the
+    // Euclidean projection in H-distance whenever they differ
+    let mut rng = Rng::new(11);
+    let a = Mat::from_fn(80, 6, |_i, j| rng.gaussian() * 10f64.powi(j as i32 - 3));
+    let r = qr::qr_r(&a);
+    let h = blas::gemm(&r.transpose(), &r);
+    let proj = MetricProjector::from_r(&r);
+    let h_dist = |u: &[f64], v: &[f64]| {
+        let dxy = blas::sub(u, v);
+        blas::dot(&dxy, &blas::gemv(&h, &dxy))
+    };
+    let sets: Vec<hdpw::ConstraintRef> = vec![simplex(1.0), elastic_net(0.5, 0.4)];
+    for set in &sets {
+        for _ in 0..10 {
+            let z: Vec<f64> = rng.gaussians(6).iter().map(|v| v * 3.0).collect();
+            let metric_proj = proj.project(&z, set.as_ref());
+            assert!(set.contains(&metric_proj, 1e-6), "{}", set.tag());
+            let mut euclid = z.clone();
+            set.project(&mut euclid);
+            // metric projection minimizes H-distance among feasible points
+            assert!(
+                h_dist(&z, &metric_proj) <= h_dist(&z, &euclid) + 1e-6,
+                "{}: metric {} vs euclid {}",
+                set.tag(),
+                h_dist(&z, &metric_proj),
+                h_dist(&z, &euclid)
+            );
+        }
+    }
+}
+
+#[test]
 fn metric_projection_unconstrained_is_identity() {
     let mut rng = Rng::new(11);
     let a = Mat::gaussian(40, 5, &mut rng);
-    let r = hdpw::linalg::qr::qr_r(&a);
+    let r = qr::qr_r(&a);
     let proj = MetricProjector::from_r(&r);
     let z: Vec<f64> = rng.gaussians(5);
-    let got = proj.project(&z, &Constraint::Unconstrained);
+    let got = proj.project(&z, &Unconstrained);
     assert_eq!(got, z);
 }
