@@ -56,6 +56,144 @@ fn main() {
         );
     }
 
+    // ---- simd vs native microkernels (ISSUE 6 acceptance) -------------------
+    // Same inputs, same thread count; speedups land in BENCH_simd.json.
+    // Acceptance: >= 2x on gemv and fwht when a real vector unit is
+    // detected; ~1x is expected (and allowed) on the scalar fallback.
+    {
+        let threads = hdpw::util::threadpool::default_threads();
+        let arch = hdpw::simd::arch();
+        println!(
+            "simd arch: {} ({} f64 lanes, {} threads)",
+            arch.name(),
+            hdpw::simd::lanes(),
+            threads
+        );
+        let mut table: Vec<(String, f64, f64)> = Vec::new();
+
+        // gemv at the serve shape class (tall, moderately wide)
+        let (n, d) = (2048, 512);
+        let a = Mat::gaussian(n, d, &mut rng);
+        let x = rng.gaussians(d);
+        let st_nat = BenchStats::run(&format!("gemv native {n}x{d}"), 3, 20, || {
+            std::hint::black_box(blas::gemv(&a, &x));
+        });
+        let st_simd = BenchStats::run(&format!("gemv simd   {n}x{d}"), 3, 20, || {
+            std::hint::black_box(hdpw::simd::gemv(&a, &x, threads));
+        });
+        println!("{}", st_nat.report());
+        println!("{}", st_simd.report());
+        table.push((format!("gemv {n}x{d}"), st_nat.median_secs(), st_simd.median_secs()));
+
+        // FWHT butterfly on a 2^20 vector
+        let big = rng.gaussians(1 << 20);
+        let st_nat = BenchStats::run("fwht native 2^20", 2, 10, || {
+            let mut v = big.clone();
+            fwht::fwht_vec(&mut v);
+            std::hint::black_box(v);
+        });
+        let st_simd = BenchStats::run("fwht simd   2^20", 2, 10, || {
+            let mut v = big.clone();
+            hdpw::simd::fwht_vec(&mut v);
+            std::hint::black_box(v);
+        });
+        println!("{}", st_nat.report());
+        println!("{}", st_simd.report());
+        table.push(("fwht 2^20".into(), st_nat.median_secs(), st_simd.median_secs()));
+
+        // CountSketch row-scatter fold: scalar RowOps vs the simd kernel set
+        let (sn, sd, srows) = (16_384, 256, 2048);
+        let sa = Mat::gaussian(sn, sd, &mut rng);
+        let sk = SketchKind::CountSketch.build(srows, sn, &mut rng);
+        let st_nat = BenchStats::run("countsketch scatter scalar", 2, 8, || {
+            std::hint::black_box(hdpw::sketch::apply_streamed_with(
+                sk.as_ref(),
+                &sa,
+                Some(256),
+                threads,
+                &hdpw::sketch::RowOps::SCALAR,
+            ));
+        });
+        let ops = hdpw::simd::row_ops();
+        let st_simd = BenchStats::run("countsketch scatter simd  ", 2, 8, || {
+            std::hint::black_box(hdpw::sketch::apply_streamed_with(
+                sk.as_ref(),
+                &sa,
+                Some(256),
+                threads,
+                &ops,
+            ));
+        });
+        println!("{}", st_nat.report());
+        println!("{}", st_simd.report());
+        table.push((
+            format!("countsketch scatter {sn}x{sd}"),
+            st_nat.median_secs(),
+            st_simd.median_secs(),
+        ));
+
+        // CSR mini-batch gradient (gathered row dots)
+        let (cn, cd) = (65_536, 256);
+        let mut srng = rng.fork(13);
+        let dense = Mat::from_fn(cn, cd, |_, _| {
+            if srng.uniform() < 0.05 {
+                srng.gaussian()
+            } else {
+                0.0
+            }
+        });
+        let csr = hdpw::linalg::CsrMat::from_dense(&dense);
+        drop(dense);
+        let cb = rng.gaussians(cn);
+        let cx = rng.gaussians(cd);
+        let tau: Vec<usize> = (0..4096).map(|_| rng.below(cn)).collect();
+        let st_nat = BenchStats::run("csr batch_grad native |tau|=4096", 3, 15, || {
+            std::hint::black_box(csr.batch_grad(&tau, &cb, &cx, 2.0));
+        });
+        let st_simd = BenchStats::run("csr batch_grad simd   |tau|=4096", 3, 15, || {
+            std::hint::black_box(hdpw::simd::csr_batch_grad(&csr, &tau, &cb, &cx, 2.0));
+        });
+        println!("{}", st_nat.report());
+        println!("{}", st_simd.report());
+        table.push((
+            "csr batch_grad |tau|=4096".into(),
+            st_nat.median_secs(),
+            st_simd.median_secs(),
+        ));
+
+        println!("simd speedup table ({}):", arch.name());
+        for (name, nat, simd) in &table {
+            println!(
+                "  {name:32} native {:.3}ms  simd {:.3}ms  {:.2}x",
+                nat * 1e3,
+                simd * 1e3,
+                nat / simd
+            );
+        }
+        let rows: Vec<hdpw::util::json::Json> = table
+            .iter()
+            .map(|(name, nat, simd)| {
+                hdpw::util::json::Json::obj(vec![
+                    ("kernel", hdpw::util::json::Json::str(name.clone())),
+                    ("native_secs", hdpw::util::json::Json::num(*nat)),
+                    ("simd_secs", hdpw::util::json::Json::num(*simd)),
+                    ("speedup", hdpw::util::json::Json::num(nat / simd)),
+                ])
+            })
+            .collect();
+        let simd_json = hdpw::util::json::Json::obj(vec![
+            ("arch", hdpw::util::json::Json::str(arch.name())),
+            ("lanes", hdpw::util::json::Json::num(hdpw::simd::lanes() as f64)),
+            ("threads", hdpw::util::json::Json::num(threads as f64)),
+            ("kernels", hdpw::util::json::Json::Arr(rows)),
+        ]);
+        let simd_path = "BENCH_simd.json";
+        match std::fs::write(simd_path, format!("{simd_json}\n")) {
+            Ok(()) => println!("simd speedup artifact: {simd_path}"),
+            Err(e) => println!("simd speedup artifact NOT written: {e}"),
+        }
+    }
+
     // ---- sketch + QR (precondition setup) -----------------------------------
     for kind in [
         SketchKind::CountSketch,

@@ -11,10 +11,22 @@
 //!   kernels, and sketch application streams [`crate::data::RowBlocks`] shards through
 //!   worker threads (`sketch::apply_streamed`), counting every shard folded
 //!   in [`DispatchStats::native_block_calls`]. Supports every op.
+//! * [`SimdExecutor`] — the same op surface served by the arch-dispatched
+//!   register-tiled kernels in [`crate::simd`] (AVX2/AVX-512/NEON with a
+//!   bit-faithful scalar fallback). Native stays the bit-exact reference;
+//!   this executor agrees within the parity suite's documented tolerance.
+//!   Supports every op, including metric projections (the projection code
+//!   itself is shared scalar code — only the kernels differ).
 //! * [`PjrtExecutor`] — dispatches to AOT-compiled PJRT artifacts when the
 //!   op name is in the manifest. Claims nothing else.
 //!
-//! A third backend (GPU, remote) plugs in by implementing this trait and
+//! The shared per-step control flow (gradient step, SGD/accelerated/pw
+//! chunk loops) lives in private `*_driver` functions parameterized by the
+//! two kernels that differ (`fused_grad`, `gemv`): native and simd run the
+//! *same* projection/update code, so their only divergence is floating-point
+//! re-association inside the kernels.
+//!
+//! A fourth backend (GPU, remote) plugs in by implementing this trait and
 //! registering with the facade — no solver code changes.
 
 // The op signatures mirror the PJRT artifact calling conventions; several
@@ -26,7 +38,8 @@ use crate::linalg::{blas, CsrMat, Mat};
 use crate::prox::metric::MetricProjector;
 use crate::runtime::literal::Value;
 use crate::runtime::EngineHandle;
-use crate::sketch::{apply_streamed, apply_streamed_csr, Sketch};
+use crate::simd;
+use crate::sketch::{apply_streamed, apply_streamed_csr, apply_streamed_with, Sketch};
 use crate::util::threadpool::default_threads;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -77,6 +90,18 @@ pub mod opkey {
     }
 }
 
+/// Which [`DispatchStats`] bucket an executor's dispatches land in.
+/// Third-party executors pick a class instead of spoofing a name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecClass {
+    /// Bit-exact reference kernels ([`DispatchStats::native_calls`]).
+    Native,
+    /// Arch-dispatched SIMD kernels ([`DispatchStats::simd_calls`]).
+    Simd,
+    /// Offloaded/compiled artifacts ([`DispatchStats::pjrt_calls`]).
+    Accelerated,
+}
+
 /// Dispatch counters (observability + tests).
 #[derive(Debug, Default)]
 pub struct DispatchStats {
@@ -84,19 +109,22 @@ pub struct DispatchStats {
     pub pjrt_calls: AtomicUsize,
     /// Ops served by the native executor.
     pub native_calls: AtomicUsize,
-    /// Row shards folded by native block-streamed paths (sketch folds).
+    /// Ops served by the simd executor.
+    pub simd_calls: AtomicUsize,
+    /// Row shards folded by block-streamed paths (sketch folds), native or
+    /// simd.
     pub native_block_calls: AtomicUsize,
     /// Why `Backend::auto()` fell back to native (None when PJRT loaded).
     pub pjrt_fallback_reason: Mutex<Option<String>>,
 }
 
 impl DispatchStats {
-    pub fn mark(&self, pjrt: bool) {
-        if pjrt {
-            self.pjrt_calls.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.native_calls.fetch_add(1, Ordering::Relaxed);
-        }
+    pub fn mark(&self, class: ExecClass) {
+        match class {
+            ExecClass::Accelerated => self.pjrt_calls.fetch_add(1, Ordering::Relaxed),
+            ExecClass::Simd => self.simd_calls.fetch_add(1, Ordering::Relaxed),
+            ExecClass::Native => self.native_calls.fetch_add(1, Ordering::Relaxed),
+        };
     }
 
     pub fn add_block_calls(&self, shards: usize) {
@@ -119,6 +147,8 @@ impl DispatchStats {
             .fetch_add(other.pjrt_calls.load(Ordering::Relaxed), Ordering::Relaxed);
         self.native_calls
             .fetch_add(other.native_calls.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.simd_calls
+            .fetch_add(other.simd_calls.load(Ordering::Relaxed), Ordering::Relaxed);
         self.native_block_calls.fetch_add(
             other.native_block_calls.load(Ordering::Relaxed),
             Ordering::Relaxed,
@@ -132,19 +162,27 @@ impl DispatchStats {
 /// unc/l1/l2 projections only, so the facade never routes a call with an
 /// active R-metric projector (or a set whose
 /// [`ConstraintSet::accel_eligible`] is false — boxes, the simplex, the
-/// orthant, elastic-net balls, affine equalities) to a non-native executor
-/// — implementations may assume `metric` is inactive unless they are the
-/// native catch-all.
+/// orthant, elastic-net balls, affine equalities) to an executor whose
+/// [`Executor::handles_all_projections`] is false — such implementations
+/// may assume `metric` is inactive.
 pub trait Executor: Send + Sync {
-    /// Registry identity ("native", "pjrt", ...) — display only, never used
-    /// for dispatch or stats decisions.
+    /// Registry identity ("native", "simd", "pjrt", ...) — display only,
+    /// never used for dispatch or stats decisions.
     fn name(&self) -> &'static str;
 
-    /// Whether dispatches served by this executor count as accelerated
-    /// ([`DispatchStats::pjrt_calls`]) rather than native. Third-party
-    /// executors opt in here instead of spoofing a name.
-    fn accelerated(&self) -> bool {
-        false
+    /// Which stats bucket dispatches served by this executor land in.
+    /// Third-party executors pick a class here instead of spoofing a name.
+    fn class(&self) -> ExecClass {
+        ExecClass::Native
+    }
+
+    /// Whether this executor implements every constraint projection and the
+    /// R-metric projector (i.e. runs the shared scalar projection code).
+    /// The facade routes projection-restricted calls only to executors that
+    /// return true; artifact backends with baked-in Euclidean projections
+    /// return false.
+    fn handles_all_projections(&self) -> bool {
+        true
     }
 
     /// Op-registry membership for a canonical [`opkey`] string.
@@ -258,6 +296,163 @@ pub trait Executor: Send + Sync {
 }
 
 // ---------------------------------------------------------------------------
+// shared chunk drivers
+// ---------------------------------------------------------------------------
+//
+// The CPU executors (native, simd) differ only in which fused-gradient and
+// gemv kernels they call; the step/projection control flow is identical and
+// lives here exactly once. Native passes the `blas` kernels, so extracting
+// these drivers is bit-preserving for the golden fixtures.
+
+/// `scale * M^T (M x - v)` kernel signature shared by the CPU executors.
+type FusedGradFn<'a> = &'a (dyn Fn(&Mat, &[f64], &[f64], f64) -> Vec<f64> + 'a);
+/// `M x` kernel signature shared by the CPU executors.
+type GemvFn<'a> = &'a (dyn Fn(&Mat, &[f64]) -> Vec<f64> + 'a);
+
+fn gd_step_driver(
+    gemv: GemvFn,
+    x: &[f64],
+    pinv: &Mat,
+    g: &[f64],
+    eta: f64,
+    cons: &dyn ConstraintSet,
+    metric: Option<&MetricProjector>,
+) -> Vec<f64> {
+    let step = gemv(pinv, g);
+    let mut out = x.to_vec();
+    for (o, s) in out.iter_mut().zip(&step) {
+        *o -= eta * s;
+    }
+    match metric {
+        Some(m) => m.project(&out, cons),
+        None => {
+            cons.project(&mut out);
+            out
+        }
+    }
+}
+
+fn sgd_chunk_driver(
+    fused_grad: FusedGradFn,
+    gemv: GemvFn,
+    hda: &Mat,
+    hdb: &[f64],
+    x0: &[f64],
+    pinv: &Mat,
+    idx: &[Vec<usize>],
+    eta: f64,
+    scale: f64,
+    cons: &dyn ConstraintSet,
+    metric: Option<&MetricProjector>,
+) -> (Vec<f64>, Vec<f64>) {
+    let r = idx.first().map(|v| v.len()).unwrap_or(0);
+    let d = hda.cols;
+    let mut x = x0.to_vec();
+    let mut xsum = vec![0.0; d];
+    let mut mbuf = Mat::zeros(r, d);
+    let mut vbuf = vec![0.0; r];
+    for tau in idx {
+        for (k, &i) in tau.iter().enumerate() {
+            mbuf.row_mut(k).copy_from_slice(hda.row(i));
+            vbuf[k] = hdb[i];
+        }
+        let c = fused_grad(&mbuf, &vbuf, &x, scale);
+        let step = gemv(pinv, &c);
+        for (xi, si) in x.iter_mut().zip(&step) {
+            *xi -= eta * si;
+        }
+        match metric {
+            Some(m) => x = m.project(&x, cons),
+            None => cons.project(&mut x),
+        }
+        for (s, xi) in xsum.iter_mut().zip(&x) {
+            *s += xi;
+        }
+    }
+    (x, xsum)
+}
+
+fn acc_chunk_driver(
+    fused_grad: FusedGradFn,
+    gemv: GemvFn,
+    hda: &Mat,
+    hdb: &[f64],
+    x0: &[f64],
+    xhat0: &[f64],
+    pinv: &Mat,
+    idx: &[Vec<usize>],
+    alphas: &[f64],
+    qs: &[f64],
+    etas: &[f64],
+    mu: f64,
+    scale: f64,
+    cons: &dyn ConstraintSet,
+    metric: Option<&MetricProjector>,
+) -> (Vec<f64>, Vec<f64>) {
+    let r = idx.first().map(|v| v.len()).unwrap_or(0);
+    let d = hda.cols;
+    let mut x = x0.to_vec();
+    let mut xhat = xhat0.to_vec();
+    let mut mbuf = Mat::zeros(r, d);
+    let mut vbuf = vec![0.0; r];
+    for (step_i, tau) in idx.iter().enumerate() {
+        let (a_t, q_t, eta_t) = (alphas[step_i], qs[step_i], etas[step_i]);
+        // x~ = (1 - q) xhat + q x
+        let xtilde: Vec<f64> = xhat
+            .iter()
+            .zip(&x)
+            .map(|(h, xi)| (1.0 - q_t) * h + q_t * xi)
+            .collect();
+        for (k, &i) in tau.iter().enumerate() {
+            mbuf.row_mut(k).copy_from_slice(hda.row(i));
+            vbuf[k] = hdb[i];
+        }
+        let c = fused_grad(&mbuf, &vbuf, &xtilde, scale);
+        let pc = gemv(pinv, &c);
+        let denom = 1.0 + eta_t * mu;
+        let mut xn: Vec<f64> = (0..d)
+            .map(|j| (eta_t * mu * xtilde[j] + x[j] - eta_t * pc[j]) / denom)
+            .collect();
+        match metric {
+            Some(m) => xn = m.project(&xn, cons),
+            None => cons.project(&mut xn),
+        }
+        for j in 0..d {
+            xhat[j] = (1.0 - a_t) * xhat[j] + a_t * xn[j];
+        }
+        x = xn;
+    }
+    (x, xhat)
+}
+
+fn pw_gradient_chunk_driver(
+    fused_grad: FusedGradFn,
+    gemv: GemvFn,
+    a: &Mat,
+    b: &[f64],
+    x0: &[f64],
+    pinv: &Mat,
+    eta: f64,
+    t: usize,
+    cons: &dyn ConstraintSet,
+    metric: Option<&MetricProjector>,
+) -> Vec<f64> {
+    let mut x = x0.to_vec();
+    for _ in 0..t {
+        let g = fused_grad(a, b, &x, 2.0);
+        let step = gemv(pinv, &g);
+        for (xi, si) in x.iter_mut().zip(&step) {
+            *xi -= eta * si;
+        }
+        match metric {
+            Some(m) => x = m.project(&x, cons),
+            None => cons.project(&mut x),
+        }
+    }
+    x
+}
+
+// ---------------------------------------------------------------------------
 // NativeExecutor
 // ---------------------------------------------------------------------------
 
@@ -333,18 +528,7 @@ impl Executor for NativeExecutor {
         cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> Vec<f64> {
-        let step = blas::gemv(pinv, g);
-        let mut out = x.to_vec();
-        for (o, s) in out.iter_mut().zip(&step) {
-            *o -= eta * s;
-        }
-        match metric {
-            Some(m) => m.project(&out, cons),
-            None => {
-                cons.project(&mut out);
-                out
-            }
-        }
+        gd_step_driver(&blas::gemv, x, pinv, g, eta, cons, metric)
     }
 
     fn sgd_chunk(
@@ -359,31 +543,19 @@ impl Executor for NativeExecutor {
         cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> (Vec<f64>, Vec<f64>) {
-        let r = idx.first().map(|v| v.len()).unwrap_or(0);
-        let d = hda.cols;
-        let mut x = x0.to_vec();
-        let mut xsum = vec![0.0; d];
-        let mut mbuf = Mat::zeros(r, d);
-        let mut vbuf = vec![0.0; r];
-        for tau in idx {
-            for (k, &i) in tau.iter().enumerate() {
-                mbuf.row_mut(k).copy_from_slice(hda.row(i));
-                vbuf[k] = hdb[i];
-            }
-            let c = blas::fused_grad(&mbuf, &vbuf, &x, scale);
-            let step = blas::gemv(pinv, &c);
-            for (xi, si) in x.iter_mut().zip(&step) {
-                *xi -= eta * si;
-            }
-            match metric {
-                Some(m) => x = m.project(&x, cons),
-                None => cons.project(&mut x),
-            }
-            for (s, xi) in xsum.iter_mut().zip(&x) {
-                *s += xi;
-            }
-        }
-        (x, xsum)
+        sgd_chunk_driver(
+            &blas::fused_grad,
+            &blas::gemv,
+            hda,
+            hdb,
+            x0,
+            pinv,
+            idx,
+            eta,
+            scale,
+            cons,
+            metric,
+        )
     }
 
     fn acc_chunk(
@@ -402,40 +574,23 @@ impl Executor for NativeExecutor {
         cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> (Vec<f64>, Vec<f64>) {
-        let r = idx.first().map(|v| v.len()).unwrap_or(0);
-        let d = hda.cols;
-        let mut x = x0.to_vec();
-        let mut xhat = xhat0.to_vec();
-        let mut mbuf = Mat::zeros(r, d);
-        let mut vbuf = vec![0.0; r];
-        for (step_i, tau) in idx.iter().enumerate() {
-            let (a_t, q_t, eta_t) = (alphas[step_i], qs[step_i], etas[step_i]);
-            // x~ = (1 - q) xhat + q x
-            let xtilde: Vec<f64> = xhat
-                .iter()
-                .zip(&x)
-                .map(|(h, xi)| (1.0 - q_t) * h + q_t * xi)
-                .collect();
-            for (k, &i) in tau.iter().enumerate() {
-                mbuf.row_mut(k).copy_from_slice(hda.row(i));
-                vbuf[k] = hdb[i];
-            }
-            let c = blas::fused_grad(&mbuf, &vbuf, &xtilde, scale);
-            let pc = blas::gemv(pinv, &c);
-            let denom = 1.0 + eta_t * mu;
-            let mut xn: Vec<f64> = (0..d)
-                .map(|j| (eta_t * mu * xtilde[j] + x[j] - eta_t * pc[j]) / denom)
-                .collect();
-            match metric {
-                Some(m) => xn = m.project(&xn, cons),
-                None => cons.project(&mut xn),
-            }
-            for j in 0..d {
-                xhat[j] = (1.0 - a_t) * xhat[j] + a_t * xn[j];
-            }
-            x = xn;
-        }
-        (x, xhat)
+        acc_chunk_driver(
+            &blas::fused_grad,
+            &blas::gemv,
+            hda,
+            hdb,
+            x0,
+            xhat0,
+            pinv,
+            idx,
+            alphas,
+            qs,
+            etas,
+            mu,
+            scale,
+            cons,
+            metric,
+        )
     }
 
     fn pw_gradient_chunk(
@@ -449,19 +604,18 @@ impl Executor for NativeExecutor {
         cons: &dyn ConstraintSet,
         metric: Option<&MetricProjector>,
     ) -> Vec<f64> {
-        let mut x = x0.to_vec();
-        for _ in 0..t {
-            let g = blas::fused_grad(a, b, &x, 2.0);
-            let step = blas::gemv(pinv, &g);
-            for (xi, si) in x.iter_mut().zip(&step) {
-                *xi -= eta * si;
-            }
-            match metric {
-                Some(m) => x = m.project(&x, cons),
-                None => cons.project(&mut x),
-            }
-        }
-        x
+        pw_gradient_chunk_driver(
+            &blas::fused_grad,
+            &blas::gemv,
+            a,
+            b,
+            x0,
+            pinv,
+            eta,
+            t,
+            cons,
+            metric,
+        )
     }
 
     /// Block-streamed sketch application: shards are folded on worker
@@ -489,6 +643,228 @@ impl Executor for NativeExecutor {
     /// tuning (if any) is translated via the mean row occupancy, so
     /// per-backend `block_rows` tuning means the same thing in both
     /// representations.
+    fn sketch_apply_csr(
+        &self,
+        sk: &(dyn Sketch + Send + Sync),
+        a: &CsrMat,
+        block_nnz: Option<usize>,
+    ) -> Mat {
+        let bn = block_nnz.or_else(|| self.block_rows.map(|br| a.nnz_budget_for_rows(br)));
+        let (sa, shards) = apply_streamed_csr(sk, a, bn, self.threads);
+        if shards > 1 {
+            self.stats.add_block_calls(shards);
+        }
+        sa
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SimdExecutor
+// ---------------------------------------------------------------------------
+
+/// The arch-dispatched SIMD backend: every op native supports, served by
+/// the register-tiled kernels in [`crate::simd`] (AVX2/AVX-512/NEON,
+/// bit-faithful scalar fallback).
+///
+/// Shares the `*_driver` control flow with [`NativeExecutor`], so the only
+/// divergence from the bit-exact native reference is floating-point
+/// re-association inside the kernels — gated by the `simd_parity` suite at
+/// a documented relative tolerance. Handles all projections (that code is
+/// shared and scalar).
+pub struct SimdExecutor {
+    threads: usize,
+    /// Default shard height for streamed ops (None = per-shape heuristic);
+    /// a per-call `block_rows` overrides it.
+    block_rows: Option<usize>,
+    stats: Arc<DispatchStats>,
+}
+
+impl SimdExecutor {
+    pub fn new(stats: Arc<DispatchStats>) -> SimdExecutor {
+        SimdExecutor {
+            threads: default_threads(),
+            block_rows: None,
+            stats,
+        }
+    }
+
+    /// Override the worker count and default shard height (tests, tuning).
+    pub fn with_tuning(
+        stats: Arc<DispatchStats>,
+        threads: usize,
+        block_rows: Option<usize>,
+    ) -> SimdExecutor {
+        SimdExecutor {
+            threads: threads.max(1),
+            block_rows,
+            stats,
+        }
+    }
+}
+
+impl Executor for SimdExecutor {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn class(&self) -> ExecClass {
+        ExecClass::Simd
+    }
+
+    fn supports(&self, _op: &str) -> bool {
+        true
+    }
+
+    fn hd_transform(&self, aug: &Mat, signs: &[f64]) -> Mat {
+        let mut m = aug.clone();
+        simd::randomized_hadamard(&mut m, signs, self.threads);
+        m
+    }
+
+    fn hd_transform_mut(&self, aug: &mut Mat, signs: &[f64]) {
+        simd::randomized_hadamard(aug, signs, self.threads);
+    }
+
+    fn batch_grad(&self, m: &Mat, v: &[f64], x: &[f64], scale: f64) -> Vec<f64> {
+        simd::fused_grad(m, v, x, scale, self.threads)
+    }
+
+    fn full_grad(&self, a: &Mat, b: &[f64], x: &[f64]) -> Vec<f64> {
+        simd::fused_grad(a, b, x, 2.0, self.threads)
+    }
+
+    fn residual_sq(&self, a: &Mat, b: &[f64], x: &[f64]) -> f64 {
+        simd::residual_sq(a, b, x, self.threads)
+    }
+
+    fn gd_step(
+        &self,
+        x: &[f64],
+        pinv: &Mat,
+        g: &[f64],
+        eta: f64,
+        cons: &dyn ConstraintSet,
+        metric: Option<&MetricProjector>,
+    ) -> Vec<f64> {
+        gd_step_driver(
+            &|m, v| simd::gemv(m, v, self.threads),
+            x,
+            pinv,
+            g,
+            eta,
+            cons,
+            metric,
+        )
+    }
+
+    fn sgd_chunk(
+        &self,
+        hda: &Mat,
+        hdb: &[f64],
+        x0: &[f64],
+        pinv: &Mat,
+        idx: &[Vec<usize>],
+        eta: f64,
+        scale: f64,
+        cons: &dyn ConstraintSet,
+        metric: Option<&MetricProjector>,
+    ) -> (Vec<f64>, Vec<f64>) {
+        sgd_chunk_driver(
+            &|m, v, x, s| simd::fused_grad(m, v, x, s, self.threads),
+            &|m, v| simd::gemv(m, v, self.threads),
+            hda,
+            hdb,
+            x0,
+            pinv,
+            idx,
+            eta,
+            scale,
+            cons,
+            metric,
+        )
+    }
+
+    fn acc_chunk(
+        &self,
+        hda: &Mat,
+        hdb: &[f64],
+        x0: &[f64],
+        xhat0: &[f64],
+        pinv: &Mat,
+        idx: &[Vec<usize>],
+        alphas: &[f64],
+        qs: &[f64],
+        etas: &[f64],
+        mu: f64,
+        scale: f64,
+        cons: &dyn ConstraintSet,
+        metric: Option<&MetricProjector>,
+    ) -> (Vec<f64>, Vec<f64>) {
+        acc_chunk_driver(
+            &|m, v, x, s| simd::fused_grad(m, v, x, s, self.threads),
+            &|m, v| simd::gemv(m, v, self.threads),
+            hda,
+            hdb,
+            x0,
+            xhat0,
+            pinv,
+            idx,
+            alphas,
+            qs,
+            etas,
+            mu,
+            scale,
+            cons,
+            metric,
+        )
+    }
+
+    fn pw_gradient_chunk(
+        &self,
+        a: &Mat,
+        b: &[f64],
+        x0: &[f64],
+        pinv: &Mat,
+        eta: f64,
+        t: usize,
+        cons: &dyn ConstraintSet,
+        metric: Option<&MetricProjector>,
+    ) -> Vec<f64> {
+        pw_gradient_chunk_driver(
+            &|m, v, x, s| simd::fused_grad(m, v, x, s, self.threads),
+            &|m, v| simd::gemv(m, v, self.threads),
+            a,
+            b,
+            x0,
+            pinv,
+            eta,
+            t,
+            cons,
+            metric,
+        )
+    }
+
+    /// Block-streamed sketch application with the simd row-scatter
+    /// primitives threaded through (`sketch::apply_streamed_with`). Shards
+    /// folded count in `DispatchStats::native_block_calls` exactly like the
+    /// native path — the counter means "the block-streamed path ran".
+    fn sketch_apply(
+        &self,
+        sk: &(dyn Sketch + Send + Sync),
+        a: &Mat,
+        block_rows: Option<usize>,
+    ) -> Mat {
+        let br = block_rows.or(self.block_rows);
+        let (sa, shards) = apply_streamed_with(sk, a, br, self.threads, &simd::row_ops());
+        if shards > 1 {
+            self.stats.add_block_calls(shards);
+        }
+        sa
+    }
+
+    /// nnz-sharded streamed CSR sketch application. The CSR scatter is an
+    /// irregular per-entry update that does not vectorize profitably, so
+    /// this is the same scalar path native runs (and bit-identical to it).
     fn sketch_apply_csr(
         &self,
         sk: &(dyn Sketch + Send + Sync),
@@ -536,8 +912,13 @@ impl Executor for PjrtExecutor {
         "pjrt"
     }
 
-    fn accelerated(&self) -> bool {
-        true
+    fn class(&self) -> ExecClass {
+        ExecClass::Accelerated
+    }
+
+    fn handles_all_projections(&self) -> bool {
+        // artifacts bake in the Euclidean unc/l1/l2 projections only
+        false
     }
 
     fn supports(&self, op: &str) -> bool {
@@ -796,6 +1177,62 @@ mod tests {
         let sk = crate::sketch::SketchKind::SparseEmbed.build(24, 128, &mut rng);
         let _ = ex.sketch_apply(sk.as_ref(), &a, Some(32));
         assert_eq!(stats.native_block_calls.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn simd_executor_matches_native_within_tolerance() {
+        let stats = Arc::new(DispatchStats::default());
+        let native = NativeExecutor::with_tuning(Arc::clone(&stats), 2, None);
+        let simd_ex = SimdExecutor::with_tuning(Arc::clone(&stats), 2, None);
+        assert_eq!(simd_ex.name(), "simd");
+        assert_eq!(simd_ex.class(), ExecClass::Simd);
+        assert!(simd_ex.handles_all_projections());
+        assert!(simd_ex.supports("anything_at_all"));
+        let mut rng = Rng::new(7);
+        let a = Mat::gaussian(128, 9, &mut rng);
+        let b = rng.gaussians(128);
+        let x = rng.gaussians(9);
+        let gn = native.full_grad(&a, &b, &x);
+        let gs = simd_ex.full_grad(&a, &b, &x);
+        for (s, n) in gs.iter().zip(&gn) {
+            assert!((s - n).abs() <= 1e-12 * (1.0 + n.abs()), "{s} vs {n}");
+        }
+        let fn_ = native.residual_sq(&a, &b, &x);
+        let fs = simd_ex.residual_sq(&a, &b, &x);
+        assert!((fs - fn_).abs() <= 1e-12 * (1.0 + fn_.abs()));
+        let signs: Vec<f64> = (0..128).map(|i| if i % 3 == 0 { -1.0 } else { 1.0 }).collect();
+        let hn = native.hd_transform(&a, &signs);
+        let hs = simd_ex.hd_transform(&a, &signs);
+        assert!(hs.max_abs_diff(&hn) < 1e-10);
+    }
+
+    #[test]
+    fn simd_executor_streams_sketch_blocks() {
+        let stats = Arc::new(DispatchStats::default());
+        let ex = SimdExecutor::with_tuning(Arc::clone(&stats), 4, Some(16));
+        let mut rng = Rng::new(3);
+        let a = Mat::gaussian(200, 4, &mut rng);
+        let sk = crate::sketch::SketchKind::CountSketch.build(32, 200, &mut rng);
+        let sa = ex.sketch_apply(sk.as_ref(), &a, None);
+        let dense = sk.apply(&a);
+        // CountSketch scatter is add/sub only — bit-identical on every arch
+        assert!(sa.max_abs_diff(&dense) < 1e-12);
+        assert_eq!(stats.native_block_calls.load(Ordering::Relaxed), 13);
+    }
+
+    #[test]
+    fn mark_routes_to_class_buckets() {
+        let stats = DispatchStats::default();
+        stats.mark(ExecClass::Native);
+        stats.mark(ExecClass::Simd);
+        stats.mark(ExecClass::Simd);
+        stats.mark(ExecClass::Accelerated);
+        assert_eq!(stats.native_calls.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.simd_calls.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.pjrt_calls.load(Ordering::Relaxed), 1);
+        let agg = DispatchStats::default();
+        agg.absorb(&stats);
+        assert_eq!(agg.simd_calls.load(Ordering::Relaxed), 2);
     }
 
     #[test]

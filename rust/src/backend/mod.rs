@@ -1,21 +1,25 @@
 //! Numerical backend facade: a priority-ordered registry of [`Executor`]s.
 //!
 //! Every solver expresses its numerics through [`Backend`], so the same
-//! solver code runs (a) fully native at arbitrary shapes and (b) through the
-//! AOT-compiled L1/L2 graphs at the canonical shapes — and a third executor
-//! can be registered later without touching any solver. Per op call the
-//! facade computes the canonical op key ([`executor::opkey`]), checks
-//! PJRT eligibility (artifacts implement the Euclidean unc/l1/l2
-//! projections only, so metric projections and every other constraint set
-//! are native-only — see [`crate::constraints::ConstraintSet::accel_eligible`]),
-//! and routes to
-//! the first executor whose registry claims the op; the native catch-all
-//! claims everything. The two paths are cross-validated in
-//! `rust/tests/pjrt_parity.rs`.
+//! solver code runs (a) fully native at arbitrary shapes, (b) through the
+//! arch-dispatched SIMD microkernels ([`SimdExecutor`], `crate::simd`), and
+//! (c) through the AOT-compiled L1/L2 graphs at the canonical shapes — and
+//! further executors can be registered without touching any solver. Per op
+//! call the facade computes the canonical op key ([`executor::opkey`]),
+//! checks projection eligibility (PJRT artifacts implement the Euclidean
+//! unc/l1/l2 projections only, so metric projections and every other
+//! constraint set skip executors whose
+//! [`Executor::handles_all_projections`] is false — see
+//! [`crate::constraints::ConstraintSet::accel_eligible`]), and routes to
+//! the first eligible executor whose registry claims the op; the native
+//! catch-all claims everything. Registry order is pjrt → simd → native.
+//! The paths are cross-validated in `rust/tests/pjrt_parity.rs` (bitwise)
+//! and `rust/tests/simd_parity.rs` (documented tolerance; native stays the
+//! bit-exact reference).
 
 pub mod executor;
 
-pub use executor::{DispatchStats, Executor, NativeExecutor, PjrtExecutor};
+pub use executor::{DispatchStats, ExecClass, Executor, NativeExecutor, PjrtExecutor, SimdExecutor};
 
 use crate::constraints::ConstraintSet;
 use crate::linalg::{CsrMat, Mat};
@@ -39,6 +43,8 @@ pub struct Backend {
     engine: Option<EngineHandle>,
     threads: usize,
     default_block_rows: Option<usize>,
+    /// Whether the registry includes the simd executor (ahead of native).
+    simd: bool,
 }
 
 impl Backend {
@@ -46,6 +52,7 @@ impl Backend {
         engine: Option<EngineHandle>,
         threads: Option<usize>,
         block_rows: Option<usize>,
+        simd: bool,
         stats: Arc<DispatchStats>,
     ) -> Backend {
         let t = threads.unwrap_or_else(crate::util::threadpool::default_threads);
@@ -58,6 +65,13 @@ impl Backend {
         if let Some(e) = &engine {
             executors.push(Arc::new(PjrtExecutor::new(e.clone())));
         }
+        if simd {
+            executors.push(Arc::new(executor::SimdExecutor::with_tuning(
+                Arc::clone(&stats),
+                t,
+                block_rows,
+            )));
+        }
         executors.push(Arc::clone(&native) as Arc<dyn Executor>);
         Backend {
             executors,
@@ -66,6 +80,7 @@ impl Backend {
             engine,
             threads: t,
             default_block_rows: block_rows,
+            simd,
         }
     }
 
@@ -84,6 +99,7 @@ impl Backend {
             self.engine.clone(),
             Some(self.threads),
             self.default_block_rows,
+            self.simd,
             stats,
         )
     }
@@ -96,13 +112,30 @@ impl Backend {
             None,
             Some(self.threads),
             self.default_block_rows,
+            false,
             Arc::new(DispatchStats::default()),
         )
     }
 
-    /// Native-only backend (no artifacts needed).
+    /// A simd-preferring backend (no PJRT) inheriting this one's tuning
+    /// with fresh counters — per-request `--executor simd` pinning. Always
+    /// registers the simd executor, even on a scalar-only arch (the scalar
+    /// fallback is bit-faithful to the 4-lane kernels, so a pinned request
+    /// behaves identically everywhere, just without the speedup).
+    pub fn fork_simd(&self) -> Backend {
+        Backend::assemble(
+            None,
+            Some(self.threads),
+            self.default_block_rows,
+            true,
+            Arc::new(DispatchStats::default()),
+        )
+    }
+
+    /// Native-only backend (no artifacts needed). This is the bit-exact
+    /// reference configuration the golden fixtures are sealed against.
     pub fn native() -> Backend {
-        Backend::assemble(None, None, None, Arc::new(DispatchStats::default()))
+        Backend::assemble(None, None, None, false, Arc::new(DispatchStats::default()))
     }
 
     /// Native-only backend with explicit worker count / default shard height
@@ -112,30 +145,43 @@ impl Backend {
             None,
             Some(threads),
             block_rows,
+            false,
             Arc::new(DispatchStats::default()),
         )
     }
 
     /// Backend with a loaded PJRT engine; falls back to native off-manifest.
     pub fn with_engine(engine: EngineHandle) -> Backend {
-        Backend::assemble(Some(engine), None, None, Arc::new(DispatchStats::default()))
+        Backend::assemble(
+            Some(engine),
+            None,
+            None,
+            false,
+            Arc::new(DispatchStats::default()),
+        )
     }
 
     /// Try to load artifacts from the default dir; native fallback if absent.
     /// The fallback reason is logged and recorded in [`DispatchStats`] —
     /// a silent native fallback looks identical to a healthy PJRT deploy in
     /// throughput dashboards, so the serve loop must be able to tell.
+    ///
+    /// Prefers the simd executor for off-manifest ops whenever runtime
+    /// detection found a real vector unit ([`crate::simd::preferred`]); on
+    /// scalar-only hardware the registry is pjrt → native, exactly as
+    /// before.
     pub fn auto() -> Backend {
         let stats = Arc::new(DispatchStats::default());
+        let simd = crate::simd::preferred();
         match EngineHandle::spawn(&Engine::default_dir()) {
-            Ok(e) => Backend::assemble(Some(e), None, None, stats),
+            Ok(e) => Backend::assemble(Some(e), None, None, simd, stats),
             Err(err) => {
                 let reason = format!("{err:#}");
                 crate::log_warn!(
                     "PJRT engine unavailable, using the native executor: {reason}"
                 );
                 stats.set_fallback_reason(reason);
-                Backend::assemble(None, None, None, stats)
+                Backend::assemble(None, None, None, simd, stats)
             }
         }
     }
@@ -154,12 +200,22 @@ impl Backend {
         self.engine.is_some()
     }
 
+    /// Whether the registry includes the simd executor.
+    pub fn has_simd(&self) -> bool {
+        self.simd
+    }
+
     pub fn pjrt_calls(&self) -> usize {
         self.stats.pjrt_calls.load(Ordering::Relaxed)
     }
 
     pub fn native_calls(&self) -> usize {
         self.stats.native_calls.load(Ordering::Relaxed)
+    }
+
+    /// Ops served by the simd executor.
+    pub fn simd_calls(&self) -> usize {
+        self.stats.simd_calls.load(Ordering::Relaxed)
     }
 
     /// Row shards folded by native block-streamed paths.
@@ -176,25 +232,29 @@ impl Backend {
         &self.stats
     }
 
-    /// Route an op: first executor claiming `op` wins (when eligible for
-    /// acceleration), else the native catch-all.
-    fn route(&self, op: &str, accel_eligible: bool) -> &dyn Executor {
-        if accel_eligible {
-            for e in &self.executors {
-                if e.supports(op) {
-                    self.stats.mark(e.accelerated());
-                    return e.as_ref();
-                }
+    /// Route an op: the first *eligible* executor claiming `op` wins, else
+    /// the native catch-all. `projection_ok = false` (an active R-metric
+    /// projector or a non-artifact constraint set) skips executors that
+    /// cannot run the shared projection code
+    /// ([`Executor::handles_all_projections`] — PJRT); the simd and native
+    /// executors run it verbatim and stay eligible.
+    fn route(&self, op: &str, projection_ok: bool) -> &dyn Executor {
+        for e in &self.executors {
+            if (projection_ok || e.handles_all_projections()) && e.supports(op) {
+                self.stats.mark(e.class());
+                return e.as_ref();
             }
         }
-        self.stats.mark(false);
+        self.stats.mark(ExecClass::Native);
         self.native.as_ref()
     }
 
-    /// Constrained calls may only leave the native executor when the set
-    /// itself is artifact-implemented ([`ConstraintSet::accel_eligible`] —
-    /// today: unc/l1/l2 Euclidean projections) *and* no R-metric projector
-    /// is active (the artifacts implement Euclidean projections only).
+    /// Constrained calls may only reach projection-restricted executors
+    /// (PJRT) when the set itself is artifact-implemented
+    /// ([`ConstraintSet::accel_eligible`] — today: unc/l1/l2 Euclidean
+    /// projections) *and* no R-metric projector is active (the artifacts
+    /// implement Euclidean projections only). Executors running the shared
+    /// scalar projection code (simd, native) are always eligible.
     fn projection_eligible(cons: &dyn ConstraintSet, metric: Option<&MetricProjector>) -> bool {
         let metric_active = metric.is_some() && !cons.is_unconstrained();
         cons.accel_eligible() && !metric_active
@@ -682,5 +742,44 @@ mod tests {
         let be = Backend::native();
         assert!(be.pjrt_fallback_reason().is_none());
         assert!(!be.has_pjrt());
+        assert!(!be.has_simd());
+    }
+
+    #[test]
+    fn fork_simd_routes_ops_to_the_simd_executor() {
+        let (a, b, x, pinv, mut rng) = setup(64, 5);
+        let be = Backend::native_with(2, None).fork_simd();
+        assert!(be.has_simd());
+        assert!(!be.has_pjrt());
+        let g = be.full_grad(&a, &b, &x);
+        let want = blas::fused_grad(&a, &b, &x, 2.0);
+        for (s, n) in g.iter().zip(&want) {
+            assert!((s - n).abs() <= 1e-12 * (1.0 + n.abs()), "{s} vs {n}");
+        }
+        assert_eq!(be.simd_calls(), 1);
+        assert_eq!(be.native_calls(), 0);
+        // projection-restricted calls stay on simd (it runs the shared
+        // scalar projection code) — unlike PJRT they are not forced native
+        let cons = crate::constraints::CoordBox {
+            lo: vec![-0.1; 5],
+            hi: vec![0.1; 5],
+        };
+        let gv = rng.gaussians(5);
+        let out = be.gd_step(&x, &pinv, &gv, 0.5, &cons, None);
+        assert!(cons.contains(&out, 1e-12));
+        assert_eq!(be.simd_calls(), 2);
+        assert_eq!(be.native_calls(), 0);
+        // counters survive absorb into a parent's stats
+        let parent = Backend::native();
+        parent.stats().absorb(be.stats());
+        assert_eq!(parent.simd_calls(), 2);
+    }
+
+    #[test]
+    fn fork_stats_preserves_simd_registry() {
+        let be = Backend::native_with(2, None).fork_simd();
+        let fork = be.fork_stats();
+        assert!(fork.has_simd(), "fork_stats must rebuild the same registry");
+        assert_eq!(fork.simd_calls(), 0);
     }
 }

@@ -13,7 +13,7 @@ use anyhow::{bail, Context, Result};
 
 /// Valid `JobRequest::executor` values — the single authority shared by
 /// request validation and the scheduler's backend dispatch.
-pub const EXECUTOR_CHOICES: &[&str] = &["", "default", "native", "auto", "pjrt"];
+pub const EXECUTOR_CHOICES: &[&str] = &["", "default", "native", "simd", "auto", "pjrt"];
 
 /// Valid `JobRequest::format` values — the dataset representation:
 ///   dense   — the paper's dense pipeline (default);
@@ -62,7 +62,11 @@ pub struct JobRequest {
     /// Normalize the dataset before solving (scale-only on sparse data).
     pub normalize: bool,
     /// Backend for this request: default (coordinator's shared backend) |
-    /// native | auto | pjrt (pjrt = hard-require artifacts).
+    /// native | simd (arch-dispatched microkernels) | auto | pjrt
+    /// (pjrt = hard-require artifacts). Default "default"; HDPW_EXECUTOR
+    /// overrides the process default (the simd tier-1 CI variant sets
+    /// HDPW_EXECUTOR=simd so the whole suite runs through the simd
+    /// executor).
     pub executor: String,
     /// Row-shard height for block-streamed setup ops; 0 = heuristic.
     pub block_rows: usize,
@@ -114,7 +118,10 @@ impl Default for JobRequest {
             sketch_size: 0,
             eta: 0.0,
             normalize: false,
-            executor: "default".into(),
+            executor: std::env::var("HDPW_EXECUTOR")
+                .ok()
+                .filter(|v| !v.is_empty())
+                .unwrap_or_else(|| "default".into()),
             block_rows: 0,
             reuse_precond: env_flag("HDPW_REUSE_PRECOND"),
             warm_start: env_flag("HDPW_WARM_START"),
@@ -487,10 +494,15 @@ mod tests {
         let back = JobRequest::from_json(&req.to_json()).unwrap();
         assert_eq!(back.executor, "native");
         assert_eq!(back.block_rows, 4096);
-        // missing fields default
+        // missing fields default (HDPW_EXECUTOR overrides the process
+        // default, so the simd CI variant expects its own value here)
         let j = Json::parse(r#"{"solver": "exact"}"#).unwrap();
         let d = JobRequest::from_json(&j).unwrap();
-        assert_eq!(d.executor, "default");
+        let expect_exec = std::env::var("HDPW_EXECUTOR")
+            .ok()
+            .filter(|v| !v.is_empty())
+            .unwrap_or_else(|| "default".into());
+        assert_eq!(d.executor, expect_exec);
         assert_eq!(d.block_rows, 0);
         // bad executor rejected
         let j = Json::parse(r#"{"executor": "gpu9000"}"#).unwrap();

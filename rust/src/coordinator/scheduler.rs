@@ -129,6 +129,9 @@ impl Coordinator {
     /// per-request executor selection):
     ///   default -> the coordinator's shared backend;
     ///   native  -> a fresh native backend (isolated dispatch stats);
+    ///   simd    -> a fresh simd+native backend (isolated stats; registers
+    ///              the SIMD executor even on scalar-only hosts, where it
+    ///              runs the bit-faithful scalar lane type);
     ///   auto    -> shared backend (it already made the auto decision);
     ///   pjrt    -> a stats-isolated fork of the shared backend that
     ///              *hard-requires* artifacts — missing engine errors here,
@@ -140,6 +143,7 @@ impl Coordinator {
             "" | "default" | "auto" => Ok(self.backend.clone()),
             // inherits the shared backend's thread/shard tuning, drops pjrt
             "native" => Ok(self.backend.fork_native()),
+            "simd" => Ok(self.backend.fork_simd()),
             "pjrt" => {
                 // constrained solves activate the R-metric projection, which
                 // the artifacts don't implement — the iteration loop would
@@ -398,7 +402,7 @@ impl Coordinator {
                 Err(e) => {
                     // keep the dispatch-mix metrics truthful even for a
                     // failed pinned-executor job before surfacing the error
-                    if matches!(req.executor.as_str(), "native" | "pjrt") {
+                    if matches!(req.executor.as_str(), "native" | "simd" | "pjrt") {
                         self.backend.stats().absorb(backend.stats());
                     }
                     return Err(e);
@@ -412,7 +416,7 @@ impl Coordinator {
             if trial == 0
                 && req.executor == "pjrt"
                 && backend.pjrt_calls() == 0
-                && backend.native_calls() > 0
+                && backend.native_calls() + backend.simd_calls() > 0
             {
                 hard_require_err = Some(anyhow!(
                     "executor \"pjrt\" requested but no op of this job hit the \
@@ -435,7 +439,7 @@ impl Coordinator {
         // reflects every request — including ones about to fail the
         // hard-require check (that misrouted work is exactly what the
         // metrics exist to expose)
-        if matches!(req.executor.as_str(), "native" | "pjrt") {
+        if matches!(req.executor.as_str(), "native" | "simd" | "pjrt") {
             self.backend.stats().absorb(backend.stats());
         }
         if let Some(err) = hard_require_err {
@@ -601,6 +605,16 @@ mod tests {
         req2.executor = "pjrt".into();
         let err = c.run_job(&req2).unwrap_err();
         assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
+        // simd executor always dispatches (scalar lanes on plain hosts) and
+        // folds its fork's counters into the shared metrics
+        let mut req3 = small_req("pwgradient");
+        req3.executor = "simd".into();
+        let res = c.run_job(&req3).unwrap();
+        assert!(res.best_rel_err < 1e-6);
+        assert!(
+            c.backend().simd_calls() > 0,
+            "simd fork's dispatches were not absorbed into shared stats"
+        );
     }
 
     #[test]

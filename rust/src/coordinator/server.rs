@@ -66,6 +66,7 @@ pub fn handle_connection<R: BufRead, W: Write + Send + 'static>(
                         ("metrics", Json::str(coord.metrics.snapshot())),
                         ("pjrt", Json::Bool(be.has_pjrt())),
                         ("pjrt_calls", Json::num(be.pjrt_calls() as f64)),
+                        ("simd_calls", Json::num(be.simd_calls() as f64)),
                         ("native_calls", Json::num(be.native_calls() as f64)),
                         (
                             "native_block_calls",
@@ -251,6 +252,7 @@ mod tests {
         // backend status rides along so operators can spot a native fallback
         assert_eq!(out[1].get("pjrt").and_then(Json::as_bool), Some(false));
         assert!(out[1].get("native_calls").is_some());
+        assert!(out[1].get("simd_calls").is_some());
         // precond-cache + warm-start counters ride along too (a cold cache
         // must be distinguishable from a broken one in dashboards)
         for field in [

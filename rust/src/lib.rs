@@ -50,7 +50,8 @@
 //! 2. **Runtime bridge** ([`runtime`]) loads the artifacts into a PJRT CPU
 //!    client; the [`backend`] abstraction dispatches each numerical op to a
 //!    compiled executable when the shape matches the manifest, falling back
-//!    to the from-scratch native implementations in [`linalg`]/[`sketch`].
+//!    to the arch-dispatched [`simd`] microkernels and the from-scratch
+//!    native implementations in [`linalg`]/[`sketch`].
 //! 3. **L3 coordinator** ([`coordinator`]) owns jobs, scheduling, trials,
 //!    metrics and the serve loop. Python is never on the request path.
 //!
@@ -58,17 +59,17 @@
 //!
 //! `#![warn(missing_docs)]` is enforced (CI runs `cargo doc` with
 //! `RUSTDOCFLAGS="-D warnings"`) on the crate's primary public surface —
-//! [`constraints`], [`prox`], [`precond`], [`solvers`], [`coordinator`].
+//! [`constraints`], [`prox`], [`precond`], [`solvers`], [`coordinator`],
+//! [`util`], [`linalg`], [`simd`].
 //! Modules carrying an explicit `#[allow(missing_docs)]` predate the gate;
 //! documenting them is an open ROADMAP item, and the allow is removed per
 //! module as its surface is finished.
 
 #![warn(missing_docs)]
 
-#[allow(missing_docs)]
 pub mod util;
-#[allow(missing_docs)]
 pub mod linalg;
+pub mod simd;
 #[allow(missing_docs)]
 pub mod sketch;
 pub mod prox;

@@ -13,6 +13,7 @@ use crate::util::threadpool::{default_threads, parallel_for_each_index};
 // level 1
 // ---------------------------------------------------------------------------
 
+/// Inner product `a · b`.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -37,6 +38,7 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
+/// `y += alpha * x`.
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
@@ -45,16 +47,19 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
+/// Euclidean norm `||x||_2`.
 pub fn nrm2(x: &[f64]) -> f64 {
     dot(x, x).sqrt()
 }
 
+/// `x *= s` in place.
 pub fn scale_vec(x: &mut [f64], s: f64) {
     for v in x {
         *v *= s;
     }
 }
 
+/// Elementwise `a - b` as a new vector.
 pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
     a.iter().zip(b).map(|(x, y)| x - y).collect()
 }

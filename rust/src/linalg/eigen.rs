@@ -13,10 +13,13 @@ use super::matrix::Mat;
 /// Jacobi, accumulating the rotations. `vals` ascending; columns of `v`
 /// are the matching eigenvectors.
 pub struct SymEigen {
+    /// Eigenvalues, ascending.
     pub vals: Vec<f64>,
+    /// Eigenvectors as columns, ordered to match `vals`.
     pub v: Mat,
 }
 
+/// Full symmetric eigendecomposition of a d x d matrix (see [`SymEigen`]).
 pub fn sym_eigen(a: &Mat) -> SymEigen {
     let d = a.rows;
     assert_eq!(a.cols, d);

@@ -5,13 +5,19 @@
 //! memcpys, and the PJRT literal layout (default XLA major-to-minor) matches
 //! byte-for-byte.
 
+use crate::util::alloc::AlignedBuf;
 use crate::util::rng::Rng;
 
+/// Row-major dense matrix over `f64`, backed by a 64-byte-aligned buffer
+/// ([`AlignedBuf`]) so SIMD kernels hit aligned cache-line loads.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns (the contiguous, fast axis).
     pub cols: usize,
-    pub data: Vec<f64>,
+    /// Row-major backing storage, `rows * cols` elements, 64-byte aligned.
+    pub data: AlignedBuf,
 }
 
 impl Default for Mat {
@@ -22,69 +28,83 @@ impl Default for Mat {
 }
 
 impl Mat {
+    /// The `rows x cols` zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Mat {
             rows,
             cols,
-            data: vec![0.0; rows * cols],
+            data: AlignedBuf::zeroed(rows * cols),
         }
     }
 
+    /// Wrap a row-major data vector (copied into aligned storage).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         assert_eq!(rows * cols, data.len(), "shape/data mismatch");
-        Mat { rows, cols, data }
+        Mat {
+            rows,
+            cols,
+            data: AlignedBuf::from_vec(data),
+        }
     }
 
-    /// Build from a closure f(i, j).
+    /// Build from a closure f(i, j), called in row-major order.
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
-        let mut data = Vec::with_capacity(rows * cols);
+        let mut out = Mat::zeros(rows, cols);
         for i in 0..rows {
             for j in 0..cols {
-                data.push(f(i, j));
+                out.data[i * cols + j] = f(i, j);
             }
         }
-        Mat { rows, cols, data }
+        out
     }
 
+    /// The `n x n` identity.
     pub fn eye(n: usize) -> Self {
         Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
     }
 
+    /// iid standard-normal entries drawn from `rng` in row-major order.
     pub fn gaussian(rows: usize, cols: usize, rng: &mut Rng) -> Self {
         Mat {
             rows,
             cols,
-            data: rng.gaussians(rows * cols),
+            data: AlignedBuf::from_vec(rng.gaussians(rows * cols)),
         }
     }
 
+    /// Element `(i, j)`.
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f64 {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[i * self.cols + j]
     }
 
+    /// Mutable element `(i, j)`.
     #[inline]
     pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
         debug_assert!(i < self.rows && j < self.cols);
         &mut self.data[i * self.cols + j]
     }
 
+    /// Row `i` as a contiguous slice.
     #[inline]
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Row `i` as a mutable contiguous slice.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         let c = self.cols;
         &mut self.data[i * c..(i + 1) * c]
     }
 
+    /// Column `j`, copied out (columns are strided).
     pub fn col(&self, j: usize) -> Vec<f64> {
         (0..self.rows).map(|i| self.at(i, j)).collect()
     }
 
+    /// The transposed matrix (copies).
     pub fn transpose(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
         // simple cache-blocked transpose
@@ -179,7 +199,7 @@ impl Mat {
         Mat {
             rows,
             cols: self.cols,
-            data: self.data[..rows * self.cols].to_vec(),
+            data: crate::util::alloc::AlignedBuf::from_slice(&self.data[..rows * self.cols]),
         }
     }
 
@@ -195,10 +215,12 @@ impl Mat {
         }
     }
 
+    /// Frobenius norm.
     pub fn frob_norm(&self) -> f64 {
         self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
     }
 
+    /// Largest entrywise absolute difference against `other` (same shape).
     pub fn max_abs_diff(&self, other: &Mat) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         self.data
@@ -208,6 +230,7 @@ impl Mat {
             .fold(0.0, f64::max)
     }
 
+    /// Multiply every entry by `s` in place.
     pub fn scale(&mut self, s: f64) {
         for x in &mut self.data {
             *x *= s;

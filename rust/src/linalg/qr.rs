@@ -11,7 +11,9 @@ use super::matrix::Mat;
 /// Result of a thin QR: `r` is d x d upper-triangular with non-negative
 /// diagonal; `q` (optional) is m x d with orthonormal columns.
 pub struct QrResult {
+    /// Thin Q (m x d, orthonormal columns) when requested, else `None`.
     pub q: Option<Mat>,
+    /// Upper-triangular R (d x d) with non-negative diagonal.
     pub r: Mat,
 }
 

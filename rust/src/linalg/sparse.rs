@@ -15,9 +15,12 @@
 
 use super::Mat;
 
+/// Three-array CSR sparse matrix (see module docs for the layout contract).
 #[derive(Clone, Debug, PartialEq)]
 pub struct CsrMat {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
     /// `rows + 1` monotone offsets into `indices`/`values`.
     pub indptr: Vec<usize>,

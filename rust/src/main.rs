@@ -103,7 +103,7 @@ fn cmd_solve(argv: &[String]) -> i32 {
         .opt("sketch", "gaussian|srht|countsketch|sparse (default countsketch)")
         .opt("sketch-size", "sketch rows s (default auto)")
         .opt("eta", "fixed step size (default: theory)")
-        .opt("executor", "default|native|auto|pjrt (per-request backend)")
+        .opt("executor", "default|native|simd|auto|pjrt (per-request backend)")
         .opt("block-rows", "row-shard height for streamed setup (default auto)")
         .opt(
             "mem-mb",
@@ -173,7 +173,9 @@ fn cmd_solve(argv: &[String]) -> i32 {
                     "backend    : {}",
                     match req.executor.as_str() {
                         "native" => "native (forced per-request)",
+                        "simd" => "simd+native (forced per-request)",
                         _ if pjrt => "pjrt+native",
+                        _ if hdpw::simd::preferred() => "simd+native",
                         _ => "native",
                     }
                 );
@@ -419,6 +421,12 @@ fn cmd_bench_info(_argv: &[String]) -> i32 {
     if let Some(reason) = backend.pjrt_fallback_reason() {
         println!("pjrt fallback  : {reason}");
     }
+    println!(
+        "simd           : {} ({} f64 lanes, HDPW_SIMD override), registered: {}",
+        hdpw::simd::arch().name(),
+        hdpw::simd::lanes(),
+        backend.has_simd()
+    );
     println!(
         "threads        : {}",
         hdpw::util::threadpool::default_threads()

@@ -52,7 +52,7 @@ impl Value {
             Value::Scalar(x) => xla::Literal::scalar(*x),
             Value::Vec(v) => xla::Literal::vec1(v),
             Value::Mat(m) => {
-                xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?
+                xla::Literal::vec1(&m.data[..]).reshape(&[m.rows as i64, m.cols as i64])?
             }
             Value::MatI32 { rows, cols, data } => {
                 xla::Literal::vec1(data).reshape(&[*rows as i64, *cols as i64])?

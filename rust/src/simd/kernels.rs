@@ -1,0 +1,526 @@
+//! Register-tiled microkernels, written once and monomorphized per
+//! [`SimdF64`] vector type.
+//!
+//! Every kernel is `#[inline(always)]` so that when it is instantiated
+//! inside a per-arch `#[target_feature]` wrapper (see the
+//! [`simd_kernel_wrappers`] macro at the bottom), the whole body compiles
+//! inside the feature region and the intrinsics fold into straight-line
+//! vector code. Correctness never depends on that inlining — the intrinsics
+//! are themselves feature-gated functions — only performance does.
+//!
+//! Tiling parameters: dot-product kernels keep [`ACC_REGS`] independent
+//! vector accumulators in flight (breaking the FMA dependency chain), and
+//! `gemm` computes [`NR_REGS`]-vector-wide output tiles per row. Tails that
+//! do not fill a lane run scalar `f64::mul_add` code, so every shape is
+//! handled; `gemm`'s ragged column tail stages through a zero-padded load
+//! buffer and a `MaybeUninit` store tile so vector loads/stores never touch
+//! memory outside the matrix.
+
+use super::vector::SimdF64;
+use crate::linalg::Mat;
+use std::mem::MaybeUninit;
+
+/// Independent accumulator registers in the dot-product kernels.
+pub const ACC_REGS: usize = 4;
+/// Output-tile width of `gemm_rows`, in vectors per row.
+pub const NR_REGS: usize = 4;
+/// Upper bound on `LANES * NR_REGS` across all arches (AVX-512 x 4).
+pub const MAX_TILE: usize = 32;
+
+/// `row · x` with [`ACC_REGS`]-way unrolled fused accumulation.
+///
+/// # Safety
+/// The CPU must support `V`'s instruction set; `row` and `x` must have
+/// equal length.
+#[inline(always)]
+pub unsafe fn row_dot<V: SimdF64>(row: &[f64], x: &[f64]) -> f64 {
+    debug_assert_eq!(row.len(), x.len());
+    let n = row.len();
+    let l = V::LANES;
+    let rp = row.as_ptr();
+    let xp = x.as_ptr();
+    let mut acc0 = V::zero();
+    let mut acc1 = V::zero();
+    let mut acc2 = V::zero();
+    let mut acc3 = V::zero();
+    let mut j = 0;
+    while j + ACC_REGS * l <= n {
+        acc0 = V::load(rp.add(j)).mul_add(V::load(xp.add(j)), acc0);
+        acc1 = V::load(rp.add(j + l)).mul_add(V::load(xp.add(j + l)), acc1);
+        acc2 = V::load(rp.add(j + 2 * l)).mul_add(V::load(xp.add(j + 2 * l)), acc2);
+        acc3 = V::load(rp.add(j + 3 * l)).mul_add(V::load(xp.add(j + 3 * l)), acc3);
+        j += ACC_REGS * l;
+    }
+    while j + l <= n {
+        acc0 = V::load(rp.add(j)).mul_add(V::load(xp.add(j)), acc0);
+        j += l;
+    }
+    // pairwise register fold, then the pinned in-register tree
+    let mut s = acc0.add(acc2).add(acc1.add(acc3)).hsum();
+    while j < n {
+        s = row[j].mul_add(x[j], s);
+        j += 1;
+    }
+    s
+}
+
+/// `out[i] = A_i · x` for rows `r0..r1`.
+///
+/// # Safety
+/// The CPU must support `V`'s instruction set; `x.len() == a.cols`,
+/// `out.len() >= r1 <= a.rows`.
+#[inline(always)]
+pub unsafe fn gemv_rows<V: SimdF64>(a: &Mat, x: &[f64], out: &mut [f64], r0: usize, r1: usize) {
+    for i in r0..r1 {
+        out[i] = row_dot::<V>(a.row(i), x);
+    }
+}
+
+/// `dst += c * src` (fused).
+///
+/// # Safety
+/// The CPU must support `V`'s instruction set; equal lengths.
+#[inline(always)]
+pub unsafe fn row_axpy<V: SimdF64>(dst: &mut [f64], c: f64, src: &[f64]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let n = dst.len();
+    let l = V::LANES;
+    let cv = V::splat(c);
+    let dp = dst.as_mut_ptr();
+    let sp = src.as_ptr();
+    let mut j = 0;
+    while j + l <= n {
+        cv.mul_add(V::load(sp.add(j)), V::load(dp.add(j))).store(dp.add(j));
+        j += l;
+    }
+    while j < n {
+        dst[j] = c.mul_add(src[j], dst[j]);
+        j += 1;
+    }
+}
+
+/// `dst += src`, lanewise. No FMA anywhere, so the result is bit-identical
+/// to the scalar loop on every arch — the property the CountSketch scatter
+/// parity relies on.
+///
+/// # Safety
+/// The CPU must support `V`'s instruction set; equal lengths.
+#[inline(always)]
+pub unsafe fn row_add<V: SimdF64>(dst: &mut [f64], src: &[f64]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let n = dst.len();
+    let l = V::LANES;
+    let dp = dst.as_mut_ptr();
+    let sp = src.as_ptr();
+    let mut j = 0;
+    while j + l <= n {
+        V::load(dp.add(j)).add(V::load(sp.add(j))).store(dp.add(j));
+        j += l;
+    }
+    while j < n {
+        dst[j] += src[j];
+        j += 1;
+    }
+}
+
+/// `dst -= src`, lanewise; bit-identical to the scalar loop (see
+/// [`row_add`]).
+///
+/// # Safety
+/// The CPU must support `V`'s instruction set; equal lengths.
+#[inline(always)]
+pub unsafe fn row_sub<V: SimdF64>(dst: &mut [f64], src: &[f64]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let n = dst.len();
+    let l = V::LANES;
+    let dp = dst.as_mut_ptr();
+    let sp = src.as_ptr();
+    let mut j = 0;
+    while j + l <= n {
+        V::load(dp.add(j)).sub(V::load(sp.add(j))).store(dp.add(j));
+        j += l;
+    }
+    while j < n {
+        dst[j] -= src[j];
+        j += 1;
+    }
+}
+
+/// `v *= s`, lanewise.
+///
+/// # Safety
+/// The CPU must support `V`'s instruction set.
+#[inline(always)]
+pub unsafe fn scale_slice<V: SimdF64>(v: &mut [f64], s: f64) {
+    let n = v.len();
+    let l = V::LANES;
+    let sv = V::splat(s);
+    let p = v.as_mut_ptr();
+    let mut j = 0;
+    while j + l <= n {
+        V::load(p.add(j)).mul(sv).store(p.add(j));
+        j += l;
+    }
+    while j < n {
+        v[j] *= s;
+        j += 1;
+    }
+}
+
+/// `acc += Σ_{i in r0..r1} x[i] * A_i` — the row-major transposed matvec
+/// partial used by `gemv_t`.
+///
+/// # Safety
+/// The CPU must support `V`'s instruction set; `acc.len() == a.cols`,
+/// `x.len() >= r1 <= a.rows`.
+#[inline(always)]
+pub unsafe fn gemv_t_rows<V: SimdF64>(a: &Mat, x: &[f64], acc: &mut [f64], r0: usize, r1: usize) {
+    for i in r0..r1 {
+        row_axpy::<V>(acc, x[i], a.row(i));
+    }
+}
+
+/// `g += Σ_{i in r0..r1} (A_i · x - b[i]) * A_i` — the unscaled fused
+/// residual/gradient partial (the caller applies `scale` once at the end,
+/// matching `blas::fused_grad`'s structure).
+///
+/// # Safety
+/// The CPU must support `V`'s instruction set; `g.len() == a.cols == x.len()`,
+/// `b.len() >= r1 <= a.rows`.
+#[inline(always)]
+pub unsafe fn fused_grad_rows<V: SimdF64>(
+    a: &Mat,
+    b: &[f64],
+    x: &[f64],
+    g: &mut [f64],
+    r0: usize,
+    r1: usize,
+) {
+    for i in r0..r1 {
+        let r = row_dot::<V>(a.row(i), x) - b[i];
+        row_axpy::<V>(g, r, a.row(i));
+    }
+}
+
+/// `Σ_{i in r0..r1} (A_i · x - b[i])^2`.
+///
+/// # Safety
+/// The CPU must support `V`'s instruction set; `x.len() == a.cols`,
+/// `b.len() >= r1 <= a.rows`.
+#[inline(always)]
+pub unsafe fn residual_sq_rows<V: SimdF64>(
+    a: &Mat,
+    b: &[f64],
+    x: &[f64],
+    r0: usize,
+    r1: usize,
+) -> f64 {
+    let mut s = 0.0;
+    for i in r0..r1 {
+        let r = row_dot::<V>(a.row(i), x) - b[i];
+        s = r.mul_add(r, s);
+    }
+    s
+}
+
+/// Rows `r0..r1` of `C = A B` into the raw row-major buffer `c` (row `i` at
+/// `c + i * b.cols`), register-tiled: [`NR_REGS`] vector accumulators per
+/// row held across the full `k` loop, broadcast-A times streamed-B. The
+/// ragged column tail (width not a multiple of `LANES * NR_REGS`) loads B
+/// through a zero-padded bounce buffer and stores through a partially
+/// initialized `MaybeUninit` tile, of which only the in-bounds prefix is
+/// copied back.
+///
+/// # Safety
+/// The CPU must support `V`'s instruction set; `a.cols == b.rows`,
+/// `r1 <= a.rows`, and `c` must be valid for `a.rows * b.cols` writes with
+/// rows `r0..r1` unaliased by concurrent writers.
+#[inline(always)]
+pub unsafe fn gemm_rows<V: SimdF64>(a: &Mat, b: &Mat, c: *mut f64, r0: usize, r1: usize) {
+    debug_assert_eq!(a.cols, b.rows);
+    let kk = b.rows;
+    let n = b.cols;
+    let l = V::LANES;
+    let tile = l * NR_REGS;
+    debug_assert!(tile <= MAX_TILE);
+    for i in r0..r1 {
+        let arow = a.row(i);
+        let crow = c.add(i * n);
+        let mut j0 = 0;
+        while j0 + tile <= n {
+            let mut acc = [V::zero(); NR_REGS];
+            for (k, &av) in arow.iter().enumerate().take(kk) {
+                let avv = V::splat(av);
+                let bp = b.row(k).as_ptr();
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    *accr = avv.mul_add(V::load(bp.add(j0 + r * l)), *accr);
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                accr.store(crow.add(j0 + r * l));
+            }
+            j0 += tile;
+        }
+        if j0 < n {
+            let width = n - j0;
+            let vecs = width.div_ceil(l);
+            let mut acc = [V::zero(); NR_REGS];
+            // zero-padded bounce buffer: vector loads of the ragged B tail
+            // stay inside this stack array instead of running past the row
+            let mut pad = [0.0f64; MAX_TILE];
+            for (k, &av) in arow.iter().enumerate().take(kk) {
+                let avv = V::splat(av);
+                pad[..width].copy_from_slice(&b.row(k)[j0..]);
+                for (r, accr) in acc.iter_mut().enumerate().take(vecs) {
+                    *accr = avv.mul_add(V::load(pad.as_ptr().add(r * l)), *accr);
+                }
+            }
+            // spill through a MaybeUninit tile: the vector stores initialize
+            // exactly `vecs * l >= width` lanes, and only the first `width`
+            // (all initialized) are copied into C
+            let mut spill: [MaybeUninit<f64>; MAX_TILE] = [MaybeUninit::uninit(); MAX_TILE];
+            let sp = spill.as_mut_ptr() as *mut f64;
+            for (r, accr) in acc.iter().enumerate().take(vecs) {
+                accr.store(sp.add(r * l));
+            }
+            for j in 0..width {
+                crow.add(j0 + j).write(sp.add(j).read());
+            }
+        }
+    }
+}
+
+/// In-place radix-2 FWHT butterflies over a single vector (no
+/// normalization — the caller scales). Stages with stride `h >= LANES` run
+/// vectorized; the first `log2(LANES)` stages are scalar, exactly as the
+/// tentpole prescribes ("vectorized inner stages once stride ≥ lane
+/// width").
+///
+/// # Safety
+/// The CPU must support `V`'s instruction set; `v.len()` must be a power of
+/// two (or 0/1).
+#[inline(always)]
+pub unsafe fn fwht_butterflies<V: SimdF64>(v: &mut [f64]) {
+    let n = v.len();
+    debug_assert!(n <= 1 || n.is_power_of_two());
+    let l = V::LANES;
+    let p = v.as_mut_ptr();
+    let mut h = 1;
+    while h < n {
+        if h >= l {
+            let mut i = 0;
+            while i < n {
+                let mut j = i;
+                while j < i + h {
+                    let x = V::load(p.add(j));
+                    let y = V::load(p.add(j + h));
+                    x.add(y).store(p.add(j));
+                    x.sub(y).store(p.add(j + h));
+                    j += l;
+                }
+                i += 2 * h;
+            }
+        } else {
+            let mut i = 0;
+            while i < n {
+                for j in i..i + h {
+                    let x = *p.add(j);
+                    let y = *p.add(j + h);
+                    *p.add(j) = x + y;
+                    *p.add(j + h) = x - y;
+                }
+                i += 2 * h;
+            }
+        }
+        h *= 2;
+    }
+}
+
+/// Radix-2 FWHT butterflies along axis 0 of the row-major `n x d` buffer
+/// `data`, restricted to columns `[c0, c1)` (no normalization). The
+/// row-pair combine is a contiguous `row ± row` over the panel, vectorized
+/// whenever the panel is at least a lane wide, scalar tail columns
+/// otherwise — column panels never interact, so panels parallelize.
+///
+/// # Safety
+/// The CPU must support `V`'s instruction set; `data` must be valid for
+/// `n * d` elements, `n` a power of two, `c0 <= c1 <= d`, and no concurrent
+/// writer may touch columns `[c0, c1)`.
+#[inline(always)]
+pub unsafe fn fwht_panel<V: SimdF64>(data: *mut f64, n: usize, d: usize, c0: usize, c1: usize) {
+    debug_assert!(n <= 1 || n.is_power_of_two());
+    let w = c1 - c0;
+    let l = V::LANES;
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for row in i..i + h {
+                let pa = data.add(row * d + c0);
+                let pb = data.add((row + h) * d + c0);
+                let mut j = 0;
+                while j + l <= w {
+                    let x = V::load(pa.add(j));
+                    let y = V::load(pb.add(j));
+                    x.add(y).store(pa.add(j));
+                    x.sub(y).store(pb.add(j));
+                    j += l;
+                }
+                while j < w {
+                    let x = *pa.add(j);
+                    let y = *pb.add(j);
+                    *pa.add(j) = x + y;
+                    *pb.add(j) = x - y;
+                    j += 1;
+                }
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// Sparse row dot `Σ_k vals[k] * x[cols[k]]` via lane gathers.
+///
+/// # Safety
+/// The CPU must support `V`'s instruction set; `cols`/`vals` equal length
+/// and every `cols[k] < x.len()`.
+#[inline(always)]
+pub unsafe fn csr_row_dot<V: SimdF64>(cols: &[u32], vals: &[f64], x: &[f64]) -> f64 {
+    debug_assert_eq!(cols.len(), vals.len());
+    let n = vals.len();
+    let l = V::LANES;
+    let cp = cols.as_ptr();
+    let vp = vals.as_ptr();
+    let xp = x.as_ptr();
+    let mut acc = V::zero();
+    let mut j = 0;
+    while j + l <= n {
+        let xv = V::gather(xp, cp.add(j));
+        acc = V::load(vp.add(j)).mul_add(xv, acc);
+        j += l;
+    }
+    let mut s = acc.hsum();
+    while j < n {
+        s = vals[j].mul_add(x[cols[j] as usize], s);
+        j += 1;
+    }
+    s
+}
+
+/// Generates the per-arch kernel entry points: one thin `unsafe fn` per
+/// kernel, carrying the arch's `#[target_feature]` attributes so the
+/// generic bodies above monomorphize *inside* the feature region. Invoked
+/// once per vector type (scalar / AVX2 / AVX-512 / NEON); the resulting
+/// functions all share one signature set and populate
+/// [`super::KernelTable`].
+macro_rules! simd_kernel_wrappers {
+    ($vec:ty $(, #[$attr:meta])*) => {
+        $(#[$attr])*
+        pub(crate) unsafe fn gemv_rows(
+            a: &crate::linalg::Mat,
+            x: &[f64],
+            out: &mut [f64],
+            r0: usize,
+            r1: usize,
+        ) {
+            crate::simd::kernels::gemv_rows::<$vec>(a, x, out, r0, r1)
+        }
+
+        $(#[$attr])*
+        pub(crate) unsafe fn gemv_t_rows(
+            a: &crate::linalg::Mat,
+            x: &[f64],
+            acc: &mut [f64],
+            r0: usize,
+            r1: usize,
+        ) {
+            crate::simd::kernels::gemv_t_rows::<$vec>(a, x, acc, r0, r1)
+        }
+
+        $(#[$attr])*
+        pub(crate) unsafe fn fused_grad_rows(
+            a: &crate::linalg::Mat,
+            b: &[f64],
+            x: &[f64],
+            g: &mut [f64],
+            r0: usize,
+            r1: usize,
+        ) {
+            crate::simd::kernels::fused_grad_rows::<$vec>(a, b, x, g, r0, r1)
+        }
+
+        $(#[$attr])*
+        pub(crate) unsafe fn residual_sq_rows(
+            a: &crate::linalg::Mat,
+            b: &[f64],
+            x: &[f64],
+            r0: usize,
+            r1: usize,
+        ) -> f64 {
+            crate::simd::kernels::residual_sq_rows::<$vec>(a, b, x, r0, r1)
+        }
+
+        $(#[$attr])*
+        pub(crate) unsafe fn gemm_rows(
+            a: &crate::linalg::Mat,
+            b: &crate::linalg::Mat,
+            c: *mut f64,
+            r0: usize,
+            r1: usize,
+        ) {
+            crate::simd::kernels::gemm_rows::<$vec>(a, b, c, r0, r1)
+        }
+
+        $(#[$attr])*
+        pub(crate) unsafe fn fwht_butterflies(v: &mut [f64]) {
+            crate::simd::kernels::fwht_butterflies::<$vec>(v)
+        }
+
+        $(#[$attr])*
+        pub(crate) unsafe fn fwht_panel(
+            data: *mut f64,
+            n: usize,
+            d: usize,
+            c0: usize,
+            c1: usize,
+        ) {
+            crate::simd::kernels::fwht_panel::<$vec>(data, n, d, c0, c1)
+        }
+
+        $(#[$attr])*
+        pub(crate) unsafe fn scale_slice(v: &mut [f64], s: f64) {
+            crate::simd::kernels::scale_slice::<$vec>(v, s)
+        }
+
+        $(#[$attr])*
+        pub(crate) unsafe fn row_add(dst: &mut [f64], src: &[f64]) {
+            crate::simd::kernels::row_add::<$vec>(dst, src)
+        }
+
+        $(#[$attr])*
+        pub(crate) unsafe fn row_sub(dst: &mut [f64], src: &[f64]) {
+            crate::simd::kernels::row_sub::<$vec>(dst, src)
+        }
+
+        $(#[$attr])*
+        pub(crate) unsafe fn row_axpy(dst: &mut [f64], c: f64, src: &[f64]) {
+            crate::simd::kernels::row_axpy::<$vec>(dst, c, src)
+        }
+
+        $(#[$attr])*
+        pub(crate) unsafe fn csr_row_dot(cols: &[u32], vals: &[f64], x: &[f64]) -> f64 {
+            crate::simd::kernels::csr_row_dot::<$vec>(cols, vals, x)
+        }
+
+        /// Lane width of this entry-point set.
+        pub(crate) const LANES: usize = <$vec as crate::simd::vector::SimdF64>::LANES;
+    };
+}
+pub(crate) use simd_kernel_wrappers;
+
+/// The scalar-fallback entry points: same shape as the arch modules, no
+/// feature attributes, valid on every CPU.
+pub(crate) mod scalar {
+    crate::simd::kernels::simd_kernel_wrappers!(crate::simd::vector::F64x4Scalar);
+}

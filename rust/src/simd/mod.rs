@@ -1,0 +1,636 @@
+//! Arch-dispatched SIMD microkernels for the five hot paths: dense
+//! `gemv`/`gemv_t`/`gemm`, the fused gradient/residual kernels, the FWHT
+//! butterfly, the sketch row-scatter primitives, and CSR row gathers.
+//!
+//! ## Structure (DESIGN.md §13)
+//!
+//! * [`vector`] — the [`SimdF64`] lane trait plus the bit-faithful
+//!   [`F64x4Scalar`] fallback; AVX2/AVX-512 live in `x86`, NEON in `neon`.
+//! * [`kernels`] — generic register-tiled kernels, monomorphized per vector
+//!   type inside `#[target_feature]` wrappers.
+//! * this module — one-time runtime detection ([`arch`]), the resulting
+//!   function-pointer [`KernelTable`], and the safe, thread-parallel public
+//!   ops the [`crate::backend::SimdExecutor`] calls.
+//!
+//! Detection runs once (`OnceLock`) at first use — registry init in
+//! practice. `HDPW_SIMD` overrides it: `scalar` is always honored (that is
+//! the reproducibility escape hatch), `avx2`/`avx512`/`neon` only when the
+//! CPU/build supports them (otherwise a warning and auto-detection).
+//!
+//! ## Numerics contract
+//!
+//! The native executor stays the bit-exact reference. These kernels change
+//! accumulation order (lane-parallel partial sums) and contract mul+add
+//! into FMA, so results differ from native by floating-point
+//! re-association only: for the shapes in this crate the parity suite
+//! pins `|simd - native| <= 1e-12 * (1 + |native|)` elementwise. The
+//! elementwise `row_add`/`row_sub` scatter ops reorder nothing and are
+//! bit-identical on every arch.
+
+#![deny(clippy::undocumented_unsafe_blocks)]
+
+pub mod kernels;
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+pub mod vector;
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86;
+
+pub use vector::{F64x4Scalar, SimdF64};
+
+use crate::linalg::{CsrMat, Mat};
+use crate::util::threadpool::parallel_for_each_index;
+use std::sync::{Mutex, OnceLock};
+
+/// Instruction set selected by runtime detection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdArch {
+    /// AVX-512F, 8 lanes (only selectable with the `avx512` cargo feature).
+    Avx512,
+    /// AVX2 + FMA, 4 lanes.
+    Avx2,
+    /// aarch64 NEON, 2 lanes.
+    Neon,
+    /// Portable scalar fallback (4 virtual lanes, `f64::mul_add`).
+    Scalar,
+}
+
+impl SimdArch {
+    /// Short label for reports and `bench-info`.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdArch::Avx512 => "avx512",
+            SimdArch::Avx2 => "avx2",
+            SimdArch::Neon => "neon",
+            SimdArch::Scalar => "scalar",
+        }
+    }
+
+    /// f64 lanes per vector register on this arch.
+    pub fn lanes(self) -> usize {
+        match self {
+            SimdArch::Avx512 => 8,
+            SimdArch::Avx2 => 4,
+            SimdArch::Neon => 2,
+            SimdArch::Scalar => 4,
+        }
+    }
+}
+
+static ARCH: OnceLock<SimdArch> = OnceLock::new();
+
+/// The arch every simd op in this process dispatches to. Detected once on
+/// first call (honoring `HDPW_SIMD`), then cached.
+pub fn arch() -> SimdArch {
+    *ARCH.get_or_init(detect)
+}
+
+/// Whether [`crate::backend::Backend::auto`] should prefer the simd
+/// executor: true when a real vector unit was detected (the scalar
+/// fallback buys nothing over native).
+pub fn preferred() -> bool {
+    arch() != SimdArch::Scalar
+}
+
+fn detect() -> SimdArch {
+    if let Ok(req) = std::env::var("HDPW_SIMD") {
+        let req = req.trim().to_ascii_lowercase();
+        match req.as_str() {
+            "" | "auto" => {}
+            "scalar" => return SimdArch::Scalar,
+            other => {
+                if let Some(a) = try_forced(other) {
+                    return a;
+                }
+                crate::log_warn!(
+                    "HDPW_SIMD={other:?} not supported by this CPU/build; auto-detecting"
+                );
+            }
+        }
+    }
+    detect_native()
+}
+
+/// Honor an explicit `HDPW_SIMD` arch request iff this build and CPU
+/// support it.
+fn try_forced(name: &str) -> Option<SimdArch> {
+    match name {
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        "avx512" if is_x86_feature_detected!("avx512f") => Some(SimdArch::Avx512),
+        #[cfg(target_arch = "x86_64")]
+        "avx2" if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") => {
+            Some(SimdArch::Avx2)
+        }
+        #[cfg(target_arch = "aarch64")]
+        "neon" => Some(SimdArch::Neon),
+        _ => None,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_native() -> SimdArch {
+    #[cfg(feature = "avx512")]
+    if is_x86_feature_detected!("avx512f") {
+        return SimdArch::Avx512;
+    }
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        return SimdArch::Avx2;
+    }
+    SimdArch::Scalar
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_native() -> SimdArch {
+    // NEON with f64 FMA is part of the aarch64 baseline
+    SimdArch::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_native() -> SimdArch {
+    SimdArch::Scalar
+}
+
+// ---------------------------------------------------------------------------
+// dispatch table
+// ---------------------------------------------------------------------------
+
+/// Function-pointer table of the per-arch kernel entry points — built once
+/// from [`arch`], so the per-call cost of dispatch is one indirect call
+/// (amortized over whole row ranges / panels).
+pub(crate) struct KernelTable {
+    pub gemv_rows: unsafe fn(&Mat, &[f64], &mut [f64], usize, usize),
+    pub gemv_t_rows: unsafe fn(&Mat, &[f64], &mut [f64], usize, usize),
+    pub fused_grad_rows: unsafe fn(&Mat, &[f64], &[f64], &mut [f64], usize, usize),
+    pub residual_sq_rows: unsafe fn(&Mat, &[f64], &[f64], usize, usize) -> f64,
+    pub gemm_rows: unsafe fn(&Mat, &Mat, *mut f64, usize, usize),
+    pub fwht_butterflies: unsafe fn(&mut [f64]),
+    pub fwht_panel: unsafe fn(*mut f64, usize, usize, usize, usize),
+    pub scale_slice: unsafe fn(&mut [f64], f64),
+    pub row_add: unsafe fn(&mut [f64], &[f64]),
+    pub row_sub: unsafe fn(&mut [f64], &[f64]),
+    pub row_axpy: unsafe fn(&mut [f64], f64, &[f64]),
+    pub csr_row_dot: unsafe fn(&[u32], &[f64], &[f64]) -> f64,
+    pub lanes: usize,
+}
+
+macro_rules! kernel_table {
+    ($m:path) => {{
+        use $m as k;
+        KernelTable {
+            gemv_rows: k::gemv_rows,
+            gemv_t_rows: k::gemv_t_rows,
+            fused_grad_rows: k::fused_grad_rows,
+            residual_sq_rows: k::residual_sq_rows,
+            gemm_rows: k::gemm_rows,
+            fwht_butterflies: k::fwht_butterflies,
+            fwht_panel: k::fwht_panel,
+            scale_slice: k::scale_slice,
+            row_add: k::row_add,
+            row_sub: k::row_sub,
+            row_axpy: k::row_axpy,
+            csr_row_dot: k::csr_row_dot,
+            lanes: k::LANES,
+        }
+    }};
+}
+
+static TABLE: OnceLock<KernelTable> = OnceLock::new();
+
+pub(crate) fn table() -> &'static KernelTable {
+    TABLE.get_or_init(|| match arch() {
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        SimdArch::Avx512 => kernel_table!(crate::simd::x86::avx512),
+        #[cfg(target_arch = "x86_64")]
+        SimdArch::Avx2 => kernel_table!(crate::simd::x86::avx2),
+        #[cfg(target_arch = "aarch64")]
+        SimdArch::Neon => kernel_table!(crate::simd::neon::neon),
+        _ => kernel_table!(crate::simd::kernels::scalar),
+    })
+}
+
+/// Lane width of the dispatched kernels (after any `HDPW_SIMD` override).
+pub fn lanes() -> usize {
+    table().lanes
+}
+
+// ---------------------------------------------------------------------------
+// safe, thread-parallel public ops (the SimdExecutor's kernel surface)
+// ---------------------------------------------------------------------------
+
+struct SendPtr(*mut f64);
+// SAFETY: workers write disjoint regions behind this pointer (enforced by
+// the row/panel partitioning at each use site) and the owner outlives the
+// pool join.
+unsafe impl Send for SendPtr {}
+// SAFETY: as above — shared access is only used to derive disjoint ranges.
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    #[inline]
+    fn get(&self) -> *mut f64 {
+        self.0
+    }
+}
+
+/// `y = A x`, row-parallel (same blocking/thresholds as `blas::gemv`).
+pub fn gemv(a: &Mat, x: &[f64], threads: usize) -> Vec<f64> {
+    assert_eq!(a.cols, x.len());
+    let k = table();
+    let mut y = vec![0.0; a.rows];
+    let t = if a.rows * a.cols > 1 << 16 { threads.max(1) } else { 1 };
+    if t <= 1 {
+        // SAFETY: table kernels match the CPU features verified at
+        // detection; `y` has `a.rows` elements and `x` matches `a.cols`.
+        unsafe { (k.gemv_rows)(a, x, &mut y, 0, a.rows) };
+        return y;
+    }
+    let block = a.rows.div_ceil(t * 4).max(64);
+    let nblocks = a.rows.div_ceil(block);
+    let yptr = SendPtr(y.as_mut_ptr());
+    parallel_for_each_index(nblocks, t, |bi| {
+        let lo = bi * block;
+        let hi = (lo + block).min(a.rows);
+        // SAFETY: each block writes only indices [lo, hi) — disjoint across
+        // workers — and `y` outlives the pool join; kernel preconditions as
+        // in the serial branch.
+        unsafe {
+            let out = std::slice::from_raw_parts_mut(yptr.get(), a.rows);
+            (k.gemv_rows)(a, x, out, lo, hi);
+        }
+    });
+    y
+}
+
+/// `y = A^T x` with per-block partials merged in block order
+/// (deterministic for a fixed thread count).
+pub fn gemv_t(a: &Mat, x: &[f64], threads: usize) -> Vec<f64> {
+    assert_eq!(a.rows, x.len());
+    let k = table();
+    let t = if a.rows * a.cols > 1 << 16 { threads.max(1) } else { 1 };
+    if t <= 1 {
+        let mut y = vec![0.0; a.cols];
+        // SAFETY: verified table kernels; `y.len() == a.cols`,
+        // `x.len() == a.rows`.
+        unsafe { (k.gemv_t_rows)(a, x, &mut y, 0, a.rows) };
+        return y;
+    }
+    let block = a.rows.div_ceil(t).max(64);
+    let nblocks = a.rows.div_ceil(block);
+    let partials: Vec<Mutex<Vec<f64>>> = (0..nblocks)
+        .map(|_| Mutex::new(vec![0.0; a.cols]))
+        .collect();
+    parallel_for_each_index(nblocks, t, |bi| {
+        let lo = bi * block;
+        let hi = (lo + block).min(a.rows);
+        let mut local = partials[bi].lock().unwrap();
+        // SAFETY: verified table kernels; `local.len() == a.cols`.
+        unsafe { (k.gemv_t_rows)(a, x, &mut local, lo, hi) };
+    });
+    let mut y = vec![0.0; a.cols];
+    for p in &partials {
+        // SAFETY: verified table kernels; equal lengths by construction.
+        unsafe { (k.row_add)(&mut y, &p.lock().unwrap()) };
+    }
+    y
+}
+
+/// `g = scale * A^T (A x - b)` — the fused gradient, partials merged in
+/// block order.
+pub fn fused_grad(a: &Mat, b: &[f64], x: &[f64], scale: f64, threads: usize) -> Vec<f64> {
+    assert_eq!(a.rows, b.len());
+    assert_eq!(a.cols, x.len());
+    let k = table();
+    let t = if a.rows * a.cols > 1 << 16 { threads.max(1) } else { 1 };
+    let block = a.rows.div_ceil(t).max(64);
+    let nblocks = a.rows.div_ceil(block);
+    let mut g = vec![0.0; a.cols];
+    if nblocks <= 1 {
+        // SAFETY: verified table kernels; shapes asserted above.
+        unsafe {
+            (k.fused_grad_rows)(a, b, x, &mut g, 0, a.rows);
+            (k.scale_slice)(&mut g, scale);
+        }
+        return g;
+    }
+    let partials: Vec<Mutex<Vec<f64>>> = (0..nblocks)
+        .map(|_| Mutex::new(vec![0.0; a.cols]))
+        .collect();
+    parallel_for_each_index(nblocks, t, |bi| {
+        let lo = bi * block;
+        let hi = (lo + block).min(a.rows);
+        let mut local = partials[bi].lock().unwrap();
+        // SAFETY: verified table kernels; `local.len() == a.cols`.
+        unsafe { (k.fused_grad_rows)(a, b, x, &mut local, lo, hi) };
+    });
+    for p in &partials {
+        // SAFETY: verified table kernels; equal lengths by construction.
+        unsafe { (k.row_add)(&mut g, &p.lock().unwrap()) };
+    }
+    // SAFETY: verified table kernels.
+    unsafe { (k.scale_slice)(&mut g, scale) };
+    g
+}
+
+/// `||A x - b||^2`, block partials summed in block order.
+pub fn residual_sq(a: &Mat, b: &[f64], x: &[f64], threads: usize) -> f64 {
+    assert_eq!(a.rows, b.len());
+    assert_eq!(a.cols, x.len());
+    let k = table();
+    let t = if a.rows * a.cols > 1 << 16 { threads.max(1) } else { 1 };
+    let block = a.rows.div_ceil(t).max(64);
+    let nblocks = a.rows.div_ceil(block);
+    if nblocks <= 1 {
+        // SAFETY: verified table kernels; shapes asserted above.
+        return unsafe { (k.residual_sq_rows)(a, b, x, 0, a.rows) };
+    }
+    let partials: Vec<Mutex<f64>> = (0..nblocks).map(|_| Mutex::new(0.0)).collect();
+    parallel_for_each_index(nblocks, t, |bi| {
+        let lo = bi * block;
+        let hi = (lo + block).min(a.rows);
+        // SAFETY: verified table kernels; row range within bounds.
+        let s = unsafe { (k.residual_sq_rows)(a, b, x, lo, hi) };
+        *partials[bi].lock().unwrap() = s;
+    });
+    partials.iter().map(|p| *p.lock().unwrap()).sum()
+}
+
+/// `C = A B`, register-tiled and row-block parallel (same `MB = 64`
+/// blocking as `blas::gemm`).
+pub fn gemm(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    let k = table();
+    let mut c = Mat::zeros(a.rows, b.cols);
+    let flops = 2.0 * a.rows as f64 * b.cols as f64 * a.cols as f64;
+    let t = if flops > 1e6 { threads.max(1) } else { 1 };
+    const MB: usize = 64;
+    let nblocks = a.rows.div_ceil(MB);
+    let cptr = SendPtr(c.data.as_mut_ptr());
+    parallel_for_each_index(nblocks, t, |bi| {
+        let i0 = bi * MB;
+        let i1 = (i0 + MB).min(a.rows);
+        // SAFETY: each block writes only C rows [i0, i1) — disjoint across
+        // workers — behind a buffer valid for `a.rows * b.cols` elements;
+        // verified table kernels, dims asserted above.
+        unsafe { (k.gemm_rows)(a, b, cptr.get(), i0, i1) };
+    });
+    c
+}
+
+/// In-place FWHT of a vector (power-of-two length), orthonormal
+/// `1/sqrt(n)` convention — the simd counterpart of
+/// [`crate::sketch::fwht::fwht_vec`].
+pub fn fwht_vec(x: &mut [f64]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fwht length must be a power of two");
+    let k = table();
+    // SAFETY: verified table kernels; `n` asserted a power of two.
+    unsafe {
+        (k.fwht_butterflies)(x);
+        (k.scale_slice)(x, 1.0 / (n as f64).sqrt());
+    }
+}
+
+/// In-place FWHT along axis 0 of a row-major matrix, parallel over column
+/// panels — the simd counterpart of [`crate::sketch::fwht::fwht_mat`]
+/// (same thresholds and panel split).
+pub fn fwht_mat(a: &mut Mat, threads: usize) {
+    let n = a.rows;
+    let d = a.cols;
+    assert!(n.is_power_of_two(), "fwht rows must be a power of two");
+    let k = table();
+    let t = if n * d > 1 << 15 { threads.max(1) } else { 1 };
+    let scale = 1.0 / (n as f64).sqrt();
+    if t <= 1 || d < 2 {
+        // SAFETY: verified table kernels; buffer holds `n * d` elements and
+        // `n` is a power of two.
+        unsafe {
+            (k.fwht_panel)(a.data.as_mut_ptr(), n, d, 0, d);
+            (k.scale_slice)(&mut a.data, scale);
+        }
+        return;
+    }
+    let panel = d.div_ceil(t).max(8);
+    let npanels = d.div_ceil(panel);
+    let ptr = SendPtr(a.data.as_mut_ptr());
+    parallel_for_each_index(npanels, t, |pi| {
+        let lo = pi * panel;
+        let hi = (lo + panel).min(d);
+        // SAFETY: butterflies never mix columns, and each worker touches
+        // only columns [lo, hi) — disjoint across workers; buffer valid for
+        // `n * d` elements and outlives the pool join.
+        unsafe {
+            (k.fwht_panel)(ptr.get(), n, d, lo, hi);
+            for i in 0..n {
+                let row_seg = std::slice::from_raw_parts_mut(ptr.get().add(i * d + lo), hi - lo);
+                (k.scale_slice)(row_seg, scale);
+            }
+        }
+    });
+}
+
+/// The paper's Randomized Hadamard Transform `HD` in place — the simd
+/// counterpart of [`crate::sketch::fwht::randomized_hadamard`]. The sign
+/// flip is exact (negation), so all re-association lives in the FWHT.
+pub fn randomized_hadamard(a: &mut Mat, signs: &[f64], threads: usize) {
+    assert_eq!(a.rows, signs.len());
+    for i in 0..a.rows {
+        if signs[i] < 0.0 {
+            for v in a.row_mut(i) {
+                *v = -*v;
+            }
+        }
+    }
+    fwht_mat(a, threads);
+}
+
+/// `dst += src` via the dispatched lanewise kernel (bit-identical to the
+/// scalar loop — no re-association).
+pub fn row_add(dst: &mut [f64], src: &[f64]) {
+    assert_eq!(dst.len(), src.len());
+    // SAFETY: verified table kernels; equal lengths asserted.
+    unsafe { (table().row_add)(dst, src) }
+}
+
+/// `dst -= src` via the dispatched lanewise kernel (bit-identical).
+pub fn row_sub(dst: &mut [f64], src: &[f64]) {
+    assert_eq!(dst.len(), src.len());
+    // SAFETY: verified table kernels; equal lengths asserted.
+    unsafe { (table().row_sub)(dst, src) }
+}
+
+/// `dst += c * src` via the dispatched fused kernel (FMA — equal to the
+/// scalar loop up to one rounding per element).
+pub fn row_axpy(dst: &mut [f64], c: f64, src: &[f64]) {
+    assert_eq!(dst.len(), src.len());
+    // SAFETY: verified table kernels; equal lengths asserted.
+    unsafe { (table().row_axpy)(dst, c, src) }
+}
+
+/// The sketch-scatter primitive bundle backed by the kernels above — what
+/// the simd executor threads through `sketch::apply_streamed_with`.
+pub fn row_ops() -> crate::sketch::RowOps {
+    crate::sketch::RowOps {
+        add: row_add,
+        sub: row_sub,
+        axpy: row_axpy,
+    }
+}
+
+/// `A_i · x` for a CSR row via lane gathers — the simd counterpart of
+/// [`CsrMat::row_dot`].
+pub fn csr_row_dot(a: &CsrMat, i: usize, x: &[f64]) -> f64 {
+    assert!(x.len() >= a.cols, "x too short for gather");
+    let (cols, vals) = a.row(i);
+    // SAFETY: verified table kernels; CsrMat guarantees every column index
+    // is below `a.cols <= x.len()` (asserted).
+    unsafe { (table().csr_row_dot)(cols, vals, x) }
+}
+
+/// Mini-batch gradient `scale * A_tau^T (A_tau x - b_tau)` on CSR rows —
+/// the simd counterpart of [`CsrMat::batch_grad`]: gathered row dots, with
+/// the O(nnz) scatter kept scalar (scattered writes do not vectorize
+/// profitably without conflict detection).
+pub fn csr_batch_grad(a: &CsrMat, tau: &[usize], b: &[f64], x: &[f64], scale: f64) -> Vec<f64> {
+    assert!(x.len() >= a.cols, "x too short for gather");
+    let k = table();
+    let mut g = vec![0.0; a.cols];
+    for &i in tau {
+        let (cols, vals) = a.row(i);
+        // SAFETY: verified table kernels; column indices bounded by
+        // `a.cols <= x.len()` (asserted).
+        let r = unsafe { (k.csr_row_dot)(cols, vals, x) } - b[i];
+        for (c, v) in cols.iter().zip(vals) {
+            g[*c as usize] += r * v;
+        }
+    }
+    // SAFETY: verified table kernels.
+    unsafe { (k.scale_slice)(&mut g, scale) };
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::util::rng::Rng;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-12 * (1.0 + b.abs())
+    }
+
+    #[test]
+    fn arch_and_table_are_consistent() {
+        let a = arch();
+        assert_eq!(a, arch(), "detection must be cached");
+        assert_eq!(lanes(), table().lanes);
+        assert!(lanes() >= 2);
+        assert!(!a.name().is_empty());
+        assert_eq!(a.lanes(), lanes());
+    }
+
+    #[test]
+    fn gemv_matches_blas_serial_and_parallel() {
+        let mut rng = Rng::new(1);
+        for (n, d, t) in [(7usize, 3usize, 1usize), (129, 17, 1), (1 << 10, 300, 4)] {
+            let a = Mat::gaussian(n, d, &mut rng);
+            let x = rng.gaussians(d);
+            let got = gemv(&a, &x, t);
+            let want = blas::gemv(&a, &x);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(close(*g, *w), "n={n} d={d}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_grad_and_residual_match_blas() {
+        let mut rng = Rng::new(2);
+        let a = Mat::gaussian(211, 13, &mut rng);
+        let b = rng.gaussians(211);
+        let x = rng.gaussians(13);
+        let got = fused_grad(&a, &b, &x, 2.0, 2);
+        let want = blas::fused_grad(&a, &b, &x, 2.0);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(close(*g, *w), "{g} vs {w}");
+        }
+        let fr = residual_sq(&a, &b, &x, 2);
+        assert!(close(fr, blas::residual_sq(&a, &b, &x)));
+    }
+
+    #[test]
+    fn fwht_matches_native_convention() {
+        let mut rng = Rng::new(3);
+        let mut v = rng.gaussians(256);
+        let mut want = v.clone();
+        crate::sketch::fwht::fwht_vec(&mut want);
+        fwht_vec(&mut v);
+        for (g, w) in v.iter().zip(&want) {
+            assert!(close(*g, *w), "{g} vs {w}");
+        }
+        let m = Mat::gaussian(128, 5, &mut rng);
+        let mut got = m.clone();
+        let mut nat = m.clone();
+        fwht_mat(&mut got, 2);
+        crate::sketch::fwht::fwht_mat(&mut nat);
+        assert!(got.max_abs_diff(&nat) < 1e-10);
+    }
+
+    #[test]
+    fn row_ops_add_sub_bit_identical_axpy_close() {
+        let mut rng = Rng::new(4);
+        for len in [1usize, 3, 4, 5, 8, 31, 257] {
+            let src = rng.gaussians(len);
+            let base = rng.gaussians(len);
+            let mut simd_dst = base.clone();
+            let mut ref_dst = base.clone();
+            row_add(&mut simd_dst, &src);
+            for (o, v) in ref_dst.iter_mut().zip(&src) {
+                *o += v;
+            }
+            assert_eq!(
+                simd_dst.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                ref_dst.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "row_add must be bit-identical (len {len})"
+            );
+            row_sub(&mut simd_dst, &src);
+            for (o, v) in ref_dst.iter_mut().zip(&src) {
+                *o -= v;
+            }
+            assert_eq!(
+                simd_dst.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                ref_dst.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "row_sub must be bit-identical (len {len})"
+            );
+            row_axpy(&mut simd_dst, 1.5, &src);
+            for (o, v) in ref_dst.iter_mut().zip(&src) {
+                *o += 1.5 * v;
+            }
+            for (g, w) in simd_dst.iter().zip(&ref_dst) {
+                assert!(close(*g, *w), "len {len}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn csr_kernels_match_sparse_reference() {
+        let mut rng = Rng::new(5);
+        let dense = Mat::from_fn(40, 9, |_, _| {
+            if rng.uniform() < 0.4 {
+                rng.gaussian()
+            } else {
+                0.0
+            }
+        });
+        let csr = CsrMat::from_dense(&dense);
+        let x = rng.gaussians(9);
+        for i in 0..40 {
+            assert!(close(csr_row_dot(&csr, i, &x), csr.row_dot(i, &x)), "row {i}");
+        }
+        let b = rng.gaussians(40);
+        let tau: Vec<usize> = (0..16).map(|_| rng.below(40)).collect();
+        let got = csr_batch_grad(&csr, &tau, &b, &x, 8.0);
+        let want = csr.batch_grad(&tau, &b, &x, 8.0);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(close(*g, *w), "{g} vs {w}");
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! aarch64 NEON vector type: 2 x f64 in a 128-bit register.
+//!
+//! NEON (with f64 arithmetic and FMA) is a mandatory part of the aarch64
+//! baseline, so detection on that arch is unconditional. With only 2 lanes
+//! the accumulation tree differs from the 4-lane reference — parity against
+//! native is tolerance-gated, not bitwise.
+
+use super::kernels::simd_kernel_wrappers;
+use super::vector::SimdF64;
+use core::arch::aarch64::*;
+
+/// 2 x f64 in a NEON `float64x2_t`, FMA via `vfmaq_f64`.
+#[derive(Clone, Copy)]
+pub(crate) struct F64x2Neon(float64x2_t);
+
+impl SimdF64 for F64x2Neon {
+    const LANES: usize = 2;
+
+    unsafe fn splat(v: f64) -> Self {
+        F64x2Neon(vdupq_n_f64(v))
+    }
+
+    unsafe fn load(ptr: *const f64) -> Self {
+        F64x2Neon(vld1q_f64(ptr))
+    }
+
+    unsafe fn store(self, ptr: *mut f64) {
+        vst1q_f64(ptr, self.0)
+    }
+
+    unsafe fn add(self, rhs: Self) -> Self {
+        F64x2Neon(vaddq_f64(self.0, rhs.0))
+    }
+
+    unsafe fn sub(self, rhs: Self) -> Self {
+        F64x2Neon(vsubq_f64(self.0, rhs.0))
+    }
+
+    unsafe fn mul(self, rhs: Self) -> Self {
+        F64x2Neon(vmulq_f64(self.0, rhs.0))
+    }
+
+    unsafe fn mul_add(self, a: Self, b: Self) -> Self {
+        // vfmaq_f64(acc, x, y) = acc + x*y; our contract is self*a + b
+        F64x2Neon(vfmaq_f64(b.0, self.0, a.0))
+    }
+
+    unsafe fn hsum(self) -> f64 {
+        vaddvq_f64(self.0)
+    }
+
+    unsafe fn gather(base: *const f64, idx: *const u32) -> Self {
+        let lo = *base.add(*idx as usize);
+        let hi = *base.add(*idx.add(1) as usize);
+        let buf = [lo, hi];
+        Self::load(buf.as_ptr())
+    }
+}
+
+/// NEON kernel entry points.
+pub(crate) mod neon {
+    super::simd_kernel_wrappers!(
+        super::F64x2Neon,
+        #[target_feature(enable = "neon")]
+    );
+}

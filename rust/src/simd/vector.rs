@@ -1,0 +1,215 @@
+//! The portable `f64` lane abstraction the microkernels are generic over.
+//!
+//! One trait, [`SimdF64`], with one implementation per instruction set
+//! (AVX2/AVX-512 in [`super::x86`], NEON in [`super::neon`]) plus the
+//! [`F64x4Scalar`] fallback defined here. Kernels in [`super::kernels`] are
+//! written once against the trait and monomorphized per vector type; the
+//! per-arch entry points wrap them in `#[target_feature]` functions so the
+//! whole kernel body compiles inside the feature region (the rten pattern).
+//!
+//! ## Bit-faithfulness
+//!
+//! [`F64x4Scalar`] mirrors the 4-lane AVX2 type exactly: same lane count,
+//! `f64::mul_add` for [`SimdF64::mul_add`] (IEEE-754 fused, identical to
+//! hardware FMA), and the same pairwise [`SimdF64::hsum`] reduction tree
+//! `(l0+l2) + (l1+l3)`. A kernel monomorphized over either type therefore
+//! produces bit-identical results; archs with other lane counts (NEON x2,
+//! AVX-512 x8) agree only up to floating-point re-association and are
+//! covered by the parity suite's relative tolerance instead.
+
+/// A fixed-width vector of `f64` lanes.
+///
+/// All methods are `unsafe`: the arch implementations compile to intrinsics
+/// that are only valid once the matching CPU feature has been verified at
+/// runtime (the dispatch table in [`super`] does this exactly once), and
+/// `load`/`store`/`gather` take raw pointers with the usual validity
+/// requirements.
+pub trait SimdF64: Copy {
+    /// Number of `f64` lanes.
+    const LANES: usize;
+
+    /// Broadcast `v` into every lane.
+    ///
+    /// # Safety
+    /// The CPU must support this type's instruction set.
+    unsafe fn splat(v: f64) -> Self;
+
+    /// The zero vector.
+    ///
+    /// # Safety
+    /// The CPU must support this type's instruction set.
+    unsafe fn zero() -> Self {
+        Self::splat(0.0)
+    }
+
+    /// Unaligned load of `LANES` consecutive values from `ptr`.
+    ///
+    /// # Safety
+    /// The CPU must support this type's instruction set and
+    /// `ptr..ptr+LANES` must be valid, initialized `f64`s.
+    unsafe fn load(ptr: *const f64) -> Self;
+
+    /// Unaligned store of the `LANES` lanes to `ptr`.
+    ///
+    /// # Safety
+    /// The CPU must support this type's instruction set and
+    /// `ptr..ptr+LANES` must be valid for writes.
+    unsafe fn store(self, ptr: *mut f64);
+
+    /// Lanewise `self + rhs`.
+    ///
+    /// # Safety
+    /// The CPU must support this type's instruction set.
+    unsafe fn add(self, rhs: Self) -> Self;
+
+    /// Lanewise `self - rhs`.
+    ///
+    /// # Safety
+    /// The CPU must support this type's instruction set.
+    unsafe fn sub(self, rhs: Self) -> Self;
+
+    /// Lanewise `self * rhs`.
+    ///
+    /// # Safety
+    /// The CPU must support this type's instruction set.
+    unsafe fn mul(self, rhs: Self) -> Self;
+
+    /// Fused lanewise `self * a + b` (single rounding, like `f64::mul_add`).
+    ///
+    /// # Safety
+    /// The CPU must support this type's instruction set.
+    unsafe fn mul_add(self, a: Self, b: Self) -> Self;
+
+    /// Horizontal sum of all lanes. For the 4-lane types the reduction tree
+    /// is pinned to `(l0+l2) + (l1+l3)` so scalar and AVX2 agree bitwise.
+    ///
+    /// # Safety
+    /// The CPU must support this type's instruction set.
+    unsafe fn hsum(self) -> f64;
+
+    /// Gather `LANES` values: lane `k` reads `base[idx[k]]` with `u32`
+    /// indices (the CSR column type; columns therefore must stay below
+    /// `2^31` where the AVX2 gather sign-extends — enforced by `CsrMat`'s
+    /// `cols <= u32::MAX` construction bound plus the `i32` headroom of
+    /// every realistic `d`).
+    ///
+    /// # Safety
+    /// The CPU must support this type's instruction set, `idx..idx+LANES`
+    /// must be readable, and every `base[idx[k]]` must be in bounds.
+    unsafe fn gather(base: *const f64, idx: *const u32) -> Self;
+}
+
+/// Bit-faithful scalar stand-in for the 4-lane FMA types: an `[f64; 4]`
+/// register file driven by `f64::mul_add`. Compiles on every arch; this is
+/// what the dispatch table selects when no vector unit is detected (and
+/// what `HDPW_SIMD=scalar` forces).
+#[derive(Clone, Copy, Debug)]
+pub struct F64x4Scalar([f64; 4]);
+
+impl SimdF64 for F64x4Scalar {
+    const LANES: usize = 4;
+
+    unsafe fn splat(v: f64) -> Self {
+        F64x4Scalar([v; 4])
+    }
+
+    unsafe fn load(ptr: *const f64) -> Self {
+        F64x4Scalar([ptr.read(), ptr.add(1).read(), ptr.add(2).read(), ptr.add(3).read()])
+    }
+
+    unsafe fn store(self, ptr: *mut f64) {
+        ptr.write(self.0[0]);
+        ptr.add(1).write(self.0[1]);
+        ptr.add(2).write(self.0[2]);
+        ptr.add(3).write(self.0[3]);
+    }
+
+    unsafe fn add(self, rhs: Self) -> Self {
+        F64x4Scalar([
+            self.0[0] + rhs.0[0],
+            self.0[1] + rhs.0[1],
+            self.0[2] + rhs.0[2],
+            self.0[3] + rhs.0[3],
+        ])
+    }
+
+    unsafe fn sub(self, rhs: Self) -> Self {
+        F64x4Scalar([
+            self.0[0] - rhs.0[0],
+            self.0[1] - rhs.0[1],
+            self.0[2] - rhs.0[2],
+            self.0[3] - rhs.0[3],
+        ])
+    }
+
+    unsafe fn mul(self, rhs: Self) -> Self {
+        F64x4Scalar([
+            self.0[0] * rhs.0[0],
+            self.0[1] * rhs.0[1],
+            self.0[2] * rhs.0[2],
+            self.0[3] * rhs.0[3],
+        ])
+    }
+
+    unsafe fn mul_add(self, a: Self, b: Self) -> Self {
+        F64x4Scalar([
+            self.0[0].mul_add(a.0[0], b.0[0]),
+            self.0[1].mul_add(a.0[1], b.0[1]),
+            self.0[2].mul_add(a.0[2], b.0[2]),
+            self.0[3].mul_add(a.0[3], b.0[3]),
+        ])
+    }
+
+    unsafe fn hsum(self) -> f64 {
+        // same tree as the AVX2 128-bit fold: low+high halves, then lanes
+        (self.0[0] + self.0[2]) + (self.0[1] + self.0[3])
+    }
+
+    unsafe fn gather(base: *const f64, idx: *const u32) -> Self {
+        F64x4Scalar([
+            base.add(idx.read() as usize).read(),
+            base.add(idx.add(1).read() as usize).read(),
+            base.add(idx.add(2).read() as usize).read(),
+            base.add(idx.add(3).read() as usize).read(),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_lane_arithmetic() {
+        let data = [1.0, 2.0, 3.0, 4.0];
+        let ones = [1.0; 4];
+        let mut out = [0.0; 4];
+        // SAFETY: scalar impl, in-bounds stack arrays.
+        unsafe {
+            let v = F64x4Scalar::load(data.as_ptr());
+            let w = F64x4Scalar::load(ones.as_ptr());
+            v.add(w).store(out.as_mut_ptr());
+            assert_eq!(out, [2.0, 3.0, 4.0, 5.0]);
+            v.sub(w).store(out.as_mut_ptr());
+            assert_eq!(out, [0.0, 1.0, 2.0, 3.0]);
+            v.mul(v).store(out.as_mut_ptr());
+            assert_eq!(out, [1.0, 4.0, 9.0, 16.0]);
+            assert_eq!(v.hsum(), 10.0);
+            let f = v.mul_add(v, w);
+            f.store(out.as_mut_ptr());
+            assert_eq!(out, [2.0, 5.0, 10.0, 17.0]);
+        }
+    }
+
+    #[test]
+    fn scalar_gather_reads_indices() {
+        let base = [10.0, 11.0, 12.0, 13.0, 14.0];
+        let idx: [u32; 4] = [4, 0, 2, 2];
+        // SAFETY: indices all within `base`.
+        let v = unsafe { F64x4Scalar::gather(base.as_ptr(), idx.as_ptr()) };
+        let mut out = [0.0; 4];
+        // SAFETY: in-bounds stack array.
+        unsafe { v.store(out.as_mut_ptr()) };
+        assert_eq!(out, [14.0, 10.0, 12.0, 12.0]);
+    }
+}

@@ -1,0 +1,146 @@
+//! x86-64 vector types: AVX2+FMA (4 lanes) and, behind the off-by-default
+//! `avx512` cargo feature, AVX-512F (8 lanes).
+//!
+//! The trait impl methods call intrinsics directly (intrinsics are
+//! themselves feature-gated functions, so this is *correct* on any CPU once
+//! the dispatch table has verified support); the `#[target_feature]`
+//! wrappers generated at the bottom are what makes it *fast*, by compiling
+//! each monomorphized kernel inside the feature region.
+
+use super::kernels::simd_kernel_wrappers;
+use super::vector::SimdF64;
+use core::arch::x86_64::*;
+
+/// 4 x f64 in a 256-bit AVX2 register, FMA arithmetic.
+#[derive(Clone, Copy)]
+pub(crate) struct F64x4Avx2(__m256d);
+
+impl SimdF64 for F64x4Avx2 {
+    const LANES: usize = 4;
+
+    unsafe fn splat(v: f64) -> Self {
+        F64x4Avx2(_mm256_set1_pd(v))
+    }
+
+    unsafe fn zero() -> Self {
+        F64x4Avx2(_mm256_setzero_pd())
+    }
+
+    unsafe fn load(ptr: *const f64) -> Self {
+        F64x4Avx2(_mm256_loadu_pd(ptr))
+    }
+
+    unsafe fn store(self, ptr: *mut f64) {
+        _mm256_storeu_pd(ptr, self.0)
+    }
+
+    unsafe fn add(self, rhs: Self) -> Self {
+        F64x4Avx2(_mm256_add_pd(self.0, rhs.0))
+    }
+
+    unsafe fn sub(self, rhs: Self) -> Self {
+        F64x4Avx2(_mm256_sub_pd(self.0, rhs.0))
+    }
+
+    unsafe fn mul(self, rhs: Self) -> Self {
+        F64x4Avx2(_mm256_mul_pd(self.0, rhs.0))
+    }
+
+    unsafe fn mul_add(self, a: Self, b: Self) -> Self {
+        F64x4Avx2(_mm256_fmadd_pd(self.0, a.0, b.0))
+    }
+
+    unsafe fn hsum(self) -> f64 {
+        // fold 256 -> 128: [l0+l2, l1+l3], then the two 64-bit halves —
+        // the tree F64x4Scalar::hsum mirrors bit-for-bit
+        let lo = _mm256_castpd256_pd128(self.0);
+        let hi = _mm256_extractf128_pd::<1>(self.0);
+        let pair = _mm_add_pd(lo, hi);
+        let high64 = _mm_unpackhi_pd(pair, pair);
+        _mm_cvtsd_f64(_mm_add_sd(pair, high64))
+    }
+
+    unsafe fn gather(base: *const f64, idx: *const u32) -> Self {
+        // i32 gather sign-extends: u32 indices must stay below 2^31 —
+        // guaranteed by CsrMat's `cols <= u32::MAX` bound in practice (a
+        // 2^31-column dense x would not fit memory); documented on the trait
+        let iv = _mm_loadu_si128(idx as *const __m128i);
+        F64x4Avx2(_mm256_i32gather_pd::<8>(base, iv))
+    }
+}
+
+/// 8 x f64 in a 512-bit register. Off by default: enable the `avx512` cargo
+/// feature on toolchains/CPUs that support it. Not bit-faithful to the
+/// 4-lane types (different reduction width) — parity is tolerance-gated.
+#[cfg(feature = "avx512")]
+#[derive(Clone, Copy)]
+pub(crate) struct F64x8Avx512(__m512d);
+
+#[cfg(feature = "avx512")]
+impl SimdF64 for F64x8Avx512 {
+    const LANES: usize = 8;
+
+    unsafe fn splat(v: f64) -> Self {
+        F64x8Avx512(_mm512_set1_pd(v))
+    }
+
+    unsafe fn zero() -> Self {
+        F64x8Avx512(_mm512_setzero_pd())
+    }
+
+    unsafe fn load(ptr: *const f64) -> Self {
+        F64x8Avx512(_mm512_loadu_pd(ptr))
+    }
+
+    unsafe fn store(self, ptr: *mut f64) {
+        _mm512_storeu_pd(ptr, self.0)
+    }
+
+    unsafe fn add(self, rhs: Self) -> Self {
+        F64x8Avx512(_mm512_add_pd(self.0, rhs.0))
+    }
+
+    unsafe fn sub(self, rhs: Self) -> Self {
+        F64x8Avx512(_mm512_sub_pd(self.0, rhs.0))
+    }
+
+    unsafe fn mul(self, rhs: Self) -> Self {
+        F64x8Avx512(_mm512_mul_pd(self.0, rhs.0))
+    }
+
+    unsafe fn mul_add(self, a: Self, b: Self) -> Self {
+        F64x8Avx512(_mm512_fmadd_pd(self.0, a.0, b.0))
+    }
+
+    unsafe fn hsum(self) -> f64 {
+        _mm512_reduce_add_pd(self.0)
+    }
+
+    unsafe fn gather(base: *const f64, idx: *const u32) -> Self {
+        // compose from scalar reads: dodges the wide-gather intrinsic's
+        // byte-pointer signature; the dominant cost here is the memory
+        // traffic either way
+        let mut buf = [0.0f64; 8];
+        for (k, b) in buf.iter_mut().enumerate() {
+            *b = *base.add(*idx.add(k) as usize);
+        }
+        Self::load(buf.as_ptr())
+    }
+}
+
+/// AVX2+FMA kernel entry points.
+pub(crate) mod avx2 {
+    super::simd_kernel_wrappers!(
+        super::F64x4Avx2,
+        #[target_feature(enable = "avx2", enable = "fma")]
+    );
+}
+
+/// AVX-512F kernel entry points (feature-gated).
+#[cfg(feature = "avx512")]
+pub(crate) mod avx512 {
+    super::simd_kernel_wrappers!(
+        super::F64x8Avx512,
+        #[target_feature(enable = "avx512f")]
+    );
+}

@@ -2,7 +2,7 @@
 //! sign. Computing `SA` costs O(nnz(A)) — the fastest construction in
 //! Table 2 and the one the paper's own experiments use.
 
-use super::Sketch;
+use super::{RowOps, Sketch};
 use crate::data::blocks::{CsrBlock, RowBlock};
 use crate::linalg::{CsrMat, Mat};
 use crate::util::rng::Rng;
@@ -56,10 +56,23 @@ impl Sketch for CountSketch {
 
     /// Streaming fold: each input row touches exactly one bucket, so a shard
     /// contributes its rows' signed sums independently of every other shard.
+    /// Runs the scalar row kernels — bit-identical to the historical loop.
     fn apply_block(
         &self,
         block: &RowBlock<'_>,
         acc: &mut Mat,
+    ) -> Result<(), crate::sketch::StreamUnsupported> {
+        self.apply_block_with(block, acc, &RowOps::SCALAR)
+    }
+
+    /// The real fold, parameterized by the executor's row-scatter kernels.
+    /// The scatter is pure `+=` / `-=` (no multiply), so *every* kernel set
+    /// produces bit-identical output — lanewise add/sub reorders nothing.
+    fn apply_block_with(
+        &self,
+        block: &RowBlock<'_>,
+        acc: &mut Mat,
+        ops: &RowOps,
     ) -> Result<(), crate::sketch::StreamUnsupported> {
         assert_eq!(acc.rows, self.s);
         assert_eq!(acc.cols, block.cols);
@@ -70,13 +83,9 @@ impl Sketch for CountSketch {
             let row = block.row(k);
             let orow = acc.row_mut(dst);
             if sg > 0.0 {
-                for (o, v) in orow.iter_mut().zip(row) {
-                    *o += v;
-                }
+                (ops.add)(orow, row);
             } else {
-                for (o, v) in orow.iter_mut().zip(row) {
-                    *o -= v;
-                }
+                (ops.sub)(orow, row);
             }
         }
         Ok(())

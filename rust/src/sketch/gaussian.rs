@@ -80,7 +80,7 @@ impl Sketch for GaussianSketch {
             start: block.start,
             rows: block.rows,
             cols: block.cols(),
-            data: &dense.data,
+            data: &dense.data[..],
         };
         self.apply_block(&rb, acc)
     }

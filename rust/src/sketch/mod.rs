@@ -40,6 +40,55 @@ impl std::fmt::Display for StreamUnsupported {
 
 impl std::error::Error for StreamUnsupported {}
 
+/// The elementwise row-scatter primitives a dense sketch fold runs per
+/// input row (`dst += src`, `dst -= src`, `dst += c * src`). Executors
+/// inject their kernel set through [`apply_streamed_with`]:
+/// [`RowOps::SCALAR`] reproduces the historical inline loops bit-for-bit,
+/// while `crate::simd::row_ops()` supplies the arch-dispatched lanewise
+/// kernels (add/sub reorder nothing and stay bit-identical; axpy fuses
+/// into FMA and is tolerance-gated by the parity suite).
+#[derive(Clone, Copy)]
+pub struct RowOps {
+    /// `dst += src` (equal lengths).
+    pub add: fn(&mut [f64], &[f64]),
+    /// `dst -= src` (equal lengths).
+    pub sub: fn(&mut [f64], &[f64]),
+    /// `dst += c * src` (equal lengths).
+    pub axpy: fn(&mut [f64], f64, &[f64]),
+}
+
+fn scalar_row_add(dst: &mut [f64], src: &[f64]) {
+    for (o, v) in dst.iter_mut().zip(src) {
+        *o += v;
+    }
+}
+
+fn scalar_row_sub(dst: &mut [f64], src: &[f64]) {
+    for (o, v) in dst.iter_mut().zip(src) {
+        *o -= v;
+    }
+}
+
+fn scalar_row_axpy(dst: &mut [f64], c: f64, src: &[f64]) {
+    // mul-then-add on purpose (no mul_add): this must replay the historical
+    // inline loop exactly so dense folds under SCALAR stay bit-identical
+    for (o, v) in dst.iter_mut().zip(src) {
+        *o += c * v;
+    }
+}
+
+impl RowOps {
+    /// The reference scalar loops — exactly the operations the sketch folds
+    /// inlined before executors could inject kernels, so every legacy entry
+    /// point ([`Sketch::apply_block`], [`apply_streamed`]) remains
+    /// bit-identical to its pre-`RowOps` behavior.
+    pub const SCALAR: RowOps = RowOps {
+        add: scalar_row_add,
+        sub: scalar_row_sub,
+        axpy: scalar_row_axpy,
+    };
+}
+
 /// A sampled sketching operator: apply to the (packed) data matrix.
 ///
 /// Streaming contract: for sketches that report `supports_streaming()`,
@@ -65,6 +114,23 @@ pub trait Sketch {
     fn apply_block(&self, block: &RowBlock<'_>, acc: &mut Mat) -> Result<(), StreamUnsupported> {
         let _ = (block, acc);
         Err(StreamUnsupported { sketch: self.name() })
+    }
+
+    /// Fold one contiguous row shard using injected row-scatter kernels.
+    /// The default ignores `ops` and delegates to [`Sketch::apply_block`]
+    /// (bit-identical historical behavior); sketches whose fold is a dense
+    /// per-row scatter (CountSketch, SparseEmbed) override so an executor's
+    /// kernels reach the inner loop. Overriders must implement the real fold
+    /// here and define `apply_block` as `apply_block_with(.., &RowOps::SCALAR)`
+    /// — not the other way around, which would recurse through this default.
+    fn apply_block_with(
+        &self,
+        block: &RowBlock<'_>,
+        acc: &mut Mat,
+        ops: &RowOps,
+    ) -> Result<(), StreamUnsupported> {
+        let _ = ops;
+        self.apply_block(block, acc)
     }
 
     /// Merge a partial accumulator into `acc` (elementwise sum).
@@ -104,6 +170,21 @@ pub trait Sketch {
         Err(StreamUnsupported { sketch: self.name() })
     }
 
+    /// CSR twin of [`Sketch::apply_block_with`]. The default ignores `ops`
+    /// and delegates to [`Sketch::apply_csr_block`] — which is also what the
+    /// shipped hash sketches do, since the CSR fold is an irregular
+    /// per-entry scatter that gains nothing from lanewise kernels. The hook
+    /// exists so a sketch with dense-ish CSR rows can opt in later.
+    fn apply_csr_block_with(
+        &self,
+        block: &CsrBlock<'_>,
+        acc: &mut Mat,
+        ops: &RowOps,
+    ) -> Result<(), StreamUnsupported> {
+        let _ = ops;
+        self.apply_csr_block(block, acc)
+    }
+
     /// Whether [`Sketch::apply_csr_block`] is implemented.
     fn supports_csr_streaming(&self) -> bool {
         false
@@ -127,6 +208,21 @@ pub fn apply_streamed(
     a: &Mat,
     block_rows: Option<usize>,
     threads: usize,
+) -> (Mat, usize) {
+    apply_streamed_with(sk, a, block_rows, threads, &RowOps::SCALAR)
+}
+
+/// [`apply_streamed`] with an injected row-scatter kernel set: shards fold
+/// through [`Sketch::apply_block_with`], so an executor's lanewise
+/// `add`/`sub`/`axpy` reach the inner scatter loops of the hash sketches.
+/// With [`RowOps::SCALAR`] this is exactly `apply_streamed` (bit-identical);
+/// the simd executor passes `crate::simd::row_ops()`.
+pub fn apply_streamed_with(
+    sk: &(dyn Sketch + Send + Sync),
+    a: &Mat,
+    block_rows: Option<usize>,
+    threads: usize,
+    ops: &RowOps,
 ) -> (Mat, usize) {
     if !sk.supports_streaming() || a.rows == 0 {
         return (sk.apply(a), 1);
@@ -154,7 +250,7 @@ pub fn apply_streamed(
                 return;
             }
             let block = view.block(bi);
-            if sk.apply_block(&block, &mut acc).is_err() {
+            if sk.apply_block_with(&block, &mut acc, ops).is_err() {
                 failed.store(true, Ordering::Relaxed);
                 return;
             }

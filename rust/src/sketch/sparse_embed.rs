@@ -4,7 +4,7 @@
 //! "Sparse l2 Embedding" row) with better-behaved constants than
 //! CountSketch's single hash.
 
-use super::Sketch;
+use super::{RowOps, Sketch};
 use crate::data::blocks::{CsrBlock, RowBlock};
 use crate::linalg::{CsrMat, Mat};
 use crate::util::rng::Rng;
@@ -79,11 +79,26 @@ impl Sketch for SparseEmbed {
     }
 
     /// Streaming fold: every input row scatters into its k private buckets,
-    /// so shards contribute independently, same as CountSketch.
+    /// so shards contribute independently, same as CountSketch. Runs the
+    /// scalar row kernels — bit-identical to the historical loop.
     fn apply_block(
         &self,
         block: &RowBlock<'_>,
         acc: &mut Mat,
+    ) -> Result<(), crate::sketch::StreamUnsupported> {
+        self.apply_block_with(block, acc, &RowOps::SCALAR)
+    }
+
+    /// The real fold, parameterized by the executor's row-scatter kernels:
+    /// the per-bucket scatter is one `axpy` with coefficient `sign/sqrt(k)`.
+    /// `RowOps::SCALAR` replays the historical mul-then-add loop exactly;
+    /// an FMA kernel set differs by one rounding per element
+    /// (tolerance-gated in the parity suite).
+    fn apply_block_with(
+        &self,
+        block: &RowBlock<'_>,
+        acc: &mut Mat,
+        ops: &RowOps,
     ) -> Result<(), crate::sketch::StreamUnsupported> {
         assert_eq!(acc.rows, self.s);
         assert_eq!(acc.cols, block.cols);
@@ -95,9 +110,7 @@ impl Sketch for SparseEmbed {
                 let dst = self.buckets[i * self.k + t] as usize;
                 let sg = self.signs[i * self.k + t] * scale;
                 let orow = acc.row_mut(dst);
-                for (o, v) in orow.iter_mut().zip(row) {
-                    *o += sg * v;
-                }
+                (ops.axpy)(orow, sg, row);
             }
         }
         Ok(())

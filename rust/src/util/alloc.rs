@@ -1,0 +1,300 @@
+//! 64-byte-aligned `f64` buffers — the shared allocation helper behind
+//! [`crate::linalg::Mat`].
+//!
+//! Every dense matrix in the crate (including the padded `[A | b]` FWHT
+//! buffers built by `hstack_col_padded` / `pad_rows`, which route through
+//! `Mat::zeros` / this type's `resize`) is backed by an [`AlignedBuf`], so
+//! SIMD kernel loads start on a cache-line boundary and never straddle one
+//! at row starts for lane-multiple widths. The type is deliberately tiny:
+//! it derefs to `[f64]` and the rest of the crate treats it as a slice.
+//!
+//! A `Vec<f64>` cannot guarantee this: `std::alloc` only promises the
+//! allocation is aligned to `align_of::<f64>()` (8). Reconstructing a `Vec`
+//! over an over-aligned allocation would be UB on drop (the deallocation
+//! `Layout` must match the allocation's), hence a dedicated owner type with
+//! matching alloc/dealloc layouts.
+
+use std::alloc::{alloc, alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::ptr::NonNull;
+
+/// Cache-line alignment used for every buffer (bytes).
+pub const ALIGN: usize = 64;
+
+/// An owned, 64-byte-aligned `f64` buffer that derefs to `[f64]`.
+///
+/// Semantically a fixed-capacity `Vec<f64>` restricted to the operations
+/// the matrix layer needs (`truncate`, `resize`, slicing via `Deref`).
+pub struct AlignedBuf {
+    ptr: NonNull<f64>,
+    len: usize,
+    cap: usize,
+}
+
+// SAFETY: the buffer exclusively owns its allocation and the payload is
+// plain `f64`; moving or sharing it across threads is as safe as for
+// `Vec<f64>`.
+unsafe impl Send for AlignedBuf {}
+// SAFETY: as above — `&AlignedBuf` only exposes `&[f64]`.
+unsafe impl Sync for AlignedBuf {}
+
+fn layout_for(cap: usize) -> Layout {
+    Layout::from_size_align(cap * std::mem::size_of::<f64>(), ALIGN)
+        .expect("aligned buffer layout overflow")
+}
+
+fn alloc_cap(cap: usize, zeroed: bool) -> NonNull<f64> {
+    if cap == 0 {
+        // zero-size layouts may not be passed to the allocator
+        return NonNull::dangling();
+    }
+    let layout = layout_for(cap);
+    // SAFETY: `layout` has non-zero size (cap > 0) and valid 64-byte
+    // alignment; a null return is routed to `handle_alloc_error`.
+    let raw = unsafe {
+        if zeroed {
+            alloc_zeroed(layout)
+        } else {
+            alloc(layout)
+        }
+    };
+    match NonNull::new(raw as *mut f64) {
+        Some(p) => p,
+        None => handle_alloc_error(layout),
+    }
+}
+
+impl AlignedBuf {
+    /// A zero-filled buffer of `len` elements.
+    pub fn zeroed(len: usize) -> AlignedBuf {
+        AlignedBuf {
+            ptr: alloc_cap(len, true),
+            len,
+            cap: len,
+        }
+    }
+
+    /// Copy a slice into a fresh aligned buffer.
+    pub fn from_slice(src: &[f64]) -> AlignedBuf {
+        let ptr = alloc_cap(src.len(), false);
+        // SAFETY: `ptr` was just allocated with capacity `src.len()` and the
+        // ranges cannot overlap (fresh allocation).
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), ptr.as_ptr(), src.len());
+        }
+        AlignedBuf {
+            ptr,
+            len: src.len(),
+            cap: src.len(),
+        }
+    }
+
+    /// Move a `Vec` into an aligned buffer (copies: the `Vec`'s allocation
+    /// cannot be re-aligned in place).
+    pub fn from_vec(src: Vec<f64>) -> AlignedBuf {
+        AlignedBuf::from_slice(&src)
+    }
+
+    /// Number of elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the buffer holds no elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Shorten to `len` elements (no-op if already shorter). Capacity is
+    /// kept, mirroring `Vec::truncate`.
+    pub fn truncate(&mut self, len: usize) {
+        if len < self.len {
+            self.len = len;
+        }
+    }
+
+    /// Resize to `new_len`, filling any new tail with `fill`. Grows by
+    /// reallocating (the buffer is not amortized — matrix shapes are fixed
+    /// at construction; `resize` exists for the pad-rows path).
+    pub fn resize(&mut self, new_len: usize, fill: f64) {
+        if new_len <= self.len {
+            self.len = new_len;
+            return;
+        }
+        if new_len <= self.cap {
+            for i in self.len..new_len {
+                // SAFETY: `i < cap`, so the write is within the allocation.
+                unsafe { self.ptr.as_ptr().add(i).write(fill) };
+            }
+            self.len = new_len;
+            return;
+        }
+        let ptr = alloc_cap(new_len, false);
+        // SAFETY: both regions are valid for `self.len` elements and the
+        // destination is a fresh allocation (no overlap); the tail writes
+        // stay below `new_len`.
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.ptr.as_ptr(), ptr.as_ptr(), self.len);
+            for i in self.len..new_len {
+                ptr.as_ptr().add(i).write(fill);
+            }
+        }
+        let old = std::mem::replace(
+            self,
+            AlignedBuf {
+                ptr,
+                len: new_len,
+                cap: new_len,
+            },
+        );
+        drop(old);
+    }
+
+    /// Copy out to a plain `Vec`.
+    pub fn to_vec(&self) -> Vec<f64> {
+        self[..].to_vec()
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        if self.cap > 0 {
+            // SAFETY: `ptr` was allocated via `alloc_cap` with exactly
+            // `layout_for(self.cap)` and has not been freed.
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, layout_for(self.cap)) };
+        }
+    }
+}
+
+impl std::ops::Deref for AlignedBuf {
+    type Target = [f64];
+    #[inline]
+    fn deref(&self) -> &[f64] {
+        // SAFETY: `ptr` is valid for `len <= cap` initialized elements (all
+        // constructors initialize `..len`).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl std::ops::DerefMut for AlignedBuf {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [f64] {
+        // SAFETY: as in `deref`, plus `&mut self` guarantees uniqueness.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Clone for AlignedBuf {
+    fn clone(&self) -> AlignedBuf {
+        AlignedBuf::from_slice(self)
+    }
+}
+
+impl std::fmt::Debug for AlignedBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(&self[..], f)
+    }
+}
+
+impl PartialEq for AlignedBuf {
+    fn eq(&self, other: &AlignedBuf) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl PartialEq<Vec<f64>> for AlignedBuf {
+    fn eq(&self, other: &Vec<f64>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl PartialEq<AlignedBuf> for Vec<f64> {
+    fn eq(&self, other: &AlignedBuf) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl PartialEq<[f64]> for AlignedBuf {
+    fn eq(&self, other: &[f64]) -> bool {
+        self[..] == *other
+    }
+}
+
+impl<'a> IntoIterator for &'a AlignedBuf {
+    type Item = &'a f64;
+    type IntoIter = std::slice::Iter<'a, f64>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
+}
+
+impl<'a> IntoIterator for &'a mut AlignedBuf {
+    type Item = &'a mut f64;
+    type IntoIter = std::slice::IterMut<'a, f64>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter_mut()
+    }
+}
+
+impl From<Vec<f64>> for AlignedBuf {
+    fn from(v: Vec<f64>) -> AlignedBuf {
+        AlignedBuf::from_vec(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_is_64_bytes() {
+        for len in [1usize, 7, 64, 1000] {
+            let b = AlignedBuf::zeroed(len);
+            assert_eq!(b.as_ptr() as usize % ALIGN, 0, "len {len}");
+            assert!(b.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn zero_len_is_valid() {
+        let mut b = AlignedBuf::zeroed(0);
+        assert!(b.is_empty());
+        assert_eq!(&b[..], &[] as &[f64]);
+        b.resize(3, 1.5);
+        assert_eq!(b, vec![1.5, 1.5, 1.5]);
+    }
+
+    #[test]
+    fn slice_ops_work_through_deref() {
+        let mut b = AlignedBuf::from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        b.copy_within(0..2, 2);
+        assert_eq!(b, vec![1.0, 2.0, 1.0, 2.0]);
+        b[0] = 9.0;
+        assert_eq!(b.iter().sum::<f64>(), 14.0);
+    }
+
+    #[test]
+    fn truncate_resize_roundtrip() {
+        let mut b = AlignedBuf::from_vec(vec![1.0, 2.0, 3.0]);
+        b.truncate(2);
+        assert_eq!(b, vec![1.0, 2.0]);
+        // regrow within capacity fills with the given value
+        b.resize(3, 7.0);
+        assert_eq!(b, vec![1.0, 2.0, 7.0]);
+        // grow past capacity reallocates, still aligned
+        b.resize(100, 0.5);
+        assert_eq!(b.len(), 100);
+        assert_eq!(b.as_ptr() as usize % ALIGN, 0);
+        assert_eq!(b[99], 0.5);
+        assert_eq!(b[0], 1.0);
+    }
+
+    #[test]
+    fn clone_and_eq() {
+        let b = AlignedBuf::from_slice(&[1.0, 2.0]);
+        let c = b.clone();
+        assert_eq!(b, c);
+        assert_ne!(b.as_ptr(), c.as_ptr());
+    }
+}

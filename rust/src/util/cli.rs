@@ -5,11 +5,16 @@
 
 use std::collections::BTreeMap;
 
+/// One declared option (`--name` or `--name <value>`).
 #[derive(Clone, Debug)]
 pub struct OptSpec {
+    /// Long option name (without the `--`).
     pub name: &'static str,
+    /// One-line help shown in usage text.
     pub help: &'static str,
+    /// Whether the option consumes a value (`--key v` / `--key=v`).
     pub takes_value: bool,
+    /// Default shown in help (informational; accessors carry the real one).
     pub default: Option<&'static str>,
 }
 
@@ -18,18 +23,22 @@ pub struct OptSpec {
 pub struct Args {
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Non-option arguments, in order.
     pub positional: Vec<String>,
 }
 
 impl Args {
+    /// The raw value of `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// The value of `--name`, or `default` when absent.
     pub fn get_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// Parse `--name` as usize; exits with a usage error on bad input.
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
         self.get(name)
             .map(|v| {
@@ -41,6 +50,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Parse `--name` as f64; exits with a usage error on bad input.
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name)
             .map(|v| {
@@ -52,6 +62,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Parse `--name` as u64; exits with a usage error on bad input.
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
         self.get(name)
             .map(|v| {
@@ -63,6 +74,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Whether the boolean flag `--name` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -70,12 +82,16 @@ impl Args {
 
 /// Command definition: declared options + parser.
 pub struct Command {
+    /// Subcommand name (for usage text).
     pub name: &'static str,
+    /// One-line description.
     pub about: &'static str,
+    /// Declared options, in declaration order.
     pub opts: Vec<OptSpec>,
 }
 
 impl Command {
+    /// Start a command definition (builder style).
     pub fn new(name: &'static str, about: &'static str) -> Self {
         Command {
             name,
@@ -84,6 +100,7 @@ impl Command {
         }
     }
 
+    /// Declare a value-taking option `--name <v>`.
     pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec {
             name,
@@ -94,6 +111,7 @@ impl Command {
         self
     }
 
+    /// Declare a boolean flag `--name`.
     pub fn flag_opt(mut self, name: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec {
             name,
@@ -104,6 +122,7 @@ impl Command {
         self
     }
 
+    /// Render the usage/help text from the declared options.
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
         for o in &self.opts {

@@ -8,16 +8,23 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A typed config value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer (underscore separators allowed).
     Int(i64),
+    /// A float.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A flat array of values.
     Arr(Vec<Value>),
 }
 
 impl Value {
+    /// The string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -25,6 +32,7 @@ impl Value {
         }
     }
 
+    /// The number as f64 (ints coerce).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Float(x) => Some(*x),
@@ -33,6 +41,7 @@ impl Value {
         }
     }
 
+    /// The integer, if this is an `Int`.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -40,10 +49,12 @@ impl Value {
         }
     }
 
+    /// The integer as usize, if non-negative.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_i64().and_then(|i| usize::try_from(i).ok())
     }
 
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -51,6 +62,7 @@ impl Value {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(a) => Some(a),
@@ -59,9 +71,12 @@ impl Value {
     }
 }
 
+/// Parse error with the 1-based source line.
 #[derive(Debug, Clone)]
 pub struct ConfigError {
+    /// 1-based line number where parsing failed.
     pub line: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -76,10 +91,12 @@ impl std::error::Error for ConfigError {}
 /// Parsed config: dotted-path -> value (e.g. `"dataset.n"`).
 #[derive(Clone, Debug, Default)]
 pub struct Config {
+    /// Every `key = value`, keyed by its dotted section path.
     pub entries: BTreeMap<String, Value>,
 }
 
 impl Config {
+    /// Parse config text (see module docs for the accepted subset).
     pub fn parse(text: &str) -> Result<Config, ConfigError> {
         let mut entries = BTreeMap::new();
         let mut section = String::new();
@@ -120,15 +137,18 @@ impl Config {
         Ok(Config { entries })
     }
 
+    /// Read and parse a config file.
     pub fn load(path: &std::path::Path) -> anyhow::Result<Config> {
         let text = std::fs::read_to_string(path)?;
         Ok(Config::parse(&text)?)
     }
 
+    /// Look up a value by dotted path (e.g. `"dataset.n"`).
     pub fn get(&self, path: &str) -> Option<&Value> {
         self.entries.get(path)
     }
 
+    /// String at `path`, or `default` when absent/mistyped.
     pub fn str_or(&self, path: &str, default: &str) -> String {
         self.get(path)
             .and_then(Value::as_str)
@@ -136,18 +156,22 @@ impl Config {
             .to_string()
     }
 
+    /// usize at `path`, or `default` when absent/mistyped.
     pub fn usize_or(&self, path: &str, default: usize) -> usize {
         self.get(path).and_then(Value::as_usize).unwrap_or(default)
     }
 
+    /// f64 at `path` (ints coerce), or `default` when absent/mistyped.
     pub fn f64_or(&self, path: &str, default: f64) -> f64 {
         self.get(path).and_then(Value::as_f64).unwrap_or(default)
     }
 
+    /// bool at `path`, or `default` when absent/mistyped.
     pub fn bool_or(&self, path: &str, default: bool) -> bool {
         self.get(path).and_then(Value::as_bool).unwrap_or(default)
     }
 
+    /// usize array at `path` (non-usize elements dropped), or `default`.
     pub fn usize_list(&self, path: &str, default: &[usize]) -> Vec<usize> {
         self.get(path)
             .and_then(Value::as_arr)

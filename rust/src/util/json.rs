@@ -11,15 +11,22 @@ use std::fmt;
 /// serialization is deterministic — important for golden tests.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (all numbers parse as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, keys sorted.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(input: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             bytes: input.as_bytes(),
@@ -36,6 +43,7 @@ impl Json {
 
     // -- typed accessors ----------------------------------------------------
 
+    /// The number, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -43,6 +51,7 @@ impl Json {
         }
     }
 
+    /// The number as a usize, if this is a non-negative integer `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
@@ -50,6 +59,7 @@ impl Json {
         }
     }
 
+    /// The string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -57,6 +67,7 @@ impl Json {
         }
     }
 
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -64,6 +75,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -71,6 +83,7 @@ impl Json {
         }
     }
 
+    /// Object field lookup; `None` on missing key or non-object.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -88,6 +101,7 @@ impl Json {
 
     // -- builders -------------------------------------------------------------
 
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(
             pairs
@@ -97,18 +111,23 @@ impl Json {
         )
     }
 
+    /// Build a number value.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
 
+    /// Build a string value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 }
 
+/// Parse error with the byte offset where parsing failed.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset into the input (0 for structural errors like missing keys).
     pub pos: usize,
 }
 

@@ -7,17 +7,24 @@
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
+/// Log severity, ordered most to least severe.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {
+    /// Unrecoverable or surprising failures.
     Error = 0,
+    /// Degraded-but-continuing conditions.
     Warn = 1,
+    /// Normal operational landmarks (default level).
     Info = 2,
+    /// Per-job diagnostics.
     Debug = 3,
+    /// Per-iteration firehose.
     Trace = 4,
 }
 
 impl Level {
+    /// Parse a level name (case-insensitive); `None` on unknown names.
     pub fn from_str(s: &str) -> Option<Level> {
         match s.to_ascii_lowercase().as_str() {
             "error" => Some(Level::Error),
@@ -29,6 +36,7 @@ impl Level {
         }
     }
 
+    /// Fixed-width tag for log lines.
     pub fn tag(self) -> &'static str {
         match self {
             Level::Error => "ERROR",
@@ -64,10 +72,12 @@ pub fn init_from_env() {
     }
 }
 
+/// Set the process log level.
 pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// The current process log level.
 pub fn level() -> Level {
     match LEVEL.load(Ordering::Relaxed) {
         0 => Level::Error,
@@ -78,10 +88,12 @@ pub fn level() -> Level {
     }
 }
 
+/// Whether messages at level `l` are currently emitted.
 pub fn enabled(l: Level) -> bool {
     l <= level()
 }
 
+/// Emit one log line (used via the `log_*` macros, which add module paths).
 pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if !enabled(l) {
         return;
@@ -90,6 +102,7 @@ pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     eprintln!("[{t:10.4}s {} {module}] {msg}", l.tag());
 }
 
+/// Log at info level with the caller's module path.
 #[macro_export]
 macro_rules! log_info {
     ($($arg:tt)*) => {
@@ -101,6 +114,7 @@ macro_rules! log_info {
     };
 }
 
+/// Log at warn level with the caller's module path.
 #[macro_export]
 macro_rules! log_warn {
     ($($arg:tt)*) => {
@@ -112,6 +126,7 @@ macro_rules! log_warn {
     };
 }
 
+/// Log at debug level with the caller's module path.
 #[macro_export]
 macro_rules! log_debug {
     ($($arg:tt)*) => {

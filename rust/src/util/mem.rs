@@ -47,8 +47,11 @@ pub struct MemBudget {
 pub struct MemError {
     /// The stage that requested the materialization (logged + reported).
     pub stage: String,
+    /// Bytes the failed charge asked for.
     pub requested: usize,
+    /// Bytes already charged when the request was refused.
     pub used: usize,
+    /// The configured cap in bytes at refusal time.
     pub limit: usize,
 }
 
@@ -74,6 +77,7 @@ pub struct MemCharge {
 }
 
 impl MemCharge {
+    /// Bytes this charge holds against the budget.
     pub fn bytes(&self) -> usize {
         self.bytes
     }

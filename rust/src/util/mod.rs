@@ -6,6 +6,7 @@
 //! utilities that a framework normally pulls from crates.io are implemented
 //! here and unit-tested in place.
 
+pub mod alloc;
 pub mod rng;
 pub mod mem;
 pub mod json;

@@ -10,12 +10,16 @@ use std::fmt::Write as _;
 /// One named curve: x (iterations or seconds) vs y (relative error).
 #[derive(Clone, Debug)]
 pub struct Series {
+    /// Legend label.
     pub name: String,
+    /// X coordinates, in push order.
     pub xs: Vec<f64>,
+    /// Y coordinates, parallel to `xs`.
     pub ys: Vec<f64>,
 }
 
 impl Series {
+    /// Empty series with a legend label.
     pub fn new(name: impl Into<String>) -> Self {
         Series {
             name: name.into(),
@@ -24,15 +28,18 @@ impl Series {
         }
     }
 
+    /// Append one point.
     pub fn push(&mut self, x: f64, y: f64) {
         self.xs.push(x);
         self.ys.push(y);
     }
 
+    /// Number of points.
     pub fn len(&self) -> usize {
         self.xs.len()
     }
 
+    /// Whether the series has no points.
     pub fn is_empty(&self) -> bool {
         self.xs.is_empty()
     }
@@ -50,14 +57,20 @@ impl Series {
 /// A figure = several series + axis labels.
 #[derive(Clone, Debug)]
 pub struct Figure {
+    /// Chart title.
     pub title: String,
+    /// X axis label.
     pub xlabel: String,
+    /// Y axis label.
     pub ylabel: String,
+    /// Plot log10(y) instead of y.
     pub logy: bool,
+    /// The curves, in add order.
     pub series: Vec<Series>,
 }
 
 impl Figure {
+    /// Empty figure with axis labels.
     pub fn new(title: impl Into<String>, xlabel: &str, ylabel: &str, logy: bool) -> Self {
         Figure {
             title: title.into(),
@@ -68,6 +81,7 @@ impl Figure {
         }
     }
 
+    /// Add one curve.
     pub fn add(&mut self, s: Series) {
         self.series.push(s);
     }

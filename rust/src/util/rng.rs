@@ -50,6 +50,7 @@ impl Rng {
         Rng { s, gauss_spare: None }
     }
 
+    /// Next raw 64-bit output of the xoshiro256++ state machine.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -174,6 +175,8 @@ pub struct AliasTable {
 }
 
 impl AliasTable {
+    /// Build the table from an unnormalized positive weight vector
+    /// (O(n) construction via Vose's small/large worklists).
     pub fn new(weights: &[f64]) -> Self {
         let n = weights.len();
         assert!(n > 0 && n < u32::MAX as usize);
@@ -207,6 +210,7 @@ impl AliasTable {
         AliasTable { prob, alias }
     }
 
+    /// Draw one index with probability proportional to its weight — O(1).
     #[inline]
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let i = rng.below(self.prob.len());

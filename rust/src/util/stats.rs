@@ -7,14 +7,18 @@ use std::time::{Duration, Instant};
 /// Online mean/variance (Welford) plus min/max.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
+    /// Number of samples seen.
     pub count: usize,
     mean: f64,
     m2: f64,
+    /// Smallest sample (`+inf` when empty).
     pub min: f64,
+    /// Largest sample (`-inf` when empty).
     pub max: f64,
 }
 
 impl Summary {
+    /// Empty summary.
     pub fn new() -> Self {
         Summary {
             count: 0,
@@ -25,6 +29,7 @@ impl Summary {
         }
     }
 
+    /// Fold one sample into the summary.
     pub fn add(&mut self, x: f64) {
         self.count += 1;
         let delta = x - self.mean;
@@ -34,10 +39,12 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
 
+    /// Unbiased sample variance (0 for fewer than two samples).
     pub fn var(&self) -> f64 {
         if self.count < 2 {
             0.0
@@ -46,6 +53,7 @@ impl Summary {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
@@ -60,6 +68,7 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
     v[rank.min(v.len() - 1)]
 }
 
+/// 50th percentile (nearest-rank).
 pub fn median(samples: &[f64]) -> f64 {
     percentile(samples, 50.0)
 }
@@ -70,16 +79,19 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Self {
         Timer {
             start: Instant::now(),
         }
     }
 
+    /// Time since `start()`.
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// Time since `start()` in seconds.
     pub fn secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
@@ -89,11 +101,14 @@ impl Timer {
 /// reports median/mean/std. Used by `rust/benches/kernels.rs` and the
 /// experiment drivers for preconditioning-cost tables.
 pub struct BenchStats {
+    /// Bench label (printed in reports).
     pub name: String,
+    /// Per-repetition wall times in seconds.
     pub samples_secs: Vec<f64>,
 }
 
 impl BenchStats {
+    /// Run `f` `warmup` untimed times, then `reps` timed repetitions.
     pub fn run<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Self {
         for _ in 0..warmup {
             f();
@@ -110,10 +125,12 @@ impl BenchStats {
         }
     }
 
+    /// Median repetition time in seconds.
     pub fn median_secs(&self) -> f64 {
         median(&self.samples_secs)
     }
 
+    /// Mean repetition time in seconds.
     pub fn mean_secs(&self) -> f64 {
         let mut s = Summary::new();
         for &x in &self.samples_secs {
@@ -122,6 +139,7 @@ impl BenchStats {
         s.mean()
     }
 
+    /// Standard deviation of repetition times in seconds.
     pub fn std_secs(&self) -> f64 {
         let mut s = Summary::new();
         for &x in &self.samples_secs {
@@ -130,6 +148,7 @@ impl BenchStats {
         s.std()
     }
 
+    /// One-line human report: median / mean ± std / rep count.
     pub fn report(&self) -> String {
         format!(
             "{:<44} median {:>10} mean {:>10} +-{:>9} ({} reps)",

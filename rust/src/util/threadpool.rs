@@ -107,6 +107,9 @@ struct StaticPoolState {
     epoch: u64,
 }
 
+/// The persistent data-parallel worker pool behind
+/// [`parallel_for_each_index`]. One job runs at a time; workers idle on a
+/// condvar between jobs.
 pub struct StaticPool {
     state: Mutex<StaticPoolState>,
     work_cv: Condvar,
@@ -242,6 +245,7 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
+    /// Spawn `threads` workers with a queue bounded at `max_queue` tasks.
     pub fn new(threads: usize, max_queue: usize) -> Self {
         assert!(threads > 0);
         let (tx, rx) = mpsc::channel::<Task>();
@@ -297,6 +301,7 @@ impl ThreadPool {
         }
     }
 
+    /// Tasks submitted but not yet finished.
     pub fn inflight(&self) -> usize {
         *self.inflight.0.lock().unwrap()
     }

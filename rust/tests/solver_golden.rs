@@ -22,9 +22,11 @@
 //! each configuration twice and asserts bitwise equality, so determinism
 //! is enforced even on a bootstrap run.
 //!
-//! The runs pin `format: dense`, `reuse_precond: false` and
-//! `warm_start: false` explicitly — the fixtures must not depend on the
-//! HDPW_FORMAT / HDPW_REUSE_PRECOND / HDPW_WARM_START CI variants.
+//! The runs pin `format: dense`, `reuse_precond: false`,
+//! `warm_start: false` and `executor: native` explicitly — the fixtures
+//! must not depend on the HDPW_FORMAT / HDPW_REUSE_PRECOND /
+//! HDPW_WARM_START / HDPW_EXECUTOR CI variants. (The simd executor's
+//! FMA/re-association drift is covered by `simd_parity.rs` instead.)
 
 use hdpw::backend::Backend;
 use hdpw::coordinator::{Coordinator, CoordinatorConfig, JobRequest};
@@ -75,6 +77,7 @@ fn request(solver: &str, dataset: &str, max_iters: usize) -> JobRequest {
     req.reuse_precond = false;
     req.warm_start = false;
     req.format = "dense".into();
+    req.executor = "native".into();
     req
 }
 
