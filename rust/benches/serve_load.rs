@@ -1,0 +1,253 @@
+//! Serve-tier load generator (ISSUE 7 acceptance).
+//!
+//! Two phases:
+//!   1. Coalescing proof — ≥8 concurrent same-key `reuse_precond` jobs must
+//!      report `coalesced_batch > 1` while each job's solution stays
+//!      bit-identical to the same request run alone (uncoalesced).
+//!   2. Mixed load — hundreds/thousands of dense/sparse/constrained jobs
+//!      cycling the high/normal/batch lanes through a `serve_stdio`-style
+//!      `handle_connection`, reporting jobs/sec and per-lane p50/p95/p99 to
+//!      `BENCH_serve.json`.
+//!
+//! Modes:
+//!   default            — ~2000 jobs (HDPW_SERVE_JOBS overrides), plus
+//!                        deadline pressure on the batch lane so shedding
+//!                        is exercised and reported.
+//!   HDPW_SERVE_SMOKE=1 — ~240 jobs, no deadlines; exits nonzero unless
+//!                        every job succeeds and coalescing was observed
+//!                        (the CI tier-1 smoke contract).
+
+use hdpw::backend::Backend;
+use hdpw::coordinator::server::handle_connection;
+use hdpw::coordinator::{Coordinator, CoordinatorConfig, JobRequest, JobResult};
+use hdpw::util::json::Json;
+use hdpw::util::threadpool::{default_threads, Lane};
+use std::io::Cursor;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+fn fail(msg: &str) -> ! {
+    eprintln!("serve_load FAILED: {msg}");
+    std::process::exit(1);
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Phase 1: 8 concurrent same-key jobs; returns the peak coalesced batch
+/// observed (retrying with fresh keys to ride out pathological scheduling).
+fn coalescing_phase() -> usize {
+    let coord = Arc::new(Coordinator::new(
+        Backend::native(),
+        CoordinatorConfig {
+            workers: 8,
+            max_queue: 16,
+            ..CoordinatorConfig::default()
+        },
+    ));
+    let mut base = JobRequest::default();
+    base.dataset = "syn2".into();
+    base.n = 4096;
+    base.solver = "hdpwbatchsgd".into();
+    base.max_iters = 200;
+    base.batch_size = 16;
+    base.time_budget = 30.0;
+    base.reuse_precond = true;
+    let mut peak = 0usize;
+    for round in 0..5u64 {
+        base.seed = 40 + round; // fresh key => fresh artifact + episode
+        let (tx, rx) = mpsc::channel();
+        for i in 0..8u64 {
+            let mut r = base.clone();
+            r.id = i;
+            let tx = tx.clone();
+            coord.submit(r, move |res| {
+                let _ = tx.send(res);
+            });
+        }
+        drop(tx);
+        let results: Vec<JobResult> = rx
+            .iter()
+            .map(|r| match r {
+                Ok(res) => res,
+                Err(e) => fail(&format!("coalesced job errored: {e:#}")),
+            })
+            .collect();
+        // uncoalesced reference: the same request alone on a fresh
+        // coordinator — artifacts are pure functions of the key, so every
+        // member of the episode must match it bit-for-bit
+        let serial = Coordinator::new(Backend::native(), CoordinatorConfig::default())
+            .run_job(&base)
+            .unwrap_or_else(|e| fail(&format!("serial reference errored: {e:#}")));
+        for r in &results {
+            if r.best.x.len() != serial.best.x.len()
+                || r.best
+                    .x
+                    .iter()
+                    .zip(&serial.best.x)
+                    .any(|(a, b)| a.to_bits() != b.to_bits())
+                || r.best_f.to_bits() != serial.best_f.to_bits()
+            {
+                fail("coalesced job's trace diverged from uncoalesced execution");
+            }
+        }
+        peak = peak.max(results.iter().map(|r| r.coalesced_batch).max().unwrap_or(1));
+        println!(
+            "coalescing round {round}: peak batch {} (8 concurrent same-key jobs), \
+             bit-identical to serial: yes",
+            peak
+        );
+        if peak > 1 {
+            break;
+        }
+    }
+    peak
+}
+
+/// One mixed-load request: solvers, representations, constraints, and
+/// lanes cycle deterministically by index.
+fn mixed_req(i: usize, with_deadlines: bool) -> JobRequest {
+    let mut r = JobRequest::default();
+    r.id = i as u64;
+    r.dataset = "syn2".into();
+    r.n = 512;
+    r.max_iters = 150;
+    r.batch_size = 16;
+    r.time_budget = 10.0;
+    r.seed = 1 + (i % 4) as u64;
+    r.solver = match i % 3 {
+        0 => "exact".into(),
+        _ => "pwgradient".into(),
+    };
+    if i % 3 == 2 {
+        r.constraint = "l2".into();
+    }
+    if i % 5 == 0 {
+        r.format = "sparse".into();
+        r.density = 0.2;
+    }
+    // 1:2:1 submission mix across high:normal:batch
+    r.priority = match i % 4 {
+        0 => "high",
+        1 | 2 => "normal",
+        _ => "batch",
+    }
+    .to_string();
+    // full mode: some batch-lane jobs carry deadlines tight enough that a
+    // loaded queue sheds them — the shed path under real load
+    if with_deadlines && r.priority == "batch" && i % 8 == 7 {
+        r.deadline_ms = 5.0;
+    }
+    r
+}
+
+fn main() {
+    let smoke = std::env::var("HDPW_SERVE_SMOKE").ok().as_deref() == Some("1");
+    let jobs = env_usize("HDPW_SERVE_JOBS", if smoke { 240 } else { 2000 });
+    let workers = default_threads();
+
+    println!("== phase 1: request coalescing (8 concurrent same-key jobs) ==");
+    let coalesce_peak = coalescing_phase();
+    if smoke && coalesce_peak < 2 {
+        fail("coalesced_batch > 1 was never observed");
+    }
+
+    println!("== phase 2: mixed load ({jobs} jobs, {workers} workers) ==");
+    let coord = Arc::new(Coordinator::new(
+        Backend::native(),
+        CoordinatorConfig {
+            workers,
+            max_queue: 64,
+            ..CoordinatorConfig::default()
+        },
+    ));
+    let input: String = (0..jobs)
+        .map(|i| mixed_req(i, !smoke).to_json().to_string() + "\n")
+        .collect();
+    let t0 = Instant::now();
+    // serve_stdio-style: one line-delimited session over an in-memory pipe;
+    // responses go to a sink (the metrics below are the measurement)
+    handle_connection(&coord, Cursor::new(input), std::io::sink())
+        .unwrap_or_else(|e| fail(&format!("serve session errored: {e:#}")));
+    let wall = t0.elapsed().as_secs_f64();
+
+    let m = &coord.metrics;
+    let failed = m.jobs_failed.load(Ordering::Relaxed);
+    let shed = m.jobs_shed.load(Ordering::Relaxed);
+    let completed = m.jobs_completed.load(Ordering::Relaxed);
+    let jobs_per_sec = jobs as f64 / wall.max(1e-9);
+    println!(
+        "{jobs} jobs in {wall:.2}s = {jobs_per_sec:.0} jobs/sec \
+         (completed {completed}, shed {shed}, failed {failed}, steals {})",
+        coord.pool_steals()
+    );
+
+    let lane_obj = |lane: Lane| {
+        let lm = &m.lanes[lane.idx()];
+        let pct = |p: f64| {
+            m.lane_latency_percentile(lane, p)
+                .map(|secs| secs * 1e3)
+                .unwrap_or(-1.0)
+        };
+        println!(
+            "lane {:<6}: submitted {:>4} completed {:>4} shed {:>3} \
+             p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms",
+            lane.name(),
+            lm.submitted.load(Ordering::Relaxed),
+            lm.completed.load(Ordering::Relaxed),
+            lm.shed.load(Ordering::Relaxed),
+            pct(50.0),
+            pct(95.0),
+            pct(99.0)
+        );
+        Json::obj(vec![
+            ("submitted", Json::num(lm.submitted.load(Ordering::Relaxed) as f64)),
+            ("completed", Json::num(lm.completed.load(Ordering::Relaxed) as f64)),
+            ("shed", Json::num(lm.shed.load(Ordering::Relaxed) as f64)),
+            ("p50_ms", Json::num(pct(50.0))),
+            ("p95_ms", Json::num(pct(95.0))),
+            ("p99_ms", Json::num(pct(99.0))),
+        ])
+    };
+    let out = Json::obj(vec![
+        ("jobs", Json::num(jobs as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("wall_secs", Json::num(wall)),
+        ("jobs_per_sec", Json::num(jobs_per_sec)),
+        ("completed", Json::num(completed as f64)),
+        ("failed", Json::num(failed as f64)),
+        ("shed", Json::num(shed as f64)),
+        ("coalesce_batch_max", Json::num(coalesce_peak as f64)),
+        (
+            "coalesced_jobs",
+            Json::num(m.coalesced_jobs.load(Ordering::Relaxed) as f64),
+        ),
+        ("pool_steals", Json::num(coord.pool_steals() as f64)),
+        ("lane_high", lane_obj(Lane::High)),
+        ("lane_normal", lane_obj(Lane::Normal)),
+        ("lane_batch", lane_obj(Lane::Batch)),
+    ]);
+    let path = "BENCH_serve.json";
+    match std::fs::write(path, format!("{out}\n")) {
+        Ok(()) => println!("serve load artifact: {path}"),
+        Err(e) => println!("serve load artifact NOT written: {e}"),
+    }
+
+    if smoke {
+        if failed > 0 {
+            fail(&format!("{failed} jobs failed under the smoke load"));
+        }
+        if shed > 0 {
+            fail(&format!("{shed} jobs shed though the smoke load sets no deadlines"));
+        }
+        if completed != jobs {
+            fail(&format!("completed {completed} != submitted {jobs}"));
+        }
+        println!("smoke OK: {jobs} mixed jobs, 0 failed, coalesced_batch {coalesce_peak} > 1");
+    }
+}

@@ -49,42 +49,52 @@ use std::sync::{Arc, Mutex};
 pub mod opkey {
     use crate::constraints::ConstraintSet;
 
+    /// Key for the randomized-Hadamard transform of the packed `[A | b]`.
     pub fn hd_transform(n: usize, cols: usize) -> String {
         format!("hd_transform_n{n}_c{cols}")
     }
 
+    /// Key for the mini-batch gradient at batch size `r`.
     pub fn batch_grad(r: usize, d: usize) -> String {
         format!("batch_grad_r{r}_d{d}")
     }
 
+    /// Key for the full gradient `2 A^T (A x - b)`.
     pub fn full_grad(n: usize, d: usize) -> String {
         format!("full_grad_n{n}_d{d}")
     }
 
+    /// Key for the residual objective `||Ax - b||^2`.
     pub fn residual_sq(n: usize, d: usize) -> String {
         format!("residual_sq_n{n}_d{d}")
     }
 
+    /// Key for one projected gradient step under `cons`.
     pub fn gd_step(cons: &dyn ConstraintSet, d: usize) -> String {
         format!("gd_step_{}_d{}", cons.tag(), d)
     }
 
+    /// Key for `t` fused mini-batch SGD steps (Algorithm 2).
     pub fn sgd_chunk(cons: &dyn ConstraintSet, n: usize, d: usize, r: usize, t: usize) -> String {
         format!("sgd_chunk_{}_n{}_d{}_r{}_t{}", cons.tag(), n, d, r, t)
     }
 
+    /// Key for `t` fused accelerated mini-batch steps (Algorithm 6).
     pub fn acc_chunk(cons: &dyn ConstraintSet, n: usize, d: usize, r: usize, t: usize) -> String {
         format!("acc_chunk_{}_n{}_d{}_r{}_t{}", cons.tag(), n, d, r, t)
     }
 
+    /// Key for `t` fused pwGradient steps (Algorithm 4).
     pub fn pw_gradient_chunk(cons: &dyn ConstraintSet, n: usize, d: usize, t: usize) -> String {
         format!("pw_gradient_chunk_{}_n{}_d{}_t{}", cons.tag(), n, d, t)
     }
 
+    /// Key for the dense sketch application `S A`.
     pub fn sketch_apply(s: usize, n: usize, d: usize) -> String {
         format!("sketch_apply_s{s}_n{n}_d{d}")
     }
 
+    /// Key for the CSR sketch application (keyed by nnz, not rows).
     pub fn sketch_apply_csr(s: usize, nnz: usize, d: usize) -> String {
         format!("sketch_apply_csr_s{s}_nnz{nnz}_d{d}")
     }
@@ -119,6 +129,7 @@ pub struct DispatchStats {
 }
 
 impl DispatchStats {
+    /// Count one dispatched op in `class`'s bucket.
     pub fn mark(&self, class: ExecClass) {
         match class {
             ExecClass::Accelerated => self.pjrt_calls.fetch_add(1, Ordering::Relaxed),
@@ -127,14 +138,17 @@ impl DispatchStats {
         };
     }
 
+    /// Count `shards` row shards folded by a block-streamed path.
     pub fn add_block_calls(&self, shards: usize) {
         self.native_block_calls.fetch_add(shards, Ordering::Relaxed);
     }
 
+    /// Record why `Backend::auto()` fell back to native.
     pub fn set_fallback_reason(&self, reason: String) {
         *self.pjrt_fallback_reason.lock().unwrap() = Some(reason);
     }
 
+    /// The recorded fallback reason, if any.
     pub fn fallback_reason(&self) -> Option<String> {
         self.pjrt_fallback_reason.lock().unwrap().clone()
     }
@@ -466,6 +480,7 @@ pub struct NativeExecutor {
 }
 
 impl NativeExecutor {
+    /// Native executor with default thread count and heuristic shard height.
     pub fn new(stats: Arc<DispatchStats>) -> NativeExecutor {
         NativeExecutor {
             threads: default_threads(),
@@ -680,6 +695,7 @@ pub struct SimdExecutor {
 }
 
 impl SimdExecutor {
+    /// Simd executor with default thread count and heuristic shard height.
     pub fn new(stats: Arc<DispatchStats>) -> SimdExecutor {
         SimdExecutor {
             threads: default_threads(),
@@ -892,10 +908,12 @@ pub struct PjrtExecutor {
 }
 
 impl PjrtExecutor {
+    /// Artifact executor over a loaded PJRT engine.
     pub fn new(engine: EngineHandle) -> PjrtExecutor {
         PjrtExecutor { engine }
     }
 
+    /// The underlying engine handle (manifest inspection, tests).
     pub fn engine(&self) -> &EngineHandle {
         &self.engine
     }

@@ -17,6 +17,8 @@
 //! and `rust/tests/simd_parity.rs` (documented tolerance; native stays the
 //! bit-exact reference).
 
+/// The [`Executor`] trait, op-key naming scheme, dispatch counters, and the
+/// three built-in executors (native, simd, PJRT).
 pub mod executor;
 
 pub use executor::{DispatchStats, ExecClass, Executor, NativeExecutor, PjrtExecutor, SimdExecutor};
@@ -205,10 +207,12 @@ impl Backend {
         self.simd
     }
 
+    /// Ops served by a compiled PJRT executable.
     pub fn pjrt_calls(&self) -> usize {
         self.stats.pjrt_calls.load(Ordering::Relaxed)
     }
 
+    /// Ops served by the native catch-all executor.
     pub fn native_calls(&self) -> usize {
         self.stats.native_calls.load(Ordering::Relaxed)
     }
@@ -228,6 +232,8 @@ impl Backend {
         self.stats.fallback_reason()
     }
 
+    /// The backend's dispatch counters (for absorbing a fork's counts back
+    /// into a parent, or direct inspection).
     pub fn stats(&self) -> &DispatchStats {
         &self.stats
     }

@@ -9,6 +9,7 @@ use crate::constraints::{ConstraintRef, ConstraintSpec};
 use crate::sketch::SketchKind;
 use crate::solvers::{SolveReport, SolverOpts};
 use crate::util::json::Json;
+use crate::util::threadpool::Lane;
 use anyhow::{bail, Context, Result};
 
 /// Valid `JobRequest::executor` values — the single authority shared by
@@ -21,6 +22,33 @@ pub const EXECUTOR_CHOICES: &[&str] = &["", "default", "native", "simd", "auto",
 ///   libsvm  — like sparse, but round-tripped through the libsvm parser
 ///             (and `dataset: "libsvm:<path>"` loads a file directly).
 pub const FORMAT_CHOICES: &[&str] = &["", "dense", "sparse", "libsvm"];
+
+/// Valid `JobRequest::priority` values — the scheduler's QoS lanes
+/// (served 4:2:1 high:normal:batch). "" means the default (normal).
+pub const PRIORITY_CHOICES: &[&str] = &["", "high", "normal", "batch"];
+
+/// Error-chain marker for deadline-shed jobs: the scheduler declined the
+/// job because its deadline could not (or can no longer) be met. Wire
+/// clients and tests detect sheds structurally via [`is_shed_error`]
+/// instead of pattern-matching prose.
+pub const SHED_ERROR_MARKER: &str = "deadline-shed";
+
+/// Build the structured error a deadline-shed job resolves to. The outer
+/// context is the [`SHED_ERROR_MARKER`] so [`is_shed_error`] can classify
+/// it; the message carries the numbers an operator needs.
+pub fn shed_error(id: u64, lane: Lane, deadline_ms: f64, est_ms: f64) -> anyhow::Error {
+    anyhow::anyhow!(
+        "job {id} on lane {} missed deadline: estimated {est_ms:.1}ms > deadline {deadline_ms:.1}ms",
+        lane.name()
+    )
+    .context(format!("{SHED_ERROR_MARKER}: job {id}"))
+}
+
+/// Whether `err` is a deadline shed (vs a solver/validation failure) — the
+/// structured check the serve protocol and tests rely on.
+pub fn is_shed_error(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c.starts_with(SHED_ERROR_MARKER))
+}
 
 /// One solve request (the line format of the serve socket and the record
 /// the CLI builds from flags).
@@ -87,6 +115,15 @@ pub struct JobRequest {
     /// Target nnz fraction for generated sparse datasets; 0 = the
     /// generator default (0.1). Ignored for dense format and file loads.
     pub density: f64,
+    /// QoS lane: high | normal | batch (see [`PRIORITY_CHOICES`]). The
+    /// scheduler serves lanes weighted 4:2:1 and bounds each lane's queue
+    /// independently, so a batch backlog never blocks a high submit.
+    pub priority: String,
+    /// Soft deadline in milliseconds (0 = none). Jobs whose deadline the
+    /// scheduler estimates unmeetable — queue depth × recent p50 — are
+    /// shed up front with a structured error (see [`shed_error`]) instead
+    /// of timing out after consuming a worker.
+    pub deadline_ms: f64,
 }
 
 /// Truthy env flag ("1" | "true" | "yes") — the single authority for the
@@ -130,6 +167,8 @@ impl Default for JobRequest {
                 .filter(|v| !v.is_empty())
                 .unwrap_or_else(|| "dense".into()),
             density: 0.0,
+            priority: "normal".into(),
+            deadline_ms: 0.0,
         }
     }
 }
@@ -161,6 +200,8 @@ impl JobRequest {
             ("warm_start", Json::Bool(self.warm_start)),
             ("format", Json::str(self.format.clone())),
             ("density", Json::num(self.density)),
+            ("priority", Json::str(self.priority.clone())),
+            ("deadline_ms", Json::num(self.deadline_ms)),
         ])
     }
 
@@ -212,6 +253,8 @@ impl JobRequest {
                 .unwrap_or(def.warm_start),
             format: get_s("format", &def.format),
             density: get_n("density", def.density),
+            priority: get_s("priority", &def.priority),
+            deadline_ms: get_n("deadline_ms", def.deadline_ms),
         };
         req.validate()?;
         Ok(req)
@@ -249,7 +292,24 @@ impl JobRequest {
         if !(0.0..=1.0).contains(&self.density) {
             bail!("density must be in [0, 1], got {}", self.density);
         }
+        if !PRIORITY_CHOICES.contains(&self.priority.as_str()) {
+            bail!(
+                "unknown priority {:?} (valid: {:?})",
+                self.priority,
+                PRIORITY_CHOICES
+            );
+        }
+        if !self.deadline_ms.is_finite() || self.deadline_ms < 0.0 {
+            bail!("deadline_ms must be a finite value >= 0, got {}", self.deadline_ms);
+        }
         Ok(())
+    }
+
+    /// The scheduler lane this request runs on ([`JobRequest::priority`];
+    /// "" maps to normal). Call after `validate` — unknown names fall back
+    /// to normal rather than panicking.
+    pub fn lane(&self) -> Lane {
+        Lane::parse(&self.priority).unwrap_or(Lane::Normal)
     }
 
     /// The radius a radius-bearing constraint actually runs at: the spec's
@@ -363,6 +423,11 @@ pub struct JobResult {
     /// (exact when jobs run serially; an upper bound under concurrency).
     /// A CSR step-1-only solve reports 0 here — the acceptance criterion.
     pub densify_events: usize,
+    /// Peak size of the coalescing group this job shared its
+    /// preconditioner setup with (concurrent same-`PrecondKey` jobs).
+    /// 1 = ran alone; > 1 = setup/artifact work was amortized across the
+    /// group while per-job trial RNG streams stayed independent.
+    pub coalesced_batch: usize,
     /// The best trial's full report (iterate, trace, cache outcome).
     pub best: SolveReport,
 }
@@ -403,6 +468,7 @@ impl JobResult {
             ("mem_est_bytes", Json::num(self.mem_est_bytes as f64)),
             ("mem_peak_bytes", Json::num(self.mem_peak_bytes as f64)),
             ("densify_events", Json::num(self.densify_events as f64)),
+            ("coalesced_batch", Json::num(self.coalesced_batch as f64)),
             ("iters", Json::num(self.best.iters as f64)),
             ("setup_secs", Json::num(self.best.setup_secs)),
             ("solve_secs", Json::num(self.best.solve_secs)),
@@ -570,6 +636,50 @@ mod tests {
         assert_eq!(opts2.eps_abs, None);
         // a ball with no radius anywhere is a build-time error
         assert!(req.solver_opts(0.0, None).is_err());
+    }
+
+    #[test]
+    fn priority_and_deadline_roundtrip_and_validate() {
+        let mut req = JobRequest::default();
+        assert_eq!(req.priority, "normal");
+        assert_eq!(req.lane(), Lane::Normal);
+        req.priority = "high".into();
+        req.deadline_ms = 250.0;
+        let back = JobRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back.priority, "high");
+        assert_eq!(back.lane(), Lane::High);
+        assert!((back.deadline_ms - 250.0).abs() < 1e-12);
+        // missing fields default to normal / no deadline
+        let j = Json::parse(r#"{"solver": "exact"}"#).unwrap();
+        let d = JobRequest::from_json(&j).unwrap();
+        assert_eq!(d.lane(), Lane::Normal);
+        assert_eq!(d.deadline_ms, 0.0);
+        // batch is a valid lane
+        let j = Json::parse(r#"{"priority": "batch"}"#).unwrap();
+        assert_eq!(JobRequest::from_json(&j).unwrap().lane(), Lane::Batch);
+        // bad priority rejected
+        let j = Json::parse(r#"{"priority": "urgent"}"#).unwrap();
+        assert!(JobRequest::from_json(&j).is_err());
+        // negative deadline rejected
+        let j = Json::parse(r#"{"deadline_ms": -5}"#).unwrap();
+        assert!(JobRequest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn shed_errors_are_structured() {
+        let err = shed_error(42, Lane::Batch, 100.0, 350.0);
+        assert!(is_shed_error(&err), "{err:#}");
+        // the classification survives further wrapping
+        let wrapped = err.context("while serving connection");
+        assert!(is_shed_error(&wrapped), "{wrapped:#}");
+        // ordinary errors are not sheds, even ones mentioning deadlines
+        let plain = anyhow::anyhow!("solver blew the deadline budget");
+        assert!(!is_shed_error(&plain));
+        // the message carries the operator-facing numbers
+        let msg = format!("{:#}", shed_error(7, Lane::High, 10.0, 99.0));
+        assert!(msg.contains("deadline-shed"), "{msg}");
+        assert!(msg.contains("10.0ms"), "{msg}");
+        assert!(msg.contains("99.0ms"), "{msg}");
     }
 
     #[test]

@@ -1,9 +1,139 @@
-//! Service metrics: counters + latency histogram for the coordinator.
+//! Service metrics: counters + latency histograms for the coordinator.
+//!
+//! Latency percentiles come from a fixed-bucket log-scale histogram:
+//! O(1) record under no lock, O(buckets) percentile — so a load generator
+//! (or a dashboard) can poll percentiles at high frequency without
+//! perturbing the run. Buckets are quarter-octaves (4 per power of two)
+//! from 1 µs, which bounds the percentile's relative error at
+//! 2^(1/8) ≈ ±9% while covering 1 µs .. ~1 hour in 128 buckets; exact
+//! observed min/max clamp the tails.
 
+use crate::util::threadpool::Lane;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
 
-/// Service counters + latency histogram for the coordinator.
+/// Histogram bucket count: 128 quarter-octave buckets from the 1 µs floor
+/// cover latencies up to 2^(127/4) µs ≈ 66 minutes.
+const NBUCKETS: usize = 128;
+/// Buckets per power of two.
+const PER_OCTAVE: f64 = 4.0;
+/// Smallest resolvable latency (seconds): everything below lands in
+/// bucket 0.
+const FLOOR_SECS: f64 = 1e-6;
+
+/// Fixed-bucket log-scale latency histogram: lock-free O(1) `record`,
+/// O(buckets) `percentile`. Values are clamped to the observed min/max so
+/// constant samples report exactly.
+pub struct LatencyHistogram {
+    counts: [AtomicU64; NBUCKETS],
+    total: AtomicU64,
+    /// Observed minimum, stored as f64 bits (bit order == numeric order
+    /// for non-negative floats, so `fetch_min` works).
+    min_bits: AtomicU64,
+    /// Observed maximum, same encoding.
+    max_bits: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl std::fmt::Debug for LatencyHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LatencyHistogram")
+            .field("count", &self.count())
+            .field("p50", &self.percentile(50.0))
+            .field("p99", &self.percentile(99.0))
+            .finish()
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            total: AtomicU64::new(0),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket(secs: f64) -> usize {
+        // callers sanitize: secs is finite and >= 0 here
+        if secs <= FLOOR_SECS {
+            return 0;
+        }
+        (((secs / FLOOR_SECS).log2() * PER_OCTAVE) as usize).min(NBUCKETS - 1)
+    }
+
+    /// Record one latency (seconds). Lock-free, O(1).
+    pub fn record(&self, secs: f64) {
+        let secs = if secs.is_finite() && secs >= 0.0 {
+            secs
+        } else {
+            0.0
+        };
+        self.counts[Self::bucket(secs)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.min_bits.fetch_min(secs.to_bits(), Ordering::Relaxed);
+        self.max_bits.fetch_max(secs.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// The p-th percentile (nearest-rank over buckets, geometric bucket
+    /// midpoint, clamped to the observed min/max). None when empty.
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        let total = self.count();
+        if total == 0 {
+            return None;
+        }
+        let lo = f64::from_bits(self.min_bits.load(Ordering::Relaxed));
+        let hi = f64::from_bits(self.max_bits.load(Ordering::Relaxed));
+        // the tail percentiles are exact: p0/p100 are the observed extremes
+        // themselves, not a bucket midpoint near them
+        if p <= 0.0 {
+            return Some(lo);
+        }
+        if p >= 100.0 {
+            return Some(hi);
+        }
+        let rank = ((p.clamp(0.0, 100.0) / 100.0) * (total - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        let mut bucket = NBUCKETS - 1;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum > rank {
+                bucket = i;
+                break;
+            }
+        }
+        let mid = FLOOR_SECS * ((bucket as f64 + 0.5) / PER_OCTAVE).exp2();
+        Some(mid.clamp(lo, hi))
+    }
+}
+
+/// Per-priority-lane service counters + latency histogram. Lane latency is
+/// end-to-end (submit to completion: queue wait + solve), unlike the
+/// top-level solve-latency histogram.
+#[derive(Debug, Default)]
+pub struct LaneMetrics {
+    /// Jobs submitted on this lane.
+    pub submitted: AtomicUsize,
+    /// Jobs completed (ok or error — not shed) on this lane.
+    pub completed: AtomicUsize,
+    /// Jobs shed on this lane (deadline unmeetable or already missed).
+    pub shed: AtomicUsize,
+    /// End-to-end latency histogram (queue wait + solve).
+    pub latency: LatencyHistogram,
+}
+
+/// Service counters + latency histograms for the coordinator.
 #[derive(Debug, Default)]
 pub struct Metrics {
     /// Jobs accepted onto the worker pool.
@@ -12,6 +142,14 @@ pub struct Metrics {
     pub jobs_completed: AtomicUsize,
     /// Jobs that returned an error.
     pub jobs_failed: AtomicUsize,
+    /// Jobs shed by deadline policy (disjoint from failed: a shed is the
+    /// scheduler declining work, not the solver breaking).
+    pub jobs_shed: AtomicUsize,
+    /// Jobs that shared a coalescing group with at least one concurrent
+    /// same-key job.
+    pub coalesced_jobs: AtomicUsize,
+    /// Largest coalescing group observed (peak concurrent same-key jobs).
+    pub coalesce_batch_max: AtomicUsize,
     /// Trials executed across all jobs.
     pub trials_run: AtomicUsize,
     /// trials that started from a warm iterate (warm_start jobs, trial > 0)
@@ -25,10 +163,12 @@ pub struct Metrics {
     /// unconstrained no-ops excluded) — the constrained-workload
     /// throughput signal
     pub projections: AtomicU64,
+    /// Per-lane counters + end-to-end latency (indexed by [`Lane::idx`]).
+    pub lanes: [LaneMetrics; 3],
     /// total solve nanoseconds (across trials)
     solve_nanos: AtomicU64,
-    /// recent job latencies (seconds), bounded ring
-    latencies: Mutex<Vec<f64>>,
+    /// solve-latency histogram (per-job solve seconds)
+    latency: LatencyHistogram,
 }
 
 impl Metrics {
@@ -37,7 +177,7 @@ impl Metrics {
         Metrics::default()
     }
 
-    /// Record one finished job (latency, trial count, outcome).
+    /// Record one finished job (solve latency, trial count, outcome).
     pub fn record_job(&self, secs: f64, trials: usize, ok: bool) {
         if ok {
             self.jobs_completed.fetch_add(1, Ordering::Relaxed);
@@ -47,11 +187,31 @@ impl Metrics {
         self.trials_run.fetch_add(trials, Ordering::Relaxed);
         self.solve_nanos
             .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
-        let mut l = self.latencies.lock().unwrap();
-        if l.len() >= 4096 {
-            l.remove(0);
-        }
-        l.push(secs);
+        self.latency.record(secs);
+    }
+
+    /// Count one job submitted on `lane`.
+    pub fn record_lane_submit(&self, lane: Lane) {
+        self.lanes[lane.idx()].submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one job completing on `lane` with end-to-end latency `secs`.
+    pub fn record_lane_done(&self, lane: Lane, secs: f64) {
+        self.lanes[lane.idx()].completed.fetch_add(1, Ordering::Relaxed);
+        self.lanes[lane.idx()].latency.record(secs);
+    }
+
+    /// Count one job shed by deadline policy on `lane`.
+    pub fn record_shed(&self, lane: Lane) {
+        self.jobs_shed.fetch_add(1, Ordering::Relaxed);
+        self.lanes[lane.idx()].shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one job leaving a coalescing group whose peak concurrent
+    /// membership was `batch` (only called when batch > 1).
+    pub fn record_coalesced(&self, batch: usize) {
+        self.coalesced_jobs.fetch_add(1, Ordering::Relaxed);
+        self.coalesce_batch_max.fetch_max(batch, Ordering::Relaxed);
     }
 
     /// Count one warm-started trial.
@@ -75,22 +235,27 @@ impl Metrics {
         self.solve_nanos.load(Ordering::Relaxed) as f64 / 1e9
     }
 
-    /// The p-th percentile of recent job latencies (None when empty).
+    /// The p-th percentile of job solve latencies (None when empty).
+    /// Histogram-resolved: exact to within a quarter-octave bucket
+    /// (≈ ±9% relative), clamped to the observed min/max.
     pub fn latency_percentile(&self, p: f64) -> Option<f64> {
-        let l = self.latencies.lock().unwrap();
-        if l.is_empty() {
-            return None;
-        }
-        Some(crate::util::stats::percentile(&l, p))
+        self.latency.percentile(p)
+    }
+
+    /// The p-th percentile of end-to-end latency on one lane.
+    pub fn lane_latency_percentile(&self, lane: Lane, p: f64) -> Option<f64> {
+        self.lanes[lane.idx()].latency.percentile(p)
     }
 
     /// One-line human-readable summary (the serve `metrics` command).
     pub fn snapshot(&self) -> String {
         format!(
-            "jobs: submitted={} completed={} failed={} trials={} warm_starts={} sparse_jobs={} sparse_nnz={} projections={} solve_time={:.2}s p50={} p99={}",
+            "jobs: submitted={} completed={} failed={} shed={} coalesced={} trials={} warm_starts={} sparse_jobs={} sparse_nnz={} projections={} solve_time={:.2}s p50={} p99={}",
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
+            self.jobs_shed.load(Ordering::Relaxed),
+            self.coalesced_jobs.load(Ordering::Relaxed),
             self.trials_run.load(Ordering::Relaxed),
             self.warm_starts.load(Ordering::Relaxed),
             self.sparse_jobs.load(Ordering::Relaxed),
@@ -122,7 +287,12 @@ mod tests {
         assert_eq!(m.jobs_failed.load(Ordering::Relaxed), 1);
         assert_eq!(m.trials_run.load(Ordering::Relaxed), 21);
         assert!((m.total_solve_secs() - 4.5).abs() < 1e-6);
-        assert_eq!(m.latency_percentile(50.0), Some(1.0));
+        // histogram percentile: within a quarter-octave of the true median
+        let p50 = m.latency_percentile(50.0).unwrap();
+        assert!((p50 - 1.0).abs() < 0.12, "p50={p50}");
+        // tails clamp to observed extremes exactly
+        assert_eq!(m.latency_percentile(0.0), Some(0.5));
+        assert_eq!(m.latency_percentile(100.0), Some(3.0));
         m.record_warm_start();
         m.record_sparse_job(1234);
         m.record_sparse_job(766);
@@ -134,11 +304,84 @@ mod tests {
         assert!(snap.contains("sparse_jobs=2"), "{snap}");
         assert!(snap.contains("sparse_nnz=2000"), "{snap}");
         assert!(snap.contains("projections=541"), "{snap}");
+        assert!(snap.contains("shed=0"), "{snap}");
+        assert!(snap.contains("coalesced=0"), "{snap}");
     }
 
     #[test]
     fn empty_percentile_is_none() {
         let m = Metrics::new();
         assert!(m.latency_percentile(50.0).is_none());
+        assert!(m.lane_latency_percentile(Lane::High, 50.0).is_none());
+    }
+
+    #[test]
+    fn histogram_percentiles_track_known_distribution() {
+        let h = LatencyHistogram::new();
+        // 100 samples: 1ms .. 100ms uniform
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile(50.0).unwrap();
+        assert!(
+            (p50 - 0.0505).abs() / 0.0505 < 0.10,
+            "p50={p50}, want ~50.5ms within bucket resolution"
+        );
+        let p99 = h.percentile(99.0).unwrap();
+        assert!(
+            (0.090..=0.100).contains(&p99),
+            "p99={p99}, want ~99ms within bucket resolution"
+        );
+        // constant distributions are exact (min/max clamping)
+        let c = LatencyHistogram::new();
+        for _ in 0..32 {
+            c.record(0.25);
+        }
+        assert_eq!(c.percentile(50.0), Some(0.25));
+        assert_eq!(c.percentile(99.0), Some(0.25));
+    }
+
+    #[test]
+    fn histogram_handles_extremes_without_panicking() {
+        let h = LatencyHistogram::new();
+        h.record(0.0);
+        h.record(1e-9); // below floor: bucket 0
+        h.record(1e9); // beyond range: clamped to last bucket
+        h.record(f64::NAN); // sanitized to 0
+        h.record(-1.0); // sanitized to 0
+        assert_eq!(h.count(), 5);
+        let p100 = h.percentile(100.0).unwrap();
+        assert_eq!(p100, 1e9, "max clamp keeps the tail exact");
+        assert_eq!(h.percentile(0.0), Some(0.0));
+    }
+
+    #[test]
+    fn lane_metrics_record_and_report() {
+        let m = Metrics::new();
+        m.record_lane_submit(Lane::High);
+        m.record_lane_submit(Lane::High);
+        m.record_lane_submit(Lane::Batch);
+        m.record_lane_done(Lane::High, 0.010);
+        m.record_lane_done(Lane::High, 0.012);
+        m.record_shed(Lane::Batch);
+        assert_eq!(m.lanes[Lane::High.idx()].submitted.load(Ordering::Relaxed), 2);
+        assert_eq!(m.lanes[Lane::High.idx()].completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.lanes[Lane::Batch.idx()].shed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.jobs_shed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.jobs_failed.load(Ordering::Relaxed), 0, "shed is not failed");
+        let p50 = m.lane_latency_percentile(Lane::High, 50.0).unwrap();
+        assert!((0.009..=0.013).contains(&p50), "p50={p50}");
+        assert!(m.lane_latency_percentile(Lane::Normal, 50.0).is_none());
+    }
+
+    #[test]
+    fn coalesce_counters_track_peak() {
+        let m = Metrics::new();
+        m.record_coalesced(3);
+        m.record_coalesced(8);
+        m.record_coalesced(2);
+        assert_eq!(m.coalesced_jobs.load(Ordering::Relaxed), 3);
+        assert_eq!(m.coalesce_batch_max.load(Ordering::Relaxed), 8);
     }
 }

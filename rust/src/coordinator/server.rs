@@ -7,9 +7,10 @@
 //!   {"cmd": "ping"}    -> {"ok": true}
 //!   {"cmd": "quit"}    -> closes the connection
 
-use super::job::JobRequest;
+use super::job::{is_shed_error, JobRequest};
 use super::scheduler::Coordinator;
 use crate::util::json::Json;
+use crate::util::threadpool::Lane;
 use anyhow::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -136,6 +137,44 @@ pub fn handle_connection<R: BufRead, W: Write + Send + 'static>(
                             Json::num(coord.mem_budget().rejections() as f64),
                         ),
                     ];
+                    // serve-tier QoS: shed/coalesce totals plus one nested
+                    // object per priority lane (counts, live queue depth,
+                    // end-to-end percentiles; -1 = no samples yet) and the
+                    // stealing pool's migration count
+                    let load = |v: usize| Json::num(v as f64);
+                    let m = &coord.metrics;
+                    let ord = std::sync::atomic::Ordering::Relaxed;
+                    fields.push(("jobs_shed", load(m.jobs_shed.load(ord))));
+                    fields.push(("coalesced_jobs", load(m.coalesced_jobs.load(ord))));
+                    fields.push((
+                        "coalesce_batch_max",
+                        load(m.coalesce_batch_max.load(ord)),
+                    ));
+                    fields.push(("pool_steals", load(coord.pool_steals())));
+                    fields.push((
+                        "precond_wait_joins",
+                        load(cache.wait_joins()),
+                    ));
+                    let lane_obj = |lane: Lane| {
+                        let lm = &m.lanes[lane.idx()];
+                        let pct = |p: f64| {
+                            m.lane_latency_percentile(lane, p)
+                                .map(|secs| secs * 1e3)
+                                .unwrap_or(-1.0)
+                        };
+                        Json::obj(vec![
+                            ("submitted", load(lm.submitted.load(ord))),
+                            ("completed", load(lm.completed.load(ord))),
+                            ("shed", load(lm.shed.load(ord))),
+                            ("queued", load(coord.queue_depth(lane))),
+                            ("p50_ms", Json::num(pct(50.0))),
+                            ("p95_ms", Json::num(pct(95.0))),
+                            ("p99_ms", Json::num(pct(99.0))),
+                        ])
+                    };
+                    fields.push(("lane_high", lane_obj(Lane::High)));
+                    fields.push(("lane_normal", lane_obj(Lane::Normal)));
+                    fields.push(("lane_batch", lane_obj(Lane::Batch)));
                     if let Some(reason) = be.pjrt_fallback_reason() {
                         fields.push(("pjrt_fallback", Json::str(reason)));
                     }
@@ -154,11 +193,23 @@ pub fn handle_connection<R: BufRead, W: Write + Send + 'static>(
         match JobRequest::from_json(&parsed) {
             Ok(req) => {
                 let tx = tx.clone();
+                let id = req.id;
                 coord.submit(req, move |res| {
                     let line = match res {
                         Ok(r) => r.to_json().to_string(),
                         Err(e) => {
-                            Json::obj(vec![("error", Json::str(format!("{e}")))]).to_string()
+                            // full chain ({:#}): a shed's cause line carries
+                            // the estimate-vs-deadline numbers clients need
+                            let mut fields = vec![
+                                ("error", Json::str(format!("{e:#}"))),
+                                ("id", Json::num(id as f64)),
+                            ];
+                            if is_shed_error(&e) {
+                                // structured flag: clients retry sheds on a
+                                // slower lane; real errors they surface
+                                fields.push(("shed", Json::Bool(true)));
+                            }
+                            Json::obj(fields).to_string()
                         }
                     };
                     let _ = tx.send(line);
@@ -261,6 +312,7 @@ mod tests {
             "precond_evictions",
             "precond_entries",
             "precond_bytes",
+            "precond_wait_joins",
             "warm_starts",
             "sparse_jobs",
             "sparse_nnz",
@@ -270,9 +322,73 @@ mod tests {
             "mem_limit_bytes",
             "densify_events",
             "mem_rejections",
+            "jobs_shed",
+            "coalesced_jobs",
+            "coalesce_batch_max",
+            "pool_steals",
         ] {
             assert!(out[1].get(field).and_then(Json::as_f64).is_some(), "{field}");
         }
+        // one nested QoS object per priority lane
+        for lane in ["lane_high", "lane_normal", "lane_batch"] {
+            let obj = out[1].get(lane).unwrap_or_else(|| panic!("{lane} missing"));
+            for sub in [
+                "submitted",
+                "completed",
+                "shed",
+                "queued",
+                "p50_ms",
+                "p95_ms",
+                "p99_ms",
+            ] {
+                assert!(obj.get(sub).and_then(Json::as_f64).is_some(), "{lane}.{sub}");
+            }
+        }
+    }
+
+    #[test]
+    fn deadline_shed_over_wire_is_structured() {
+        // deadline well under any queue+dispatch latency: the job is shed
+        // (submit- or start-time), never run, and the error line is marked
+        let req = r#"{"id":7,"solver":"exact","dataset":"syn2","n":512,"priority":"batch","deadline_ms":0.0001}"#;
+        let out = run_session(&format!("{req}\n"));
+        assert_eq!(out.len(), 1, "{out:?}");
+        let line = &out[0];
+        assert_eq!(line.get("shed").and_then(Json::as_bool), Some(true), "{line:?}");
+        assert_eq!(line.get("id").and_then(Json::as_f64), Some(7.0));
+        let msg = line.get("error").and_then(Json::as_str).unwrap();
+        assert!(msg.contains("deadline"), "{msg}");
+        assert!(msg.contains("batch"), "shed names its lane: {msg}");
+        // a genuine job error is NOT flagged as a shed
+        let bad = r#"{"id":8,"solver":"exact","dataset":"mystery"}"#;
+        let out2 = run_session(&format!("{bad}\n"));
+        assert!(out2[0].get("error").is_some());
+        assert_eq!(out2[0].get("id").and_then(Json::as_f64), Some(8.0));
+        assert!(out2[0].get("shed").is_none(), "{out2:?}");
+    }
+
+    #[test]
+    fn priority_field_routes_over_wire() {
+        let hi = r#"{"solver":"exact","dataset":"syn2","n":512,"priority":"high"}"#;
+        let ba = r#"{"solver":"exact","dataset":"syn2","n":512,"priority":"batch"}"#;
+        let out = run_session(&format!("{hi}\n{ba}\n{{\"cmd\":\"metrics\"}}\n"));
+        assert_eq!(out.len(), 3, "{out:?}");
+        // both jobs solve; the metrics cmd is inline so we assert lane
+        // submit counts (recorded synchronously at submit) only
+        let metrics = out
+            .iter()
+            .find(|j| j.get("lane_high").is_some())
+            .expect("metrics line");
+        let sub = |lane: &str| {
+            metrics
+                .get(lane)
+                .and_then(|o| o.get("submitted"))
+                .and_then(Json::as_f64)
+                .unwrap()
+        };
+        assert_eq!(sub("lane_high"), 1.0);
+        assert_eq!(sub("lane_batch"), 1.0);
+        assert_eq!(sub("lane_normal"), 0.0);
     }
 
     #[test]

@@ -60,7 +60,7 @@
 //! `#![warn(missing_docs)]` is enforced (CI runs `cargo doc` with
 //! `RUSTDOCFLAGS="-D warnings"`) on the crate's primary public surface —
 //! [`constraints`], [`prox`], [`precond`], [`solvers`], [`coordinator`],
-//! [`util`], [`linalg`], [`simd`].
+//! [`util`], [`linalg`], [`simd`], [`backend`].
 //! Modules carrying an explicit `#[allow(missing_docs)]` predate the gate;
 //! documenting them is an open ROADMAP item, and the allow is removed per
 //! module as its surface is finished.
@@ -80,7 +80,6 @@ pub mod data;
 pub mod solvers;
 #[allow(missing_docs)]
 pub mod runtime;
-#[allow(missing_docs)]
 pub mod backend;
 pub mod coordinator;
 #[allow(missing_docs)]

@@ -105,6 +105,11 @@ fn cmd_solve(argv: &[String]) -> i32 {
         .opt("eta", "fixed step size (default: theory)")
         .opt("executor", "default|native|simd|auto|pjrt (per-request backend)")
         .opt("block-rows", "row-shard height for streamed setup (default auto)")
+        .opt("priority", "high|normal|batch scheduler lane (default normal)")
+        .opt(
+            "deadline-ms",
+            "shed the job (structured error) if it cannot start in time (0 = no deadline)",
+        )
         .opt(
             "mem-mb",
             "memory budget for dense materializations in MiB (0 = unlimited; HDPW_MEM_MB default)",
@@ -139,6 +144,10 @@ fn cmd_solve(argv: &[String]) -> i32 {
     req.eta = args.get_f64("eta", 0.0);
     req.executor = args.get_or("executor", "default");
     req.block_rows = args.get_usize("block-rows", 0);
+    if let Some(p) = args.get("priority") {
+        req.priority = p.to_string();
+    }
+    req.deadline_ms = args.get_f64("deadline-ms", req.deadline_ms);
     // default honors the HDPW_FORMAT process default baked into the request
     if let Some(fmt) = args.get("format") {
         req.format = fmt.to_string();
@@ -159,19 +168,28 @@ fn cmd_solve(argv: &[String]) -> i32 {
     };
     let pjrt = backend.has_pjrt();
     let fallback = backend.pjrt_fallback_reason();
-    let coord = Coordinator::new(backend, CoordinatorConfig::default());
-    match coord.run_job(&req) {
+    let coord = Arc::new(Coordinator::new(backend, CoordinatorConfig::default()));
+    // route through the serve-tier submit path so --priority/--deadline-ms
+    // get the same lane routing + deadline shedding a served request would
+    let n = req.n;
+    let executor = req.executor.clone();
+    let (tx, rx) = std::sync::mpsc::channel();
+    coord.submit(req, move |res| {
+        let _ = tx.send(res);
+    });
+    let result = rx.recv().expect("the worker pool delivers a result");
+    match result {
         Ok(res) => {
             if args.flag("json") {
                 println!("{}", res.to_json());
             } else {
                 println!("solver     : {}", res.solver);
-                println!("dataset    : {} (n={})", res.dataset, req.n);
+                println!("dataset    : {} (n={})", res.dataset, n);
                 // reflect the effective per-request executor, not just the
                 // process-wide backend
                 println!(
                     "backend    : {}",
-                    match req.executor.as_str() {
+                    match executor.as_str() {
                         "native" => "native (forced per-request)",
                         "simd" => "simd+native (forced per-request)",
                         _ if pjrt => "pjrt+native",
@@ -430,6 +448,11 @@ fn cmd_bench_info(_argv: &[String]) -> i32 {
     println!(
         "threads        : {}",
         hdpw::util::threadpool::default_threads()
+    );
+    println!(
+        "pool fallbacks : {} (busy data-parallel pool ran a loop serially \
+         inline; a hot counter means nested parallelism is eating cores)",
+        hdpw::util::threadpool::static_pool().serial_fallbacks()
     );
     println!(
         "block heuristic: {} rows for a 2^17 x 50 workload",

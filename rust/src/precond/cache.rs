@@ -89,6 +89,11 @@ struct Inner {
 }
 
 /// Byte-budgeted LRU of shared preconditioner artifacts.
+///
+/// The single-flight claim here is also the engine behind the scheduler's
+/// request coalescing: every concurrent same-key job beyond the first
+/// blocks in [`PrecondCache::wait_for`] and adopts the one computed
+/// artifact, so a coalesced batch pays for exactly one setup.
 pub struct PrecondCache {
     budget: usize,
     inner: Mutex<Inner>,
@@ -97,6 +102,10 @@ pub struct PrecondCache {
     misses: AtomicUsize,
     evictions: AtomicUsize,
     inserts: AtomicUsize,
+    /// Times a caller actually blocked in `wait_for` behind an in-flight
+    /// compute — the "setup computations saved by coalescing" signal
+    /// (hits measure reuse over time; this measures concurrent sharing).
+    wait_joins: AtomicUsize,
 }
 
 /// Result of a single-flight lookup.
@@ -158,6 +167,7 @@ impl PrecondCache {
             misses: AtomicUsize::new(0),
             evictions: AtomicUsize::new(0),
             inserts: AtomicUsize::new(0),
+            wait_joins: AtomicUsize::new(0),
         }
     }
 
@@ -251,8 +261,13 @@ impl PrecondCache {
 
     /// Block until `key` is no longer being computed (published or
     /// abandoned), then return so the caller can retry `lookup_or_claim`.
+    /// Counts one wait-join when the caller actually blocks — the number of
+    /// setup computations concurrent sharing (request coalescing) saved.
     pub fn wait_for(&self, key: &PrecondKey) {
         let mut g = self.inner.lock().unwrap();
+        if g.in_flight.contains(key) {
+            self.wait_joins.fetch_add(1, Ordering::Relaxed);
+        }
         while g.in_flight.contains(key) {
             g = self.cv.wait(g).unwrap();
         }
@@ -306,6 +321,12 @@ impl PrecondCache {
     /// Total inserts (including same-key replacements).
     pub fn inserts(&self) -> usize {
         self.inserts.load(Ordering::Relaxed)
+    }
+
+    /// Callers that blocked behind another caller's in-flight compute of
+    /// the same key (setups saved by concurrent sharing / coalescing).
+    pub fn wait_joins(&self) -> usize {
+        self.wait_joins.load(Ordering::Relaxed)
     }
 
     /// Artifacts currently resident.
