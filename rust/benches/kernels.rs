@@ -359,6 +359,118 @@ fn main() {
             Ok(()) => println!("mem trajectory artifact: {mem_path}"),
             Err(e) => println!("mem trajectory artifact NOT written: {e}"),
         }
+
+        // ---- sparse IHS step 2: dense-HD materialize vs implicit gather ----
+        // The HD solver family no longer materializes the padded [A | b]
+        // buffer on CSR inputs: sampled rows of HD[A|b] are evaluated on
+        // demand from the CSR payload in O(nnz + n) each. Both sides of the
+        // flops-for-memory trade priced at the same workload — the one-time
+        // buffer + full FWHT (n_pad*(d+1)*8 bytes resident) against the
+        // per-batch implicit gather — plus the break-even batch count where
+        // amortizing the FWHT would win on wall clock alone.
+        let n_pad = hdpw::linalg::matrix::next_pow2(n);
+        let ihs_buffer_bytes = hdpw::precond::hd_buffer_bytes(n, d);
+        let mut dense_hd_rng = rng.fork(45);
+        let st_hd_dense = BenchStats::run("ihs step2 dense-hd buffer+fwht 2^20x100", 1, 2, || {
+            let budget = hdpw::util::mem::MemBudget::unlimited();
+            let mut r = dense_hd_rng.fork(1);
+            std::hint::black_box(
+                hdpw::precond::hd_transform_ds_with(
+                    &be,
+                    &lazy,
+                    &mut r,
+                    &budget,
+                    "bench ihs dense-hd",
+                )
+                .expect("unlimited budget"),
+            );
+        });
+        println!("{}", st_hd_dense.report());
+        let mut imp_rng = rng.fork(46);
+        let st_imp_setup = BenchStats::run("ihs step2 implicit setup (signs only)", 2, 8, || {
+            let mut r = imp_rng.fork(1);
+            std::hint::black_box(hdpw::precond::hd_implicit_ds(&lazy, &mut r));
+        });
+        println!("{}", st_imp_setup.report());
+        // one materialized transform + one implicit handle drawn from the
+        // same rng stream position, for the gather timings and a row-level
+        // parity check (the replay-parity contract the solvers rely on)
+        let hd = {
+            let budget = hdpw::util::mem::MemBudget::unlimited();
+            let mut r = rng.fork(47);
+            hdpw::precond::hd_transform_ds_with(&be, &lazy, &mut r, &budget, "bench ihs parity")
+                .expect("unlimited budget")
+        };
+        let ihd = {
+            let mut r = rng.fork(47);
+            hdpw::precond::hd_implicit_ds(&lazy, &mut r)
+        };
+        let batch_r = 256usize;
+        let mut idx_rng = rng.fork(48);
+        let idx: Vec<usize> = (0..batch_r).map(|_| idx_rng.below(n_pad)).collect();
+        let st_imp_gather = BenchStats::run("ihs step2 implicit gather r=256", 1, 3, || {
+            std::hint::black_box(ihd.gather_rows_csr(csr, &lazy.b, &idx));
+        });
+        println!("{}", st_imp_gather.report());
+        let st_dense_gather = BenchStats::run("ihs step2 dense    gather r=256", 2, 8, || {
+            let rows = hd.hda.gather_rows(&idx);
+            let rhs: Vec<f64> = idx.iter().map(|&i| hd.hdb[i]).collect();
+            std::hint::black_box((rows, rhs));
+        });
+        println!("{}", st_dense_gather.report());
+        let (ga, gb) = ihd.gather_rows_csr(csr, &lazy.b, &idx);
+        let da = hd.hda.gather_rows(&idx);
+        let mut parity = ga.max_abs_diff(&da);
+        for (i, &src) in idx.iter().enumerate() {
+            parity = parity.max((gb[i] - hd.hdb[src]).abs());
+        }
+        assert!(parity < 1e-9, "implicit/dense HD row parity: {parity}");
+        // break-even: #batches at which (dense one-time cost + cheap dense
+        // gathers) catches up with paying the implicit gather every batch
+        let per_gather_gap =
+            (st_imp_gather.median_secs() - st_dense_gather.median_secs()).max(1e-12);
+        let break_even = st_hd_dense.median_secs() / per_gather_gap;
+        println!(
+            "ihs step2 trade: buffer={ihs_buffer_bytes} bytes held vs 0; \
+             break-even ~{break_even:.0} gathers of r={batch_r} \
+             (parity {parity:.2e})"
+        );
+        let ihs_json = hdpw::util::json::Json::obj(vec![
+            ("workload", hdpw::util::json::Json::str(format!("{n}x{d}@0.01"))),
+            ("n_pad", hdpw::util::json::Json::num(n_pad as f64)),
+            ("nnz", hdpw::util::json::Json::num(csr.nnz() as f64)),
+            (
+                "hd_buffer_bytes",
+                hdpw::util::json::Json::num(ihs_buffer_bytes as f64),
+            ),
+            (
+                "dense_hd_secs",
+                hdpw::util::json::Json::num(st_hd_dense.median_secs()),
+            ),
+            (
+                "implicit_setup_secs",
+                hdpw::util::json::Json::num(st_imp_setup.median_secs()),
+            ),
+            ("batch_r", hdpw::util::json::Json::num(batch_r as f64)),
+            (
+                "implicit_gather_secs",
+                hdpw::util::json::Json::num(st_imp_gather.median_secs()),
+            ),
+            (
+                "dense_gather_secs",
+                hdpw::util::json::Json::num(st_dense_gather.median_secs()),
+            ),
+            (
+                "break_even_batches",
+                hdpw::util::json::Json::num(break_even),
+            ),
+            ("gather_parity_max_diff", hdpw::util::json::Json::num(parity)),
+        ]);
+        let ihs_path = "BENCH_ihs_sparse.json";
+        match std::fs::write(ihs_path, format!("{ihs_json}\n")) {
+            Ok(()) => println!("sparse-IHS trade artifact: {ihs_path}"),
+            Err(e) => println!("sparse-IHS trade artifact NOT written: {e}"),
+        }
     }
 
     // ---- QR + triangular ------------------------------------------------------

@@ -428,6 +428,11 @@ pub struct JobResult {
     /// 1 = ran alone; > 1 = setup/artifact work was amortized across the
     /// group while per-job trial RNG streams stayed independent.
     pub coalesced_batch: usize,
+    /// Warm-start outcome of the best trial: "off" (not requested) |
+    /// "used" (started from a prior iterate) | "rejected-dim" (a supplied
+    /// x0 had the wrong dimension and the trial cold-started — previously
+    /// a silent zero fallback).
+    pub warm_start: String,
     /// The best trial's full report (iterate, trace, cache outcome).
     pub best: SolveReport,
 }
@@ -469,6 +474,7 @@ impl JobResult {
             ("mem_peak_bytes", Json::num(self.mem_peak_bytes as f64)),
             ("densify_events", Json::num(self.densify_events as f64)),
             ("coalesced_batch", Json::num(self.coalesced_batch as f64)),
+            ("warm_start", Json::str(self.warm_start.clone())),
             ("iters", Json::num(self.best.iters as f64)),
             ("setup_secs", Json::num(self.best.setup_secs)),
             ("solve_secs", Json::num(self.best.solve_secs)),

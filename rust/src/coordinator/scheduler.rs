@@ -146,13 +146,19 @@ impl Coordinator {
     }
 
     /// Admission-control estimate of a job's budget-tracked materialization
-    /// bytes: the HD solvers charge one padded `[A | b]` FWHT buffer
-    /// ([`crate::precond::hd_buffer_bytes`] — the same formula the actual
-    /// charge uses) per resident artifact; every other solver is
-    /// step-1-only (or CGLS exact) and charges nothing. The estimate
-    /// deliberately ignores untracked allocations (iterates, sketches —
-    /// O(sd + d^2), negligible next to the n-sized buffer).
-    pub fn job_mem_estimate(solver: &str, n: usize, d: usize) -> usize {
+    /// bytes: the HD solvers on *dense* datasets charge one padded `[A | b]`
+    /// FWHT buffer ([`crate::precond::hd_buffer_bytes`] — the same formula
+    /// the actual charge uses) per resident artifact. On CSR datasets the
+    /// HD step is held implicitly (signs only, sampled rows evaluated on
+    /// demand), so those jobs charge nothing — estimating the dense buffer
+    /// for them would reject sparse jobs the budget trivially fits. Every
+    /// other solver is step-1-only (or CGLS exact) and charges nothing. The
+    /// estimate deliberately ignores untracked allocations (iterates,
+    /// sketches — O(sd + d^2), negligible next to the n-sized buffer).
+    pub fn job_mem_estimate(solver: &str, n: usize, d: usize, sparse: bool) -> usize {
+        if sparse {
+            return 0;
+        }
         let canonical = crate::solvers::by_name(solver)
             .map(|s| s.name().to_string())
             .unwrap_or_default();
@@ -431,7 +437,7 @@ impl Coordinator {
         // fit is rejected up front; one that would fit but not *now* queues
         // (bounded by its own time budget) for headroom instead of racing
         // other jobs into the budget and failing mid-solve.
-        let mut mem_est = Self::job_mem_estimate(&req.solver, ds.n(), ds.d());
+        let mut mem_est = Self::job_mem_estimate(&req.solver, ds.n(), ds.d(), ds.is_sparse());
         if let Some(key) = coalesce_key.as_ref().filter(|_| mem_est > 0) {
             // cache-aware: a resident two-step artifact (whose HD bytes are
             // already charged for as long as it is cached) means this job
@@ -517,6 +523,7 @@ impl Coordinator {
             mem_peak_bytes: self.mem.peak(),
             densify_events: self.mem.densify_events() - densify_before,
             coalesced_batch,
+            warm_start: best.warm_start.clone(),
             best,
         })
     }
@@ -874,7 +881,11 @@ mod tests {
                 ..CoordinatorConfig::default()
             },
         ));
+        // pinned dense: only the dense HD path materializes the charged
+        // buffer this test exercises (the sparse CI variant flips the
+        // default format, where the estimate is rightly 0)
         let mut req = small_req("hdpwbatchsgd");
+        req.format = "dense".into();
         req.n = 16_384;
         let err = c.run_job(&req).unwrap_err();
         assert!(
@@ -883,17 +894,20 @@ mod tests {
         );
         // a step-1-only solver estimates 0 and runs inside the same budget
         let mut ok = small_req("pwgradient");
+        ok.format = "dense".into();
         ok.n = 1024;
         let res = c.run_job(&ok).unwrap();
         assert_eq!(res.mem_est_bytes, 0);
         assert_eq!(res.densify_events, 0);
         // the estimate matches the HD buffer formula
         assert_eq!(
-            Coordinator::job_mem_estimate("hdpw", 1000, 20),
+            Coordinator::job_mem_estimate("hdpw", 1000, 20, false),
             1024 * 21 * 8
         );
-        assert_eq!(Coordinator::job_mem_estimate("sgd", 1000, 20), 0);
-        assert_eq!(Coordinator::job_mem_estimate("exact", 1000, 20), 0);
+        assert_eq!(Coordinator::job_mem_estimate("sgd", 1000, 20, false), 0);
+        assert_eq!(Coordinator::job_mem_estimate("exact", 1000, 20, false), 0);
+        // CSR datasets hold HD implicitly: no buffer, no estimate
+        assert_eq!(Coordinator::job_mem_estimate("hdpw", 1000, 20, true), 0);
     }
 
     #[test]
@@ -913,6 +927,7 @@ mod tests {
             },
         ));
         let mut req = small_req("hdpwbatchsgd");
+        req.format = "dense".into();
         req.n = 4096;
         req.max_iters = 100;
         req.reuse_precond = true;
@@ -938,6 +953,33 @@ mod tests {
     }
 
     #[test]
+    fn admission_charges_nothing_for_hd_jobs_on_csr() {
+        // the pre-fix estimate charged n_pad*(d+1)*8 for ANY HD job: a
+        // sparse n=16384 job (whose implicit step 2 materializes nothing)
+        // would be rejected by a 1 MiB budget it trivially fits. The
+        // representation-aware estimate admits it with estimate 0, and the
+        // solve really does densify nothing.
+        let c = Arc::new(Coordinator::new(
+            Backend::native(),
+            CoordinatorConfig {
+                workers: 1,
+                max_queue: 4,
+                mem_budget: crate::util::mem::MemBudget::with_limit_mb(1),
+                ..CoordinatorConfig::default()
+            },
+        ));
+        let mut req = small_req("hdpwbatchsgd");
+        req.format = "sparse".into();
+        req.n = 16_384;
+        req.max_iters = 100;
+        let res = c.run_job(&req).unwrap();
+        assert!(res.sparse);
+        assert_eq!(res.mem_est_bytes, 0, "implicit HD estimates nothing");
+        assert_eq!(res.densify_events, 0, "and the solve densifies nothing");
+        assert_eq!(c.mem_budget().used(), 0);
+    }
+
+    #[test]
     fn admission_sheds_idle_cached_artifacts_under_pressure() {
         // different-key HD jobs: job A's cached artifact pins ~688 KB of a
         // 1 MiB budget; job B (different seed => different key) cannot fit
@@ -954,6 +996,7 @@ mod tests {
             },
         ));
         let mut req_a = small_req("hdpwbatchsgd");
+        req_a.format = "dense".into();
         req_a.n = 4096;
         req_a.max_iters = 100;
         req_a.reuse_precond = true;

@@ -68,6 +68,7 @@ impl<'a> RowBlocks<'a> {
         RowBlocks::new(mat, default_block_rows(mat.rows, mat.cols))
     }
 
+    /// Rows per shard (the last shard may be shorter).
     pub fn block_rows(&self) -> usize {
         self.block_rows
     }

@@ -36,7 +36,9 @@ use std::sync::{Arc, OnceLock};
 /// Which representation a design matrix is resident in.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Repr {
+    /// Row-major dense payload ([`Mat`]).
     Dense,
+    /// Compressed sparse rows ([`CsrMat`]); no dense mirror until requested.
     Csr,
 }
 
@@ -75,7 +77,9 @@ pub struct DesignMatrix {
 /// resident representation when one exists, otherwise a budget-charged copy
 /// released (bytes and all) on drop.
 pub enum DenseView<'a> {
+    /// Borrowed from a resident dense payload or mirror — free.
     Borrowed(&'a Mat),
+    /// A transient budget-charged copy; bytes release when this drops.
     Owned(Mat, Option<MemCharge>),
 }
 
@@ -90,12 +94,15 @@ impl std::ops::Deref for DenseView<'_> {
 }
 
 impl DesignMatrix {
+    /// Wrap a dense payload; dense views are always free.
     pub fn from_dense(a: Mat) -> DesignMatrix {
         DesignMatrix {
             inner: Inner::Dense(a),
         }
     }
 
+    /// Wrap a CSR payload with no dense mirror (built lazily on capability
+    /// request).
     pub fn from_csr(csr: CsrMat) -> DesignMatrix {
         DesignMatrix {
             inner: Inner::Csr {
@@ -105,6 +112,7 @@ impl DesignMatrix {
         }
     }
 
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         match &self.inner {
             Inner::Dense(m) => m.rows,
@@ -112,6 +120,7 @@ impl DesignMatrix {
         }
     }
 
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         match &self.inner {
             Inner::Dense(m) => m.cols,
@@ -119,6 +128,7 @@ impl DesignMatrix {
         }
     }
 
+    /// The resident representation.
     pub fn repr(&self) -> Repr {
         match &self.inner {
             Inner::Dense(_) => Repr::Dense,

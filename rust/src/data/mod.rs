@@ -28,8 +28,11 @@ use std::sync::Arc;
 /// [`Dataset::dense_scoped`]). See DESIGN.md §11.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Human-readable dataset name (reports, cache keys, logs).
     pub name: String,
+    /// The design matrix `A`, in whichever representation it arrived in.
     pub design: DesignMatrix,
+    /// The response vector `b` (length `n`).
     pub b: Vec<f64>,
     /// Planted solution when known (synthetic data): for diagnostics only.
     pub x_star_planted: Option<Vec<f64>>,
@@ -71,10 +74,12 @@ impl Dataset {
         }
     }
 
+    /// Number of rows (samples) in the design matrix.
     pub fn n(&self) -> usize {
         self.design.rows()
     }
 
+    /// Number of columns (features) in the design matrix.
     pub fn d(&self) -> usize {
         self.design.cols()
     }

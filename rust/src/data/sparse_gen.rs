@@ -25,8 +25,11 @@ pub const DEFAULT_DENSITY: f64 = 0.1;
 /// Parameters for a sparse synthetic instance.
 #[derive(Clone, Debug)]
 pub struct SparseSpec {
+    /// Dataset name carried into the generated [`Dataset`].
     pub name: String,
+    /// Number of rows (samples).
     pub n: usize,
+    /// Number of columns (features).
     pub d: usize,
     /// Target nnz fraction; each row stores `max(1, round(density * d))`
     /// entries, so the realized density is `that / d`.

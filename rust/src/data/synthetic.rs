@@ -13,9 +13,13 @@ use crate::util::rng::Rng;
 /// Parameters for a synthetic instance.
 #[derive(Clone, Debug)]
 pub struct SynSpec {
+    /// Dataset name carried into the generated [`Dataset`].
     pub name: String,
+    /// Number of rows (samples).
     pub n: usize,
+    /// Number of columns (features).
     pub d: usize,
+    /// Exact target condition number of the generated design.
     pub kappa: f64,
     /// std-dev of the gaussian noise e in b = A x* + e (paper: 0.1)
     pub noise: f64,

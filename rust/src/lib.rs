@@ -60,7 +60,7 @@
 //! `#![warn(missing_docs)]` is enforced (CI runs `cargo doc` with
 //! `RUSTDOCFLAGS="-D warnings"`) on the crate's primary public surface —
 //! [`constraints`], [`prox`], [`precond`], [`solvers`], [`coordinator`],
-//! [`util`], [`linalg`], [`simd`], [`backend`].
+//! [`util`], [`linalg`], [`simd`], [`backend`], [`sketch`], [`data`].
 //! Modules carrying an explicit `#[allow(missing_docs)]` predate the gate;
 //! documenting them is an open ROADMAP item, and the allow is removed per
 //! module as its surface is finished.
@@ -70,12 +70,10 @@
 pub mod util;
 pub mod linalg;
 pub mod simd;
-#[allow(missing_docs)]
 pub mod sketch;
 pub mod prox;
 pub mod constraints;
 pub mod precond;
-#[allow(missing_docs)]
 pub mod data;
 pub mod solvers;
 #[allow(missing_docs)]

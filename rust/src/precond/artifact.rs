@@ -28,10 +28,13 @@
 //!   ([`PrecondArtifact::with_hd`]) without replaying the sketch draws.
 
 use super::cache::PrecondKey;
-use super::{hd_transform_ds_with, precondition_ds_budgeted, HdTransformed, Precondition};
+use super::{
+    hd_implicit_ds, hd_transform_ds_with, precondition_ds_budgeted, HdTransformed, ImplicitHd,
+    Precondition,
+};
 use crate::backend::Backend;
 use crate::data::Dataset;
-use crate::linalg::Mat;
+use crate::linalg::{CsrMat, Mat};
 use crate::prox::metric::MetricProjector;
 use crate::sketch::SketchKind;
 use crate::util::mem::{MemBudget, MemCharge, MemError};
@@ -79,8 +82,15 @@ pub struct PrecondArtifact {
     pub r: Mat,
     /// Dense R^{-1}R^{-T} applied to gradients (`r_inv_apply`).
     pub pinv: Mat,
-    /// Step-2 transform; `None` when only the step-1 factor was requested.
+    /// Step-2 transform in materialized (dense) form; `None` when only the
+    /// step-1 factor was requested — or when the dataset is sparse and the
+    /// transform is held implicitly instead (`hd_implicit`).
     pub hd: Option<HdParts>,
+    /// Step-2 transform in implicit form (sparse datasets): just the
+    /// Rademacher signs — sampled rows of `HD[A|b]` are materialized on
+    /// demand from the CSR payload ([`ImplicitHd::gather_rows_csr`]).
+    /// Mutually exclusive with `hd`.
+    pub hd_implicit: Option<ImplicitHd>,
     /// Construction metadata (what was sampled, what it cost).
     pub meta: ArtifactMeta,
     /// Lazily built H = R^T R eigendecomposition for constrained solves —
@@ -95,13 +105,18 @@ impl std::fmt::Debug for PrecondArtifact {
             .field("sketch", &self.meta.sketch_kind)
             .field("sketch_rows", &self.meta.sketch_rows)
             .field("has_hd", &self.hd.is_some())
+            .field("has_hd_implicit", &self.hd_implicit.is_some())
             .field("bytes", &self.bytes())
             .finish()
     }
 }
 
 impl PrecondArtifact {
-    fn from_parts(pre: Precondition, hd: Option<HdTransformed>) -> PrecondArtifact {
+    fn from_parts(
+        pre: Precondition,
+        hd: Option<HdTransformed>,
+        hd_implicit: Option<ImplicitHd>,
+    ) -> PrecondArtifact {
         PrecondArtifact {
             meta: ArtifactMeta {
                 sketch_kind: pre.sketch_kind,
@@ -118,6 +133,7 @@ impl PrecondArtifact {
                 secs: h.secs,
                 mem: h.mem,
             }),
+            hd_implicit,
             metric: Mutex::new(None),
         }
     }
@@ -142,13 +158,19 @@ impl PrecondArtifact {
     ) -> Result<PrecondArtifact, MemError> {
         let pre =
             precondition_ds_budgeted(backend, ds, kind, sketch_rows, rng, block_rows, budget)?;
-        let hd = if with_hd {
-            let stage = format!("hd_transform[{}]", ds.name);
-            Some(hd_transform_ds_with(backend, ds, rng, budget, &stage)?)
+        let (hd, hd_implicit) = if with_hd {
+            if ds.is_sparse() {
+                // sparse step 2 is implicit: same sign draws, zero densify,
+                // zero charge — the padded buffer is never built
+                (None, Some(hd_implicit_ds(ds, rng)))
+            } else {
+                let stage = format!("hd_transform[{}]", ds.name);
+                (Some(hd_transform_ds_with(backend, ds, rng, budget, &stage)?), None)
+            }
         } else {
-            None
+            (None, None)
         };
-        Ok(PrecondArtifact::from_parts(pre, hd))
+        Ok(PrecondArtifact::from_parts(pre, hd, hd_implicit))
     }
 
     /// Independent rng streams derived from the cache key: forking in a
@@ -182,13 +204,20 @@ impl PrecondArtifact {
             block_rows,
             budget,
         )?;
-        let hd = if with_hd {
-            let stage = format!("hd_transform[{}]", ds.name);
-            Some(hd_transform_ds_with(backend, ds, &mut hd_rng, budget, &stage)?)
+        let (hd, hd_implicit) = if with_hd {
+            if ds.is_sparse() {
+                (None, Some(hd_implicit_ds(ds, &mut hd_rng)))
+            } else {
+                let stage = format!("hd_transform[{}]", ds.name);
+                (
+                    Some(hd_transform_ds_with(backend, ds, &mut hd_rng, budget, &stage)?),
+                    None,
+                )
+            }
         } else {
-            None
+            (None, None)
         };
-        Ok(PrecondArtifact::from_parts(pre, hd))
+        Ok(PrecondArtifact::from_parts(pre, hd, hd_implicit))
     }
 
     /// Upgrade a step-1-only cached artifact with the HD transform, reusing
@@ -205,20 +234,50 @@ impl PrecondArtifact {
         budget: &Arc<MemBudget>,
     ) -> Result<PrecondArtifact, MemError> {
         let (_, mut hd_rng) = PrecondArtifact::keyed_rngs(key);
-        let stage = format!("hd_transform[{}]", ds.name);
-        let hd = hd_transform_ds_with(backend, ds, &mut hd_rng, budget, &stage)?;
+        let (hd, hd_implicit) = if ds.is_sparse() {
+            (None, Some(hd_implicit_ds(ds, &mut hd_rng)))
+        } else {
+            let stage = format!("hd_transform[{}]", ds.name);
+            let hd = hd_transform_ds_with(backend, ds, &mut hd_rng, budget, &stage)?;
+            (
+                Some(HdParts {
+                    hda: hd.hda,
+                    hdb: hd.hdb,
+                    n_pad: hd.n_pad,
+                    secs: hd.secs,
+                    mem: hd.mem,
+                }),
+                None,
+            )
+        };
         Ok(PrecondArtifact {
             r: self.r.clone(),
             pinv: self.pinv.clone(),
-            hd: Some(HdParts {
-                hda: hd.hda,
-                hdb: hd.hdb,
-                n_pad: hd.n_pad,
-                secs: hd.secs,
-                mem: hd.mem,
-            }),
+            hd,
+            hd_implicit,
             meta: self.meta,
             metric: Mutex::new(self.metric.lock().unwrap().clone()),
+        })
+    }
+
+    /// Whether step 2 is present in either form — the acquisition layer's
+    /// "does this artifact satisfy `with_hd`" check.
+    pub fn has_step2(&self) -> bool {
+        self.hd.is_some() || self.hd_implicit.is_some()
+    }
+
+    /// Borrow step 2 as a uniform row-sampling view: dense artifacts hand
+    /// out gathers of the materialized `HD[A|b]`; sparse artifacts
+    /// materialize sampled rows on demand from `ds`'s CSR payload. `None`
+    /// when the artifact is step-1-only.
+    pub fn hd_view<'a>(&'a self, ds: &'a Dataset) -> Option<HdView<'a>> {
+        if let Some(h) = &self.hd {
+            return Some(HdView::Dense(h));
+        }
+        self.hd_implicit.as_ref().map(|h| HdView::Implicit {
+            hd: h,
+            a: ds.csr().expect("implicit HD artifact requires a CSR dataset"),
+            b: &ds.b,
         })
     }
 
@@ -246,11 +305,59 @@ impl PrecondArtifact {
             .as_ref()
             .map(|h| h.hda.data.len() + h.hdb.len())
             .unwrap_or(0);
+        let hd_implicit = self
+            .hd_implicit
+            .as_ref()
+            .map(|h| h.signs.len())
+            .unwrap_or(0);
         let d = self.r.cols;
         let metric_reserve = d * d + d;
-        (self.r.data.len() + self.pinv.data.len() + hd + metric_reserve)
+        (self.r.data.len() + self.pinv.data.len() + hd + hd_implicit + metric_reserve)
             * std::mem::size_of::<f64>()
             + 128
+    }
+}
+
+/// A uniform borrow-view over step 2: the mini-batch solvers only ever
+/// *gather sampled rows* of `HD[A|b]`, so this is the whole interface —
+/// dense artifacts gather from the materialized transform, implicit
+/// (sparse) artifacts evaluate the sampled rows on demand in
+/// input-sparsity time. Keeping the solvers on this view is what lets the
+/// HD family run on CSR with zero densify events.
+pub enum HdView<'a> {
+    /// Materialized step 2 (dense datasets): gathers are row copies.
+    Dense(&'a HdParts),
+    /// Implicit step 2 (sparse datasets): gathers are O(nnz + n) signed
+    /// scatter passes per sampled row.
+    Implicit {
+        /// The sign vector + padded universe.
+        hd: &'a ImplicitHd,
+        /// The CSR design the rows are evaluated from.
+        a: &'a CsrMat,
+        /// The (untransformed) response vector.
+        b: &'a [f64],
+    },
+}
+
+impl HdView<'_> {
+    /// The padded sampling universe `n_pad`.
+    pub fn n_pad(&self) -> usize {
+        match self {
+            HdView::Dense(h) => h.n_pad,
+            HdView::Implicit { hd, .. } => hd.n_pad,
+        }
+    }
+
+    /// Materialize rows `idx` of `HD[A|b]` as a `idx.len() x d` design
+    /// block plus the matching responses.
+    pub fn gather(&self, idx: &[usize]) -> (Mat, Vec<f64>) {
+        match self {
+            HdView::Dense(h) => (
+                h.hda.gather_rows(idx),
+                idx.iter().map(|&i| h.hdb[i]).collect(),
+            ),
+            HdView::Implicit { hd, a, b } => hd.gather_rows_csr(a, b, idx),
+        }
     }
 }
 
@@ -394,6 +501,56 @@ mod tests {
         )
         .unwrap();
         assert!(art.hd.is_none());
+    }
+
+    #[test]
+    fn implicit_gather_matches_dense_transform_rows() {
+        // same key on the dense and CSR copies of one dataset: the implicit
+        // view must reproduce the materialized HD rows up to fp
+        // re-association, while charging nothing and never densifying
+        let mut rng = Rng::new(17);
+        let a = Mat::from_fn(300, 5, |_, _| {
+            if rng.uniform() < 0.3 {
+                rng.gaussian()
+            } else {
+                0.0
+            }
+        });
+        let b = rng.gaussians(300);
+        let dense = Dataset::dense("t", a.clone(), b.clone(), None);
+        let sparse = Dataset::from_csr("t", CsrMat::from_dense(&a), b, None);
+        let be = Backend::native();
+        let k = key(12);
+        let bud_d = unlimited();
+        let bud_s = unlimited();
+        let ad = PrecondArtifact::compute_keyed(&be, &dense, &k, None, true, &bud_d).unwrap();
+        let asp = PrecondArtifact::compute_keyed(&be, &sparse, &k, None, true, &bud_s).unwrap();
+        assert!(ad.hd.is_some() && ad.hd_implicit.is_none());
+        assert!(asp.hd.is_none() && asp.hd_implicit.is_some());
+        assert!(asp.has_step2());
+        assert_eq!(bud_s.used(), 0, "implicit step 2 charges nothing");
+        assert_eq!(bud_s.densify_events(), 0);
+        let vd = ad.hd_view(&dense).unwrap();
+        let vs = asp.hd_view(&sparse).unwrap();
+        assert_eq!(vd.n_pad(), vs.n_pad());
+        let idx = vec![0usize, 3, 17, 255, vd.n_pad() - 1];
+        let (md, bd) = vd.gather(&idx);
+        let (ms, bs) = vs.gather(&idx);
+        for r in 0..idx.len() {
+            assert!(
+                (bd[r] - bs[r]).abs() < 1e-10 * (1.0 + bd[r].abs()),
+                "hdb row {r}: {} vs {}",
+                bd[r],
+                bs[r]
+            );
+            for c in 0..5 {
+                let (u, v) = (md.at(r, c), ms.at(r, c));
+                assert!(
+                    (u - v).abs() < 1e-10 * (1.0 + u.abs()),
+                    "hda ({r},{c}): {u} vs {v}"
+                );
+            }
+        }
     }
 
     #[test]

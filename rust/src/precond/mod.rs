@@ -11,7 +11,7 @@
 pub mod artifact;
 pub mod cache;
 
-pub use artifact::{ArtifactMeta, HdParts, PrecondArtifact};
+pub use artifact::{ArtifactMeta, HdParts, HdView, PrecondArtifact};
 pub use cache::{CacheOutcome, ComputeClaim, Lookup, PrecondCache, PrecondKey};
 
 use crate::backend::Backend;
@@ -158,11 +158,12 @@ pub fn precondition_ds_with(
 /// identical (both paths reduce to `sk.apply(dense)` on the same matrix);
 /// over budget it fails with the structured error. Streaming kinds
 /// (CountSketch, SparseEmbed, per-shard Gaussian) charge nothing and take
-/// the plain O(nnz) route. Used by artifact construction; IHS's in-step
-/// `fresh_precond` keeps the infallible transient fallback (its `step`
-/// cannot propagate errors — a documented gap, acceptable because IHS's
-/// per-iteration re-sketch is an explicitly chosen workload, not a serve
-/// default).
+/// the plain O(nnz) route. Every production caller routes through here:
+/// artifact construction *and* IHS's in-loop re-sketch
+/// (`SolveSession::fresh_precond`) — `StepRule::step` is fallible, so an
+/// over-budget mid-solve re-sketch propagates as the job's structured
+/// error too. The infallible [`precondition_ds_with`] remains only as the
+/// uncharged building block (tests, benches, the budgeted wrapper itself).
 pub fn precondition_ds_budgeted(
     backend: &Backend,
     ds: &Dataset,
@@ -297,6 +298,85 @@ pub fn hd_transform_ds_with(
 /// Backend-less convenience wrapper (tests, one-off callers).
 pub fn hd_transform(a: &Mat, b: &[f64], rng: &mut Rng) -> HdTransformed {
     hd_transform_with(&Backend::native(), a, b, rng)
+}
+
+/// Step 2 in **implicit** form — the sparsity-preserving Randomized
+/// Hadamard Transform for CSR datasets.
+///
+/// The dense step 2 materializes the full `n_pad x (d+1)` buffer `HD[A|b]`
+/// because the mini-batch solvers sample rows of it. But they only ever
+/// *sample*: a batch touches `r` rows per iteration, never the whole
+/// transform. Since the orthonormal Hadamard matrix has the closed form
+/// `H[i][j] = (-1)^popcount(i & j) / sqrt(n_pad)`, any single transformed
+/// row is a signed sum over the original rows:
+///
+/// ```text
+/// (HD[A|b])_i = (1/sqrt(n_pad)) * sum_{j<n} signs[j] * (-1)^popcount(i&j) * [A_j | b_j]
+/// ```
+///
+/// (rows `j >= n` are zero padding and drop out). On CSR that sum is an
+/// O(nnz + n) scatter per sampled row — input-sparsity time per batch, and
+/// the dense buffer is **never** built: a sparse dataset's step 2 stores
+/// only the Rademacher sign vector. The dense path stays the bit-exact
+/// golden reference ([`hd_transform_ds_with`]); this path matches it to
+/// floating-point re-association (1e-10 acceptance, same discipline as the
+/// CSR sketch fold).
+#[derive(Clone, Debug)]
+pub struct ImplicitHd {
+    /// The Rademacher sign vector of D (length `n_pad`), drawn from the
+    /// same rng stream position as the dense path's sign draw — dense and
+    /// implicit artifacts for one key share the diagonal.
+    pub signs: Vec<f64>,
+    /// Padded row universe (`n.next_power_of_two()`): the sampling
+    /// universe, exactly as for the dense transform.
+    pub n_pad: usize,
+    /// Wall-clock cost of constructing the implicit transform (sign draw).
+    pub secs: f64,
+}
+
+/// Build the implicit step-2 for `ds`: draws `signs(n_pad)` from `rng` —
+/// the *same* consumption as [`hd_transform_ds_with`], so a keyed rng
+/// stream produces the identical diagonal whether step 2 is materialized
+/// or implicit. Charges nothing: there is no buffer.
+pub fn hd_implicit_ds(ds: &Dataset, rng: &mut Rng) -> ImplicitHd {
+    let t = Timer::start();
+    let n_pad = ds.n().next_power_of_two();
+    let signs = rng.signs(n_pad);
+    ImplicitHd {
+        signs,
+        n_pad,
+        secs: t.secs(),
+    }
+}
+
+impl ImplicitHd {
+    /// Materialize the sampled rows `idx` of `HD[A|b]` straight from CSR:
+    /// one butterfly-free signed scatter pass per sampled row (O(nnz + n)
+    /// each), returning the `idx.len() x d` design rows and the matching
+    /// transformed responses. This is the ONLY dense object the implicit
+    /// step 2 ever produces — a batch-sized gather, identical in shape to
+    /// what the dense path's `gather_rows` hands the executors.
+    pub fn gather_rows_csr(&self, a: &CsrMat, b: &[f64], idx: &[usize]) -> (Mat, Vec<f64>) {
+        assert_eq!(a.rows, b.len());
+        assert!(a.rows <= self.n_pad);
+        let inv = 1.0 / (self.n_pad as f64).sqrt();
+        let mut out = Mat::zeros(idx.len(), a.cols);
+        let mut outb = vec![0.0; idx.len()];
+        for (k, &i) in idx.iter().enumerate() {
+            debug_assert!(i < self.n_pad);
+            let row = out.row_mut(k);
+            let mut acc_b = 0.0;
+            for j in 0..a.rows {
+                // (-1)^popcount(i & j): +1 on even parity, -1 on odd
+                let parity = if (i & j).count_ones() & 1 == 1 { -1.0 } else { 1.0 };
+                let c = self.signs[j] * parity * inv;
+                a.row_axpy(j, c, row);
+                acc_b += c * b[j];
+            }
+            outb[k] = acc_b;
+        }
+        (out, outb)
+    }
 }
 
 #[cfg(test)]

@@ -7,6 +7,8 @@ use crate::data::blocks::{CsrBlock, RowBlock};
 use crate::linalg::{CsrMat, Mat};
 use crate::util::rng::Rng;
 
+/// A sampled CountSketch operator: one hashed bucket and one ±1 sign per
+/// input row.
 pub struct CountSketch {
     s: usize,
     /// target row for each input row
@@ -16,6 +18,7 @@ pub struct CountSketch {
 }
 
 impl CountSketch {
+    /// Sample a CountSketch with `s` output rows for `n`-row inputs.
     pub fn new(s: usize, n: usize, rng: &mut Rng) -> Self {
         assert!(s > 0 && s <= u32::MAX as usize);
         let bucket = (0..n).map(|_| rng.below(s) as u32).collect();

@@ -7,11 +7,13 @@ use crate::data::blocks::{CsrBlock, RowBlock};
 use crate::linalg::{blas, Mat};
 use crate::util::rng::Rng;
 
+/// A sampled dense Gaussian sketch matrix with entries `N(0, 1/s)`.
 pub struct GaussianSketch {
     mat: Mat, // s x n, pre-scaled by 1/sqrt(s)
 }
 
 impl GaussianSketch {
+    /// Sample an `s x n` Gaussian sketch, pre-scaled by `1/sqrt(s)`.
     pub fn new(s: usize, n: usize, rng: &mut Rng) -> Self {
         let mut mat = Mat::gaussian(s, n, rng);
         let scale = 1.0 / (s as f64).sqrt();

@@ -29,6 +29,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 /// single-pass product instead of dying.
 #[derive(Clone, Debug)]
 pub struct StreamUnsupported {
+    /// [`Sketch::name`] of the construction that rejected the shard.
     pub sketch: &'static str,
 }
 
@@ -344,13 +345,20 @@ pub fn apply_streamed_csr(
 /// Which sketch construction to use (CLI / config selectable).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SketchKind {
+    /// Dense i.i.d. N(0, 1/s) projection — O(n d^2), the quality baseline.
     Gaussian,
+    /// Subsampled randomized Hadamard transform — O(nd log n).
     Srht,
+    /// One hashed row per input row, ±1 signs — O(nnz(A)).
     CountSketch,
+    /// OSNAP-style sparse l2 embedding, k hashed rows per input row —
+    /// O(nnz(A) log d).
     SparseEmbed,
 }
 
 impl SketchKind {
+    /// Parse a CLI/config spelling (case-insensitive; accepts the aliases
+    /// `count`/`count_sketch` and `sparse`/`sparse_l2`). `None` if unknown.
     pub fn parse(s: &str) -> Option<SketchKind> {
         match s.to_ascii_lowercase().as_str() {
             "gaussian" => Some(SketchKind::Gaussian),
@@ -361,6 +369,8 @@ impl SketchKind {
         }
     }
 
+    /// Canonical name as reported in results and parsed back by
+    /// [`SketchKind::parse`].
     pub fn name(self) -> &'static str {
         match self {
             SketchKind::Gaussian => "gaussian",

@@ -9,6 +9,8 @@ use crate::data::blocks::{CsrBlock, RowBlock};
 use crate::linalg::{CsrMat, Mat};
 use crate::util::rng::Rng;
 
+/// A sampled sparse l2 embedding: `k` distinct hashed buckets with signs
+/// per input row, scaled by `1/sqrt(k)`.
 pub struct SparseEmbed {
     s: usize,
     k: usize,
@@ -19,6 +21,8 @@ pub struct SparseEmbed {
 }
 
 impl SparseEmbed {
+    /// Sample an embedding with `s` output rows, `n` input rows and an
+    /// explicit per-row bucket count `k` (requires `1 <= k <= s`).
     pub fn new_with_k(s: usize, n: usize, k: usize, rng: &mut Rng) -> Self {
         assert!(k >= 1 && s >= k);
         let mut buckets = Vec::with_capacity(n * k);
@@ -43,6 +47,8 @@ impl SparseEmbed {
         }
     }
 
+    /// Sample an embedding with the default `k ~ log2(s)` (clamped to
+    /// `[2, 8]`) — the O(log d) sparsity Table 2 assumes.
     pub fn new(s: usize, n: usize, rng: &mut Rng) -> Self {
         // k ~ log2(s), clamped
         let k = (s as f64).log2().ceil().max(2.0) as usize;

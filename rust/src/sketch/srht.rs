@@ -9,6 +9,8 @@ use crate::linalg::matrix::next_pow2;
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
 
+/// A sampled SRHT operator `sqrt(n_pad/s) * P H D` for inputs with `n`
+/// rows (padded internally to the next power of two).
 pub struct Srht {
     s: usize,
     n: usize,
@@ -18,6 +20,8 @@ pub struct Srht {
 }
 
 impl Srht {
+    /// Sample an SRHT with `s` output rows for `n`-row inputs: one
+    /// Rademacher sign per (padded) row and `s` uniform row picks.
     pub fn new(s: usize, n: usize, rng: &mut Rng) -> Self {
         let n_pad = next_pow2(n);
         let signs = rng.signs(n_pad);

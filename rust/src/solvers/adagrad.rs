@@ -50,7 +50,7 @@ impl StepRule for AdagradRule {
         sess.opts.chunk
     }
 
-    fn step(&mut self, sess: &mut SolveSession, t: usize) {
+    fn step(&mut self, sess: &mut SolveSession, t: usize) -> Result<()> {
         let eps = 1e-10;
         let d = self.x.len();
         let ds = sess.ds;
@@ -75,6 +75,7 @@ impl StepRule for AdagradRule {
             }
             sess.opts.constraint.project(&mut self.x);
         }
+        Ok(())
     }
 
     fn eval_x(&self, _sess: &SolveSession) -> Vec<f64> {

@@ -27,7 +27,7 @@ use crate::backend::Backend;
 use crate::constraints::ConstraintSet;
 use crate::data::Dataset;
 use crate::precond::{
-    precondition_ds_with, CacheOutcome, Lookup, PrecondArtifact, PrecondCache, PrecondKey,
+    precondition_ds_budgeted, CacheOutcome, Lookup, PrecondArtifact, PrecondCache, PrecondKey,
     Precondition,
 };
 use crate::prox::metric::MetricProjector;
@@ -114,6 +114,9 @@ pub struct SolveSession<'a> {
     setup_timer: Option<Timer>,
     setup_secs: f64,
     outcome: CacheOutcome,
+    /// Warm-start outcome ("off" | "used" | "rejected-dim"), reported on
+    /// the [`SolveReport`] so a misconfigured serve request is visible.
+    warm_start: &'static str,
     rec: Option<TraceRecorder>,
 }
 
@@ -134,6 +137,7 @@ impl<'a> SolveSession<'a> {
             setup_timer: None,
             setup_secs: 0.0,
             outcome: CacheOutcome::Off,
+            warm_start: "off",
             rec: None,
         }
     }
@@ -178,7 +182,7 @@ impl<'a> SolveSession<'a> {
             loop {
                 match cache.lookup_or_claim(&key) {
                     Lookup::Found(art) => {
-                        if !with_hd || art.hd.is_some() {
+                        if !with_hd || art.has_step2() {
                             self.outcome = CacheOutcome::Hit;
                             return Ok(art);
                         }
@@ -234,18 +238,25 @@ impl<'a> SolveSession<'a> {
     /// IHS's per-iteration re-sketch. Never cached, never on the setup
     /// clock (the re-sketching cost is the method's signature cost and
     /// belongs inside the timed step). Representation-aware: on a sparse
-    /// dataset the re-sketch is O(nnz) per iteration — exactly the cost the
-    /// input-sparsity-time IHS literature promises — and never densifies.
-    pub fn fresh_precond(&mut self) -> Precondition {
+    /// dataset a CountSketch/SparseEmbed re-sketch is O(nnz) per iteration —
+    /// exactly the cost the input-sparsity-time IHS literature promises —
+    /// and never densifies. The one sketch without a CSR kernel (SRHT)
+    /// takes a *charged*, scoped densify through the session's
+    /// [`MemBudget`], so an over-budget iteration surfaces here as a
+    /// structured error the step propagates instead of an untracked
+    /// allocation.
+    pub fn fresh_precond(&mut self) -> Result<Precondition> {
         let s = self.sketch_rows();
-        precondition_ds_with(
+        let mem = Arc::clone(&self.mem);
+        Ok(precondition_ds_budgeted(
             self.backend,
             self.ds,
             self.opts.sketch,
             s,
             &mut self.rng,
             self.opts.block_rows,
-        )
+            &mem,
+        )?)
     }
 
     /// The R-metric projector for constrained solves (None when
@@ -261,14 +272,24 @@ impl<'a> SolveSession<'a> {
     }
 
     /// The start iterate: zeros, or the session's warm-start vector when
-    /// enabled and dimension-compatible.
-    pub fn start_x(&self) -> Vec<f64> {
+    /// enabled and dimension-compatible. A wrong-dimension `x0` is loudly
+    /// rejected — warned on the log and reported as `rejected-dim` — so a
+    /// misconfigured serve request never *silently* cold-starts.
+    pub fn start_x(&mut self) -> Vec<f64> {
         let d = self.ds.d();
         if self.opts.session.warm_start {
             if let Some(x0) = &self.opts.session.x0 {
                 if x0.len() == d {
+                    self.warm_start = "used";
                     return x0.clone();
                 }
+                crate::log_warn!(
+                    "warm-start x0 rejected: dimension {} != d {} (dataset {}); cold-starting",
+                    x0.len(),
+                    d,
+                    self.ds.name
+                );
+                self.warm_start = "rejected-dim";
             }
         }
         vec![0.0; d]
@@ -340,8 +361,10 @@ impl<'a> SolveSession<'a> {
     fn finish(self, name: &str, x: Vec<f64>, f: f64) -> SolveReport {
         let setup = self.setup_secs;
         let outcome = self.outcome;
+        let warm = self.warm_start;
         let mut rep = self.rec.expect("trace started").finish(name, x, f, setup);
         rep.precond_cache = outcome;
+        rep.warm_start = warm.into();
         rep
     }
 }
@@ -371,15 +394,21 @@ pub trait StepRule {
     fn chunk_len(&self, sess: &SolveSession, f: f64) -> usize;
 
     /// Solve-clock work at a chunk boundary *before* stepping (SVRG
-    /// snapshots, epoch schedules). `Some(secs)` is recorded as a
-    /// 0-iteration trace point; `None` records nothing.
-    fn pre_chunk(&mut self, sess: &mut SolveSession, f: f64) -> Option<f64> {
+    /// snapshots, epoch schedules). `Ok(Some(secs))` is recorded as a
+    /// 0-iteration trace point; `Ok(None)` records nothing. Fallible for
+    /// the same reason as [`StepRule::step`]: boundary work may
+    /// materialize through the budget.
+    fn pre_chunk(&mut self, sess: &mut SolveSession, f: f64) -> Result<Option<f64>> {
         let _ = (sess, f);
-        None
+        Ok(None)
     }
 
     /// Advance exactly `t` iterations (the driver times this call).
-    fn step(&mut self, sess: &mut SolveSession, t: usize);
+    /// Fallible: in-loop materializations (IHS's per-iteration re-sketch,
+    /// any budget-charged dense view) surface as a structured error that
+    /// [`drive`] propagates as the job's error — mid-solve memory pressure
+    /// is a reported failure, never a panic or an untracked allocation.
+    fn step(&mut self, sess: &mut SolveSession, t: usize) -> Result<()>;
 
     /// The iterate to evaluate f at — and to report at the end (averaged
     /// iterate for the SGD family, xhat for the accelerated scheme).
@@ -391,8 +420,9 @@ pub trait StepRule {
     }
 }
 
-/// Run a [`StepRule`] through the shared solve loop. Setup failures (e.g.
-/// an over-budget HD materialization) propagate as the job's error.
+/// Run a [`StepRule`] through the shared solve loop. Setup *and step*
+/// failures (e.g. an over-budget HD materialization, an over-budget
+/// in-loop re-sketch) propagate as the job's error.
 pub fn drive<R: StepRule>(
     rule: &mut R,
     backend: &Backend,
@@ -412,7 +442,7 @@ pub fn drive<R: StepRule>(
     // paying another full O(nd) residual pass
     let mut last: Option<Vec<f64>> = None;
     while !sess.should_stop(f) {
-        if let Some(secs) = rule.pre_chunk(&mut sess, f) {
+        if let Some(secs) = rule.pre_chunk(&mut sess, f)? {
             sess.record(0, secs, f);
         }
         let want = rule.chunk_len(&sess, f);
@@ -420,7 +450,8 @@ pub fn drive<R: StepRule>(
             break;
         }
         let t = sess.cap_chunk(want);
-        let ((), secs) = timed(|| rule.step(&mut sess, t));
+        let (res, secs) = timed(|| rule.step(&mut sess, t));
+        res?;
         let x = rule.eval_x(&sess);
         f = sess.objective(&x);
         sess.record(t, secs, f);
@@ -562,17 +593,20 @@ mod tests {
         let mut opts = SolverOpts::default();
         opts.session.warm_start = true;
         opts.session.x0 = Some(vec![1.0, 2.0, 3.0, 4.0]);
-        let sess = SolveSession::new(&be, &ds, &opts);
+        let mut sess = SolveSession::new(&be, &ds, &opts);
         assert_eq!(sess.start_x(), vec![1.0, 2.0, 3.0, 4.0]);
-        // dimension mismatch falls back to zeros
+        assert_eq!(sess.warm_start, "used");
+        // dimension mismatch falls back to zeros — loudly
         opts.session.x0 = Some(vec![1.0]);
-        let sess = SolveSession::new(&be, &ds, &opts);
+        let mut sess = SolveSession::new(&be, &ds, &opts);
         assert_eq!(sess.start_x(), vec![0.0; 4]);
+        assert_eq!(sess.warm_start, "rejected-dim");
         // warm_start off ignores x0
         opts.session.warm_start = false;
         opts.session.x0 = Some(vec![1.0, 2.0, 3.0, 4.0]);
-        let sess = SolveSession::new(&be, &ds, &opts);
+        let mut sess = SolveSession::new(&be, &ds, &opts);
         assert_eq!(sess.start_x(), vec![0.0; 4]);
+        assert_eq!(sess.warm_start, "off");
     }
 
     #[test]
@@ -600,8 +634,9 @@ mod tests {
                     1
                 }
             }
-            fn step(&mut self, _s: &mut SolveSession, _t: usize) {
+            fn step(&mut self, _s: &mut SolveSession, _t: usize) -> Result<()> {
                 self.stepped = true;
+                Ok(())
             }
             fn eval_x(&self, _s: &SolveSession) -> Vec<f64> {
                 self.x.clone()

@@ -54,6 +54,7 @@ impl Solver for ExactQr {
             }],
             x,
             precond_cache: crate::precond::CacheOutcome::Off,
+            warm_start: "off".into(),
         })
     }
 }

@@ -59,32 +59,25 @@ impl StepRule for HdpwAccRule {
 
     fn init(&mut self, sess: &mut SolveSession, x0: &[f64], f0: f64) {
         let art = self.art.as_ref().expect("setup ran");
-        let hd = art.hd.as_ref().expect("two-step artifact");
+        let hd = art.hd_view(sess.ds).expect("two-step artifact");
         let r = sess.opts.batch_size.max(1);
-        self.n_pad = hd.n_pad;
+        self.n_pad = hd.n_pad();
         self.scale = 2.0 * self.n_pad as f64 / r as f64;
         self.r = r;
         // constants of the preconditioned problem (kappa(U) = O(1))
         self.l_smooth = 2.0;
         self.mu = 2.0;
-        self.sigma_sq = estimate_sigma_sq(
-            sess.backend,
-            &hd.hda,
-            &hd.hdb,
-            &art.r,
-            x0,
-            self.n_pad,
-            &mut sess.rng,
-        ) / r as f64;
+        self.sigma_sq =
+            estimate_sigma_sq(sess.backend, &hd, &art.r, x0, &mut sess.rng) / r as f64;
         // V0 >= f(x0) - f* ; f* >= 0 so f0 is a valid bound
         self.v0 = f0.max(1e-300);
         self.x = x0.to_vec();
         self.xhat = x0.to_vec();
     }
 
-    fn pre_chunk(&mut self, sess: &mut SolveSession, f: f64) -> Option<f64> {
+    fn pre_chunk(&mut self, sess: &mut SolveSession, f: f64) -> Result<Option<f64>> {
         if self.exhausted || self.t_done > 0 {
-            return None; // mid-epoch: schedule already fixed
+            return Ok(None); // mid-epoch: schedule already fixed
         }
         // Algorithm 5 sets V_s = V0 2^{-s}, assuming each epoch halves
         // the gap; with an *estimated* sigma^2 that faith-based schedule
@@ -109,7 +102,7 @@ impl StepRule for HdpwAccRule {
                     * (self.n_s as f64 + 1.0).powi(2)))
             .sqrt()
         });
-        None // schedule work is untimed (it was outside the timed region)
+        Ok(None) // schedule work is untimed (it was outside the timed region)
     }
 
     fn chunk_len(&self, sess: &SolveSession, _f: f64) -> usize {
@@ -120,9 +113,9 @@ impl StepRule for HdpwAccRule {
         }
     }
 
-    fn step(&mut self, sess: &mut SolveSession, t: usize) {
+    fn step(&mut self, sess: &mut SolveSession, t: usize) -> Result<()> {
         let art = self.art.as_ref().expect("setup ran");
-        let hd = art.hd.as_ref().expect("two-step artifact");
+        let hd = art.hd_view(sess.ds).expect("two-step artifact");
         // alpha_t = q_t = 2/(t+1), restarting each epoch
         let idx: Vec<Vec<usize>> = (0..t)
             .map(|_| sess.rng.indices(self.r, self.n_pad))
@@ -141,24 +134,52 @@ impl StepRule for HdpwAccRule {
                 }
             })
             .collect();
-        let (xn, xh) = sess.backend.acc_chunk(
-            &hd.hda,
-            &hd.hdb,
-            &self.x,
-            &self.xhat,
-            &art.pinv,
-            &idx,
-            &alphas,
-            &qs,
-            &etas,
-            self.mu,
-            self.scale,
-            sess.opts.constraint.as_ref(),
-            self.metric.as_deref(),
-        );
+        // Same routing as HdpwBatchRule::step: dense artifacts dispatch on
+        // the materialized transform; implicit (sparse) artifacts evaluate
+        // the chunk's sampled rows on demand and dispatch on local indices.
+        let (xn, xh) = match &hd {
+            crate::precond::HdView::Dense(h) => sess.backend.acc_chunk(
+                &h.hda,
+                &h.hdb,
+                &self.x,
+                &self.xhat,
+                &art.pinv,
+                &idx,
+                &alphas,
+                &qs,
+                &etas,
+                self.mu,
+                self.scale,
+                sess.opts.constraint.as_ref(),
+                self.metric.as_deref(),
+            ),
+            crate::precond::HdView::Implicit { .. } => {
+                let flat: Vec<usize> = idx.iter().flatten().copied().collect();
+                let (ma, mb) = hd.gather(&flat);
+                let local: Vec<Vec<usize>> = (0..t)
+                    .map(|k| (k * self.r..(k + 1) * self.r).collect())
+                    .collect();
+                sess.backend.acc_chunk(
+                    &ma,
+                    &mb,
+                    &self.x,
+                    &self.xhat,
+                    &art.pinv,
+                    &local,
+                    &alphas,
+                    &qs,
+                    &etas,
+                    self.mu,
+                    self.scale,
+                    sess.opts.constraint.as_ref(),
+                    self.metric.as_deref(),
+                )
+            }
+        };
         self.x = xn;
         self.xhat = xh;
         self.t_done += t;
+        Ok(())
     }
 
     fn eval_x(&self, _sess: &SolveSession) -> Vec<f64> {

@@ -59,22 +59,14 @@ impl StepRule for HdpwBatchRule {
 
     fn init(&mut self, sess: &mut SolveSession, x0: &[f64], f0: f64) {
         let art = self.art.as_ref().expect("setup ran");
-        let hd = art.hd.as_ref().expect("two-step artifact");
+        let hd = art.hd_view(sess.ds).expect("two-step artifact");
         let r = sess.opts.batch_size.max(1);
-        self.n_pad = hd.n_pad;
+        self.n_pad = hd.n_pad();
         self.scale = 2.0 * self.n_pad as f64 / r as f64;
         self.r = r;
         // Theorem-2 fixed step: sigma^2 of single-row gradients, divided by r
         // for the batch (Lemma: sigma_batch^2 <= sigma^2 / r).
-        let sigma_sq = estimate_sigma_sq(
-            sess.backend,
-            &hd.hda,
-            &hd.hdb,
-            &art.r,
-            x0,
-            self.n_pad,
-            &mut sess.rng,
-        );
+        let sigma_sq = estimate_sigma_sq(sess.backend, &hd, &art.r, x0, &mut sess.rng);
         let r_norm = art.r.frob_norm();
         self.eta = theory_step_size(
             sess.opts,
@@ -92,28 +84,55 @@ impl StepRule for HdpwBatchRule {
         sess.opts.chunk
     }
 
-    fn step(&mut self, sess: &mut SolveSession, t: usize) {
+    fn step(&mut self, sess: &mut SolveSession, t: usize) -> Result<()> {
         let art = self.art.as_ref().expect("setup ran");
-        let hd = art.hd.as_ref().expect("two-step artifact");
+        let hd = art.hd_view(sess.ds).expect("two-step artifact");
         let idx: Vec<Vec<usize>> = (0..t)
             .map(|_| sess.rng.indices(self.r, self.n_pad))
             .collect();
-        let (xt, xs) = sess.backend.sgd_chunk(
-            &hd.hda,
-            &hd.hdb,
-            &self.x,
-            &art.pinv,
-            &idx,
-            self.eta,
-            self.scale,
-            sess.opts.constraint.as_ref(),
-            self.metric.as_deref(),
-        );
+        // On a dense artifact the chunk samples the materialized transform
+        // directly. On an implicit (sparse) artifact the chunk's t*r sampled
+        // rows are evaluated on demand into one batch-sized block — the only
+        // dense object the sparse path ever builds — and the executor runs
+        // on local row positions; the uniform-sampling scale 2*n_pad/r is
+        // index-independent, so the arithmetic is unchanged.
+        let (xt, xs) = match &hd {
+            crate::precond::HdView::Dense(h) => sess.backend.sgd_chunk(
+                &h.hda,
+                &h.hdb,
+                &self.x,
+                &art.pinv,
+                &idx,
+                self.eta,
+                self.scale,
+                sess.opts.constraint.as_ref(),
+                self.metric.as_deref(),
+            ),
+            crate::precond::HdView::Implicit { .. } => {
+                let flat: Vec<usize> = idx.iter().flatten().copied().collect();
+                let (ma, mb) = hd.gather(&flat);
+                let local: Vec<Vec<usize>> = (0..t)
+                    .map(|k| (k * self.r..(k + 1) * self.r).collect())
+                    .collect();
+                sess.backend.sgd_chunk(
+                    &ma,
+                    &mb,
+                    &self.x,
+                    &art.pinv,
+                    &local,
+                    self.eta,
+                    self.scale,
+                    sess.opts.constraint.as_ref(),
+                    self.metric.as_deref(),
+                )
+            }
+        };
         self.x = xt;
         for (acc, v) in self.xsum.iter_mut().zip(&xs) {
             *acc += v;
         }
         self.total_t += t;
+        Ok(())
     }
 
     fn eval_x(&self, _sess: &SolveSession) -> Vec<f64> {

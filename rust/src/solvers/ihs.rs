@@ -40,11 +40,15 @@ impl StepRule for IhsRule {
         1 // trace every (expensive) iteration
     }
 
-    fn step(&mut self, sess: &mut SolveSession, t: usize) {
+    fn step(&mut self, sess: &mut SolveSession, t: usize) -> Result<()> {
         for _ in 0..t {
             // fresh sketch + QR every iteration (the method's signature
-            // cost, kept inside the timed region deliberately)
-            let pre = sess.fresh_precond();
+            // cost, kept inside the timed region deliberately). Budget-
+            // routed: CountSketch/SparseEmbed re-sketch CSR in O(nnz);
+            // SRHT's whole-matrix fallback is a charged scoped densify, so
+            // an over-budget iteration propagates as the job's structured
+            // error instead of an untracked allocation.
+            let pre = sess.fresh_precond()?;
             let metric = if sess.opts.constraint.is_unconstrained() {
                 None
             } else {
@@ -64,6 +68,7 @@ impl StepRule for IhsRule {
                 metric.as_ref(),
             );
         }
+        Ok(())
     }
 
     fn eval_x(&self, _sess: &SolveSession) -> Vec<f64> {

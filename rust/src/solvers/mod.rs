@@ -144,6 +144,10 @@ pub struct SolveReport {
     /// How the preconditioner was acquired (off / miss / hit) — lets a
     /// serve response distinguish a reused artifact from a fresh one.
     pub precond_cache: crate::precond::CacheOutcome,
+    /// Warm-start outcome: `"off"` (not requested), `"used"` (the session
+    /// `x0` seeded the solve), or `"rejected-dim"` (an `x0` with the wrong
+    /// dimension was refused and the solve cold-started).
+    pub warm_start: String,
 }
 
 impl SolveReport {
@@ -300,6 +304,7 @@ impl TraceRecorder {
             trace: self.trace,
             x,
             precond_cache: crate::precond::CacheOutcome::Off,
+            warm_start: "off".into(),
         }
     }
 }
@@ -308,22 +313,26 @@ impl TraceRecorder {
 /// problem at x0 by sampling K single-row gradients y_i = R^{-T} c_i and
 /// computing their empirical variance. Used by the theory step size
 /// (Theorem 2: eta = min(1/(2L), sqrt(D^2 / (2 T sigma^2)))).
+///
+/// Samples rows through the step-2 [`crate::precond::HdView`], so the same
+/// probe runs off the materialized transform (dense datasets, bit-identical
+/// to the historical direct-gather form: identical `rng` draws, identical
+/// gathered rows) or the implicit one (sparse datasets, rows evaluated on
+/// demand).
 pub fn estimate_sigma_sq(
     backend: &Backend,
-    hda: &crate::linalg::Mat,
-    hdb: &[f64],
+    hd: &crate::precond::HdView<'_>,
     r_factor: &crate::linalg::Mat,
     x0: &[f64],
-    n_universe: usize,
     rng: &mut crate::util::rng::Rng,
 ) -> f64 {
     let k = 24usize;
-    let d = hda.cols;
+    let d = r_factor.cols;
+    let n_universe = hd.n_pad();
     let mut grads: Vec<Vec<f64>> = Vec::with_capacity(k);
     for _ in 0..k {
         let i = rng.below(n_universe);
-        let m = hda.gather_rows(&[i]);
-        let v = [hdb[i]];
+        let (m, v) = hd.gather(&[i]);
         let c = backend.batch_grad(&m, &v, x0, 2.0 * n_universe as f64);
         // transform to the y-metric: g = R^{-T} c
         let g = crate::linalg::tri::solve_upper_t(r_factor, &c);
@@ -442,6 +451,7 @@ mod tests {
             setup_secs: 0.0,
             solve_secs: 2.0,
             precond_cache: crate::precond::CacheOutcome::Off,
+            warm_start: "off".into(),
             trace: vec![
                 TracePoint {
                     iters: 0,

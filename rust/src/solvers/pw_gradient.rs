@@ -55,7 +55,7 @@ impl StepRule for PwGradientRule {
         sess.opts.chunk.clamp(1, 10)
     }
 
-    fn step(&mut self, sess: &mut SolveSession, t: usize) {
+    fn step(&mut self, sess: &mut SolveSession, t: usize) -> Result<()> {
         let art = self.art.as_ref().expect("setup ran");
         match sess.ds.csr() {
             // O(nnz) per step straight off the sparse rows: the same
@@ -87,6 +87,7 @@ impl StepRule for PwGradientRule {
                 );
             }
         }
+        Ok(())
     }
 
     fn eval_x(&self, _sess: &SolveSession) -> Vec<f64> {

@@ -166,7 +166,7 @@ impl StepRule for PwSgdRule {
         sess.opts.chunk
     }
 
-    fn step(&mut self, sess: &mut SolveSession, t: usize) {
+    fn step(&mut self, sess: &mut SolveSession, t: usize) -> Result<()> {
         let art = self.art.as_ref().expect("setup ran");
         let alias = self.alias.as_ref().expect("setup ran");
         let d = self.x.len();
@@ -194,6 +194,7 @@ impl StepRule for PwSgdRule {
             }
             self.total_t += 1;
         }
+        Ok(())
     }
 
     fn eval_x(&self, _sess: &SolveSession) -> Vec<f64> {

@@ -59,7 +59,7 @@ impl StepRule for SgdRule {
         sess.opts.chunk
     }
 
-    fn step(&mut self, sess: &mut SolveSession, t: usize) {
+    fn step(&mut self, sess: &mut SolveSession, t: usize) -> Result<()> {
         let base_t = sess.iters();
         let ds = sess.ds;
         for k in 0..t {
@@ -83,6 +83,7 @@ impl StepRule for SgdRule {
             }
             sess.opts.constraint.project(&mut self.x);
         }
+        Ok(())
     }
 
     fn eval_x(&self, _sess: &SolveSession) -> Vec<f64> {

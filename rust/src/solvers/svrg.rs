@@ -95,9 +95,9 @@ impl StepRule for SvrgRule {
         self.vbuf = vec![0.0; r];
     }
 
-    fn pre_chunk(&mut self, sess: &mut SolveSession, _f: f64) -> Option<f64> {
+    fn pre_chunk(&mut self, sess: &mut SolveSession, _f: f64) -> Result<Option<f64>> {
         if self.done < self.m_inner {
-            return None; // mid-epoch
+            return Ok(None); // mid-epoch
         }
         // snapshot + full gradient (counted as solve time); the session
         // routes O(nnz) on sparse datasets, backend-dispatched on dense
@@ -105,14 +105,14 @@ impl StepRule for SvrgRule {
         let (mu_g, snap_secs) = timed(|| sess.full_grad(&self.snapshot));
         self.mu_g = mu_g;
         self.done = 0;
-        Some(snap_secs)
+        Ok(Some(snap_secs))
     }
 
     fn chunk_len(&self, sess: &SolveSession, _f: f64) -> usize {
         sess.opts.chunk.min(self.m_inner - self.done)
     }
 
-    fn step(&mut self, sess: &mut SolveSession, t: usize) {
+    fn step(&mut self, sess: &mut SolveSession, t: usize) -> Result<()> {
         let d = self.x.len();
         let ds = sess.ds;
         for _ in 0..t {
@@ -149,6 +149,7 @@ impl StepRule for SvrgRule {
             }
         }
         self.done += t;
+        Ok(())
     }
 
     fn eval_x(&self, _sess: &SolveSession) -> Vec<f64> {
