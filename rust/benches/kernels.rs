@@ -471,6 +471,145 @@ fn main() {
             Ok(()) => println!("sparse-IHS trade artifact: {ihs_path}"),
             Err(e) => println!("sparse-IHS trade artifact NOT written: {e}"),
         }
+
+        // ---- batched gather: blockwise vs per-row (ISSUE 9 acceptance) ----
+        // Same implicit handle, same sampled index set. The per-row
+        // reference re-walks the CSR payload once per sampled row (r passes
+        // over nnz); the blockwise gather hoists the sign-panel coefficients
+        // and walks the payload once per batch, scattering each stored entry
+        // into every sampled row. Acceptance: >= 4x at 2^20 x 100 @ 1%
+        // density, r = 256. Outputs are bitwise equal by construction
+        // (asserted below), so the speedup is free of numerics caveats.
+        let st_gather_ref = BenchStats::run("hd gather per-row   r=256", 1, 2, || {
+            std::hint::black_box(ihd.gather_rows_csr_ref(csr, &lazy.b, &idx));
+        });
+        println!("{}", st_gather_ref.report());
+        let st_gather_blk = BenchStats::run("hd gather blockwise r=256", 1, 3, || {
+            std::hint::black_box(ihd.gather_rows_csr(csr, &lazy.b, &idx));
+        });
+        println!("{}", st_gather_blk.report());
+        let (blk_a, blk_b) = ihd.gather_rows_csr(csr, &lazy.b, &idx);
+        let (ref_a, ref_b) = ihd.gather_rows_csr_ref(csr, &lazy.b, &idx);
+        assert!(
+            blk_a.max_abs_diff(&ref_a) == 0.0
+                && blk_b
+                    .iter()
+                    .zip(&ref_b)
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+            "blockwise gather must be bitwise equal to the per-row reference"
+        );
+        let gather_speedup = st_gather_ref.median_secs() / st_gather_blk.median_secs();
+        println!(
+            "blockwise gather speedup: {gather_speedup:.1}x (acceptance: >= 4x)"
+        );
+
+        // ---- fused trials vs serial drive (trial throughput) --------------
+        // The cross-trial GEMM fusion: k trials advance in lockstep sharing
+        // one fused objective pass per chunk boundary instead of k separate
+        // residual sweeps. Reports are bitwise equal to the serial drive
+        // (asserted below; tests/implicit_gather.rs is the full gate) — the
+        // fusion only buys wall clock.
+        let fn_rows = 8192;
+        let fd = 32;
+        let fa = Mat::gaussian(fn_rows, fd, &mut rng);
+        let fb = rng.gaussians(fn_rows);
+        let fds = hdpw::data::Dataset::dense("bench_fused", fa, fb, None);
+        let solver = hdpw::solvers::by_name("hdpwbatchsgd").expect("registered solver");
+        let k_trials = 4usize;
+        let opts_list: Vec<hdpw::solvers::SolverOpts> = (0..k_trials)
+            .map(|t| hdpw::solvers::SolverOpts {
+                batch_size: 64,
+                max_iters: 2000,
+                chunk: 100,
+                time_budget: 1e9,
+                seed: 90 + t as u64,
+                ..Default::default()
+            })
+            .collect();
+        let st_serial = BenchStats::run(
+            &format!("trials serial {k_trials}x hdpwbatchsgd {fn_rows}x{fd}"),
+            1,
+            3,
+            || {
+                for o in &opts_list {
+                    std::hint::black_box(
+                        solver.solve(&be, &fds, o).expect("serial solve"),
+                    );
+                }
+            },
+        );
+        println!("{}", st_serial.report());
+        let st_fused = BenchStats::run(
+            &format!("trials fused  {k_trials}x hdpwbatchsgd {fn_rows}x{fd}"),
+            1,
+            3,
+            || {
+                std::hint::black_box(
+                    hdpw::solvers::drive_fused_trials(solver.as_ref(), &be, &fds, &opts_list)
+                        .expect("fused solve"),
+                );
+            },
+        );
+        println!("{}", st_fused.report());
+        let fused_reports =
+            hdpw::solvers::drive_fused_trials(solver.as_ref(), &be, &fds, &opts_list)
+                .expect("fused solve");
+        for (o, fr) in opts_list.iter().zip(&fused_reports) {
+            let sr = solver.solve(&be, &fds, o).expect("serial solve");
+            assert!(
+                fr.f_final.to_bits() == sr.f_final.to_bits()
+                    && fr.x.iter().zip(&sr.x).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "fused trial (seed {}) must be bitwise equal to serial",
+                o.seed
+            );
+        }
+        let serial_jps = k_trials as f64 / st_serial.median_secs();
+        let fused_jps = k_trials as f64 / st_fused.median_secs();
+        println!(
+            "fused trial throughput: serial {serial_jps:.2} trials/s, \
+             fused {fused_jps:.2} trials/s ({:.2}x, bitwise-equal reports)",
+            fused_jps / serial_jps
+        );
+
+        let gather_json = hdpw::util::json::Json::obj(vec![
+            ("workload", hdpw::util::json::Json::str(format!("{n}x{d}@0.01"))),
+            ("batch_r", hdpw::util::json::Json::num(batch_r as f64)),
+            (
+                "per_row_gather_secs",
+                hdpw::util::json::Json::num(st_gather_ref.median_secs()),
+            ),
+            (
+                "blockwise_gather_secs",
+                hdpw::util::json::Json::num(st_gather_blk.median_secs()),
+            ),
+            (
+                "gather_speedup",
+                hdpw::util::json::Json::num(gather_speedup),
+            ),
+            (
+                "fused_workload",
+                hdpw::util::json::Json::str(format!(
+                    "hdpwbatchsgd {fn_rows}x{fd} k={k_trials}"
+                )),
+            ),
+            (
+                "serial_trials_per_sec",
+                hdpw::util::json::Json::num(serial_jps),
+            ),
+            (
+                "fused_trials_per_sec",
+                hdpw::util::json::Json::num(fused_jps),
+            ),
+            (
+                "fused_throughput_ratio",
+                hdpw::util::json::Json::num(fused_jps / serial_jps),
+            ),
+        ]);
+        let gather_path = "BENCH_gather.json";
+        match std::fs::write(gather_path, format!("{gather_json}\n")) {
+            Ok(()) => println!("batched hot-path artifact: {gather_path}"),
+            Err(e) => println!("batched hot-path artifact NOT written: {e}"),
+        }
     }
 
     // ---- QR + triangular ------------------------------------------------------

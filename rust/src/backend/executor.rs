@@ -223,6 +223,16 @@ pub trait Executor: Send + Sync {
     /// f(x) = ||Ax - b||^2.
     fn residual_sq(&self, a: &Mat, b: &[f64], x: &[f64]) -> f64;
 
+    /// f(x_k) = ||A x_k - b||^2 for a batch of iterates. Default: one
+    /// [`Executor::residual_sq`] call per iterate, making every column
+    /// trivially bitwise-equal to the serial call. Executors with a fused
+    /// multi-iterate kernel may override, but the override must preserve
+    /// each column's per-row operation order — the fused-trials driver's
+    /// bit-identity contract depends on it.
+    fn residual_sq_multi(&self, a: &Mat, b: &[f64], xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.residual_sq(a, b, x)).collect()
+    }
+
     /// One preconditioned gradient step x <- P_W(x - eta * pinv g).
     fn gd_step(
         &self,
@@ -532,6 +542,13 @@ impl Executor for NativeExecutor {
 
     fn residual_sq(&self, a: &Mat, b: &[f64], x: &[f64]) -> f64 {
         blas::residual_sq(a, b, x)
+    }
+
+    /// Fused multi-iterate objective: one pass over `A`, each column
+    /// bitwise-equal to the serial `blas::residual_sq` (see that kernel's
+    /// docs for the ordering contract).
+    fn residual_sq_multi(&self, a: &Mat, b: &[f64], xs: &[Vec<f64>]) -> Vec<f64> {
+        blas::residual_sq_multi(a, b, xs)
     }
 
     fn gd_step(
@@ -1222,6 +1239,30 @@ mod tests {
         let hn = native.hd_transform(&a, &signs);
         let hs = simd_ex.hd_transform(&a, &signs);
         assert!(hs.max_abs_diff(&hn) < 1e-10);
+    }
+
+    #[test]
+    fn residual_sq_multi_matches_serial_bitwise_on_both_cpu_executors() {
+        let stats = Arc::new(DispatchStats::default());
+        let native = NativeExecutor::with_tuning(Arc::clone(&stats), 2, None);
+        let simd_ex = SimdExecutor::with_tuning(Arc::clone(&stats), 2, None);
+        let mut rng = Rng::new(11);
+        let a = Mat::gaussian(128, 9, &mut rng);
+        let b = rng.gaussians(128);
+        let xs: Vec<Vec<f64>> = (0..3).map(|_| rng.gaussians(9)).collect();
+        for ex in [&native as &dyn Executor, &simd_ex as &dyn Executor] {
+            let multi = ex.residual_sq_multi(&a, &b, &xs);
+            assert_eq!(multi.len(), 3);
+            for (k, x) in xs.iter().enumerate() {
+                let serial = ex.residual_sq(&a, &b, x);
+                assert_eq!(
+                    multi[k].to_bits(),
+                    serial.to_bits(),
+                    "{} column {k}",
+                    ex.name()
+                );
+            }
+        }
     }
 
     #[test]

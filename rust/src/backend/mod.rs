@@ -305,6 +305,16 @@ impl Backend {
         self.route(&op, true).residual_sq(a, b, x)
     }
 
+    /// f(x_k) = ||A x_k - b||^2 for a batch of iterates, routed on the same
+    /// op key as the serial call so every column lands on the same executor
+    /// a serial [`Backend::residual_sq`] would pick — each column is
+    /// bitwise-equal to the serial call (see
+    /// [`Executor::residual_sq_multi`]). Artifact: `residual_sq_n{n}_d{d}`.
+    pub fn residual_sq_multi(&self, a: &Mat, b: &[f64], xs: &[Vec<f64>]) -> Vec<f64> {
+        let op = opkey::residual_sq(a.rows, a.cols);
+        self.route(&op, true).residual_sq_multi(a, b, xs)
+    }
+
     /// One preconditioned gradient step x <- P_W(x - eta * pinv g).
     ///
     /// `metric`: when Some, constrained steps use the R-metric projection

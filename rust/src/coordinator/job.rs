@@ -27,6 +27,14 @@ pub const FORMAT_CHOICES: &[&str] = &["", "dense", "sparse", "libsvm"];
 /// (served 4:2:1 high:normal:batch). "" means the default (normal).
 pub const PRIORITY_CHOICES: &[&str] = &["", "high", "normal", "batch"];
 
+/// Valid `JobRequest::step2` values — the HD-transform representation
+/// policy ([`crate::precond::Step2Policy`]):
+///   repr     — match the data representation (default; the paper path);
+///   dense    — pin the materialized transform (budget-charged on CSR);
+///   implicit — pin the signs-only transform (CSR datasets only);
+///   auto     — nnz-aware cost model picks per job, never over budget.
+pub const STEP2_CHOICES: &[&str] = &["", "repr", "dense", "implicit", "auto"];
+
 /// Error-chain marker for deadline-shed jobs: the scheduler declined the
 /// job because its deadline could not (or can no longer) be met. Wire
 /// clients and tests detect sheds structurally via [`is_shed_error`]
@@ -35,10 +43,19 @@ pub const SHED_ERROR_MARKER: &str = "deadline-shed";
 
 /// Build the structured error a deadline-shed job resolves to. The outer
 /// context is the [`SHED_ERROR_MARKER`] so [`is_shed_error`] can classify
-/// it; the message carries the numbers an operator needs.
-pub fn shed_error(id: u64, lane: Lane, deadline_ms: f64, est_ms: f64) -> anyhow::Error {
+/// it; the message carries the numbers an operator needs, including a
+/// `retry_after_ms` hint — the shedding lane's backlog drain estimate
+/// (queue depth × recent p50), i.e. when an immediate resubmit would stop
+/// being shed on the spot.
+pub fn shed_error(
+    id: u64,
+    lane: Lane,
+    deadline_ms: f64,
+    est_ms: f64,
+    retry_after_ms: f64,
+) -> anyhow::Error {
     anyhow::anyhow!(
-        "job {id} on lane {} missed deadline: estimated {est_ms:.1}ms > deadline {deadline_ms:.1}ms",
+        "job {id} on lane {} missed deadline: estimated {est_ms:.1}ms > deadline {deadline_ms:.1}ms (retry_after_ms={retry_after_ms:.0})",
         lane.name()
     )
     .context(format!("{SHED_ERROR_MARKER}: job {id}"))
@@ -124,6 +141,9 @@ pub struct JobRequest {
     /// shed up front with a structured error (see [`shed_error`]) instead
     /// of timing out after consuming a worker.
     pub deadline_ms: f64,
+    /// HD-transform representation policy: repr | dense | implicit | auto
+    /// (see [`STEP2_CHOICES`]). Default "" = repr, the paper path.
+    pub step2: String,
 }
 
 /// Truthy env flag ("1" | "true" | "yes") — the single authority for the
@@ -169,6 +189,7 @@ impl Default for JobRequest {
             density: 0.0,
             priority: "normal".into(),
             deadline_ms: 0.0,
+            step2: String::new(),
         }
     }
 }
@@ -202,7 +223,22 @@ impl JobRequest {
             ("density", Json::num(self.density)),
             ("priority", Json::str(self.priority.clone())),
             ("deadline_ms", Json::num(self.deadline_ms)),
+            ("step2", Json::str(self.step2.clone())),
         ])
+    }
+
+    /// The fusion signature: two coalesced requests with the same signature
+    /// are computationally identical jobs (same dataset, solver, seeds,
+    /// budgets — everything except the echoed id and the scheduling-only
+    /// fields), so one execution can serve both. Determinism of the solve
+    /// pipeline is what makes this sound: equal signatures ⇒ bitwise-equal
+    /// results.
+    pub fn fuse_signature(&self) -> String {
+        let mut c = self.clone();
+        c.id = 0;
+        c.priority.clear();
+        c.deadline_ms = 0.0;
+        c.to_json().to_string()
     }
 
     /// Parse a request from its JSON form; absent fields default. A
@@ -255,6 +291,7 @@ impl JobRequest {
             density: get_n("density", def.density),
             priority: get_s("priority", &def.priority),
             deadline_ms: get_n("deadline_ms", def.deadline_ms),
+            step2: get_s("step2", &def.step2),
         };
         req.validate()?;
         Ok(req)
@@ -301,6 +338,16 @@ impl JobRequest {
         }
         if !self.deadline_ms.is_finite() || self.deadline_ms < 0.0 {
             bail!("deadline_ms must be a finite value >= 0, got {}", self.deadline_ms);
+        }
+        if !STEP2_CHOICES.contains(&self.step2.as_str()) {
+            bail!(
+                "unknown step2 {:?} (valid: {:?})",
+                self.step2,
+                STEP2_CHOICES
+            );
+        }
+        if self.step2 == "implicit" && matches!(self.format.as_str(), "" | "dense") {
+            bail!("step2 \"implicit\" requires a sparse dataset (format sparse | libsvm)");
         }
         Ok(())
     }
@@ -368,6 +415,8 @@ impl JobRequest {
             chunk: 50,
             block_rows: (self.block_rows > 0).then_some(self.block_rows),
             seed: self.seed,
+            step2: crate::precond::Step2Policy::parse(&self.step2)
+                .with_context(|| format!("step2 {:?}", self.step2))?,
             // the cache handle / dataset id / warm iterate are attached by
             // the scheduler, which owns them
             session: Default::default(),
@@ -428,6 +477,15 @@ pub struct JobResult {
     /// 1 = ran alone; > 1 = setup/artifact work was amortized across the
     /// group while per-job trial RNG streams stayed independent.
     pub coalesced_batch: usize,
+    /// Trials executed in the fused lockstep driver (one shared objective
+    /// pass per step across the stacked iterates). 1 = trials ran serially
+    /// (the default paper path, or a solver with no step rule).
+    pub batched_trials: usize,
+    /// Concurrent identical requests this job's solve execution was shared
+    /// with (the degenerate column-stack of cross-request fusion: equal
+    /// fuse signatures ⇒ bitwise-equal results ⇒ one execution serves the
+    /// group). 1 = executed alone.
+    pub batched_requests: usize,
     /// Warm-start outcome of the best trial: "off" (not requested) |
     /// "used" (started from a prior iterate) | "rejected-dim" (a supplied
     /// x0 had the wrong dimension and the trial cold-started — previously
@@ -474,7 +532,13 @@ impl JobResult {
             ("mem_peak_bytes", Json::num(self.mem_peak_bytes as f64)),
             ("densify_events", Json::num(self.densify_events as f64)),
             ("coalesced_batch", Json::num(self.coalesced_batch as f64)),
+            ("batched_trials", Json::num(self.batched_trials as f64)),
+            (
+                "batched_requests",
+                Json::num(self.batched_requests as f64),
+            ),
             ("warm_start", Json::str(self.warm_start.clone())),
+            ("step2", Json::str(self.best.step2.clone())),
             ("iters", Json::num(self.best.iters as f64)),
             ("setup_secs", Json::num(self.best.setup_secs)),
             ("solve_secs", Json::num(self.best.solve_secs)),
@@ -673,7 +737,7 @@ mod tests {
 
     #[test]
     fn shed_errors_are_structured() {
-        let err = shed_error(42, Lane::Batch, 100.0, 350.0);
+        let err = shed_error(42, Lane::Batch, 100.0, 350.0, 220.0);
         assert!(is_shed_error(&err), "{err:#}");
         // the classification survives further wrapping
         let wrapped = err.context("while serving connection");
@@ -682,10 +746,54 @@ mod tests {
         let plain = anyhow::anyhow!("solver blew the deadline budget");
         assert!(!is_shed_error(&plain));
         // the message carries the operator-facing numbers
-        let msg = format!("{:#}", shed_error(7, Lane::High, 10.0, 99.0));
+        let msg = format!("{:#}", shed_error(7, Lane::High, 10.0, 99.0, 88.6));
         assert!(msg.contains("deadline-shed"), "{msg}");
         assert!(msg.contains("10.0ms"), "{msg}");
         assert!(msg.contains("99.0ms"), "{msg}");
+        // ...and the backlog-drain retry hint
+        assert!(msg.contains("retry_after_ms=89"), "{msg}");
+    }
+
+    #[test]
+    fn step2_roundtrip_and_validate() {
+        let mut req = JobRequest::default();
+        assert_eq!(req.step2, "");
+        req.step2 = "auto".into();
+        req.format = "sparse".into();
+        let back = JobRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back.step2, "auto");
+        let opts = back.solver_opts(0.0, None).unwrap();
+        assert_eq!(opts.step2, crate::precond::Step2Policy::Auto);
+        // "" and "repr" both map to the paper default
+        let j = Json::parse(r#"{"solver": "exact"}"#).unwrap();
+        let d = JobRequest::from_json(&j).unwrap();
+        assert_eq!(
+            d.solver_opts(0.0, None).unwrap().step2,
+            crate::precond::Step2Policy::Repr
+        );
+        // unknown policy rejected
+        let j = Json::parse(r#"{"step2": "sparse"}"#).unwrap();
+        assert!(JobRequest::from_json(&j).is_err());
+        // implicit on a dense-format request rejected up front
+        let j = Json::parse(r#"{"step2": "implicit"}"#).unwrap();
+        assert!(JobRequest::from_json(&j).is_err());
+        let j = Json::parse(r#"{"step2": "implicit", "format": "sparse"}"#).unwrap();
+        assert!(JobRequest::from_json(&j).is_ok());
+    }
+
+    #[test]
+    fn fuse_signature_ignores_identity_and_scheduling_fields() {
+        let mut a = JobRequest::default();
+        a.id = 1;
+        a.priority = "high".into();
+        a.deadline_ms = 50.0;
+        let mut b = JobRequest::default();
+        b.id = 2;
+        b.priority = "batch".into();
+        assert_eq!(a.fuse_signature(), b.fuse_signature());
+        // any compute-relevant field separates the signatures
+        b.seed = 999;
+        assert_ne!(a.fuse_signature(), b.fuse_signature());
     }
 
     #[test]

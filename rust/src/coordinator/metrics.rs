@@ -152,6 +152,14 @@ pub struct Metrics {
     pub coalesce_batch_max: AtomicUsize,
     /// Trials executed across all jobs.
     pub trials_run: AtomicUsize,
+    /// Trials that advanced in lockstep through a fused objective pass
+    /// (best-of-k under `reuse_precond`; disjoint from the serial loop).
+    pub fused_trials: AtomicUsize,
+    /// Requests that adopted a fused leader's result instead of running
+    /// their own solve (includes the leader itself when a group formed).
+    pub fused_requests: AtomicUsize,
+    /// Largest fused request group observed.
+    pub fuse_batch_max: AtomicUsize,
     /// trials that started from a warm iterate (warm_start jobs, trial > 0)
     pub warm_starts: AtomicUsize,
     /// jobs solved on a CSR dataset (the sparse workload class)
@@ -214,6 +222,18 @@ impl Metrics {
         self.coalesce_batch_max.fetch_max(batch, Ordering::Relaxed);
     }
 
+    /// Count `k` trials that ran through one fused objective pass.
+    pub fn record_fused_trials(&self, k: usize) {
+        self.fused_trials.fetch_add(k, Ordering::Relaxed);
+    }
+
+    /// Record one fused request group of size `k` resolving (leader +
+    /// followers; only called when k > 1).
+    pub fn record_fused_requests(&self, k: usize) {
+        self.fused_requests.fetch_add(k, Ordering::Relaxed);
+        self.fuse_batch_max.fetch_max(k, Ordering::Relaxed);
+    }
+
     /// Count one warm-started trial.
     pub fn record_warm_start(&self) {
         self.warm_starts.fetch_add(1, Ordering::Relaxed);
@@ -250,13 +270,15 @@ impl Metrics {
     /// One-line human-readable summary (the serve `metrics` command).
     pub fn snapshot(&self) -> String {
         format!(
-            "jobs: submitted={} completed={} failed={} shed={} coalesced={} trials={} warm_starts={} sparse_jobs={} sparse_nnz={} projections={} solve_time={:.2}s p50={} p99={}",
+            "jobs: submitted={} completed={} failed={} shed={} coalesced={} trials={} fused_trials={} fused_requests={} warm_starts={} sparse_jobs={} sparse_nnz={} projections={} solve_time={:.2}s p50={} p99={}",
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
             self.jobs_shed.load(Ordering::Relaxed),
             self.coalesced_jobs.load(Ordering::Relaxed),
             self.trials_run.load(Ordering::Relaxed),
+            self.fused_trials.load(Ordering::Relaxed),
+            self.fused_requests.load(Ordering::Relaxed),
             self.warm_starts.load(Ordering::Relaxed),
             self.sparse_jobs.load(Ordering::Relaxed),
             self.sparse_nnz.load(Ordering::Relaxed),
@@ -383,5 +405,20 @@ mod tests {
         m.record_coalesced(2);
         assert_eq!(m.coalesced_jobs.load(Ordering::Relaxed), 3);
         assert_eq!(m.coalesce_batch_max.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn fused_counters_track_trials_and_group_peak() {
+        let m = Metrics::new();
+        m.record_fused_trials(3);
+        m.record_fused_trials(5);
+        m.record_fused_requests(4);
+        m.record_fused_requests(2);
+        assert_eq!(m.fused_trials.load(Ordering::Relaxed), 8);
+        assert_eq!(m.fused_requests.load(Ordering::Relaxed), 6);
+        assert_eq!(m.fuse_batch_max.load(Ordering::Relaxed), 4);
+        let snap = m.snapshot();
+        assert!(snap.contains("fused_trials=8"), "{snap}");
+        assert!(snap.contains("fused_requests=6"), "{snap}");
     }
 }

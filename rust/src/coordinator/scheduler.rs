@@ -73,6 +73,33 @@ struct CoalesceGroup {
     peak: usize,
 }
 
+/// One cross-request fusion slot: concurrent *identical* requests (equal
+/// [`JobRequest::fuse_signature`]) elect a leader that executes the job
+/// once; followers park on `cv` and adopt the published result. Sound
+/// because the `reuse_precond` pipeline is a pure function of the request
+/// — equal signatures imply bitwise-equal results, so one execution is the
+/// degenerate column-stack of the group's solves.
+struct FuseSlot {
+    state: Mutex<FuseState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct FuseState {
+    /// Leader finished (successfully or not) and published.
+    done: bool,
+    /// The leader's result, present on success only — a failed leader
+    /// publishes `None`, and every follower falls back to its own run (so
+    /// transient failures don't fan out and a genuine error surfaces
+    /// per-request).
+    result: Option<JobResult>,
+    /// Currently registered members (leader + waiting followers).
+    members: usize,
+    /// Membership at publish time — what the group reports as
+    /// `batched_requests`.
+    shared: usize,
+}
+
 /// The coordinator proper: shared backend, worker pool, caches, metrics.
 pub struct Coordinator {
     backend: Backend,
@@ -91,6 +118,9 @@ pub struct Coordinator {
     /// (via the cache's single-flight claim) while their per-trial RNG
     /// streams stay per-job; the episode peak becomes `coalesced_batch`.
     coalesce: Mutex<HashMap<PrecondKey, CoalesceGroup>>,
+    /// Live cross-request fusion slots, keyed by [`JobRequest::fuse_signature`]
+    /// — identical concurrent `reuse_precond` requests share one execution.
+    fuse: Mutex<HashMap<String, Arc<FuseSlot>>>,
     /// Shared preconditioner artifacts, keyed by (dataset, sketch, s, seed,
     /// block_rows) — the setup-amortization layer for `reuse_precond` jobs.
     precond_cache: Arc<PrecondCache>,
@@ -112,6 +142,7 @@ impl Coordinator {
             preparing: Mutex::new(HashSet::new()),
             prepare_cv: Condvar::new(),
             coalesce: Mutex::new(HashMap::new()),
+            fuse: Mutex::new(HashMap::new()),
             precond_cache: Arc::new(PrecondCache::new(config.precond_cache_bytes)),
             mem: Arc::clone(&config.mem_budget),
             config,
@@ -145,6 +176,18 @@ impl Coordinator {
         self.pool.queued(lane)
     }
 
+    /// Backlog-drain estimate for `lane`: queued work at or above the lane,
+    /// divided across the workers, priced at the recent p50 job latency.
+    /// This is what deadline sheds hand back as `retry_after_ms` — a client
+    /// that waits roughly this long retries into a drained queue instead of
+    /// hammering a backlogged one. 0 when no latency history exists yet.
+    fn retry_hint_ms(&self, lane: Lane) -> f64 {
+        let p50 = self.metrics.latency_percentile(50.0).unwrap_or(0.0);
+        (self.pool.queued_at_or_above(lane) as f64 / self.config.workers.max(1) as f64)
+            * p50
+            * 1e3
+    }
+
     /// Admission-control estimate of a job's budget-tracked materialization
     /// bytes: the HD solvers on *dense* datasets charge one padded `[A | b]`
     /// FWHT buffer ([`crate::precond::hd_buffer_bytes`] — the same formula
@@ -155,8 +198,19 @@ impl Coordinator {
     /// other solver is step-1-only (or CGLS exact) and charges nothing. The
     /// estimate deliberately ignores untracked allocations (iterates,
     /// sketches — O(sd + d^2), negligible next to the n-sized buffer).
-    pub fn job_mem_estimate(solver: &str, n: usize, d: usize, sparse: bool) -> usize {
-        if sparse {
+    ///
+    /// `step2` is the job's *resolved* step-2 mode: a CSR job normally
+    /// holds HD implicitly and charges nothing, but one pinned (or
+    /// auto-crossed-over) to `Step2Mode::Dense` materializes the same
+    /// padded buffer a dense job does and must be admitted against it.
+    pub fn job_mem_estimate(
+        solver: &str,
+        n: usize,
+        d: usize,
+        sparse: bool,
+        step2: crate::precond::Step2Mode,
+    ) -> usize {
+        if sparse && step2 != crate::precond::Step2Mode::Dense {
             return 0;
         }
         let canonical = crate::solvers::by_name(solver)
@@ -399,8 +453,122 @@ impl Coordinator {
 
     /// Run one job synchronously: `trials` runs, report the best
     /// (paper protocol: "we test every method 10 times and take the best").
+    ///
+    /// Cross-request fusion: identical concurrent `reuse_precond` requests
+    /// (equal [`JobRequest::fuse_signature`] — id, priority and deadline
+    /// are excluded) share one execution. The leader runs the job; the
+    /// followers adopt the published result, which is bitwise what they
+    /// would have computed (the reuse pipeline is a pure function of the
+    /// request — `reuse_precond_hits_cache_on_second_job` pins exactly
+    /// that), and the whole group reports its size as `batched_requests`.
+    /// The default paper path samples its sketch from the session RNG
+    /// mid-solve and must not share anything, so it bypasses fusion.
     pub fn run_job(&self, req: &JobRequest) -> Result<JobResult> {
         req.validate()?;
+        if !req.reuse_precond {
+            return self.run_job_core(req);
+        }
+        let timer = Timer::start();
+        let sig = req.fuse_signature();
+        let (slot, leader) = self.fuse_join(&sig);
+        if leader {
+            let mut result = self.run_job_core(req);
+            let shared = {
+                let mut st = slot.state.lock().unwrap();
+                st.done = true;
+                st.shared = st.members;
+                st.result = result.as_ref().ok().cloned();
+                slot.cv.notify_all();
+                st.shared
+            };
+            {
+                // close the slot so later arrivals start a fresh episode;
+                // remove-if-same guards against a racing replacement
+                let mut map = self.fuse.lock().unwrap();
+                if map.get(&sig).is_some_and(|cur| Arc::ptr_eq(cur, &slot)) {
+                    map.remove(&sig);
+                }
+            }
+            if shared > 1 {
+                if let Ok(r) = result.as_mut() {
+                    r.batched_requests = shared;
+                    // the fused group is a (perfectly shared) coalescing
+                    // episode: report it as one so the batch observability
+                    // contract holds whichever layer deduplicated the work
+                    r.coalesced_batch = r.coalesced_batch.max(shared);
+                }
+                self.metrics.record_fused_requests(shared);
+                self.metrics.record_coalesced(shared);
+            }
+            result
+        } else {
+            let wait = Duration::from_secs_f64(req.time_budget.clamp(1.0, 600.0));
+            match self.fuse_wait(&slot, wait) {
+                Some((mut r, shared)) => {
+                    r.id = req.id;
+                    r.total_secs = timer.secs();
+                    r.batched_requests = shared;
+                    r.coalesced_batch = r.coalesced_batch.max(shared);
+                    // an adopted result is a completed job from the
+                    // service's point of view
+                    self.metrics.record_job(r.total_secs, req.trials, true);
+                    Ok(r)
+                }
+                // leader failed or the wait timed out: run (and account)
+                // our own solve — errors surface per-request, never fanned
+                // out from the leader
+                None => self.run_job_core(req),
+            }
+        }
+    }
+
+    /// Join (or open) the fusion slot for `sig`; returns the slot and
+    /// whether this caller is the leader (= must execute).
+    fn fuse_join(&self, sig: &str) -> (Arc<FuseSlot>, bool) {
+        let mut map = self.fuse.lock().unwrap();
+        if let Some(slot) = map.get(sig) {
+            let mut st = slot.state.lock().unwrap();
+            if !st.done {
+                st.members += 1;
+                let joined = Arc::clone(slot);
+                drop(st);
+                return (joined, false);
+            }
+            // published slot still in the map (the leader is between
+            // publishing and removing): fall through to a fresh episode
+        }
+        let slot = Arc::new(FuseSlot {
+            state: Mutex::new(FuseState {
+                members: 1,
+                ..FuseState::default()
+            }),
+            cv: Condvar::new(),
+        });
+        map.insert(sig.to_string(), Arc::clone(&slot));
+        (slot, true)
+    }
+
+    /// Follower wait: the leader's published result and the group size, or
+    /// None on leader failure / timeout (caller falls back to its own run).
+    fn fuse_wait(&self, slot: &FuseSlot, wait: Duration) -> Option<(JobResult, usize)> {
+        let deadline = Instant::now() + wait;
+        let mut st = slot.state.lock().unwrap();
+        while !st.done {
+            let now = Instant::now();
+            if now >= deadline {
+                // withdraw so the publish count doesn't include a member
+                // that went its own way
+                st.members -= 1;
+                return None;
+            }
+            let (guard, _) = slot.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        st.result.clone().map(|r| (r, st.shared))
+    }
+
+    /// The unfused job pipeline: prepare, admit, coalesce, run trials.
+    fn run_job_core(&self, req: &JobRequest) -> Result<JobResult> {
         let timer = Timer::start();
         let prepared = self.prepare(req)?;
         let ds = &prepared.ds;
@@ -416,11 +584,17 @@ impl Coordinator {
         let counted_ref: ConstraintRef = counted.clone();
         // built once per job: trials only vary seed/session, and rebuilding
         // the constraint per trial would redo e.g. AffineEquality's QR
-        let base_opts =
+        let mut base_opts =
             req.solver_opts_with_constraint(Arc::clone(&counted_ref), Some(gt.f_star))?;
+        // attach the coordinator budget before any key or estimate is
+        // derived: the step-2 crossover consults it, and the artifact key
+        // ("+hd" tag) must be computed against the same budget the solve
+        // itself will charge
+        base_opts.session.mem = Some(Arc::clone(&self.mem));
         let solver = crate::solvers::by_name(&req.solver).expect("validated");
         let backend = self.backend_for(req)?;
         let dataset_id = Self::dataset_key(req);
+        let step2_mode = crate::solvers::driver::resolved_step2(&base_opts, ds).0;
         // the artifact identity this job resolves to — the coalescing-group
         // key AND the admission peek's probe. None on the default paper
         // path (no reuse => nothing shareable).
@@ -437,7 +611,8 @@ impl Coordinator {
         // fit is rejected up front; one that would fit but not *now* queues
         // (bounded by its own time budget) for headroom instead of racing
         // other jobs into the budget and failing mid-solve.
-        let mut mem_est = Self::job_mem_estimate(&req.solver, ds.n(), ds.d(), ds.is_sparse());
+        let mut mem_est =
+            Self::job_mem_estimate(&req.solver, ds.n(), ds.d(), ds.is_sparse(), step2_mode);
         if let Some(key) = coalesce_key.as_ref().filter(|_| mem_est > 0) {
             // cache-aware: a resident two-step artifact (whose HD bytes are
             // already charged for as long as it is cached) means this job
@@ -496,7 +671,7 @@ impl Coordinator {
         if coalesced_batch > 1 {
             self.metrics.record_coalesced(coalesced_batch);
         }
-        let best = trials_result?;
+        let (best, batched_trials) = trials_result?;
         let total_secs = timer.secs();
         let rel = ((best.f_final - gt.f_star) / gt.f_star.max(1e-300)).max(0.0);
         self.metrics.record_job(total_secs, req.trials, true);
@@ -523,6 +698,8 @@ impl Coordinator {
             mem_peak_bytes: self.mem.peak(),
             densify_events: self.mem.densify_events() - densify_before,
             coalesced_batch,
+            batched_trials,
+            batched_requests: 1,
             warm_start: best.warm_start.clone(),
             best,
         })
@@ -530,7 +707,9 @@ impl Coordinator {
 
     /// The best-of-k trial loop, factored out of [`Self::run_job`] so the
     /// coalescing bookkeeping wraps exactly the span during which a job can
-    /// hold (or wait on) the shared preconditioner artifact.
+    /// hold (or wait on) the shared preconditioner artifact. Returns the
+    /// best report and `batched_trials` (the fused lockstep batch size; 1
+    /// when the trials ran serially).
     fn run_trials(
         &self,
         req: &JobRequest,
@@ -539,7 +718,20 @@ impl Coordinator {
         solver: &dyn Solver,
         backend: &Backend,
         dataset_id: &str,
-    ) -> Result<SolveReport> {
+    ) -> Result<(SolveReport, usize)> {
+        // Cross-trial fusion: under reuse_precond the trials share one
+        // artifact and differ only in their forked RNG streams, so they can
+        // advance in lockstep and share each chunk boundary's objective
+        // pass (one fused residual sweep prices every trial's iterate).
+        // Excluded: warm-start jobs (trial k starts from trial k-1's best —
+        // a sequential dependency) and solvers with no step rule (exact).
+        // The fused reports are bitwise-identical to the serial loop's
+        // (`drive_fused_trials` documents the contract;
+        // tests/implicit_gather.rs replays both paths).
+        if req.reuse_precond && req.trials > 1 && !req.warm_start && solver.step_rule().is_some()
+        {
+            return self.run_trials_fused(req, ds, base_opts, solver, backend, dataset_id);
+        }
         let mut seed_rng = Rng::new(req.seed);
         let mut best: Option<SolveReport> = None;
         let mut hard_require_err: Option<anyhow::Error> = None;
@@ -616,7 +808,79 @@ impl Coordinator {
         if let Some(err) = hard_require_err {
             return Err(err);
         }
-        Ok(best.expect("at least one trial"))
+        Ok((best.expect("at least one trial"), 1))
+    }
+
+    /// The fused cross-trial path of [`Self::run_trials`]: every trial's
+    /// opts are built field-for-field as the serial loop builds them (same
+    /// seed-fork order, same session), then
+    /// [`crate::solvers::drive_fused_trials`] advances them in lockstep.
+    fn run_trials_fused(
+        &self,
+        req: &JobRequest,
+        ds: &Arc<Dataset>,
+        base_opts: &SolverOpts,
+        solver: &dyn Solver,
+        backend: &Backend,
+        dataset_id: &str,
+    ) -> Result<(SolveReport, usize)> {
+        let mut seed_rng = Rng::new(req.seed);
+        let opts_list: Vec<SolverOpts> = (0..req.trials)
+            .map(|trial| {
+                let mut opts = base_opts.clone();
+                opts.seed = seed_rng.fork(trial as u64).next_u64();
+                opts.session = SessionCtx {
+                    reuse_precond: true,
+                    warm_start: false,
+                    cache: Some(Arc::clone(&self.precond_cache)),
+                    dataset_id: Some(dataset_id.to_string()),
+                    artifact_seed: req.seed,
+                    x0: None,
+                    mem: Some(Arc::clone(&self.mem)),
+                };
+                opts
+            })
+            .collect();
+        let reports = match crate::solvers::drive_fused_trials(solver, backend, ds, &opts_list)
+        {
+            Ok(r) => r,
+            Err(e) => {
+                if matches!(req.executor.as_str(), "native" | "simd" | "pjrt") {
+                    self.backend.stats().absorb(backend.stats());
+                }
+                return Err(e);
+            }
+        };
+        self.metrics.record_fused_trials(req.trials);
+        // pjrt hard-require, same contract as the serial loop — the
+        // dispatch mix is identical across trials, so the batch-level check
+        // is the serial loop's trial-0 check
+        let hard_require = req.executor == "pjrt"
+            && backend.pjrt_calls() == 0
+            && backend.native_calls() + backend.simd_calls() > 0;
+        if matches!(req.executor.as_str(), "native" | "simd" | "pjrt") {
+            self.backend.stats().absorb(backend.stats());
+        }
+        if hard_require {
+            bail!(
+                "executor \"pjrt\" requested but no op of this job hit the \
+                 manifest (n={}, solver {:?}); the solve ran fully native",
+                ds.n(),
+                req.solver
+            );
+        }
+        // best-of-k: first strictly better wins — the serial loop's order
+        let mut best: Option<SolveReport> = None;
+        for rep in reports {
+            let better = match &best {
+                None => true,
+                Some(b) => rep.f_final < b.f_final,
+            };
+            if better {
+                best = Some(rep);
+            }
+        }
+        Ok((best.expect("at least one trial"), req.trials))
     }
 
     /// Submit a job to the worker pool; the callback fires on completion
@@ -647,7 +911,9 @@ impl Coordinator {
                 let est_ms = (ahead as f64 / workers as f64) * p50_secs * 1e3;
                 if est_ms > req.deadline_ms {
                     self.metrics.record_shed(lane);
-                    on_done(Err(shed_error(req.id, lane, req.deadline_ms, est_ms)));
+                    // the drain estimate doubles as the retry hint: by the
+                    // time it elapses the backlog ahead has been served
+                    on_done(Err(shed_error(req.id, lane, req.deadline_ms, est_ms, est_ms)));
                     return;
                 }
             }
@@ -658,7 +924,14 @@ impl Coordinator {
             let waited_ms = submitted.elapsed().as_secs_f64() * 1e3;
             if req.deadline_ms > 0.0 && waited_ms > req.deadline_ms {
                 me.metrics.record_shed(lane);
-                on_done(Err(shed_error(req.id, lane, req.deadline_ms, waited_ms)));
+                let retry_ms = me.retry_hint_ms(lane);
+                on_done(Err(shed_error(
+                    req.id,
+                    lane,
+                    req.deadline_ms,
+                    waited_ms,
+                    retry_ms,
+                )));
                 return;
             }
             let result = me.run_job(&req);
@@ -900,14 +1173,34 @@ mod tests {
         assert_eq!(res.mem_est_bytes, 0);
         assert_eq!(res.densify_events, 0);
         // the estimate matches the HD buffer formula
+        use crate::precond::Step2Mode;
         assert_eq!(
-            Coordinator::job_mem_estimate("hdpw", 1000, 20, false),
+            Coordinator::job_mem_estimate("hdpw", 1000, 20, false, Step2Mode::Repr),
             1024 * 21 * 8
         );
-        assert_eq!(Coordinator::job_mem_estimate("sgd", 1000, 20, false), 0);
-        assert_eq!(Coordinator::job_mem_estimate("exact", 1000, 20, false), 0);
+        assert_eq!(
+            Coordinator::job_mem_estimate("sgd", 1000, 20, false, Step2Mode::Repr),
+            0
+        );
+        assert_eq!(
+            Coordinator::job_mem_estimate("exact", 1000, 20, false, Step2Mode::Repr),
+            0
+        );
         // CSR datasets hold HD implicitly: no buffer, no estimate
-        assert_eq!(Coordinator::job_mem_estimate("hdpw", 1000, 20, true), 0);
+        assert_eq!(
+            Coordinator::job_mem_estimate("hdpw", 1000, 20, true, Step2Mode::Repr),
+            0
+        );
+        assert_eq!(
+            Coordinator::job_mem_estimate("hdpw", 1000, 20, true, Step2Mode::Implicit),
+            0
+        );
+        // ...unless step 2 resolved to a dense materialization, which
+        // charges exactly the dense job's buffer
+        assert_eq!(
+            Coordinator::job_mem_estimate("hdpw", 1000, 20, true, Step2Mode::Dense),
+            1024 * 21 * 8
+        );
     }
 
     #[test]
@@ -1169,6 +1462,111 @@ mod tests {
             }
         }
         panic!("4 barrier-synchronized same-key jobs never overlapped in 5 rounds");
+    }
+
+    #[test]
+    fn fused_trials_report_batch_and_match_serial_replay() {
+        let c = coord();
+        let mut req = small_req("hdpwbatchsgd");
+        req.reuse_precond = true;
+        req.trials = 3;
+        req.max_iters = 200;
+        let fused = c.run_job(&req).unwrap();
+        assert_eq!(fused.batched_trials, 3, "reuse trials must run fused");
+        assert_eq!(fused.batched_requests, 1);
+        assert_eq!(
+            c.metrics
+                .fused_trials
+                .load(std::sync::atomic::Ordering::Relaxed),
+            3
+        );
+        // serial replay of the same trials: rebuild each trial's opts
+        // exactly as the serial loop would and drive them one at a time —
+        // the fused best must be bitwise equal
+        let prepared = c.prepare(&req).unwrap();
+        let ds = &prepared.ds;
+        let radius = req.resolved_radius(prepared.gt.l1_radius, prepared.gt.l2_radius);
+        let counted = ProjectionCounter::wrap(req.build_constraint(radius).unwrap());
+        let cref: ConstraintRef = counted.clone();
+        let base_opts = req
+            .solver_opts_with_constraint(cref, Some(prepared.gt.f_star))
+            .unwrap();
+        let solver = crate::solvers::by_name(&req.solver).unwrap();
+        let mut seed_rng = Rng::new(req.seed);
+        let mut best: Option<SolveReport> = None;
+        for trial in 0..req.trials {
+            let mut opts = base_opts.clone();
+            opts.seed = seed_rng.fork(trial as u64).next_u64();
+            opts.session = SessionCtx {
+                reuse_precond: true,
+                warm_start: false,
+                cache: Some(Arc::clone(c.precond_cache())),
+                dataset_id: Some(Coordinator::dataset_key(&req)),
+                artifact_seed: req.seed,
+                x0: None,
+                mem: Some(Arc::clone(c.mem_budget())),
+            };
+            let rep = solver.solve(c.backend(), ds, &opts).unwrap();
+            let better = match &best {
+                None => true,
+                Some(b) => rep.f_final < b.f_final,
+            };
+            if better {
+                best = Some(rep);
+            }
+        }
+        let serial = best.unwrap();
+        assert_eq!(fused.best.x, serial.x, "fusion changed the solve");
+        assert_eq!(fused.best_f.to_bits(), serial.f_final.to_bits());
+        assert_eq!(fused.best.iters, serial.iters);
+    }
+
+    #[test]
+    fn concurrent_identical_requests_fuse_into_one_execution() {
+        // 4 threads submit the SAME reuse request behind a barrier: one
+        // leads, the rest adopt the published result with their own id
+        // echoed back. Retry rounds guard against pathological scheduling
+        // (the leader publishing before any follower arrives).
+        let c = coord();
+        let mut req = small_req("pwgradient");
+        req.reuse_precond = true;
+        for round in 0..5 {
+            let mut seeded = req.clone();
+            seeded.seed = 300 + round;
+            let serial = coord().run_job(&seeded).unwrap();
+            let barrier = Arc::new(std::sync::Barrier::new(4));
+            let results: Vec<JobResult> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..4u64)
+                    .map(|i| {
+                        let c = Arc::clone(&c);
+                        let mut r = seeded.clone();
+                        r.id = i; // identity is excluded from the signature
+                        let b = Arc::clone(&barrier);
+                        s.spawn(move || {
+                            b.wait();
+                            c.run_job(&r).unwrap()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (i, r) in results.iter().enumerate() {
+                assert_eq!(r.id, i as u64, "adopted results echo the caller's id");
+                assert_eq!(r.best.x, serial.best.x, "fusion changed the solve");
+                assert_eq!(r.best_f.to_bits(), serial.best_f.to_bits());
+            }
+            if results.iter().any(|r| r.batched_requests > 1) {
+                assert!(c.fuse.lock().unwrap().is_empty(), "slot must close");
+                assert!(
+                    c.metrics
+                        .fused_requests
+                        .load(std::sync::atomic::Ordering::Relaxed)
+                        > 0
+                );
+                return;
+            }
+        }
+        panic!("4 barrier-synchronized identical jobs never fused in 5 rounds");
     }
 
     #[test]

@@ -150,6 +150,12 @@ pub fn handle_connection<R: BufRead, W: Write + Send + 'static>(
                         "coalesce_batch_max",
                         load(m.coalesce_batch_max.load(ord)),
                     ));
+                    // batched-execution visibility: fused trial count, how
+                    // many requests rode a shared execution, and the largest
+                    // group observed
+                    fields.push(("fused_trials", load(m.fused_trials.load(ord))));
+                    fields.push(("fused_requests", load(m.fused_requests.load(ord))));
+                    fields.push(("fuse_batch_max", load(m.fuse_batch_max.load(ord))));
                     fields.push(("pool_steals", load(coord.pool_steals())));
                     fields.push((
                         "precond_wait_joins",
@@ -325,6 +331,9 @@ mod tests {
             "jobs_shed",
             "coalesced_jobs",
             "coalesce_batch_max",
+            "fused_trials",
+            "fused_requests",
+            "fuse_batch_max",
             "pool_steals",
         ] {
             assert!(out[1].get(field).and_then(Json::as_f64).is_some(), "{field}");

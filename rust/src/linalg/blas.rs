@@ -197,6 +197,55 @@ pub fn residual_sq(a: &Mat, b: &[f64], x: &[f64]) -> f64 {
         .sum()
 }
 
+/// `||A x_k - b||^2` for a batch of iterates in one pass over `A`.
+///
+/// Per-column arithmetic mirrors [`residual_sq`] exactly — same thread
+/// count, same row-block split, same per-row `dot(row, x_k) - b[i]` update
+/// and the same in-order block merge — so column `k` of the result is
+/// bitwise equal to the serial `residual_sq(a, b, &xs[k])`. The
+/// fused-trials driver relies on this to keep batched execution
+/// bit-identical to serial replay. The win is memory traffic: each row of
+/// `A` is read once for all `k` iterates instead of `k` times.
+pub fn residual_sq_multi(a: &Mat, b: &[f64], xs: &[Vec<f64>]) -> Vec<f64> {
+    assert_eq!(a.rows, b.len());
+    for x in xs {
+        assert_eq!(a.cols, x.len());
+    }
+    let k = xs.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    let threads = if a.rows * a.cols > 1 << 16 {
+        default_threads()
+    } else {
+        1
+    };
+    let block = a.rows.div_ceil(threads.max(1)).max(64);
+    let nblocks = a.rows.div_ceil(block);
+    let partials: Vec<std::sync::Mutex<Vec<f64>>> = (0..nblocks)
+        .map(|_| std::sync::Mutex::new(vec![0.0; k]))
+        .collect();
+    parallel_for_each_index(nblocks, threads, |bi| {
+        let lo = bi * block;
+        let hi = (lo + block).min(a.rows);
+        let mut local = partials[bi].lock().unwrap();
+        for i in lo..hi {
+            let row = a.row(i);
+            for (sk, x) in local.iter_mut().zip(xs) {
+                let r = dot(row, x) - b[i];
+                *sk += r * r;
+            }
+        }
+    });
+    let mut out = vec![0.0; k];
+    for p in &partials {
+        for (o, s) in out.iter_mut().zip(p.lock().unwrap().iter()) {
+            *o += s;
+        }
+    }
+    out
+}
+
 // ---------------------------------------------------------------------------
 // level 3
 // ---------------------------------------------------------------------------
@@ -406,6 +455,29 @@ mod tests {
         let r = sub(&gemv(&a, &x), &b);
         let want: f64 = r.iter().map(|v| v * v).sum();
         assert!((residual_sq(&a, &b, &x) - want).abs() < 1e-9 * want);
+    }
+
+    #[test]
+    fn residual_sq_multi_is_bitwise_per_column() {
+        let mut rng = Rng::new(17);
+        // small (serial, 300x11) and large (parallel, 600x120 > 1<<16)
+        for (n, d) in [(300usize, 11usize), (600, 120)] {
+            let a = Mat::gaussian(n, d, &mut rng);
+            let b = rng.gaussians(n);
+            let xs: Vec<Vec<f64>> = (0..4).map(|_| rng.gaussians(d)).collect();
+            let multi = residual_sq_multi(&a, &b, &xs);
+            assert_eq!(multi.len(), 4);
+            for (k, x) in xs.iter().enumerate() {
+                let serial = residual_sq(&a, &b, x);
+                assert_eq!(
+                    multi[k].to_bits(),
+                    serial.to_bits(),
+                    "({n}x{d}) column {k}: {} vs {serial}",
+                    multi[k]
+                );
+            }
+        }
+        assert!(residual_sq_multi(&Mat::zeros(3, 2), &[0.0; 3], &[]).is_empty());
     }
 
     #[test]

@@ -169,6 +169,25 @@ impl CsrMat {
         s
     }
 
+    /// `||A x_k - b||^2` for a batch of iterates in one CSR pass.
+    ///
+    /// Per-column arithmetic (row order, `row_dot` accumulation, the
+    /// `r * r` running sum) is identical to [`CsrMat::residual_sq`], so
+    /// column `k` of the result is bitwise equal to the serial
+    /// `residual_sq(b, &xs[k])` — the fused-trials driver's bit-identity
+    /// contract depends on this.
+    pub fn residual_sq_multi(&self, b: &[f64], xs: &[Vec<f64>]) -> Vec<f64> {
+        assert_eq!(self.rows, b.len());
+        let mut s = vec![0.0; xs.len()];
+        for i in 0..self.rows {
+            for (sk, x) in s.iter_mut().zip(xs) {
+                let r = self.row_dot(i, x) - b[i];
+                *sk += r * r;
+            }
+        }
+        s
+    }
+
     /// Full gradient `scale * A^T (A x - b)` in O(nnz).
     pub fn fused_grad(&self, b: &[f64], x: &[f64], scale: f64) -> Vec<f64> {
         assert_eq!(self.rows, b.len());
@@ -324,6 +343,21 @@ mod tests {
         for (u, v) in g.iter().zip(&g_ref) {
             assert!((u - v).abs() < 1e-10, "{u} vs {v}");
         }
+    }
+
+    #[test]
+    fn residual_sq_multi_is_bitwise_per_column() {
+        let a = sparse_dense(80, 7, 0.3, 9);
+        let csr = CsrMat::from_dense(&a);
+        let mut rng = Rng::new(13);
+        let b = rng.gaussians(80);
+        let xs: Vec<Vec<f64>> = (0..3).map(|_| rng.gaussians(7)).collect();
+        let multi = csr.residual_sq_multi(&b, &xs);
+        for (k, x) in xs.iter().enumerate() {
+            let serial = csr.residual_sq(&b, x);
+            assert_eq!(multi[k].to_bits(), serial.to_bits(), "column {k}");
+        }
+        assert!(csr.residual_sq_multi(&b, &[]).is_empty());
     }
 
     #[test]

@@ -103,6 +103,11 @@ fn cmd_solve(argv: &[String]) -> i32 {
         .opt("sketch", "gaussian|srht|countsketch|sparse (default countsketch)")
         .opt("sketch-size", "sketch rows s (default auto)")
         .opt("eta", "fixed step size (default: theory)")
+        .opt(
+            "step2",
+            "repr|dense|implicit|auto HD-transform representation policy \
+             (default repr; auto = nnz-aware cost model)",
+        )
         .opt("executor", "default|native|simd|auto|pjrt (per-request backend)")
         .opt("block-rows", "row-shard height for streamed setup (default auto)")
         .opt("priority", "high|normal|batch scheduler lane (default normal)")
@@ -142,6 +147,9 @@ fn cmd_solve(argv: &[String]) -> i32 {
     req.sketch = args.get_or("sketch", "countsketch");
     req.sketch_size = args.get_usize("sketch-size", 0);
     req.eta = args.get_f64("eta", 0.0);
+    if let Some(s) = args.get("step2") {
+        req.step2 = s.to_string();
+    }
     req.executor = args.get_or("executor", "default");
     req.block_rows = args.get_usize("block-rows", 0);
     if let Some(p) = args.get("priority") {
@@ -229,6 +237,15 @@ fn cmd_solve(argv: &[String]) -> i32 {
                 println!("rel error  : {:.3e}", res.best_rel_err);
                 if res.best.precond_cache != hdpw::precond::CacheOutcome::Off {
                     println!("precond    : {} (artifact cache)", res.best.precond_cache.as_str());
+                }
+                if !res.best.step2.is_empty() {
+                    println!("step2      : {}", res.best.step2);
+                }
+                if res.batched_trials > 1 || res.batched_requests > 1 {
+                    println!(
+                        "batched    : trials={} requests={}",
+                        res.batched_trials, res.batched_requests
+                    );
                 }
                 println!("iters      : {}", res.best.iters);
                 println!(

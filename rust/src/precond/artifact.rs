@@ -30,7 +30,7 @@
 use super::cache::PrecondKey;
 use super::{
     hd_implicit_ds, hd_transform_ds_with, precondition_ds_budgeted, HdTransformed, ImplicitHd,
-    Precondition,
+    Precondition, Step2Mode,
 };
 use crate::backend::Backend;
 use crate::data::Dataset;
@@ -111,6 +111,19 @@ impl std::fmt::Debug for PrecondArtifact {
     }
 }
 
+/// Whether step 2 is held implicitly under `mode`. `Repr` matches the data
+/// representation (the legacy contract); `Dense` always materializes (on
+/// CSR: a charged, counted densify); `Implicit` keeps the signs-only form —
+/// on a *dense* dataset there is no CSR payload to gather from, so a pinned
+/// implicit request degrades to the materialized form (the coordinator
+/// rejects that combination up front; this keeps the direct API panic-free).
+fn step2_implicit(ds: &Dataset, mode: Step2Mode) -> bool {
+    match mode {
+        Step2Mode::Repr | Step2Mode::Implicit => ds.is_sparse(),
+        Step2Mode::Dense => false,
+    }
+}
+
 impl PrecondArtifact {
     fn from_parts(
         pre: Precondition,
@@ -154,14 +167,15 @@ impl PrecondArtifact {
         rng: &mut Rng,
         block_rows: Option<usize>,
         with_hd: bool,
+        step2: Step2Mode,
         budget: &Arc<MemBudget>,
     ) -> Result<PrecondArtifact, MemError> {
         let pre =
             precondition_ds_budgeted(backend, ds, kind, sketch_rows, rng, block_rows, budget)?;
         let (hd, hd_implicit) = if with_hd {
-            if ds.is_sparse() {
-                // sparse step 2 is implicit: same sign draws, zero densify,
-                // zero charge — the padded buffer is never built
+            if step2_implicit(ds, step2) {
+                // implicit step 2: same sign draws, zero densify, zero
+                // charge — the padded buffer is never built
                 (None, Some(hd_implicit_ds(ds, rng)))
             } else {
                 let stage = format!("hd_transform[{}]", ds.name);
@@ -186,12 +200,14 @@ impl PrecondArtifact {
     /// Cache-keyed construction: the artifact is a pure function of
     /// `(dataset, key)` — no caller rng state is consumed, so trial streams
     /// are identical whether this ran or a cached copy was returned.
+    #[allow(clippy::too_many_arguments)]
     pub fn compute_keyed(
         backend: &Backend,
         ds: &Dataset,
         key: &PrecondKey,
         block_rows: Option<usize>,
         with_hd: bool,
+        step2: Step2Mode,
         budget: &Arc<MemBudget>,
     ) -> Result<PrecondArtifact, MemError> {
         let (mut sketch_rng, mut hd_rng) = PrecondArtifact::keyed_rngs(key);
@@ -205,7 +221,7 @@ impl PrecondArtifact {
             budget,
         )?;
         let (hd, hd_implicit) = if with_hd {
-            if ds.is_sparse() {
+            if step2_implicit(ds, step2) {
                 (None, Some(hd_implicit_ds(ds, &mut hd_rng)))
             } else {
                 let stage = format!("hd_transform[{}]", ds.name);
@@ -231,10 +247,11 @@ impl PrecondArtifact {
         backend: &Backend,
         ds: &Dataset,
         key: &PrecondKey,
+        step2: Step2Mode,
         budget: &Arc<MemBudget>,
     ) -> Result<PrecondArtifact, MemError> {
         let (_, mut hd_rng) = PrecondArtifact::keyed_rngs(key);
-        let (hd, hd_implicit) = if ds.is_sparse() {
+        let (hd, hd_implicit) = if step2_implicit(ds, step2) {
             (None, Some(hd_implicit_ds(ds, &mut hd_rng)))
         } else {
             let stage = format!("hd_transform[{}]", ds.name);
@@ -349,14 +366,24 @@ impl HdView<'_> {
     }
 
     /// Materialize rows `idx` of `HD[A|b]` as a `idx.len() x d` design
-    /// block plus the matching responses.
+    /// block plus the matching responses, with the default sampled-row tile
+    /// ([`super::GATHER_BLOCK`]) on the implicit path.
     pub fn gather(&self, idx: &[usize]) -> (Mat, Vec<f64>) {
+        self.gather_blocked(idx, 0)
+    }
+
+    /// [`HdView::gather`] with an explicit sampled-row tile size for the
+    /// implicit (CSR) path — the step rules pass their mini-batch size so
+    /// one blockwise pass over the CSR payload covers the whole batch
+    /// (`block = 0` means the [`super::GATHER_BLOCK`] default). Dense
+    /// gathers are plain row copies and ignore the knob.
+    pub fn gather_blocked(&self, idx: &[usize], block: usize) -> (Mat, Vec<f64>) {
         match self {
             HdView::Dense(h) => (
                 h.hda.gather_rows(idx),
                 idx.iter().map(|&i| h.hdb[i]).collect(),
             ),
-            HdView::Implicit { hd, a, b } => hd.gather_rows_csr(a, b, idx),
+            HdView::Implicit { hd, a, b } => hd.gather_rows_csr_blocked(a, b, idx, block),
         }
     }
 }
@@ -409,6 +436,7 @@ mod tests {
             &mut r2,
             None,
             true,
+            Step2Mode::Repr,
             &unlimited(),
         )
         .unwrap();
@@ -426,15 +454,15 @@ mod tests {
         let d = ds(300, 5, 2);
         let be = Backend::native();
         let budget = unlimited();
-        let a1 = PrecondArtifact::compute_keyed(&be, &d, &key(9), None, true, &budget).unwrap();
-        let a2 = PrecondArtifact::compute_keyed(&be, &d, &key(9), None, true, &budget).unwrap();
+        let a1 = PrecondArtifact::compute_keyed(&be, &d, &key(9), None, true, Step2Mode::Repr, &budget).unwrap();
+        let a2 = PrecondArtifact::compute_keyed(&be, &d, &key(9), None, true, Step2Mode::Repr, &budget).unwrap();
         assert_eq!(a1.r.max_abs_diff(&a2.r), 0.0);
         assert_eq!(
             a1.hd.as_ref().unwrap().hda.max_abs_diff(&a2.hd.as_ref().unwrap().hda),
             0.0
         );
         // a different key seed samples a different sketch
-        let a3 = PrecondArtifact::compute_keyed(&be, &d, &key(10), None, false, &budget).unwrap();
+        let a3 = PrecondArtifact::compute_keyed(&be, &d, &key(10), None, false, Step2Mode::Repr, &budget).unwrap();
         assert!(a3.r.max_abs_diff(&a1.r) > 0.0);
     }
 
@@ -444,10 +472,10 @@ mod tests {
         let be = Backend::native();
         let budget = unlimited();
         let k = key(4);
-        let plain = PrecondArtifact::compute_keyed(&be, &d, &k, None, false, &budget).unwrap();
+        let plain = PrecondArtifact::compute_keyed(&be, &d, &k, None, false, Step2Mode::Repr, &budget).unwrap();
         assert!(plain.hd.is_none());
-        let upgraded = plain.with_hd(&be, &d, &k, &budget).unwrap();
-        let direct = PrecondArtifact::compute_keyed(&be, &d, &k, None, true, &budget).unwrap();
+        let upgraded = plain.with_hd(&be, &d, &k, Step2Mode::Repr, &budget).unwrap();
+        let direct = PrecondArtifact::compute_keyed(&be, &d, &k, None, true, Step2Mode::Repr, &budget).unwrap();
         assert_eq!(upgraded.r.max_abs_diff(&direct.r), 0.0);
         let (u, v) = (upgraded.hd.as_ref().unwrap(), direct.hd.as_ref().unwrap());
         assert_eq!(u.n_pad, v.n_pad);
@@ -461,7 +489,7 @@ mod tests {
         let be = Backend::native();
         let budget = unlimited();
         let art =
-            PrecondArtifact::compute_keyed(&be, &d, &key(5), None, true, &budget).unwrap();
+            PrecondArtifact::compute_keyed(&be, &d, &key(5), None, true, Step2Mode::Repr, &budget).unwrap();
         let n_pad = 300usize.next_power_of_two();
         assert_eq!(budget.used(), n_pad * 6 * 8, "HD buffer stays accounted");
         drop(art);
@@ -483,6 +511,7 @@ mod tests {
             &mut rng,
             None,
             true,
+            Step2Mode::Repr,
             &tight,
         )
         .unwrap_err();
@@ -497,6 +526,7 @@ mod tests {
             &mut rng2,
             None,
             false,
+            Step2Mode::Repr,
             &tight,
         )
         .unwrap();
@@ -523,8 +553,11 @@ mod tests {
         let k = key(12);
         let bud_d = unlimited();
         let bud_s = unlimited();
-        let ad = PrecondArtifact::compute_keyed(&be, &dense, &k, None, true, &bud_d).unwrap();
-        let asp = PrecondArtifact::compute_keyed(&be, &sparse, &k, None, true, &bud_s).unwrap();
+        let ad = PrecondArtifact::compute_keyed(&be, &dense, &k, None, true, Step2Mode::Repr, &bud_d)
+            .unwrap();
+        let asp =
+            PrecondArtifact::compute_keyed(&be, &sparse, &k, None, true, Step2Mode::Repr, &bud_s)
+                .unwrap();
         assert!(ad.hd.is_some() && ad.hd_implicit.is_none());
         assert!(asp.hd.is_none() && asp.hd_implicit.is_some());
         assert!(asp.has_step2());
@@ -554,11 +587,86 @@ mod tests {
     }
 
     #[test]
+    fn dense_pinned_step2_on_csr_materializes_and_charges() {
+        // step2 = Dense on a CSR dataset: the artifact must hold the same
+        // materialized HD[A|b] the dense copy of the data produces (same
+        // keyed rng stream), charge the padded buffer, and count the
+        // densify — the explicit opt-out of the zero-densify contract.
+        let mut rng = Rng::new(21);
+        let a = Mat::from_fn(300, 5, |_, _| {
+            if rng.uniform() < 0.3 {
+                rng.gaussian()
+            } else {
+                0.0
+            }
+        });
+        let b = rng.gaussians(300);
+        let dense = Dataset::dense("t", a.clone(), b.clone(), None);
+        let sparse = Dataset::from_csr("t", CsrMat::from_dense(&a), b, None);
+        let be = Backend::native();
+        let k = key(12);
+        let bud_d = unlimited();
+        let bud_s = unlimited();
+        let ad = PrecondArtifact::compute_keyed(&be, &dense, &k, None, true, Step2Mode::Repr, &bud_d)
+            .unwrap();
+        let asp =
+            PrecondArtifact::compute_keyed(&be, &sparse, &k, None, true, Step2Mode::Dense, &bud_s)
+                .unwrap();
+        assert!(asp.hd.is_some() && asp.hd_implicit.is_none());
+        let (u, v) = (ad.hd.as_ref().unwrap(), asp.hd.as_ref().unwrap());
+        assert_eq!(u.n_pad, v.n_pad);
+        let n_pad = 300usize.next_power_of_two();
+        assert_eq!(bud_s.used(), n_pad * 6 * 8, "padded buffer is charged");
+        assert!(bud_s.densify_events() > 0, "dense pin is a counted densify");
+        // the materialized rows agree with the dense-data transform up to
+        // fp re-association of the padded FWHT input
+        for r in [0usize, 3, 17, 255] {
+            for c in 0..5 {
+                let (x, y) = (u.hda.at(r, c), v.hda.at(r, c));
+                assert!((x - y).abs() < 1e-10 * (1.0 + x.abs()), "({r},{c}): {x} vs {y}");
+            }
+        }
+        // an implicit pin on dense data degrades to the materialized form
+        // instead of panicking at gather time
+        let pinned =
+            PrecondArtifact::compute_keyed(&be, &dense, &k, None, true, Step2Mode::Implicit, &bud_d)
+                .unwrap();
+        assert!(pinned.hd.is_some() && pinned.hd_implicit.is_none());
+    }
+
+    #[test]
+    fn gather_blocked_matches_default_gather() {
+        let mut rng = Rng::new(23);
+        let a = Mat::from_fn(200, 4, |_, _| {
+            if rng.uniform() < 0.25 {
+                rng.gaussian()
+            } else {
+                0.0
+            }
+        });
+        let b = rng.gaussians(200);
+        let sparse = Dataset::from_csr("t", CsrMat::from_dense(&a), b, None);
+        let be = Backend::native();
+        let art =
+            PrecondArtifact::compute_keyed(&be, &sparse, &key(3), None, true, Step2Mode::Repr, &unlimited())
+                .unwrap();
+        let v = art.hd_view(&sparse).unwrap();
+        let idx = vec![0usize, 7, 31, 200, 255];
+        let (m0, b0) = v.gather(&idx);
+        for block in [1usize, 3, 5, 64] {
+            let (m, bb) = v.gather_blocked(&idx, block);
+            assert_eq!(m.max_abs_diff(&m0), 0.0, "block {block}");
+            assert_eq!(bb, b0, "block {block}");
+        }
+    }
+
+    #[test]
     fn metric_is_built_once_and_shared() {
         let d = ds(256, 4, 5);
         let be = Backend::native();
         let art =
-            PrecondArtifact::compute_keyed(&be, &d, &key(1), None, false, &unlimited()).unwrap();
+            PrecondArtifact::compute_keyed(&be, &d, &key(1), None, false, Step2Mode::Repr, &unlimited())
+                .unwrap();
         let m1 = art.metric();
         let m2 = art.metric();
         assert!(Arc::ptr_eq(&m1, &m2));
@@ -578,8 +686,8 @@ mod tests {
         let d = ds(256, 4, 6);
         let be = Backend::native();
         let budget = unlimited();
-        let plain = PrecondArtifact::compute_keyed(&be, &d, &key(2), None, false, &budget).unwrap();
-        let full = PrecondArtifact::compute_keyed(&be, &d, &key(2), None, true, &budget).unwrap();
+        let plain = PrecondArtifact::compute_keyed(&be, &d, &key(2), None, false, Step2Mode::Repr, &budget).unwrap();
+        let full = PrecondArtifact::compute_keyed(&be, &d, &key(2), None, true, Step2Mode::Repr, &budget).unwrap();
         assert!(full.bytes() > plain.bytes());
         // hd payload dominates: n_pad x (d) + n_pad doubles
         let hd = full.hd.as_ref().unwrap();

@@ -378,6 +378,7 @@ mod tests {
                 &key(seed),
                 None,
                 with_hd,
+                crate::precond::Step2Mode::Repr,
                 &crate::util::mem::MemBudget::unlimited(),
             )
             .unwrap(),

@@ -300,6 +300,119 @@ pub fn hd_transform(a: &Mat, b: &[f64], rng: &mut Rng) -> HdTransformed {
     hd_transform_with(&Backend::native(), a, b, rng)
 }
 
+/// Request-level step-2 representation policy — the `--step2` knob a
+/// [`crate::coordinator::JobRequest`] carries. [`resolve_step2`] turns it
+/// into a concrete [`Step2Mode`] (+ the report string) per job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Step2Policy {
+    /// Representation-pinned (the default and the paper path): dense
+    /// datasets materialize `HD[A|b]`, sparse datasets hold it implicitly —
+    /// the CSR pipeline stays zero-densify, which the CI acceptance gates
+    /// pin.
+    #[default]
+    Repr,
+    /// Force the materialized transform (budget-charged; on CSR it is a
+    /// counted densify event).
+    Dense,
+    /// Force the implicit transform (meaningful on CSR datasets; dense
+    /// datasets have no sparse payload to gather from and stay
+    /// materialized).
+    Implicit,
+    /// nnz-aware cost model picks dense vs implicit per job; never picks a
+    /// dense buffer the [`MemBudget`] cannot charge.
+    Auto,
+}
+
+impl Step2Policy {
+    /// Parse the request string (`"" | "repr" | "dense" | "implicit" |
+    /// "auto"`); `None` on anything else.
+    pub fn parse(s: &str) -> Option<Step2Policy> {
+        match s {
+            "" | "repr" => Some(Step2Policy::Repr),
+            "dense" => Some(Step2Policy::Dense),
+            "implicit" => Some(Step2Policy::Implicit),
+            "auto" => Some(Step2Policy::Auto),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (CLI help, report fields).
+    pub fn name(self) -> &'static str {
+        match self {
+            Step2Policy::Repr => "repr",
+            Step2Policy::Dense => "dense",
+            Step2Policy::Implicit => "implicit",
+            Step2Policy::Auto => "auto",
+        }
+    }
+}
+
+/// The resolved step-2 representation an artifact is built with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Step2Mode {
+    /// Match the data representation (legacy behavior: dense datasets
+    /// materialize, CSR stays implicit).
+    #[default]
+    Repr,
+    /// Materialize `HD[A|b]` even on CSR (charged, counted densify).
+    Dense,
+    /// Hold step 2 implicitly (CSR datasets; no-op pin on dense data).
+    Implicit,
+}
+
+/// Resolve a [`Step2Policy`] for one job into the [`Step2Mode`] the
+/// artifact layer builds with, plus the report string
+/// (`dense | implicit | auto→dense | auto→implicit`).
+///
+/// The `Auto` cost model compares, in units of f64 touches:
+///
+/// * dense: `n_pad·(d+1)·(log2(n_pad)+2)` to materialize + FWHT the padded
+///   buffer once, plus `total_rows·(d+1)` for the per-iteration row copies;
+/// * implicit: `total_rows·(nnz + n)` — every sampled row costs one
+///   coefficient pass over the sign vector plus one scatter of the CSR
+///   payload (the blockwise gather amortizes the *memory traffic*, not the
+///   flops);
+///
+/// where `total_rows = max_iters × batch_size` is the job's expected
+/// sampled-row volume. Dense wins only when it is both cheaper *and*
+/// chargeable right now (`budget.would_fit` on [`hd_buffer_bytes`]) — the
+/// auto policy never resolves to a buffer the budget can't hold, so the
+/// worst case under memory pressure is the implicit path, never a
+/// structured over-budget error.
+pub fn resolve_step2(
+    policy: Step2Policy,
+    ds: &Dataset,
+    total_rows: usize,
+    budget: &Arc<MemBudget>,
+) -> (Step2Mode, String) {
+    match policy {
+        Step2Policy::Repr => {
+            let eff = if ds.is_sparse() { "implicit" } else { "dense" };
+            (Step2Mode::Repr, eff.into())
+        }
+        Step2Policy::Dense => (Step2Mode::Dense, "dense".into()),
+        Step2Policy::Implicit => (Step2Mode::Implicit, "implicit".into()),
+        Step2Policy::Auto => {
+            if !ds.is_sparse() {
+                // dense data: the materialized form is both the bit-exact
+                // reference and the cheaper one (rows are plain copies)
+                return (Step2Mode::Repr, "auto→dense".into());
+            }
+            let (n, d) = (ds.n(), ds.d());
+            let n_pad = n.next_power_of_two().max(2);
+            let rows = total_rows.max(1) as f64;
+            let dense_cost = (n_pad * (d + 1)) as f64 * ((n_pad as f64).log2() + 2.0)
+                + rows * (d + 1) as f64;
+            let implicit_cost = rows * (ds.nnz() + n) as f64;
+            if dense_cost < implicit_cost && budget.would_fit(hd_buffer_bytes(n, d)) {
+                (Step2Mode::Dense, "auto→dense".into())
+            } else {
+                (Step2Mode::Repr, "auto→implicit".into())
+            }
+        }
+    }
+}
+
 /// Step 2 in **implicit** form — the sparsity-preserving Randomized
 /// Hadamard Transform for CSR datasets.
 ///
@@ -349,21 +462,96 @@ pub fn hd_implicit_ds(ds: &Dataset, rng: &mut Rng) -> ImplicitHd {
     }
 }
 
+/// Default sampled-row tile for the blockwise implicit gather: bounds the
+/// output panel (`GATHER_BLOCK x (d+1)` of f64) touched while one CSR source
+/// row is cache-hot. 128 rows x 101 cols ≈ 100 KiB — inside L2 on every
+/// target arch, large enough to amortize the CSR traversal ~128x. Callers
+/// with a natural batch size (the step rules) pass it explicitly through
+/// [`HdView::gather_blocked`](artifact::HdView::gather_blocked).
+pub const GATHER_BLOCK: usize = 128;
+
 impl ImplicitHd {
-    /// Materialize the sampled rows `idx` of `HD[A|b]` straight from CSR:
-    /// one butterfly-free signed scatter pass per sampled row (O(nnz + n)
-    /// each), returning the `idx.len() x d` design rows and the matching
+    /// Materialize the sampled rows `idx` of `HD[A|b]` straight from CSR,
+    /// returning the `idx.len() x d` design rows and the matching
     /// transformed responses. This is the ONLY dense object the implicit
     /// step 2 ever produces — a batch-sized gather, identical in shape to
     /// what the dense path's `gather_rows` hands the executors.
+    ///
+    /// Blockwise since PR 9: source rows iterate *outer*, sampled rows
+    /// *inner*, so each CSR byte is read once per batch instead of once per
+    /// sampled row (O(nnz + r·n) per batch vs the reference's O(r·(nnz+n))
+    /// memory traffic). Bit-identical to [`Self::gather_rows_csr_ref`]: per
+    /// output cell the same coefficients accumulate in the same ascending-j
+    /// order with the same plain mul+add arithmetic (the
+    /// [`crate::simd::hd_scatter_row`] kernel contract).
     pub fn gather_rows_csr(&self, a: &CsrMat, b: &[f64], idx: &[usize]) -> (Mat, Vec<f64>) {
+        self.gather_rows_csr_blocked(a, b, idx, 0)
+    }
+
+    /// [`Self::gather_rows_csr`] with an explicit sampled-row tile size
+    /// (`block == 0` means [`GATHER_BLOCK`]). The step rules pass their
+    /// mini-batch size so one solver batch is one tile.
+    pub fn gather_rows_csr_blocked(
+        &self,
+        a: &CsrMat,
+        b: &[f64],
+        idx: &[usize],
+        block: usize,
+    ) -> (Mat, Vec<f64>) {
+        assert_eq!(a.rows, b.len());
+        assert!(a.rows <= self.n_pad);
+        for &i in idx {
+            assert!(
+                i < self.n_pad,
+                "sample index {i} outside the padded universe {}",
+                self.n_pad
+            );
+        }
+        let block = if block == 0 { GATHER_BLOCK } else { block };
+        let inv = 1.0 / (self.n_pad as f64).sqrt();
+        let ld = a.cols;
+        let mut out = Mat::zeros(idx.len(), ld);
+        let mut outb = vec![0.0; idx.len()];
+        let mut coeffs = vec![0.0; block.min(idx.len().max(1))];
+        let mut lo = 0;
+        while lo < idx.len() {
+            let hi = (lo + block).min(idx.len());
+            let tile = &idx[lo..hi];
+            let cs = &mut coeffs[..tile.len()];
+            let out_tile = &mut out.data[lo * ld..hi * ld];
+            let outb_tile = &mut outb[lo..hi];
+            for j in 0..a.rows {
+                // sign panel: per-(i,j) Rademacher·parity coefficient for
+                // every sampled row in the tile, computed up front so the
+                // scatter kernel only streams
+                for (k, &i) in tile.iter().enumerate() {
+                    // (-1)^popcount(i & j): +1 on even parity, -1 on odd
+                    let parity = if (i & j).count_ones() & 1 == 1 { -1.0 } else { 1.0 };
+                    cs[k] = self.signs[j] * parity * inv;
+                }
+                let (cols, vals) = a.row(j);
+                crate::simd::hd_scatter_row(cols, vals, b[j], cs, out_tile, ld, outb_tile);
+            }
+            lo = hi;
+        }
+        (out, outb)
+    }
+
+    /// The original per-sampled-row gather (sampled rows outer, one full
+    /// CSR pass each): kept as the bit-exact oracle for the blockwise path
+    /// (`tests/implicit_gather.rs`) and the baseline leg of `BENCH_gather`.
+    pub fn gather_rows_csr_ref(&self, a: &CsrMat, b: &[f64], idx: &[usize]) -> (Mat, Vec<f64>) {
         assert_eq!(a.rows, b.len());
         assert!(a.rows <= self.n_pad);
         let inv = 1.0 / (self.n_pad as f64).sqrt();
         let mut out = Mat::zeros(idx.len(), a.cols);
         let mut outb = vec![0.0; idx.len()];
         for (k, &i) in idx.iter().enumerate() {
-            debug_assert!(i < self.n_pad);
+            assert!(
+                i < self.n_pad,
+                "sample index {i} outside the padded universe {}",
+                self.n_pad
+            );
             let row = out.row_mut(k);
             let mut acc_b = 0.0;
             for j in 0..a.rows {
@@ -648,6 +836,114 @@ mod tests {
             precondition_ds_budgeted(&be, &ds, SketchKind::Srht, 64, &mut r4, None, &tight)
                 .is_err()
         );
+    }
+
+    #[test]
+    fn blockwise_gather_matches_reference_bitwise() {
+        let mut rng = Rng::new(61);
+        let dense = Mat::from_fn(300, 9, |_, _| {
+            if rng.uniform() < 0.2 {
+                rng.gaussian()
+            } else {
+                0.0
+            }
+        });
+        let b = rng.gaussians(300);
+        let csr = crate::linalg::CsrMat::from_dense(&dense);
+        let ds = crate::data::Dataset::from_csr("sp", csr.clone(), b.clone(), None);
+        let mut r1 = Rng::new(13);
+        let hd = hd_implicit_ds(&ds, &mut r1);
+        let idx: Vec<usize> = (0..97).map(|_| (rng.next_u64() % 512) as usize).collect();
+        let (wm, wb) = hd.gather_rows_csr_ref(&csr, &b, &idx);
+        for block in [0usize, 1, 7, 32, 97, 128, 500] {
+            let (gm, gb) = hd.gather_rows_csr_blocked(&csr, &b, &idx, block);
+            assert_eq!(gm.max_abs_diff(&wm), 0.0, "block={block}");
+            assert_eq!(
+                gb.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                wb.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "block={block}"
+            );
+        }
+        // default entry delegates to the blockwise path
+        let (dm, db) = hd.gather_rows_csr(&csr, &b, &idx);
+        assert_eq!(dm.max_abs_diff(&wm), 0.0);
+        assert_eq!(db, wb);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the padded universe")]
+    fn gather_rejects_out_of_range_sample_index() {
+        // promoted from debug_assert!: a corrupt sample index must be a hard
+        // error in release builds too, never a silent row alias
+        let mut rng = Rng::new(62);
+        let dense = Mat::from_fn(50, 3, |_, _| rng.gaussian());
+        let b = rng.gaussians(50);
+        let csr = crate::linalg::CsrMat::from_dense(&dense);
+        let ds = crate::data::Dataset::from_csr("sp", csr.clone(), b.clone(), None);
+        let mut r1 = Rng::new(14);
+        let hd = hd_implicit_ds(&ds, &mut r1);
+        let _ = hd.gather_rows_csr(&csr, &b, &[64]); // n_pad = 64, so 64 is out
+    }
+
+    #[test]
+    fn resolve_step2_auto_never_picks_dense_over_budget() {
+        let mut rng = Rng::new(63);
+        let dense = Mat::from_fn(256, 6, |_, _| {
+            if rng.uniform() < 0.3 {
+                rng.gaussian()
+            } else {
+                0.0
+            }
+        });
+        let b = rng.gaussians(256);
+        let sparse_ds = crate::data::Dataset::from_csr(
+            "sp",
+            crate::linalg::CsrMat::from_dense(&dense),
+            b.clone(),
+            None,
+        );
+        let dense_ds = crate::data::Dataset::dense("dn", dense, b, None);
+        let unlimited = crate::util::mem::MemBudget::unlimited();
+
+        // pins resolve verbatim, budget or not
+        assert_eq!(
+            resolve_step2(Step2Policy::Repr, &sparse_ds, 1, &unlimited),
+            (Step2Mode::Repr, "implicit".into())
+        );
+        assert_eq!(
+            resolve_step2(Step2Policy::Repr, &dense_ds, 1, &unlimited),
+            (Step2Mode::Repr, "dense".into())
+        );
+        assert_eq!(
+            resolve_step2(Step2Policy::Dense, &sparse_ds, 1, &unlimited),
+            (Step2Mode::Dense, "dense".into())
+        );
+        assert_eq!(
+            resolve_step2(Step2Policy::Implicit, &sparse_ds, 1, &unlimited),
+            (Step2Mode::Implicit, "implicit".into())
+        );
+        // dense data: auto is the materialized (bit-exact) form
+        assert_eq!(
+            resolve_step2(Step2Policy::Auto, &dense_ds, 1 << 20, &unlimited),
+            (Step2Mode::Repr, "auto→dense".into())
+        );
+        // enough sampled rows: the one-time FWHT amortizes, dense wins
+        let (mode, label) = resolve_step2(Step2Policy::Auto, &sparse_ds, 10_000, &unlimited);
+        assert_eq!((mode, label.as_str()), (Step2Mode::Dense, "auto→dense"));
+        // few sampled rows: materializing never pays for itself
+        let (mode, label) = resolve_step2(Step2Policy::Auto, &sparse_ds, 1, &unlimited);
+        assert_eq!((mode, label.as_str()), (Step2Mode::Repr, "auto→implicit"));
+        // same dense-favoring workload under memory pressure: auto must
+        // degrade to implicit, never resolve to a buffer it cannot charge
+        let tight = crate::util::mem::MemBudget::with_limit_mb(1);
+        let hog = tight.try_charge((1 << 20) - 4096, "hog").unwrap();
+        assert!(!tight.would_fit(hd_buffer_bytes(256, 6)));
+        let (mode, label) = resolve_step2(Step2Policy::Auto, &sparse_ds, 10_000, &tight);
+        assert_eq!((mode, label.as_str()), (Step2Mode::Repr, "auto→implicit"));
+        drop(hog);
+        // headroom back: the same call flips to dense again
+        let (mode, _) = resolve_step2(Step2Policy::Auto, &sparse_ds, 10_000, &tight);
+        assert_eq!(mode, Step2Mode::Dense);
     }
 
     #[test]

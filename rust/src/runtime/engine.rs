@@ -14,7 +14,9 @@ use std::path::{Path, PathBuf};
 /// Declared signature of one artifact (from manifest.json).
 #[derive(Clone, Debug)]
 pub struct OpSignature {
+    /// Dispatch name (the key solvers/backends route on).
     pub name: String,
+    /// HLO-text file name relative to the artifact directory.
     pub file: String,
     /// per-input (dims, dtype tag) — dims [] means scalar
     pub inputs: Vec<(Vec<usize>, String)>,
@@ -32,7 +34,9 @@ pub struct Engine {
     #[allow(dead_code)]
     client: xla::PjRtClient,
     ops: HashMap<String, CompiledOp>,
+    /// Canonical shapes the loaded artifacts were compiled for.
     pub manifest_meta: ManifestMeta,
+    /// The artifact directory the manifest was loaded from.
     pub dir: PathBuf,
 }
 
@@ -40,10 +44,15 @@ pub struct Engine {
 /// for — the backend uses these to decide PJRT vs native dispatch).
 #[derive(Clone, Debug, Default)]
 pub struct ManifestMeta {
+    /// Canonical row count (padded) the artifacts were lowered at.
     pub n: usize,
+    /// Canonical column count.
     pub d: usize,
+    /// Mini-batch sizes with a compiled chunk artifact.
     pub rs: Vec<usize>,
+    /// Iterations fused into one stochastic chunk dispatch.
     pub chunk_t: usize,
+    /// Iterations fused into one pwGradient chunk dispatch.
     pub pw_t: usize,
 }
 
@@ -97,16 +106,19 @@ impl Engine {
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
 
+    /// Whether an artifact named `name` was compiled.
     pub fn has_op(&self, name: &str) -> bool {
         self.ops.contains_key(name)
     }
 
+    /// Sorted names of every compiled artifact.
     pub fn op_names(&self) -> Vec<&str> {
         let mut v: Vec<&str> = self.ops.keys().map(String::as_str).collect();
         v.sort_unstable();
         v
     }
 
+    /// The manifest signature of one artifact (None if not compiled).
     pub fn signature(&self, name: &str) -> Option<&OpSignature> {
         self.ops.get(name).map(|c| &c.sig)
     }

@@ -84,22 +84,27 @@ impl EngineHandle {
         })
     }
 
+    /// Manifest metadata, snapshotted at spawn (no channel round-trip).
     pub fn meta(&self) -> &ManifestMeta {
         &self.shared.meta
     }
 
+    /// The artifact directory the engine was spawned from.
     pub fn dir(&self) -> &Path {
         &self.shared.dir
     }
 
+    /// Whether an artifact named `name` was compiled.
     pub fn has_op(&self, name: &str) -> bool {
         self.shared.signatures.contains_key(name)
     }
 
+    /// The manifest signature of one artifact (None if not compiled).
     pub fn signature(&self, name: &str) -> Option<&OpSignature> {
         self.shared.signatures.get(name)
     }
 
+    /// Sorted names of every compiled artifact.
     pub fn op_names(&self) -> Vec<&str> {
         let mut v: Vec<&str> = self.shared.signatures.keys().map(String::as_str).collect();
         v.sort_unstable();
@@ -123,6 +128,7 @@ impl EngineHandle {
             .map_err(|_| anyhow!("engine thread dropped the reply"))?
     }
 
+    /// Ask the actor thread to exit (idempotent; in-flight work completes).
     pub fn shutdown(&self) {
         if let Ok(tx) = self.shared.tx.lock() {
             let _ = tx.send(Request::Shutdown);

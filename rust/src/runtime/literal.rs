@@ -38,6 +38,7 @@ impl Value {
         }
     }
 
+    /// Manifest dtype tag ("f64" | "i32" | "i64") for signature checks.
     pub fn dtype_tag(&self) -> &'static str {
         match self {
             Value::MatI32 { .. } => "i32",

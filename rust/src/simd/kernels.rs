@@ -380,6 +380,64 @@ pub unsafe fn fwht_panel<V: SimdF64>(data: *mut f64, n: usize, d: usize, c0: usi
     }
 }
 
+/// One source-row scatter of the blockwise implicit-HD gather: adds
+/// `coeffs[k] * [row | bj]` into output row `k` for every `k`, while the
+/// CSR row (`cols`/`vals`) is cache-hot. `out` is the contiguous row-major
+/// output tile (`coeffs.len()` rows of leading dimension `ld`), `outb` the
+/// matching response panel.
+///
+/// Numerics: the response panel runs lane-parallel `mul` + `add` (never
+/// `mul_add`), and the design scatter is plain scalar `out += c * v` — no
+/// FMA and no re-association anywhere, so the result is bit-identical to
+/// the per-row reference loop on every arch (the property
+/// `tests/implicit_gather.rs` gates). The vector win is the response panel
+/// and the cache blocking; the scattered column writes stay scalar
+/// (no profitable f64 scatter without conflict detection).
+///
+/// # Safety
+/// The CPU must support `V`'s instruction set; `cols`/`vals` equal length,
+/// `coeffs.len() == outb.len()`, `out.len() == coeffs.len() * ld`, and
+/// every `cols[k] < ld`.
+#[inline(always)]
+pub unsafe fn hd_scatter_row<V: SimdF64>(
+    cols: &[u32],
+    vals: &[f64],
+    bj: f64,
+    coeffs: &[f64],
+    out: &mut [f64],
+    ld: usize,
+    outb: &mut [f64],
+) {
+    debug_assert_eq!(cols.len(), vals.len());
+    debug_assert_eq!(coeffs.len(), outb.len());
+    debug_assert_eq!(out.len(), coeffs.len() * ld);
+    let r = coeffs.len();
+    let l = V::LANES;
+    let cp = coeffs.as_ptr();
+    // response panel: outb[k] += coeffs[k] * bj, lanewise mul+add
+    let bv = V::splat(bj);
+    let op = outb.as_mut_ptr();
+    let mut k = 0;
+    while k + l <= r {
+        V::load(cp.add(k)).mul(bv).add(V::load(op.add(k))).store(op.add(k));
+        k += l;
+    }
+    while k < r {
+        outb[k] += coeffs[k] * bj;
+        k += 1;
+    }
+    // design panel: scatter the hot source row into all r output rows
+    let outp = out.as_mut_ptr();
+    for t in 0..r {
+        let c = *cp.add(t);
+        let row = outp.add(t * ld);
+        for (ci, v) in cols.iter().zip(vals) {
+            let p = row.add(*ci as usize);
+            *p += c * *v;
+        }
+    }
+}
+
 /// Sparse row dot `Σ_k vals[k] * x[cols[k]]` via lane gathers.
 ///
 /// # Safety
@@ -511,6 +569,19 @@ macro_rules! simd_kernel_wrappers {
         $(#[$attr])*
         pub(crate) unsafe fn csr_row_dot(cols: &[u32], vals: &[f64], x: &[f64]) -> f64 {
             crate::simd::kernels::csr_row_dot::<$vec>(cols, vals, x)
+        }
+
+        $(#[$attr])*
+        pub(crate) unsafe fn hd_scatter_row(
+            cols: &[u32],
+            vals: &[f64],
+            bj: f64,
+            coeffs: &[f64],
+            out: &mut [f64],
+            ld: usize,
+            outb: &mut [f64],
+        ) {
+            crate::simd::kernels::hd_scatter_row::<$vec>(cols, vals, bj, coeffs, out, ld, outb)
         }
 
         /// Lane width of this entry-point set.

@@ -170,6 +170,7 @@ pub(crate) struct KernelTable {
     pub row_sub: unsafe fn(&mut [f64], &[f64]),
     pub row_axpy: unsafe fn(&mut [f64], f64, &[f64]),
     pub csr_row_dot: unsafe fn(&[u32], &[f64], &[f64]) -> f64,
+    pub hd_scatter_row: unsafe fn(&[u32], &[f64], f64, &[f64], &mut [f64], usize, &mut [f64]),
     pub lanes: usize,
 }
 
@@ -189,6 +190,7 @@ macro_rules! kernel_table {
             row_sub: k::row_sub,
             row_axpy: k::row_axpy,
             csr_row_dot: k::csr_row_dot,
+            hd_scatter_row: k::hd_scatter_row,
             lanes: k::LANES,
         }
     }};
@@ -485,6 +487,36 @@ pub fn csr_row_dot(a: &CsrMat, i: usize, x: &[f64]) -> f64 {
     unsafe { (table().csr_row_dot)(cols, vals, x) }
 }
 
+/// One source-row scatter of the blockwise implicit-HD gather (see
+/// [`crate::precond::ImplicitHd::gather_rows_csr`]): adds
+/// `coeffs[k] * [row | bj]` into output row `k` of the contiguous row-major
+/// tile `out` (leading dimension `ld`) and into `outb[k]`, for every `k`,
+/// while the CSR row stays cache-hot. Bit-identical to the per-row scalar
+/// reference on every arch — the kernel uses plain `mul`+`add`, never FMA,
+/// and reorders nothing — so precond can route through the dispatched
+/// table unconditionally without perturbing the native numerics contract
+/// (`HDPW_SIMD=scalar` still forces the scalar instantiation).
+pub fn hd_scatter_row(
+    cols: &[u32],
+    vals: &[f64],
+    bj: f64,
+    coeffs: &[f64],
+    out: &mut [f64],
+    ld: usize,
+    outb: &mut [f64],
+) {
+    assert_eq!(cols.len(), vals.len());
+    assert_eq!(coeffs.len(), outb.len());
+    assert_eq!(out.len(), coeffs.len() * ld);
+    assert!(
+        cols.iter().all(|&c| (c as usize) < ld),
+        "column index outside the output tile"
+    );
+    // SAFETY: verified table kernels; lengths and column bounds asserted
+    // above match the kernel's documented preconditions.
+    unsafe { (table().hd_scatter_row)(cols, vals, bj, coeffs, out, ld, outb) }
+}
+
 /// Mini-batch gradient `scale * A_tau^T (A_tau x - b_tau)` on CSR rows —
 /// the simd counterpart of [`CsrMat::batch_grad`]: gathered row dots, with
 /// the O(nnz) scatter kept scalar (scattered writes do not vectorize
@@ -631,6 +663,50 @@ mod tests {
         let want = csr.batch_grad(&tau, &b, &x, 8.0);
         for (g, w) in got.iter().zip(&want) {
             assert!(close(*g, *w), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn hd_scatter_row_is_bit_identical_to_scalar_loop() {
+        let mut rng = Rng::new(6);
+        let dense = Mat::from_fn(24, 7, |_, _| {
+            if rng.uniform() < 0.5 {
+                rng.gaussian()
+            } else {
+                0.0
+            }
+        });
+        let csr = CsrMat::from_dense(&dense);
+        for r in [1usize, 2, 3, 4, 5, 9, 17] {
+            let coeffs = rng.gaussians(r);
+            let base = rng.gaussians(r * 7);
+            let baseb = rng.gaussians(r);
+            for j in 0..24 {
+                let (cols, vals) = csr.row(j);
+                let bj = rng.gaussian();
+                let mut got = base.clone();
+                let mut gotb = baseb.clone();
+                hd_scatter_row(cols, vals, bj, &coeffs, &mut got, 7, &mut gotb);
+                // scalar reference: same mul+add per element, ascending order
+                let mut want = base.clone();
+                let mut wantb = baseb.clone();
+                for (k, &c) in coeffs.iter().enumerate() {
+                    wantb[k] += c * bj;
+                    for (ci, v) in cols.iter().zip(vals) {
+                        want[k * 7 + *ci as usize] += c * v;
+                    }
+                }
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "design panel must be bit-identical (r={r} j={j})"
+                );
+                assert_eq!(
+                    gotb.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    wantb.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "response panel must be bit-identical (r={r} j={j})"
+                );
+            }
         }
     }
 }

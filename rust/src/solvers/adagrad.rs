@@ -91,6 +91,10 @@ impl Solver for Adagrad {
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> Result<SolveReport> {
         drive(&mut AdagradRule::default(), backend, ds, opts)
     }
+
+    fn step_rule(&self) -> Option<Box<dyn StepRule>> {
+        Some(Box::new(AdagradRule::default()))
+    }
 }
 
 #[cfg(test)]

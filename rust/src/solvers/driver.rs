@@ -27,8 +27,8 @@ use crate::backend::Backend;
 use crate::constraints::ConstraintSet;
 use crate::data::Dataset;
 use crate::precond::{
-    precondition_ds_budgeted, CacheOutcome, Lookup, PrecondArtifact, PrecondCache, PrecondKey,
-    Precondition,
+    precondition_ds_budgeted, resolve_step2, CacheOutcome, Lookup, PrecondArtifact, PrecondCache,
+    PrecondKey, Precondition, Step2Mode,
 };
 use crate::prox::metric::MetricProjector;
 use crate::sketch::default_sketch_size_for;
@@ -66,6 +66,22 @@ impl SessionCtx {
     }
 }
 
+/// Resolve the request's step-2 policy for this job: the nnz-aware cost
+/// model ([`resolve_step2`]) runs against the session budget (or the
+/// process budget when none is attached) with `max_iters × batch_size` as
+/// the expected sampled-row volume. Both the session's acquisition path and
+/// the coordinator's admission/key computation resolve through this one
+/// helper, so the key tag and the built artifact cannot drift apart.
+pub fn resolved_step2(opts: &SolverOpts, ds: &Dataset) -> (Step2Mode, String) {
+    let budget = opts
+        .session
+        .mem
+        .clone()
+        .unwrap_or_else(MemBudget::process);
+    let total_rows = opts.max_iters.saturating_mul(opts.batch_size.max(1));
+    resolve_step2(opts.step2, ds, total_rows, &budget)
+}
+
 /// The cache key a job's artifacts live under — the ONE constructor shared
 /// by the session's acquisition path and the coordinator's cache-aware
 /// admission estimate, so the two can never drift apart.
@@ -79,6 +95,13 @@ pub fn precond_key(
     let sketch_rows = opts
         .sketch_size
         .unwrap_or_else(|| default_sketch_size_for(ds.n(), ds.d(), opts.sketch));
+    let mut repr: String = ds.design.repr().tag().into();
+    if ds.is_sparse() && resolved_step2(opts, ds).0 == Step2Mode::Dense {
+        // a dense-step2 artifact on CSR holds a materialized HD buffer and
+        // must not alias the implicit artifact the same key would otherwise
+        // produce
+        repr.push_str("+hd");
+    }
     PrecondKey {
         dataset_id,
         sketch: opts.sketch,
@@ -90,7 +113,7 @@ pub fn precond_key(
         backend: (if backend.has_pjrt() { "pjrt" } else { "native" }).into(),
         // ...and of the data representation: the CSR fold re-associates the
         // sketch sum, so dense and sparse artifacts must not alias either
-        repr: ds.design.repr().tag().into(),
+        repr,
     }
 }
 
@@ -117,6 +140,13 @@ pub struct SolveSession<'a> {
     /// Warm-start outcome ("off" | "used" | "rejected-dim"), reported on
     /// the [`SolveReport`] so a misconfigured serve request is visible.
     warm_start: &'static str,
+    /// The resolved step-2 mode artifacts are built with (see
+    /// [`resolved_step2`]).
+    step2: Step2Mode,
+    /// The resolution report (`dense | implicit | auto→…`), surfaced on the
+    /// [`SolveReport`] once a step-2 acquisition actually happens.
+    step2_report: String,
+    step2_used: bool,
     rec: Option<TraceRecorder>,
 }
 
@@ -128,6 +158,7 @@ impl<'a> SolveSession<'a> {
             .mem
             .clone()
             .unwrap_or_else(MemBudget::process);
+        let (step2, step2_report) = resolved_step2(opts, ds);
         SolveSession {
             backend,
             ds,
@@ -138,6 +169,9 @@ impl<'a> SolveSession<'a> {
             setup_secs: 0.0,
             outcome: CacheOutcome::Off,
             warm_start: "off",
+            step2,
+            step2_report,
+            step2_used: false,
             rec: None,
         }
     }
@@ -168,6 +202,10 @@ impl<'a> SolveSession<'a> {
     /// fail this way).
     pub fn precond(&mut self, with_hd: bool) -> Result<Arc<PrecondArtifact>> {
         self.touch_setup();
+        if with_hd {
+            self.step2_used = true;
+        }
+        let step2 = self.step2;
         let s = self.sketch_rows();
         let sc = &self.opts.session;
         if sc.reuse_enabled() {
@@ -191,8 +229,13 @@ impl<'a> SolveSession<'a> {
                         // Step 1 (the expensive sketch-QR) is still reused,
                         // but the HD cost is real — reported as Upgrade, not
                         // Hit, so "hit == lookup cost" stays true.
-                        let art =
-                            Arc::new(art.with_hd(self.backend, self.ds, &key, &self.mem)?);
+                        let art = Arc::new(art.with_hd(
+                            self.backend,
+                            self.ds,
+                            &key,
+                            step2,
+                            &self.mem,
+                        )?);
                         cache.insert(key, Arc::clone(&art));
                         self.outcome = CacheOutcome::Upgrade;
                         return Ok(art);
@@ -210,6 +253,7 @@ impl<'a> SolveSession<'a> {
                             &key,
                             self.opts.block_rows,
                             with_hd,
+                            step2,
                             &self.mem,
                         )?);
                         claim.publish(Arc::clone(&art));
@@ -230,6 +274,7 @@ impl<'a> SolveSession<'a> {
             &mut self.rng,
             self.opts.block_rows,
             with_hd,
+            step2,
             &self.mem,
         )?))
     }
@@ -362,9 +407,15 @@ impl<'a> SolveSession<'a> {
         let setup = self.setup_secs;
         let outcome = self.outcome;
         let warm = self.warm_start;
+        let step2 = if self.step2_used {
+            self.step2_report.clone()
+        } else {
+            "off".into()
+        };
         let mut rep = self.rec.expect("trace started").finish(name, x, f, setup);
         rep.precond_cache = outcome;
         rep.warm_start = warm.into();
+        rep.step2 = step2;
         rep
     }
 }
@@ -468,6 +519,146 @@ pub fn drive<R: StepRule>(
         }
     };
     Ok(sess.finish(rule.name(), x, f_final))
+}
+
+/// The fused cross-trial objective pass: one sweep over the data evaluates
+/// f at every stacked iterate. Per column the arithmetic is pinned to the
+/// serial [`SolveSession::objective`] routing — the CSR pass mirrors
+/// [`CsrMat::residual_sq`](crate::linalg::CsrMat::residual_sq) row-for-row,
+/// and the dense pass routes through [`Backend::residual_sq_multi`] on the
+/// *same op key* as the serial `residual_sq`, so each column lands on the
+/// same executor (and therefore the same bit pattern) a lone trial would
+/// have used.
+fn fused_objectives(backend: &Backend, ds: &Dataset, xs: &[Vec<f64>]) -> Vec<f64> {
+    match ds.csr() {
+        Some(c) => c.residual_sq_multi(&ds.b, xs),
+        None => backend.residual_sq_multi(
+            ds.dense_if_ready().expect("dense dataset"),
+            &ds.b,
+            xs,
+        ),
+    }
+}
+
+/// Per-trial state of the fused lockstep driver.
+struct FusedTrial<'a> {
+    rule: Box<dyn StepRule>,
+    sess: SolveSession<'a>,
+    f: f64,
+    last: Option<Vec<f64>>,
+    /// A stepped-but-not-yet-evaluated chunk: (iters, step secs, iterate).
+    pend: Option<(usize, f64, Vec<f64>)>,
+    done: bool,
+}
+
+/// Run `opts_list.len()` trials of one solver in lockstep, sharing the
+/// chunk-boundary objective pass: every trial advances one chunk, the
+/// pending iterates are stacked column-wise, and a single fused residual
+/// sweep ([`fused_objectives`]) prices all of them in one pass over `A` —
+/// the cross-trial GEMM fusion of the batched hot path.
+///
+/// **Bit-identity contract.** Each trial owns its `SolverOpts` (seed,
+/// session) and its own [`SolveSession`], so the per-trial rng streams and
+/// step arithmetic are *untouched* by fusion — the only shared computation
+/// is the objective pass, and that is pinned per column to the serial
+/// routing (see [`fused_objectives`]). Every report this returns is
+/// therefore bitwise equal to what a serial [`drive`] of the same opts
+/// would have produced; `tests/implicit_gather.rs` replays both paths and
+/// asserts it. Setup runs trial-by-trial in submission order, preserving
+/// the serial path's cache miss/hit/upgrade sequence under `reuse_precond`.
+///
+/// Errors: a failing setup or step aborts the whole batch with that
+/// trial's error — exactly the serial loop's behavior (it would have
+/// abandoned the remaining trials too).
+pub fn drive_fused_trials(
+    solver: &dyn super::Solver,
+    backend: &Backend,
+    ds: &Dataset,
+    opts_list: &[SolverOpts],
+) -> Result<Vec<SolveReport>> {
+    let mut trials: Vec<FusedTrial> = Vec::with_capacity(opts_list.len());
+    for opts in opts_list {
+        let mut rule = solver.step_rule().ok_or_else(|| {
+            anyhow::anyhow!("solver {} has no step rule to fuse", solver.name())
+        })?;
+        let mut sess = SolveSession::new(backend, ds, opts);
+        rule.setup(&mut sess)?;
+        sess.end_setup();
+        let x0 = sess.start_x();
+        let f0 = sess.objective(&x0);
+        rule.init(&mut sess, &x0, f0);
+        sess.start_trace(f0);
+        trials.push(FusedTrial {
+            rule,
+            sess,
+            f: f0,
+            last: None,
+            pend: None,
+            done: false,
+        });
+    }
+    loop {
+        // advance every live trial one chunk (identical per-trial op
+        // sequence to the serial loop; rng streams are per-session)
+        for tr in trials.iter_mut().filter(|t| !t.done) {
+            if tr.sess.should_stop(tr.f) {
+                tr.done = true;
+                continue;
+            }
+            let f = tr.f;
+            let rule = &mut tr.rule;
+            let sess = &mut tr.sess;
+            if let Some(secs) = rule.pre_chunk(sess, f)? {
+                sess.record(0, secs, f);
+            }
+            let want = rule.chunk_len(sess, f);
+            if want == 0 {
+                tr.done = true;
+                continue;
+            }
+            let t = sess.cap_chunk(want);
+            let (res, secs) = timed(|| rule.step(sess, t));
+            res?;
+            tr.pend = Some((t, secs, tr.rule.eval_x(&tr.sess)));
+        }
+        // one fused pass prices every pending iterate
+        let live: Vec<usize> = trials
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.pend.is_some())
+            .map(|(i, _)| i)
+            .collect();
+        if live.is_empty() {
+            break;
+        }
+        let xs: Vec<Vec<f64>> = live
+            .iter()
+            .map(|&i| trials[i].pend.as_ref().expect("pending").2.clone())
+            .collect();
+        let fs = fused_objectives(backend, ds, &xs);
+        for (&i, f) in live.iter().zip(fs) {
+            let tr = &mut trials[i];
+            let (t, secs, x) = tr.pend.take().expect("pending");
+            tr.f = f;
+            tr.sess.record(t, secs, f);
+            tr.rule.post_eval(&mut tr.sess, f);
+            tr.last = Some(x);
+        }
+    }
+    trials
+        .into_iter()
+        .map(|tr| {
+            let (x, f_final) = match tr.last {
+                Some(x) => (x, tr.f),
+                None => {
+                    let x = tr.rule.eval_x(&tr.sess);
+                    let fx = tr.sess.objective(&x);
+                    (x, fx)
+                }
+            };
+            Ok(tr.sess.finish(tr.rule.name(), x, f_final))
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -55,6 +55,7 @@ impl Solver for ExactQr {
             x,
             precond_cache: crate::precond::CacheOutcome::Off,
             warm_start: "off".into(),
+            step2: "off".into(),
         })
     }
 }

@@ -155,7 +155,9 @@ impl StepRule for HdpwAccRule {
             ),
             crate::precond::HdView::Implicit { .. } => {
                 let flat: Vec<usize> = idx.iter().flatten().copied().collect();
-                let (ma, mb) = hd.gather(&flat);
+                // blocked at the batch size: every mini-batch is one CSR
+                // pass instead of r per-row passes (same arithmetic)
+                let (ma, mb) = hd.gather_blocked(&flat, self.r);
                 let local: Vec<Vec<usize>> = (0..t)
                     .map(|k| (k * self.r..(k + 1) * self.r).collect())
                     .collect();
@@ -206,6 +208,10 @@ impl Solver for HdpwAccBatchSgd {
 
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> Result<SolveReport> {
         drive(&mut HdpwAccRule::default(), backend, ds, opts)
+    }
+
+    fn step_rule(&self) -> Option<Box<dyn StepRule>> {
+        Some(Box::new(HdpwAccRule::default()))
     }
 }
 

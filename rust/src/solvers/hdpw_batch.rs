@@ -110,7 +110,9 @@ impl StepRule for HdpwBatchRule {
             ),
             crate::precond::HdView::Implicit { .. } => {
                 let flat: Vec<usize> = idx.iter().flatten().copied().collect();
-                let (ma, mb) = hd.gather(&flat);
+                // blocked at the batch size: every mini-batch is one CSR
+                // pass instead of r per-row passes (same arithmetic)
+                let (ma, mb) = hd.gather_blocked(&flat, self.r);
                 let local: Vec<Vec<usize>> = (0..t)
                     .map(|k| (k * self.r..(k + 1) * self.r).collect())
                     .collect();
@@ -153,6 +155,10 @@ impl Solver for HdpwBatchSgd {
 
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> Result<SolveReport> {
         drive(&mut HdpwBatchRule::default(), backend, ds, opts)
+    }
+
+    fn step_rule(&self) -> Option<Box<dyn StepRule>> {
+        Some(Box::new(HdpwBatchRule::default()))
     }
 }
 

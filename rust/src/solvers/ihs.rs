@@ -84,6 +84,10 @@ impl Solver for Ihs {
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> Result<SolveReport> {
         drive(&mut IhsRule::default(), backend, ds, opts)
     }
+
+    fn step_rule(&self) -> Option<Box<dyn StepRule>> {
+        Some(Box::new(IhsRule::default()))
+    }
 }
 
 #[cfg(test)]

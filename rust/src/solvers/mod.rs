@@ -37,7 +37,7 @@ pub mod pw_gradient;
 pub mod ihs;
 
 pub use adagrad::Adagrad;
-pub use driver::{drive, SessionCtx, SolveSession, StepRule};
+pub use driver::{drive, drive_fused_trials, SessionCtx, SolveSession, StepRule};
 pub use exact::ExactQr;
 pub use hdpw_acc::HdpwAccBatchSgd;
 pub use hdpw_batch::HdpwBatchSgd;
@@ -86,6 +86,10 @@ pub struct SolverOpts {
     /// Per-trial rng seed (the coordinator forks one per trial from the
     /// job seed).
     pub seed: u64,
+    /// Step-2 representation policy: pin the HD transform dense/implicit,
+    /// let the nnz-aware cost model choose (`Auto`), or match the data
+    /// representation (`Repr`, the default and the paper path).
+    pub step2: crate::precond::Step2Policy,
     /// Session context (precond reuse, warm start) threaded by the
     /// coordinator; the default reproduces the paper's fresh-per-trial
     /// protocol exactly.
@@ -107,6 +111,7 @@ impl Default for SolverOpts {
             chunk: 50,
             block_rows: None,
             seed: 1,
+            step2: crate::precond::Step2Policy::default(),
             session: SessionCtx::default(),
         }
     }
@@ -148,6 +153,10 @@ pub struct SolveReport {
     /// `x0` seeded the solve), or `"rejected-dim"` (an `x0` with the wrong
     /// dimension was refused and the solve cold-started).
     pub warm_start: String,
+    /// Resolved step-2 representation: `"off"` (no step-2 acquisition),
+    /// `"dense"`, `"implicit"`, or the cost-model verdict
+    /// (`"auto→dense"` / `"auto→implicit"`).
+    pub step2: String,
 }
 
 impl SolveReport {
@@ -191,6 +200,12 @@ pub trait Solver: Send + Sync {
     fn name(&self) -> &'static str;
     /// Run one solve of `ds` under `opts` on `backend`.
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> Result<SolveReport>;
+    /// A fresh instance of the solver's [`StepRule`] for the fused lockstep
+    /// driver ([`driver::drive_fused_trials`]); `None` for closed-form
+    /// solvers (exact QR), which have no iteration loop to fuse.
+    fn step_rule(&self) -> Option<Box<dyn StepRule>> {
+        None
+    }
 }
 
 /// Solver registry (CLI / coordinator dispatch).
@@ -305,6 +320,7 @@ impl TraceRecorder {
             x,
             precond_cache: crate::precond::CacheOutcome::Off,
             warm_start: "off".into(),
+            step2: "off".into(),
         }
     }
 }
@@ -452,6 +468,7 @@ mod tests {
             solve_secs: 2.0,
             precond_cache: crate::precond::CacheOutcome::Off,
             warm_start: "off".into(),
+            step2: "off".into(),
             trace: vec![
                 TracePoint {
                     iters: 0,

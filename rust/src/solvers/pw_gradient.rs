@@ -103,6 +103,10 @@ impl Solver for PwGradient {
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> Result<SolveReport> {
         drive(&mut PwGradientRule::default(), backend, ds, opts)
     }
+
+    fn step_rule(&self) -> Option<Box<dyn StepRule>> {
+        Some(Box::new(PwGradientRule::default()))
+    }
 }
 
 #[cfg(test)]

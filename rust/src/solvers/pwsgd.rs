@@ -217,6 +217,10 @@ impl Solver for PwSgd {
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> Result<SolveReport> {
         drive(&mut PwSgdRule::default(), backend, ds, opts)
     }
+
+    fn step_rule(&self) -> Option<Box<dyn StepRule>> {
+        Some(Box::new(PwSgdRule::default()))
+    }
 }
 
 #[cfg(test)]

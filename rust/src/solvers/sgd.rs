@@ -99,6 +99,10 @@ impl Solver for Sgd {
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> Result<SolveReport> {
         drive(&mut SgdRule::default(), backend, ds, opts)
     }
+
+    fn step_rule(&self) -> Option<Box<dyn StepRule>> {
+        Some(Box::new(SgdRule::default()))
+    }
 }
 
 #[cfg(test)]

@@ -169,9 +169,16 @@ impl Solver for Svrg {
     fn solve(&self, backend: &Backend, ds: &Dataset, opts: &SolverOpts) -> Result<SolveReport> {
         let mut rule = SvrgRule {
             preconditioned: self.preconditioned,
-            ..SvrgRule::default()
+            ..Default::default()
         };
         drive(&mut rule, backend, ds, opts)
+    }
+
+    fn step_rule(&self) -> Option<Box<dyn StepRule>> {
+        Some(Box::new(SvrgRule {
+            preconditioned: self.preconditioned,
+            ..SvrgRule::default()
+        }))
     }
 }
 

@@ -1,0 +1,321 @@
+//! Batched hot-path equivalence gates (ISSUE 9).
+//!
+//! Three bit-identity contracts of the batched execution layer:
+//!
+//! 1. **Blockwise implicit-HD gather** — `gather_rows_csr_blocked` reorders
+//!    only *memory traffic* (source rows outer, sampled rows inner); per
+//!    output cell the same coefficients accumulate in the same ascending-j
+//!    order with plain mul+add, so every block size must reproduce the
+//!    per-row reference bit for bit, across odd-n padding and power-of-two
+//!    edges.
+//! 2. **`hd_scatter_row` kernel** — the dispatched simd entry, the explicit
+//!    `F64x4Scalar` instantiation, and a plain scalar loop must agree
+//!    bitwise (the kernel vectorizes the response panel with lanewise
+//!    mul+add, never FMA, and keeps the design scatter scalar).
+//! 3. **Fused batching** — `drive_fused_trials` (cross-trial objective
+//!    fusion) replayed against serial `Solver::solve` of the same opts must
+//!    be bitwise equal per trial; at the coordinator level, fused trials
+//!    and adopted cross-request results must be bitwise equal to a solo
+//!    run of the same request.
+
+use hdpw::backend::Backend;
+use hdpw::coordinator::{Coordinator, CoordinatorConfig, JobRequest};
+use hdpw::data::Dataset;
+use hdpw::linalg::{blas, CsrMat, Mat};
+use hdpw::precond::{hd_implicit_ds, PrecondCache};
+use hdpw::simd::{self, F64x4Scalar};
+use hdpw::solvers::{self, drive_fused_trials, SessionCtx, SolveReport, SolverOpts};
+use hdpw::util::rng::Rng;
+use std::sync::Arc;
+
+fn sparse_ds(n: usize, d: usize, density: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let dense = Mat::from_fn(n, d, |_, _| {
+        if rng.uniform() < density {
+            rng.gaussian()
+        } else {
+            0.0
+        }
+    });
+    let xt = rng.gaussians(d);
+    let mut b = blas::gemv(&dense, &xt);
+    for v in &mut b {
+        *v += 0.05 * rng.gaussian();
+    }
+    Dataset::from_csr("sp", CsrMat::from_dense(&dense), b, None)
+}
+
+fn dense_ds(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let a = Mat::gaussian(n, d, &mut rng);
+    let xt = rng.gaussians(d);
+    let mut b = blas::gemv(&a, &xt);
+    for v in &mut b {
+        *v += 0.05 * rng.gaussian();
+    }
+    Dataset::dense("dn", a, b, None)
+}
+
+fn assert_bits_eq(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}[{i}]: {g} vs {w}");
+    }
+}
+
+// -------------------------------------------------------------------------
+// 1. blockwise gather vs per-row reference
+// -------------------------------------------------------------------------
+
+#[test]
+fn blockwise_gather_matches_per_row_reference_across_shapes() {
+    // odd n (padding adds virtual rows), exact power of two, and a tall
+    // shape; batches from a single row to larger than the universe
+    for (n, d, seed) in [(50usize, 3usize, 21u64), (64, 5, 22), (300, 9, 23), (1000, 7, 24)] {
+        let ds = sparse_ds(n, d, 0.25, seed);
+        let csr = ds.csr().expect("sparse dataset");
+        let mut rng = Rng::new(seed ^ 0xbeef);
+        let mut art_rng = Rng::new(seed);
+        let hd = hd_implicit_ds(&ds, &mut art_rng);
+        assert_eq!(hd.n_pad, n.next_power_of_two());
+        for r in [1usize, 2, 7, 33, 128, 257] {
+            // sample over the FULL padded universe, virtual rows included
+            let idx: Vec<usize> = (0..r)
+                .map(|_| (rng.next_u64() as usize) % hd.n_pad)
+                .collect();
+            let (wm, wb) = hd.gather_rows_csr_ref(csr, &ds.b, &idx);
+            for block in [0usize, 1, 3, 64, 128, 1 << 20] {
+                let (gm, gb) = hd.gather_rows_csr_blocked(csr, &ds.b, &idx, block);
+                assert_eq!(
+                    gm.max_abs_diff(&wm),
+                    0.0,
+                    "design panel n={n} r={r} block={block}"
+                );
+                assert_bits_eq(&gb, &wb, &format!("response n={n} r={r} block={block}"));
+            }
+        }
+        // edge batches: every index the same row, and the last padded row
+        let (wm, wb) = hd.gather_rows_csr_ref(csr, &ds.b, &[hd.n_pad - 1; 5]);
+        let (gm, gb) = hd.gather_rows_csr_blocked(csr, &ds.b, &[hd.n_pad - 1; 5], 2);
+        assert_eq!(gm.max_abs_diff(&wm), 0.0, "repeated-tail n={n}");
+        assert_bits_eq(&gb, &wb, "repeated-tail responses");
+    }
+}
+
+// -------------------------------------------------------------------------
+// 2. the scatter kernel is bitwise across instantiations
+// -------------------------------------------------------------------------
+
+#[test]
+fn hd_scatter_row_kernel_is_bitwise_across_instantiations() {
+    let mut rng = Rng::new(77);
+    let ld = 41usize;
+    for nnz in [0usize, 1, 3, 8, 31] {
+        for r in [1usize, 4, 5, 16, 33] {
+            // sorted distinct columns inside the row bound
+            let mut cols: Vec<u32> = (0..ld as u32).collect();
+            for i in (1..cols.len()).rev() {
+                cols.swap(i, (rng.next_u64() as usize) % (i + 1));
+            }
+            cols.truncate(nnz);
+            cols.sort_unstable();
+            let vals = rng.gaussians(nnz);
+            let coeffs = rng.gaussians(r);
+            let bj = rng.gaussian();
+            // non-zero initial accumulators: the kernel must *add*
+            let out0 = rng.gaussians(r * ld);
+            let outb0 = rng.gaussians(r);
+
+            let (mut got, mut gotb) = (out0.clone(), outb0.clone());
+            simd::hd_scatter_row(&cols, &vals, bj, &coeffs, &mut got, ld, &mut gotb);
+
+            let (mut exp, mut expb) = (out0.clone(), outb0.clone());
+            // SAFETY: F64x4Scalar is plain Rust (no instruction-set
+            // requirement); slice contracts hold by construction
+            unsafe {
+                simd::kernels::hd_scatter_row::<F64x4Scalar>(
+                    &cols, &vals, bj, &coeffs, &mut exp, ld, &mut expb,
+                );
+            }
+            assert_bits_eq(&got, &exp, "dispatched vs F64x4Scalar design");
+            assert_bits_eq(&gotb, &expb, "dispatched vs F64x4Scalar response");
+
+            // plain scalar reference: same mul+add per element, ascending
+            // column order — the documented kernel contract
+            let (mut refo, mut refb) = (out0.clone(), outb0.clone());
+            for t in 0..r {
+                refb[t] += coeffs[t] * bj;
+                for (c, v) in cols.iter().zip(&vals) {
+                    refo[t * ld + *c as usize] += coeffs[t] * v;
+                }
+            }
+            assert_bits_eq(&got, &refo, "dispatched vs scalar loop design");
+            assert_bits_eq(&gotb, &refb, "dispatched vs scalar loop response");
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// 3. fused batching replayed against the serial path
+// -------------------------------------------------------------------------
+
+fn fused_opts(seed: u64, cache: &Arc<PrecondCache>) -> SolverOpts {
+    let mut opts = SolverOpts::default();
+    opts.batch_size = 16;
+    opts.max_iters = 300;
+    opts.chunk = 60;
+    opts.time_budget = 1e9; // wall-clock must never gate the comparison
+    opts.seed = seed;
+    opts.session = SessionCtx {
+        reuse_precond: true,
+        warm_start: false,
+        cache: Some(Arc::clone(cache)),
+        dataset_id: Some("replay".into()),
+        artifact_seed: 7,
+        x0: None,
+        mem: None,
+    };
+    opts
+}
+
+#[test]
+fn fused_trials_are_bitwise_equal_to_serial_drive() {
+    let backend = Backend::native();
+    for (name, sparse) in [
+        ("hdpwbatchsgd", false),
+        ("hdpwbatchsgd", true),
+        ("pwgradient", false),
+        ("hdpwaccbatchsgd", true),
+    ] {
+        let ds = if sparse {
+            sparse_ds(768, 5, 0.2, 31)
+        } else {
+            dense_ds(768, 5, 31)
+        };
+        let solver = solvers::by_name(name).expect("known solver");
+        // each path gets its OWN fresh cache: artifacts are pure functions
+        // of (key, seed), so per-path caches reproduce the same miss/hit
+        // sequence and the same bits
+        let fused_cache = Arc::new(PrecondCache::new(64 << 20));
+        let serial_cache = Arc::new(PrecondCache::new(64 << 20));
+        let opts_fused: Vec<SolverOpts> =
+            [11u64, 22, 33].iter().map(|&s| fused_opts(s, &fused_cache)).collect();
+        let fused = drive_fused_trials(solver.as_ref(), &backend, &ds, &opts_fused)
+            .unwrap_or_else(|e| panic!("{name} fused: {e:#}"));
+        let serial: Vec<SolveReport> = [11u64, 22, 33]
+            .iter()
+            .map(|&s| {
+                solver
+                    .solve(&backend, &ds, &fused_opts(s, &serial_cache))
+                    .unwrap_or_else(|e| panic!("{name} serial: {e:#}"))
+            })
+            .collect();
+        assert_eq!(fused.len(), serial.len());
+        for (k, (f, s)) in fused.iter().zip(&serial).enumerate() {
+            assert_eq!(f.iters, s.iters, "{name} sparse={sparse} trial {k}: iters");
+            assert_eq!(
+                f.f_final.to_bits(),
+                s.f_final.to_bits(),
+                "{name} sparse={sparse} trial {k}: f {} vs {}",
+                f.f_final,
+                s.f_final
+            );
+            assert_bits_eq(&f.x, &s.x, &format!("{name} sparse={sparse} trial {k}: x"));
+            assert_eq!(
+                f.trace.len(),
+                s.trace.len(),
+                "{name} sparse={sparse} trial {k}: trace"
+            );
+        }
+    }
+}
+
+#[test]
+fn coordinator_fused_trials_match_a_fresh_replay_and_report_batch() {
+    let mk = || {
+        Arc::new(Coordinator::new(
+            Backend::native(),
+            CoordinatorConfig::default(),
+        ))
+    };
+    let mut req = JobRequest::default();
+    req.dataset = "syn2".into();
+    req.n = 1024;
+    req.solver = "hdpwbatchsgd".into();
+    req.max_iters = 300;
+    req.batch_size = 16;
+    req.time_budget = 20.0;
+    req.reuse_precond = true;
+    req.trials = 3;
+    let a = mk().run_job(&req).unwrap();
+    let b = mk().run_job(&req).unwrap();
+    assert_eq!(a.batched_trials, 3, "reuse trials run the fused driver");
+    assert_eq!(a.trials_run, 3);
+    assert_bits_eq(&a.best.x, &b.best.x, "fused run determinism");
+    assert_eq!(a.best_f.to_bits(), b.best_f.to_bits());
+    // the serial path (no reuse => nothing fusable) reports a batch of 1
+    let mut solo = req.clone();
+    solo.reuse_precond = false;
+    let s = mk().run_job(&solo).unwrap();
+    assert_eq!(s.batched_trials, 1);
+    assert_eq!(s.batched_requests, 1);
+}
+
+#[test]
+fn concurrent_identical_requests_adopt_the_leader_bitwise() {
+    let coord = Arc::new(Coordinator::new(
+        Backend::native(),
+        CoordinatorConfig {
+            workers: 4,
+            ..CoordinatorConfig::default()
+        },
+    ));
+    let mut base = JobRequest::default();
+    base.dataset = "syn2".into();
+    base.n = 1024;
+    base.solver = "pwgradient".into();
+    base.max_iters = 300;
+    base.time_budget = 20.0;
+    base.reuse_precond = true;
+    // scheduling is not deterministic: retry with a fresh seed until a
+    // round actually overlaps (4 barrier-released threads, so one round
+    // nearly always does)
+    for round in 0..5u64 {
+        let mut req = base.clone();
+        req.seed = 100 + round;
+        let solo = Arc::new(Coordinator::new(
+            Backend::native(),
+            CoordinatorConfig::default(),
+        ))
+        .run_job(&req)
+        .unwrap();
+        let barrier = Arc::new(std::sync::Barrier::new(4));
+        let results: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4u64)
+                .map(|i| {
+                    let coord = Arc::clone(&coord);
+                    let barrier = Arc::clone(&barrier);
+                    let mut r = req.clone();
+                    r.id = i; // identity is excluded from the fuse signature
+                    s.spawn(move || {
+                        barrier.wait();
+                        coord.run_job(&r).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "adopted results echo the caller's id");
+            assert_bits_eq(&r.best.x, &solo.best.x, "adopted result vs solo run");
+            assert_eq!(r.best_f.to_bits(), solo.best_f.to_bits());
+        }
+        if results.iter().any(|r| r.batched_requests > 1) {
+            use std::sync::atomic::Ordering;
+            assert!(coord.metrics.fused_requests.load(Ordering::Relaxed) > 1);
+            assert!(coord.metrics.fuse_batch_max.load(Ordering::Relaxed) > 1);
+            return;
+        }
+    }
+    panic!("4 barrier-released identical jobs never overlapped in 5 rounds");
+}
