@@ -438,6 +438,36 @@ impl Backend {
         let block_nnz = block_rows.map(|br| a.nnz_budget_for_rows(br));
         self.route(&op, true).sketch_apply_csr(sk, a, block_nnz)
     }
+
+    /// Compute `S A` for a disk-backed design — the out-of-core setup path.
+    /// No executor can claim a matrix that is never resident, so this entry
+    /// bypasses the registry and folds shard-cache scratch blocks through
+    /// [`crate::sketch::apply_streamed_ondisk`] with this backend's tuning
+    /// (thread count, default shard height) and, when the simd executor is
+    /// registered, its row-scatter kernels — the same ops the in-memory
+    /// dense fold would get. Shards folded count as native block calls like
+    /// every streamed fold. Fallible: a shard I/O error or refused cache
+    /// charge propagates as the job's structured error, never a worker
+    /// panic.
+    pub fn sketch_apply_ondisk(
+        &self,
+        sk: &(dyn Sketch + Send + Sync),
+        od: &crate::data::OnDiskDesign,
+        block_rows: Option<usize>,
+    ) -> anyhow::Result<Mat> {
+        let ops = if self.simd {
+            crate::simd::row_ops()
+        } else {
+            crate::sketch::RowOps::SCALAR
+        };
+        let br = block_rows.or(self.default_block_rows);
+        let (sa, shards) =
+            crate::sketch::apply_streamed_ondisk(sk, od, br, self.threads, &ops)?;
+        if shards > 1 {
+            self.stats.add_block_calls(shards);
+        }
+        Ok(sa)
+    }
 }
 
 #[cfg(test)]

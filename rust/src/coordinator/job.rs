@@ -17,11 +17,20 @@ use anyhow::{bail, Context, Result};
 pub const EXECUTOR_CHOICES: &[&str] = &["", "default", "native", "simd", "auto", "pjrt"];
 
 /// Valid `JobRequest::format` values — the dataset representation:
-///   dense   — the paper's dense pipeline (default);
-///   sparse  — named generators produce the CSR sparse variant;
-///   libsvm  — like sparse, but round-tripped through the libsvm parser
-///             (and `dataset: "libsvm:<path>"` loads a file directly).
-pub const FORMAT_CHOICES: &[&str] = &["", "dense", "sparse", "libsvm"];
+///   dense          — the paper's dense pipeline (default);
+///   sparse         — named generators produce the CSR sparse variant;
+///   libsvm         — like sparse, but round-tripped through the libsvm
+///                    parser (and `dataset: "libsvm:<path>"` loads a file
+///                    directly);
+///   mmapdense      — out-of-core dense: the design lives in a row-major
+///                    on-disk file read through a budget-charged shard
+///                    cache (`dataset: "mmapdense:<path>"` opens a file;
+///                    named generators write a spill file first);
+///   libsvm-chunked — out-of-core CSR: libsvm text pre-split into row
+///                    shards streamed through the same cache
+///                    (`dataset: "libsvm-chunked:<path>"`).
+pub const FORMAT_CHOICES: &[&str] =
+    &["", "dense", "sparse", "libsvm", "mmapdense", "libsvm-chunked"];
 
 /// Valid `JobRequest::priority` values — the scheduler's QoS lanes
 /// (served 4:2:1 high:normal:batch). "" means the default (normal).
@@ -144,6 +153,11 @@ pub struct JobRequest {
     /// HD-transform representation policy: repr | dense | implicit | auto
     /// (see [`STEP2_CHOICES`]). Default "" = repr, the paper path.
     pub step2: String,
+    /// Rows per on-disk shard for the out-of-core formats (mmapdense /
+    /// libsvm-chunked); 0 = the format default. Ignored for resident
+    /// formats. Larger shards amortize read syscalls, smaller shards
+    /// tighten the cache's resident footprint.
+    pub chunk_rows: usize,
 }
 
 /// Truthy env flag ("1" | "true" | "yes") — the single authority for the
@@ -190,6 +204,7 @@ impl Default for JobRequest {
             priority: "normal".into(),
             deadline_ms: 0.0,
             step2: String::new(),
+            chunk_rows: 0,
         }
     }
 }
@@ -224,6 +239,7 @@ impl JobRequest {
             ("priority", Json::str(self.priority.clone())),
             ("deadline_ms", Json::num(self.deadline_ms)),
             ("step2", Json::str(self.step2.clone())),
+            ("chunk_rows", Json::num(self.chunk_rows as f64)),
         ])
     }
 
@@ -292,6 +308,7 @@ impl JobRequest {
             priority: get_s("priority", &def.priority),
             deadline_ms: get_n("deadline_ms", def.deadline_ms),
             step2: get_s("step2", &def.step2),
+            chunk_rows: get_n("chunk_rows", def.chunk_rows as f64) as usize,
         };
         req.validate()?;
         Ok(req)
@@ -346,8 +363,10 @@ impl JobRequest {
                 STEP2_CHOICES
             );
         }
-        if self.step2 == "implicit" && matches!(self.format.as_str(), "" | "dense") {
-            bail!("step2 \"implicit\" requires a sparse dataset (format sparse | libsvm)");
+        if self.step2 == "implicit" && matches!(self.format.as_str(), "" | "dense" | "mmapdense") {
+            bail!(
+                "step2 \"implicit\" requires a sparse dataset (format sparse | libsvm | libsvm-chunked)"
+            );
         }
         Ok(())
     }
@@ -472,6 +491,18 @@ pub struct JobResult {
     /// (exact when jobs run serially; an upper bound under concurrency).
     /// A CSR step-1-only solve reports 0 here — the acceptance criterion.
     pub densify_events: usize,
+    /// Shard loads from disk recorded on the process budget while this job
+    /// ran (0 for resident formats; same delta semantics as
+    /// `densify_events`). Cache hits cost nothing and are not counted.
+    pub shard_faults: usize,
+    /// Shard-cache evictions recorded while this job ran — each one is
+    /// resident bytes given back under budget pressure, the out-of-core
+    /// analog of a densify event.
+    pub shard_evictions: usize,
+    /// Transient I/O retries (EINTR/WouldBlock/TimedOut re-reads) absorbed
+    /// by the shard reader while this job ran; persistent failures surface
+    /// as the job's structured error instead.
+    pub io_retries: usize,
     /// Peak size of the coalescing group this job shared its
     /// preconditioner setup with (concurrent same-`PrecondKey` jobs).
     /// 1 = ran alone; > 1 = setup/artifact work was amortized across the
@@ -531,6 +562,9 @@ impl JobResult {
             ("mem_est_bytes", Json::num(self.mem_est_bytes as f64)),
             ("mem_peak_bytes", Json::num(self.mem_peak_bytes as f64)),
             ("densify_events", Json::num(self.densify_events as f64)),
+            ("shard_faults", Json::num(self.shard_faults as f64)),
+            ("shard_evictions", Json::num(self.shard_evictions as f64)),
+            ("io_retries", Json::num(self.io_retries as f64)),
             ("coalesced_batch", Json::num(self.coalesced_batch as f64)),
             ("batched_trials", Json::num(self.batched_trials as f64)),
             (
@@ -686,6 +720,31 @@ mod tests {
         // libsvm is a valid format
         let j = Json::parse(r#"{"format": "libsvm"}"#).unwrap();
         assert_eq!(JobRequest::from_json(&j).unwrap().format, "libsvm");
+    }
+
+    #[test]
+    fn out_of_core_formats_and_chunk_rows_roundtrip() {
+        let mut req = JobRequest::default();
+        req.format = "mmapdense".into();
+        req.chunk_rows = 512;
+        let back = JobRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back.format, "mmapdense");
+        assert_eq!(back.chunk_rows, 512);
+        // libsvm-chunked is a valid format; chunk_rows defaults to 0
+        let j = Json::parse(r#"{"format": "libsvm-chunked"}"#).unwrap();
+        let d = JobRequest::from_json(&j).unwrap();
+        assert_eq!(d.format, "libsvm-chunked");
+        assert_eq!(d.chunk_rows, 0);
+        // chunk_rows is compute-relevant: it separates fuse signatures
+        let mut a = JobRequest::default();
+        a.chunk_rows = 64;
+        let b = JobRequest::default();
+        assert_ne!(a.fuse_signature(), b.fuse_signature());
+        // step2 implicit stays dense-rejected on the mmap flavor
+        let j = Json::parse(r#"{"step2": "implicit", "format": "mmapdense"}"#).unwrap();
+        assert!(JobRequest::from_json(&j).is_err());
+        let j = Json::parse(r#"{"step2": "implicit", "format": "libsvm-chunked"}"#).unwrap();
+        assert!(JobRequest::from_json(&j).is_ok());
     }
 
     #[test]

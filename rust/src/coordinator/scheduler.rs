@@ -11,10 +11,10 @@ use super::job::{shed_error, JobRequest, JobResult, EXECUTOR_CHOICES};
 use super::metrics::Metrics;
 use crate::backend::Backend;
 use crate::constraints::{ConstraintRef, ConstraintSet, ProjectionCounter};
-use crate::data::{io, libsvm, sparse_gen, uci_sim, Dataset};
+use crate::data::{chunked, io, libsvm, mmap, out_of_core, sparse_gen, uci_sim, Dataset, OnDiskDesign};
 use crate::precond::{PrecondCache, PrecondKey};
 use crate::solvers::driver::SessionCtx;
-use crate::solvers::exact::{ground_truth, GroundTruth};
+use crate::solvers::exact::{ground_truth, try_ground_truth, GroundTruth};
 use crate::solvers::{SolveReport, Solver, SolverOpts};
 use crate::util::mem::MemBudget;
 use crate::util::rng::Rng;
@@ -128,12 +128,34 @@ pub struct Coordinator {
     /// the admission-control authority for jobs whose materialization
     /// estimate would bust the cap.
     mem: Arc<MemBudget>,
+    /// Scratch directory for named datasets spilled to an on-disk format
+    /// (`format: "mmapdense" | "libsvm-chunked"`): generated once per
+    /// prepared-cache key, then re-opened disk-backed against `mem`.
+    /// Unique per coordinator instance so concurrent coordinators (tests,
+    /// multiple serve processes) never race on a path; removed on drop —
+    /// spills are scratch, not a cache.
+    spill_dir: PathBuf,
     config: CoordinatorConfig,
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // best-effort: nothing references the spilled files once the
+        // prepared map (dropped with us) releases its OnDiskDesign handles;
+        // on Linux open handles keep working even if removal wins the race
+        let _ = std::fs::remove_dir_all(&self.spill_dir);
+    }
 }
 
 impl Coordinator {
     /// Build a coordinator around a shared backend.
     pub fn new(backend: Backend, config: CoordinatorConfig) -> Self {
+        static SPILL_SEQ: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+        let spill_dir = std::env::temp_dir().join(format!(
+            "hdpw_spill_{}_{}",
+            std::process::id(),
+            SPILL_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
         Coordinator {
             backend,
             pool: ThreadPool::new(config.workers.max(1), config.max_queue.max(1)),
@@ -145,6 +167,7 @@ impl Coordinator {
             fuse: Mutex::new(HashMap::new()),
             precond_cache: Arc::new(PrecondCache::new(config.precond_cache_bytes)),
             mem: Arc::clone(&config.mem_budget),
+            spill_dir,
             config,
         }
     }
@@ -291,19 +314,36 @@ impl Coordinator {
         }
     }
 
+    /// Whether the request resolves to a disk-backed dataset: an explicit
+    /// `mmapdense:<file>` / `libsvm-chunked:<dir>` load, or a named
+    /// generator spilled through an on-disk format.
+    fn on_disk_request(req: &JobRequest) -> bool {
+        req.dataset.starts_with("mmapdense:")
+            || req.dataset.starts_with("libsvm-chunked:")
+            || matches!(req.format.as_str(), "mmapdense" | "libsvm-chunked")
+    }
+
     fn dataset_key(req: &JobRequest) -> String {
         let mut key = format!(
             "{}_n{}_norm{}_seed{}",
             req.dataset, req.n, req.normalize, req.seed
         );
-        let file_load =
-            req.dataset.starts_with("csv:") || req.dataset.starts_with("libsvm:");
+        let file_load = req.dataset.starts_with("csv:")
+            || req.dataset.starts_with("libsvm:")
+            || req.dataset.starts_with("mmapdense:")
+            || req.dataset.starts_with("libsvm-chunked:");
         if !file_load && !matches!(req.format.as_str(), "" | "dense") {
             key.push_str(&format!(
                 "_fmt{}_den{}",
                 req.format,
                 Self::effective_density(req)
             ));
+        }
+        if Self::on_disk_request(req) {
+            // shard granularity changes the prepared design's cache
+            // geometry (resident bytes, fault counts — never its numerics);
+            // different chunkings must not share one prepared entry
+            key.push_str(&format!("_ck{}", req.chunk_rows));
         }
         key
     }
@@ -365,8 +405,25 @@ impl Coordinator {
     /// normalize, and compute ground truth. Callers hold the single-flight
     /// claim for `key`; this function itself touches only the disk cache.
     fn build_prepared(&self, req: &JobRequest, key: &str) -> Result<Arc<Prepared>> {
-        let sparse_format = !matches!(req.format.as_str(), "" | "dense");
-        let mut ds = if let Some(path) = req.dataset.strip_prefix("csv:") {
+        let on_disk_format = matches!(req.format.as_str(), "mmapdense" | "libsvm-chunked");
+        let sparse_format = !on_disk_format && !matches!(req.format.as_str(), "" | "dense");
+        let mut ds = if let Some(path) = req.dataset.strip_prefix("mmapdense:") {
+            let od = OnDiskDesign::open_mmap(
+                std::path::Path::new(path),
+                Arc::clone(&self.mem),
+                req.chunk_rows,
+            )?;
+            Dataset::from_on_disk(req.dataset.clone(), od)
+        } else if let Some(dir) = req.dataset.strip_prefix("libsvm-chunked:") {
+            let od = OnDiskDesign::open_chunked(
+                std::path::Path::new(dir),
+                Arc::clone(&self.mem),
+                req.chunk_rows,
+            )?;
+            Dataset::from_on_disk(req.dataset.clone(), od)
+        } else if on_disk_format {
+            self.spill_and_open(req, key)?
+        } else if let Some(path) = req.dataset.strip_prefix("csv:") {
             io::load_csv(std::path::Path::new(path), true)?
         } else if let Some(path) = req.dataset.strip_prefix("libsvm:") {
             libsvm::load(std::path::Path::new(path))?
@@ -418,13 +475,75 @@ impl Coordinator {
             }
         };
         if req.normalize {
+            if ds.on_disk().is_some() {
+                // center/scale would rewrite every stored entry of a design
+                // the process deliberately does not hold — reject up front
+                // rather than silently skipping the paper's preprocessing
+                bail!(
+                    "normalize is unsupported for on-disk datasets \
+                     ({:?}): pre-normalize the file or drop normalize",
+                    req.dataset
+                );
+            }
             ds.normalize();
         }
-        let gt = ground_truth(&ds);
+        // on-disk ground truth streams shards through charged scopes: a
+        // failed read or refused charge is a structured error, not a panic
+        let gt = match ds.on_disk() {
+            Some(_) => try_ground_truth(&ds)?,
+            None => ground_truth(&ds),
+        };
         Ok(Arc::new(Prepared {
             ds: Arc::new(ds),
             gt: Arc::new(gt),
         }))
+    }
+
+    /// Generate the named dataset and spill it into [`Self::spill_dir`] in
+    /// the requested on-disk format, then re-open it disk-backed against
+    /// the coordinator budget. Generation itself is in-memory (the
+    /// synthetic generators are) — the point of the spill path is
+    /// exercising the out-of-core *solve* machinery end-to-end through the
+    /// coordinator; truly budget-exceeding data arrives via the
+    /// `mmapdense:<path>` / `libsvm-chunked:<dir>` load prefixes instead.
+    fn spill_and_open(&self, req: &JobRequest, key: &str) -> Result<Dataset> {
+        let chunk = if req.chunk_rows > 0 {
+            req.chunk_rows
+        } else {
+            out_of_core::DEFAULT_CHUNK_ROWS
+        };
+        if req.format == "mmapdense" {
+            let mut rng = Rng::new(req.seed ^ 0xDA7A);
+            let generated = match uci_sim::by_name(&req.dataset, req.n, &mut rng) {
+                Some(ds) => ds,
+                None => bail!("unknown dataset {:?}", req.dataset),
+            };
+            let a = generated
+                .design
+                .dense_if_ready()
+                .expect("dense generator yields a resident dense design");
+            let path = self.spill_dir.join(format!("{key}.hdpw"));
+            mmap::write(&path, a, &generated.b)?;
+            let od = OnDiskDesign::open_mmap(&path, Arc::clone(&self.mem), req.chunk_rows)?;
+            Ok(Dataset::from_on_disk(generated.name.clone(), od))
+        } else {
+            let mut rng = Rng::new(req.seed ^ 0xDA7A);
+            let made = sparse_gen::named_sparse(
+                &req.dataset,
+                req.n,
+                Self::effective_density(req),
+                &mut rng,
+            );
+            let generated = match made {
+                Some(ds) => ds,
+                None => bail!("unknown dataset {:?}", req.dataset),
+            };
+            let csr = generated.csr().expect("sparse generator yields CSR");
+            let dir = self.spill_dir.join(key);
+            chunked::write_chunks(&dir, csr, &generated.b, chunk)?;
+            let od = OnDiskDesign::open_chunked(&dir, Arc::clone(&self.mem), req.chunk_rows)?;
+            Ok(Dataset::from_on_disk(generated.name.clone(), od))
+        }
     }
 
     /// Join the coalescing episode for `key` (one in-flight job).
@@ -612,7 +731,7 @@ impl Coordinator {
         // (bounded by its own time budget) for headroom instead of racing
         // other jobs into the budget and failing mid-solve.
         let mut mem_est =
-            Self::job_mem_estimate(&req.solver, ds.n(), ds.d(), ds.is_sparse(), step2_mode);
+            Self::job_mem_estimate(&req.solver, ds.n(), ds.d(), ds.sparse_arith(), step2_mode);
         if let Some(key) = coalesce_key.as_ref().filter(|_| mem_est > 0) {
             // cache-aware: a resident two-step artifact (whose HD bytes are
             // already charged for as long as it is cached) means this job
@@ -651,6 +770,12 @@ impl Coordinator {
             }
         }
         let densify_before = self.mem.densify_events();
+        // shard-cache deltas, same semantics as densify_events: what THIS
+        // job's solve span added to the process counters (concurrent jobs
+        // on the shared budget blur attribution the same way for both)
+        let shard_faults_before = self.mem.shard_faults();
+        let shard_evictions_before = self.mem.shard_evictions();
+        let io_retries_before = self.mem.io_retries();
         // request coalescing: concurrent jobs resolving to the same
         // PrecondKey run as one episode — the artifact cache's keyed
         // single-flight means exactly one member computes the sketch+QR
@@ -676,7 +801,7 @@ impl Coordinator {
         let rel = ((best.f_final - gt.f_star) / gt.f_star.max(1e-300)).max(0.0);
         self.metrics.record_job(total_secs, req.trials, true);
         self.metrics.record_projections(counted.count());
-        if ds.is_sparse() {
+        if ds.sparse_arith() {
             self.metrics.record_sparse_job(ds.nnz());
         }
         Ok(JobResult {
@@ -693,10 +818,13 @@ impl Coordinator {
             projections: counted.count(),
             nnz: ds.nnz(),
             density: ds.density(),
-            sparse: ds.is_sparse(),
+            sparse: ds.sparse_arith(),
             mem_est_bytes: mem_est,
             mem_peak_bytes: self.mem.peak(),
             densify_events: self.mem.densify_events() - densify_before,
+            shard_faults: self.mem.shard_faults() - shard_faults_before,
+            shard_evictions: self.mem.shard_evictions() - shard_evictions_before,
+            io_retries: self.mem.io_retries() - io_retries_before,
             coalesced_batch,
             batched_trials,
             batched_requests: 1,
@@ -1393,6 +1521,79 @@ mod tests {
         req2.dataset = format!("libsvm:{}", path.display());
         let err2 = c.run_job(&req2).unwrap_err();
         assert!(format!("{err2:#}").contains("line 2"), "{err2:#}");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn on_disk_formats_prepare_solve_and_report_counters() {
+        let c = coord();
+        // chunked-CSR spill: sparse-arith routing, shard counters live
+        let mut req = small_req("pwgradient");
+        req.format = "libsvm-chunked".into();
+        req.chunk_rows = 256;
+        let r1 = c.run_job(&req).unwrap();
+        assert!(r1.best_rel_err < 1e-6, "rel {}", r1.best_rel_err);
+        assert!(r1.sparse, "chunked flavor runs CSR arithmetic");
+        assert!(r1.shard_faults > 0, "the solve must stream shards");
+        assert_eq!(r1.io_retries, 0, "healthy files retry nothing");
+        // bitwise parity with the resident sparse twin of the same seed:
+        // the spill round-trips through shortest-roundtrip text and the
+        // shard-streamed kernels replay the resident arithmetic exactly
+        let mut twin = small_req("pwgradient");
+        twin.format = "sparse".into();
+        let rt = c.run_job(&twin).unwrap();
+        assert_eq!(r1.best.x, rt.best.x, "on-disk CSR diverged from resident");
+        assert_eq!(r1.f_star.to_bits(), rt.f_star.to_bits());
+        // mmapdense spill: dense-like routing, dense-twin parity
+        let mut dreq = small_req("pwgradient");
+        dreq.format = "mmapdense".into();
+        let r2 = c.run_job(&dreq).unwrap();
+        assert!(!r2.sparse, "mmapdense flavor runs dense arithmetic");
+        assert!(r2.shard_faults > 0);
+        let mut dtwin = small_req("pwgradient");
+        dtwin.format = "dense".into();
+        let rd = c.run_job(&dtwin).unwrap();
+        assert_eq!(r2.best.x, rd.best.x, "on-disk dense diverged from resident");
+        assert_eq!(r2.f_star.to_bits(), rd.f_star.to_bits());
+        // chunk_rows is part of the dataset identity: a different shard
+        // geometry prepares its own entry instead of aliasing the first
+        let entries_before = c.prepared.lock().unwrap().len();
+        let mut rechunk = req.clone();
+        rechunk.chunk_rows = 64;
+        let r3 = c.run_job(&rechunk).unwrap();
+        assert_eq!(r1.best.x, r3.best.x, "chunk size must never change numerics");
+        assert_eq!(c.prepared.lock().unwrap().len(), entries_before + 1);
+        // normalize cannot rewrite a design the process never holds
+        let mut bad = small_req("exact");
+        bad.format = "mmapdense".into();
+        bad.normalize = true;
+        let err = c.run_job(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("normalize"), "{err:#}");
+    }
+
+    #[test]
+    fn on_disk_path_loads_open_and_missing_files_error_cleanly() {
+        let c = coord();
+        // a real mmapdense file written out of band, loaded by path
+        let dir = std::env::temp_dir().join(format!("hdpw_sched_od_{}", std::process::id()));
+        let mut rng = crate::util::rng::Rng::new(9);
+        let a = crate::linalg::Mat::gaussian(256, 6, &mut rng);
+        let b: Vec<f64> = (0..256).map(|i| i as f64 * 0.25).collect();
+        let path = dir.join("by_path.hdpw");
+        crate::data::mmap::write(&path, &a, &b).unwrap();
+        let mut req = small_req("exact");
+        req.dataset = format!("mmapdense:{}", path.display());
+        let res = c.run_job(&req).unwrap();
+        assert!(res.best_rel_err < 1e-9, "rel {}", res.best_rel_err);
+        assert!(!res.sparse);
+        // missing file: a structured job error, never a panic
+        let mut missing = small_req("exact");
+        missing.dataset = "mmapdense:/nonexistent/nope.hdpw".into();
+        let err = c.run_job(&missing).unwrap_err();
+        assert!(format!("{err:#}").contains("mmapdense"), "{err:#}");
+        let mut missing2 = small_req("exact");
+        missing2.dataset = "libsvm-chunked:/nonexistent/dir".into();
+        assert!(c.run_job(&missing2).is_err());
         std::fs::remove_dir_all(dir).unwrap();
     }
 

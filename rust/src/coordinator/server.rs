@@ -136,6 +136,26 @@ pub fn handle_connection<R: BufRead, W: Write + Send + 'static>(
                             "mem_rejections",
                             Json::num(coord.mem_budget().rejections() as f64),
                         ),
+                        // out-of-core health: shard faults (cold block
+                        // reads), evictions (budget pressure on the block
+                        // cache), transient I/O retries the reader absorbed,
+                        // and the bytes currently resident in shard caches
+                        (
+                            "shard_faults",
+                            Json::num(coord.mem_budget().shard_faults() as f64),
+                        ),
+                        (
+                            "shard_evictions",
+                            Json::num(coord.mem_budget().shard_evictions() as f64),
+                        ),
+                        (
+                            "shard_io_retries",
+                            Json::num(coord.mem_budget().io_retries() as f64),
+                        ),
+                        (
+                            "shard_resident_bytes",
+                            Json::num(coord.mem_budget().shard_resident_bytes() as f64),
+                        ),
                     ];
                     // serve-tier QoS: shed/coalesce totals plus one nested
                     // object per priority lane (counts, live queue depth,
@@ -328,6 +348,10 @@ mod tests {
             "mem_limit_bytes",
             "densify_events",
             "mem_rejections",
+            "shard_faults",
+            "shard_evictions",
+            "shard_io_retries",
+            "shard_resident_bytes",
             "jobs_shed",
             "coalesced_jobs",
             "coalesce_batch_max",
@@ -435,6 +459,34 @@ mod tests {
         let bad = r#"{"solver":"exact","dataset":"libsvm:/no/such/file.svm"}"#;
         let out2 = run_session(&format!("{bad}\n"));
         assert!(out2[0].get("error").is_some(), "{out2:?}");
+    }
+
+    #[test]
+    fn out_of_core_job_over_wire_reports_shard_counters() {
+        let req = r#"{"id":3,"solver":"exact","dataset":"syn2","n":512,"format":"libsvm-chunked","chunk_rows":128}"#;
+        let out = run_session(&format!("{req}\n{{\"cmd\":\"metrics\"}}\n"));
+        assert_eq!(out.len(), 2, "{out:?}");
+        let result = out
+            .iter()
+            .find(|j| j.get("shard_faults").is_some() && j.get("best_f").is_some())
+            .expect("result line with shard counters");
+        assert!(
+            result.get("shard_faults").and_then(Json::as_f64).unwrap() > 0.0,
+            "{result:?}"
+        );
+        assert_eq!(result.get("io_retries").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(result.get("sparse").and_then(Json::as_bool), Some(true));
+        // the service-level shard gauges ride the metrics line
+        let metrics = out
+            .iter()
+            .find(|j| j.get("shard_resident_bytes").is_some())
+            .expect("metrics line");
+        assert!(metrics.get("shard_io_retries").and_then(Json::as_f64).is_some());
+        // an unreadable on-disk dataset is an id-tagged error line
+        let bad = r#"{"id":9,"solver":"exact","dataset":"mmapdense:/no/such/file.hdpw"}"#;
+        let out2 = run_session(&format!("{bad}\n"));
+        assert!(out2[0].get("error").is_some(), "{out2:?}");
+        assert_eq!(out2[0].get("id").and_then(Json::as_f64), Some(9.0));
     }
 
     #[test]

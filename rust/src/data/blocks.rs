@@ -172,7 +172,11 @@ pub fn default_block_nnz(nnz: usize) -> usize {
 #[derive(Clone, Copy)]
 pub struct CsrBlock<'a> {
     mat: &'a CsrMat,
-    /// Global index (in the parent) of this shard's first row.
+    /// Index into `mat` of this shard's local row 0 — equal to `start` for
+    /// shards borrowed from a full-resident parent, 0 for scratch shards
+    /// whose payload matrix holds only the shard's own rows.
+    local0: usize,
+    /// Global index (in the logical matrix) of this shard's first row.
     pub start: usize,
     /// Number of rows in this shard.
     pub rows: usize,
@@ -185,7 +189,23 @@ impl<'a> CsrBlock<'a> {
     pub fn whole(mat: &'a CsrMat) -> CsrBlock<'a> {
         CsrBlock {
             mat,
+            local0: 0,
             start: 0,
+            rows: mat.rows,
+        }
+    }
+
+    /// A shard whose payload lives in its own scratch matrix (e.g. a chunk
+    /// re-parsed from disk) but whose rows occupy `[base, base + mat.rows)`
+    /// of a larger logical matrix. This is the bridge the out-of-core layer
+    /// uses to feed disk-resident chunks through the exact same streamed
+    /// sketch folds as borrowed shards: `row(k)` reads the scratch matrix,
+    /// `global_row(k)` reports `base + k`.
+    pub fn from_scratch(mat: &'a CsrMat, base: usize) -> CsrBlock<'a> {
+        CsrBlock {
+            mat,
+            local0: 0,
+            start: base,
             rows: mat.rows,
         }
     }
@@ -200,7 +220,7 @@ impl<'a> CsrBlock<'a> {
     #[inline]
     pub fn row(&self, k: usize) -> (&'a [u32], &'a [f64]) {
         debug_assert!(k < self.rows);
-        self.mat.row(self.start + k)
+        self.mat.row(self.local0 + k)
     }
 
     /// Global row index of local row `k`.
@@ -211,7 +231,7 @@ impl<'a> CsrBlock<'a> {
 
     /// Stored entries in this shard.
     pub fn nnz(&self) -> usize {
-        self.mat.indptr[self.start + self.rows] - self.mat.indptr[self.start]
+        self.mat.indptr[self.local0 + self.rows] - self.mat.indptr[self.local0]
     }
 
     /// Densify just this shard (rows x cols) — the bounded scratch the
@@ -280,6 +300,7 @@ impl<'a> CsrBlocks<'a> {
         let end = self.bounds[i + 1];
         CsrBlock {
             mat: self.mat,
+            local0: start,
             start,
             rows: end - start,
         }
@@ -432,6 +453,26 @@ mod tests {
         // heuristic bounds
         assert_eq!(default_block_nnz(0), 1);
         assert!(default_block_nnz(1 << 24) <= 32 * 1024);
+    }
+
+    #[test]
+    fn scratch_shard_reports_global_rows_over_local_payload() {
+        let m = skewed_csr(30, 6, 5);
+        let view = CsrBlocks::new(&m, 10);
+        assert!(view.num_blocks() > 1);
+        for blk in view.iter() {
+            // rebuild the shard's payload as its own scratch matrix (what a
+            // disk reload produces) and check the scratch-backed block is
+            // indistinguishable from the borrowed one
+            let scratch = CsrMat::from_dense(&blk.to_dense());
+            let sb = CsrBlock::from_scratch(&scratch, blk.start);
+            assert_eq!((sb.start, sb.rows, sb.cols()), (blk.start, blk.rows, blk.cols()));
+            assert_eq!(sb.nnz(), blk.nnz());
+            for k in 0..blk.rows {
+                assert_eq!(sb.global_row(k), blk.global_row(k));
+                assert_eq!(sb.row(k), blk.row(k));
+            }
+        }
     }
 
     #[test]

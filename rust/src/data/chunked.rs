@@ -1,0 +1,456 @@
+//! The `libsvm-chunked` on-disk format: a directory of `chunk_*.svm` files
+//! (each a libsvm shard with a `# hdpw: cols=` header), streamed shard by
+//! shard so the full CSR payload is never resident.
+//!
+//! # Open-time validation pass
+//!
+//! [`ChunkedCsr::open`] fully parses every chunk once ([`libsvm::scan_shard`])
+//! keeping only metadata: labels, per-row nnz, the index-convention
+//! evidence and the declared dimension. From that single pass it decides
+//! the **global** convention — 0-based iff *any* shard used index 0, and
+//! `d` as the max of every shard's declared/inferred dimension — and keeps
+//! the global per-row nnz prefix, which is what lets the streamed sketch
+//! replicate `CsrBlocks`' greedy nnz partition without the matrix. Every
+//! later reload re-parses its chunk with the convention **forced**
+//! ([`libsvm::parse_shard`]), so per-shard auto-detection can never diverge
+//! from the open-time answer; a chunk that contradicts it (the file changed
+//! underneath us) errors as corruption. A chunk without the `cols=` header
+//! is rejected at open — the "short header" fault class — because a
+//! headerless shard's inferred width depends on which rows landed in it.
+//!
+//! # Fallibility, retries and fault injection
+//!
+//! Every read returns `Result`; transient I/O kinds (`Interrupted`,
+//! `TimedOut`, `WouldBlock`) are retried once at shard granularity (counted
+//! via [`MemBudget::note_io_retry`]), everything else — mid-read EOF, parse
+//! errors, non-finite payloads, permission errors — propagates immediately
+//! as a structured error that the serve loop tags with the request id.
+//! Because the test process runs with privileges that make real
+//! permission-denied fixtures unreliable, the module exposes a one-shot
+//! [`inject_fault`] hook: a path-substring plan that wraps the next
+//! matching chunk read in a [`FailingReader`] yielding a chosen
+//! `io::ErrorKind` after N bytes.
+
+use crate::data::libsvm;
+use crate::linalg::CsrMat;
+use crate::util::mem::MemBudget;
+use anyhow::{bail, Context, Result};
+use std::io::{self, BufReader, Read};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One chunk's placement in the global row space.
+#[derive(Debug, Clone)]
+pub struct ShardMeta {
+    /// The chunk file.
+    pub path: PathBuf,
+    /// Global index of the chunk's first row.
+    pub start: usize,
+    /// Rows in this chunk.
+    pub rows: usize,
+    /// Stored entries in this chunk.
+    pub nnz: usize,
+}
+
+/// An opened chunk directory: global shape/convention + per-shard metadata.
+/// The CSR payload stays on disk; labels (`b`) and the per-row nnz prefix
+/// are the only eager state (both O(n), untracked like the in-memory
+/// dataset's `b`).
+#[derive(Debug)]
+pub struct ChunkedCsr {
+    /// Total rows across all chunks.
+    pub rows: usize,
+    /// Global column count (max of declared/inferred across chunks).
+    pub cols: usize,
+    /// Total stored entries.
+    pub nnz: usize,
+    base: u64,
+    shards: Vec<ShardMeta>,
+    b: Vec<f64>,
+    /// `rows + 1` monotone global nnz offsets — an indptr without a matrix.
+    row_nnz_prefix: Vec<usize>,
+}
+
+impl ChunkedCsr {
+    /// Open a chunk directory: enumerate `chunk_*.svm` (sorted by name) and
+    /// run the validation pass described in the module docs. `budget` is
+    /// used only for transient-retry accounting.
+    pub fn open(dir: &Path, budget: &MemBudget) -> Result<ChunkedCsr> {
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+            .with_context(|| format!("open chunk directory {dir:?}"))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("chunk_") && n.ends_with(".svm"))
+            })
+            .collect();
+        paths.sort();
+        if paths.is_empty() {
+            bail!("chunk directory {dir:?}: no chunk_*.svm files");
+        }
+        let mut scans = Vec::with_capacity(paths.len());
+        for p in &paths {
+            let scan = with_transient_retry(budget, &format!("scan {p:?}"), || {
+                libsvm::scan_shard(&p.to_string_lossy(), chunk_reader(p)?)
+            })?;
+            if scan.declared_cols == 0 {
+                bail!(
+                    "chunk {p:?}: missing '# hdpw: cols=' header (short header) — \
+                     a headerless shard's inferred width depends on row placement"
+                );
+            }
+            scans.push(scan);
+        }
+        let base: u64 = if scans.iter().any(|s| s.saw_zero_index) { 0 } else { 1 };
+        let mut cols = 0usize;
+        for s in &scans {
+            let inferred = if s.row_nnz.iter().any(|&k| k > 0) {
+                (s.max_index + 1 - base) as usize
+            } else {
+                0
+            };
+            cols = cols.max(s.declared_cols).max(inferred);
+        }
+        let mut shards = Vec::with_capacity(paths.len());
+        let mut b = Vec::new();
+        let mut row_nnz_prefix = vec![0usize];
+        let mut start = 0usize;
+        for (p, s) in paths.into_iter().zip(scans) {
+            let rows = s.labels.len();
+            if rows == 0 {
+                bail!("chunk {p:?}: no data rows");
+            }
+            let nnz: usize = s.row_nnz.iter().sum();
+            for k in &s.row_nnz {
+                row_nnz_prefix.push(row_nnz_prefix.last().unwrap() + k);
+            }
+            b.extend_from_slice(&s.labels);
+            shards.push(ShardMeta { path: p, start, rows, nnz });
+            start += rows;
+        }
+        if cols == 0 {
+            bail!("chunk directory {dir:?}: no features in any chunk");
+        }
+        Ok(ChunkedCsr {
+            rows: start,
+            cols,
+            nnz: *row_nnz_prefix.last().unwrap(),
+            base,
+            shards,
+            b,
+            row_nnz_prefix,
+        })
+    }
+
+    /// The response vector (eager at open, untracked).
+    pub fn b(&self) -> &[f64] {
+        &self.b
+    }
+
+    /// Per-shard metadata, in row order.
+    pub fn shards(&self) -> &[ShardMeta] {
+        &self.shards
+    }
+
+    /// Global nnz offset of row `i` (`rows + 1` entries — the indptr the
+    /// streamed sketch uses to replicate `CsrBlocks`' greedy partition).
+    pub fn row_nnz_prefix(&self) -> &[usize] {
+        &self.row_nnz_prefix
+    }
+
+    /// Stored entries in rows `[lo, hi)`.
+    pub fn range_nnz(&self, lo: usize, hi: usize) -> usize {
+        self.row_nnz_prefix[hi] - self.row_nnz_prefix[lo]
+    }
+
+    /// Reload shard `i` into its CSR payload, convention forced, with shape
+    /// re-validated against the open-time scan (a mismatch means the file
+    /// changed underneath us — corruption, not a fresh auto-detection).
+    pub fn load_shard(&self, i: usize, budget: &MemBudget) -> Result<CsrMat> {
+        let meta = &self.shards[i];
+        let (csr, labels) = with_transient_retry(budget, &format!("load {:?}", meta.path), || {
+            libsvm::parse_shard(
+                &meta.path.to_string_lossy(),
+                chunk_reader(&meta.path)?,
+                self.base,
+                self.cols,
+            )
+        })?;
+        if csr.rows != meta.rows || csr.nnz() != meta.nnz {
+            bail!(
+                "chunk {:?}: shape changed since open ({}x{} nnz {} on disk, expected {} rows nnz {})",
+                meta.path,
+                csr.rows,
+                csr.cols,
+                csr.nnz(),
+                meta.rows,
+                meta.nnz
+            );
+        }
+        for (k, (got, want)) in labels.iter().zip(&self.b[meta.start..]).enumerate() {
+            if got.to_bits() != want.to_bits() {
+                bail!("chunk {:?}: label changed since open at local row {k}", meta.path);
+            }
+        }
+        Ok(csr)
+    }
+}
+
+/// Write a CSR dataset as a chunk directory of `chunk_rows`-row shards —
+/// the writer the generators, the CLI and the tests share. Each shard gets
+/// the `# hdpw: cols=` header and 1-based indices with shortest-roundtrip
+/// float formatting, so a reload is bit-exact (the PR3 round-trip
+/// guarantee, now per shard).
+pub fn write_chunks(dir: &Path, csr: &CsrMat, b: &[f64], chunk_rows: usize) -> Result<()> {
+    assert_eq!(csr.rows, b.len());
+    assert!(chunk_rows > 0, "chunk_rows must be positive");
+    std::fs::create_dir_all(dir).with_context(|| format!("create chunk directory {dir:?}"))?;
+    let mut shard = 0usize;
+    let mut lo = 0usize;
+    while lo < csr.rows {
+        let hi = (lo + chunk_rows).min(csr.rows);
+        let mut text = format!("# hdpw: cols={}\n", csr.cols);
+        for i in lo..hi {
+            text.push_str(&b[i].to_string());
+            let (cols, vals) = csr.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                text.push_str(&format!(" {}:{}", *c as u64 + 1, v));
+            }
+            text.push('\n');
+        }
+        let path = dir.join(format!("chunk_{shard:05}.svm"));
+        std::fs::write(&path, text).with_context(|| format!("write chunk {path:?}"))?;
+        shard += 1;
+        lo = hi;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// fault injection + transient retry
+// ---------------------------------------------------------------------------
+
+struct FaultPlan {
+    substr: String,
+    after_bytes: usize,
+    kind: io::ErrorKind,
+}
+
+static FAULTS: Mutex<Vec<FaultPlan>> = Mutex::new(Vec::new());
+
+/// Install a one-shot fault: the next chunk read whose path contains
+/// `path_substr` fails with `kind` after `after_bytes` bytes have been
+/// delivered (`0` = the very first read — the permission-denied shape).
+/// The plan is consumed when it arms, so a transient kind that the loader
+/// retries succeeds on the second attempt (which is exactly what the
+/// `io_retries` counter test needs). Test-only by intent, but compiled in:
+/// the hook must exercise the same production read path the tests assert.
+pub fn inject_fault(path_substr: &str, after_bytes: usize, kind: io::ErrorKind) {
+    FAULTS.lock().unwrap().push(FaultPlan {
+        substr: path_substr.to_string(),
+        after_bytes,
+        kind,
+    });
+}
+
+/// Remove all pending fault plans (test hygiene).
+pub fn clear_faults() {
+    FAULTS.lock().unwrap().clear();
+}
+
+fn take_plan(path: &Path) -> Option<(usize, io::ErrorKind)> {
+    let mut plans = FAULTS.lock().unwrap();
+    let s = path.to_string_lossy();
+    let idx = plans.iter().position(|p| s.contains(&p.substr))?;
+    let p = plans.remove(idx);
+    Some((p.after_bytes, p.kind))
+}
+
+/// A reader that delivers `after_bytes` bytes faithfully, then fails once
+/// with the injected `io::ErrorKind` and passes through afterwards — the
+/// fixture layer for mid-read EOF / timeout / permission-denied faults.
+pub struct FailingReader<R> {
+    inner: R,
+    remaining: usize,
+    kind: io::ErrorKind,
+    fired: bool,
+}
+
+impl<R> FailingReader<R> {
+    /// Wrap `inner`, arming a single failure of `kind` after `after_bytes`.
+    pub fn new(inner: R, after_bytes: usize, kind: io::ErrorKind) -> FailingReader<R> {
+        FailingReader {
+            inner,
+            remaining: after_bytes,
+            kind,
+            fired: false,
+        }
+    }
+}
+
+impl<R: Read> Read for FailingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if self.fired || buf.is_empty() {
+            return self.inner.read(buf);
+        }
+        if self.remaining == 0 {
+            self.fired = true;
+            return Err(io::Error::new(self.kind, format!("injected fault: {:?}", self.kind)));
+        }
+        let cap = buf.len().min(self.remaining);
+        let n = self.inner.read(&mut buf[..cap])?;
+        self.remaining -= n;
+        Ok(n)
+    }
+}
+
+/// Open a chunk for reading, routing through any armed fault plan.
+fn chunk_reader(path: &Path) -> Result<Box<dyn io::BufRead>> {
+    let file = std::fs::File::open(path).with_context(|| format!("open chunk {path:?}"))?;
+    Ok(match take_plan(path) {
+        Some((after, kind)) => Box::new(BufReader::new(FailingReader::new(file, after, kind))),
+        None => Box::new(BufReader::new(file)),
+    })
+}
+
+/// Whether the error chain bottoms out in a transient `io::Error` worth one
+/// retry (`Interrupted` is already retried inside `BufRead`; it is listed
+/// for completeness against readers that surface it raw).
+pub fn is_transient_io(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| {
+        c.downcast_ref::<io::Error>().is_some_and(|e| {
+            matches!(
+                e.kind(),
+                io::ErrorKind::Interrupted | io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock
+            )
+        })
+    })
+}
+
+fn with_transient_retry<T>(
+    budget: &MemBudget,
+    stage: &str,
+    f: impl Fn() -> Result<T>,
+) -> Result<T> {
+    match f() {
+        Err(e) if is_transient_io(&e) => {
+            budget.note_io_retry(stage);
+            f()
+        }
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("hdpw_chunked_{}_{name}", std::process::id()))
+    }
+
+    fn sparse(n: usize, d: usize, seed: u64) -> CsrMat {
+        let mut rng = Rng::new(seed);
+        let dense = crate::linalg::Mat::from_fn(n, d, |_, _| {
+            if rng.uniform() < 0.3 {
+                rng.gaussian()
+            } else {
+                0.0
+            }
+        });
+        CsrMat::from_dense(&dense)
+    }
+
+    #[test]
+    fn write_open_reload_roundtrips_bitwise() {
+        let csr = sparse(53, 7, 1);
+        let mut rng = Rng::new(2);
+        let b = rng.gaussians(53);
+        for chunk_rows in [1usize, 9, 53, 500] {
+            let dir = tmp(&format!("rt{chunk_rows}"));
+            let _ = std::fs::remove_dir_all(&dir);
+            write_chunks(&dir, &csr, &b, chunk_rows).unwrap();
+            let budget = MemBudget::unlimited();
+            let od = ChunkedCsr::open(&dir, &budget).unwrap();
+            assert_eq!((od.rows, od.cols, od.nnz), (53, 7, csr.nnz()));
+            assert_eq!(od.b(), &b[..]);
+            assert_eq!(od.row_nnz_prefix().len(), 54);
+            assert_eq!(od.shards().len(), 53usize.div_ceil(chunk_rows));
+            // reassemble and compare bitwise
+            let mut rows_seen = 0usize;
+            for (i, meta) in od.shards().iter().enumerate() {
+                assert_eq!(meta.start, rows_seen);
+                let shard = od.load_shard(i, &budget).unwrap();
+                assert_eq!(shard.cols, 7);
+                for k in 0..shard.rows {
+                    assert_eq!(shard.row(k), csr.row(meta.start + k), "chunk_rows={chunk_rows}");
+                }
+                assert_eq!(shard.nnz(), od.range_nnz(meta.start, meta.start + meta.rows));
+                rows_seen += meta.rows;
+            }
+            assert_eq!(rows_seen, 53);
+            assert_eq!(budget.io_retries(), 0);
+            std::fs::remove_dir_all(dir).unwrap();
+        }
+    }
+
+    #[test]
+    fn open_rejects_short_header_and_empty_dirs() {
+        let dir = tmp("hdr");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let budget = MemBudget::unlimited();
+        let err = ChunkedCsr::open(&dir, &budget).unwrap_err();
+        assert!(format!("{err:#}").contains("no chunk_*.svm"), "{err:#}");
+        // a shard without the cols header is the "short header" fault class
+        std::fs::write(dir.join("chunk_00000.svm"), "1 1:2\n").unwrap();
+        let err = ChunkedCsr::open(&dir, &budget).unwrap_err();
+        assert!(format!("{err:#}").contains("short header"), "{err:#}");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn reload_detects_mutation_since_open() {
+        let csr = sparse(20, 4, 3);
+        let b = Rng::new(4).gaussians(20);
+        let dir = tmp("mut");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_chunks(&dir, &csr, &b, 8).unwrap();
+        let budget = MemBudget::unlimited();
+        let od = ChunkedCsr::open(&dir, &budget).unwrap();
+        // rewrite shard 1 with an extra row
+        std::fs::write(
+            dir.join("chunk_00001.svm"),
+            "# hdpw: cols=4\n1 1:2\n2 2:3\n3 1:1\n4 1:1\n5 1:1\n6 1:1\n7 1:1\n8 1:1\n9 1:1\n",
+        )
+        .unwrap();
+        let err = od.load_shard(1, &budget).unwrap_err();
+        assert!(format!("{err:#}").contains("changed since open"), "{err:#}");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn injected_faults_surface_and_transients_retry_once() {
+        let csr = sparse(16, 3, 5);
+        let b = Rng::new(6).gaussians(16);
+        let dir = tmp("fault");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_chunks(&dir, &csr, &b, 8).unwrap();
+        let budget = MemBudget::unlimited();
+        let od = ChunkedCsr::open(&dir, &budget).unwrap();
+        // permanent fault: permission denied on the first byte
+        inject_fault(&format!("{}/chunk_00000", dir.to_string_lossy()), 0, io::ErrorKind::PermissionDenied);
+        let err = od.load_shard(0, &budget).unwrap_err();
+        assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+        assert_eq!(budget.io_retries(), 0, "permission denied is not transient");
+        // transient fault: TimedOut mid-read → one retry, then success
+        inject_fault(&format!("{}/chunk_00001", dir.to_string_lossy()), 10, io::ErrorKind::TimedOut);
+        let shard = od.load_shard(1, &budget).unwrap();
+        assert_eq!(shard.rows, 8);
+        assert_eq!(budget.io_retries(), 1, "transient kinds retry exactly once");
+        clear_faults();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+}

@@ -29,6 +29,7 @@
 //! mini-batch gradients, CGLS ground truth) call none of the dense
 //! capabilities, which is what `densify_events == 0` asserts end-to-end.
 
+use crate::data::out_of_core::OnDiskDesign;
 use crate::linalg::{CsrMat, Mat};
 use crate::util::mem::{MemBudget, MemCharge, MemError};
 use std::sync::{Arc, OnceLock};
@@ -40,14 +41,18 @@ pub enum Repr {
     Dense,
     /// Compressed sparse rows ([`CsrMat`]); no dense mirror until requested.
     Csr,
+    /// Disk-backed shards streamed through a budget-charged cache
+    /// ([`OnDiskDesign`]); nothing resident beyond the cache.
+    OnDisk,
 }
 
 impl Repr {
-    /// The cache-key tag ("dense" | "csr").
+    /// The cache-key tag ("dense" | "csr" | "ondisk").
     pub fn tag(self) -> &'static str {
         match self {
             Repr::Dense => "dense",
             Repr::Csr => "csr",
+            Repr::OnDisk => "ondisk",
         }
     }
 }
@@ -65,6 +70,7 @@ enum Inner {
         csr: CsrMat,
         mirror: OnceLock<Mirror>,
     },
+    OnDisk(Arc<OnDiskDesign>),
 }
 
 /// The design matrix `A` in whichever representation it arrived in; see the
@@ -112,11 +118,21 @@ impl DesignMatrix {
         }
     }
 
+    /// Wrap a disk-backed design. The `Arc` is shared by clones, so every
+    /// view of the dataset streams through one shard cache (and one set of
+    /// fault/eviction counters).
+    pub fn from_on_disk(od: Arc<OnDiskDesign>) -> DesignMatrix {
+        DesignMatrix {
+            inner: Inner::OnDisk(od),
+        }
+    }
+
     /// Number of rows.
     pub fn rows(&self) -> usize {
         match &self.inner {
             Inner::Dense(m) => m.rows,
             Inner::Csr { csr, .. } => csr.rows,
+            Inner::OnDisk(od) => od.rows(),
         }
     }
 
@@ -125,6 +141,7 @@ impl DesignMatrix {
         match &self.inner {
             Inner::Dense(m) => m.cols,
             Inner::Csr { csr, .. } => csr.cols,
+            Inner::OnDisk(od) => od.cols(),
         }
     }
 
@@ -133,6 +150,7 @@ impl DesignMatrix {
         match &self.inner {
             Inner::Dense(_) => Repr::Dense,
             Inner::Csr { .. } => Repr::Csr,
+            Inner::OnDisk(_) => Repr::OnDisk,
         }
     }
 
@@ -141,6 +159,7 @@ impl DesignMatrix {
         match &self.inner {
             Inner::Dense(m) => m.rows * m.cols,
             Inner::Csr { csr, .. } => csr.nnz(),
+            Inner::OnDisk(od) => od.nnz(),
         }
     }
 
@@ -149,14 +168,37 @@ impl DesignMatrix {
         match &self.inner {
             Inner::Dense(_) => 1.0,
             Inner::Csr { csr, .. } => csr.density(),
+            Inner::OnDisk(od) => od.density(),
         }
     }
 
-    /// The CSR payload when this design is sparse.
+    /// The CSR payload when this design is resident sparse. `None` for
+    /// on-disk designs even when their arithmetic is sparse — callers that
+    /// key *arithmetic* (not residency) use [`DesignMatrix::sparse_arith`].
     pub fn csr(&self) -> Option<&CsrMat> {
         match &self.inner {
             Inner::Dense(_) => None,
             Inner::Csr { csr, .. } => Some(csr),
+            Inner::OnDisk(_) => None,
+        }
+    }
+
+    /// The disk-backed design when this matrix is out-of-core.
+    pub fn on_disk(&self) -> Option<&Arc<OnDiskDesign>> {
+        match &self.inner {
+            Inner::OnDisk(od) => Some(od),
+            _ => None,
+        }
+    }
+
+    /// Whether kernels run CSR-style arithmetic on this design: resident
+    /// CSR, or the chunked-libsvm on-disk flavor. The cost model, step-2
+    /// routing and metrics key on this rather than on residency.
+    pub fn sparse_arith(&self) -> bool {
+        match &self.inner {
+            Inner::Dense(_) => false,
+            Inner::Csr { .. } => true,
+            Inner::OnDisk(od) => od.sparse_arith(),
         }
     }
 
@@ -171,6 +213,7 @@ impl DesignMatrix {
         match &self.inner {
             Inner::Dense(m) => Some(m),
             Inner::Csr { mirror, .. } => mirror.get().map(|m| &m.mat),
+            Inner::OnDisk(_) => None,
         }
     }
 
@@ -185,6 +228,7 @@ impl DesignMatrix {
         match &mut self.inner {
             Inner::Dense(m) => Some(m),
             Inner::Csr { mirror, .. } => mirror.get_mut().map(|m| &mut m.mat),
+            Inner::OnDisk(_) => None,
         }
     }
 
@@ -201,6 +245,16 @@ impl DesignMatrix {
     ) -> Result<&Mat, MemError> {
         match &self.inner {
             Inner::Dense(m) => Ok(m),
+            // on-disk designs never keep a persistent mirror: the whole
+            // point is that the matrix does not fit; one-shot consumers go
+            // through `dense_scoped` instead. Refusing here is structured
+            // (never a panic) so a misrouted stage shows up as a job error.
+            Inner::OnDisk(_) => Err(MemError {
+                stage: format!("{stage} (on-disk design has no persistent dense mirror)"),
+                requested: self.dense_bytes(),
+                used: budget.used(),
+                limit: budget.limit_bytes().unwrap_or(usize::MAX),
+            }),
             Inner::Csr { csr, mirror } => {
                 if let Some(m) = mirror.get() {
                     return Ok(&m.mat);
@@ -232,9 +286,16 @@ impl DesignMatrix {
         &self,
         budget: &Arc<MemBudget>,
         stage: &str,
-    ) -> Result<DenseView<'_>, MemError> {
+    ) -> anyhow::Result<DenseView<'_>> {
         if let Some(m) = self.dense_if_ready() {
             return Ok(DenseView::Borrowed(m));
+        }
+        if let Inner::OnDisk(od) = &self.inner {
+            // the on-disk materializer charges against the design's bound
+            // budget (the same one the scheduler threads everywhere); an
+            // over-budget or I/O failure propagates as a structured error
+            let (mat, charge) = od.dense_scoped(stage)?;
+            return Ok(DenseView::Owned(mat, Some(charge)));
         }
         let csr = self.csr().expect("not-ready dense implies CSR");
         let bytes = self.dense_bytes();
@@ -251,6 +312,11 @@ impl DesignMatrix {
         match &self.inner {
             Inner::Dense(m) => m.clone(),
             Inner::Csr { csr, .. } => csr.to_dense(),
+            // diagnostics-only contract: serve paths never call this on an
+            // on-disk design (they use the fallible charged materializers)
+            Inner::OnDisk(od) => od
+                .dense_clone_untracked()
+                .expect("dense_clone on on-disk design: shard read failed"),
         }
     }
 
@@ -279,18 +345,26 @@ impl DesignMatrix {
                     }
                 }
             }
+            // the scheduler rejects `normalize` for on-disk requests before
+            // any solver runs; reaching here is a routing bug, not a data
+            // condition, so the panic is the correct failure mode
+            Inner::OnDisk(_) => {
+                panic!("scale_columns unsupported for on-disk designs (rejected upstream)")
+            }
         }
     }
 }
 
 /// Cloning clones the resident representation only: a CSR design's lazily
 /// materialized mirror is a budget-charged cache, not state, so the clone
-/// starts un-materialized (and un-charged).
+/// starts un-materialized (and un-charged). An on-disk design clones its
+/// `Arc` — all views share one shard cache and one budget binding.
 impl Clone for DesignMatrix {
     fn clone(&self) -> DesignMatrix {
         match &self.inner {
             Inner::Dense(m) => DesignMatrix::from_dense(m.clone()),
             Inner::Csr { csr, .. } => DesignMatrix::from_csr(csr.clone()),
+            Inner::OnDisk(od) => DesignMatrix::from_on_disk(Arc::clone(od)),
         }
     }
 }

@@ -150,6 +150,101 @@ impl Parser {
         let csr = CsrMat::new(n, d, indptr, indices, values);
         Ok(Dataset::from_csr(name, csr, b, None))
     }
+
+    /// Finish into raw CSR arrays under a FORCED index base and column
+    /// count — the chunked loader's reload path. Per-shard auto-detection
+    /// can never diverge from the open-time scan this way: the scan decides
+    /// base/d once over all shards, and every reload is told the answer. A
+    /// shard that contradicts the forced convention (a 0 index under a
+    /// 1-based set, an index past the declared dimension) is corruption —
+    /// the file changed between scan and reload — and errors out.
+    fn finish_forced(self, name: &str, base: u64, cols: usize) -> Result<(CsrMat, Vec<f64>)> {
+        if self.rows.is_empty() {
+            bail!("libsvm shard {name:?}: no data rows");
+        }
+        if self.saw_zero_index && base != 0 {
+            bail!("libsvm shard {name:?}: 0-based feature index in a 1-based chunk set");
+        }
+        if self.any_feature && (self.max_index + 1 - base) as usize > cols {
+            bail!(
+                "libsvm shard {name:?}: feature index {} exceeds declared dimension {cols}",
+                self.max_index
+            );
+        }
+        let n = self.rows.len();
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut indices = Vec::with_capacity(self.rows.iter().map(|r| r.1.len()).sum());
+        let mut values = Vec::with_capacity(indices.capacity());
+        let mut b = Vec::with_capacity(n);
+        indptr.push(0);
+        for (label, feats) in self.rows {
+            for (idx, val) in feats {
+                indices.push((idx - base) as u32);
+                values.push(val);
+            }
+            indptr.push(indices.len());
+            b.push(label);
+        }
+        Ok((CsrMat::new(n, cols, indptr, indices, values), b))
+    }
+}
+
+/// Metadata summary of one chunk file — everything the chunked loader's
+/// open-time validation pass needs (labels, per-row occupancy for the
+/// nnz-balanced shard plan, and the index-convention evidence), without
+/// keeping any feature payload resident.
+#[derive(Debug)]
+pub struct ShardScan {
+    /// Labels (the shard's slice of `b`), in row order.
+    pub labels: Vec<f64>,
+    /// Stored entries per row, in row order.
+    pub row_nnz: Vec<usize>,
+    /// Whether any feature used index 0 (forces the whole set 0-based).
+    pub saw_zero_index: bool,
+    /// Largest feature index seen (0 when the shard has no features).
+    pub max_index: u64,
+    /// The `# hdpw: cols=` declaration, or 0 when the header is absent.
+    pub declared_cols: usize,
+}
+
+/// Validation-pass scan of one chunk: full parse (every row validated with
+/// line-numbered errors, exactly like [`load`]) but only metadata is kept.
+pub fn scan_shard(name: &str, reader: impl BufRead) -> Result<ShardScan> {
+    let parser = feed_reader(name, reader)?;
+    Ok(ShardScan {
+        row_nnz: parser.rows.iter().map(|r| r.1.len()).collect(),
+        labels: parser.rows.iter().map(|r| r.0).collect(),
+        saw_zero_index: parser.saw_zero_index,
+        max_index: parser.max_index,
+        declared_cols: parser.declared_cols,
+    })
+}
+
+/// Reload one chunk into its CSR payload + labels under the chunk set's
+/// already-decided index base and column count — forcing the convention is
+/// what keeps reloads bitwise consistent with the open-time scan (a shard
+/// that contradicts it errors as corruption, it is never re-guessed).
+pub fn parse_shard(
+    name: &str,
+    reader: impl BufRead,
+    base: u64,
+    cols: usize,
+) -> Result<(CsrMat, Vec<f64>)> {
+    feed_reader(name, reader)?.finish_forced(name, base, cols)
+}
+
+/// Stream a reader through the incremental parser with line-numbered,
+/// name-contextualized errors (shared by [`scan_shard`]/[`parse_shard`]).
+fn feed_reader(name: &str, reader: impl BufRead) -> Result<Parser> {
+    let mut parser = Parser::default();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line =
+            line.with_context(|| format!("read libsvm shard {name:?} (line {})", lineno + 1))?;
+        parser
+            .feed(lineno + 1, &line)
+            .with_context(|| format!("parse libsvm shard {name:?}"))?;
+    }
+    Ok(parser)
 }
 
 /// Parse libsvm text into a sparse [`Dataset`] (labels become `b`).
@@ -366,6 +461,43 @@ mod tests {
         assert!(msg.contains("line 2"), "{msg}");
         assert!(msg.contains("bad.svm"), "{msg}");
         std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn shard_scan_reports_metadata_and_shard_parse_honors_forced_convention() {
+        let text = "# hdpw: cols=6\n1.5 1:2 4:-3.25\n-1 2:0.5\n2\n";
+        let scan = scan_shard("s0", text.as_bytes()).unwrap();
+        assert_eq!(scan.labels, vec![1.5, -1.0, 2.0]);
+        assert_eq!(scan.row_nnz, vec![2, 1, 0]);
+        assert!(!scan.saw_zero_index);
+        assert_eq!(scan.max_index, 4);
+        assert_eq!(scan.declared_cols, 6);
+        // forced parse under the detected convention (1-based, 6 cols)
+        let (csr, b) = parse_shard("s0", text.as_bytes(), 1, 6).unwrap();
+        assert_eq!((csr.rows, csr.cols), (3, 6));
+        assert_eq!(b, scan.labels);
+        assert_eq!(csr.row(0), (&[0u32, 3][..], &[2.0, -3.25][..]));
+        // a WIDER forced dimension is fine (another shard widened d)
+        let (wide, _) = parse_shard("s0", text.as_bytes(), 1, 9).unwrap();
+        assert_eq!(wide.cols, 9);
+        // forcing base 0 shifts columns (the set saw a zero index elsewhere)
+        let (zb, _) = parse_shard("s0", text.as_bytes(), 0, 6).unwrap();
+        assert_eq!(zb.row(0).0, &[1, 4]);
+        // contradiction = corruption: 0 index under a 1-based set
+        let err = parse_shard("sz", "1 0:7\n".as_bytes(), 1, 4).unwrap_err();
+        assert!(format!("{err:#}").contains("0-based"), "{err:#}");
+        // index past the declared dimension
+        let err = parse_shard("sd", "1 9:7\n".as_bytes(), 1, 4).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds declared dimension"), "{err:#}");
+        // empty shard
+        assert!(parse_shard("se", "".as_bytes(), 1, 4).is_err());
+        // missing header is visible to the caller (short-header fault class)
+        let bare = scan_shard("sb", "1 1:2\n".as_bytes()).unwrap();
+        assert_eq!(bare.declared_cols, 0);
+        // malformed rows keep line numbers + shard name through the scan
+        let err = scan_shard("sm", "1 1:2\n2 1:oops\n".as_bytes()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2") && msg.contains("sm"), "{msg}");
     }
 
     #[test]

@@ -1,0 +1,242 @@
+//! The `mmapdense` on-disk format: a dense row-major design + response in
+//! one binary file, read shard-by-shard so the full matrix is never
+//! resident.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! magic  8 B   b"HDPWOD01"
+//! rows   8 B   u64
+//! cols   8 B   u64
+//! A      rows * cols * 8 B   f64, row-major
+//! b      rows * 8 B          f64
+//! ```
+//!
+//! The total file length is validated at open, so a truncated payload is a
+//! structured error before any solver runs. Despite the format's name
+//! (kept aligned with the `dataset: "mmapdense:<path>"` request syntax),
+//! access goes through positioned reads (`FileExt::read_exact_at`), not a
+//! real `mmap(2)`: a page fault on a truncated or yanked mapping raises
+//! SIGBUS, which no worker can turn into a structured job error, while a
+//! failed `pread` is an ordinary `io::Error` that flows up the fallible
+//! shard-load path. Positioned reads also need no `&mut self`, so shard
+//! loads from concurrent workers share one `File`.
+//!
+//! Every shard read re-checks finiteness: a corrupt payload (NaN/Inf bytes)
+//! surfaces as an error naming the row, never as a silently poisoned solve.
+
+use crate::linalg::Mat;
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::Write;
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+/// Magic bytes identifying an hdpw on-disk dense file (version 01).
+pub const MAGIC: [u8; 8] = *b"HDPWOD01";
+
+/// Header length: magic + rows + cols.
+const HEADER: u64 = 24;
+
+/// An opened `mmapdense` file: validated header + shared read handle. The
+/// matrix payload stays on disk; only `b` (n doubles, the same footprint
+/// the in-memory [`crate::data::Dataset`] keeps untracked) is eager.
+#[derive(Debug)]
+pub struct MmapDense {
+    file: File,
+    path: PathBuf,
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+}
+
+impl MmapDense {
+    /// Open and validate: magic, sane dimensions, exact file length.
+    pub fn open(path: &Path) -> Result<MmapDense> {
+        let file =
+            File::open(path).with_context(|| format!("open mmapdense file {path:?}"))?;
+        let mut head = [0u8; HEADER as usize];
+        file.read_exact_at(&mut head, 0)
+            .with_context(|| format!("read mmapdense header of {path:?}"))?;
+        if head[..8] != MAGIC {
+            bail!("mmapdense file {path:?}: bad magic (not an HDPWOD01 file)");
+        }
+        let rows = u64::from_le_bytes(head[8..16].try_into().unwrap());
+        let cols = u64::from_le_bytes(head[16..24].try_into().unwrap());
+        if rows == 0 || cols == 0 {
+            bail!("mmapdense file {path:?}: empty shape {rows}x{cols}");
+        }
+        let want = HEADER
+            .checked_add(rows.checked_mul(cols).and_then(|c| c.checked_mul(8)).unwrap_or(u64::MAX))
+            .and_then(|v| v.checked_add(rows * 8));
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat mmapdense file {path:?}"))?
+            .len();
+        match want {
+            Some(w) if w == len => {}
+            _ => bail!(
+                "mmapdense file {path:?}: truncated or oversized ({len} B on disk, \
+                 {rows}x{cols} header implies {} B)",
+                want.map(|w| w.to_string()).unwrap_or_else(|| "overflowing".into())
+            ),
+        }
+        Ok(MmapDense {
+            file,
+            path: path.to_path_buf(),
+            rows: rows as usize,
+            cols: cols as usize,
+        })
+    }
+
+    /// Read rows `[start, start + rows)` of `A` into a fresh [`Mat`],
+    /// validating finiteness (a NaN/Inf names the offending global row).
+    pub fn read_rows(&self, start: usize, rows: usize) -> Result<Mat> {
+        assert!(start + rows <= self.rows, "shard out of range");
+        let mut bytes = vec![0u8; rows * self.cols * 8];
+        let off = HEADER + (start * self.cols * 8) as u64;
+        self.file
+            .read_exact_at(&mut bytes, off)
+            .with_context(|| format!("read rows {start}..{} of {:?}", start + rows, self.path))?;
+        let data = decode_f64s(&bytes);
+        for (k, v) in data.iter().enumerate() {
+            if !v.is_finite() {
+                bail!(
+                    "mmapdense file {:?}: non-finite payload at row {} col {}",
+                    self.path,
+                    start + k / self.cols,
+                    k % self.cols
+                );
+            }
+        }
+        Ok(Mat::from_vec(rows, self.cols, data))
+    }
+
+    /// Read the full response vector `b` (the tail of the file).
+    pub fn read_b(&self) -> Result<Vec<f64>> {
+        let mut bytes = vec![0u8; self.rows * 8];
+        let off = HEADER + (self.rows * self.cols * 8) as u64;
+        self.file
+            .read_exact_at(&mut bytes, off)
+            .with_context(|| format!("read response vector of {:?}", self.path))?;
+        let b = decode_f64s(&bytes);
+        for (i, v) in b.iter().enumerate() {
+            if !v.is_finite() {
+                bail!("mmapdense file {:?}: non-finite response at row {i}", self.path);
+            }
+        }
+        Ok(b)
+    }
+
+    /// The file path (error labels, cache keys).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Write a dense dataset to `path` in the `mmapdense` format — the writer
+/// the synthetic generators, the CLI and the tests share.
+pub fn write(path: &Path, a: &Mat, b: &[f64]) -> Result<()> {
+    assert_eq!(a.rows, b.len());
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("create directory for mmapdense file {path:?}"))?;
+    }
+    let mut f = std::io::BufWriter::new(
+        File::create(path).with_context(|| format!("create mmapdense file {path:?}"))?,
+    );
+    let ctx = || format!("write mmapdense file {path:?}");
+    f.write_all(&MAGIC).with_context(ctx)?;
+    f.write_all(&(a.rows as u64).to_le_bytes()).with_context(ctx)?;
+    f.write_all(&(a.cols as u64).to_le_bytes()).with_context(ctx)?;
+    for v in &a.data {
+        f.write_all(&v.to_le_bytes()).with_context(ctx)?;
+    }
+    for v in b {
+        f.write_all(&v.to_le_bytes()).with_context(ctx)?;
+    }
+    f.flush().with_context(ctx)?;
+    Ok(())
+}
+
+fn decode_f64s(bytes: &[u8]) -> Vec<f64> {
+    bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("hdpw_mmap_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let mut rng = Rng::new(1);
+        let a = Mat::gaussian(37, 5, &mut rng);
+        let b = rng.gaussians(37);
+        let path = tmp("rt.bin");
+        write(&path, &a, &b).unwrap();
+        let od = MmapDense::open(&path).unwrap();
+        assert_eq!((od.rows, od.cols), (37, 5));
+        // whole read, partial reads, and the tail all round-trip bitwise
+        assert_eq!(od.read_rows(0, 37).unwrap(), a);
+        let mid = od.read_rows(10, 7).unwrap();
+        for k in 0..7 {
+            assert_eq!(mid.row(k), a.row(10 + k));
+        }
+        assert_eq!(od.read_b().unwrap(), b);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn corrupt_files_error_structurally() {
+        let mut rng = Rng::new(2);
+        let a = Mat::gaussian(8, 3, &mut rng);
+        let b = rng.gaussians(8);
+        // bad magic
+        let p1 = tmp("magic.bin");
+        write(&p1, &a, &b).unwrap();
+        let mut raw = std::fs::read(&p1).unwrap();
+        raw[0] = b'X';
+        std::fs::write(&p1, &raw).unwrap();
+        let err = MmapDense::open(&p1).unwrap_err();
+        assert!(format!("{err:#}").contains("bad magic"), "{err:#}");
+        // truncated payload
+        let p2 = tmp("trunc.bin");
+        write(&p2, &a, &b).unwrap();
+        let raw = std::fs::read(&p2).unwrap();
+        std::fs::write(&p2, &raw[..raw.len() - 9]).unwrap();
+        let err = MmapDense::open(&p2).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+        // non-finite payload entry (row 1, col 2 of the 3-wide matrix)
+        let p3 = tmp("nan.bin");
+        let mut poisoned = a.clone();
+        *poisoned.at_mut(1, 2) = f64::NAN;
+        write(&p3, &poisoned, &b).unwrap();
+        let od = MmapDense::open(&p3).unwrap();
+        let err = od.read_rows(0, 4).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("non-finite") && msg.contains("row 1"), "{msg}");
+        // ...but a shard that avoids the poisoned row reads fine
+        assert!(od.read_rows(2, 2).is_ok());
+        // non-finite response
+        let p4 = tmp("nanb.bin");
+        let mut bb = b.clone();
+        bb[3] = f64::INFINITY;
+        write(&p4, &a, &bb).unwrap();
+        let err = MmapDense::open(&p4).unwrap().read_b().unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite response"), "{err:#}");
+        // missing file
+        assert!(MmapDense::open(Path::new("/nonexistent/x.bin")).is_err());
+        for p in [p1, p2, p3, p4] {
+            std::fs::remove_file(p).unwrap();
+        }
+    }
+}

@@ -3,7 +3,10 @@
 //! and binary/CSV IO.
 
 pub mod blocks;
+pub mod chunked;
 pub mod design;
+pub mod mmap;
+pub mod out_of_core;
 pub mod synthetic;
 pub mod sparse_gen;
 pub mod uci_sim;
@@ -14,6 +17,7 @@ pub use blocks::{
     default_block_nnz, default_block_rows, CsrBlock, CsrBlocks, RowBlock, RowBlocks,
 };
 pub use design::{DenseView, DesignMatrix, Repr};
+pub use out_of_core::OnDiskDesign;
 
 use crate::linalg::{blas, CsrMat, Mat};
 use crate::util::mem::{MemBudget, MemError};
@@ -74,6 +78,18 @@ impl Dataset {
         }
     }
 
+    /// Build a disk-backed dataset: the design streams through the shard
+    /// cache bound inside `od`; only `b` (copied out at open) is resident.
+    pub fn from_on_disk(name: impl Into<String>, od: Arc<OnDiskDesign>) -> Dataset {
+        let b = od.b().to_vec();
+        Dataset {
+            name: name.into(),
+            design: DesignMatrix::from_on_disk(od),
+            b,
+            x_star_planted: None,
+        }
+    }
+
     /// Number of rows (samples) in the design matrix.
     pub fn n(&self) -> usize {
         self.design.rows()
@@ -84,14 +100,28 @@ impl Dataset {
         self.design.cols()
     }
 
-    /// Whether the CSR fast paths are active.
+    /// Whether a CSR payload is *resident* (the in-memory sparse fast
+    /// paths). On-disk datasets report `false` here even when their
+    /// arithmetic is sparse; see [`Dataset::sparse_arith`].
     pub fn is_sparse(&self) -> bool {
         self.design.repr() == Repr::Csr
+    }
+
+    /// Whether kernels run CSR-style arithmetic on this dataset (resident
+    /// CSR or the chunked on-disk flavor) — what the cost model, step-2
+    /// routing and metrics actually key on.
+    pub fn sparse_arith(&self) -> bool {
+        self.design.sparse_arith()
     }
 
     /// The CSR payload when this dataset is sparse.
     pub fn csr(&self) -> Option<&CsrMat> {
         self.design.csr()
+    }
+
+    /// The disk-backed design when this dataset is out-of-core.
+    pub fn on_disk(&self) -> Option<&Arc<OnDiskDesign>> {
+        self.design.on_disk()
     }
 
     /// Stored entries: nnz for sparse datasets, n*d for dense ones.
@@ -122,12 +152,14 @@ impl Dataset {
     }
 
     /// Drop-after-use dense view for one-shot consumers (charge and copy
-    /// released when the view drops; never cached).
+    /// released when the view drops; never cached). Fallible two ways: an
+    /// over-budget charge ([`MemError`]) or, for on-disk designs, a shard
+    /// read failure — both structured, never a panic.
     pub fn dense_scoped(
         &self,
         budget: &Arc<MemBudget>,
         stage: &str,
-    ) -> Result<DenseView<'_>, MemError> {
+    ) -> anyhow::Result<DenseView<'_>> {
         self.design.dense_scoped(budget, stage)
     }
 
@@ -145,16 +177,40 @@ impl Dataset {
     /// The dense view a dense-only code path may assume (dense datasets
     /// only; CSR callers must hold a capability view instead).
     fn dense_ref(&self) -> &Mat {
-        self.design
-            .dense_if_ready()
-            .expect("dense-only path reached a CSR dataset without a materialized view")
+        self.design.dense_if_ready().expect(
+            "dense-only path reached a dataset without a resident dense view \
+             (CSR or on-disk): use the capability / try_* accessors",
+        )
     }
 
-    /// f(x) = ||Ax - b||^2 — O(nnz) on sparse datasets.
+    /// f(x) = ||Ax - b||^2 — O(nnz) on sparse datasets. In-memory datasets
+    /// only; on-disk callers use the fallible [`Dataset::try_objective`].
     pub fn objective(&self, x: &[f64]) -> f64 {
         match self.csr() {
             Some(c) => c.residual_sq(&self.b, x),
             None => blas::residual_sq(self.dense_ref(), &self.b, x),
+        }
+    }
+
+    /// Fallible [`Dataset::objective`]: routes on-disk datasets through the
+    /// shard-streamed kernel (bitwise equal to the resident twin's), where a
+    /// failed disk read or refused shard charge is a structured error.
+    pub fn try_objective(&self, x: &[f64]) -> anyhow::Result<f64> {
+        match self.on_disk() {
+            Some(od) => od.residual_sq(&self.b, x),
+            None => Ok(self.objective(x)),
+        }
+    }
+
+    /// Fallible batched objective: `||A x_k - b||^2` per iterate in one
+    /// pass, bitwise per column to [`Dataset::try_objective`].
+    pub fn try_objective_multi(&self, xs: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
+        match self.on_disk() {
+            Some(od) => od.residual_sq_multi(&self.b, xs),
+            None => Ok(match self.csr() {
+                Some(c) => c.residual_sq_multi(&self.b, xs),
+                None => blas::residual_sq_multi(self.dense_ref(), &self.b, xs),
+            }),
         }
     }
 
@@ -169,6 +225,16 @@ impl Dataset {
             None => self.dense_ref().data.iter().map(|v| v * v).sum(),
         };
         sum / n
+    }
+
+    /// Fallible [`Dataset::row_mean_sq`]: the on-disk stream sums in the
+    /// same entry order as the resident representation, so the result is
+    /// bitwise identical.
+    pub fn try_row_mean_sq(&self) -> anyhow::Result<f64> {
+        match self.on_disk() {
+            Some(od) => Ok(od.sum_sq()? / self.n() as f64),
+            None => Ok(self.row_mean_sq()),
+        }
     }
 
     /// `A_i · x` — O(nnz(row)) on sparse datasets; on dense ones this is
@@ -204,6 +270,36 @@ impl Dataset {
         }
     }
 
+    /// Fallible [`Dataset::row_dot`]: on-disk rows come through the shard
+    /// cache (a miss may fault a shard in — or fail, structurally).
+    #[inline]
+    pub fn try_row_dot(&self, i: usize, x: &[f64]) -> anyhow::Result<f64> {
+        match self.on_disk() {
+            Some(od) => od.try_row_dot(i, x),
+            None => Ok(self.row_dot(i, x)),
+        }
+    }
+
+    /// Fallible [`Dataset::row_axpy`].
+    #[inline]
+    pub fn try_row_axpy(&self, i: usize, coef: f64, out: &mut [f64]) -> anyhow::Result<()> {
+        match self.on_disk() {
+            Some(od) => od.try_row_axpy(i, coef, out),
+            None => {
+                self.row_axpy(i, coef, out);
+                Ok(())
+            }
+        }
+    }
+
+    /// Fallible [`Dataset::row_scaled`].
+    pub fn try_row_scaled(&self, i: usize, coef: f64) -> anyhow::Result<Vec<f64>> {
+        match self.on_disk() {
+            Some(od) => od.try_row_scaled(i, coef),
+            None => Ok(self.row_scaled(i, coef)),
+        }
+    }
+
     /// Contiguous row shards of the dense view without copying (dense
     /// datasets; CSR callers shard with [`Dataset::csr_blocks`]).
     /// `block_rows = None` picks the cache/thread heuristic for this shape.
@@ -234,6 +330,15 @@ impl Dataset {
     /// (mean-centering would fill in every stored zero); the routing is
     /// logged. Returns the per-column (mean, scale) used (+ b's last).
     pub fn normalize(&mut self) -> Vec<(f64, f64)> {
+        if self.on_disk().is_some() {
+            // the scheduler rejects normalize+on-disk requests up front;
+            // this guard keeps a direct library call a no-op, not a panic
+            crate::log_warn!(
+                "normalize({}): on-disk dataset — unsupported, skipped",
+                self.name
+            );
+            return Vec::new();
+        }
         if self.is_sparse() {
             crate::log_info!(
                 "normalize({}): CSR dataset — scale-only mode (no centering, sparsity preserved)",

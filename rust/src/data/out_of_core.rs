@@ -1,0 +1,1027 @@
+//! Out-of-core design matrices: the dataset lives on disk and streams
+//! through a budget-charged shard cache, so a solve can run on data larger
+//! than the configured [`MemBudget`] with peak tracked bytes below it.
+//!
+//! Two flavors, matching the two on-disk formats:
+//!
+//! * [`MmapDense`] (`mmapdense:<path>`) — dense row-major binary file,
+//!   sharded into fixed `chunk_rows`-row blocks. Arithmetic is **dense**:
+//!   every kernel replicates the exact `blas` row-block plan of the
+//!   in-memory dense path, so traces are bitwise identical to a resident
+//!   dense twin (under the native executor).
+//! * [`ChunkedCsr`] (`libsvm-chunked:<path>`) — a directory of libsvm
+//!   chunks, sharded by the files themselves. Arithmetic is **sparse**:
+//!   every kernel replicates [`CsrMat`]'s sequential row-order loops, so
+//!   traces are bitwise identical to a resident CSR twin.
+//!
+//! # The shard cache
+//!
+//! Random row access (mini-batch gathers, leverage probes) and the
+//! streamed full passes all fetch shards through one LRU cache. A miss
+//! charges the shard's bytes via [`MemBudget::try_charge`] *before*
+//! loading; when the charge is refused the least-recently-used resident
+//! shard is evicted (counted via [`MemBudget::note_shard_evict`], like a
+//! densify event) and the charge retried — only when nothing is left to
+//! evict does the structured [`MemError`] propagate, which the serve loop
+//! tags with the request id. Loads are counted as shard faults and
+//! resident bytes are reported in serve metrics. Under an unlimited budget
+//! a soft byte cap keeps the cache from silently absorbing the whole file.
+//!
+//! A borrowed shard (`Arc<ShardData>`) can outlive its eviction by the
+//! length of one kernel loop; the charge tracks *cache residency*, the
+//! brief borrow is transient scratch like a streamed fold's block (see
+//! DESIGN.md §17 for the charge-accounting contract).
+//!
+//! Every disk read is fallible: I/O errors, truncation and non-finite
+//! payloads surface as structured errors — never a worker panic.
+
+use crate::data::chunked::ChunkedCsr;
+use crate::data::mmap::MmapDense;
+use crate::linalg::{blas, CsrMat, Mat};
+use crate::util::mem::{MemBudget, MemCharge};
+use crate::util::threadpool::default_threads;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Soft resident-byte cap applied only when the budget is unlimited (an
+/// armed budget supplies the real pressure): 256 MiB.
+const UNLIMITED_SOFT_CAP: usize = 256 << 20;
+
+/// Default dense shard height when no `chunk_rows` knob is given.
+pub const DEFAULT_CHUNK_ROWS: usize = 4096;
+
+/// One resident shard's payload, in the flavor's representation.
+#[derive(Debug)]
+pub enum ShardData {
+    /// A dense row block (`mmapdense` flavor).
+    Dense(Mat),
+    /// A CSR chunk (`libsvm-chunked` flavor).
+    Csr(CsrMat),
+}
+
+struct CachedShard {
+    data: Arc<ShardData>,
+    _charge: Option<MemCharge>,
+    bytes: usize,
+    stamp: u64,
+}
+
+struct CacheState {
+    resident: HashMap<usize, CachedShard>,
+    clock: u64,
+    bytes_total: usize,
+}
+
+enum Flavor {
+    MmapDense(MmapDense),
+    Chunked(ChunkedCsr),
+}
+
+/// A disk-backed design matrix (see module docs). Lives behind `Arc` so
+/// dataset clones share one cache and one set of counters.
+pub struct OnDiskDesign {
+    flavor: Flavor,
+    budget: Arc<MemBudget>,
+    cache: Mutex<CacheState>,
+    /// Dense shard height (resolved; echoes the request knob for chunked).
+    chunk_rows: usize,
+    rows: usize,
+    cols: usize,
+    b: Vec<f64>,
+    label: String,
+}
+
+impl std::fmt::Debug for OnDiskDesign {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OnDiskDesign")
+            .field("flavor", &self.flavor_tag())
+            .field("rows", &self.rows)
+            .field("cols", &self.cols)
+            .field("chunk_rows", &self.chunk_rows)
+            .field("label", &self.label)
+            .finish()
+    }
+}
+
+impl OnDiskDesign {
+    /// Open an `mmapdense` file, binding shard loads to `budget`.
+    /// `chunk_rows == 0` picks [`DEFAULT_CHUNK_ROWS`] (clamped to n).
+    pub fn open_mmap(
+        path: &Path,
+        budget: Arc<MemBudget>,
+        chunk_rows: usize,
+    ) -> Result<Arc<OnDiskDesign>> {
+        let md = MmapDense::open(path)?;
+        let b = md.read_b()?;
+        let (rows, cols) = (md.rows, md.cols);
+        let cr = if chunk_rows == 0 { DEFAULT_CHUNK_ROWS } else { chunk_rows }
+            .clamp(1, rows.max(1));
+        Ok(Arc::new(OnDiskDesign {
+            flavor: Flavor::MmapDense(md),
+            budget,
+            cache: Mutex::new(CacheState {
+                resident: HashMap::new(),
+                clock: 0,
+                bytes_total: 0,
+            }),
+            chunk_rows: cr,
+            rows,
+            cols,
+            b,
+            label: label_for(path),
+        }))
+    }
+
+    /// Open a `libsvm-chunked` directory, binding shard loads to `budget`.
+    /// The chunk files define the shard partition; `chunk_rows` is kept
+    /// only as the knob echo.
+    pub fn open_chunked(
+        dir: &Path,
+        budget: Arc<MemBudget>,
+        chunk_rows: usize,
+    ) -> Result<Arc<OnDiskDesign>> {
+        let cc = ChunkedCsr::open(dir, &budget)?;
+        let b = cc.b().to_vec();
+        let (rows, cols) = (cc.rows, cc.cols);
+        Ok(Arc::new(OnDiskDesign {
+            flavor: Flavor::Chunked(cc),
+            budget,
+            cache: Mutex::new(CacheState {
+                resident: HashMap::new(),
+                clock: 0,
+                bytes_total: 0,
+            }),
+            chunk_rows,
+            rows,
+            cols,
+            b,
+            label: label_for(dir),
+        }))
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The response vector (eager at open, untracked like the in-memory
+    /// dataset's `b`).
+    pub fn b(&self) -> &[f64] {
+        &self.b
+    }
+
+    /// The resolved dense shard height / knob echo.
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    /// Whether this flavor computes with sparse (CSR) arithmetic.
+    pub fn sparse_arith(&self) -> bool {
+        matches!(self.flavor, Flavor::Chunked(_))
+    }
+
+    /// The request-format tag ("mmapdense" | "libsvm-chunked").
+    pub fn flavor_tag(&self) -> &'static str {
+        match self.flavor {
+            Flavor::MmapDense(_) => "mmapdense",
+            Flavor::Chunked(_) => "libsvm-chunked",
+        }
+    }
+
+    /// Stored entries: nnz for chunked, `rows * cols` for dense.
+    pub fn nnz(&self) -> usize {
+        match &self.flavor {
+            Flavor::MmapDense(_) => self.rows * self.cols,
+            Flavor::Chunked(c) => c.nnz,
+        }
+    }
+
+    /// nnz / (rows * cols); exactly 1.0 for the dense flavor.
+    pub fn density(&self) -> f64 {
+        match &self.flavor {
+            Flavor::MmapDense(_) => 1.0,
+            Flavor::Chunked(c) => {
+                c.nnz as f64 / ((self.rows * self.cols).max(1)) as f64
+            }
+        }
+    }
+
+    /// The chunked metadata (nnz prefix for the streamed sketch partition).
+    pub fn chunked(&self) -> Option<&ChunkedCsr> {
+        match &self.flavor {
+            Flavor::Chunked(c) => Some(c),
+            Flavor::MmapDense(_) => None,
+        }
+    }
+
+    // -- shard geometry -----------------------------------------------------
+
+    /// Number of shards in the cache partition.
+    pub fn num_shards(&self) -> usize {
+        match &self.flavor {
+            Flavor::MmapDense(_) => self.rows.div_ceil(self.chunk_rows),
+            Flavor::Chunked(c) => c.shards().len(),
+        }
+    }
+
+    /// Global row range `[start, start + rows)` of shard `s`.
+    pub fn shard_range(&self, s: usize) -> (usize, usize) {
+        match &self.flavor {
+            Flavor::MmapDense(_) => {
+                let start = s * self.chunk_rows;
+                (start, self.chunk_rows.min(self.rows - start))
+            }
+            Flavor::Chunked(c) => {
+                let m = &c.shards()[s];
+                (m.start, m.rows)
+            }
+        }
+    }
+
+    fn shard_of_row(&self, i: usize) -> usize {
+        match &self.flavor {
+            Flavor::MmapDense(_) => i / self.chunk_rows,
+            Flavor::Chunked(c) => {
+                // last shard whose start <= i
+                c.shards().partition_point(|m| m.start <= i) - 1
+            }
+        }
+    }
+
+    fn shard_bytes(&self, s: usize) -> usize {
+        match &self.flavor {
+            Flavor::MmapDense(_) => {
+                let (_, rows) = self.shard_range(s);
+                rows * self.cols * 8
+            }
+            Flavor::Chunked(c) => {
+                let m = &c.shards()[s];
+                m.nnz * 12 + (m.rows + 1) * 8
+            }
+        }
+    }
+
+    fn load_shard_data(&self, s: usize) -> Result<ShardData> {
+        match &self.flavor {
+            Flavor::MmapDense(md) => {
+                let (start, rows) = self.shard_range(s);
+                Ok(ShardData::Dense(md.read_rows(start, rows)?))
+            }
+            Flavor::Chunked(c) => Ok(ShardData::Csr(c.load_shard(s, &self.budget)?)),
+        }
+    }
+
+    /// Fetch shard `s` through the cache (see module docs for the charge /
+    /// evict / fault accounting). The returned `Arc` stays valid across a
+    /// later eviction.
+    pub fn shard(&self, s: usize) -> Result<Arc<ShardData>> {
+        let mut st = self.cache.lock().unwrap();
+        st.clock += 1;
+        let stamp = st.clock;
+        if let Some(sh) = st.resident.get_mut(&s) {
+            sh.stamp = stamp;
+            return Ok(Arc::clone(&sh.data));
+        }
+        let bytes = self.shard_bytes(s);
+        let stage = format!("shard_cache[{}#{s}]", self.label);
+        let charge = loop {
+            match self.budget.try_charge(bytes, &stage) {
+                Ok(c) => break c,
+                Err(e) => {
+                    if !self.evict_lru(&mut st, &stage) {
+                        return Err(e.into());
+                    }
+                }
+            }
+        };
+        let data = Arc::new(self.load_shard_data(s)?);
+        self.budget.note_shard_load(&stage, bytes);
+        st.bytes_total += bytes;
+        st.resident.insert(
+            s,
+            CachedShard {
+                data: Arc::clone(&data),
+                _charge: Some(charge),
+                bytes,
+                stamp,
+            },
+        );
+        // unlimited budgets never refuse a charge; the soft cap supplies
+        // the eviction pressure so the cache stays a cache
+        if self.budget.limit_bytes().is_none() {
+            while st.bytes_total > UNLIMITED_SOFT_CAP && st.resident.len() > 1 {
+                self.evict_lru(&mut st, &stage);
+            }
+        }
+        Ok(data)
+    }
+
+    fn evict_lru(&self, st: &mut CacheState, stage: &str) -> bool {
+        let victim = st
+            .resident
+            .iter()
+            .min_by_key(|(_, sh)| sh.stamp)
+            .map(|(&k, _)| k);
+        match victim {
+            Some(k) => {
+                let sh = st.resident.remove(&k).unwrap();
+                st.bytes_total -= sh.bytes;
+                self.budget.note_shard_evict(stage, sh.bytes);
+                true // dropping `sh` releases its charge
+            }
+            None => false,
+        }
+    }
+
+    /// Bytes currently resident in this design's cache (tests/metrics).
+    pub fn resident_bytes(&self) -> usize {
+        self.cache.lock().unwrap().bytes_total
+    }
+
+    // -- row streaming ------------------------------------------------------
+
+    /// Visit dense rows `[lo, hi)` in order (mmapdense flavor only).
+    fn for_rows_dense(
+        &self,
+        lo: usize,
+        hi: usize,
+        f: &mut dyn FnMut(usize, &[f64]),
+    ) -> Result<()> {
+        let mut i = lo;
+        while i < hi {
+            let s = self.shard_of_row(i);
+            let arc = self.shard(s)?;
+            let ShardData::Dense(m) = &*arc else {
+                bail!("dense row stream on a chunked design");
+            };
+            let (start, rows) = self.shard_range(s);
+            let end = (start + rows).min(hi);
+            for r in i..end {
+                f(r, m.row(r - start));
+            }
+            i = end;
+        }
+        Ok(())
+    }
+
+    /// Visit CSR rows `[lo, hi)` in order (chunked flavor only).
+    fn for_rows_csr(
+        &self,
+        lo: usize,
+        hi: usize,
+        f: &mut dyn FnMut(usize, &[u32], &[f64]),
+    ) -> Result<()> {
+        let mut i = lo;
+        while i < hi {
+            let s = self.shard_of_row(i);
+            let arc = self.shard(s)?;
+            let ShardData::Csr(c) = &*arc else {
+                bail!("CSR row stream on a dense design");
+            };
+            let (start, rows) = self.shard_range(s);
+            let end = (start + rows).min(hi);
+            for r in i..end {
+                let (cols, vals) = c.row(r - start);
+                f(r, cols, vals);
+            }
+            i = end;
+        }
+        Ok(())
+    }
+
+    /// Visit every CSR row in global order (the implicit-HD gather's source
+    /// stream). Chunked flavor only.
+    pub fn stream_csr_rows(&self, f: &mut dyn FnMut(usize, &[u32], &[f64])) -> Result<()> {
+        self.for_rows_csr(0, self.rows, f)
+    }
+
+    /// The in-memory dense path's row-block plan for this shape — same
+    /// thread count and block height as `blas::residual_sq`/`fused_grad`,
+    /// so per-block partial merges reproduce the resident bits exactly.
+    fn dense_block_plan(&self) -> (usize, usize) {
+        let threads = if self.rows * self.cols > 1 << 16 {
+            default_threads()
+        } else {
+            1
+        };
+        let block = self.rows.div_ceil(threads.max(1)).max(64);
+        (block, self.rows.div_ceil(block))
+    }
+
+    // -- per-row access (the pwSGD probes) ----------------------------------
+
+    /// `A_i · x` through the shard cache.
+    pub fn try_row_dot(&self, i: usize, x: &[f64]) -> Result<f64> {
+        let s = self.shard_of_row(i);
+        let (start, _) = self.shard_range(s);
+        let arc = self.shard(s)?;
+        Ok(match &*arc {
+            ShardData::Dense(m) => blas::dot(m.row(i - start), x),
+            ShardData::Csr(c) => c.row_dot(i - start, x),
+        })
+    }
+
+    /// `out += coef * A_i` through the shard cache.
+    pub fn try_row_axpy(&self, i: usize, coef: f64, out: &mut [f64]) -> Result<()> {
+        let s = self.shard_of_row(i);
+        let (start, _) = self.shard_range(s);
+        let arc = self.shard(s)?;
+        match &*arc {
+            ShardData::Dense(m) => blas::axpy(coef, m.row(i - start), out),
+            ShardData::Csr(c) => c.row_axpy(i - start, coef, out),
+        }
+        Ok(())
+    }
+
+    /// `coef * A_i` as a dense vector through the shard cache. Mirrors the
+    /// two in-memory arms of `Dataset::row_scaled` exactly.
+    pub fn try_row_scaled(&self, i: usize, coef: f64) -> Result<Vec<f64>> {
+        let s = self.shard_of_row(i);
+        let (start, _) = self.shard_range(s);
+        let arc = self.shard(s)?;
+        Ok(match &*arc {
+            ShardData::Dense(m) => m.row(i - start).iter().map(|v| coef * v).collect(),
+            ShardData::Csr(c) => {
+                let mut out = vec![0.0; self.cols];
+                c.row_axpy(i - start, coef, &mut out);
+                out
+            }
+        })
+    }
+
+    // -- full-pass kernels (bitwise twins of the resident paths) ------------
+
+    /// `||A x - b||^2`. Chunked: `CsrMat::residual_sq`'s sequential row
+    /// loop. Dense: `blas::residual_sq`'s block plan with in-order merge.
+    pub fn residual_sq(&self, b: &[f64], x: &[f64]) -> Result<f64> {
+        assert_eq!(self.rows, b.len());
+        match &self.flavor {
+            Flavor::Chunked(_) => {
+                let mut s = 0.0;
+                self.for_rows_csr(0, self.rows, &mut |i, cols, vals| {
+                    let mut r = 0.0;
+                    for (c, v) in cols.iter().zip(vals) {
+                        r += v * x[*c as usize];
+                    }
+                    let r = r - b[i];
+                    s += r * r;
+                })?;
+                Ok(s)
+            }
+            Flavor::MmapDense(_) => {
+                let (block, nblocks) = self.dense_block_plan();
+                let mut total = 0.0;
+                for bi in 0..nblocks {
+                    let lo = bi * block;
+                    let hi = (lo + block).min(self.rows);
+                    let mut s = 0.0;
+                    self.for_rows_dense(lo, hi, &mut |i, row| {
+                        let r = blas::dot(row, x) - b[i];
+                        s += r * r;
+                    })?;
+                    total += s;
+                }
+                Ok(total)
+            }
+        }
+    }
+
+    /// `||A x_k - b||^2` per iterate in one pass — bitwise per column to
+    /// [`OnDiskDesign::residual_sq`], like the resident multi kernels.
+    pub fn residual_sq_multi(&self, b: &[f64], xs: &[Vec<f64>]) -> Result<Vec<f64>> {
+        assert_eq!(self.rows, b.len());
+        if xs.is_empty() {
+            return Ok(Vec::new());
+        }
+        match &self.flavor {
+            Flavor::Chunked(_) => {
+                let mut s = vec![0.0; xs.len()];
+                self.for_rows_csr(0, self.rows, &mut |i, cols, vals| {
+                    for (sk, x) in s.iter_mut().zip(xs) {
+                        let mut r = 0.0;
+                        for (c, v) in cols.iter().zip(vals) {
+                            r += v * x[*c as usize];
+                        }
+                        let r = r - b[i];
+                        *sk += r * r;
+                    }
+                })?;
+                Ok(s)
+            }
+            Flavor::MmapDense(_) => {
+                let (block, nblocks) = self.dense_block_plan();
+                let mut out = vec![0.0; xs.len()];
+                for bi in 0..nblocks {
+                    let lo = bi * block;
+                    let hi = (lo + block).min(self.rows);
+                    let mut local = vec![0.0; xs.len()];
+                    self.for_rows_dense(lo, hi, &mut |i, row| {
+                        for (sk, x) in local.iter_mut().zip(xs) {
+                            let r = blas::dot(row, x) - b[i];
+                            *sk += r * r;
+                        }
+                    })?;
+                    for (o, s) in out.iter_mut().zip(&local) {
+                        *o += s;
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Full gradient `scale * A^T (A x - b)` — `CsrMat::fused_grad`'s row
+    /// loop / `blas::fused_grad`'s block plan.
+    pub fn fused_grad(&self, b: &[f64], x: &[f64], scale: f64) -> Result<Vec<f64>> {
+        assert_eq!(self.rows, b.len());
+        let mut g = vec![0.0; self.cols];
+        match &self.flavor {
+            Flavor::Chunked(_) => {
+                self.for_rows_csr(0, self.rows, &mut |i, cols, vals| {
+                    let mut r = 0.0;
+                    for (c, v) in cols.iter().zip(vals) {
+                        r += v * x[*c as usize];
+                    }
+                    let r = r - b[i];
+                    for (c, v) in cols.iter().zip(vals) {
+                        g[*c as usize] += r * v;
+                    }
+                })?;
+            }
+            Flavor::MmapDense(_) => {
+                let (block, nblocks) = self.dense_block_plan();
+                for bi in 0..nblocks {
+                    let lo = bi * block;
+                    let hi = (lo + block).min(self.rows);
+                    let mut local = vec![0.0; self.cols];
+                    self.for_rows_dense(lo, hi, &mut |i, row| {
+                        let r = blas::dot(row, x) - b[i];
+                        blas::axpy(r, row, &mut local);
+                    })?;
+                    blas::axpy(1.0, &local, &mut g);
+                }
+            }
+        }
+        blas::scale_vec(&mut g, scale);
+        Ok(g)
+    }
+
+    /// Mini-batch gradient over sampled rows `tau`. Chunked replicates
+    /// `CsrMat::batch_grad`'s loop through cached shards; dense gathers the
+    /// sampled rows and calls the same `blas::fused_grad` the in-memory SGD
+    /// family feeds its gather buffer to — identical inputs, identical bits.
+    pub fn batch_grad(&self, tau: &[usize], b: &[f64], x: &[f64], scale: f64) -> Result<Vec<f64>> {
+        match &self.flavor {
+            Flavor::Chunked(_) => {
+                let mut g = vec![0.0; self.cols];
+                for &i in tau {
+                    let s = self.shard_of_row(i);
+                    let (start, _) = self.shard_range(s);
+                    let arc = self.shard(s)?;
+                    let ShardData::Csr(c) = &*arc else {
+                        bail!("CSR batch on a dense design");
+                    };
+                    let r = c.row_dot(i - start, x) - b[i];
+                    c.row_axpy(i - start, r, &mut g);
+                }
+                for v in &mut g {
+                    *v *= scale;
+                }
+                Ok(g)
+            }
+            Flavor::MmapDense(_) => {
+                let (m, vb) = self.gather_rows(tau)?;
+                Ok(blas::fused_grad(&m, &vb, x, scale))
+            }
+        }
+    }
+
+    /// Gather sampled rows (and their `b` entries) through the cache into a
+    /// dense batch — the on-disk analog of `Mat::gather_rows` + `b[tau]`.
+    pub fn gather_rows(&self, idx: &[usize]) -> Result<(Mat, Vec<f64>)> {
+        let mut m = Mat::zeros(idx.len(), self.cols);
+        let mut vb = Vec::with_capacity(idx.len());
+        for (k, &i) in idx.iter().enumerate() {
+            let s = self.shard_of_row(i);
+            let (start, _) = self.shard_range(s);
+            let arc = self.shard(s)?;
+            let orow = m.row_mut(k);
+            match &*arc {
+                ShardData::Dense(d) => orow.copy_from_slice(d.row(i - start)),
+                ShardData::Csr(c) => {
+                    let (cols, vals) = c.row(i - start);
+                    for (cj, v) in cols.iter().zip(vals) {
+                        orow[*cj as usize] = *v;
+                    }
+                }
+            }
+            vb.push(self.b[i]);
+        }
+        Ok((m, vb))
+    }
+
+    /// Sum of squared entries (callers divide by n for `row_mean_sq`).
+    /// Streams in the exact order the resident paths sum: row-major data
+    /// for dense, stored-value order for CSR.
+    pub fn sum_sq(&self) -> Result<f64> {
+        let mut s = 0.0;
+        match &self.flavor {
+            Flavor::Chunked(_) => {
+                self.for_rows_csr(0, self.rows, &mut |_, _, vals| {
+                    for v in vals {
+                        s += v * v;
+                    }
+                })?;
+            }
+            Flavor::MmapDense(_) => {
+                self.for_rows_dense(0, self.rows, &mut |_, row| {
+                    for v in row {
+                        s += v * v;
+                    }
+                })?;
+            }
+        }
+        Ok(s)
+    }
+
+    /// `A R` for a dense right factor (the pwSGD JL leverage projection).
+    /// Chunked replicates `CsrMat::spmm_dense` row by row; dense runs
+    /// `blas::gemm` per shard — gemm's per-output-row arithmetic is
+    /// independent of its row-block partition, so each output row is
+    /// bitwise the full-matrix product's row.
+    pub fn mul_dense(&self, rhs: &Mat) -> Result<Mat> {
+        assert_eq!(self.cols, rhs.rows);
+        let mut out = Mat::zeros(self.rows, rhs.cols);
+        match &self.flavor {
+            Flavor::Chunked(_) => {
+                self.for_rows_csr(0, self.rows, &mut |i, cols, vals| {
+                    let orow = out.row_mut(i);
+                    for (c, v) in cols.iter().zip(vals) {
+                        let brow = rhs.row(*c as usize);
+                        for (o, bv) in orow.iter_mut().zip(brow) {
+                            *o += v * bv;
+                        }
+                    }
+                })?;
+            }
+            Flavor::MmapDense(_) => {
+                for s in 0..self.num_shards() {
+                    let (start, rows) = self.shard_range(s);
+                    let arc = self.shard(s)?;
+                    let ShardData::Dense(m) = &*arc else {
+                        bail!("dense shard stream on a chunked design");
+                    };
+                    let prod = blas::gemm(m, rhs);
+                    for k in 0..rows {
+                        out.row_mut(start + k).copy_from_slice(prod.row(k));
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// The padded `[A | b]` FWHT buffer, streamed from disk — bitwise the
+    /// buffer `Mat::hstack_col_padded` / `CsrMat::hstack_col_padded` build
+    /// from a resident twin. The caller charges the buffer's bytes (this is
+    /// the HD transform's entry point; see `precond`).
+    pub fn hstack_col_padded(&self, col: &[f64], rows_out: usize) -> Result<Mat> {
+        assert_eq!(self.rows, col.len());
+        assert!(rows_out >= self.rows);
+        let d = self.cols;
+        let mut out = Mat::zeros(rows_out, d + 1);
+        match &self.flavor {
+            Flavor::Chunked(_) => {
+                self.for_rows_csr(0, self.rows, &mut |i, cols, vals| {
+                    let orow = out.row_mut(i);
+                    for (c, v) in cols.iter().zip(vals) {
+                        orow[*c as usize] = *v;
+                    }
+                    orow[d] = col[i];
+                })?;
+            }
+            Flavor::MmapDense(_) => {
+                self.for_rows_dense(0, self.rows, &mut |i, row| {
+                    let orow = out.row_mut(i);
+                    orow[..d].copy_from_slice(row);
+                    orow[d] = col[i];
+                })?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Rows `[lo, hi)` as a scratch [`CsrMat`] — the streamed sketch's
+    /// per-block payload (`CsrBlock::from_scratch` re-bases it to global
+    /// rows). Block-sized transient scratch, like the in-memory fold's
+    /// accumulators; chunked flavor only.
+    pub fn csr_range_scratch(&self, lo: usize, hi: usize) -> Result<CsrMat> {
+        let mut indptr = Vec::with_capacity(hi - lo + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        self.for_rows_csr(lo, hi, &mut |_, cols, vals| {
+            indices.extend_from_slice(cols);
+            values.extend_from_slice(vals);
+            indptr.push(indices.len());
+        })?;
+        Ok(CsrMat::new(hi - lo, self.cols, indptr, indices, values))
+    }
+
+    // -- charged materializers (one-shot consumers: SRHT, exact oracle) -----
+
+    /// Full dense materialization, budget-charged: the scoped escape hatch
+    /// for consumers that need every row at once (SRHT, the dense QR
+    /// oracle). The charge releases when dropped. Chunked materializations
+    /// count a densify event, mirroring the resident-CSR scoped view; the
+    /// dense flavor (already dense arithmetic) does not.
+    pub fn dense_scoped(&self, stage: &str) -> Result<(Mat, MemCharge)> {
+        let bytes = self.rows * self.cols * 8;
+        let charge = self.budget.try_charge(bytes, stage)?;
+        let mut out = Mat::zeros(self.rows, self.cols);
+        match &self.flavor {
+            Flavor::Chunked(_) => {
+                self.budget.note_densify(stage, bytes);
+                self.for_rows_csr(0, self.rows, &mut |i, cols, vals| {
+                    let orow = out.row_mut(i);
+                    for (c, v) in cols.iter().zip(vals) {
+                        orow[*c as usize] = *v;
+                    }
+                })?;
+            }
+            Flavor::MmapDense(_) => {
+                self.for_rows_dense(0, self.rows, &mut |i, row| {
+                    out.row_mut(i).copy_from_slice(row);
+                })?;
+            }
+        }
+        Ok((out, charge))
+    }
+
+    /// Full CSR materialization, budget-charged (chunked flavor only) — the
+    /// sparse exact oracle's input.
+    pub fn csr_scoped(&self, stage: &str) -> Result<(CsrMat, MemCharge)> {
+        let Flavor::Chunked(c) = &self.flavor else {
+            bail!("csr_scoped on a dense on-disk design");
+        };
+        let bytes = c.nnz * 12 + (self.rows + 1) * 8;
+        let charge = self.budget.try_charge(bytes, stage)?;
+        let mut indptr = Vec::with_capacity(self.rows + 1);
+        let mut indices = Vec::with_capacity(c.nnz);
+        let mut values = Vec::with_capacity(c.nnz);
+        indptr.push(0);
+        self.for_rows_csr(0, self.rows, &mut |_, cols, vals| {
+            indices.extend_from_slice(cols);
+            values.extend_from_slice(vals);
+            indptr.push(indices.len());
+        })?;
+        Ok((
+            CsrMat::new(self.rows, self.cols, indptr, indices, values),
+            charge,
+        ))
+    }
+
+    /// Untracked full dense copy — diagnostics and tests only (mirrors
+    /// `DesignMatrix::dense_clone`'s contract); production paths use the
+    /// charged [`OnDiskDesign::dense_scoped`].
+    pub fn dense_clone_untracked(&self) -> Result<Mat> {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        match &self.flavor {
+            Flavor::Chunked(_) => {
+                self.for_rows_csr(0, self.rows, &mut |i, cols, vals| {
+                    let orow = out.row_mut(i);
+                    for (c, v) in cols.iter().zip(vals) {
+                        orow[*c as usize] = *v;
+                    }
+                })?;
+            }
+            Flavor::MmapDense(_) => {
+                self.for_rows_dense(0, self.rows, &mut |i, row| {
+                    out.row_mut(i).copy_from_slice(row);
+                })?;
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for OnDiskDesign {
+    fn drop(&mut self) {
+        // charges release themselves; the residency observability counter
+        // needs the explicit hand-back
+        let st = self.cache.get_mut().unwrap();
+        for (_, sh) in st.resident.drain() {
+            self.budget.note_shard_release(sh.bytes);
+        }
+        st.bytes_total = 0;
+    }
+}
+
+fn label_for(path: &Path) -> String {
+    path.file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "ondisk".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{chunked, mmap};
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("hdpw_ooc_{}_{name}", std::process::id()))
+    }
+
+    fn dense_fixture(n: usize, d: usize, seed: u64) -> (Mat, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        (Mat::gaussian(n, d, &mut rng), rng.gaussians(n))
+    }
+
+    fn sparse_fixture(n: usize, d: usize, seed: u64) -> (CsrMat, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let dense = Mat::from_fn(n, d, |_, _| {
+            if rng.uniform() < 0.3 {
+                rng.gaussian()
+            } else {
+                0.0
+            }
+        });
+        (CsrMat::from_dense(&dense), rng.gaussians(n))
+    }
+
+    #[test]
+    fn mmap_kernels_are_bitwise_to_blas_across_chunk_sizes() {
+        let (a, b) = dense_fixture(97, 6, 1);
+        let path = tmp("kern.bin");
+        mmap::write(&path, &a, &b).unwrap();
+        let mut rng = Rng::new(2);
+        let x = rng.gaussians(6);
+        let xs: Vec<Vec<f64>> = (0..3).map(|_| rng.gaussians(6)).collect();
+        let tau = rng.indices(16, 97);
+        for cr in [1usize, 7, 97, 4096] {
+            let od =
+                OnDiskDesign::open_mmap(&path, MemBudget::unlimited(), cr).unwrap();
+            assert_eq!(od.b(), &b[..]);
+            assert_eq!(
+                od.residual_sq(&b, &x).unwrap().to_bits(),
+                blas::residual_sq(&a, &b, &x).to_bits(),
+                "chunk_rows={cr}"
+            );
+            let multi = od.residual_sq_multi(&b, &xs).unwrap();
+            for (k, (got, want)) in
+                multi.iter().zip(blas::residual_sq_multi(&a, &b, &xs)).enumerate()
+            {
+                assert_eq!(got.to_bits(), want.to_bits(), "cr={cr} col {k}");
+            }
+            let g = od.fused_grad(&b, &x, 2.0).unwrap();
+            for (u, w) in g.iter().zip(blas::fused_grad(&a, &b, &x, 2.0)) {
+                assert_eq!(u.to_bits(), w.to_bits(), "cr={cr}");
+            }
+            // mini-batch = gather + the same fused kernel
+            let m = a.gather_rows(&tau);
+            let vb: Vec<f64> = tau.iter().map(|&i| b[i]).collect();
+            let want = blas::fused_grad(&m, &vb, &x, 8.0);
+            for (u, w) in od.batch_grad(&tau, &b, &x, 8.0).unwrap().iter().zip(&want) {
+                assert_eq!(u.to_bits(), w.to_bits(), "cr={cr}");
+            }
+            // per-row probes + sum of squares
+            for &i in &[0usize, 48, 96] {
+                assert_eq!(
+                    od.try_row_dot(i, &x).unwrap().to_bits(),
+                    blas::dot(a.row(i), &x).to_bits()
+                );
+            }
+            let want_ss: f64 = a.data.iter().map(|v| v * v).sum();
+            assert_eq!(od.sum_sq().unwrap().to_bits(), want_ss.to_bits());
+            // leverage product: per-row bitwise to full gemm
+            let rhs = Mat::gaussian(6, 3, &mut Rng::new(7));
+            let prod = od.mul_dense(&rhs).unwrap();
+            let want = blas::gemm(&a, &rhs);
+            for i in 0..97 {
+                for j in 0..3 {
+                    assert_eq!(prod.at(i, j).to_bits(), want.at(i, j).to_bits(), "cr={cr}");
+                }
+            }
+            // HD padded buffer
+            let pad = od.hstack_col_padded(&b, 128).unwrap();
+            assert_eq!(pad, a.hstack_col_padded(&b, 128));
+        }
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn chunked_kernels_are_bitwise_to_csr_across_chunk_sizes() {
+        let (csr, b) = sparse_fixture(61, 5, 3);
+        let mut rng = Rng::new(4);
+        let x = rng.gaussians(5);
+        let xs: Vec<Vec<f64>> = (0..2).map(|_| rng.gaussians(5)).collect();
+        let tau = rng.indices(12, 61);
+        for cr in [1usize, 9, 61, 500] {
+            let dir = tmp(&format!("ck{cr}"));
+            let _ = std::fs::remove_dir_all(&dir);
+            chunked::write_chunks(&dir, &csr, &b, cr).unwrap();
+            let od =
+                OnDiskDesign::open_chunked(&dir, MemBudget::unlimited(), cr).unwrap();
+            assert!(od.sparse_arith());
+            assert_eq!(od.nnz(), csr.nnz());
+            assert_eq!(
+                od.residual_sq(&b, &x).unwrap().to_bits(),
+                csr.residual_sq(&b, &x).to_bits(),
+                "cr={cr}"
+            );
+            let multi = od.residual_sq_multi(&b, &xs).unwrap();
+            for (got, want) in multi.iter().zip(csr.residual_sq_multi(&b, &xs)) {
+                assert_eq!(got.to_bits(), want.to_bits(), "cr={cr}");
+            }
+            for (u, w) in od
+                .fused_grad(&b, &x, 2.0)
+                .unwrap()
+                .iter()
+                .zip(csr.fused_grad(&b, &x, 2.0))
+            {
+                assert_eq!(u.to_bits(), w.to_bits(), "cr={cr}");
+            }
+            for (u, w) in od
+                .batch_grad(&tau, &b, &x, 8.0)
+                .unwrap()
+                .iter()
+                .zip(csr.batch_grad(&tau, &b, &x, 8.0))
+            {
+                assert_eq!(u.to_bits(), w.to_bits(), "cr={cr}");
+            }
+            let want_ss: f64 = csr.values.iter().map(|v| v * v).sum();
+            assert_eq!(od.sum_sq().unwrap().to_bits(), want_ss.to_bits());
+            let rhs = Mat::gaussian(5, 2, &mut Rng::new(8));
+            let prod = od.mul_dense(&rhs).unwrap();
+            let want = csr.spmm_dense(&rhs);
+            for i in 0..61 {
+                for j in 0..2 {
+                    assert_eq!(prod.at(i, j).to_bits(), want.at(i, j).to_bits(), "cr={cr}");
+                }
+            }
+            assert_eq!(
+                od.hstack_col_padded(&b, 64).unwrap(),
+                csr.hstack_col_padded(&b, 64)
+            );
+            let (mat, _ch) = od.csr_scoped("t").unwrap();
+            assert_eq!(&mat, &csr);
+            std::fs::remove_dir_all(dir).unwrap();
+        }
+    }
+
+    #[test]
+    fn cache_charges_faults_and_evicts_under_pressure() {
+        let (a, b) = dense_fixture(64, 8, 5);
+        let path = tmp("cache.bin");
+        mmap::write(&path, &a, &b).unwrap();
+        // shard = 16 rows * 8 cols * 8 B = 1 KiB; budget fits exactly 2
+        let budget = MemBudget::with_limit_mb(1);
+        let _hog = budget.try_charge((1 << 20) - 2 * 1024 - 100, "hog").unwrap();
+        let od = OnDiskDesign::open_mmap(&path, Arc::clone(&budget), 16).unwrap();
+        assert_eq!(od.num_shards(), 4);
+        let s0 = od.shard(0).unwrap();
+        let _s1 = od.shard(1).unwrap();
+        assert_eq!(budget.shard_faults(), 2);
+        assert_eq!(od.resident_bytes(), 2048);
+        assert_eq!(budget.shard_resident_bytes(), 2048);
+        // third shard must evict the LRU (shard 0)
+        let _s2 = od.shard(2).unwrap();
+        assert_eq!(budget.shard_evictions(), 1);
+        assert_eq!(od.resident_bytes(), 2048);
+        // the borrowed Arc from the evicted shard stays readable
+        let ShardData::Dense(m0) = &*s0 else { panic!() };
+        assert_eq!(m0.row(0), a.row(0));
+        // shard 0 re-faults on next touch
+        let _ = od.shard(0).unwrap();
+        assert_eq!(budget.shard_faults(), 4);
+        assert_eq!(budget.shard_evictions(), 2);
+        // a full pass completes under the budget: peak stays below the cap
+        let x = vec![0.1; 8];
+        let f = od.residual_sq(&b, &x).unwrap();
+        assert!(f.is_finite());
+        assert!(budget.peak() <= 1 << 20);
+        // an exhausted budget with nothing left to evict surfaces the
+        // structured MemError (no panic)
+        let tight = MemBudget::with_limit_mb(1);
+        let _full = tight.try_charge((1 << 20) - 100, "hog2").unwrap();
+        let od2 = OnDiskDesign::open_mmap(&path, Arc::clone(&tight), 16).unwrap();
+        let err = od2.shard(3).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("memory budget exceeded"),
+            "{err:#}"
+        );
+        drop(od2);
+        drop(od);
+        assert_eq!(budget.shard_resident_bytes(), 0, "drop releases residency");
+        std::fs::remove_file(path).unwrap();
+    }
+}

@@ -8,15 +8,22 @@
 use super::ExpCtx;
 use crate::util::plot::Figure;
 
+/// Batch sizes swept per dataset (one curve each).
 pub const BATCH_SIZES: [usize; 5] = [1, 2, 4, 8, 16];
 
+/// Everything Figure 1 produces: the two curve plots plus the quantitative
+/// iterations-to-eps rows behind [`render_table`].
 pub struct Fig1Output {
+    /// one relative-error-vs-iterations figure per dataset (syn1, syn2)
     pub figures: Vec<Figure>,
     /// (dataset, r, iterations to reach eps) rows
     pub speedup_rows: Vec<(String, usize, Option<usize>)>,
+    /// the relative-error threshold the speed-up rows are measured at
     pub eps: f64,
 }
 
+/// Run the Figure 1 protocol: HDpwBatchSGD over [`BATCH_SIZES`] on syn1 and
+/// syn2, equal work budget per curve.
 pub fn run(ctx: &ExpCtx) -> anyhow::Result<Fig1Output> {
     // quick-mode-reachable threshold: the paper's Fig 1 tracks the 1e-1 ..
     // 1e-2 band; at the bench's reduced n the variance floor sits near 5e-2.

@@ -10,8 +10,11 @@ use super::ExpCtx;
 use crate::coordinator::JobRequest;
 use crate::util::plot::Figure;
 
+/// The two panels of a solver race: one figure per precision regime.
 pub struct RacePanels {
+    /// low-precision panel (relative error vs wall-clock)
     pub low: Figure,
+    /// high-precision panel (log relative error vs wall-clock)
     pub high: Figure,
 }
 
@@ -92,6 +95,7 @@ pub fn run_panels(ctx: &ExpCtx, dataset: &str, constraint: &str) -> anyhow::Resu
     Ok(RacePanels { low, high })
 }
 
+/// Figure 2 proper: the unconstrained syn1 race.
 pub fn run(ctx: &ExpCtx) -> anyhow::Result<RacePanels> {
     run_panels(ctx, "syn1", "unc")
 }

@@ -20,11 +20,16 @@ use std::sync::Arc;
 
 /// Shared experiment context.
 pub struct ExpCtx {
+    /// coordinator every driver submits its jobs through (1 worker: figures
+    /// time solvers, so no co-tenancy)
     pub coord: Arc<Coordinator>,
+    /// directory CSV series are saved under (default `out/`)
     pub out_dir: PathBuf,
     /// row count for generated datasets (quick mode shrinks this)
     pub n: usize,
+    /// best-of-k trials per job, per the paper's protocol
     pub trials: usize,
+    /// base RNG seed threaded into every job request
     pub seed: u64,
     /// time budget per solver run (seconds)
     pub budget: f64,
@@ -56,6 +61,13 @@ impl ExpCtx {
     /// Base job for a dataset/solver pair.
     pub fn job(&self, dataset: &str, solver: &str) -> JobRequest {
         let mut req = JobRequest::default();
+        // the paper protocol normalizes datasets in-process, and normalize
+        // is rejected for on-disk representations; when the session default
+        // format (HDPW_FORMAT) is an on-disk one, run the experiments on the
+        // resident representation instead
+        if matches!(req.format.as_str(), "mmapdense" | "libsvm-chunked") {
+            req.format = String::new();
+        }
         req.dataset = dataset.into();
         req.n = self.n;
         req.solver = solver.into();
@@ -83,6 +95,9 @@ impl ExpCtx {
         Ok((by_iter, by_time, res.f_star))
     }
 
+    /// Save a figure's CSV series under [`ExpCtx::out_dir`] and return its
+    /// ASCII rendering (save errors are ignored: rendering still works when
+    /// the output directory is not writable).
     pub fn save_and_render(&self, fig: &Figure, stem: &str) -> String {
         let _ = fig.save_csv(&self.out_dir, stem);
         fig.ascii(72, 18)

@@ -13,18 +13,28 @@
 
 use super::ExpCtx;
 
+/// One measured (solver, eps, r) cell of the empirical Table 1.
 pub struct Table1Row {
+    /// registry name of the solver
     pub solver: String,
+    /// target relative error
     pub eps: f64,
+    /// batch size (0 for the non-stochastic solvers)
     pub r: usize,
+    /// iterations to reach `eps`, if reached within the budget
     pub iters: Option<usize>,
+    /// wall-clock seconds to reach `eps`, if reached
     pub secs: Option<f64>,
 }
 
+/// All measured rows of the empirical Table 1.
 pub struct Table1Output {
+    /// one row per (solver, eps, r) combination swept by [`run`]
     pub rows: Vec<Table1Row>,
 }
 
+/// Run the Table 1 sweeps: eps/batch-size grids for the stochastic solvers,
+/// eps grid for the linearly-convergent ones.
 pub fn run(ctx: &ExpCtx) -> anyhow::Result<Table1Output> {
     let mut rows = Vec::new();
     // stochastic solvers: eps sweep at fixed r, r sweep at fixed eps
@@ -72,6 +82,7 @@ pub fn run(ctx: &ExpCtx) -> anyhow::Result<Table1Output> {
     Ok(Table1Output { rows })
 }
 
+/// Render the measured rows as the ASCII Table 1.
 pub fn render(out: &Table1Output) -> String {
     let mut s = String::from(
         "Table 1 (empirical scaling): iterations/time to reach relative eps\n",
@@ -103,10 +114,13 @@ pub fn render(out: &Table1Output) -> String {
 
 /// Check the scaling laws hold (used by tests and the bench's verdict line).
 pub struct ScalingVerdict {
+    /// growing r from 4 to 64 cut HDpw iterations by > 3x
     pub batch_speedup_ok: bool,
+    /// pwGradient iterations grew ~linearly in log(1/eps)
     pub linear_convergence_ok: bool,
 }
 
+/// Evaluate the two scaling laws over the measured rows.
 pub fn verdict(out: &Table1Output) -> ScalingVerdict {
     // batch speed-up: hdpw at eps=1e-2, r=4 vs r=64 => >= 4x fewer iters
     let find = |solver: &str, eps: f64, r: usize| {

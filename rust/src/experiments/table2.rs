@@ -12,22 +12,35 @@ use crate::precond::precondition;
 use crate::sketch::{default_sketch_size, SketchKind};
 use crate::util::rng::Rng;
 
+/// One sketch family's measured preconditioner cost and quality.
 pub struct Table2Row {
+    /// sketch family name (gaussian / srht / countsketch / sparse-l2)
     pub sketch: &'static str,
+    /// best-of-trials wall time to apply S*A
     pub sketch_secs: f64,
+    /// best-of-trials wall time for the QR of the sketch
     pub qr_secs: f64,
+    /// achieved kappa(A R^{-1})
     pub kappa_preconditioned: f64,
 }
 
+/// All of Table 2: the testbed description plus one row per sketch family.
 pub struct Table2Output {
+    /// dataset name the preconditioners were measured on
     pub dataset: String,
+    /// dataset rows
     pub n: usize,
+    /// dataset columns
     pub d: usize,
+    /// condition number of the raw (unpreconditioned) matrix
     pub kappa_raw: f64,
+    /// sketch row count s used for every family
     pub sketch_rows: usize,
+    /// one measured row per sketch family
     pub rows: Vec<Table2Row>,
 }
 
+/// Measure sketch + QR cost and achieved kappa for each sketch family.
 pub fn run(ctx: &ExpCtx) -> anyhow::Result<Table2Output> {
     let mut rng = Rng::new(ctx.seed);
     let ds = uci_sim::by_name("syn1", ctx.n, &mut rng).expect("syn1");
@@ -73,6 +86,7 @@ pub fn run(ctx: &ExpCtx) -> anyhow::Result<Table2Output> {
     })
 }
 
+/// Render the measured rows as the ASCII Table 2.
 pub fn render(out: &Table2Output) -> String {
     let mut s = format!(
         "Table 2: preconditioner cost on {} (n={}, d={}, kappa(A)={:.2e}, s={})\n",

@@ -76,15 +76,21 @@ fn cmd_solve(argv: &[String]) -> i32 {
     let cmd = Command::new("hdpw solve", "run one regression job")
         .opt(
             "dataset",
-            "syn1|syn2|year|buzz|pjrt8k|csv:<path>|libsvm:<path> (default syn2)",
+            "syn1|syn2|year|buzz|pjrt8k|csv:<path>|libsvm:<path>|mmapdense:<file>|\
+             libsvm-chunked:<dir> (default syn2)",
         )
         .opt(
             "format",
-            "dense|sparse|libsvm dataset representation (default dense; HDPW_FORMAT overrides)",
+            "dense|sparse|libsvm|mmapdense|libsvm-chunked dataset representation \
+             (default dense; HDPW_FORMAT overrides; the last two stream from disk)",
         )
         .opt(
             "density",
             "target nnz fraction for generated sparse datasets (default 0.1)",
+        )
+        .opt(
+            "chunk-rows",
+            "rows per on-disk shard for mmapdense/libsvm-chunked (0 = format default)",
         )
         .opt("n", "rows for generated datasets (default 16384)")
         .opt("solver", "solver name (default hdpwbatchsgd)")
@@ -161,6 +167,7 @@ fn cmd_solve(argv: &[String]) -> i32 {
         req.format = fmt.to_string();
     }
     req.density = args.get_f64("density", req.density);
+    req.chunk_rows = args.get_usize("chunk-rows", req.chunk_rows);
     req.normalize = args.flag("normalize");
     // flags OR onto the env-driven defaults (HDPW_REUSE_PRECOND / _WARM_START)
     req.reuse_precond |= args.flag("reuse-precond");
@@ -230,6 +237,12 @@ fn cmd_solve(argv: &[String]) -> i32 {
                     println!(
                         "mem        : est={}B peak={}B densify_events={}",
                         res.mem_est_bytes, res.mem_peak_bytes, res.densify_events
+                    );
+                }
+                if res.shard_faults > 0 || res.io_retries > 0 {
+                    println!(
+                        "out-of-core: shard_faults={} evictions={} io_retries={}",
+                        res.shard_faults, res.shard_evictions, res.io_retries
                     );
                 }
                 println!("f*         : {:.6e}", res.f_star);
@@ -422,6 +435,11 @@ fn cmd_datasets(_argv: &[String]) -> i32 {
         "sparse variants: --format sparse|libsvm generates the CSR twin of any \
          name above (--density, default 0.1); --dataset libsvm:<path> loads a file"
     );
+    println!(
+        "out-of-core: --format mmapdense|libsvm-chunked spills the generated data \
+         to disk and streams it through the shard cache (--chunk-rows); \
+         --dataset mmapdense:<file>|libsvm-chunked:<dir> loads existing files"
+    );
     0
 }
 
@@ -493,6 +511,14 @@ fn cmd_bench_info(_argv: &[String]) -> i32 {
         },
         mem.peak(),
         mem.densify_events()
+    );
+    println!(
+        "shard cache    : faults {}, evictions {}, io_retries {}, resident {} B \
+         (out-of-core formats: mmapdense / libsvm-chunked)",
+        mem.shard_faults(),
+        mem.shard_evictions(),
+        mem.io_retries(),
+        mem.shard_resident_bytes()
     );
     0
 }

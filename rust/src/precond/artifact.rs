@@ -33,11 +33,11 @@ use super::{
     Precondition, Step2Mode,
 };
 use crate::backend::Backend;
-use crate::data::Dataset;
+use crate::data::{Dataset, OnDiskDesign};
 use crate::linalg::{CsrMat, Mat};
 use crate::prox::metric::MetricProjector;
 use crate::sketch::SketchKind;
-use crate::util::mem::{MemBudget, MemCharge, MemError};
+use crate::util::mem::{MemBudget, MemCharge};
 use crate::util::rng::Rng;
 use std::sync::{Arc, Mutex};
 
@@ -119,7 +119,10 @@ impl std::fmt::Debug for PrecondArtifact {
 /// rejects that combination up front; this keeps the direct API panic-free).
 fn step2_implicit(ds: &Dataset, mode: Step2Mode) -> bool {
     match mode {
-        Step2Mode::Repr | Step2Mode::Implicit => ds.is_sparse(),
+        // sparse_arith, not is_sparse: a chunked on-disk dataset holds step
+        // 2 implicitly exactly like resident CSR (its gathers stream the
+        // shard cache); mmapdense materializes like resident dense
+        Step2Mode::Repr | Step2Mode::Implicit => ds.sparse_arith(),
         Step2Mode::Dense => false,
     }
 }
@@ -169,7 +172,7 @@ impl PrecondArtifact {
         with_hd: bool,
         step2: Step2Mode,
         budget: &Arc<MemBudget>,
-    ) -> Result<PrecondArtifact, MemError> {
+    ) -> anyhow::Result<PrecondArtifact> {
         let pre =
             precondition_ds_budgeted(backend, ds, kind, sketch_rows, rng, block_rows, budget)?;
         let (hd, hd_implicit) = if with_hd {
@@ -209,7 +212,7 @@ impl PrecondArtifact {
         with_hd: bool,
         step2: Step2Mode,
         budget: &Arc<MemBudget>,
-    ) -> Result<PrecondArtifact, MemError> {
+    ) -> anyhow::Result<PrecondArtifact> {
         let (mut sketch_rng, mut hd_rng) = PrecondArtifact::keyed_rngs(key);
         let pre = precondition_ds_budgeted(
             backend,
@@ -249,7 +252,7 @@ impl PrecondArtifact {
         key: &PrecondKey,
         step2: Step2Mode,
         budget: &Arc<MemBudget>,
-    ) -> Result<PrecondArtifact, MemError> {
+    ) -> anyhow::Result<PrecondArtifact> {
         let (_, mut hd_rng) = PrecondArtifact::keyed_rngs(key);
         let (hd, hd_implicit) = if step2_implicit(ds, step2) {
             (None, Some(hd_implicit_ds(ds, &mut hd_rng)))
@@ -291,10 +294,13 @@ impl PrecondArtifact {
         if let Some(h) = &self.hd {
             return Some(HdView::Dense(h));
         }
-        self.hd_implicit.as_ref().map(|h| HdView::Implicit {
-            hd: h,
-            a: ds.csr().expect("implicit HD artifact requires a CSR dataset"),
-            b: &ds.b,
+        self.hd_implicit.as_ref().map(|h| match ds.on_disk() {
+            Some(od) => HdView::ImplicitOnDisk { hd: h, od },
+            None => HdView::Implicit {
+                hd: h,
+                a: ds.csr().expect("implicit HD artifact requires a CSR dataset"),
+                b: &ds.b,
+            },
         })
     }
 
@@ -354,6 +360,17 @@ pub enum HdView<'a> {
         /// The (untransformed) response vector.
         b: &'a [f64],
     },
+    /// Implicit step 2 over a chunked on-disk design: gathers stream the
+    /// CSR payload shard by shard through the block cache
+    /// ([`ImplicitHd::gather_rows_ondisk_blocked`]) — one file pass per
+    /// batch, bitwise the resident implicit gather's bits, and fallible
+    /// like every disk access.
+    ImplicitOnDisk {
+        /// The sign vector + padded universe.
+        hd: &'a ImplicitHd,
+        /// The disk-backed design the rows are evaluated from.
+        od: &'a OnDiskDesign,
+    },
 }
 
 impl HdView<'_> {
@@ -362,13 +379,15 @@ impl HdView<'_> {
         match self {
             HdView::Dense(h) => h.n_pad,
             HdView::Implicit { hd, .. } => hd.n_pad,
+            HdView::ImplicitOnDisk { hd, .. } => hd.n_pad,
         }
     }
 
     /// Materialize rows `idx` of `HD[A|b]` as a `idx.len() x d` design
     /// block plus the matching responses, with the default sampled-row tile
-    /// ([`super::GATHER_BLOCK`]) on the implicit path.
-    pub fn gather(&self, idx: &[usize]) -> (Mat, Vec<f64>) {
+    /// ([`super::GATHER_BLOCK`]) on the implicit path. Fallible because the
+    /// on-disk view reads shards; resident views never return `Err`.
+    pub fn gather(&self, idx: &[usize]) -> anyhow::Result<(Mat, Vec<f64>)> {
         self.gather_blocked(idx, 0)
     }
 
@@ -377,13 +396,14 @@ impl HdView<'_> {
     /// one blockwise pass over the CSR payload covers the whole batch
     /// (`block = 0` means the [`super::GATHER_BLOCK`] default). Dense
     /// gathers are plain row copies and ignore the knob.
-    pub fn gather_blocked(&self, idx: &[usize], block: usize) -> (Mat, Vec<f64>) {
+    pub fn gather_blocked(&self, idx: &[usize], block: usize) -> anyhow::Result<(Mat, Vec<f64>)> {
         match self {
-            HdView::Dense(h) => (
+            HdView::Dense(h) => Ok((
                 h.hda.gather_rows(idx),
                 idx.iter().map(|&i| h.hdb[i]).collect(),
-            ),
-            HdView::Implicit { hd, a, b } => hd.gather_rows_csr_blocked(a, b, idx, block),
+            )),
+            HdView::Implicit { hd, a, b } => Ok(hd.gather_rows_csr_blocked(a, b, idx, block)),
+            HdView::ImplicitOnDisk { hd, od } => hd.gather_rows_ondisk_blocked(od, idx, block),
         }
     }
 }
@@ -567,8 +587,8 @@ mod tests {
         let vs = asp.hd_view(&sparse).unwrap();
         assert_eq!(vd.n_pad(), vs.n_pad());
         let idx = vec![0usize, 3, 17, 255, vd.n_pad() - 1];
-        let (md, bd) = vd.gather(&idx);
-        let (ms, bs) = vs.gather(&idx);
+        let (md, bd) = vd.gather(&idx).unwrap();
+        let (ms, bs) = vs.gather(&idx).unwrap();
         for r in 0..idx.len() {
             assert!(
                 (bd[r] - bs[r]).abs() < 1e-10 * (1.0 + bd[r].abs()),
@@ -652,9 +672,9 @@ mod tests {
                 .unwrap();
         let v = art.hd_view(&sparse).unwrap();
         let idx = vec![0usize, 7, 31, 200, 255];
-        let (m0, b0) = v.gather(&idx);
+        let (m0, b0) = v.gather(&idx).unwrap();
         for block in [1usize, 3, 5, 64] {
-            let (m, bb) = v.gather_blocked(&idx, block);
+            let (m, bb) = v.gather_blocked(&idx, block).unwrap();
             assert_eq!(m.max_abs_diff(&m0), 0.0, "block {block}");
             assert_eq!(bb, b0, "block {block}");
         }

@@ -15,7 +15,7 @@ pub use artifact::{ArtifactMeta, HdParts, HdView, PrecondArtifact};
 pub use cache::{CacheOutcome, ComputeClaim, Lookup, PrecondCache, PrecondKey};
 
 use crate::backend::Backend;
-use crate::data::Dataset;
+use crate::data::{Dataset, OnDiskDesign};
 use crate::linalg::{qr, tri, CsrMat, Mat};
 use crate::sketch::SketchKind;
 use crate::util::mem::{MemBudget, MemCharge, MemError};
@@ -123,11 +123,49 @@ pub fn precondition_csr_with(
     }
 }
 
+/// Step 1 on a disk-backed design — the out-of-core setup path. The sketch
+/// is sampled from `rng` exactly as the resident paths would (construction
+/// depends only on `(s, n)`), then applied through
+/// [`Backend::sketch_apply_ondisk`]: shard-cache scratch blocks fold on the
+/// same partition / merge order as the matching in-memory stream, so `R` is
+/// bitwise identical to preconditioning a resident twin of the file.
+/// Fallible like every disk access — a shard I/O error or refused cache
+/// charge propagates instead of panicking.
+pub fn precondition_ondisk_with(
+    backend: &Backend,
+    od: &OnDiskDesign,
+    kind: SketchKind,
+    sketch_rows: usize,
+    rng: &mut Rng,
+    block_rows: Option<usize>,
+) -> anyhow::Result<Precondition> {
+    assert!(sketch_rows > od.cols(), "sketch size must exceed d");
+    let t = Timer::start();
+    let sk = kind.build(sketch_rows, od.rows(), rng);
+    let sa = backend.sketch_apply_ondisk(sk.as_ref(), od, block_rows)?;
+    let sketch_secs = t.secs();
+    let t = Timer::start();
+    let r = qr::qr_r(&sa);
+    let pinv = tri::pinv_dense(&r);
+    let qr_secs = t.secs();
+    Ok(Precondition {
+        r,
+        pinv,
+        sketch_secs,
+        qr_secs,
+        sketch_kind: kind,
+        sketch_rows,
+    })
+}
+
 /// Representation-aware step 1 for a [`Dataset`]: routes the CSR pipeline
 /// when the dataset is sparse, the dense streamed pipeline otherwise. The
 /// rng consumption is identical either way (the sketch is sampled before
 /// representation matters), so dense and sparse artifacts for the same
 /// seed use the *same* sketch operator — the parity tests rely on this.
+/// On-disk datasets are rejected: their shard reads are fallible, so they
+/// route through [`precondition_ds_budgeted`] (which every production
+/// caller already uses).
 pub fn precondition_ds_with(
     backend: &Backend,
     ds: &Dataset,
@@ -136,6 +174,11 @@ pub fn precondition_ds_with(
     rng: &mut Rng,
     block_rows: Option<usize>,
 ) -> Precondition {
+    assert!(
+        ds.on_disk().is_none(),
+        "on-disk dataset: precondition must route through the fallible \
+         precondition_ds_budgeted entry"
+    );
     match ds.csr() {
         Some(c) => precondition_csr_with(backend, c, kind, sketch_rows, rng, block_rows),
         None => precondition_with(
@@ -172,7 +215,12 @@ pub fn precondition_ds_budgeted(
     rng: &mut Rng,
     block_rows: Option<usize>,
     budget: &Arc<MemBudget>,
-) -> Result<Precondition, MemError> {
+) -> anyhow::Result<Precondition> {
+    if let Some(od) = ds.on_disk() {
+        // shard-cache streamed fold; SRHT's whole-matrix fallback runs as a
+        // charged dense_scoped materialization inside the ondisk fold
+        return precondition_ondisk_with(backend, od, kind, sketch_rows, rng, block_rows);
+    }
     if kind == SketchKind::Srht && ds.is_sparse() {
         let stage = format!("srht_sketch[{}]", ds.name);
         let view = ds.dense_scoped(budget, &stage)?;
@@ -260,25 +308,35 @@ pub fn hd_buffer_bytes(n: usize, d: usize) -> usize {
 /// step never materializes a standalone dense mirror. Over budget it
 /// returns the structured [`MemError`] (a job error, never an OOM); on a
 /// CSR dataset the materialization is counted as one densify event tagged
-/// with `stage`.
+/// with `stage`. On-disk datasets stream shards into the charged padded
+/// buffer (bitwise the bits a resident twin would produce): the chunked
+/// flavor counts one densify event exactly like resident CSR, while
+/// mmapdense does not (its payload is already dense, merely non-resident)
+/// — and a shard I/O error propagates as the job's structured error.
 pub fn hd_transform_ds_with(
     backend: &Backend,
     ds: &Dataset,
     rng: &mut Rng,
     budget: &Arc<MemBudget>,
     stage: &str,
-) -> Result<HdTransformed, MemError> {
+) -> anyhow::Result<HdTransformed> {
     assert_eq!(ds.n(), ds.b.len());
     let t = Timer::start();
     let n_pad = ds.n().next_power_of_two();
     let bytes = hd_buffer_bytes(ds.n(), ds.d());
     let charge = budget.try_charge(bytes, stage)?;
-    let mut padded = match ds.csr() {
-        Some(c) => {
+    let mut padded = match (ds.on_disk(), ds.csr()) {
+        (Some(od), _) => {
+            if od.sparse_arith() {
+                budget.note_densify(stage, bytes);
+            }
+            od.hstack_col_padded(&ds.b, n_pad)?
+        }
+        (None, Some(c)) => {
             budget.note_densify(stage, bytes);
             c.hstack_col_padded(&ds.b, n_pad)
         }
-        None => ds
+        (None, None) => ds
             .dense_if_ready()
             .expect("dense dataset")
             .hstack_col_padded(&ds.b, n_pad),
@@ -387,13 +445,15 @@ pub fn resolve_step2(
 ) -> (Step2Mode, String) {
     match policy {
         Step2Policy::Repr => {
-            let eff = if ds.is_sparse() { "implicit" } else { "dense" };
+            // sparse_arith, not is_sparse: a chunked on-disk dataset pins
+            // implicit exactly like resident CSR, mmapdense pins dense
+            let eff = if ds.sparse_arith() { "implicit" } else { "dense" };
             (Step2Mode::Repr, eff.into())
         }
         Step2Policy::Dense => (Step2Mode::Dense, "dense".into()),
         Step2Policy::Implicit => (Step2Mode::Implicit, "implicit".into()),
         Step2Policy::Auto => {
-            if !ds.is_sparse() {
+            if !ds.sparse_arith() {
                 // dense data: the materialized form is both the bit-exact
                 // reference and the cheaper one (rows are plain copies)
                 return (Step2Mode::Repr, "auto→dense".into());
@@ -535,6 +595,61 @@ impl ImplicitHd {
             lo = hi;
         }
         (out, outb)
+    }
+
+    /// [`Self::gather_rows_csr_blocked`] for a chunked on-disk design: the
+    /// CSR payload streams shard by shard through the block cache in ONE
+    /// ascending-row pass (`OnDiskDesign::stream_csr_rows`), scattering each
+    /// source row into every sampled-row tile before moving on. Tiles cover
+    /// disjoint output panels, so per output cell the coefficients still
+    /// accumulate in the same ascending-`j` order with the same
+    /// [`crate::simd::hd_scatter_row`] arithmetic — bitwise identical to the
+    /// resident blockwise gather on a CSR twin of the file, at one file pass
+    /// per batch instead of one per tile. Fallible like every disk access.
+    pub fn gather_rows_ondisk_blocked(
+        &self,
+        od: &OnDiskDesign,
+        idx: &[usize],
+        block: usize,
+    ) -> anyhow::Result<(Mat, Vec<f64>)> {
+        assert!(
+            od.sparse_arith(),
+            "implicit on-disk gather requires the chunked CSR flavor"
+        );
+        let b = od.b();
+        assert_eq!(od.rows(), b.len());
+        assert!(od.rows() <= self.n_pad);
+        for &i in idx {
+            assert!(
+                i < self.n_pad,
+                "sample index {i} outside the padded universe {}",
+                self.n_pad
+            );
+        }
+        let block = if block == 0 { GATHER_BLOCK } else { block };
+        let inv = 1.0 / (self.n_pad as f64).sqrt();
+        let ld = od.cols();
+        let mut out = Mat::zeros(idx.len(), ld);
+        let mut outb = vec![0.0; idx.len()];
+        let mut coeffs = vec![0.0; block.min(idx.len().max(1))];
+        od.stream_csr_rows(&mut |j, cols, vals| {
+            let mut lo = 0;
+            while lo < idx.len() {
+                let hi = (lo + block).min(idx.len());
+                let tile = &idx[lo..hi];
+                let cs = &mut coeffs[..tile.len()];
+                for (k, &i) in tile.iter().enumerate() {
+                    // (-1)^popcount(i & j): +1 on even parity, -1 on odd
+                    let parity = if (i & j).count_ones() & 1 == 1 { -1.0 } else { 1.0 };
+                    cs[k] = self.signs[j] * parity * inv;
+                }
+                let out_tile = &mut out.data[lo * ld..hi * ld];
+                let outb_tile = &mut outb[lo..hi];
+                crate::simd::hd_scatter_row(cols, vals, b[j], cs, out_tile, ld, outb_tile);
+                lo = hi;
+            }
+        })?;
+        Ok((out, outb))
     }
 
     /// The original per-sampled-row gather (sampled rows outer, one full
@@ -782,7 +897,10 @@ mod tests {
         let _hog = tight.try_charge((1 << 20) - 64, "hog").unwrap();
         let mut r4 = Rng::new(8);
         let err = hd_transform_ds_with(&be, &ds_sparse, &mut r4, &tight, "hd").unwrap_err();
-        assert_eq!(err.stage, "hd");
+        let me = err
+            .downcast_ref::<MemError>()
+            .expect("over-budget HD surfaces the structured MemError");
+        assert_eq!(me.stage, "hd");
         assert_eq!(tight.densify_events(), 0);
     }
 

@@ -18,11 +18,15 @@ pub mod gaussian;
 pub mod srht;
 pub mod sparse_embed;
 
-use crate::data::blocks::{CsrBlock, CsrBlocks, RowBlock, RowBlocks};
+use crate::data::blocks::{
+    default_block_nnz, default_block_rows, CsrBlock, CsrBlocks, RowBlock, RowBlocks,
+};
+use crate::data::out_of_core::OnDiskDesign;
 use crate::linalg::{CsrMat, Mat};
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_for_each_index;
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
 
 /// A sketch was asked to fold a row shard it cannot stream (e.g. a
 /// mis-routed SRHT block). Recoverable: callers degrade to the dense
@@ -340,6 +344,210 @@ pub fn apply_streamed_csr(
         sk.merge(&mut out, &guard);
     }
     (out, nb)
+}
+
+/// Compute `S A` for a disk-backed design by folding shard-cache-gathered
+/// scratch blocks — the out-of-core twin of [`apply_streamed_with`] (dense
+/// flavor) and [`apply_streamed_csr`] (chunked flavor). The block
+/// partition, worker ranges and merge order replicate the in-memory
+/// streamed paths exactly — same [`default_block_rows`] heuristic / greedy
+/// nnz boundaries, same `w * nb / workers` ranges, same in-order partial
+/// merge — so for a fixed (block size, thread count) the result is bitwise
+/// identical to streaming a resident twin. Each block's payload is a
+/// transient scratch gather (bounded like the fold accumulators, not
+/// charged); consumers that cannot stream (SRHT, single-shard inputs)
+/// fall back to a budget-*charged* whole-matrix materialization.
+///
+/// Fallible like every disk access: a shard I/O error or refused charge
+/// propagates as a structured error instead of panicking a fold worker.
+/// Returns `(SA, shards_folded)`; `shards_folded == 1` means a
+/// materialized single pass ran.
+pub fn apply_streamed_ondisk(
+    sk: &(dyn Sketch + Send + Sync),
+    od: &OnDiskDesign,
+    block_rows: Option<usize>,
+    threads: usize,
+    ops: &RowOps,
+) -> anyhow::Result<(Mat, usize)> {
+    if od.sparse_arith() {
+        apply_streamed_ondisk_csr(sk, od, block_rows, threads)
+    } else {
+        apply_streamed_ondisk_dense(sk, od, block_rows, threads, ops)
+    }
+}
+
+fn ondisk_dense_fallback(
+    sk: &(dyn Sketch + Send + Sync),
+    od: &OnDiskDesign,
+) -> anyhow::Result<(Mat, usize)> {
+    let (mat, _charge) = od.dense_scoped(&format!("sketch_apply[{}]", sk.name()))?;
+    Ok((sk.apply(&mat), 1))
+}
+
+fn ondisk_csr_fallback(
+    sk: &(dyn Sketch + Send + Sync),
+    od: &OnDiskDesign,
+) -> anyhow::Result<(Mat, usize)> {
+    let (mat, _charge) = od.csr_scoped(&format!("sketch_apply_csr[{}]", sk.name()))?;
+    Ok((sk.apply_csr(&mat), 1))
+}
+
+fn apply_streamed_ondisk_dense(
+    sk: &(dyn Sketch + Send + Sync),
+    od: &OnDiskDesign,
+    block_rows: Option<usize>,
+    threads: usize,
+    ops: &RowOps,
+) -> anyhow::Result<(Mat, usize)> {
+    let (rows, cols) = (od.rows(), od.cols());
+    if !sk.supports_streaming() || rows == 0 {
+        return ondisk_dense_fallback(sk, od);
+    }
+    let br = block_rows
+        .unwrap_or_else(|| default_block_rows(rows, cols))
+        .max(1);
+    let nb = rows.div_ceil(br);
+    if nb <= 1 {
+        return ondisk_dense_fallback(sk, od);
+    }
+    let (s, d) = (sk.rows(), cols);
+    let workers = threads.max(1).min(nb);
+    let partials: Vec<Mutex<Mat>> =
+        (0..workers).map(|_| Mutex::new(Mat::zeros(s, d))).collect();
+    let failed = AtomicBool::new(false);
+    let io_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    parallel_for_each_index(workers, workers, |w| {
+        let lo = w * nb / workers;
+        let hi = (w + 1) * nb / workers;
+        let mut acc = partials[w].lock().unwrap();
+        for bi in lo..hi {
+            if failed.load(Ordering::Relaxed) {
+                return;
+            }
+            let start = bi * br;
+            let take = br.min(rows - start);
+            let idx: Vec<usize> = (start..start + take).collect();
+            let scratch = match od.gather_rows(&idx) {
+                Ok((m, _b)) => m,
+                Err(e) => {
+                    *io_err.lock().unwrap() = Some(e);
+                    failed.store(true, Ordering::Relaxed);
+                    return;
+                }
+            };
+            let block = RowBlock {
+                start,
+                rows: take,
+                cols,
+                data: &scratch.data[..],
+            };
+            if sk.apply_block_with(&block, &mut acc, ops).is_err() {
+                failed.store(true, Ordering::Relaxed);
+                return;
+            }
+        }
+    });
+    if let Some(e) = io_err.lock().unwrap().take() {
+        return Err(e);
+    }
+    if failed.load(Ordering::Relaxed) {
+        crate::log_warn!(
+            "{}: on-disk shard fold rejected despite supports_streaming(); \
+             degrading to the materialized dense product",
+            sk.name()
+        );
+        return ondisk_dense_fallback(sk, od);
+    }
+    let mut out = Mat::zeros(s, d);
+    for p in &partials {
+        let guard = p.lock().unwrap();
+        sk.merge(&mut out, &guard);
+    }
+    Ok((out, nb))
+}
+
+fn apply_streamed_ondisk_csr(
+    sk: &(dyn Sketch + Send + Sync),
+    od: &OnDiskDesign,
+    block_rows: Option<usize>,
+    threads: usize,
+) -> anyhow::Result<(Mat, usize)> {
+    let rows = od.rows();
+    if !sk.supports_csr_streaming() || rows == 0 {
+        return ondisk_csr_fallback(sk, od);
+    }
+    let cc = od.chunked().expect("sparse_arith implies the chunked flavor");
+    let nnz = od.nnz();
+    // the same row-knob translation as CsrMat::nnz_budget_for_rows / the
+    // same heuristic as CsrBlocks::auto
+    let block_nnz = match block_rows {
+        Some(br) => br.saturating_mul((nnz / rows.max(1)).max(1)).max(1),
+        None => default_block_nnz(nnz),
+    };
+    // CsrBlocks::new's greedy boundaries, computed from the nnz prefix the
+    // chunked loader built at open (no resident matrix required)
+    let prefix = cc.row_nnz_prefix();
+    let mut bounds = vec![0usize];
+    let mut shard_start_off = 0usize;
+    for i in 0..rows {
+        let end_off = prefix[i + 1];
+        if end_off - shard_start_off >= block_nnz && i + 1 < rows {
+            bounds.push(i + 1);
+            shard_start_off = end_off;
+        }
+    }
+    bounds.push(rows);
+    let nb = bounds.len() - 1;
+    if nb <= 1 {
+        return ondisk_csr_fallback(sk, od);
+    }
+    let (s, d) = (sk.rows(), od.cols());
+    let workers = threads.max(1).min(nb);
+    let partials: Vec<Mutex<Mat>> =
+        (0..workers).map(|_| Mutex::new(Mat::zeros(s, d))).collect();
+    let failed = AtomicBool::new(false);
+    let io_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    parallel_for_each_index(workers, workers, |w| {
+        let lo = w * nb / workers;
+        let hi = (w + 1) * nb / workers;
+        let mut acc = partials[w].lock().unwrap();
+        for bi in lo..hi {
+            if failed.load(Ordering::Relaxed) {
+                return;
+            }
+            let (row_lo, row_hi) = (bounds[bi], bounds[bi + 1]);
+            let scratch = match od.csr_range_scratch(row_lo, row_hi) {
+                Ok(m) => m,
+                Err(e) => {
+                    *io_err.lock().unwrap() = Some(e);
+                    failed.store(true, Ordering::Relaxed);
+                    return;
+                }
+            };
+            let block = CsrBlock::from_scratch(&scratch, row_lo);
+            if sk.apply_csr_block(&block, &mut acc).is_err() {
+                failed.store(true, Ordering::Relaxed);
+                return;
+            }
+        }
+    });
+    if let Some(e) = io_err.lock().unwrap().take() {
+        return Err(e);
+    }
+    if failed.load(Ordering::Relaxed) {
+        crate::log_warn!(
+            "{}: on-disk CSR shard fold rejected despite supports_csr_streaming(); \
+             degrading to the materialized product",
+            sk.name()
+        );
+        return ondisk_csr_fallback(sk, od);
+    }
+    let mut out = Mat::zeros(s, d);
+    for p in &partials {
+        let guard = p.lock().unwrap();
+        sk.merge(&mut out, &guard);
+    }
+    Ok((out, nb))
 }
 
 /// Which sketch construction to use (CLI / config selectable).

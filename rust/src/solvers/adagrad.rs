@@ -32,7 +32,7 @@ impl StepRule for AdagradRule {
         "adagrad"
     }
 
-    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], _f0: f64) {
+    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], _f0: f64) -> Result<()> {
         let (n, d) = (sess.ds.n(), sess.ds.d());
         let r = sess.opts.batch_size.max(1);
         // global learning rate: scale-free thanks to the G_t normalization
@@ -44,6 +44,7 @@ impl StepRule for AdagradRule {
         self.mbuf = Mat::zeros(r, d);
         self.vbuf = vec![0.0; r];
         self.x = x0.to_vec();
+        Ok(())
     }
 
     fn chunk_len(&self, sess: &SolveSession, _f: f64) -> usize {
@@ -56,17 +57,22 @@ impl StepRule for AdagradRule {
         let ds = sess.ds;
         for _ in 0..t {
             let idx = sess.rng.indices(self.r, self.n);
-            let g = match ds.csr() {
-                // sparse row-gather gradient: O(nnz(batch)) — the G_t
-                // update stays dense (it is d-dimensional regardless)
-                Some(csr) => csr.batch_grad(&idx, &ds.b, &self.x, self.scale),
-                None => {
-                    let a = ds.dense_if_ready().expect("dense dataset");
-                    for (row, &i) in idx.iter().enumerate() {
-                        self.mbuf.row_mut(row).copy_from_slice(a.row(i));
-                        self.vbuf[row] = ds.b[i];
+            let g = if let Some(od) = ds.on_disk() {
+                // on-disk row gather through the shard cache (fallible reads)
+                od.batch_grad(&idx, &ds.b, &self.x, self.scale)?
+            } else {
+                match ds.csr() {
+                    // sparse row-gather gradient: O(nnz(batch)) — the G_t
+                    // update stays dense (it is d-dimensional regardless)
+                    Some(csr) => csr.batch_grad(&idx, &ds.b, &self.x, self.scale),
+                    None => {
+                        let a = ds.dense_if_ready().expect("dense dataset");
+                        for (row, &i) in idx.iter().enumerate() {
+                            self.mbuf.row_mut(row).copy_from_slice(a.row(i));
+                            self.vbuf[row] = ds.b[i];
+                        }
+                        blas::fused_grad(&self.mbuf, &self.vbuf, &self.x, self.scale)
                     }
-                    blas::fused_grad(&self.mbuf, &self.vbuf, &self.x, self.scale)
                 }
             };
             for j in 0..d {

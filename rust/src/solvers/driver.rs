@@ -95,8 +95,14 @@ pub fn precond_key(
     let sketch_rows = opts
         .sketch_size
         .unwrap_or_else(|| default_sketch_size_for(ds.n(), ds.d(), opts.sketch));
-    let mut repr: String = ds.design.repr().tag().into();
-    if ds.is_sparse() && resolved_step2(opts, ds).0 == Step2Mode::Dense {
+    // on-disk designs key by flavor ("mmapdense" / "libsvm-chunked"), not
+    // the bare "ondisk" tag: the two flavors run different arithmetic
+    // (dense block plans vs sequential CSR) and must not alias
+    let mut repr: String = match ds.on_disk() {
+        Some(od) => od.flavor_tag().into(),
+        None => ds.design.repr().tag().into(),
+    };
+    if ds.sparse_arith() && resolved_step2(opts, ds).0 == Step2Mode::Dense {
         // a dense-step2 artifact on CSR holds a materialized HD buffer and
         // must not alias the implicit artifact the same key would otherwise
         // produce
@@ -347,30 +353,39 @@ impl<'a> SolveSession<'a> {
     }
 
     /// f(x) off the solve clock (trace evaluation, mirrors the paper) —
-    /// O(nnz) on sparse datasets, backend-routed on dense ones.
-    pub fn objective(&self, x: &[f64]) -> f64 {
-        match self.ds.csr() {
+    /// O(nnz) on sparse datasets, backend-routed on dense ones, a streamed
+    /// shard fold on disk-backed ones (bitwise the resident bits; fallible
+    /// like every disk access — resident datasets never return `Err`).
+    pub fn objective(&self, x: &[f64]) -> Result<f64> {
+        if let Some(od) = self.ds.on_disk() {
+            return od.residual_sq(&self.ds.b, x);
+        }
+        Ok(match self.ds.csr() {
             Some(c) => c.residual_sq(&self.ds.b, x),
             None => self.backend.residual_sq(
                 self.ds.dense_if_ready().expect("dense dataset"),
                 &self.ds.b,
                 x,
             ),
-        }
+        })
     }
 
     /// Full gradient `2 A^T (A x - b)` — O(nnz) on sparse datasets (SVRG
     /// snapshots, IHS/pwGradient steps), backend-routed on dense ones so
-    /// PJRT deployments keep their artifact dispatch.
-    pub fn full_grad(&self, x: &[f64]) -> Vec<f64> {
-        match self.ds.csr() {
+    /// PJRT deployments keep their artifact dispatch, a streamed shard fold
+    /// on disk-backed ones (fallible like every disk access).
+    pub fn full_grad(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if let Some(od) = self.ds.on_disk() {
+            return od.fused_grad(&self.ds.b, x, 2.0);
+        }
+        Ok(match self.ds.csr() {
             Some(c) => c.fused_grad(&self.ds.b, x, 2.0),
             None => self.backend.full_grad(
                 self.ds.dense_if_ready().expect("dense dataset"),
                 &self.ds.b,
                 x,
             ),
-        }
+        })
     }
 
     fn start_trace(&mut self, f0: f64) {
@@ -436,8 +451,11 @@ pub trait StepRule {
     }
 
     /// Untimed initialization after setup: step sizes, variance probes,
-    /// state allocation. `x0`/`f0` are the session's start point.
-    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], f0: f64);
+    /// state allocation. `x0`/`f0` are the session's start point. Fallible:
+    /// probes on a disk-backed dataset read shards (row-mean-square scans,
+    /// sigma^2 gathers), and a shard I/O error surfaces here as the job's
+    /// structured error exactly like a failing [`StepRule::step`].
+    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], f0: f64) -> Result<()>;
 
     /// Desired iterations for the next chunk given the current objective;
     /// 0 = rule-initiated stop. The driver clamps to the remaining
@@ -484,8 +502,8 @@ pub fn drive<R: StepRule>(
     rule.setup(&mut sess)?;
     sess.end_setup();
     let x0 = sess.start_x();
-    let f0 = sess.objective(&x0);
-    rule.init(&mut sess, &x0, f0);
+    let f0 = sess.objective(&x0)?;
+    rule.init(&mut sess, &x0, f0)?;
     sess.start_trace(f0);
     let mut f = f0;
     // the iterate last evaluated; nothing mutates it between the final
@@ -504,7 +522,7 @@ pub fn drive<R: StepRule>(
         let (res, secs) = timed(|| rule.step(&mut sess, t));
         res?;
         let x = rule.eval_x(&sess);
-        f = sess.objective(&x);
+        f = sess.objective(&x)?;
         sess.record(t, secs, f);
         rule.post_eval(&mut sess, f);
         last = Some(x);
@@ -514,7 +532,7 @@ pub fn drive<R: StepRule>(
         None => {
             // no chunk ran (stopped at f0): evaluate the start iterate
             let x = rule.eval_x(&sess);
-            let fx = sess.objective(&x);
+            let fx = sess.objective(&x)?;
             (x, fx)
         }
     };
@@ -529,15 +547,18 @@ pub fn drive<R: StepRule>(
 /// *same op key* as the serial `residual_sq`, so each column lands on the
 /// same executor (and therefore the same bit pattern) a lone trial would
 /// have used.
-fn fused_objectives(backend: &Backend, ds: &Dataset, xs: &[Vec<f64>]) -> Vec<f64> {
-    match ds.csr() {
+fn fused_objectives(backend: &Backend, ds: &Dataset, xs: &[Vec<f64>]) -> Result<Vec<f64>> {
+    if let Some(od) = ds.on_disk() {
+        return od.residual_sq_multi(&ds.b, xs);
+    }
+    Ok(match ds.csr() {
         Some(c) => c.residual_sq_multi(&ds.b, xs),
         None => backend.residual_sq_multi(
             ds.dense_if_ready().expect("dense dataset"),
             &ds.b,
             xs,
         ),
-    }
+    })
 }
 
 /// Per-trial state of the fused lockstep driver.
@@ -585,8 +606,8 @@ pub fn drive_fused_trials(
         rule.setup(&mut sess)?;
         sess.end_setup();
         let x0 = sess.start_x();
-        let f0 = sess.objective(&x0);
-        rule.init(&mut sess, &x0, f0);
+        let f0 = sess.objective(&x0)?;
+        rule.init(&mut sess, &x0, f0)?;
         sess.start_trace(f0);
         trials.push(FusedTrial {
             rule,
@@ -635,7 +656,7 @@ pub fn drive_fused_trials(
             .iter()
             .map(|&i| trials[i].pend.as_ref().expect("pending").2.clone())
             .collect();
-        let fs = fused_objectives(backend, ds, &xs);
+        let fs = fused_objectives(backend, ds, &xs)?;
         for (&i, f) in live.iter().zip(fs) {
             let tr = &mut trials[i];
             let (t, secs, x) = tr.pend.take().expect("pending");
@@ -652,7 +673,7 @@ pub fn drive_fused_trials(
                 Some(x) => (x, tr.f),
                 None => {
                     let x = tr.rule.eval_x(&tr.sess);
-                    let fx = tr.sess.objective(&x);
+                    let fx = tr.sess.objective(&x)?;
                     (x, fx)
                 }
             };
@@ -815,8 +836,9 @@ mod tests {
             fn name(&self) -> &'static str {
                 "noop"
             }
-            fn init(&mut self, _s: &mut SolveSession, x0: &[f64], _f0: f64) {
+            fn init(&mut self, _s: &mut SolveSession, x0: &[f64], _f0: f64) -> Result<()> {
                 self.x = x0.to_vec();
+                Ok(())
             }
             fn chunk_len(&self, _s: &SolveSession, _f: f64) -> usize {
                 if self.stepped {

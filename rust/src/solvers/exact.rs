@@ -38,9 +38,9 @@ impl Solver for ExactQr {
         _opts: &SolverOpts,
     ) -> Result<SolveReport> {
         let t = Timer::start();
-        let x = lstsq_ds(ds);
+        let x = try_lstsq_ds(ds)?;
         let secs = t.secs();
-        let f = ds.objective(&x);
+        let f = ds.try_objective(&x)?;
         Ok(SolveReport {
             solver: "exact".into(),
             f_final: f,
@@ -60,12 +60,32 @@ impl Solver for ExactQr {
     }
 }
 
-/// Representation-routed unconstrained least squares.
+/// Representation-routed unconstrained least squares (resident datasets).
 fn lstsq_ds(ds: &Dataset) -> Vec<f64> {
     match ds.csr() {
         Some(c) => sparse_lstsq(c, &ds.b),
         None => qr::lstsq(ds.dense_if_ready().expect("dense dataset"), &ds.b),
     }
+}
+
+/// Fallible routed least squares that also covers on-disk datasets: the
+/// oracle is a direct factorization, so the design is materialized through a
+/// *charged* scope (the borrow is accounted against the memory budget and
+/// released when the solve returns) in the representation matching the
+/// flavor — chunked CSR shards reassemble into a CSR matrix for the
+/// never-densify [`sparse_lstsq`] route, mmap'd dense files into a dense
+/// matrix for Householder QR. Either route is bitwise identical to the
+/// resident oracle on the same data.
+fn try_lstsq_ds(ds: &Dataset) -> Result<Vec<f64>> {
+    if let Some(od) = ds.on_disk() {
+        if od.sparse_arith() {
+            let (c, _charge) = od.csr_scoped("ground_truth")?;
+            return Ok(sparse_lstsq(&c, &ds.b));
+        }
+        let (a, _charge) = od.dense_scoped("ground_truth")?;
+        return Ok(qr::lstsq(&a, &ds.b));
+    }
+    Ok(lstsq_ds(ds))
 }
 
 /// Fixed seed for the oracle's sketch: the ground truth must be a pure,
@@ -144,7 +164,12 @@ pub struct GroundTruth {
 }
 
 /// Compute the [`GroundTruth`] for a dataset (representation-routed).
+/// Panics on a disk-backed dataset — those must use [`try_ground_truth`].
 pub fn ground_truth(ds: &Dataset) -> GroundTruth {
+    assert!(
+        ds.on_disk().is_none(),
+        "on-disk dataset: use try_ground_truth for fallible shard reads"
+    );
     let x_star = lstsq_ds(ds);
     let f_star = ds.objective(&x_star);
     let l1_radius = x_star.iter().map(|v| v.abs()).sum();
@@ -155,6 +180,22 @@ pub fn ground_truth(ds: &Dataset) -> GroundTruth {
         l1_radius,
         l2_radius,
     }
+}
+
+/// Fallible [`ground_truth`] covering disk-backed datasets: shard reads (or
+/// the charged materialization scope) can fail, and that failure propagates
+/// as a structured error instead of a panic.
+pub fn try_ground_truth(ds: &Dataset) -> Result<GroundTruth> {
+    let x_star = try_lstsq_ds(ds)?;
+    let f_star = ds.try_objective(&x_star)?;
+    let l1_radius = x_star.iter().map(|v| v.abs()).sum();
+    let l2_radius = crate::linalg::blas::nrm2(&x_star);
+    Ok(GroundTruth {
+        x_star,
+        f_star,
+        l1_radius,
+        l2_radius,
+    })
 }
 
 #[cfg(test)]

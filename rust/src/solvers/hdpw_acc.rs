@@ -57,7 +57,7 @@ impl StepRule for HdpwAccRule {
         Ok(())
     }
 
-    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], f0: f64) {
+    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], f0: f64) -> Result<()> {
         let art = self.art.as_ref().expect("setup ran");
         let hd = art.hd_view(sess.ds).expect("two-step artifact");
         let r = sess.opts.batch_size.max(1);
@@ -67,12 +67,14 @@ impl StepRule for HdpwAccRule {
         // constants of the preconditioned problem (kappa(U) = O(1))
         self.l_smooth = 2.0;
         self.mu = 2.0;
+        // the sigma^2 probe gathers rows — fallible on disk-backed views
         self.sigma_sq =
-            estimate_sigma_sq(sess.backend, &hd, &art.r, x0, &mut sess.rng) / r as f64;
+            estimate_sigma_sq(sess.backend, &hd, &art.r, x0, &mut sess.rng)? / r as f64;
         // V0 >= f(x0) - f* ; f* >= 0 so f0 is a valid bound
         self.v0 = f0.max(1e-300);
         self.x = x0.to_vec();
         self.xhat = x0.to_vec();
+        Ok(())
     }
 
     fn pre_chunk(&mut self, sess: &mut SolveSession, f: f64) -> Result<Option<f64>> {
@@ -153,11 +155,13 @@ impl StepRule for HdpwAccRule {
                 sess.opts.constraint.as_ref(),
                 self.metric.as_deref(),
             ),
-            crate::precond::HdView::Implicit { .. } => {
+            crate::precond::HdView::Implicit { .. }
+            | crate::precond::HdView::ImplicitOnDisk { .. } => {
                 let flat: Vec<usize> = idx.iter().flatten().copied().collect();
                 // blocked at the batch size: every mini-batch is one CSR
-                // pass instead of r per-row passes (same arithmetic)
-                let (ma, mb) = hd.gather_blocked(&flat, self.r);
+                // pass (or one shard-streamed pass on disk) instead of r
+                // per-row passes (same arithmetic)
+                let (ma, mb) = hd.gather_blocked(&flat, self.r)?;
                 let local: Vec<Vec<usize>> = (0..t)
                     .map(|k| (k * self.r..(k + 1) * self.r).collect())
                     .collect();

@@ -57,7 +57,7 @@ impl StepRule for HdpwBatchRule {
         Ok(())
     }
 
-    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], f0: f64) {
+    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], f0: f64) -> Result<()> {
         let art = self.art.as_ref().expect("setup ran");
         let hd = art.hd_view(sess.ds).expect("two-step artifact");
         let r = sess.opts.batch_size.max(1);
@@ -65,8 +65,9 @@ impl StepRule for HdpwBatchRule {
         self.scale = 2.0 * self.n_pad as f64 / r as f64;
         self.r = r;
         // Theorem-2 fixed step: sigma^2 of single-row gradients, divided by r
-        // for the batch (Lemma: sigma_batch^2 <= sigma^2 / r).
-        let sigma_sq = estimate_sigma_sq(sess.backend, &hd, &art.r, x0, &mut sess.rng);
+        // for the batch (Lemma: sigma_batch^2 <= sigma^2 / r). The probe
+        // gathers rows — fallible on disk-backed views.
+        let sigma_sq = estimate_sigma_sq(sess.backend, &hd, &art.r, x0, &mut sess.rng)?;
         let r_norm = art.r.frob_norm();
         self.eta = theory_step_size(
             sess.opts,
@@ -78,6 +79,7 @@ impl StepRule for HdpwBatchRule {
         self.x = x0.to_vec();
         self.x0 = x0.to_vec();
         self.xsum = vec![0.0; x0.len()];
+        Ok(())
     }
 
     fn chunk_len(&self, sess: &SolveSession, _f: f64) -> usize {
@@ -108,11 +110,13 @@ impl StepRule for HdpwBatchRule {
                 sess.opts.constraint.as_ref(),
                 self.metric.as_deref(),
             ),
-            crate::precond::HdView::Implicit { .. } => {
+            crate::precond::HdView::Implicit { .. }
+            | crate::precond::HdView::ImplicitOnDisk { .. } => {
                 let flat: Vec<usize> = idx.iter().flatten().copied().collect();
                 // blocked at the batch size: every mini-batch is one CSR
-                // pass instead of r per-row passes (same arithmetic)
-                let (ma, mb) = hd.gather_blocked(&flat, self.r);
+                // pass (or one shard-streamed pass on disk) instead of r
+                // per-row passes (same arithmetic)
+                let (ma, mb) = hd.gather_blocked(&flat, self.r)?;
                 let local: Vec<Vec<usize>> = (0..t)
                     .map(|k| (k * self.r..(k + 1) * self.r).collect())
                     .collect();

@@ -32,8 +32,9 @@ impl StepRule for IhsRule {
         "ihs"
     }
 
-    fn init(&mut self, _sess: &mut SolveSession, x0: &[f64], _f0: f64) {
+    fn init(&mut self, _sess: &mut SolveSession, x0: &[f64], _f0: f64) -> Result<()> {
         self.x = x0.to_vec();
+        Ok(())
     }
 
     fn chunk_len(&self, _sess: &SolveSession, _f: f64) -> usize {
@@ -55,8 +56,9 @@ impl StepRule for IhsRule {
                 Some(crate::prox::metric::MetricProjector::from_r(&pre.r))
             };
             // representation-routed: O(nnz) fused gradient on CSR (no
-            // dense mirror), the same backend dispatch as before on dense
-            let g = sess.full_grad(&self.x);
+            // dense mirror), streamed over shards on disk, the same backend
+            // dispatch as before on dense
+            let g = sess.full_grad(&self.x)?;
             // full_grad returns 2 A^T r; the IHS step applies
             // (R^T R)^{-1} A^T r, i.e. gd_step with eta = 1/2.
             self.x = sess.backend.gd_step(

@@ -333,22 +333,24 @@ impl TraceRecorder {
 /// Samples rows through the step-2 [`crate::precond::HdView`], so the same
 /// probe runs off the materialized transform (dense datasets, bit-identical
 /// to the historical direct-gather form: identical `rng` draws, identical
-/// gathered rows) or the implicit one (sparse datasets, rows evaluated on
-/// demand).
+/// gathered rows), the implicit one (sparse datasets, rows evaluated on
+/// demand), or the on-disk implicit one (rows streamed through the shard
+/// cache). Fallible because the on-disk gathers read shards; resident views
+/// never return `Err`.
 pub fn estimate_sigma_sq(
     backend: &Backend,
     hd: &crate::precond::HdView<'_>,
     r_factor: &crate::linalg::Mat,
     x0: &[f64],
     rng: &mut crate::util::rng::Rng,
-) -> f64 {
+) -> Result<f64> {
     let k = 24usize;
     let d = r_factor.cols;
     let n_universe = hd.n_pad();
     let mut grads: Vec<Vec<f64>> = Vec::with_capacity(k);
     for _ in 0..k {
         let i = rng.below(n_universe);
-        let (m, v) = hd.gather(&[i]);
+        let (m, v) = hd.gather(&[i])?;
         let c = backend.batch_grad(&m, &v, x0, 2.0 * n_universe as f64);
         // transform to the y-metric: g = R^{-T} c
         let g = crate::linalg::tri::solve_upper_t(r_factor, &c);
@@ -366,7 +368,7 @@ pub fn estimate_sigma_sq(
             var += (v - m) * (v - m);
         }
     }
-    var / (k as f64 - 1.0)
+    Ok(var / (k as f64 - 1.0))
 }
 
 /// Theorem-2 style fixed step for the preconditioned problem: the

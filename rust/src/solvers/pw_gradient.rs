@@ -44,10 +44,11 @@ impl StepRule for PwGradientRule {
         Ok(())
     }
 
-    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], _f0: f64) {
+    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], _f0: f64) -> Result<()> {
         // eta = 1/2 realizes the IHS-equivalent step (paper's default).
         self.eta = sess.opts.eta.unwrap_or(0.5);
         self.x = x0.to_vec();
+        Ok(())
     }
 
     fn chunk_len(&self, sess: &SolveSession, _f: f64) -> usize {
@@ -57,6 +58,24 @@ impl StepRule for PwGradientRule {
 
     fn step(&mut self, sess: &mut SolveSession, t: usize) -> Result<()> {
         let art = self.art.as_ref().expect("setup ran");
+        if let Some(od) = sess.ds.on_disk() {
+            // shard-streamed full gradient; the rest of the update is the
+            // same arithmetic order as the native executor's chunk (fused
+            // gradient, pinv apply, axpy, project), so traces stay bitwise
+            // comparable to the resident runs
+            for _ in 0..t {
+                let g = od.fused_grad(&sess.ds.b, &self.x, 2.0)?;
+                let step = blas::gemv(&art.pinv, &g);
+                for (xi, si) in self.x.iter_mut().zip(&step) {
+                    *xi -= self.eta * si;
+                }
+                match self.metric.as_deref() {
+                    Some(m) => self.x = m.project(&self.x, sess.opts.constraint.as_ref()),
+                    None => sess.opts.constraint.project(&mut self.x),
+                }
+            }
+            return Ok(());
+        }
         match sess.ds.csr() {
             // O(nnz) per step straight off the sparse rows: the same
             // arithmetic order as the native executor's chunk (fused

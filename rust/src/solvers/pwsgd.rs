@@ -68,15 +68,25 @@ pub fn approx_leverage_scores(a: &Mat, r_factor: &Mat, rng: &mut Rng) -> Vec<f64
 
 /// Representation-aware leverage scores: sparse datasets project via the
 /// O(nnz * k) CSR spmm instead of the dense O(n d k) gemm; the dense branch
-/// is the exact pre-sparse arithmetic.
-pub fn approx_leverage_scores_ds(ds: &Dataset, r_factor: &Mat, rng: &mut Rng) -> Vec<f64> {
+/// is the exact pre-sparse arithmetic; on-disk datasets stream the A·(R⁻¹G)
+/// product shard by shard (the one fallible route — resident arms never
+/// return `Err`).
+pub fn approx_leverage_scores_ds(
+    ds: &Dataset,
+    r_factor: &Mat,
+    rng: &mut Rng,
+) -> Result<Vec<f64>> {
     let k = JL_K.min(ds.d());
     let rg = jl_projection(ds.d(), r_factor, rng);
-    let proj = match ds.csr() {
-        Some(c) => c.spmm_dense(&rg),
-        None => blas::gemm(ds.dense_if_ready().expect("dense dataset"), &rg),
+    let proj = if let Some(od) = ds.on_disk() {
+        od.mul_dense(&rg)?
+    } else {
+        match ds.csr() {
+            Some(c) => c.spmm_dense(&rg),
+            None => blas::gemm(ds.dense_if_ready().expect("dense dataset"), &rg),
+        }
     };
-    scores_from_projection(&proj, k)
+    Ok(scores_from_projection(&proj, k))
 }
 
 /// Exact leverage scores ||A_i R^{-1}||^2 (O(nd^2); experiment parity mode).
@@ -117,7 +127,7 @@ impl StepRule for PwSgdRule {
         // clock (the scores are what pwSGD pays beyond HDpw's setup);
         // sparse datasets project scores in O(nnz * k)
         let art = sess.precond(false)?;
-        let scores = approx_leverage_scores_ds(sess.ds, &art.r, &mut sess.rng);
+        let scores = approx_leverage_scores_ds(sess.ds, &art.r, &mut sess.rng)?;
         let total: f64 = scores.iter().sum();
         self.probs = scores.iter().map(|l| (l / total).max(1e-300)).collect();
         self.alias = Some(AliasTable::new(&scores));
@@ -126,7 +136,7 @@ impl StepRule for PwSgdRule {
         Ok(())
     }
 
-    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], f0: f64) {
+    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], f0: f64) -> Result<()> {
         let art = self.art.as_ref().expect("setup ran");
         let alias = self.alias.as_ref().expect("setup ran");
         let n = sess.ds.n();
@@ -140,10 +150,11 @@ impl StepRule for PwSgdRule {
             let i = alias.sample(&mut sess.rng);
             // single-draw estimator: grad = (1/p_i) * grad f_i, so the
             // coefficient on A_i is 2 * residual_i / p_i; row access is
-            // O(nnz(row)) on sparse datasets (Dataset::row_dot/row_scaled
-            // are bit-identical blas calls on dense ones)
-            let gi = 2.0 * (sess.ds.row_dot(i, x0) - sess.ds.b[i]) / self.probs[i];
-            let c = sess.ds.row_scaled(i, gi);
+            // O(nnz(row)) on sparse datasets (try_row_dot/try_row_scaled
+            // are bit-identical blas calls on dense ones and fallible
+            // shard-cache gathers on disk)
+            let gi = 2.0 * (sess.ds.try_row_dot(i, x0)? - sess.ds.b[i]) / self.probs[i];
+            let c = sess.ds.try_row_scaled(i, gi)?;
             let y = tri::solve_upper_t(&art.r, &c);
             sig += blas::dot(&y, &y);
         }
@@ -160,6 +171,7 @@ impl StepRule for PwSgdRule {
         self.x = x0.to_vec();
         self.x0 = x0.to_vec();
         self.xsum = vec![0.0; x0.len()];
+        Ok(())
     }
 
     fn chunk_len(&self, sess: &SolveSession, _f: f64) -> usize {
@@ -178,8 +190,8 @@ impl StepRule for PwSgdRule {
             for _ in 0..self.r {
                 let i = alias.sample(&mut sess.rng);
                 let w = 1.0 / (n * self.probs[i] * self.r as f64);
-                let gi = 2.0 * n * w * (sess.ds.row_dot(i, &self.x) - sess.ds.b[i]);
-                sess.ds.row_axpy(i, gi, &mut c);
+                let gi = 2.0 * n * w * (sess.ds.try_row_dot(i, &self.x)? - sess.ds.b[i]);
+                sess.ds.try_row_axpy(i, gi, &mut c)?;
             }
             let step = blas::gemv(&art.pinv, &c);
             for (xi, si) in self.x.iter_mut().zip(&step) {
@@ -257,8 +269,8 @@ mod tests {
         // identical rng streams: dense branch is bit-identical to the plain
         // helper; sparse branch matches within fp re-association
         let plain = approx_leverage_scores(&a, &r, &mut Rng::new(7));
-        let via_dense = approx_leverage_scores_ds(&dense_ds, &r, &mut Rng::new(7));
-        let via_sparse = approx_leverage_scores_ds(&sparse_ds, &r, &mut Rng::new(7));
+        let via_dense = approx_leverage_scores_ds(&dense_ds, &r, &mut Rng::new(7)).unwrap();
+        let via_sparse = approx_leverage_scores_ds(&sparse_ds, &r, &mut Rng::new(7)).unwrap();
         assert_eq!(plain, via_dense, "dense path must be bit-identical");
         for (p, s) in plain.iter().zip(&via_sparse) {
             assert!((p - s).abs() < 1e-10 * (1.0 + p.abs()), "{p} vs {s}");

@@ -35,13 +35,14 @@ impl StepRule for SgdRule {
         "sgd"
     }
 
-    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], _f0: f64) {
+    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], _f0: f64) -> Result<()> {
         let (n, d) = (sess.ds.n(), sess.ds.d());
         let r = sess.opts.batch_size.max(1);
         // eta0 from the inverse row second moment: a safe scale for
         // E||A_i||^2-smooth stochastic gradients. Representation-routed:
-        // O(nnz) on CSR, bit-identical dense sum otherwise.
-        let row_ms: f64 = sess.ds.row_mean_sq();
+        // O(nnz) on CSR, streamed over shards on disk, bit-identical dense
+        // sum otherwise.
+        let row_ms: f64 = sess.ds.try_row_mean_sq()?;
         self.eta0 = sess
             .opts
             .eta
@@ -53,6 +54,7 @@ impl StepRule for SgdRule {
         self.mbuf = Mat::zeros(r, d);
         self.vbuf = vec![0.0; r];
         self.x = x0.to_vec();
+        Ok(())
     }
 
     fn chunk_len(&self, sess: &SolveSession, _f: f64) -> usize {
@@ -64,17 +66,24 @@ impl StepRule for SgdRule {
         let ds = sess.ds;
         for k in 0..t {
             let idx = sess.rng.indices(self.r, self.n);
-            let g = match ds.csr() {
-                // sparse row-gather gradient: O(nnz(batch)) — no dense row
-                // copies, residual + scatter touch only stored entries
-                Some(csr) => csr.batch_grad(&idx, &ds.b, &self.x, self.scale),
-                None => {
-                    let a = ds.dense_if_ready().expect("dense dataset");
-                    for (row, &i) in idx.iter().enumerate() {
-                        self.mbuf.row_mut(row).copy_from_slice(a.row(i));
-                        self.vbuf[row] = ds.b[i];
+            let g = if let Some(od) = ds.on_disk() {
+                // on-disk row gather routed through the shard cache; reads
+                // are fallible and surface as structured job errors
+                od.batch_grad(&idx, &ds.b, &self.x, self.scale)?
+            } else {
+                match ds.csr() {
+                    // sparse row-gather gradient: O(nnz(batch)) — no dense
+                    // row copies, residual + scatter touch only stored
+                    // entries
+                    Some(csr) => csr.batch_grad(&idx, &ds.b, &self.x, self.scale),
+                    None => {
+                        let a = ds.dense_if_ready().expect("dense dataset");
+                        for (row, &i) in idx.iter().enumerate() {
+                            self.mbuf.row_mut(row).copy_from_slice(a.row(i));
+                            self.vbuf[row] = ds.b[i];
+                        }
+                        blas::fused_grad(&self.mbuf, &self.vbuf, &self.x, self.scale)
                     }
-                    blas::fused_grad(&self.mbuf, &self.vbuf, &self.x, self.scale)
                 }
             };
             let eta = self.eta0 / (1.0 + (base_t + k) as f64 / self.t0).sqrt();

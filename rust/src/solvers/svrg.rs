@@ -69,21 +69,20 @@ impl StepRule for SvrgRule {
         Ok(())
     }
 
-    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], _f0: f64) {
+    fn init(&mut self, sess: &mut SolveSession, x0: &[f64], _f0: f64) -> Result<()> {
         let (n, d) = (sess.ds.n(), sess.ds.d());
         let r = sess.opts.batch_size.max(1);
         // step size: preconditioned problem is ~2-smooth => 0.1 stable;
         // raw problem must scale by the (unknown) smoothness — use the row
-        // moment bound like plain SGD.
-        let preconditioned = self.preconditioned;
-        self.eta = sess.opts.eta.unwrap_or_else(|| {
-            if preconditioned {
-                0.1
-            } else {
-                let row_ms: f64 = sess.ds.row_mean_sq();
+        // moment bound like plain SGD (a shard-streaming scan on disk).
+        self.eta = match sess.opts.eta {
+            Some(e) => e,
+            None if self.preconditioned => 0.1,
+            None => {
+                let row_ms: f64 = sess.ds.try_row_mean_sq()?;
                 0.05 / (2.0 * n as f64 * row_ms.max(1e-300))
             }
-        });
+        };
         // epoch length: 2n/r inner steps (standard SVRG choice)
         self.m_inner = (2 * n / r).clamp(16, 20_000);
         self.scale = 2.0 * n as f64 / r as f64;
@@ -93,6 +92,7 @@ impl StepRule for SvrgRule {
         self.done = self.m_inner; // force a snapshot on the first chunk
         self.mbuf = Mat::zeros(r, d);
         self.vbuf = vec![0.0; r];
+        Ok(())
     }
 
     fn pre_chunk(&mut self, sess: &mut SolveSession, _f: f64) -> Result<Option<f64>> {
@@ -103,7 +103,7 @@ impl StepRule for SvrgRule {
         // routes O(nnz) on sparse datasets, backend-dispatched on dense
         self.snapshot = self.x.clone();
         let (mu_g, snap_secs) = timed(|| sess.full_grad(&self.snapshot));
-        self.mu_g = mu_g;
+        self.mu_g = mu_g?;
         self.done = 0;
         Ok(Some(snap_secs))
     }
@@ -117,23 +117,32 @@ impl StepRule for SvrgRule {
         let ds = sess.ds;
         for _ in 0..t {
             let idx = sess.rng.indices(self.r, self.n);
-            let (g_x, g_s) = match ds.csr() {
-                // sparse row-gather variance-reduced pair: both gradients
-                // read the same sampled rows in O(nnz(batch))
-                Some(csr) => (
-                    csr.batch_grad(&idx, &ds.b, &self.x, self.scale),
-                    csr.batch_grad(&idx, &ds.b, &self.snapshot, self.scale),
-                ),
-                None => {
-                    let a = ds.dense_if_ready().expect("dense dataset");
-                    for (row, &i) in idx.iter().enumerate() {
-                        self.mbuf.row_mut(row).copy_from_slice(a.row(i));
-                        self.vbuf[row] = ds.b[i];
+            let (g_x, g_s) = if let Some(od) = ds.on_disk() {
+                // on-disk: both gradients read the same sampled rows through
+                // the shard cache (the second gather is a cache hit)
+                (
+                    od.batch_grad(&idx, &ds.b, &self.x, self.scale)?,
+                    od.batch_grad(&idx, &ds.b, &self.snapshot, self.scale)?,
+                )
+            } else {
+                match ds.csr() {
+                    // sparse row-gather variance-reduced pair: both gradients
+                    // read the same sampled rows in O(nnz(batch))
+                    Some(csr) => (
+                        csr.batch_grad(&idx, &ds.b, &self.x, self.scale),
+                        csr.batch_grad(&idx, &ds.b, &self.snapshot, self.scale),
+                    ),
+                    None => {
+                        let a = ds.dense_if_ready().expect("dense dataset");
+                        for (row, &i) in idx.iter().enumerate() {
+                            self.mbuf.row_mut(row).copy_from_slice(a.row(i));
+                            self.vbuf[row] = ds.b[i];
+                        }
+                        (
+                            blas::fused_grad(&self.mbuf, &self.vbuf, &self.x, self.scale),
+                            blas::fused_grad(&self.mbuf, &self.vbuf, &self.snapshot, self.scale),
+                        )
                     }
-                    (
-                        blas::fused_grad(&self.mbuf, &self.vbuf, &self.x, self.scale),
-                        blas::fused_grad(&self.mbuf, &self.vbuf, &self.snapshot, self.scale),
-                    )
                 }
             };
             let mut v: Vec<f64> = (0..d).map(|j| g_x[j] - g_s[j] + self.mu_g[j]).collect();

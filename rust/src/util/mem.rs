@@ -32,6 +32,17 @@ pub struct MemBudget {
     peak: AtomicUsize,
     densify_events: AtomicUsize,
     rejections: AtomicUsize,
+    /// Shard loads performed by out-of-core block caches (a cache miss that
+    /// went to disk) — the shard-cache analogue of `densify_events`.
+    shard_faults: AtomicUsize,
+    /// Resident shards evicted by out-of-core block caches under pressure.
+    shard_evictions: AtomicUsize,
+    /// Transient I/O errors retried (once) by out-of-core readers.
+    io_retries: AtomicUsize,
+    /// Bytes currently held resident by out-of-core shard caches (a subset
+    /// of `used`; observability only — the charge itself flows through
+    /// [`MemBudget::try_charge`] like any other materialization).
+    shard_resident_bytes: AtomicUsize,
     /// Pairs with `cv` so admission control can wait for headroom; the
     /// mutex guards nothing by itself (counters are atomic).
     waiters: Mutex<()>,
@@ -105,6 +116,10 @@ impl MemBudget {
             peak: AtomicUsize::new(0),
             densify_events: AtomicUsize::new(0),
             rejections: AtomicUsize::new(0),
+            shard_faults: AtomicUsize::new(0),
+            shard_evictions: AtomicUsize::new(0),
+            io_retries: AtomicUsize::new(0),
+            shard_resident_bytes: AtomicUsize::new(0),
             waiters: Mutex::new(()),
             cv: Condvar::new(),
             me: me.clone(),
@@ -178,6 +193,54 @@ impl MemBudget {
     /// Charges refused for lack of budget.
     pub fn rejections(&self) -> usize {
         self.rejections.load(Ordering::Relaxed)
+    }
+
+    /// Shard-cache misses that went to disk (see [`MemBudget::note_shard_load`]).
+    pub fn shard_faults(&self) -> usize {
+        self.shard_faults.load(Ordering::Relaxed)
+    }
+
+    /// Resident shards evicted under budget pressure.
+    pub fn shard_evictions(&self) -> usize {
+        self.shard_evictions.load(Ordering::Relaxed)
+    }
+
+    /// Transient I/O errors retried by out-of-core readers.
+    pub fn io_retries(&self) -> usize {
+        self.io_retries.load(Ordering::Relaxed)
+    }
+
+    /// Bytes currently resident in out-of-core shard caches.
+    pub fn shard_resident_bytes(&self) -> usize {
+        self.shard_resident_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Record a shard load (cache miss → disk read), `bytes` now resident.
+    /// The shard's budget charge is separate ([`MemBudget::try_charge`]);
+    /// this only maintains the observability counters.
+    pub fn note_shard_load(&self, stage: &str, bytes: usize) {
+        self.shard_faults.fetch_add(1, Ordering::Relaxed);
+        self.shard_resident_bytes.fetch_add(bytes, Ordering::Relaxed);
+        crate::log_info!("mem budget: shard fault {bytes} B for {stage}");
+    }
+
+    /// Record a shard eviction, `bytes` no longer resident.
+    pub fn note_shard_evict(&self, stage: &str, bytes: usize) {
+        self.shard_evictions.fetch_add(1, Ordering::Relaxed);
+        self.shard_resident_bytes.fetch_sub(bytes, Ordering::Relaxed);
+        crate::log_info!("mem budget: shard evict {bytes} B for {stage}");
+    }
+
+    /// Record that a shard cache released `bytes` of residency without an
+    /// eviction (cache drop / shutdown).
+    pub fn note_shard_release(&self, bytes: usize) {
+        self.shard_resident_bytes.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    /// Record one transient-I/O retry (`Interrupted` / `TimedOut` / …).
+    pub fn note_io_retry(&self, stage: &str) {
+        self.io_retries.fetch_add(1, Ordering::Relaxed);
+        crate::log_warn!("mem budget: transient I/O retried for {stage}");
     }
 
     /// Reserve `bytes` or fail with a structured error. The returned charge
@@ -366,6 +429,25 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         drop(held); // releases + notifies
         assert!(waiter.join().unwrap(), "waiter must observe the release");
+    }
+
+    #[test]
+    fn shard_counters_track_residency_and_events() {
+        let b = MemBudget::with_limit_mb(1);
+        b.note_shard_load("cache", 4096);
+        b.note_shard_load("cache", 4096);
+        assert_eq!(b.shard_faults(), 2);
+        assert_eq!(b.shard_resident_bytes(), 8192);
+        b.note_shard_evict("cache", 4096);
+        assert_eq!(b.shard_evictions(), 1);
+        assert_eq!(b.shard_resident_bytes(), 4096);
+        b.note_shard_release(4096);
+        assert_eq!(b.shard_resident_bytes(), 0);
+        b.note_io_retry("reader");
+        assert_eq!(b.io_retries(), 1);
+        // counters are observability-only: the budget itself is untouched
+        assert_eq!(b.used(), 0);
+        assert_eq!(b.rejections(), 0);
     }
 
     #[test]

@@ -1,0 +1,383 @@
+//! Out-of-core acceptance suite (ISSUE 10).
+//!
+//! * EVERY registered solver runs on both on-disk formats (`mmapdense`,
+//!   `libsvm-chunked`) across shard heights — including `chunk_rows = 1`
+//!   and `chunk_rows > n` — and reproduces the resident twin's solve
+//!   **bitwise**: same iterate, same objective, same trace, under the
+//!   native executor.
+//! * Injected I/O faults (mid-read EOF, short header, non-finite payload,
+//!   permission denied, truncated file) each surface over the serve wire as
+//!   a structured id-tagged job error line — never a worker panic — while
+//!   a transient `TimedOut` retries once and the job still solves.
+//! * The over-budget acceptance: a dataset whose design is 2x the
+//!   [`MemBudget`] limit solves through the shard cache with peak tracked
+//!   bytes below the budget and a trace bitwise-identical to the in-memory
+//!   run.
+
+use hdpw::backend::Backend;
+use hdpw::coordinator::{server, Coordinator, CoordinatorConfig};
+use hdpw::data::{chunked, mmap, Dataset, OnDiskDesign};
+use hdpw::linalg::{blas, CsrMat, Mat};
+use hdpw::solvers::{self, SolveReport, Solver, SolverOpts};
+use hdpw::util::json::Json;
+use hdpw::util::mem::MemBudget;
+use hdpw::util::rng::Rng;
+use std::io::{Cursor, Write};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+fn test_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hdpw_ooc_it_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn dense_fixture(n: usize, d: usize, seed: u64) -> (Mat, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let a = Mat::gaussian(n, d, &mut rng);
+    let xt = rng.gaussians(d);
+    let mut b = blas::gemv(&a, &xt);
+    for v in &mut b {
+        *v += 0.25 * rng.gaussian();
+    }
+    (a, b)
+}
+
+fn sparse_fixture(n: usize, d: usize, seed: u64) -> (CsrMat, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let dense = Mat::from_fn(n, d, |_, _| {
+        if rng.uniform() < 0.3 {
+            rng.gaussian()
+        } else {
+            0.0
+        }
+    });
+    let xt = rng.gaussians(d);
+    let mut b = blas::gemv(&dense, &xt);
+    for v in &mut b {
+        *v += 0.25 * rng.gaussian();
+    }
+    (CsrMat::from_dense(&dense), b)
+}
+
+/// Fixed options for the parity runs: no env-derived knobs, and a time
+/// budget that can never truncate the iteration count (bitwise comparisons
+/// must not depend on machine load).
+fn parity_opts() -> SolverOpts {
+    let mut o = SolverOpts::default();
+    o.batch_size = 8;
+    o.max_iters = 60;
+    o.chunk = 20;
+    o.time_budget = 1e9;
+    o.seed = 5;
+    o
+}
+
+fn assert_bitwise(want: &SolveReport, got: &SolveReport, ctx: &str) {
+    assert_eq!(want.iters, got.iters, "{ctx}: iteration count");
+    assert_eq!(want.x.len(), got.x.len(), "{ctx}: iterate dimension");
+    for (k, (w, g)) in want.x.iter().zip(&got.x).enumerate() {
+        assert_eq!(w.to_bits(), g.to_bits(), "{ctx}: x[{k}] drifted");
+    }
+    assert_eq!(
+        want.f_final.to_bits(),
+        got.f_final.to_bits(),
+        "{ctx}: f_final drifted"
+    );
+    assert_eq!(want.trace.len(), got.trace.len(), "{ctx}: trace length");
+    for (k, (w, g)) in want.trace.iter().zip(&got.trace).enumerate() {
+        assert_eq!(w.iters, g.iters, "{ctx}: trace[{k}].iters");
+        assert_eq!(w.f.to_bits(), g.f.to_bits(), "{ctx}: trace[{k}].f drifted");
+    }
+}
+
+#[test]
+fn every_solver_on_mmapdense_is_bitwise_to_the_resident_dense_twin() {
+    let dir = test_dir("mmap_parity");
+    let (a, b) = dense_fixture(192, 6, 11);
+    let path = dir.join("parity.hdpw");
+    mmap::write(&path, &a, &b).unwrap();
+    let twin = Dataset::dense("parity", a, b, None);
+    let backend = Backend::native();
+    for name in solvers::all_names() {
+        let solver = solvers::by_name(name).unwrap();
+        let opts = parity_opts();
+        let want = solver.solve(&backend, &twin, &opts).unwrap();
+        // one row per shard, an odd mid height, one shard (= n), chunk > n
+        for chunk_rows in [1usize, 7, 192, 1000] {
+            let od =
+                OnDiskDesign::open_mmap(&path, MemBudget::unlimited(), chunk_rows).unwrap();
+            let ds = Dataset::from_on_disk("parity", od);
+            let got = solver.solve(&backend, &ds, &opts).unwrap();
+            assert_bitwise(&want, &got, &format!("{name} mmapdense ck={chunk_rows}"));
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn every_solver_on_chunked_csr_is_bitwise_to_the_resident_csr_twin() {
+    let dir = test_dir("chunk_parity");
+    let (csr, b) = sparse_fixture(192, 6, 12);
+    let heights = [1usize, 9, 192, 1000];
+    for &cr in &heights {
+        chunked::write_chunks(&dir.join(format!("ck{cr}")), &csr, &b, cr).unwrap();
+    }
+    let twin = Dataset::from_csr("parity", csr, b, None);
+    let backend = Backend::native();
+    for name in solvers::all_names() {
+        let solver = solvers::by_name(name).unwrap();
+        let opts = parity_opts();
+        let want = solver.solve(&backend, &twin, &opts).unwrap();
+        for &cr in &heights {
+            let od = OnDiskDesign::open_chunked(
+                &dir.join(format!("ck{cr}")),
+                MemBudget::unlimited(),
+                cr,
+            )
+            .unwrap();
+            let ds = Dataset::from_on_disk("parity", od);
+            let got = solver.solve(&backend, &ds, &opts).unwrap();
+            assert_bitwise(&want, &got, &format!("{name} chunked ck={cr}"));
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[derive(Clone)]
+struct VecWriter(Arc<Mutex<Vec<u8>>>);
+
+impl Write for VecWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+fn wire(c: &Arc<Coordinator>, input: String) -> Vec<Json> {
+    let out = Arc::new(Mutex::new(Vec::new()));
+    server::handle_connection(c, Cursor::new(input), VecWriter(Arc::clone(&out))).unwrap();
+    let bytes = out.lock().unwrap().clone();
+    String::from_utf8(bytes)
+        .unwrap()
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).unwrap())
+        .collect()
+}
+
+fn line_with_id(lines: &[Json], id: f64) -> Json {
+    lines
+        .iter()
+        .find(|j| j.get("id").and_then(Json::as_f64) == Some(id))
+        .cloned()
+        .unwrap_or_else(|| panic!("no response line with id {id} among {} lines", lines.len()))
+}
+
+fn error_of(line: &Json, what: &str) -> String {
+    line.get("error")
+        .and_then(Json::as_str)
+        .unwrap_or_else(|| panic!("{what}: expected an error line, got a result"))
+        .to_string()
+}
+
+#[test]
+fn injected_io_faults_surface_as_id_tagged_error_lines_over_the_wire() {
+    chunked::clear_faults();
+    let budget = MemBudget::unlimited();
+    let c = Arc::new(Coordinator::new(
+        Backend::native(),
+        CoordinatorConfig {
+            workers: 1,
+            max_queue: 8,
+            mem_budget: Arc::clone(&budget),
+            ..CoordinatorConfig::default()
+        },
+    ));
+    let root = test_dir("faults");
+    let (csr, b) = sparse_fixture(64, 5, 13);
+
+    // baseline: the clean directory solves, so every failure below is the
+    // injected fault and nothing else
+    let clean = root.join("clean");
+    chunked::write_chunks(&clean, &csr, &b, 16).unwrap();
+    let lines = wire(
+        &c,
+        format!(
+            "{{\"id\":1,\"solver\":\"exact\",\"dataset\":\"libsvm-chunked:{}\"}}\n",
+            clean.display()
+        ),
+    );
+    let l = line_with_id(&lines, 1.0);
+    assert!(l.get("error").is_none(), "clean baseline must solve");
+    assert!(l.get("best_f").is_some(), "result line carries the objective");
+
+    // mid-read EOF: 64 bytes delivered faithfully, then the stream ends
+    let eof_dir = root.join("fault_eof");
+    chunked::write_chunks(&eof_dir, &csr, &b, 16).unwrap();
+    chunked::inject_fault("fault_eof", 64, std::io::ErrorKind::UnexpectedEof);
+    let lines = wire(
+        &c,
+        format!(
+            "{{\"id\":2,\"solver\":\"exact\",\"dataset\":\"libsvm-chunked:{}\"}}\n",
+            eof_dir.display()
+        ),
+    );
+    let msg = error_of(&line_with_id(&lines, 2.0), "mid-read EOF");
+    assert!(msg.contains("injected fault"), "{msg}");
+
+    // short header: a shard without the `# hdpw: cols=` header line
+    let hdr_dir = root.join("fault_hdr");
+    std::fs::create_dir_all(&hdr_dir).unwrap();
+    std::fs::write(hdr_dir.join("chunk_00000.svm"), "1 1:2\n").unwrap();
+    let lines = wire(
+        &c,
+        format!(
+            "{{\"id\":3,\"solver\":\"exact\",\"dataset\":\"libsvm-chunked:{}\"}}\n",
+            hdr_dir.display()
+        ),
+    );
+    let msg = error_of(&line_with_id(&lines, 3.0), "short header");
+    assert!(msg.contains("short header"), "{msg}");
+
+    // non-finite payload: a NaN feature value in an otherwise valid shard
+    let nan_dir = root.join("fault_nan");
+    std::fs::create_dir_all(&nan_dir).unwrap();
+    std::fs::write(nan_dir.join("chunk_00000.svm"), "# hdpw: cols=3\n1 1:nan\n").unwrap();
+    let lines = wire(
+        &c,
+        format!(
+            "{{\"id\":4,\"solver\":\"exact\",\"dataset\":\"libsvm-chunked:{}\"}}\n",
+            nan_dir.display()
+        ),
+    );
+    let msg = error_of(&line_with_id(&lines, 4.0), "non-finite payload");
+    assert!(msg.contains("non-finite"), "{msg}");
+
+    // permission denied on the first byte of a chunk read
+    let perm_dir = root.join("fault_perm");
+    chunked::write_chunks(&perm_dir, &csr, &b, 16).unwrap();
+    chunked::inject_fault("fault_perm", 0, std::io::ErrorKind::PermissionDenied);
+    let lines = wire(
+        &c,
+        format!(
+            "{{\"id\":5,\"solver\":\"exact\",\"dataset\":\"libsvm-chunked:{}\"}}\n",
+            perm_dir.display()
+        ),
+    );
+    let msg = error_of(&line_with_id(&lines, 5.0), "permission denied");
+    assert!(msg.contains("injected fault"), "{msg}");
+
+    // transient TimedOut mid-read: retried once, the job still SOLVES, and
+    // the retry is visible on the coordinator budget's counter
+    let tmo_dir = root.join("fault_tmo");
+    chunked::write_chunks(&tmo_dir, &csr, &b, 16).unwrap();
+    let retries_before = budget.io_retries();
+    chunked::inject_fault("fault_tmo", 16, std::io::ErrorKind::TimedOut);
+    let lines = wire(
+        &c,
+        format!(
+            "{{\"id\":6,\"solver\":\"exact\",\"dataset\":\"libsvm-chunked:{}\"}}\n",
+            tmo_dir.display()
+        ),
+    );
+    let l = line_with_id(&lines, 6.0);
+    assert!(
+        l.get("error").is_none(),
+        "a transient fault must be retried, not failed: {:?}",
+        l.get("error").and_then(Json::as_str)
+    );
+    assert!(
+        budget.io_retries() > retries_before,
+        "the transient retry must be counted"
+    );
+
+    // mmapdense short header: fewer bytes than magic + shape
+    let short = root.join("short.hdpw");
+    std::fs::write(&short, b"HDPW").unwrap();
+    let lines = wire(
+        &c,
+        format!(
+            "{{\"id\":7,\"solver\":\"exact\",\"dataset\":\"mmapdense:{}\"}}\n",
+            short.display()
+        ),
+    );
+    let msg = error_of(&line_with_id(&lines, 7.0), "mmapdense short header");
+    assert!(msg.contains("mmapdense"), "{msg}");
+
+    // mmapdense truncated payload: valid header, matrix bytes cut short
+    let trunc = root.join("trunc.hdpw");
+    let (a, vb) = dense_fixture(16, 3, 14);
+    mmap::write(&trunc, &a, &vb).unwrap();
+    let raw = std::fs::read(&trunc).unwrap();
+    std::fs::write(&trunc, &raw[..raw.len() - 9]).unwrap();
+    let lines = wire(
+        &c,
+        format!(
+            "{{\"id\":8,\"solver\":\"exact\",\"dataset\":\"mmapdense:{}\"}}\n",
+            trunc.display()
+        ),
+    );
+    let msg = error_of(&line_with_id(&lines, 8.0), "mmapdense truncation");
+    assert!(msg.contains("truncated"), "{msg}");
+
+    chunked::clear_faults();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn over_budget_dataset_solves_below_the_budget_and_bitwise_matches_memory() {
+    // the ISSUE 10 acceptance criterion: the design is 32768 x 8 = 2 MiB on
+    // disk — double the 1 MiB budget — and the solve must (a) complete,
+    // (b) keep peak *tracked* bytes under the budget (8 shards of 256 KiB
+    // cycling through the LRU cache), and (c) reproduce the in-memory run's
+    // trace bit for bit.
+    let dir = test_dir("acceptance");
+    let (a, b) = dense_fixture(32_768, 8, 21);
+    let path = dir.join("big.hdpw");
+    mmap::write(&path, &a, &b).unwrap();
+
+    let mut opts = parity_opts();
+    opts.batch_size = 16;
+    opts.max_iters = 120;
+    opts.chunk = 40;
+    let solver = solvers::by_name("sgd").unwrap();
+    let backend = Backend::native();
+
+    let twin = Dataset::dense("big", a, b, None);
+    let want = solver.solve(&backend, &twin, &opts).unwrap();
+    drop(twin);
+
+    let budget = MemBudget::with_limit_mb(1);
+    let od = OnDiskDesign::open_mmap(&path, Arc::clone(&budget), 4096).unwrap();
+    let ds = Dataset::from_on_disk("big", od);
+    let got = solver.solve(&backend, &ds, &opts).unwrap();
+    assert_bitwise(&want, &got, "sgd over-budget mmapdense");
+
+    assert!(budget.peak() > 0, "shard loads must be tracked");
+    assert!(
+        budget.peak() <= 1 << 20,
+        "peak tracked bytes {} exceeded the 1 MiB budget",
+        budget.peak()
+    );
+    assert!(
+        budget.shard_faults() >= 8,
+        "a full objective pass faults every shard in (got {})",
+        budget.shard_faults()
+    );
+    assert!(
+        budget.shard_evictions() > 0,
+        "2 MiB of shards cannot stay resident under 1 MiB without evictions"
+    );
+    drop(ds);
+    assert_eq!(
+        budget.shard_resident_bytes(),
+        0,
+        "dropping the dataset releases all shard residency"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
